@@ -1,0 +1,66 @@
+//! Long-document serving scenario — the workload the paper's introduction
+//! motivates (Linformer makes long-sequence inference affordable).
+//!
+//! Starts the coordinator with two length buckets (tiny n=64 + serve_128
+//! n=128), drives a mixed short/long synthetic workload from concurrent
+//! clients, and prints the throughput/latency/occupancy metrics the
+//! coordinator collects.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_longdoc`
+
+use linformer::runtime::Manifest;
+use linformer::serving;
+use linformer::util::cli::Args;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &[
+            ("requests", "total requests (default 96)"),
+            ("clients", "client threads (default 6)"),
+            ("models", "comma-separated buckets (default tiny,serve_128)"),
+        ],
+    )?;
+    let manifest = Manifest::load("artifacts")?;
+    let names_s = args.str_or("models", "tiny,serve_128");
+    let names: Vec<&str> = names_s.split(',').collect();
+
+    println!("== long-document serving ==");
+    for n in &names {
+        let e = manifest.model(n)?;
+        println!(
+            "bucket {n}: n={}, batch={}, k={}",
+            e.config.max_len, e.batch, e.config.k_proj
+        );
+    }
+    println!("compiling executables in worker threads…");
+    let coord = serving::build_coordinator(
+        &manifest,
+        &names,
+        serving::default_config(32),
+    )?;
+
+    // vocab of the smallest model bounds valid token ids for all buckets
+    let vocab = names
+        .iter()
+        .map(|n| manifest.model(n).unwrap().config.vocab_size)
+        .min()
+        .unwrap();
+
+    let total = args.usize_or("requests", 96)?;
+    let clients = args.usize_or("clients", 6)?;
+    println!("driving {total} requests from {clients} concurrent clients…");
+    let report = serving::run_load(&coord, vocab, total, clients, 7);
+
+    println!("\n== results ==");
+    println!("completed     {}/{}", report.completed, report.sent);
+    println!("rejected      {}", report.rejected);
+    println!("wall time     {:.2}s", report.wall_s);
+    println!("throughput    {:.1} req/s", report.throughput_rps);
+    println!("mean latency  {:.1} ms", report.mean_latency_s * 1e3);
+    println!("p95 latency   {:.1} ms", report.p95_latency_s * 1e3);
+    println!("occupancy     {:.1}%", coord.metrics.occupancy() * 100.0);
+    println!("metrics json  {}", coord.metrics.to_json());
+    coord.shutdown();
+    Ok(())
+}

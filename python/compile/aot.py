@@ -1,0 +1,325 @@
+"""AOT export: lower every model program to HLO *text* + a JSON manifest.
+
+This is the single build-time entry point (``make artifacts``).  It lowers
+each (model config, program) pair with ``jax.jit(...).lower(...)``, converts
+the StableHLO module to an XlaComputation and dumps **HLO text** — NOT
+``.serialize()``: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla_extension 0.5.1 bundled with the Rust ``xla`` crate
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs (under --out, default ../artifacts):
+
+* ``<model>.<program>.hlo.txt`` — one HLO module per program.
+* ``<model>.init.bin``          — flat float32 LE initial parameters.
+* ``<model>.golden.json`` + ``.bin`` files — golden inputs/outputs for the
+  Rust integration tests (tiny model only).
+* ``manifest.json``             — the contract consumed by rust/src/runtime:
+  model configs, flat-param spec/offsets, program I/O signatures.
+
+Profiles (``--profile``):
+* ``core``        — tiny test model + the serving models (default).
+* ``bench``       — Fig 2 / Table 3 forward grids (standard vs linformer).
+* ``experiments`` — Fig 3 pretraining sweeps + Table 2 fine-tune configs.
+* ``all``         — everything.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DT = {"float32": "f32", "int32": "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sig(args: Sequence[jax.ShapeDtypeStruct], names: Sequence[str]):
+    return [{"name": n, "dtype": DT[str(a.dtype)], "shape": list(a.shape)}
+            for n, a in zip(names, args)]
+
+
+def _spec(dtype, *shape):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class Program:
+    """One lowered HLO module: a callable + its example input signature."""
+
+    name: str
+    fn: Any
+    args: List[jax.ShapeDtypeStruct]
+    arg_names: List[str]
+    out_names: List[str]
+
+
+def model_programs(cfg: M.ModelConfig, batch: int, *, train: bool = True,
+                   serve: bool = True, cls: bool = False,
+                   use_kernels: bool = True) -> List[Program]:
+    """The program set exported for one model config."""
+    p = M.param_count(cfg)
+    f32, i32 = jnp.float32, jnp.int32
+    flat = _spec(f32, p)
+    toks = _spec(i32, batch, cfg.max_len)
+    labels = toks
+    weights = _spec(f32, batch, cfg.max_len)
+    scalar = _spec(f32)
+    progs: List[Program] = []
+    if serve:
+        progs.append(Program(
+            "mlm_logits",
+            lambda fl, t: (M.mlm_logits(fl, t, cfg, use_kernels),),
+            [flat, toks], ["params", "tokens"], ["logits"]))
+        progs.append(Program(
+            "encode",
+            lambda fl, t: (M.encode(fl, t, cfg, use_kernels),),
+            [flat, toks], ["params", "tokens"], ["hidden"]))
+    if train:
+        progs.append(Program(
+            "train_step",
+            lambda fl, m, v, s, lr, t, l, w: M.train_step(
+                fl, m, v, s, lr, t, l, w, cfg, use_kernels=use_kernels),
+            [flat, flat, flat, scalar, scalar, toks, labels, weights],
+            ["params", "adam_m", "adam_v", "step", "lr",
+             "tokens", "labels", "weights"],
+            ["params", "adam_m", "adam_v", "loss"]))
+        progs.append(Program(
+            "mlm_loss",
+            lambda fl, t, l, w: (M.mlm_loss(fl, t, l, w, cfg, use_kernels),),
+            [flat, toks, labels, weights],
+            ["params", "tokens", "labels", "weights"], ["loss"]))
+    if cls:
+        clabels = _spec(i32, batch)
+        progs.append(Program(
+            "cls_logits",
+            lambda fl, t: (M.cls_logits(fl, t, cfg, use_kernels),),
+            [flat, toks], ["params", "tokens"], ["logits"]))
+        progs.append(Program(
+            "cls_train_step",
+            lambda fl, m, v, s, lr, t, l: M.train_step(
+                fl, m, v, s, lr, t, l, None, cfg,
+                use_kernels=use_kernels, objective="cls"),
+            [flat, flat, flat, scalar, scalar, toks, clabels],
+            ["params", "adam_m", "adam_v", "step", "lr", "tokens", "labels"],
+            ["params", "adam_m", "adam_v", "loss"]))
+    return progs
+
+
+def cfg_dict(cfg: M.ModelConfig) -> Dict[str, Any]:
+    d = dataclasses.asdict(cfg)
+    d["k_schedule"] = list(cfg.k_schedule) if cfg.k_schedule else None
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Model zoo per profile
+# ---------------------------------------------------------------------------
+
+TINY = M.ModelConfig(vocab_size=512, max_len=64, d_model=32, n_heads=2,
+                     n_layers=2, d_ff=64, k_proj=16, sharing="layerwise")
+TINY_STD = dataclasses.replace(TINY, attention="standard")
+
+# Scaled experiment model: n=128 stands in for the paper's n=512 (the k/n
+# compression ratios in the Fig 3 sweeps are preserved: paper k/n in
+# {1/16 .. 1/2} -> ours k in {8 .. 64} at n=128).
+EXP_BASE = dict(vocab_size=2048, d_model=64, n_heads=4, n_layers=2, d_ff=256)
+
+SERVE = M.ModelConfig(max_len=128, k_proj=32, sharing="layerwise", **EXP_BASE)
+
+
+def core_models() -> Dict[str, Tuple[M.ModelConfig, Dict[str, Any]]]:
+    return {
+        "tiny": (TINY, dict(batch=4, train=True, serve=True, cls=True)),
+        "tiny_std": (TINY_STD, dict(batch=4, train=True, serve=True)),
+        "serve_128": (SERVE, dict(batch=8, train=True, serve=True)),
+    }
+
+
+def bench_models() -> Dict[str, Tuple[M.ModelConfig, Dict[str, Any]]]:
+    """Fig 2 / Table 3 grid: forward-only, batch 1, n × {std, lin-k}."""
+    out: Dict[str, Tuple[M.ModelConfig, Dict[str, Any]]] = {}
+    for n in (128, 256, 512, 1024, 2048):
+        std = M.ModelConfig(max_len=n, attention="standard", **EXP_BASE)
+        out[f"bench_std_n{n}"] = (std, dict(batch=1, train=False, serve=True))
+        for k in (32, 64, 128, 256):
+            if k >= n:
+                continue
+            lin = M.ModelConfig(max_len=n, k_proj=k, sharing="layerwise",
+                                **EXP_BASE)
+            out[f"bench_lin_n{n}_k{k}"] = (
+                lin, dict(batch=1, train=False, serve=True))
+    # linformer keeps scaling past where the std grid stops
+    for n in (4096,):
+        for k in (128, 256):
+            lin = M.ModelConfig(max_len=n, k_proj=k, sharing="layerwise",
+                                **EXP_BASE)
+            out[f"bench_lin_n{n}_k{k}"] = (
+                lin, dict(batch=1, train=False, serve=True))
+    return out
+
+
+def experiment_models() -> Dict[str, Tuple[M.ModelConfig, Dict[str, Any]]]:
+    """Fig 3 sweeps + Table 2 fine-tune configs (scaled, see DESIGN.md)."""
+    out: Dict[str, Tuple[M.ModelConfig, Dict[str, Any]]] = {}
+    train8 = dict(batch=8, train=True, serve=False)
+    # Fig 3a: k sweep at n=128 (stand-in for n=512)
+    for k in (8, 16, 32, 64):
+        cfg = M.ModelConfig(max_len=128, k_proj=k, sharing="none", **EXP_BASE)
+        out[f"fig3a_k{k}"] = (cfg, train8)
+    out["fig3a_std"] = (
+        M.ModelConfig(max_len=128, attention="standard", **EXP_BASE), train8)
+    # Fig 3b: k sweep at n=256 (stand-in for n=1024)
+    for k in (16, 32, 64):
+        cfg = M.ModelConfig(max_len=256, k_proj=k, sharing="none", **EXP_BASE)
+        out[f"fig3b_k{k}"] = (cfg, dict(batch=4, train=True, serve=False))
+    out["fig3b_std"] = (
+        M.ModelConfig(max_len=256, attention="standard", **EXP_BASE),
+        dict(batch=4, train=True, serve=False))
+    # Fig 3c: sharing sweep at n=128, k=32
+    for sh in ("none", "headwise", "kv", "layerwise"):
+        cfg = M.ModelConfig(max_len=128, k_proj=32, sharing=sh, **EXP_BASE)
+        out[f"fig3c_{sh}"] = (cfg, train8)
+    # Fig 3d: n sweep at fixed k=32 (stand-in for k=256)
+    for n, b in ((64, 16), (128, 8), (256, 4)):
+        cfg = M.ModelConfig(max_len=n, k_proj=32, sharing="layerwise",
+                            **EXP_BASE)
+        out[f"fig3d_n{n}"] = (cfg, dict(batch=b, train=True, serve=False))
+    # Table 2 fine-tuning: cls heads on top of the n=128 models
+    t2 = dict(batch=8, train=True, serve=True, cls=True)
+    out["t2_std"] = (
+        M.ModelConfig(max_len=128, attention="standard", num_classes=4,
+                      **EXP_BASE), t2)
+    for k in (16, 32):
+        for sh in ("none", "kv", "layerwise"):
+            cfg = M.ModelConfig(max_len=128, k_proj=k, sharing=sh,
+                                num_classes=4, **EXP_BASE)
+            out[f"t2_lin_k{k}_{sh}"] = (cfg, t2)
+    # ablation: pool/conv general projections (paper §4), pretrain-style
+    for pm in ("pool", "conv"):
+        cfg = M.ModelConfig(max_len=128, k_proj=32, proj_mode=pm,
+                            sharing="layerwise", **EXP_BASE)
+        out[f"ablate_proj_{pm}"] = (cfg, train8)
+    return out
+
+
+PROFILES = {
+    "core": core_models,
+    "bench": bench_models,
+    "experiments": experiment_models,
+}
+
+
+# ---------------------------------------------------------------------------
+# Export driver
+# ---------------------------------------------------------------------------
+
+def export_model(name: str, cfg: M.ModelConfig, opts: Dict[str, Any],
+                 out_dir: str, manifest: Dict[str, Any],
+                 golden: bool = False) -> None:
+    batch = opts["batch"]
+    progs = model_programs(cfg, batch, train=opts.get("train", True),
+                           serve=opts.get("serve", True),
+                           cls=opts.get("cls", False))
+    entry: Dict[str, Any] = {
+        "config": cfg_dict(cfg),
+        "batch": batch,
+        "param_count": M.param_count(cfg),
+        "param_spec": [[n, list(s)] for n, s in M.param_spec(cfg)],
+        "init": f"{name}.init.bin",
+        "programs": {},
+    }
+    init = M.init_params(cfg)
+    init.astype("<f4").tofile(os.path.join(out_dir, f"{name}.init.bin"))
+    for prog in progs:
+        lowered = jax.jit(prog.fn).lower(*prog.args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.{prog.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["programs"][prog.name] = {
+            "hlo": fname,
+            "inputs": _sig(prog.args, prog.arg_names),
+            "outputs": prog.out_names,
+        }
+        print(f"  {fname}: {len(text)/1e6:.2f} MB")
+    if golden:
+        _export_golden(name, cfg, batch, init, out_dir, entry)
+    manifest["models"][name] = entry
+
+
+def _export_golden(name: str, cfg: M.ModelConfig, batch: int,
+                   init: np.ndarray, out_dir: str,
+                   entry: Dict[str, Any]) -> None:
+    """Concrete input/output pairs for the Rust integration tests."""
+    rng = np.random.RandomState(42)
+    toks = rng.randint(0, cfg.vocab_size, (batch, cfg.max_len)).astype(np.int32)
+    weights = (rng.rand(batch, cfg.max_len) < 0.15).astype(np.float32)
+    flat = jnp.asarray(init)
+    logits = np.asarray(M.mlm_logits(flat, jnp.asarray(toks), cfg))
+    loss = np.asarray(M.mlm_loss(flat, jnp.asarray(toks), jnp.asarray(toks),
+                                 jnp.asarray(weights), cfg))
+    files = {
+        "tokens": ("i32", toks),
+        "weights": ("f32", weights),
+        "logits": ("f32", logits),
+        "loss": ("f32", loss.reshape(1)),
+    }
+    gold: Dict[str, Any] = {}
+    for key, (dt, arr) in files.items():
+        fname = f"{name}.golden.{key}.bin"
+        arr.astype("<i4" if dt == "i32" else "<f4").tofile(
+            os.path.join(out_dir, fname))
+        gold[key] = {"file": fname, "dtype": dt, "shape": list(arr.shape)}
+    entry["golden"] = gold
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profile", default="core",
+                    choices=[*PROFILES, "all"])
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    mpath = os.path.join(args.out, "manifest.json")
+    manifest: Dict[str, Any] = {"models": {}}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest.setdefault("models", {})
+
+    profiles = list(PROFILES) if args.profile == "all" else [args.profile]
+    for prof in profiles:
+        models = PROFILES[prof]()
+        print(f"[aot] profile={prof}: {len(models)} models")
+        for name, (cfg, opts) in models.items():
+            print(f"[aot] exporting {name} "
+                  f"(n={cfg.max_len}, k={cfg.k_proj}, {cfg.attention})")
+            export_model(name, cfg, opts, args.out, manifest,
+                         golden=(name == "tiny"))
+
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {mpath} ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Differentiable wrappers around the Pallas kernels.
+
+Pallas kernels are not auto-differentiable (the grid/accumulator structure
+has no JVP rule), so each kernel gets a ``jax.custom_vjp``: the forward pass
+runs the fused Pallas kernel (interpret mode), the backward pass is the
+analytic gradient written in plain jnp.  XLA fuses the backward expressions
+on its own; writing Pallas backward kernels is a possible further
+optimisation and is tracked in DESIGN.md §Perf.
+
+The maths (all per single head; batching via vmap):
+
+* ``seq_project``: out = P @ X  ⇒  dP = g @ Xᵀ, dX = Pᵀ @ g.
+* ``linformer_attention``: out = S(q k̄ᵀ/√d) v̄ with S row-softmax.
+  With p = S(logits), g_p = g v̄ᵀ, g_logits = p ⊙ (g_p − rowsum(g_p ⊙ p)):
+  dq = g_logits k̄ /√d, dk̄ = g_logitsᵀ q /√d, dv̄ = pᵀ g.
+* ``softmax_xent``: dlogits = (softmax(logits) − onehot(labels)) ⊙ w / Σw.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as kref
+from .linformer_attn import full_attention, linformer_attention
+from .seq_proj import seq_project
+from .softmax_xent import softmax_xent
+
+
+# --------------------------------------------------------------------------
+# seq_project
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def seq_project_d(proj: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    return seq_project(proj, x)
+
+
+def _seq_project_fwd(proj, x):
+    return seq_project(proj, x), (proj, x)
+
+
+def _seq_project_bwd(res, g):
+    proj, x = res
+    g = g.astype(jnp.float32)
+    return (g @ x.astype(jnp.float32).T,
+            proj.astype(jnp.float32).T @ g)
+
+
+seq_project_d.defvjp(_seq_project_fwd, _seq_project_bwd)
+
+
+# --------------------------------------------------------------------------
+# linformer attention (q against pre-compressed k_bar / v_bar)
+# --------------------------------------------------------------------------
+
+def _softmax_rows(logits):
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+@jax.custom_vjp
+def linformer_attention_d(q, k_bar, v_bar):
+    return linformer_attention(q, k_bar, v_bar)
+
+
+def _linattn_fwd(q, k_bar, v_bar):
+    return linformer_attention(q, k_bar, v_bar), (q, k_bar, v_bar)
+
+
+def _linattn_bwd(res, g):
+    q, k_bar, v_bar = res
+    qf = q.astype(jnp.float32)
+    kf = k_bar.astype(jnp.float32)
+    vf = v_bar.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = (qf @ kf.T) * scale
+    p = _softmax_rows(logits)                       # (n, k)
+    g_p = g @ vf.T                                  # (n, k)
+    g_logits = p * (g_p - jnp.sum(g_p * p, axis=-1, keepdims=True))
+    dq = (g_logits @ kf) * scale
+    dk = (g_logits.T @ qf) * scale
+    dv = p.T @ g
+    return dq, dk, dv
+
+
+linformer_attention_d.defvjp(_linattn_fwd, _linattn_bwd)
+
+
+# --------------------------------------------------------------------------
+# standard (full) attention baseline
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def full_attention_d(q, k, v):
+    return full_attention(q, k, v)
+
+
+def _fullattn_fwd(q, k, v):
+    return full_attention(q, k, v), (q, k, v)
+
+
+def _fullattn_bwd(res, g):
+    # identical maths; k/v are full-length here
+    return _linattn_bwd(res, g)
+
+
+full_attention_d.defvjp(_fullattn_fwd, _fullattn_bwd)
+
+
+# --------------------------------------------------------------------------
+# softmax cross-entropy
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def softmax_xent_d(logits, labels, weights):
+    return softmax_xent(logits, labels, weights)
+
+
+def _xent_fwd(logits, labels, weights):
+    return softmax_xent(logits, labels, weights), (logits, labels, weights)
+
+
+def _xent_bwd(res, g):
+    logits, labels, weights = res
+    lf = logits.astype(jnp.float32)
+    p = _softmax_rows(lf)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    denom = jnp.maximum(jnp.sum(weights), 1.0)
+    dlogits = (p - onehot) * (weights / denom)[:, None] * g
+    return dlogits, None, None
+
+
+softmax_xent_d.defvjp(_xent_fwd, _xent_bwd)

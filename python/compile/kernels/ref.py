@@ -1,0 +1,72 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `pytest python/tests` asserts each
+Pallas kernel (run with ``interpret=True``) matches its oracle to float32
+tolerance across a hypothesis-driven sweep of shapes and dtypes.
+
+All oracles operate on a single (batch, head) slice unless noted; batching
+is applied by ``jax.vmap`` in the callers, matching the kernel grids.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def seq_project_ref(proj: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Sequence-axis projection  ``proj @ x``: (k, n) @ (n, d) -> (k, d).
+
+    This is the Linformer E·K / F·V compression step (paper Eq. 7): the
+    *sequence* axis of keys/values is shrunk from n to k.
+    """
+    return jnp.dot(proj, x, preferred_element_type=jnp.float32)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Standard scaled dot-product attention on one head.
+
+    q: (n, d); k: (m, d); v: (m, d) -> (n, d).  With m == n this is the
+    vanilla O(n^2) transformer attention (paper Eq. 2); with m == k_proj it
+    is the inner attention of Linformer (paper Eq. 7).
+    """
+    d = q.shape[-1]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.dot(p, v.astype(jnp.float32), preferred_element_type=jnp.float32)
+
+
+def linformer_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    e: jnp.ndarray,
+    f: jnp.ndarray,
+) -> jnp.ndarray:
+    """Full Linformer head (paper Eq. 7), unfused reference.
+
+    q, k, v: (n, d); e, f: (k_proj, n) -> (n, d):
+
+        head = softmax(q (e k)^T / sqrt(d)) . (f v)
+    """
+    k_bar = seq_project_ref(e, k)  # (k_proj, d)
+    v_bar = seq_project_ref(f, v)  # (k_proj, d)
+    return attention_ref(q, k_bar, v_bar)
+
+
+def softmax_xent_ref(logits: jnp.ndarray, labels: jnp.ndarray,
+                     weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted softmax cross-entropy, the MLM loss oracle.
+
+    logits: (t, vocab); labels: (t,) int32; weights: (t,) float (1 for
+    masked/predicted positions, 0 elsewhere).  Returns the scalar mean
+    loss over weighted positions.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - jnp.max(logits, -1, keepdims=True)),
+                          axis=-1)) + jnp.max(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = (lse - gold) * weights
+    denom = jnp.maximum(jnp.sum(weights), 1.0)
+    return jnp.sum(nll) / denom

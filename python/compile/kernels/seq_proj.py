@@ -1,0 +1,71 @@
+"""Sequence-axis projection kernel: ``proj @ x`` with blocked accumulation.
+
+This is the Linformer compression step (paper Eq. 7): ``E @ K`` and
+``F @ V`` shrink the *sequence* axis of keys/values from ``n`` to
+``k_proj``.  The grid walks ``n`` in ``block_n`` tiles; the (k_proj, d)
+output block is mapped to the same VMEM tile at every grid step and used as
+the accumulator, so HBM traffic is one read of ``proj`` and ``x`` plus one
+write of the (tiny) output — the O(n·d + k·d) schedule DESIGN.md targets.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+
+
+def _seq_proj_kernel(proj_ref, x_ref, o_ref):
+    """One grid step: accumulate proj[:, tile] @ x[tile, :]."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p = proj_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(p, x, preferred_element_type=jnp.float32)
+
+
+def seq_project(
+    proj: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Compute ``proj @ x``, tiling the contraction (sequence) axis.
+
+    Args:
+      proj: (k_proj, n) projection matrix (E or F).
+      x:    (n, d) keys or values.
+      block_n: contraction tile; must divide n.
+      interpret: run the Pallas interpreter (required on CPU).
+
+    Returns:
+      (k_proj, d) float32 compressed keys/values.
+    """
+    k_proj, n = proj.shape
+    n2, d = x.shape
+    if n != n2:
+        raise ValueError(f"proj n={n} != x n={n2}")
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        raise ValueError(f"block_n={block_n} must divide n={n}")
+    return pl.pallas_call(
+        _seq_proj_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((k_proj, block_n), lambda i: (0, i)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        ],
+        # Same output block every step -> VMEM-resident accumulator.
+        out_specs=pl.BlockSpec((k_proj, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_proj, d), jnp.float32),
+        interpret=interpret,
+    )(proj, x)

@@ -1,0 +1,83 @@
+"""Fused weighted softmax cross-entropy Pallas kernel (the MLM loss).
+
+Tiles the token axis; for each (block_t, vocab) tile it computes the
+row-wise logsumexp, gathers the gold logit with a one-hot dot (TPU has no
+cheap gather; a (block_t, vocab) one-hot contraction is a single MXU
+matmul), and accumulates weighted NLL and weight sums into two scalar VMEM
+accumulators.  The final mean is a trailing scalar divide.
+
+Used by the training-step artifact so the entire MLM loss lowers into the
+same HLO module as the model forward pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 128
+
+
+def _xent_kernel(logits_ref, labels_ref, weights_ref, o_ref, *, steps: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    logits = logits_ref[...].astype(jnp.float32)      # (bt, vocab)
+    labels = labels_ref[...]                          # (bt, 1) int32
+    weights = weights_ref[...].astype(jnp.float32)    # (bt, 1)
+
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1, keepdims=True)) + m
+    vocab = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    onehot = (iota == labels).astype(jnp.float32)
+    gold = jnp.sum(logits * onehot, axis=-1, keepdims=True)
+    nll = (lse - gold) * weights                      # (bt, 1)
+
+    o_ref[0, 0] += jnp.sum(nll)
+    o_ref[0, 1] += jnp.sum(weights)
+
+
+def softmax_xent(
+    logits: jnp.ndarray,
+    labels: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    block_t: int = DEFAULT_BLOCK_T,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Mean weighted softmax cross-entropy.
+
+    Args:
+      logits:  (t, vocab) float.
+      labels:  (t,) int32 gold ids.
+      weights: (t,) float; positions with weight 0 are ignored.
+
+    Returns:
+      scalar float32 mean loss over weighted positions.
+    """
+    t, vocab = logits.shape
+    block_t = min(block_t, t)
+    if t % block_t != 0:
+        raise ValueError(f"block_t={block_t} must divide t={t}")
+    steps = t // block_t
+    sums = pl.pallas_call(
+        functools.partial(_xent_kernel, steps=steps),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((block_t, vocab), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=interpret,
+    )(logits, labels.reshape(t, 1).astype(jnp.int32),
+      weights.reshape(t, 1))
+    return sums[0, 0] / jnp.maximum(sums[0, 1], 1.0)

@@ -1,0 +1,158 @@
+"""Static VMEM-footprint and MXU-utilization model for the Pallas kernels.
+
+interpret=True gives CPU-numpy timings that say nothing about TPU
+performance, so the L1 perf deliverable (DESIGN.md §7, EXPERIMENTS.md
+§Perf/L1) is *structural*: for each kernel and BlockSpec we compute
+
+* the per-grid-step VMEM working set (all resident input/output/scratch
+  blocks, double-buffered as the Mosaic pipeline would),
+* the MXU tile alignment of every matmul (multiples of 128 lanes × 8
+  sublanes for f32; full 128×128 systolic tiles ideally), and
+* arithmetic intensity (FLOPs per HBM byte) — the roofline position.
+
+`python -m compile.kernels.vmem` prints the table for the default and
+swept block sizes; pytest asserts the chosen defaults stay inside the
+16 MiB VMEM budget and keep the MXU shapes aligned.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPUs
+LANE = 128                     # MXU/VPU lane width
+SUBLANE_F32 = 8
+
+F32 = 4
+
+
+@dataclasses.dataclass
+class KernelFootprint:
+    name: str
+    config: str
+    vmem_bytes: int
+    mxu_shapes: List[tuple]
+    hbm_bytes: int
+    flops: int
+
+    @property
+    def vmem_frac(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def intensity(self) -> float:
+        """FLOPs per HBM byte moved (arithmetic intensity)."""
+        return self.flops / max(self.hbm_bytes, 1)
+
+    def mxu_aligned(self) -> bool:
+        """All matmul shapes tile the 128-lane MXU cleanly: the output
+        lane dim is either a multiple of 128 or an exact divisor of it
+        (a sub-tile that packs — e.g. d_head=64 packs two heads per lane
+        tile in a production multi-head kernel); the contraction dim must
+        fill whole f32 sublanes."""
+        for (_m, k, n) in self.mxu_shapes:
+            lane_ok = n % LANE == 0 or (n > 0 and LANE % n == 0)
+            if not lane_ok or k % SUBLANE_F32 != 0:
+                return False
+        return True
+
+
+def linformer_attention_footprint(n: int, d: int, k_proj: int,
+                                  block_n: int) -> KernelFootprint:
+    """Fused Linformer attention kernel (linformer_attn._attn_kernel).
+
+    Per grid step the working set is: one (block_n, d) q tile, the
+    resident (k_proj, d) k̄ and v̄ blocks, the (block_n, k_proj) logits,
+    and the (block_n, d) output tile.  Input tiles are double-buffered by
+    the pipeline; the resident k̄/v̄ blocks are fetched once.
+    """
+    q = block_n * d * F32 * 2          # double-buffered
+    kv = 2 * k_proj * d * F32          # resident whole-grid
+    logits = block_n * k_proj * F32    # scratch (register/VMEM)
+    out = block_n * d * F32 * 2
+    vmem = q + kv + logits + out
+    steps = n // block_n
+    hbm = (n * d + 2 * k_proj * d + n * d) * F32  # q in, k̄/v̄ in, out
+    flops = steps * (2 * block_n * k_proj * d     # q·k̄ᵀ
+                     + 6 * block_n * k_proj       # softmax (exp,div,sum)
+                     + 2 * block_n * k_proj * d)  # p̄·v̄
+    return KernelFootprint(
+        name="linformer_attention",
+        config=f"n={n} d={d} k={k_proj} block_n={block_n}",
+        vmem_bytes=vmem,
+        mxu_shapes=[(block_n, d, k_proj), (block_n, k_proj, d)],
+        hbm_bytes=hbm,
+        flops=flops,
+    )
+
+
+def full_attention_footprint(n: int, d: int, block_n: int) -> KernelFootprint:
+    """Standard attention baseline with online softmax (comparison row)."""
+    q = block_n * d * F32 * 2
+    kv = 2 * block_n * d * F32 * 2     # streamed kv tiles, double-buffered
+    logits = block_n * block_n * F32
+    acc = block_n * d * F32 + 2 * block_n * F32
+    out = block_n * d * F32 * 2
+    vmem = q + kv + logits + acc + out
+    hbm = (n * d) * F32 + (n // block_n) * (2 * n * d) * F32 + n * d * F32
+    flops = (n // block_n) * (n // block_n) * (
+        4 * block_n * block_n * d + 10 * block_n * block_n)
+    return KernelFootprint(
+        name="full_attention",
+        config=f"n={n} d={d} block_n={block_n}",
+        vmem_bytes=vmem,
+        mxu_shapes=[(block_n, d, block_n), (block_n, block_n, d)],
+        hbm_bytes=hbm,
+        flops=flops,
+    )
+
+
+def seq_project_footprint(n: int, d: int, k_proj: int,
+                          block_n: int) -> KernelFootprint:
+    """Sequence-projection kernel (E·K): accumulator resident, inputs
+    streamed over the n axis."""
+    proj = k_proj * block_n * F32 * 2
+    x = block_n * d * F32 * 2
+    acc = k_proj * d * F32             # resident accumulator
+    vmem = proj + x + acc
+    hbm = (k_proj * n + n * d + k_proj * d) * F32
+    flops = 2 * k_proj * n * d
+    return KernelFootprint(
+        name="seq_project",
+        config=f"n={n} d={d} k={k_proj} block_n={block_n}",
+        vmem_bytes=vmem,
+        mxu_shapes=[(k_proj, block_n, d)],
+        hbm_bytes=hbm,
+        flops=flops,
+    )
+
+
+def default_footprints(n: int = 4096, d: int = 64, k_proj: int = 256):
+    """The DESIGN.md §7 reference configuration."""
+    from .linformer_attn import DEFAULT_BLOCK_N
+    from .seq_proj import DEFAULT_BLOCK_N as SEQ_BLOCK_N
+    return [
+        linformer_attention_footprint(n, d, k_proj, DEFAULT_BLOCK_N),
+        seq_project_footprint(n, d, k_proj, SEQ_BLOCK_N),
+        full_attention_footprint(n, d, DEFAULT_BLOCK_N),
+    ]
+
+
+def main() -> None:
+    print(f"{'kernel':<22} {'config':<34} {'VMEM':>9} {'%16MiB':>7} "
+          f"{'MXU ok':>7} {'AI (f/B)':>9}")
+    for n in (1024, 4096, 16384):
+        for fp in default_footprints(n=n):
+            print(f"{fp.name:<22} {fp.config:<34} "
+                  f"{fp.vmem_bytes/1024:>7.0f}Ki {fp.vmem_frac:>6.1%} "
+                  f"{str(fp.mxu_aligned()):>7} {fp.intensity:>9.1f}")
+    print("\nblock_n sweep for linformer_attention (n=4096, d=64, k=256):")
+    for block_n in (64, 128, 256, 512, 1024):
+        fp = linformer_attention_footprint(4096, 64, 256, block_n)
+        print(f"  block_n={block_n:<5} VMEM {fp.vmem_bytes/1024:>7.0f}Ki "
+              f"({fp.vmem_frac:>5.1%})  AI {fp.intensity:>6.1f}")
+
+
+if __name__ == "__main__":
+    main()

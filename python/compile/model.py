@@ -1,0 +1,433 @@
+"""L2: the Linformer / Transformer encoder in JAX, calling the L1 kernels.
+
+This module defines the paper's model family (RoBERTa-style encoder with
+either standard O(n^2) attention or Linformer O(n·k) attention, paper Eq. 7)
+plus the MLM / classification heads and a fused AdamW train step.
+
+Design decisions that shape the Rust side:
+
+* **Flat parameter packing.** All parameters live in ONE flat float32
+  vector; :func:`param_spec` defines the canonical (name, shape) order and
+  :func:`unpack` slices it with static offsets inside the traced function.
+  The Rust runtime therefore moves exactly one buffer per optimizer slot
+  (params / adam_m / adam_v) across the PJRT boundary, and a checkpoint is
+  a single contiguous file.
+
+* **All Additional Efficiency Techniques of paper §4 are first-class
+  config**: sharing ∈ {none, headwise, kv, layerwise}, nonuniform per-layer
+  ``k`` schedules, and projection mode ∈ {linear, pool, conv}.
+
+* **Kernels are injectable.** ``use_kernels=True`` routes attention and the
+  MLM loss through the Pallas kernels (interpret mode — the only mode the
+  CPU PJRT plugin can execute); ``False`` uses the pure-jnp reference path.
+  Both lower to HLO and both are exported, which gives the Rust integration
+  tests a cross-check and the benches a fused-vs-unfused ablation.
+
+Python runs ONCE at build time (``make artifacts``); nothing here is on the
+request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels.diff import (full_attention_d as full_attention,
+                           linformer_attention_d as linformer_attention,
+                           seq_project_d as seq_project,
+                           softmax_xent_d as softmax_xent)
+
+SHARING_MODES = ("none", "headwise", "kv", "layerwise")
+PROJ_MODES = ("linear", "pool", "conv")
+ATTENTION_KINDS = ("standard", "linformer")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of one encoder variant (one AOT artifact)."""
+
+    vocab_size: int = 4096
+    max_len: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    attention: str = "linformer"
+    k_proj: int = 64
+    sharing: str = "layerwise"
+    proj_mode: str = "linear"
+    # Optional per-layer k override (paper §4 "nonuniform projected
+    # dimension"); length must equal n_layers when set.
+    k_schedule: Optional[Tuple[int, ...]] = None
+    num_classes: int = 2
+    tie_embeddings: bool = True
+
+    def __post_init__(self):
+        assert self.attention in ATTENTION_KINDS, self.attention
+        assert self.sharing in SHARING_MODES, self.sharing
+        assert self.proj_mode in PROJ_MODES, self.proj_mode
+        assert self.d_model % self.n_heads == 0
+        if self.k_schedule is not None:
+            assert len(self.k_schedule) == self.n_layers
+        if self.proj_mode in ("pool", "conv"):
+            assert self.max_len % self.k_proj == 0, (
+                "pool/conv projection requires k | n")
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def layer_k(self, layer: int) -> int:
+        if self.k_schedule is not None:
+            return self.k_schedule[layer]
+        return self.k_proj
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec / packing
+# ---------------------------------------------------------------------------
+
+def _proj_param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Shapes of the E/F projection parameters under each sharing mode."""
+    if cfg.attention != "linformer" or cfg.proj_mode == "pool":
+        return []  # pooling has no parameters; standard attn has no E/F
+    shapes: List[Tuple[str, Tuple[int, ...]]] = []
+    n = cfg.max_len
+    if cfg.proj_mode == "conv":
+        # Depthwise 1-D conv, kernel width = stride = n/k (paper §4
+        # "general projections"), weights shared across channels.
+        w = n // cfg.k_proj
+        if cfg.sharing == "layerwise":
+            shapes.append(("proj/conv_w", (w,)))
+        else:
+            for l in range(cfg.n_layers):
+                shapes.append((f"layer{l}/conv_w", (w,)))
+                if cfg.sharing == "headwise":
+                    shapes.append((f"layer{l}/conv_w_f", (w,)))
+        return shapes
+    # linear projections
+    if cfg.sharing == "layerwise":
+        # single E for all layers/heads/key&value
+        shapes.append(("proj/E", (cfg.k_proj, n)))
+    else:
+        for l in range(cfg.n_layers):
+            k = cfg.layer_k(l)
+            if cfg.sharing == "kv":
+                shapes.append((f"layer{l}/E", (k, n)))
+            elif cfg.sharing == "headwise":
+                shapes.append((f"layer{l}/E", (k, n)))
+                shapes.append((f"layer{l}/F", (k, n)))
+            else:  # none: per-head E and F
+                shapes.append((f"layer{l}/E", (cfg.n_heads, k, n)))
+                shapes.append((f"layer{l}/F", (cfg.n_heads, k, n)))
+    return shapes
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical ordered list of (name, shape) — the flat-packing contract.
+
+    The Rust parameter store and the checkpoint format both rely on this
+    exact order; `aot.py` serializes it into the artifact manifest.
+    """
+    d, ff, v, n = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.max_len
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed/tokens", (v, d)),
+        ("embed/positions", (n, d)),
+        ("embed/ln_scale", (d,)),
+        ("embed/ln_bias", (d,)),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}"
+        spec += [
+            (f"{p}/ln1_scale", (d,)), (f"{p}/ln1_bias", (d,)),
+            (f"{p}/wq", (d, d)), (f"{p}/bq", (d,)),
+            (f"{p}/wk", (d, d)), (f"{p}/bk", (d,)),
+            (f"{p}/wv", (d, d)), (f"{p}/bv", (d,)),
+            (f"{p}/wo", (d, d)), (f"{p}/bo", (d,)),
+            (f"{p}/ln2_scale", (d,)), (f"{p}/ln2_bias", (d,)),
+            (f"{p}/ffn_w1", (d, ff)), (f"{p}/ffn_b1", (ff,)),
+            (f"{p}/ffn_w2", (ff, d)), (f"{p}/ffn_b2", (d,)),
+        ]
+    spec += _proj_param_shapes(cfg)
+    spec += [
+        ("final/ln_scale", (d,)), ("final/ln_bias", (d,)),
+        ("mlm/dense_w", (d, d)), ("mlm/dense_b", (d,)),
+        ("mlm/ln_scale", (d,)), ("mlm/ln_bias", (d,)),
+        ("mlm/out_bias", (v,)),
+        ("cls/w", (d, cfg.num_classes)), ("cls/b", (cfg.num_classes,)),
+    ]
+    if not cfg.tie_embeddings:
+        spec.append(("mlm/out_w", (d, v)))
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_spec(cfg))
+
+
+def param_offsets(cfg: ModelConfig) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+    out, off = {}, 0
+    for name, shape in param_spec(cfg):
+        out[name] = (off, shape)
+        off += int(np.prod(shape))
+    return out
+
+
+def unpack(flat: jnp.ndarray, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Slice the flat vector into named tensors (static offsets — free)."""
+    params = {}
+    for name, (off, shape) in param_offsets(cfg).items():
+        size = int(np.prod(shape))
+        params[name] = jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+    return params
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """BERT-style initialisation, returned as the flat float32 vector."""
+    rng = np.random.RandomState(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        if name.endswith(("_bias", "/bq", "/bk", "/bv", "/bo", "_b1", "_b2",
+                          "dense_b", "out_bias", "cls/b")) or name.endswith("/b"):
+            x = np.zeros(shape, np.float32)
+        elif "ln" in name and name.endswith("scale"):
+            x = np.ones(shape, np.float32)
+        elif "/E" in name or "/F" in name:
+            # JL-style init: N(0, 1/k) rows (paper Thm 2's R matrix).
+            k = shape[-2]
+            x = rng.normal(0.0, 1.0 / math.sqrt(k), shape).astype(np.float32)
+        elif "conv_w" in name:
+            # start as mean pooling
+            x = np.full(shape, 1.0 / shape[-1], np.float32)
+        else:
+            x = rng.normal(0.0, 0.02, shape).astype(np.float32)
+        chunks.append(x.reshape(-1))
+    return np.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Model pieces
+# ---------------------------------------------------------------------------
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return 0.5 * x * (1.0 + jnp.tanh(
+        math.sqrt(2.0 / math.pi) * (x + 0.044715 * jnp.power(x, 3))))
+
+
+def _get_ef(params: Dict[str, jnp.ndarray], cfg: ModelConfig, layer: int,
+            ) -> Tuple[Optional[jnp.ndarray], Optional[jnp.ndarray]]:
+    """Return per-layer (E, F) with head axis: (H, k, n) each, or None."""
+    if cfg.attention != "linformer" or cfg.proj_mode != "linear":
+        return None, None
+    h = cfg.n_heads
+    if cfg.sharing == "layerwise":
+        e = params["proj/E"]
+        e = jnp.broadcast_to(e, (h,) + e.shape)
+        return e, e
+    if cfg.sharing == "kv":
+        e = params[f"layer{layer}/E"]
+        e = jnp.broadcast_to(e, (h,) + e.shape)
+        return e, e
+    if cfg.sharing == "headwise":
+        e = params[f"layer{layer}/E"]
+        f = params[f"layer{layer}/F"]
+        return (jnp.broadcast_to(e, (h,) + e.shape),
+                jnp.broadcast_to(f, (h,) + f.shape))
+    return params[f"layer{layer}/E"], params[f"layer{layer}/F"]
+
+
+def _pool_project(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Mean-pool the sequence axis n -> k (parameter-free projection)."""
+    n, d = x.shape
+    return jnp.mean(x.reshape(k, n // k, d), axis=1)
+
+
+def _conv_project(x: jnp.ndarray, w: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Depthwise strided conv, kernel width = stride = n/k."""
+    n, d = x.shape
+    win = n // k
+    return jnp.einsum("kwd,w->kd", x.reshape(k, win, d), w)
+
+
+def _compress_kv(k_heads: jnp.ndarray, v_heads: jnp.ndarray,
+                 params: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                 layer: int, use_kernels: bool
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequence-compress per-head K/V: (H, n, dh) -> (H, k, dh)."""
+    kp = cfg.layer_k(layer)
+    if cfg.proj_mode == "pool":
+        f = lambda x: _pool_project(x, kp)
+        return jax.vmap(f)(k_heads), jax.vmap(f)(v_heads)
+    if cfg.proj_mode == "conv":
+        if cfg.sharing == "layerwise":
+            we = wf = params["proj/conv_w"]
+        elif cfg.sharing == "headwise":
+            we = params[f"layer{layer}/conv_w"]
+            wf = params[f"layer{layer}/conv_w_f"]
+        else:
+            we = wf = params[f"layer{layer}/conv_w"]
+        fe = lambda x: _conv_project(x, we, kp)
+        ff = lambda x: _conv_project(x, wf, kp)
+        return jax.vmap(fe)(k_heads), jax.vmap(ff)(v_heads)
+    e, f = _get_ef(params, cfg, layer)
+    if use_kernels:
+        kbar = jax.vmap(seq_project)(e, k_heads)
+        vbar = jax.vmap(seq_project)(f, v_heads)
+    else:
+        kbar = jax.vmap(kref.seq_project_ref)(e, k_heads)
+        vbar = jax.vmap(kref.seq_project_ref)(f, v_heads)
+    return kbar, vbar
+
+
+def _attention_layer(x: jnp.ndarray, params: Dict[str, jnp.ndarray],
+                     cfg: ModelConfig, layer: int,
+                     use_kernels: bool) -> jnp.ndarray:
+    """Multi-head (Linformer or standard) attention for one example.
+
+    x: (n, d_model) -> (n, d_model).
+    """
+    p = f"layer{layer}"
+    n, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = x @ params[f"{p}/wq"] + params[f"{p}/bq"]
+    k = x @ params[f"{p}/wk"] + params[f"{p}/bk"]
+    v = x @ params[f"{p}/wv"] + params[f"{p}/bv"]
+    # (n, d) -> (H, n, dh)
+    q = q.reshape(n, h, dh).transpose(1, 0, 2)
+    k = k.reshape(n, h, dh).transpose(1, 0, 2)
+    v = v.reshape(n, h, dh).transpose(1, 0, 2)
+
+    if cfg.attention == "standard":
+        if use_kernels:
+            ctx = jax.vmap(full_attention)(q, k, v)
+        else:
+            ctx = jax.vmap(kref.attention_ref)(q, k, v)
+    else:
+        kbar, vbar = _compress_kv(k, v, params, cfg, layer, use_kernels)
+        if use_kernels:
+            ctx = jax.vmap(linformer_attention)(q, kbar, vbar)
+        else:
+            ctx = jax.vmap(kref.attention_ref)(q, kbar, vbar)
+
+    ctx = ctx.transpose(1, 0, 2).reshape(n, d)
+    return ctx @ params[f"{p}/wo"] + params[f"{p}/bo"]
+
+
+def encode(flat: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig,
+           use_kernels: bool = True) -> jnp.ndarray:
+    """Encoder trunk: (B, n) int32 tokens -> (B, n, d) hidden states."""
+    params = unpack(flat, cfg)
+
+    def one(tok):
+        n = tok.shape[0]
+        x = params["embed/tokens"][tok] + params["embed/positions"][:n]
+        x = layer_norm(x, params["embed/ln_scale"], params["embed/ln_bias"])
+        for l in range(cfg.n_layers):
+            p = f"layer{l}"
+            hst = layer_norm(x, params[f"{p}/ln1_scale"], params[f"{p}/ln1_bias"])
+            x = x + _attention_layer(hst, params, cfg, l, use_kernels)
+            hst = layer_norm(x, params[f"{p}/ln2_scale"], params[f"{p}/ln2_bias"])
+            ff = gelu(hst @ params[f"{p}/ffn_w1"] + params[f"{p}/ffn_b1"])
+            x = x + ff @ params[f"{p}/ffn_w2"] + params[f"{p}/ffn_b2"]
+        return layer_norm(x, params["final/ln_scale"], params["final/ln_bias"])
+
+    return jax.vmap(one)(tokens)
+
+
+def mlm_logits(flat: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig,
+               use_kernels: bool = True) -> jnp.ndarray:
+    """MLM head: (B, n) tokens -> (B, n, vocab) logits."""
+    params = unpack(flat, cfg)
+    hid = encode(flat, tokens, cfg, use_kernels)
+    hid = gelu(hid @ params["mlm/dense_w"] + params["mlm/dense_b"])
+    hid = layer_norm(hid, params["mlm/ln_scale"], params["mlm/ln_bias"])
+    out_w = (params["embed/tokens"].T if cfg.tie_embeddings
+             else params["mlm/out_w"])
+    return hid @ out_w + params["mlm/out_bias"]
+
+
+def cls_logits(flat: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig,
+               use_kernels: bool = True) -> jnp.ndarray:
+    """Classifier head over the [CLS] (position 0) hidden state."""
+    params = unpack(flat, cfg)
+    hid = encode(flat, tokens, cfg, use_kernels)[:, 0, :]
+    return hid @ params["cls/w"] + params["cls/b"]
+
+
+def mlm_loss(flat: jnp.ndarray, tokens: jnp.ndarray, labels: jnp.ndarray,
+             weights: jnp.ndarray, cfg: ModelConfig,
+             use_kernels: bool = True) -> jnp.ndarray:
+    """Mean masked-LM loss over weighted positions (scalar)."""
+    logits = mlm_logits(flat, tokens, cfg, use_kernels)
+    b, n, v = logits.shape
+    flat_logits = logits.reshape(b * n, v)
+    flat_labels = labels.reshape(b * n)
+    flat_w = weights.reshape(b * n)
+    if use_kernels:
+        return softmax_xent(flat_logits, flat_labels, flat_w)
+    return kref.softmax_xent_ref(flat_logits, flat_labels, flat_w)
+
+
+def cls_loss(flat: jnp.ndarray, tokens: jnp.ndarray, labels: jnp.ndarray,
+             cfg: ModelConfig, use_kernels: bool = True) -> jnp.ndarray:
+    # The classifier head's loss is a (batch, num_classes) softmax — far too
+    # small to benefit from the tiled kernel; the jnp oracle fuses fine.
+    logits = cls_logits(flat, tokens, cfg, use_kernels)
+    w = jnp.ones((logits.shape[0],), jnp.float32)
+    return kref.softmax_xent_ref(logits, labels, w)
+
+
+# ---------------------------------------------------------------------------
+# Fused AdamW train step (exported as one HLO module)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+def train_step(flat: jnp.ndarray, m: jnp.ndarray, v: jnp.ndarray,
+               step: jnp.ndarray, lr: jnp.ndarray,
+               tokens: jnp.ndarray, labels: jnp.ndarray,
+               weights: jnp.ndarray, cfg: ModelConfig,
+               opt: OptConfig = OptConfig(), use_kernels: bool = True,
+               objective: str = "mlm"):
+    """One AdamW step.  Everything (fwd+bwd+optimizer) is one HLO module.
+
+    Returns (new_flat, new_m, new_v, loss).  ``step`` is the 1-based update
+    index (float32 scalar) and ``lr`` the externally-scheduled learning
+    rate — the Rust trainer owns the schedule.
+    """
+    if objective == "mlm":
+        loss_fn = lambda p: mlm_loss(p, tokens, labels, weights, cfg,
+                                     use_kernels)
+    else:
+        loss_fn = lambda p: cls_loss(p, tokens, labels, cfg, use_kernels)
+    loss, grad = jax.value_and_grad(loss_fn)(flat)
+    # global-norm clip
+    gnorm = jnp.sqrt(jnp.sum(jnp.square(grad)))
+    scale = jnp.minimum(1.0, opt.grad_clip / (gnorm + 1e-12))
+    grad = grad * scale
+    m_new = opt.beta1 * m + (1.0 - opt.beta1) * grad
+    v_new = opt.beta2 * v + (1.0 - opt.beta2) * jnp.square(grad)
+    mhat = m_new / (1.0 - jnp.power(opt.beta1, step))
+    vhat = v_new / (1.0 - jnp.power(opt.beta2, step))
+    update = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * flat
+    return flat - lr * update, m_new, v_new, loss

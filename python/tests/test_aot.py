@@ -1,0 +1,134 @@
+"""AOT export pipeline: HLO text validity and manifest contract."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    lowered = jax.jit(lambda x, y: (x @ y + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_to_hlo_text_contains_entry_with_tuple_root():
+    lowered = jax.jit(lambda x: (x * 2,)).lower(
+        jax.ShapeDtypeStruct((8,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    # return_tuple=True -> root is a tuple; the rust side unwraps to_tuple1
+    assert "tuple" in text.lower()
+
+
+def test_model_programs_signatures():
+    cfg = aot.TINY
+    progs = aot.model_programs(cfg, batch=4, cls=True)
+    names = {p.name for p in progs}
+    assert {"mlm_logits", "encode", "train_step", "mlm_loss",
+            "cls_logits", "cls_train_step"} <= names
+    ts = next(p for p in progs if p.name == "train_step")
+    assert ts.arg_names[:3] == ["params", "adam_m", "adam_v"]
+    pc = M.param_count(cfg)
+    assert ts.args[0].shape == (pc,)
+    assert ts.args[5].shape == (4, cfg.max_len)
+
+
+def test_profiles_are_disjoint_enough():
+    core = set(aot.core_models())
+    bench = set(aot.bench_models())
+    exp = set(aot.experiment_models())
+    assert not core & bench
+    assert not core & exp
+    assert not bench & exp
+
+
+def test_bench_grid_covers_table3_axes():
+    models = aot.bench_models()
+    ns = {int(n.split("_n")[1].split("_")[0]) for n in models if "_n" in n}
+    assert {128, 256, 512, 1024, 2048} <= ns
+    ks = {int(n.split("_k")[1]) for n in models if "_k" in n}
+    assert {32, 64, 128, 256} <= ks
+
+
+def test_experiment_models_match_paper_sweeps():
+    models = aot.experiment_models()
+    assert {"fig3a_std", "fig3a_k8", "fig3a_k16", "fig3a_k32",
+            "fig3a_k64"} <= set(models)
+    assert {"fig3c_none", "fig3c_headwise", "fig3c_kv",
+            "fig3c_layerwise"} <= set(models)
+    assert {"fig3d_n64", "fig3d_n128", "fig3d_n256"} <= set(models)
+    assert "t2_std" in models and "ablate_proj_pool" in models
+
+
+def test_cfg_dict_json_serializable():
+    cfg = M.ModelConfig(k_schedule=(8, 8, 4, 4))
+    json.dumps(aot.cfg_dict(cfg))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    """Validate whatever `make artifacts` actually produced."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_has_core_models(self, manifest):
+        assert {"tiny", "tiny_std", "serve_128"} <= set(manifest["models"])
+
+    def test_files_exist_and_nonempty(self, manifest):
+        for name, entry in manifest["models"].items():
+            init = os.path.join(ART, entry["init"])
+            assert os.path.getsize(init) == 4 * entry["param_count"], name
+            for prog, meta in entry["programs"].items():
+                p = os.path.join(ART, meta["hlo"])
+                assert os.path.getsize(p) > 1000, (name, prog)
+
+    def test_param_spec_sums_to_count(self, manifest):
+        for name, entry in manifest["models"].items():
+            total = sum(int(np.prod(s)) for _, s in entry["param_spec"])
+            assert total == entry["param_count"], name
+
+    def test_hlo_text_parses_header(self, manifest):
+        entry = manifest["models"]["tiny"]
+        path = os.path.join(ART, entry["programs"]["mlm_logits"]["hlo"])
+        head = open(path).read(200)
+        assert head.startswith("HloModule")
+
+    def test_golden_outputs_reproducible(self, manifest):
+        """Recompute tiny-model logits from init.bin and compare goldens."""
+        entry = manifest["models"]["tiny"]
+        if "golden" not in entry:
+            pytest.skip("no goldens emitted")
+        cfg = M.ModelConfig(**{k: (tuple(v) if k == "k_schedule" and v
+                                   else v)
+                               for k, v in entry["config"].items()})
+        flat = np.fromfile(os.path.join(ART, entry["init"]), "<f4")
+        g = entry["golden"]
+        toks = np.fromfile(os.path.join(ART, g["tokens"]["file"]),
+                           "<i4").reshape(g["tokens"]["shape"])
+        want = np.fromfile(os.path.join(ART, g["logits"]["file"]),
+                           "<f4").reshape(g["logits"]["shape"])
+        got = M.mlm_logits(jnp.asarray(flat), jnp.asarray(toks), cfg)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_train_step_io_arity(self, manifest):
+        ts = manifest["models"]["tiny"]["programs"]["train_step"]
+        assert [i["name"] for i in ts["inputs"]] == [
+            "params", "adam_m", "adam_v", "step", "lr",
+            "tokens", "labels", "weights"]
+        assert ts["outputs"] == ["params", "adam_m", "adam_v", "loss"]

@@ -1,0 +1,101 @@
+"""Custom-VJP wrappers: analytic backward vs jax autodiff of the oracle."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import diff, ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_seq_project_grads(seed):
+    rng = np.random.default_rng(seed)
+    proj, x = _rand(rng, 8, 32), _rand(rng, 32, 16)
+
+    def loss_k(p, xx):
+        return jnp.sum(jnp.sin(diff.seq_project_d(p, xx)))
+
+    def loss_r(p, xx):
+        return jnp.sum(jnp.sin(ref.seq_project_ref(p, xx)))
+
+    gk = jax.grad(loss_k, argnums=(0, 1))(proj, x)
+    gr = jax.grad(loss_r, argnums=(0, 1))(proj, x)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                  n=st.sampled_from([16, 32]),
+                  kp=st.sampled_from([8, 16]))
+def test_linformer_attention_grads(seed, n, kp):
+    rng = np.random.default_rng(seed)
+    d = 16
+    q, kbar, vbar = _rand(rng, n, d), _rand(rng, kp, d), _rand(rng, kp, d)
+
+    def loss_k(a, b, c):
+        return jnp.sum(jnp.tanh(diff.linformer_attention_d(a, b, c)))
+
+    def loss_r(a, b, c):
+        return jnp.sum(jnp.tanh(ref.attention_ref(a, b, c)))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, kbar, vbar)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, kbar, vbar)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_full_attention_grads(seed):
+    rng = np.random.default_rng(seed)
+    n, d = 32, 16
+    q, k, v = _rand(rng, n, d), _rand(rng, n, d), _rand(rng, n, d)
+    gk = jax.grad(lambda a, b, c: jnp.sum(
+        jnp.tanh(diff.full_attention_d(a, b, c))), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda a, b, c: jnp.sum(
+        jnp.tanh(ref.attention_ref(a, b, c))), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1),
+                  mask_rate=st.floats(0.05, 1.0))
+def test_softmax_xent_grads(seed, mask_rate):
+    rng = np.random.default_rng(seed)
+    t, vocab = 32, 64
+    logits = _rand(rng, t, vocab, scale=2.0)
+    labels = jnp.asarray(rng.integers(0, vocab, t), jnp.int32)
+    weights = jnp.asarray((rng.random(t) < mask_rate).astype(np.float32))
+    gk = jax.grad(lambda l: diff.softmax_xent_d(l, labels, weights))(logits)
+    gr = jax.grad(lambda l: ref.softmax_xent_ref(l, labels, weights))(logits)
+    np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-6)
+
+
+def test_finite_difference_spotcheck():
+    """Independent check: analytic VJP vs central finite differences."""
+    rng = np.random.default_rng(0)
+    n, d, kp = 8, 4, 4
+    q, kbar, vbar = _rand(rng, n, d), _rand(rng, kp, d), _rand(rng, kp, d)
+
+    def loss(qq):
+        return float(jnp.sum(diff.linformer_attention_d(qq, kbar, vbar)))
+
+    g = np.asarray(jax.grad(
+        lambda qq: jnp.sum(diff.linformer_attention_d(qq, kbar, vbar)))(q))
+    eps = 1e-3
+    for idx in [(0, 0), (3, 2), (7, 3)]:
+        dq = np.zeros((n, d), np.float32)
+        dq[idx] = eps
+        fd = (loss(q + dq) - loss(q - dq)) / (2 * eps)
+        np.testing.assert_allclose(g[idx], fd, rtol=2e-2, atol=1e-3)

@@ -1,0 +1,249 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes per the repro contract; every kernel runs
+under ``interpret=True`` (the only executable mode on CPU PJRT).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.linformer_attn import full_attention, linformer_attention
+from compile.kernels.seq_proj import seq_project
+from compile.kernels.softmax_xent import softmax_xent
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _rand(rng, *shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# seq_project
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 32, 64]),
+    k_proj=st.sampled_from([8, 16, 48]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_seq_project_matches_ref(n_blocks, block, k_proj, d, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block
+    proj = _rand(rng, k_proj, n, scale=1.0 / np.sqrt(k_proj))
+    x = _rand(rng, n, d)
+    got = seq_project(proj, x, block_n=block)
+    want = ref.seq_project_ref(proj, x)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_seq_project_block_larger_than_n_clamps():
+    rng = np.random.default_rng(0)
+    proj, x = _rand(rng, 8, 32), _rand(rng, 32, 16)
+    got = seq_project(proj, x, block_n=512)
+    np.testing.assert_allclose(got, ref.seq_project_ref(proj, x),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_seq_project_rejects_nondividing_block():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        seq_project(_rand(rng, 8, 48), _rand(rng, 48, 16), block_n=32)
+
+
+def test_seq_project_rejects_shape_mismatch():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        seq_project(_rand(rng, 8, 32), _rand(rng, 64, 16))
+
+
+def test_seq_project_bf16_inputs_accumulate_f32():
+    rng = np.random.default_rng(1)
+    proj = _rand(rng, 16, 128, dtype=jnp.bfloat16)
+    x = _rand(rng, 128, 32, dtype=jnp.bfloat16)
+    got = seq_project(proj, x, block_n=32)
+    assert got.dtype == jnp.float32
+    want = ref.seq_project_ref(proj.astype(jnp.float32),
+                               x.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# linformer attention
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 32, 64]),
+    k_proj=st.sampled_from([8, 16, 64]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linformer_attention_matches_ref(n_blocks, block, k_proj, d, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block
+    q = _rand(rng, n, d)
+    k = _rand(rng, n, d)
+    v = _rand(rng, n, d)
+    e = _rand(rng, k_proj, n, scale=1.0 / np.sqrt(k_proj))
+    f = _rand(rng, k_proj, n, scale=1.0 / np.sqrt(k_proj))
+    kbar = ref.seq_project_ref(e, k)
+    vbar = ref.seq_project_ref(f, v)
+    got = linformer_attention(q, kbar, vbar, block_n=block)
+    want = ref.linformer_attention_ref(q, k, v, e, f)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_linformer_attention_rows_are_convex_combinations():
+    """softmax weights sum to 1 ⇒ constant V must pass through exactly."""
+    rng = np.random.default_rng(3)
+    n, d, kp = 64, 32, 16
+    q = _rand(rng, n, d)
+    kbar = _rand(rng, kp, d)
+    vbar = jnp.ones((kp, d), jnp.float32) * 3.5
+    out = linformer_attention(q, kbar, vbar)
+    np.testing.assert_allclose(out, np.full((n, d), 3.5), rtol=1e-5)
+
+
+def test_linformer_attention_softmax_scale_invariance():
+    """Adding a constant to all logits (shift in k_bar direction of q) must
+    not change the output — the streaming softmax must be shift-stable."""
+    rng = np.random.default_rng(4)
+    n, d, kp = 32, 16, 8
+    q = _rand(rng, n, d, scale=30.0)  # large logits stress stability
+    kbar = _rand(rng, kp, d, scale=30.0)
+    vbar = _rand(rng, kp, d)
+    out = linformer_attention(q, kbar, vbar)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_linformer_attention_shape_validation():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        linformer_attention(_rand(rng, 32, 16), _rand(rng, 8, 16),
+                            _rand(rng, 8, 8))
+
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    batch=st.integers(1, 3),
+    heads=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linformer_attention_vmap_consistency(batch, heads, seed):
+    """vmap over (B, H) must equal per-slice application."""
+    rng = np.random.default_rng(seed)
+    n, d, kp = 32, 16, 8
+    q = _rand(rng, batch, heads, n, d)
+    kbar = _rand(rng, batch, heads, kp, d)
+    vbar = _rand(rng, batch, heads, kp, d)
+    got = jax.vmap(jax.vmap(linformer_attention))(q, kbar, vbar)
+    for b in range(batch):
+        for h in range(heads):
+            want = linformer_attention(q[b, h], kbar[b, h], vbar[b, h])
+            np.testing.assert_allclose(got[b, h], want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# full (standard) attention baseline
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    nq_blocks=st.integers(1, 3),
+    nk_blocks=st.integers(1, 3),
+    block=st.sampled_from([16, 32]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_full_attention_matches_ref(nq_blocks, nk_blocks, block, d, seed):
+    rng = np.random.default_rng(seed)
+    n, m = nq_blocks * block, nk_blocks * block
+    q, k, v = _rand(rng, n, d), _rand(rng, m, d), _rand(rng, m, d)
+    got = full_attention(q, k, v, block_n=block)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_full_attention_online_softmax_stability():
+    """Large-magnitude logits across kv blocks exercise the running-max
+    rescaling; the result must stay finite and match the oracle."""
+    rng = np.random.default_rng(7)
+    n, d = 64, 16
+    q = _rand(rng, n, d, scale=20.0)
+    k = _rand(rng, n, d, scale=20.0)
+    v = _rand(rng, n, d)
+    got = full_attention(q, k, v, block_n=16)
+    want = ref.attention_ref(q, k, v)
+    assert np.all(np.isfinite(np.asarray(got)))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_full_vs_linformer_with_identity_projection():
+    """With E = F = I (k_proj = n), Linformer must equal full attention."""
+    rng = np.random.default_rng(8)
+    n, d = 32, 16
+    q, k, v = _rand(rng, n, d), _rand(rng, n, d), _rand(rng, n, d)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    kbar = ref.seq_project_ref(eye, k)
+    vbar = ref.seq_project_ref(eye, v)
+    got = linformer_attention(q, kbar, vbar)
+    want = full_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(**SETTINGS)
+@hypothesis.given(
+    t_blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 32, 64]),
+    vocab=st.sampled_from([64, 128, 512]),
+    mask_rate=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(t_blocks, block, vocab, mask_rate, seed):
+    rng = np.random.default_rng(seed)
+    t = t_blocks * block
+    logits = _rand(rng, t, vocab, scale=3.0)
+    labels = jnp.asarray(rng.integers(0, vocab, t), jnp.int32)
+    weights = jnp.asarray((rng.random(t) < mask_rate).astype(np.float32))
+    got = softmax_xent(logits, labels, weights, block_t=block)
+    want = ref.softmax_xent_ref(logits, labels, weights)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_all_masked_is_zero():
+    rng = np.random.default_rng(0)
+    logits = _rand(rng, 32, 64)
+    labels = jnp.zeros((32,), jnp.int32)
+    got = softmax_xent(logits, labels, jnp.zeros((32,), jnp.float32))
+    assert float(got) == 0.0
+
+
+def test_softmax_xent_perfect_prediction_near_zero():
+    vocab, t = 64, 32
+    labels = jnp.asarray(np.arange(t) % vocab, jnp.int32)
+    logits = jax.nn.one_hot(labels, vocab) * 100.0
+    got = softmax_xent(logits, labels, jnp.ones((t,), jnp.float32))
+    assert float(got) < 1e-4
+
+
+def test_softmax_xent_uniform_logits_log_vocab():
+    vocab, t = 128, 64
+    logits = jnp.zeros((t, vocab), jnp.float32)
+    labels = jnp.zeros((t,), jnp.int32)
+    got = softmax_xent(logits, labels, jnp.ones((t,), jnp.float32))
+    np.testing.assert_allclose(float(got), np.log(vocab), rtol=1e-5)

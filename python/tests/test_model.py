@@ -1,0 +1,229 @@
+"""L2 model tests: packing contract, sharing modes, training dynamics."""
+
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+TINY = M.ModelConfig(vocab_size=256, max_len=32, d_model=16, n_heads=2,
+                     n_layers=2, d_ff=32, k_proj=8, sharing="layerwise")
+
+
+def _toks(cfg, batch=2, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, cfg.vocab_size, (batch, cfg.max_len)),
+                       jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Flat-packing contract
+# ---------------------------------------------------------------------------
+
+def test_param_count_matches_spec():
+    assert M.param_count(TINY) == sum(
+        int(np.prod(s)) for _, s in M.param_spec(TINY))
+
+
+def test_offsets_are_contiguous_and_ordered():
+    offs = M.param_offsets(TINY)
+    prev_end = 0
+    for name, shape in M.param_spec(TINY):
+        off, shp = offs[name]
+        assert off == prev_end, name
+        assert tuple(shp) == tuple(shape)
+        prev_end = off + int(np.prod(shape))
+    assert prev_end == M.param_count(TINY)
+
+
+def test_unpack_roundtrip():
+    flat = jnp.asarray(M.init_params(TINY))
+    params = M.unpack(flat, TINY)
+    rebuilt = jnp.concatenate([params[n].reshape(-1)
+                               for n, _ in M.param_spec(TINY)])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(rebuilt))
+
+
+def test_init_is_deterministic_per_seed():
+    a = M.init_params(TINY, seed=7)
+    b = M.init_params(TINY, seed=7)
+    c = M.init_params(TINY, seed=8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_layernorm_scales_init_to_one_biases_zero():
+    params = M.unpack(jnp.asarray(M.init_params(TINY)), TINY)
+    np.testing.assert_array_equal(params["embed/ln_scale"], 1.0)
+    np.testing.assert_array_equal(params["embed/ln_bias"], 0.0)
+
+
+@pytest.mark.parametrize("sharing,expected_mats", [
+    # 2 layers, 2 heads: none -> per-layer per-head E and F = 2 tensors/layer
+    ("none", 4), ("headwise", 4), ("kv", 2), ("layerwise", 1),
+])
+def test_sharing_parameter_counts(sharing, expected_mats):
+    """Paper §4: 12L/12H -> 24 / 12 / 1 distinct matrices; scaled here."""
+    cfg = dataclasses.replace(TINY, sharing=sharing)
+    names = [n for n, _ in M.param_spec(cfg) if "/E" in n or "/F" in n]
+    assert len(names) == expected_mats
+
+
+def test_k_schedule_changes_spec():
+    cfg = dataclasses.replace(TINY, sharing="kv", k_schedule=(8, 4))
+    spec = dict(M.param_spec(cfg))
+    assert spec["layer0/E"] == (8, 32)
+    assert spec["layer1/E"] == (4, 32)
+
+
+def test_pool_mode_has_no_projection_params():
+    cfg = dataclasses.replace(TINY, proj_mode="pool")
+    assert not [n for n, _ in M.param_spec(cfg) if "proj" in n or "/E" in n]
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sharing", M.SHARING_MODES)
+def test_kernel_and_ref_paths_agree(sharing):
+    cfg = dataclasses.replace(TINY, sharing=sharing)
+    flat = jnp.asarray(M.init_params(cfg))
+    toks = _toks(cfg)
+    a = M.mlm_logits(flat, toks, cfg, use_kernels=True)
+    b = M.mlm_logits(flat, toks, cfg, use_kernels=False)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("proj_mode", M.PROJ_MODES)
+def test_proj_modes_forward_shapes(proj_mode):
+    cfg = dataclasses.replace(TINY, proj_mode=proj_mode)
+    flat = jnp.asarray(M.init_params(cfg))
+    out = M.mlm_logits(flat, _toks(cfg), cfg)
+    assert out.shape == (2, cfg.max_len, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_standard_attention_forward():
+    cfg = dataclasses.replace(TINY, attention="standard")
+    flat = jnp.asarray(M.init_params(cfg))
+    out = M.mlm_logits(flat, _toks(cfg), cfg)
+    assert out.shape == (2, cfg.max_len, cfg.vocab_size)
+
+
+def test_cls_head_shape():
+    cfg = dataclasses.replace(TINY, num_classes=3)
+    flat = jnp.asarray(M.init_params(cfg))
+    out = M.cls_logits(flat, _toks(cfg), cfg)
+    assert out.shape == (2, 3)
+
+
+def test_forward_is_permutation_sensitive():
+    """Positional embeddings: permuting tokens must change outputs."""
+    flat = jnp.asarray(M.init_params(TINY))
+    toks = _toks(TINY, batch=1)
+    perm = toks[:, ::-1]
+    a = M.mlm_logits(flat, toks, TINY)
+    b = M.mlm_logits(flat, perm, TINY)
+    assert not np.allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+def test_batch_independence():
+    """Each batch row must be computed independently."""
+    flat = jnp.asarray(M.init_params(TINY))
+    toks = _toks(TINY, batch=3, seed=5)
+    full = M.mlm_logits(flat, toks, TINY)
+    for i in range(3):
+        solo = M.mlm_logits(flat, toks[i:i + 1], TINY)
+        np.testing.assert_allclose(full[i], solo[0], rtol=1e-4, atol=1e-4)
+
+
+def test_nonuniform_k_forward():
+    cfg = dataclasses.replace(TINY, sharing="kv", k_schedule=(16, 4))
+    flat = jnp.asarray(M.init_params(cfg))
+    out = M.mlm_logits(flat, _toks(cfg), cfg)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+# ---------------------------------------------------------------------------
+# Losses and training
+# ---------------------------------------------------------------------------
+
+def test_mlm_loss_initial_near_log_vocab():
+    """At random init the MLM loss must start near ln(vocab)."""
+    flat = jnp.asarray(M.init_params(TINY))
+    toks = _toks(TINY, batch=4)
+    w = jnp.ones_like(toks, jnp.float32)
+    loss = float(M.mlm_loss(flat, toks, toks, w, TINY))
+    assert abs(loss - np.log(TINY.vocab_size)) < 1.0
+
+
+def test_mlm_loss_ignores_unweighted_positions():
+    flat = jnp.asarray(M.init_params(TINY))
+    toks = _toks(TINY, batch=2)
+    labels_a = toks
+    # corrupt labels only where weight == 0 -> loss must be identical
+    w = jnp.zeros_like(toks, jnp.float32).at[:, :4].set(1.0)
+    labels_b = labels_a.at[:, 10:].set(0)
+    la = M.mlm_loss(flat, toks, labels_a, w, TINY)
+    lb = M.mlm_loss(flat, toks, labels_b, w, TINY)
+    np.testing.assert_allclose(float(la), float(lb), rtol=1e-6)
+
+
+@pytest.mark.parametrize("sharing", ["layerwise", "none"])
+def test_train_step_decreases_loss(sharing):
+    cfg = dataclasses.replace(TINY, sharing=sharing)
+    flat = jnp.asarray(M.init_params(cfg))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    toks = _toks(cfg, batch=4)
+    w = jnp.ones_like(toks, jnp.float32)
+    losses = []
+    for s in range(1, 9):
+        flat, m, v, loss = M.train_step(
+            flat, m, v, jnp.float32(s), jnp.float32(3e-3), toks, toks, w, cfg)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_train_step_grad_clip_keeps_update_finite():
+    cfg = TINY
+    flat = jnp.asarray(M.init_params(cfg)) * 50.0  # pathological params
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    toks = _toks(cfg, batch=2)
+    w = jnp.ones_like(toks, jnp.float32)
+    nf, _, _, loss = M.train_step(flat, m, v, jnp.float32(1),
+                                  jnp.float32(1e-3), toks, toks, w, cfg)
+    assert np.all(np.isfinite(np.asarray(nf)))
+
+
+def test_cls_train_step_learns_constant_labels():
+    cfg = dataclasses.replace(TINY, num_classes=2)
+    flat = jnp.asarray(M.init_params(cfg))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    toks = _toks(cfg, batch=4)
+    labels = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    losses = []
+    for s in range(1, 13):
+        flat, m, v, loss = M.train_step(
+            flat, m, v, jnp.float32(s), jnp.float32(5e-3), toks, labels,
+            None, cfg, objective="cls")
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+@hypothesis.settings(max_examples=5, deadline=None)
+@hypothesis.given(k=st.sampled_from([4, 8, 16]),
+                  sharing=st.sampled_from(list(M.SHARING_MODES)))
+def test_property_any_config_finite_forward(k, sharing):
+    cfg = dataclasses.replace(TINY, k_proj=k, sharing=sharing)
+    flat = jnp.asarray(M.init_params(cfg))
+    out = M.mlm_logits(flat, _toks(cfg), cfg)
+    assert np.all(np.isfinite(np.asarray(out)))

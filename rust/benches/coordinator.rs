@@ -1,0 +1,206 @@
+//! Bench: coordinator overhead + batching-policy ablation (DESIGN.md §7).
+//!
+//! Measures (a) raw batcher push/poll throughput — the L3 hot path that
+//! must never bottleneck the model, (b) end-to-end latency/throughput with
+//! mock workers, and (c) the merge-up policy ablation under the two cost
+//! models (quadratic vs linear) — the serving-policy consequence of
+//! Linformer's flat latency curve.
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use linformer::coordinator::{
+    Batch, Batcher, BatcherConfig, BucketSpec, Coordinator, CostModel,
+    MockRunner, Request, RunnerFactory,
+};
+use linformer::serving::run_load;
+use linformer::util::rng::Pcg32;
+use linformer::util::stats::{black_box, Summary};
+
+fn mk_request(id: u64, len: usize) -> (Request, mpsc::Receiver<linformer::coordinator::Response>) {
+    let (tx, rx) = mpsc::channel();
+    (
+        Request { id, tokens: vec![1; len], enqueued: Instant::now(), reply: tx },
+        rx,
+    )
+}
+
+fn bench_batcher_throughput() {
+    println!("== batcher micro-bench: push+poll throughput ==");
+    let buckets = vec![
+        BucketSpec { max_len: 64, batch: 8 },
+        BucketSpec { max_len: 256, batch: 4 },
+        BucketSpec { max_len: 1024, batch: 2 },
+    ];
+    let mut rng = Pcg32::seeded(0);
+    const N: usize = 200_000;
+    let lens: Vec<usize> =
+        (0..N).map(|_| 1 + rng.below(1024) as usize).collect();
+    let mut batcher = Batcher::new(
+        buckets,
+        BatcherConfig { queue_capacity: N + 1, ..Default::default() },
+    );
+    let t0 = Instant::now();
+    let mut handled = 0usize;
+    let mut rxs = Vec::with_capacity(N);
+    for (i, &len) in lens.iter().enumerate() {
+        let (req, rx) = mk_request(i as u64, len);
+        rxs.push(rx);
+        batcher.push(req).unwrap();
+        while let Some(batch) = batcher.poll(Instant::now()) {
+            handled += batch.requests.len();
+            black_box(&batch);
+            drop(batch);
+        }
+    }
+    for b in batcher.drain() {
+        handled += b.requests.len();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "  {N} requests routed+batched in {:.3}s — {:.0} req/s \
+         ({:.1} ns/req), {handled} dispatched",
+        dt,
+        N as f64 / dt,
+        dt / N as f64 * 1e9
+    );
+    assert_eq!(handled, N);
+}
+
+fn bench_end_to_end(label: &str, delay_ms: u64, merge_up: bool, cm: CostModel) -> Summary {
+    let mk = |len: usize, cap: usize| {
+        let factory: RunnerFactory = Box::new(move || {
+            Ok(Box::new(MockRunner {
+                capacity: cap,
+                len,
+                delay: Duration::from_millis(delay_ms),
+                fail: false,
+            }) as Box<dyn linformer::coordinator::BatchRunner>)
+        });
+        (BucketSpec { max_len: len, batch: cap }, factory)
+    };
+    let coord = Coordinator::start(
+        vec![mk(64, 8), mk(256, 4)],
+        BatcherConfig {
+            max_delay: Duration::from_millis(2),
+            queue_capacity: 4096,
+            merge_up,
+            cost_model: cm,
+        },
+    );
+    let report = run_load(&coord, 512, 400, 8, 3);
+    let lat = Summary::from_secs(vec![report.mean_latency_s.max(1e-9)]);
+    println!(
+        "  {label:<34} {:>7.0} req/s   mean {:>7.2}ms   p95 {:>7.2}ms   \
+         occupancy {:>5.1}%",
+        report.throughput_rps,
+        report.mean_latency_s * 1e3,
+        report.p95_latency_s * 1e3,
+        coord.metrics.occupancy() * 100.0
+    );
+    coord.shutdown();
+    lat
+}
+
+/// Merge-up ablation on the workload where the policy matters: a stream
+/// of mostly mid-length requests (they queue in the small bucket) plus
+/// occasional long ones (the big bucket flushes on timeout with spare
+/// slots).  merge-up promotes waiting mid requests into those slots iff
+/// the cost model says the padding waste is < 50%.
+fn bench_merge_ablation(label: &str, merge_up: bool, cm: CostModel) {
+    let service = Duration::from_millis(4);
+    let mk = |len: usize, cap: usize| {
+        let factory: RunnerFactory = Box::new(move || {
+            Ok(Box::new(MockRunner {
+                capacity: cap,
+                len,
+                delay: service,
+                fail: false,
+            }) as Box<dyn linformer::coordinator::BatchRunner>)
+        });
+        (BucketSpec { max_len: len, batch: cap }, factory)
+    };
+    let coord = Coordinator::start(
+        vec![mk(128, 8), mk(192, 8)],
+        BatcherConfig {
+            max_delay: Duration::from_millis(1),
+            queue_capacity: 4096,
+            merge_up,
+            cost_model: cm,
+        },
+    );
+    let mut rng = Pcg32::seeded(5);
+    let t0 = Instant::now();
+    let mut tickets = Vec::new();
+    for i in 0..600u64 {
+        // mid-length requests (would pad a 256 slot by ~15–50%) + a
+        // steady trickle of long ones that open 256-bucket flushes
+        let len = if i % 10 == 0 {
+            150 + rng.below(42) as usize // routes to the 192 bucket
+        } else {
+            // 100–127: waste in a 192 slot ≈ 1−len/192 ≈ 34–48% linear
+            // (promotable) vs 1−(len/192)² ≈ 56–73% quadratic (blocked)
+            100 + rng.below(28) as usize
+        };
+        if let Ok(t) = coord.submit(vec![1; len]) {
+            tickets.push(t);
+        }
+    }
+    let mut done = 0;
+    for t in tickets {
+        if t.wait_timeout(Duration::from_secs(60))
+            .map(|r| !r.predictions.is_empty())
+            .unwrap_or(false)
+        {
+            done += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "  {label:<36} {done}/600 in {:>6.2}s  {:>6.0} req/s  \
+         occupancy {:>5.1}%  batches {}",
+        dt,
+        done as f64 / dt,
+        coord.metrics.occupancy() * 100.0,
+        coord
+            .metrics
+            .batches
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
+    coord.shutdown();
+}
+
+fn main() {
+    bench_batcher_throughput();
+
+    println!("\n== end-to-end with mock workers (2ms service) ==");
+    bench_end_to_end(
+        "uniform load (no merge-up)",
+        2,
+        false,
+        CostModel::Linear { k: 32 },
+    );
+
+    println!("\n== merge-up policy ablation (the Linformer cost-model consequence) ==");
+    bench_merge_ablation("no merge-up (baseline)", false, CostModel::Quadratic);
+    bench_merge_ablation(
+        "merge-up + linear cost (Linformer)",
+        true,
+        CostModel::Linear { k: 32 },
+    );
+    bench_merge_ablation(
+        "merge-up + quadratic cost (std)",
+        true,
+        CostModel::Quadratic,
+    );
+    println!(
+        "\nexpected: under the linear (Linformer) cost model merge-up \
+         promotes ~110-token requests into 192-slot flushes (waste ≈ 43% \
+         linear vs ≈ 67% quadratic), raising occupancy and finishing the \
+         stream in fewer batches; the quadratic waste guard blocks those \
+         promotions."
+    );
+    let _ = Batch { bucket: 0, bucket_len: 0, requests: vec![] };
+}

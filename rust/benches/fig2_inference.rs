@@ -1,0 +1,107 @@
+//! Bench: Fig 2 (top right) — inference time vs sequence length through
+//! the real PJRT artifacts (encode program, batch 1).
+//!
+//! The paper holds total tokens fixed and shows the Transformer curve
+//! rising with n while Linformer stays flat.  We measure per-token time
+//! (time / n) for the bench-profile artifacts at n ∈ {128..2048(+4096)}.
+//!
+//! Needs `make artifacts-all` (the `bench` profile); skips missing models.
+//!
+//! Run: `cargo bench --bench fig2_inference`
+
+use linformer::runtime::{Engine, Manifest, Tensor};
+use linformer::util::rng::Pcg32;
+use linformer::util::stats::{bench, Summary};
+
+fn measure(
+    engine: &Engine,
+    manifest: &Manifest,
+    model: &str,
+    iters: usize,
+) -> Option<(usize, Summary)> {
+    let entry = manifest.model(model).ok()?;
+    let info = entry.program("encode").ok()?;
+    let exe = engine.load_program(info).ok()?;
+    let params = entry.load_init().ok()?;
+    let n = entry.config.max_len;
+    let mut rng = Pcg32::seeded(3);
+    let tokens: Vec<Vec<u32>> = (0..entry.batch)
+        .map(|_| {
+            (0..n).map(|_| rng.below(entry.config.vocab_size as u32)).collect()
+        })
+        .collect();
+    let p = Tensor::F32 { shape: vec![params.len()], data: params };
+    let t = Tensor::tokens(&tokens);
+    let s = bench(1, iters, || exe.run(&[p.clone(), t.clone()]).unwrap());
+    Some((n, s))
+}
+
+fn main() {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("fig2_inference: no artifacts ({e}); run `make artifacts-all`");
+            return;
+        }
+    };
+    let engine = Engine::cpu().expect("pjrt cpu");
+    println!("== Fig 2: inference time vs sequence length (batch 1) ==");
+    println!(
+        "{:>6} {:>16} {:>16} {:>16} {:>10}",
+        "n", "standard", "linformer k=64", "lin k=256", "speedup"
+    );
+    let mut printed_any = false;
+    for n in [128usize, 256, 512, 1024, 2048] {
+        let iters = if n >= 1024 { 3 } else { 6 };
+        let std = measure(&engine, &manifest, &format!("bench_std_n{n}"), iters);
+        let lin64 =
+            measure(&engine, &manifest, &format!("bench_lin_n{n}_k64"), iters);
+        let lin256 = measure(
+            &engine,
+            &manifest,
+            &format!("bench_lin_n{n}_k256"),
+            iters,
+        );
+        if std.is_none() && lin64.is_none() {
+            continue;
+        }
+        printed_any = true;
+        let fmt = |x: &Option<(usize, Summary)>| {
+            x.as_ref().map_or("-".to_string(), |(_, s)| s.human())
+        };
+        let speedup = match (&std, &lin64) {
+            (Some((_, s)), Some((_, l))) => format!("{:.2}x", s.mean / l.mean),
+            _ => "-".into(),
+        };
+        println!(
+            "{:>6} {:>16} {:>16} {:>16} {:>10}",
+            n,
+            fmt(&std),
+            fmt(&lin64),
+            fmt(&lin256),
+            speedup
+        );
+    }
+    // linformer-only tail (standard would be too slow/big to export)
+    for n in [4096usize] {
+        for k in [128usize, 256] {
+            if let Some((_, s)) = measure(
+                &engine,
+                &manifest,
+                &format!("bench_lin_n{n}_k{k}"),
+                2,
+            ) {
+                printed_any = true;
+                println!("{:>6} {:>16} {:>16} (linformer k={k})", n, "-", s.human());
+            }
+        }
+    }
+    if !printed_any {
+        println!("(bench profile not exported — run `make artifacts-all`)");
+    } else {
+        println!(
+            "\nexpected shape (paper Fig 2): standard time/token grows with n; \
+             linformer stays ~flat, speedup grows with n and shrinks with k."
+        );
+    }
+}

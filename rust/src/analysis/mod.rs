@@ -1,0 +1,12 @@
+//! Analyses backing the paper's tables/figures: complexity accounting
+//! (Table 1), attention spectrum (Fig 1), activation-memory model
+//! (Table 3 right).
+
+pub mod complexity;
+pub mod roofline;
+pub mod memory;
+pub mod spectrum;
+
+pub use complexity::{table1, Arch, ComplexityRow};
+pub use memory::{max_batch, memory_saving, DEFAULT_BUDGET};
+pub use spectrum::{analyze, long_tail_score, SpectrumReport};

@@ -1,0 +1,128 @@
+//! TPU roofline estimator — translates the paper's GPU efficiency claims
+//! into this port's target hardware terms (DESIGN.md §Hardware-Adaptation).
+//!
+//! The paper's V100 numbers are absolute; the portable quantity is the
+//! *achieved fraction of roofline*.  Given a device model (peak FLOP/s +
+//! HBM bandwidth) and a kernel's arithmetic intensity (from
+//! `python/compile/kernels/vmem.py`'s byte/FLOP accounting, mirrored
+//! here), this module reports whether a kernel is compute- or
+//! bandwidth-bound and its attainable-FLOP ceiling.
+
+/// A device's roofline parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub name: &'static str,
+    pub peak_flops: f64,
+    pub hbm_bytes_per_s: f64,
+}
+
+/// The devices referenced by the reproduction.
+pub const V100: Device = Device {
+    name: "V100-SXM2-16GB",
+    peak_flops: 15.7e12, // fp32
+    hbm_bytes_per_s: 900e9,
+};
+
+pub const TPU_V4_CORE: Device = Device {
+    name: "TPUv4 core (bf16 MXU)",
+    peak_flops: 137.5e12, // per chip ≈ 275T, per core half
+    hbm_bytes_per_s: 600e9,
+};
+
+impl Device {
+    /// Intensity (FLOP/byte) at which compute and bandwidth balance.
+    pub fn knee(&self) -> f64 {
+        self.peak_flops / self.hbm_bytes_per_s
+    }
+
+    /// Attainable FLOP/s at a given arithmetic intensity.
+    pub fn attainable(&self, intensity: f64) -> f64 {
+        (intensity * self.hbm_bytes_per_s).min(self.peak_flops)
+    }
+
+    /// Is a kernel with this intensity compute-bound here?
+    pub fn compute_bound(&self, intensity: f64) -> bool {
+        intensity >= self.knee()
+    }
+}
+
+/// Arithmetic intensity of the fused Linformer attention kernel
+/// (FLOPs / HBM bytes; mirrors `kernels/vmem.py`).
+pub fn linformer_attention_intensity(n: usize, d: usize, k: usize) -> f64 {
+    let (nf, df, kf) = (n as f64, d as f64, k as f64);
+    let flops = 4.0 * nf * kf * df + 6.0 * nf * kf;
+    let bytes = 4.0 * (2.0 * nf * df + 2.0 * kf * df);
+    flops / bytes
+}
+
+/// Arithmetic intensity of streaming full attention at the same shapes.
+pub fn full_attention_intensity(n: usize, d: usize, block_n: usize) -> f64 {
+    let (nf, df) = (n as f64, d as f64);
+    let steps = (n / block_n) as f64;
+    let flops = 4.0 * nf * nf * df;
+    // k/v re-streamed once per query block
+    let bytes = 4.0 * (2.0 * nf * df + steps * 2.0 * nf * df);
+    flops / bytes
+}
+
+/// Roofline verdict for one kernel on one device.
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    pub device: &'static str,
+    pub intensity: f64,
+    pub knee: f64,
+    pub compute_bound: bool,
+    pub attainable_frac_of_peak: f64,
+}
+
+pub fn judge(dev: Device, intensity: f64) -> Verdict {
+    Verdict {
+        device: dev.name,
+        intensity,
+        knee: dev.knee(),
+        compute_bound: dev.compute_bound(intensity),
+        attainable_frac_of_peak: dev.attainable(intensity) / dev.peak_flops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knees_are_sane() {
+        assert!((V100.knee() - 17.4).abs() < 1.0);
+        assert!(TPU_V4_CORE.knee() > 100.0);
+    }
+
+    #[test]
+    fn linformer_kernel_is_compute_bound_on_v100_class() {
+        let i = linformer_attention_intensity(4096, 64, 256);
+        assert!(i > 50.0, "intensity {i}");
+        assert!(V100.compute_bound(i));
+        let v = judge(V100, i);
+        assert!((v.attainable_frac_of_peak - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn intensity_grows_with_k_saturating() {
+        let a = linformer_attention_intensity(4096, 64, 64);
+        let b = linformer_attention_intensity(4096, 64, 256);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn full_attention_bandwidth_picture_worse_per_block() {
+        // with small query blocks, streaming full attention re-reads k/v
+        // many times: intensity per HBM byte is capped near d
+        let full = full_attention_intensity(4096, 64, 128);
+        let lin = linformer_attention_intensity(4096, 64, 256);
+        assert!(lin > 1.5 * full, "lin {lin} full {full}");
+    }
+
+    #[test]
+    fn attainable_clamps_at_peak() {
+        assert_eq!(V100.attainable(1e9), V100.peak_flops);
+        assert!(V100.attainable(1.0) < V100.peak_flops);
+    }
+}

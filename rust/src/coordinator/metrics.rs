@@ -1,0 +1,224 @@
+//! Lock-light metrics registry: atomic counters + fixed-bucket latency
+//! histograms.  Exported as JSON for the CLI's `--metrics` dump.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Log-spaced latency histogram (µs to ~100 s).
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Histogram {
+    pub fn latency() -> Histogram {
+        // 1µs … ~100s, ×2 per bucket
+        let mut bounds = Vec::new();
+        let mut b = 1e-6;
+        while b < 100.0 {
+            bounds.push(b);
+            b *= 2.0;
+        }
+        let counts = (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds,
+            counts,
+            sum_us: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, seconds: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds < b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us
+            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    *self.bounds.last().unwrap()
+                };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// Global-ish registry the coordinator threads share.
+pub struct Metrics {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_slots_used: AtomicU64,
+    pub batch_slots_total: AtomicU64,
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+    pub model_time: Histogram,
+    /// Per-bucket flush counts.
+    bucket_flushes: Mutex<BTreeMap<usize, u64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_slots_used: AtomicU64::new(0),
+            batch_slots_total: AtomicU64::new(0),
+            latency: Histogram::latency(),
+            queue_wait: Histogram::latency(),
+            model_time: Histogram::latency(),
+            bucket_flushes: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn record_batch(&self, bucket_len: usize, used: usize, cap: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_slots_used.fetch_add(used as u64, Ordering::Relaxed);
+        self.batch_slots_total.fetch_add(cap as u64, Ordering::Relaxed);
+        *self
+            .bucket_flushes
+            .lock()
+            .unwrap()
+            .entry(bucket_len)
+            .or_default() += 1;
+    }
+
+    /// Fraction of batch slots carrying real requests (1.0 = no padding).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.batch_slots_total.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        self.batch_slots_used.load(Ordering::Relaxed) as f64 / total as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        let n = |v: &AtomicU64| Json::Num(v.load(Ordering::Relaxed) as f64);
+        obj.insert("accepted".into(), n(&self.accepted));
+        obj.insert("rejected".into(), n(&self.rejected));
+        obj.insert("completed".into(), n(&self.completed));
+        obj.insert("batches".into(), n(&self.batches));
+        obj.insert("occupancy".into(), Json::Num(self.occupancy()));
+        obj.insert(
+            "latency_mean_s".into(),
+            Json::Num(self.latency.mean_s()),
+        );
+        obj.insert(
+            "latency_p95_s".into(),
+            Json::Num(self.latency.quantile(0.95)),
+        );
+        obj.insert(
+            "model_time_mean_s".into(),
+            Json::Num(self.model_time.mean_s()),
+        );
+        let flushes = self.bucket_flushes.lock().unwrap();
+        let mut fm = BTreeMap::new();
+        for (len, count) in flushes.iter() {
+            fm.insert(len.to_string(), Json::Num(*count as f64));
+        }
+        obj.insert("bucket_flushes".into(), Json::Obj(fm));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = Histogram::latency();
+        h.observe(0.001);
+        h.observe(0.002);
+        h.observe(0.004);
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_s() - 0.002333).abs() < 1e-4);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let h = Histogram::latency();
+        for i in 1..=100 {
+            h.observe(i as f64 * 1e-4);
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        assert!(p50 <= p95);
+        assert!(p50 > 1e-4 && p95 < 0.1);
+    }
+
+    #[test]
+    fn occupancy_tracks_padding() {
+        let m = Metrics::new();
+        m.record_batch(64, 6, 8);
+        m.record_batch(64, 8, 8);
+        assert!((m.occupancy() - 14.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_export_has_fields() {
+        let m = Metrics::new();
+        m.accepted.store(5, Ordering::Relaxed);
+        m.record_batch(128, 3, 4);
+        let j = m.to_json();
+        assert_eq!(j.get("accepted").as_usize(), Some(5));
+        assert_eq!(j.get("batches").as_usize(), Some(1));
+        assert_eq!(
+            j.get("bucket_flushes").get("128").as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::latency();
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.quantile(0.9), 0.0);
+    }
+}

@@ -1,0 +1,466 @@
+//! L3 coordinator: request router, length-bucketed dynamic batcher, worker
+//! pool, metrics — the serving system a Linformer deployment runs
+//! (reference architecture: vllm-project/router, adapted to fixed-n
+//! encoder serving).
+//!
+//! Threading model (std threads; the offline build has no tokio):
+//!
+//! ```text
+//!  clients ── submit() ──► dispatcher thread ──► per-bucket worker thread
+//!                           (owns Batcher)        (owns BatchRunner)
+//!                                 ▲                      │
+//!                                 └──── metrics ◄────────┘
+//! ```
+//!
+//! The dispatcher is the only thread touching the batcher; workers only see
+//! flushed [`Batch`]es, so no locks sit on the request path (one mpsc hop
+//! in, one out).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod worker;
+
+pub use batcher::{Batch, Batcher, BatcherConfig, BucketSpec, CostModel};
+pub use metrics::Metrics;
+pub use request::{Reject, Request, Response};
+pub use worker::{BatchRunner, MockRunner, RunnerFactory, XlaRunner};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+enum DispatcherMsg {
+    Submit(Request),
+    Shutdown,
+}
+
+/// Handle returned by [`Coordinator::submit`]: await the response on it.
+#[derive(Debug)]
+pub struct Ticket {
+    pub id: u64,
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Ticket {
+    pub fn wait(self) -> Result<Response, mpsc::RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn wait_timeout(
+        self,
+        d: Duration,
+    ) -> Result<Response, mpsc::RecvTimeoutError> {
+        self.rx.recv_timeout(d)
+    }
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<DispatcherMsg>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    max_len: usize,
+}
+
+impl Coordinator {
+    /// Start the coordinator with one (bucket spec, runner factory) per
+    /// bucket.  Factories run *on their worker thread* — the PJRT handles
+    /// inside real runners are `!Send`, so each worker owns its own client
+    /// and compiled executable.
+    pub fn start(
+        buckets: Vec<(BucketSpec, RunnerFactory)>,
+        config: BatcherConfig,
+    ) -> Coordinator {
+        assert!(!buckets.is_empty());
+        let metrics = Arc::new(Metrics::new());
+        let specs: Vec<BucketSpec> = buckets.iter().map(|(s, _)| *s).collect();
+        let max_len = specs.iter().map(|b| b.max_len).max().unwrap();
+
+        // One worker thread per bucket, constructing + owning its runner.
+        // Channels are BOUNDED (2 batches in flight): when a worker falls
+        // behind, batches stay in the batcher and its queue_capacity turns
+        // into client-visible backpressure instead of unbounded buffering.
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for (_, factory) in buckets {
+            let (wtx, wrx) = mpsc::sync_channel::<Batch>(2);
+            let m = Arc::clone(&metrics);
+            workers.push(std::thread::spawn(move || {
+                match factory() {
+                    Ok(runner) => worker_loop(runner, wrx, m),
+                    Err(e) => {
+                        eprintln!("[coordinator] runner init failed: {e}");
+                        // reply with empty responses so clients unblock
+                        while let Ok(batch) = wrx.recv() {
+                            for req in batch.requests {
+                                let _ = req.reply.send(Response {
+                                    id: req.id,
+                                    predictions: Vec::new(),
+                                    latency_s: 0.0,
+                                    batch_size: 0,
+                                    bucket_len: batch.bucket_len,
+                                });
+                            }
+                        }
+                    }
+                }
+            }));
+            worker_txs.push(wtx);
+        }
+        let buckets = specs;
+
+        let (tx, rx) = mpsc::channel::<DispatcherMsg>();
+        let m = Arc::clone(&metrics);
+        let dispatcher = std::thread::spawn(move || {
+            dispatcher_loop(rx, Batcher::new(buckets, config), worker_txs, m)
+        });
+
+        Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            dispatcher: Some(dispatcher),
+            workers,
+            max_len,
+        }
+    }
+
+    /// Maximum sequence length any bucket accepts.
+    pub fn max_len(&self) -> usize {
+        self.max_len
+    }
+
+    /// Submit a request; returns a ticket to wait on.
+    ///
+    /// Over-long / empty sequences are rejected synchronously; queue-full
+    /// rejections arrive asynchronously as an error response (the
+    /// dispatcher owns the queue state).
+    pub fn submit(&self, tokens: Vec<u32>) -> Result<Ticket, Reject> {
+        if tokens.is_empty() {
+            return Err(Reject::Empty);
+        }
+        if tokens.len() > self.max_len {
+            return Err(Reject::TooLong { len: tokens.len(), max: self.max_len });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request { id, tokens, enqueued: Instant::now(), reply: rtx };
+        self.tx
+            .send(DispatcherMsg::Submit(req))
+            .map_err(|_| Reject::ShuttingDown)?;
+        Ok(Ticket { id, rx: rrx })
+    }
+
+    /// Graceful shutdown: flush all queues, join all threads.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(DispatcherMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(DispatcherMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    rx: mpsc::Receiver<DispatcherMsg>,
+    mut batcher: Batcher,
+    worker_txs: Vec<mpsc::SyncSender<Batch>>,
+    metrics: Arc<Metrics>,
+) {
+    let tick = Duration::from_millis(1);
+    loop {
+        match rx.recv_timeout(tick) {
+            Ok(DispatcherMsg::Submit(req)) => {
+                match batcher.push(req) {
+                    Ok(()) => {
+                        metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err((_reject, req)) => {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        // deliver rejection as an empty-prediction response
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            predictions: Vec::new(),
+                            latency_s: 0.0,
+                            batch_size: 0,
+                            bucket_len: 0,
+                        });
+                    }
+                }
+            }
+            Ok(DispatcherMsg::Shutdown) => {
+                for batch in batcher.drain() {
+                    let _ = worker_txs[batch.bucket].send(batch);
+                }
+                break; // dropping worker_txs closes the worker loops
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for batch in batcher.drain() {
+                    let _ = worker_txs[batch.bucket].send(batch);
+                }
+                break;
+            }
+        }
+        let now = Instant::now();
+        // Per-tick saturation mask: a bucket whose worker channel is full
+        // is skipped for the rest of the tick so it cannot starve other
+        // buckets' flushes (no head-of-line blocking across buckets).
+        let mut saturated = vec![false; worker_txs.len()];
+        while let Some(batch) = batcher.poll_masked(now, &saturated) {
+            match worker_txs[batch.bucket].try_send(batch) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(batch)) => {
+                    // worker saturated: keep requests queued so client
+                    // backpressure (queue_capacity) engages upstream
+                    saturated[batch.bucket] = true;
+                    batcher.unpoll(batch);
+                }
+                Err(mpsc::TrySendError::Disconnected(batch)) => {
+                    for req in batch.requests {
+                        let _ = req.reply.send(Response {
+                            id: req.id,
+                            predictions: Vec::new(),
+                            latency_s: 0.0,
+                            batch_size: 0,
+                            bucket_len: batch.bucket_len,
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    runner: Box<dyn BatchRunner>,
+    rx: mpsc::Receiver<Batch>,
+    metrics: Arc<Metrics>,
+) {
+    while let Ok(batch) = rx.recv() {
+        let rows: Vec<Vec<u32>> =
+            batch.requests.iter().map(|r| r.tokens.clone()).collect();
+        let used = rows.len();
+        metrics.record_batch(batch.bucket_len, used, runner.capacity());
+        let t0 = Instant::now();
+        let result = runner.run(&rows);
+        metrics.model_time.observe(t0.elapsed().as_secs_f64());
+        let finished = Instant::now();
+        match result {
+            Ok(preds) => {
+                for (req, pred) in batch.requests.into_iter().zip(preds) {
+                    let latency =
+                        finished.duration_since(req.enqueued).as_secs_f64();
+                    metrics.latency.observe(latency);
+                    metrics
+                        .queue_wait
+                        .observe(t0.duration_since(req.enqueued).as_secs_f64());
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        predictions: pred,
+                        latency_s: latency,
+                        batch_size: used,
+                        bucket_len: batch.bucket_len,
+                    });
+                }
+            }
+            Err(_) => {
+                // failure: deliver empty responses (clients treat
+                // empty predictions for non-empty input as an error)
+                for req in batch.requests {
+                    let _ = req.reply.send(Response {
+                        id: req.id,
+                        predictions: Vec::new(),
+                        latency_s: 0.0,
+                        batch_size: used,
+                        bucket_len: batch.bucket_len,
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_coord(
+        buckets: &[(usize, usize)],
+        delay_ms: u64,
+        config: BatcherConfig,
+    ) -> Coordinator {
+        let buckets: Vec<(BucketSpec, RunnerFactory)> = buckets
+            .iter()
+            .map(|&(len, cap)| {
+                let spec = BucketSpec { max_len: len, batch: cap };
+                let factory: RunnerFactory = Box::new(move || {
+                    Ok(Box::new(MockRunner {
+                        capacity: cap,
+                        len,
+                        delay: Duration::from_millis(delay_ms),
+                        fail: false,
+                    }) as Box<dyn BatchRunner>)
+                });
+                (spec, factory)
+            })
+            .collect();
+        Coordinator::start(buckets, config)
+    }
+
+    #[test]
+    fn round_trip_single_request() {
+        let c = mock_coord(&[(16, 2)], 0, Default::default());
+        let t = c.submit(vec![1, 2, 3]).unwrap();
+        let resp = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.predictions, vec![2, 3, 4]);
+        assert!(resp.latency_s >= 0.0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batches_fill_under_load() {
+        let c = mock_coord(&[(16, 4)], 1, Default::default());
+        let tickets: Vec<Ticket> =
+            (0..8).map(|i| c.submit(vec![i, i + 1]).unwrap()).collect();
+        let mut batch_sizes = Vec::new();
+        for t in tickets {
+            let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.predictions.len(), 2);
+            batch_sizes.push(r.batch_size);
+        }
+        // at least one full batch should have formed
+        assert!(batch_sizes.iter().any(|&b| b == 4), "{batch_sizes:?}");
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 8);
+        c.shutdown();
+    }
+
+    #[test]
+    fn routes_by_length() {
+        let c = mock_coord(&[(8, 2), (32, 2)], 0, Default::default());
+        let short = c.submit(vec![1; 4]).unwrap();
+        let long = c.submit(vec![1; 20]).unwrap();
+        let rs = short.wait_timeout(Duration::from_secs(5)).unwrap();
+        let rl = long.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(rs.bucket_len, 8);
+        assert_eq!(rl.bucket_len, 32);
+        c.shutdown();
+    }
+
+    #[test]
+    fn rejects_overlong_synchronously() {
+        let c = mock_coord(&[(8, 2)], 0, Default::default());
+        match c.submit(vec![0; 9]) {
+            Err(Reject::TooLong { len: 9, max: 8 }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(c.submit(vec![]), Err(Reject::Empty)));
+        c.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_async() {
+        let cfg = BatcherConfig {
+            queue_capacity: 1,
+            max_delay: Duration::from_secs(10),
+            ..Default::default()
+        };
+        // slow worker + tiny queue => rejections
+        let c = mock_coord(&[(8, 1)], 50, cfg);
+        let tickets: Vec<Ticket> =
+            (0..20).filter_map(|_| c.submit(vec![1; 4]).ok()).collect();
+        let mut empty = 0;
+        for t in tickets {
+            let r = t.wait_timeout(Duration::from_secs(10)).unwrap();
+            if r.predictions.is_empty() {
+                empty += 1;
+            }
+        }
+        assert!(empty > 0, "expected at least one backpressure rejection");
+        assert!(c.metrics.rejected.load(Ordering::Relaxed) > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let cfg = BatcherConfig {
+            max_delay: Duration::from_secs(100), // no timeout flush
+            ..Default::default()
+        };
+        let c = mock_coord(&[(8, 64)], 0, cfg);
+        let t = c.submit(vec![5; 3]).unwrap();
+        // not enough requests to fill the batch; shutdown must flush
+        std::thread::sleep(Duration::from_millis(20));
+        c.shutdown();
+        let r = t.wait_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(r.predictions, vec![6, 6, 6]);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let c = mock_coord(&[(8, 2)], 0, Default::default());
+        for _ in 0..6 {
+            let t = c.submit(vec![1, 2]).unwrap();
+            t.wait_timeout(Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(c.metrics.accepted.load(Ordering::Relaxed), 6);
+        assert_eq!(c.metrics.completed.load(Ordering::Relaxed), 6);
+        assert!(c.metrics.latency.count() == 6);
+        let j = c.metrics.to_json();
+        assert_eq!(j.get("completed").as_usize(), Some(6));
+        c.shutdown();
+    }
+
+    #[test]
+    fn worker_failure_yields_empty_predictions() {
+        let factory: RunnerFactory = Box::new(|| {
+            Ok(Box::new(MockRunner {
+                capacity: 1,
+                len: 8,
+                delay: Duration::ZERO,
+                fail: true,
+            }) as Box<dyn BatchRunner>)
+        });
+        let c = Coordinator::start(
+            vec![(BucketSpec { max_len: 8, batch: 1 }, factory)],
+            Default::default(),
+        );
+        let t = c.submit(vec![1, 2]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.predictions.is_empty());
+        c.shutdown();
+    }
+
+    #[test]
+    fn factory_failure_unblocks_clients() {
+        let factory: RunnerFactory =
+            Box::new(|| Err("compile exploded".into()));
+        let c = Coordinator::start(
+            vec![(BucketSpec { max_len: 8, batch: 1 }, factory)],
+            Default::default(),
+        );
+        let t = c.submit(vec![1, 2]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.predictions.is_empty());
+        c.shutdown();
+    }
+}

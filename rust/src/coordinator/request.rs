@@ -1,0 +1,42 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// An inference request: a token sequence awaiting MLM logits (or a
+/// classification decision — the worker decides by program).
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub enqueued: Instant,
+    /// Channel the response is delivered on.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Argmax token id per position (MLM) or class id (classifier).
+    pub predictions: Vec<u32>,
+    /// Wall-clock latency from enqueue to completion.
+    pub latency_s: f64,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+    /// The length bucket it was routed to.
+    pub bucket_len: usize,
+}
+
+/// Why a request could not be accepted.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum Reject {
+    #[error("sequence length {len} exceeds the largest bucket {max}")]
+    TooLong { len: usize, max: usize },
+    #[error("queue full (capacity {capacity}) — backpressure")]
+    QueueFull { capacity: usize },
+    #[error("coordinator is shutting down")]
+    ShuttingDown,
+    #[error("empty sequence")]
+    Empty,
+}

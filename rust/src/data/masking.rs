@@ -1,0 +1,204 @@
+//! BERT-style MLM masking (Devlin et al., 2019 — the paper's pretraining
+//! objective): select 15% of positions; replace 80% with [MASK], 10% with a
+//! random token, 10% unchanged.  Labels carry the original token ids;
+//! weights are 1.0 exactly at selected positions.
+
+use super::tokenizer::{MASK, NUM_SPECIAL};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct MaskingConfig {
+    pub mask_rate: f32,
+    pub replace_mask: f32,
+    pub replace_random: f32,
+    /// Vocabulary bounds for random replacement (content tokens only).
+    pub random_lo: u32,
+    pub random_hi: u32,
+}
+
+impl MaskingConfig {
+    pub fn bert(vocab_size: usize) -> MaskingConfig {
+        MaskingConfig {
+            mask_rate: 0.15,
+            replace_mask: 0.8,
+            replace_random: 0.1,
+            random_lo: NUM_SPECIAL,
+            random_hi: vocab_size as u32,
+        }
+    }
+}
+
+/// One masked training example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskedExample {
+    pub tokens: Vec<u32>,  // corrupted input
+    pub labels: Vec<u32>,  // original ids
+    pub weights: Vec<f32>, // 1.0 at predicted positions
+}
+
+/// Apply MLM masking to a sequence (special tokens < NUM_SPECIAL are never
+/// selected).
+pub fn mask_sequence(
+    original: &[u32],
+    cfg: &MaskingConfig,
+    rng: &mut Pcg32,
+) -> MaskedExample {
+    let mut tokens = original.to_vec();
+    let labels = original.to_vec();
+    let mut weights = vec![0.0f32; original.len()];
+    for (i, &tok) in original.iter().enumerate() {
+        if tok < NUM_SPECIAL || !rng.chance(cfg.mask_rate) {
+            continue;
+        }
+        weights[i] = 1.0;
+        let u = rng.next_f32();
+        if u < cfg.replace_mask {
+            tokens[i] = MASK;
+        } else if u < cfg.replace_mask + cfg.replace_random {
+            tokens[i] =
+                cfg.random_lo + rng.below(cfg.random_hi - cfg.random_lo);
+        } // else: keep original
+    }
+    MaskedExample { tokens, labels, weights }
+}
+
+/// Mask a batch; guarantees ≥1 predicted position per batch (re-rolls the
+/// first sequence if the whole batch came out unmasked — rare but would
+/// make the loss denominator degenerate).
+pub fn mask_batch(
+    batch: &[Vec<u32>],
+    cfg: &MaskingConfig,
+    rng: &mut Pcg32,
+) -> Vec<MaskedExample> {
+    let mut out: Vec<MaskedExample> =
+        batch.iter().map(|s| mask_sequence(s, cfg, rng)).collect();
+    let any = out
+        .iter()
+        .any(|e| e.weights.iter().any(|&w| w > 0.0));
+    if !any {
+        if let Some(first) = batch.first() {
+            if let Some(pos) =
+                first.iter().position(|&t| t >= NUM_SPECIAL)
+            {
+                out[0].weights[pos] = 1.0;
+                out[0].tokens[pos] = MASK;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn seq(len: usize) -> Vec<u32> {
+        (0..len).map(|i| NUM_SPECIAL + (i % 100) as u32).collect()
+    }
+
+    #[test]
+    fn labels_always_original() {
+        prop_check("labels preserved", 50, |rng| {
+            let s = seq(rng.range_usize(4, 200));
+            let cfg = MaskingConfig::bert(256);
+            let ex = mask_sequence(&s, &cfg, rng);
+            assert_eq!(ex.labels, s);
+            assert_eq!(ex.tokens.len(), s.len());
+        });
+    }
+
+    #[test]
+    fn unweighted_positions_unchanged() {
+        prop_check("unmasked identity", 50, |rng| {
+            let s = seq(64);
+            let cfg = MaskingConfig::bert(256);
+            let ex = mask_sequence(&s, &cfg, rng);
+            for i in 0..s.len() {
+                if ex.weights[i] == 0.0 {
+                    assert_eq!(ex.tokens[i], s[i], "pos {i}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mask_rate_approximate() {
+        let mut rng = crate::util::rng::Pcg32::seeded(1);
+        let s = seq(10_000);
+        let cfg = MaskingConfig::bert(256);
+        let ex = mask_sequence(&s, &cfg, &mut rng);
+        let rate = ex.weights.iter().sum::<f32>() / s.len() as f32;
+        assert!((rate - 0.15).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn replacement_mix_80_10_10() {
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        let s = seq(50_000);
+        let cfg = MaskingConfig::bert(256);
+        let ex = mask_sequence(&s, &cfg, &mut rng);
+        let (mut masked, mut random, mut kept) = (0, 0, 0);
+        for i in 0..s.len() {
+            if ex.weights[i] == 0.0 {
+                continue;
+            }
+            if ex.tokens[i] == MASK {
+                masked += 1;
+            } else if ex.tokens[i] == s[i] {
+                kept += 1;
+            } else {
+                random += 1;
+            }
+        }
+        let total = (masked + random + kept) as f32;
+        assert!((masked as f32 / total - 0.8).abs() < 0.03);
+        // random draws can collide with the original token, inflating
+        // 'kept' slightly — allow slack
+        assert!((random as f32 / total - 0.1).abs() < 0.03);
+        assert!((kept as f32 / total - 0.1).abs() < 0.03);
+    }
+
+    #[test]
+    fn special_tokens_never_masked() {
+        prop_check("specials untouched", 30, |rng| {
+            let mut s = seq(64);
+            s[0] = super::super::tokenizer::CLS;
+            s[10] = super::super::tokenizer::SEP;
+            s[20] = super::super::tokenizer::PAD;
+            let cfg = MaskingConfig::bert(256);
+            let ex = mask_sequence(&s, &cfg, rng);
+            for &i in &[0usize, 10, 20] {
+                assert_eq!(ex.weights[i], 0.0);
+                assert_eq!(ex.tokens[i], s[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn batch_never_fully_unmasked() {
+        // mask_rate 0 would yield zero weights; mask_batch must repair.
+        let mut rng = crate::util::rng::Pcg32::seeded(3);
+        let cfg = MaskingConfig {
+            mask_rate: 0.0,
+            ..MaskingConfig::bert(256)
+        };
+        let batch = vec![seq(16), seq(16)];
+        let out = mask_batch(&batch, &cfg, &mut rng);
+        let total: f32 =
+            out.iter().flat_map(|e| e.weights.iter()).sum();
+        assert!(total >= 1.0);
+    }
+
+    #[test]
+    fn random_replacements_stay_in_vocab() {
+        prop_check("random in vocab", 30, |rng| {
+            let s = seq(256);
+            let cfg = MaskingConfig::bert(300);
+            let ex = mask_sequence(&s, &cfg, rng);
+            for &t in &ex.tokens {
+                assert!(t < 300);
+            }
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Data pipeline substrates: tokenizer, synthetic corpus, MLM masking and
+//! downstream task generators (DESIGN.md §3 documents how these stand in
+//! for BookCorpus+Wikipedia and GLUE/IMDB).
+
+pub mod corpus;
+pub mod masking;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use masking::{mask_batch, mask_sequence, MaskedExample, MaskingConfig};
+pub use tasks::{accuracy, Example, Task, TaskGen};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,186 @@
+//! Word-level tokenizer with frequency-built vocabulary.
+//!
+//! Substrate for the data pipeline (the paper tokenizes BookCorpus+Wiki
+//! with BPE; at our synthetic-corpus scale a word-level vocabulary with an
+//! UNK fallback preserves the MLM task's statistics — see DESIGN.md §3).
+
+use std::collections::HashMap;
+
+/// Reserved special token ids.
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const CLS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const MASK: u32 = 4;
+pub const NUM_SPECIAL: u32 = 5;
+
+pub const SPECIAL_NAMES: [&str; 5] = ["[PAD]", "[UNK]", "[CLS]", "[SEP]", "[MASK]"];
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    token_to_id: HashMap<String, u32>,
+    id_to_token: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build a vocabulary of at most `vocab_size` entries (including the
+    /// 5 specials) from corpus text, keeping the most frequent words.
+    pub fn build(corpus: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size > NUM_SPECIAL as usize, "vocab too small");
+        let mut freq: HashMap<String, usize> = HashMap::new();
+        for word in split_words(corpus) {
+            *freq.entry(word.to_string()).or_default() += 1;
+        }
+        let mut by_freq: Vec<(String, usize)> = freq.into_iter().collect();
+        // stable order: frequency desc, then lexicographic
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        let mut id_to_token: Vec<String> =
+            SPECIAL_NAMES.iter().map(|s| s.to_string()).collect();
+        for (word, _) in by_freq.into_iter().take(vocab_size - 5) {
+            id_to_token.push(word);
+        }
+        let token_to_id = id_to_token
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        Tokenizer { token_to_id, id_to_token }
+    }
+
+    /// Vocabulary size including specials.
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_token.len()
+    }
+
+    pub fn id_of(&self, token: &str) -> u32 {
+        self.token_to_id.get(token).copied().unwrap_or(UNK)
+    }
+
+    pub fn token_of(&self, id: u32) -> &str {
+        self.id_to_token
+            .get(id as usize)
+            .map(String::as_str)
+            .unwrap_or("[UNK]")
+    }
+
+    /// Encode text to ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        split_words(text).map(|w| self.id_of(w)).collect()
+    }
+
+    /// Encode as a classifier input: [CLS] tokens... ([SEP] second...)
+    /// truncated/padded to `max_len`.
+    pub fn encode_for_cls(
+        &self,
+        first: &str,
+        second: Option<&str>,
+        max_len: usize,
+    ) -> Vec<u32> {
+        let mut ids = vec![CLS];
+        ids.extend(self.encode(first));
+        if let Some(s) = second {
+            ids.push(SEP);
+            ids.extend(self.encode(s));
+        }
+        ids.push(SEP);
+        ids.truncate(max_len);
+        while ids.len() < max_len {
+            ids.push(PAD);
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.token_of(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Lowercased word iterator: alphanumeric runs, punctuation as own tokens.
+fn split_words(text: &str) -> impl Iterator<Item = &str> {
+    text.split(|c: char| c.is_whitespace())
+        .flat_map(|tok| {
+            // split trailing/leading punctuation off
+            let trimmed = tok.trim_matches(|c: char| !c.is_alphanumeric());
+            if trimmed.is_empty() && !tok.is_empty() {
+                vec![tok]
+            } else if trimmed.len() == tok.len() {
+                vec![tok]
+            } else {
+                vec![trimmed]
+            }
+        })
+        .filter(|t| !t.is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CORPUS: &str = "the cat sat on the mat the cat ran fast \
+                          a dog sat on a log the dog barked";
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let tok = Tokenizer::build(CORPUS, 64);
+        assert_eq!(tok.id_of("[PAD]"), PAD);
+        assert_eq!(tok.id_of("[MASK]"), MASK);
+        assert_eq!(tok.token_of(CLS), "[CLS]");
+    }
+
+    #[test]
+    fn frequent_words_get_low_ids() {
+        let tok = Tokenizer::build(CORPUS, 64);
+        // "the" appears most often -> first non-special id
+        assert_eq!(tok.id_of("the"), NUM_SPECIAL);
+    }
+
+    #[test]
+    fn oov_maps_to_unk() {
+        let tok = Tokenizer::build(CORPUS, 64);
+        assert_eq!(tok.id_of("zebra"), UNK);
+        assert_eq!(tok.encode("zebra the")[0], UNK);
+    }
+
+    #[test]
+    fn vocab_size_cap_respected() {
+        let tok = Tokenizer::build(CORPUS, 8);
+        assert_eq!(tok.vocab_size(), 8);
+        // everything beyond the 3 most frequent words is UNK
+        let ids = tok.encode(CORPUS);
+        assert!(ids.iter().all(|&i| i < 8));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_known_words() {
+        let tok = Tokenizer::build(CORPUS, 64);
+        let ids = tok.encode("the cat sat");
+        assert_eq!(tok.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn cls_encoding_layout() {
+        let tok = Tokenizer::build(CORPUS, 64);
+        let ids = tok.encode_for_cls("the cat", Some("a dog"), 12);
+        assert_eq!(ids.len(), 12);
+        assert_eq!(ids[0], CLS);
+        assert!(ids.contains(&SEP));
+        assert_eq!(*ids.last().unwrap(), PAD);
+    }
+
+    #[test]
+    fn cls_encoding_truncates() {
+        let tok = Tokenizer::build(CORPUS, 64);
+        let ids = tok.encode_for_cls(CORPUS, Some(CORPUS), 6);
+        assert_eq!(ids.len(), 6);
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let a = Tokenizer::build(CORPUS, 32);
+        let b = Tokenizer::build(CORPUS, 32);
+        assert_eq!(a.encode(CORPUS), b.encode(CORPUS));
+    }
+}

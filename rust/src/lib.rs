@@ -1,0 +1,27 @@
+//! # linformer — a three-layer Rust + JAX + Pallas reproduction of
+//! *Linformer: Self-Attention with Linear Complexity* (Wang et al., 2020).
+//!
+//! Layers (see DESIGN.md):
+//! - **L1** (`python/compile/kernels/`): Pallas kernels — fused Linformer
+//!   attention, sequence projection, MLM loss (interpret mode; checked
+//!   against pure-jnp oracles).
+//! - **L2** (`python/compile/model.py`): the JAX encoder (all sharing
+//!   modes, nonuniform-k, pool/conv projections) + fused AdamW train step,
+//!   AOT-lowered to HLO text artifacts with a JSON manifest.
+//! - **L3** (this crate): PJRT runtime, serving coordinator (length-
+//!   bucketed dynamic batcher, backpressure, workers, metrics), training
+//!   and fine-tuning drivers, and the analyses behind every paper
+//!   table/figure.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `repro` binary is self-contained.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod serving;
+pub mod training;
+pub mod util;

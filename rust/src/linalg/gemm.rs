@@ -1,0 +1,172 @@
+//! Blocked single-threaded f32 GEMM.
+//!
+//! `matmul` computes `C = A·B`, `matmul_nt` computes `C = A·Bᵀ` (the layout
+//! attention wants for Q·Kᵀ without materialising a transpose).  Both use
+//! cache blocking plus an 8-wide unrolled inner kernel; good enough that the
+//! Rust reference model is compute- rather than overhead-bound.
+
+use super::Mat;
+
+const BLOCK_M: usize = 64;
+const BLOCK_N: usize = 64;
+const BLOCK_K: usize = 256;
+
+/// C = A (m×k) · B (k×n).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    for i0 in (0..m).step_by(BLOCK_M) {
+        let i1 = (i0 + BLOCK_M).min(m);
+        for k0 in (0..k).step_by(BLOCK_K) {
+            let k1 = (k0 + BLOCK_K).min(k);
+            for j0 in (0..n).step_by(BLOCK_N) {
+                let j1 = (j0 + BLOCK_N).min(n);
+                for i in i0..i1 {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    for kk in k0..k1 {
+                        let av = arow[kk];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[kk * n..(kk + 1) * n];
+                        axpy(av, &brow[j0..j1], &mut crow[j0..j1]);
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A (m×k) · Bᵀ where B is (n×k): dot products of rows.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dims: {} vs {}", a.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] = dot(arow, &b.data[j * k..(j + 1) * k]);
+        }
+    }
+    c
+}
+
+/// y += alpha * x, 8-way unrolled.
+#[inline]
+fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let o = c * 8;
+        // manual unroll — the autovectorizer turns this into fma lanes
+        y[o] += alpha * x[o];
+        y[o + 1] += alpha * x[o + 1];
+        y[o + 2] += alpha * x[o + 2];
+        y[o + 3] += alpha * x[o + 3];
+        y[o + 4] += alpha * x[o + 4];
+        y[o + 5] += alpha * x[o + 5];
+        y[o + 6] += alpha * x[o + 6];
+        y[o + 7] += alpha * x[o + 7];
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Unrolled dot product with 4 accumulators (breaks the dependency chain).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len().min(y.len());
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let o = c * 4;
+        s0 += x[o] * y[o];
+        s1 += x[o + 1] * y[o + 1];
+        s2 += x[o + 2] * y[o + 2];
+        s3 += x[o + 3] * y[o + 3];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..n {
+        tail += x[i] * y[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for k in 0..a.cols {
+                    s += f64::from(a.at(i, k)) * f64::from(b.at(k, j));
+                }
+                *c.at_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data, 1.0);
+        m
+    }
+
+    #[test]
+    fn matmul_matches_naive_on_odd_shapes() {
+        let mut rng = Pcg32::seeded(0);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (65, 130, 70)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let got = matmul(&a, &b);
+            let want = naive(&a, &b);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "({m},{k},{n}): {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_nt_equals_matmul_with_transpose() {
+        let mut rng = Pcg32::seeded(1);
+        let a = rand_mat(&mut rng, 13, 21);
+        let b = rand_mat(&mut rng, 17, 21);
+        let got = matmul_nt(&a, &b);
+        let want = matmul(&a, &b.transpose());
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg32::seeded(2);
+        let a = rand_mat(&mut rng, 8, 8);
+        assert!(matmul(&a, &Mat::eye(8)).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&Mat::eye(8), &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn dot_matches_reference() {
+        let x: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let y: Vec<f32> = (0..37).map(|i| (37 - i) as f32).collect();
+        let want: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - want).abs() < 1e-2);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dims")]
+    fn shape_mismatch_panics() {
+        matmul(&Mat::zeros(2, 3), &Mat::zeros(4, 2));
+    }
+}

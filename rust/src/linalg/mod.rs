@@ -1,0 +1,224 @@
+//! From-scratch dense linear algebra kit (f32, row-major).
+//!
+//! Used by (a) the pure-Rust reference transformer in [`crate::model`]
+//! (the CPU baseline independent of XLA), (b) the Fig 1 spectrum analysis
+//! (SVD of attention matrices), and (c) assorted substrates.  Not intended
+//! to compete with BLAS — the XLA runtime owns the hot path — but the gemm
+//! is blocked and unrolled enough to make the Rust baseline respectable
+//! (see EXPERIMENTS.md §Perf).
+
+pub mod gemm;
+pub mod svd;
+
+pub use gemm::{matmul, matmul_nt};
+
+/// Dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn filled_with(
+        rows: usize,
+        cols: usize,
+        mut f: impl FnMut(usize, usize) -> f32,
+    ) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// out = self + other (elementwise).
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Broadcast-add a row vector to every row.
+    pub fn add_row_vec(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            for (x, b) in self.row_mut(r).iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+}
+
+/// Numerically-stable in-place row softmax.
+pub fn softmax_rows(m: &mut Mat) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Row-wise layer norm with learned scale/bias.
+pub fn layer_norm_rows(m: &mut Mat, scale: &[f32], bias: &[f32], eps: f32) {
+    assert_eq!(scale.len(), m.cols);
+    assert_eq!(bias.len(), m.cols);
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let n = row.len() as f32;
+        let mean = row.iter().sum::<f32>() / n;
+        let var = row.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (x, (s, b)) in row.iter_mut().zip(scale.iter().zip(bias)) {
+            *x = (*x - mean) * inv * s + b;
+        }
+    }
+}
+
+/// tanh-approximation GELU (matches the L2 jax model).
+pub fn gelu_inplace(m: &mut Mat) {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    for x in &mut m.data {
+        let v = *x;
+        *x = 0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::filled_with(3, 5, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(4, 2), m.at(2, 4));
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_stable() {
+        let mut m = Mat::from_vec(2, 3, vec![1e4, 1e4, 1e4, 0.0, 1.0, 2.0]);
+        softmax_rows(&mut m);
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(r).iter().all(|x| x.is_finite()));
+        }
+        assert!((m.at(0, 0) - 1.0 / 3.0).abs() < 1e-5);
+        assert!(m.at(1, 2) > m.at(1, 1) && m.at(1, 1) > m.at(1, 0));
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut m = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        layer_norm_rows(&mut m, &[1.0; 4], &[0.0; 4], 1e-6);
+        let mean: f32 = m.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 =
+            m.row(0).iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        let mut m = Mat::from_vec(1, 3, vec![-1.0, 0.0, 1.0]);
+        gelu_inplace(&mut m);
+        assert!((m.at(0, 1)).abs() < 1e-7);
+        assert!((m.at(0, 2) - 0.841_192).abs() < 1e-3);
+        assert!((m.at(0, 0) + 0.158_808).abs() < 1e-3);
+    }
+
+    #[test]
+    fn add_row_vec_broadcasts() {
+        let mut m = Mat::zeros(2, 3);
+        m.add_row_vec(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn from_vec_validates_len() {
+        Mat::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

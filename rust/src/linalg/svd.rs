@@ -1,0 +1,200 @@
+//! One-sided Jacobi SVD (singular values only + optional vectors).
+//!
+//! Powers the Fig 1 reproduction: the paper computes the cumulative
+//! normalized singular-value spectrum of attention matrices P ∈ R^{n×n}.
+//! One-sided Jacobi orthogonalizes the columns of A by Givens rotations;
+//! the column norms converge to the singular values.  O(n³) per sweep but
+//! robust and dependency-free; n ≤ 512 here, which is what the paper used.
+
+use super::Mat;
+
+/// Result of an SVD: singular values in descending order.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub singular_values: Vec<f32>,
+    pub sweeps: usize,
+}
+
+/// Compute singular values of `a` (m×n, m ≥ n is not required — the matrix
+/// is transposed internally when n > m for speed).
+pub fn singular_values(a: &Mat) -> Svd {
+    let work = if a.cols > a.rows { a.transpose() } else { a.clone() };
+    jacobi(work)
+}
+
+fn jacobi(mut a: Mat) -> Svd {
+    let n = a.cols;
+    let max_sweeps = 30;
+    let eps = 1e-9f64;
+    let mut sweeps = 0;
+    // Work in f64 accumulators for the rotations' dot products: the
+    // convergence test is on relative off-diagonal mass.
+    for sweep in 0..max_sweeps {
+        sweeps = sweep + 1;
+        let mut off = 0.0f64;
+        for p in 0..n.saturating_sub(1) {
+            for q in (p + 1)..n {
+                // alpha = a_p . a_p ; beta = a_q . a_q ; gamma = a_p . a_q
+                let (mut alpha, mut beta, mut gamma) = (0.0f64, 0.0f64, 0.0f64);
+                for r in 0..a.rows {
+                    let x = f64::from(a.at(r, p));
+                    let y = f64::from(a.at(r, q));
+                    alpha += x * x;
+                    beta += y * y;
+                    gamma += x * y;
+                }
+                if alpha == 0.0 || beta == 0.0 {
+                    continue;
+                }
+                let limit = eps * (alpha * beta).sqrt();
+                if gamma.abs() <= limit {
+                    continue;
+                }
+                off += gamma.abs() / (alpha * beta).sqrt();
+                // Givens rotation zeroing the (p,q) inner product.
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for r in 0..a.rows {
+                    let x = f64::from(a.at(r, p));
+                    let y = f64::from(a.at(r, q));
+                    *a.at_mut(r, p) = (c * x - s * y) as f32;
+                    *a.at_mut(r, q) = (s * x + c * y) as f32;
+                }
+            }
+        }
+        if off < 1e-7 {
+            break;
+        }
+    }
+    let mut sv: Vec<f32> = (0..n)
+        .map(|j| {
+            (0..a.rows)
+                .map(|r| {
+                    let x = f64::from(a.at(r, j));
+                    x * x
+                })
+                .sum::<f64>()
+                .sqrt() as f32
+        })
+        .collect();
+    sv.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    Svd { singular_values: sv, sweeps }
+}
+
+/// Normalized cumulative spectrum: out[i] = sum(sv[..=i]) / sum(sv).
+/// This is exactly the Y-axis of the paper's Figure 1 (left).
+pub fn cumulative_spectrum(sv: &[f32]) -> Vec<f32> {
+    let total: f32 = sv.iter().sum();
+    if total == 0.0 {
+        return vec![0.0; sv.len()];
+    }
+    let mut acc = 0.0;
+    sv.iter()
+        .map(|s| {
+            acc += s;
+            acc / total
+        })
+        .collect()
+}
+
+/// Effective rank: smallest r with cumulative spectrum ≥ threshold.
+pub fn effective_rank(sv: &[f32], threshold: f32) -> usize {
+    let cum = cumulative_spectrum(sv);
+    cum.iter().position(|&c| c >= threshold).map_or(sv.len(), |p| p + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn diagonal_matrix_svs_are_abs_diagonal() {
+        let mut m = Mat::zeros(4, 4);
+        for (i, v) in [3.0f32, -7.0, 1.0, 0.5].iter().enumerate() {
+            *m.at_mut(i, i) = *v;
+        }
+        let svd = singular_values(&m);
+        let want = [7.0, 3.0, 1.0, 0.5];
+        for (got, want) in svd.singular_values.iter().zip(want) {
+            assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn orthogonal_matrix_svs_are_ones() {
+        // rotation matrix
+        let th = 0.7f32;
+        let m = Mat::from_vec(2, 2, vec![th.cos(), -th.sin(), th.sin(), th.cos()]);
+        let svd = singular_values(&m);
+        for s in svd.singular_values {
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rank_one_matrix_has_single_nonzero_sv() {
+        let u = Mat::from_vec(5, 1, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let v = Mat::from_vec(1, 4, vec![1.0, 0.0, -1.0, 2.0]);
+        let m = matmul(&u, &v);
+        let svd = singular_values(&m);
+        assert!(svd.singular_values[0] > 1.0);
+        for s in &svd.singular_values[1..] {
+            assert!(s.abs() < 1e-3, "{s}");
+        }
+        assert_eq!(effective_rank(&svd.singular_values, 0.99), 1);
+    }
+
+    #[test]
+    fn frobenius_norm_is_preserved() {
+        // sum sv^2 == ||A||_F^2
+        let mut rng = Pcg32::seeded(11);
+        let mut m = Mat::zeros(20, 12);
+        rng.fill_normal(&mut m.data, 1.0);
+        let svd = singular_values(&m);
+        let sum_sq: f32 = svd.singular_values.iter().map(|s| s * s).sum();
+        let fro2 = m.fro_norm().powi(2);
+        assert!((sum_sq - fro2).abs() / fro2 < 1e-3);
+    }
+
+    #[test]
+    fn wide_and_tall_agree() {
+        let mut rng = Pcg32::seeded(12);
+        let mut m = Mat::zeros(8, 15);
+        rng.fill_normal(&mut m.data, 1.0);
+        let a = singular_values(&m);
+        let b = singular_values(&m.transpose());
+        for (x, y) in a.singular_values.iter().zip(&b.singular_values) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn cumulative_spectrum_monotone_to_one() {
+        let cum = cumulative_spectrum(&[4.0, 3.0, 2.0, 1.0]);
+        assert!((cum.last().unwrap() - 1.0).abs() < 1e-6);
+        for w in cum.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!((cum[0] - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn low_rank_plus_noise_spectrum_is_skewed() {
+        // Construct rank-3 + tiny noise; effective rank at 0.9 must be small.
+        let mut rng = Pcg32::seeded(13);
+        let mut u = Mat::zeros(32, 3);
+        let mut v = Mat::zeros(3, 32);
+        rng.fill_normal(&mut u.data, 1.0);
+        rng.fill_normal(&mut v.data, 1.0);
+        let mut m = matmul(&u, &v);
+        for x in &mut m.data {
+            *x += rng.normal() * 1e-3;
+        }
+        let svd = singular_values(&m);
+        assert!(effective_rank(&svd.singular_values, 0.9) <= 3);
+    }
+}

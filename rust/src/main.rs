@@ -1,0 +1,599 @@
+//! `repro` — the Linformer reproduction launcher.
+//!
+//! Subcommands (each regenerates part of the paper's evaluation; see
+//! DESIGN.md §4 for the experiment index):
+//!
+//! ```text
+//! repro pretrain    Fig 3  — MLM pretraining (single run or sweeps)
+//! repro finetune    Table 2 — downstream fine-tuning on synthetic tasks
+//! repro serve       serving demo: coordinator + synthetic load
+//! repro spectrum    Fig 1  — attention-spectrum analysis
+//! repro complexity  Table 1 — analytic complexity table
+//! repro efficiency  Table 3 — inference time & memory-saving grid
+//! ```
+
+use linformer::analysis::{self, complexity::Arch};
+use linformer::model::{Attention, ModelConfig, Params};
+use linformer::runtime::{Engine, Manifest};
+use linformer::serving;
+use linformer::training::{
+    finetune, FinetuneConfig, LrSchedule, TrainConfig, Trainer,
+};
+use linformer::util::cli::Args;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let result = match cmd.as_str() {
+        "pretrain" => cmd_pretrain(argv),
+        "finetune" => cmd_finetune(argv),
+        "fig3" => cmd_fig3(argv),
+        "table2" => cmd_table2(argv),
+        "serve" => cmd_serve(argv),
+        "spectrum" => cmd_spectrum(argv),
+        "complexity" => cmd_complexity(argv),
+        "efficiency" => cmd_efficiency(argv),
+        "list" => cmd_list(argv),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: repro <command> [flags]\n\
+         commands:\n  \
+         pretrain    MLM pretraining (Fig 3)\n  \
+         finetune    downstream fine-tuning (Table 2)\n  \
+         serve       serving demo with synthetic load\n  \
+         spectrum    attention spectrum analysis (Fig 1)\n  \
+         complexity  analytic complexity table (Table 1)\n  \
+         efficiency  inference efficiency grid (Table 3)\n  \
+         list        list models in the artifact manifest\n\
+         common flags: --artifacts <dir> (default: artifacts)"
+    );
+}
+
+type AnyError = Box<dyn std::error::Error>;
+
+fn manifest_from(args: &Args) -> Result<Manifest, AnyError> {
+    let dir = args.str_or("artifacts", "artifacts");
+    Ok(Manifest::load(dir)?)
+}
+
+// ---------------------------------------------------------------------------
+// pretrain (Fig 3)
+// ---------------------------------------------------------------------------
+
+fn cmd_pretrain(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("artifacts", "artifact directory"),
+            ("model", "manifest model name (default serve_128)"),
+            ("steps", "training steps (default 200)"),
+            ("lr", "peak learning rate (default 1e-3)"),
+            ("warmup", "warmup steps (default 20)"),
+            ("eval-every", "eval cadence (default 25)"),
+            ("seed", "rng seed (default 0)"),
+            ("checkpoint", "save checkpoint to this path"),
+            ("quiet!", "suppress per-step logging"),
+        ],
+    )?;
+    let manifest = manifest_from(&args)?;
+    let model = args.str_or("model", "serve_128");
+    let steps = args.usize_or("steps", 200)?;
+    let engine = Engine::cpu()?;
+    let entry = manifest.model(&model)?;
+    println!(
+        "[pretrain] model={model} n={} k={} attention={:?} params={}",
+        entry.config.max_len,
+        entry.config.k_proj,
+        entry.config.attention,
+        entry.param_count
+    );
+    let mut trainer = Trainer::new(&engine, entry)?;
+    let cfg = TrainConfig {
+        steps,
+        schedule: LrSchedule::linear(
+            args.f64_or("lr", 1e-3)? as f32,
+            args.usize_or("warmup", 20)?,
+            steps,
+        ),
+        eval_every: args.usize_or("eval-every", 25)?,
+        eval_batches: 4,
+        log_every: 10,
+        seed: args.usize_or("seed", 0)? as u64,
+        verbose: !args.flag("quiet"),
+    };
+    let report = trainer.run(&cfg)?;
+    println!(
+        "[pretrain] done: final eval loss {:.4} (ppl {:.1}), {:.2} steps/s",
+        report.final_eval_loss, report.final_perplexity, report.steps_per_sec
+    );
+    if let Some(path) = args.get("checkpoint") {
+        trainer.save_checkpoint(path)?;
+        println!("[pretrain] checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// fig3: pretraining sweeps (requires the `experiments` artifact profile)
+// ---------------------------------------------------------------------------
+
+fn cmd_fig3(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("artifacts", "artifact directory"),
+            ("steps", "steps per config (default 150)"),
+            ("panel", "a|b|c|d|ablate|all (default all)"),
+            ("lr", "peak lr (default 1e-3)"),
+        ],
+    )?;
+    let manifest = manifest_from(&args)?;
+    let steps = args.usize_or("steps", 150)?;
+    let panel = args.str_or("panel", "all");
+    let prefixes: Vec<&str> = match panel.as_str() {
+        "a" => vec!["fig3a"],
+        "b" => vec!["fig3b"],
+        "c" => vec!["fig3c"],
+        "d" => vec!["fig3d"],
+        "ablate" => vec!["ablate"],
+        "all" => vec!["fig3a", "fig3b", "fig3c", "fig3d", "ablate"],
+        other => return Err(format!("unknown panel '{other}'").into()),
+    };
+    let engine = Engine::cpu()?;
+    let models: Vec<String> = manifest
+        .model_names()
+        .into_iter()
+        .filter(|n| prefixes.iter().any(|p| n.starts_with(p)))
+        .map(String::from)
+        .collect();
+    if models.is_empty() {
+        return Err(
+            "no fig3 models in manifest — run `make artifacts-all`".into()
+        );
+    }
+    println!(
+        "{:<18} {:>5} {:>5} {:>10} {:>12} {:>12} {:>10}",
+        "model", "n", "k", "sharing", "final eval", "perplexity", "steps/s"
+    );
+    for name in models {
+        let entry = manifest.model(&name)?;
+        let mut trainer = Trainer::new(&engine, entry)?;
+        let cfg = TrainConfig {
+            steps,
+            schedule: LrSchedule::linear(
+                args.f64_or("lr", 1e-3)? as f32,
+                steps / 10,
+                steps,
+            ),
+            eval_every: steps,
+            eval_batches: 4,
+            log_every: steps,
+            seed: 0,
+            verbose: false,
+        };
+        let report = trainer.run(&cfg)?;
+        println!(
+            "{:<18} {:>5} {:>5} {:>10} {:>12.4} {:>12.1} {:>10.2}",
+            name,
+            entry.config.max_len,
+            entry.config.k_proj,
+            format!("{:?}", entry.config.sharing),
+            report.final_eval_loss,
+            report.final_perplexity,
+            report.steps_per_sec
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// table2: fine-tuning across all t2 models × tasks
+// ---------------------------------------------------------------------------
+
+fn cmd_table2(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("artifacts", "artifact directory"),
+            ("steps", "fine-tune steps (default 80)"),
+            ("pretrain-steps", "MLM steps before fine-tuning (default 100)"),
+            ("lr", "fine-tune lr (default 1e-3)"),
+        ],
+    )?;
+    let manifest = manifest_from(&args)?;
+    let engine = Engine::cpu()?;
+    let models: Vec<String> = manifest
+        .model_names()
+        .into_iter()
+        .filter(|n| n.starts_with("t2_"))
+        .map(String::from)
+        .collect();
+    if models.is_empty() {
+        return Err(
+            "no t2 models in manifest — run `make artifacts-all`".into()
+        );
+    }
+    let pre_steps = args.usize_or("pretrain-steps", 100)?;
+    let ft = FinetuneConfig {
+        steps: args.usize_or("steps", 80)?,
+        lr: args.f64_or("lr", 1e-3)? as f32,
+        ..FinetuneConfig::default()
+    };
+    let tasks = linformer::data::Task::all();
+    println!(
+        "{:<20} {:>7} {:>7} {:>7} {:>7} {:>9}",
+        "model", "SST-2*", "IMDB*", "QNLI*", "QQP*", "average"
+    );
+    for name in models {
+        let entry = manifest.model(&name)?;
+        // brief MLM pretraining first (the paper fine-tunes pretrained
+        // checkpoints; scaled down here)
+        let mut trainer = Trainer::new(&engine, entry)?;
+        let pre = TrainConfig {
+            steps: pre_steps,
+            schedule: LrSchedule::linear(1e-3, pre_steps / 10, pre_steps),
+            eval_every: 0,
+            eval_batches: 0,
+            log_every: pre_steps + 1,
+            seed: 0,
+            verbose: false,
+        };
+        trainer.run(&pre)?;
+        let pretrained = trainer.params.clone();
+        let mut accs = Vec::new();
+        for task in tasks {
+            let r = finetune(&engine, entry, pretrained.clone(), task, &ft)?;
+            accs.push(r.eval_accuracy);
+        }
+        let avg: f32 = accs.iter().sum::<f32>() / accs.len() as f32;
+        println!(
+            "{:<20} {:>7.3} {:>7.3} {:>7.3} {:>7.3} {:>9.3}",
+            name, accs[0], accs[1], accs[2], accs[3], avg
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// finetune (Table 2)
+// ---------------------------------------------------------------------------
+
+fn cmd_finetune(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("artifacts", "artifact directory"),
+            ("model", "manifest model name (default tiny)"),
+            ("task", "SST-2|IMDB|QNLI|QQP|all (default all)"),
+            ("steps", "fine-tune steps (default 60)"),
+            ("lr", "learning rate (default 1e-3)"),
+            ("seed", "rng seed (default 0)"),
+        ],
+    )?;
+    let manifest = manifest_from(&args)?;
+    let model = args.str_or("model", "tiny");
+    let engine = Engine::cpu()?;
+    let entry = manifest.model(&model)?;
+    let tasks: Vec<linformer::data::Task> = match args.str_or("task", "all").as_str() {
+        "all" => linformer::data::Task::all().to_vec(),
+        "SST-2" => vec![linformer::data::Task::Sentiment],
+        "IMDB" => vec![linformer::data::Task::LongSentiment],
+        "QNLI" => vec![linformer::data::Task::Inference],
+        "QQP" => vec![linformer::data::Task::Similarity],
+        other => return Err(format!("unknown task '{other}'").into()),
+    };
+    let cfg = FinetuneConfig {
+        steps: args.usize_or("steps", 60)?,
+        lr: args.f64_or("lr", 1e-3)? as f32,
+        seed: args.usize_or("seed", 0)? as u64,
+        ..FinetuneConfig::default()
+    };
+    println!("task      train_acc  eval_acc  loss");
+    let mut accs = Vec::new();
+    for task in tasks {
+        let result = finetune(&engine, entry, entry.load_init()?, task, &cfg)?;
+        println!(
+            "{:<9} {:>8.3}  {:>8.3}  {:.4}",
+            task.name(),
+            result.train_accuracy,
+            result.eval_accuracy,
+            result.final_loss
+        );
+        accs.push(result.eval_accuracy);
+    }
+    let avg: f32 = accs.iter().sum::<f32>() / accs.len() as f32;
+    println!("average eval accuracy: {avg:.3}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("artifacts", "artifact directory"),
+            ("config", "TOML launcher config (configs/serve.toml)"),
+            ("models", "comma-separated bucket models (default tiny,serve_128)"),
+            ("requests", "synthetic requests to send (default 64)"),
+            ("clients", "client threads (default 4)"),
+            ("seed", "rng seed"),
+        ],
+    )?;
+    // config file gives defaults; CLI flags override
+    let launcher = match args.get("config") {
+        Some(path) => serving::LauncherConfig::from_file(path)?,
+        None => serving::LauncherConfig::default(),
+    };
+    let dir = args.str_or("artifacts", &launcher.artifacts_dir);
+    let manifest = Manifest::load(dir)?;
+    let names_s =
+        args.str_or("models", &launcher.models.join(","));
+    let names: Vec<&str> = names_s.split(',').collect();
+    println!("[serve] compiling {} bucket(s)…", names.len());
+    let vocab = manifest.model(names[0])?.config.vocab_size;
+    let coord =
+        serving::build_coordinator(&manifest, &names, launcher.batcher)?;
+    let total = args.usize_or("requests", 64)?;
+    let clients = args.usize_or("clients", 4)?;
+    println!("[serve] sending {total} requests from {clients} clients…");
+    let report = serving::run_load(
+        &coord,
+        vocab,
+        total,
+        clients,
+        args.usize_or("seed", 0)? as u64,
+    );
+    println!(
+        "[serve] completed {}/{} ({} rejected) in {:.2}s — {:.1} req/s, \
+         mean latency {:.1}ms, p95 {:.1}ms",
+        report.completed,
+        report.sent,
+        report.rejected,
+        report.wall_s,
+        report.throughput_rps,
+        report.mean_latency_s * 1e3,
+        report.p95_latency_s * 1e3
+    );
+    println!("[serve] metrics: {}", coord.metrics.to_json());
+    coord.shutdown();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// spectrum (Fig 1)
+// ---------------------------------------------------------------------------
+
+fn cmd_spectrum(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("n", "sequence length (default 128)"),
+            ("layers", "encoder layers (default 4)"),
+            ("heads", "attention heads (default 4)"),
+            ("samples", "sequences to average (default 4)"),
+            ("seed", "rng seed"),
+            ("artifacts", "artifact directory"),
+            ("model", "analyze a manifest model instead of a fresh init"),
+            ("checkpoint", "load trained params from this checkpoint"),
+        ],
+    )?;
+    // Trained-model path: config from the manifest, params from a
+    // checkpoint produced by `repro pretrain --checkpoint …` — this is the
+    // faithful Fig 1 setting (the paper analyzes *pretrained* attention).
+    let (cfg, params) = if let Some(model) = args.get("model") {
+        let manifest = manifest_from(&args)?;
+        let entry = manifest.model(model)?;
+        let cfg = entry.config.clone();
+        let flat = match args.get("checkpoint") {
+            Some(path) => linformer::runtime::Checkpoint::load(path)?
+                .slot("params")?
+                .to_vec(),
+            None => entry.load_init()?,
+        };
+        let params = Params::from_flat(
+            flat,
+            linformer::model::param_spec(&cfg),
+        )?;
+        (cfg, params)
+    } else {
+        let n = args.usize_or("n", 128)?;
+        let layers = args.usize_or("layers", 4)?;
+        let heads = args.usize_or("heads", 4)?;
+        let mut cfg = ModelConfig::tiny();
+        cfg.attention = Attention::Standard;
+        cfg.max_len = n;
+        cfg.n_layers = layers;
+        cfg.n_heads = heads;
+        cfg.d_model = 16 * heads;
+        cfg.vocab_size = 1024;
+        let params = Params::init(&cfg, args.usize_or("seed", 0)? as u64);
+        (cfg, params)
+    };
+    let (n, layers, heads) = (cfg.max_len, cfg.n_layers, cfg.n_heads);
+    println!(
+        "[spectrum] {:?} attention, n={n}, {layers} layers × {heads} heads",
+        cfg.attention
+    );
+    let report = analysis::analyze(
+        &params,
+        &cfg,
+        args.usize_or("samples", 4)?,
+        args.usize_or("seed", 0)? as u64,
+    );
+    let mean = report.mean_cumulative();
+    println!("cumulative spectrum (Fig 1 left, Y at selected indices):");
+    for frac in [0.05, 0.125, 0.25, 0.5, 0.75, 1.0] {
+        let idx = ((n as f64 * frac) as usize).clamp(1, n) - 1;
+        println!("  idx {:>5} ({:>5.1}%): {:.4}", idx + 1, frac * 100.0,
+                 mean[idx.min(mean.len() - 1)]);
+    }
+    println!(
+        "long-tail score (mean cumulative at n/4): {:.4}",
+        analysis::long_tail_score(&report)
+    );
+    println!("heatmap (Fig 1 right: cumulative@n/4 per layer × head):");
+    for (l, row) in report.heatmap(layers, heads).iter().enumerate() {
+        let cells: Vec<String> =
+            row.iter().map(|v| format!("{v:.3}")).collect();
+        println!("  layer {l}: {}", cells.join("  "));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// complexity (Table 1)
+// ---------------------------------------------------------------------------
+
+fn cmd_complexity(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("n", "sequence length (default 512)"),
+            ("d", "head dim (default 64)"),
+            ("k", "projected dim (default 128)"),
+        ],
+    )?;
+    let n = args.usize_or("n", 512)?;
+    let d = args.usize_or("d", 64)?;
+    let k = args.usize_or("k", 128)?;
+    println!("Table 1 — per-layer complexity at n={n}, d={d}, k={k}");
+    println!(
+        "{:<22} {:>12} {:>12} {:>14} {:>14}",
+        "architecture", "complexity", "seq. ops", "attn GFLOPs", "attn MB"
+    );
+    for row in analysis::table1(n, d, k) {
+        println!(
+            "{:<22} {:>12} {:>12.0} {:>14.4} {:>14.3}",
+            row.arch.name(),
+            row.complexity,
+            row.sequential_ops,
+            row.flops / 1e9,
+            row.activation_bytes / 1e6
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// efficiency (Table 3, analytic half; the measured half lives in
+// `cargo bench --bench table3_efficiency`)
+// ---------------------------------------------------------------------------
+
+fn cmd_efficiency(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[("d", "model dim (default 64)"), ("heads", "heads (default 4)")],
+    )?;
+    let d = args.usize_or("d", 64)?;
+    let heads = args.usize_or("heads", 4)?;
+    let ns = [512usize, 1024, 2048, 4096, 8192, 16384, 32768, 65536];
+    let ks = [128usize, 256, 512, 1024, 2048];
+    let mk = |n: usize, k: usize, attention| {
+        let mut c = ModelConfig::tiny();
+        c.max_len = n;
+        c.k_proj = k;
+        c.d_model = d;
+        c.n_heads = heads;
+        c.attention = attention;
+        c
+    };
+    println!("Table 3 (left, analytic) — FLOP speedup of Linformer over Transformer");
+    print!("{:>8}", "n\\k");
+    for k in ks {
+        print!("{k:>8}");
+    }
+    println!();
+    for n in ns {
+        print!("{n:>8}");
+        for k in ks {
+            if k >= n {
+                print!("{:>8}", "-");
+            } else {
+                print!(
+                    "{:>7.1}x",
+                    analysis::complexity::speedup_vs_transformer(n, d, k)
+                );
+            }
+        }
+        println!();
+    }
+    println!();
+    println!("Table 3 (right, analytic) — max-batch memory saving");
+    print!("{:>8}", "n\\k");
+    for k in ks {
+        print!("{k:>8}");
+    }
+    println!();
+    for n in ns {
+        print!("{n:>8}");
+        for k in ks {
+            if k >= n {
+                print!("{:>8}", "-");
+            } else {
+                let lin = mk(n, k, Attention::Linformer);
+                let std = mk(n, k, Attention::Standard);
+                print!(
+                    "{:>7.1}x",
+                    analysis::memory_saving(
+                        &lin,
+                        &std,
+                        n,
+                        analysis::DEFAULT_BUDGET
+                    )
+                );
+            }
+        }
+        println!();
+    }
+    let _ = Arch::Transformer; // referenced for doc purposes
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// list
+// ---------------------------------------------------------------------------
+
+fn cmd_list(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(argv, &[("artifacts", "artifact directory")])?;
+    let manifest = manifest_from(&args)?;
+    println!("{:<22} {:>6} {:>6} {:>10} {:>9}  programs", "model", "n", "k",
+             "attention", "params");
+    for name in manifest.model_names() {
+        let e = manifest.model(name)?;
+        let progs: Vec<&str> =
+            e.programs.keys().map(String::as_str).collect();
+        println!(
+            "{:<22} {:>6} {:>6} {:>10} {:>9}  {}",
+            name,
+            e.config.max_len,
+            e.config.k_proj,
+            format!("{:?}", e.config.attention),
+            e.param_count,
+            progs.join(",")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Model hyper-parameter config, mirroring `python/compile/model.py`'s
+//! `ModelConfig` exactly (the manifest carries it as JSON).
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attention {
+    Standard,
+    Linformer,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sharing {
+    None,
+    Headwise,
+    KeyValue,
+    Layerwise,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProjMode {
+    Linear,
+    Pool,
+    Conv,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub max_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub attention: Attention,
+    pub k_proj: usize,
+    pub sharing: Sharing,
+    pub proj_mode: ProjMode,
+    pub k_schedule: Option<Vec<usize>>,
+    pub num_classes: usize,
+    pub tie_embeddings: bool,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("bad model config: {0}")]
+pub struct ConfigError(pub String);
+
+impl ModelConfig {
+    /// Per-layer projected dimension (paper §4 nonuniform-k).
+    pub fn layer_k(&self, layer: usize) -> usize {
+        match &self.k_schedule {
+            Some(ks) => ks[layer],
+            None => self.k_proj,
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Parse the `config` object embedded in `manifest.json`.
+    pub fn from_json(j: &Json) -> Result<ModelConfig, ConfigError> {
+        let get_usize = |k: &str| {
+            j.get(k)
+                .as_usize()
+                .ok_or_else(|| ConfigError(format!("missing field '{k}'")))
+        };
+        let attention = match j.get("attention").as_str() {
+            Some("standard") => Attention::Standard,
+            Some("linformer") | None => Attention::Linformer,
+            Some(o) => return Err(ConfigError(format!("attention '{o}'"))),
+        };
+        let sharing = match j.get("sharing").as_str() {
+            Some("none") => Sharing::None,
+            Some("headwise") => Sharing::Headwise,
+            Some("kv") => Sharing::KeyValue,
+            Some("layerwise") | None => Sharing::Layerwise,
+            Some(o) => return Err(ConfigError(format!("sharing '{o}'"))),
+        };
+        let proj_mode = match j.get("proj_mode").as_str() {
+            Some("linear") | None => ProjMode::Linear,
+            Some("pool") => ProjMode::Pool,
+            Some("conv") => ProjMode::Conv,
+            Some(o) => return Err(ConfigError(format!("proj_mode '{o}'"))),
+        };
+        let k_schedule = match j.get("k_schedule") {
+            Json::Null => None,
+            Json::Arr(items) => Some(
+                items
+                    .iter()
+                    .map(|x| {
+                        x.as_usize()
+                            .ok_or_else(|| ConfigError("bad k_schedule".into()))
+                    })
+                    .collect::<Result<Vec<_>, _>>()?,
+            ),
+            _ => return Err(ConfigError("k_schedule must be array".into())),
+        };
+        let cfg = ModelConfig {
+            vocab_size: get_usize("vocab_size")?,
+            max_len: get_usize("max_len")?,
+            d_model: get_usize("d_model")?,
+            n_heads: get_usize("n_heads")?,
+            n_layers: get_usize("n_layers")?,
+            d_ff: get_usize("d_ff")?,
+            attention,
+            k_proj: get_usize("k_proj")?,
+            sharing,
+            proj_mode,
+            k_schedule,
+            num_classes: get_usize("num_classes").unwrap_or(2),
+            tie_embeddings: j.get("tie_embeddings").as_bool().unwrap_or(true),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.d_model % self.n_heads != 0 {
+            return Err(ConfigError(format!(
+                "d_model {} not divisible by n_heads {}",
+                self.d_model, self.n_heads
+            )));
+        }
+        if let Some(ks) = &self.k_schedule {
+            if ks.len() != self.n_layers {
+                return Err(ConfigError("k_schedule length != n_layers".into()));
+            }
+        }
+        if matches!(self.proj_mode, ProjMode::Pool | ProjMode::Conv)
+            && self.max_len % self.k_proj != 0
+        {
+            return Err(ConfigError("pool/conv requires k | n".into()));
+        }
+        Ok(())
+    }
+
+    /// A small config for unit tests.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 256,
+            max_len: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 32,
+            attention: Attention::Linformer,
+            k_proj: 8,
+            sharing: Sharing::Layerwise,
+            proj_mode: ProjMode::Linear,
+            k_schedule: None,
+            num_classes: 2,
+            tie_embeddings: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn parses_manifest_config_json() {
+        let j = json::parse(
+            r#"{"vocab_size": 512, "max_len": 64, "d_model": 32,
+                "n_heads": 2, "n_layers": 2, "d_ff": 64,
+                "attention": "linformer", "k_proj": 16,
+                "sharing": "layerwise", "proj_mode": "linear",
+                "k_schedule": null, "num_classes": 2,
+                "tie_embeddings": true}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.vocab_size, 512);
+        assert_eq!(cfg.sharing, Sharing::Layerwise);
+        assert_eq!(cfg.d_head(), 16);
+        assert_eq!(cfg.layer_k(1), 16);
+    }
+
+    #[test]
+    fn parses_k_schedule() {
+        let j = json::parse(
+            r#"{"vocab_size": 16, "max_len": 8, "d_model": 4, "n_heads": 2,
+                "n_layers": 2, "d_ff": 8, "k_proj": 4,
+                "k_schedule": [4, 2]}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.layer_k(0), 4);
+        assert_eq!(cfg.layer_k(1), 2);
+    }
+
+    #[test]
+    fn rejects_bad_heads() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.n_heads = 3;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_enum() {
+        let j = json::parse(
+            r#"{"vocab_size": 16, "max_len": 8, "d_model": 4, "n_heads": 2,
+                "n_layers": 1, "d_ff": 8, "k_proj": 4,
+                "attention": "quantum"}"#,
+        )
+        .unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,393 @@
+//! Pure-Rust reference transformer / Linformer encoder forward pass.
+//!
+//! This is NOT the serving hot path (the PJRT runtime executes the AOT
+//! artifacts there); it exists to (a) run the Fig 1 spectrum analysis,
+//! which needs the *materialized* attention matrices P — something the
+//! fused kernels intentionally never produce — (b) provide an
+//! XLA-independent CPU baseline for the benches, and (c) cross-check the
+//! Python model numerically through `tests/integration_runtime.rs`.
+
+use super::config::{Attention, ModelConfig, ProjMode, Sharing};
+use super::params::Params;
+use crate::linalg::{
+    gelu_inplace, layer_norm_rows, matmul, matmul_nt, softmax_rows, Mat,
+};
+
+/// Per-head attention matrices captured during a forward pass
+/// (only when requested — they are O(n²) / O(nk)).
+#[derive(Debug, Default, Clone)]
+pub struct AttnCapture {
+    /// [layer][head] -> context-mapping matrix P (n×n for standard,
+    /// n×k for Linformer).
+    pub matrices: Vec<Vec<Mat>>,
+}
+
+/// Forward output.
+pub struct EncodeOut {
+    pub hidden: Mat, // (n, d_model)
+    pub capture: Option<AttnCapture>,
+}
+
+/// Encoder forward for a single example.
+pub fn encode(
+    params: &Params,
+    cfg: &ModelConfig,
+    tokens: &[u32],
+    capture_attn: bool,
+) -> EncodeOut {
+    assert!(
+        tokens.len() <= cfg.max_len,
+        "sequence {} exceeds max_len {}",
+        tokens.len(),
+        cfg.max_len
+    );
+    let n = tokens.len();
+    let d = cfg.d_model;
+    let tok_emb = params.get("embed/tokens").expect("embed/tokens");
+    let pos_emb = params.get("embed/positions").expect("embed/positions");
+    let mut x = Mat::zeros(n, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        let t = t as usize;
+        assert!(t < cfg.vocab_size, "token id {t} out of vocab");
+        for j in 0..d {
+            *x.at_mut(i, j) = tok_emb[t * d + j] + pos_emb[i * d + j];
+        }
+    }
+    layer_norm_rows(
+        &mut x,
+        params.get("embed/ln_scale").unwrap(),
+        params.get("embed/ln_bias").unwrap(),
+        1e-5,
+    );
+
+    let mut capture =
+        capture_attn.then(|| AttnCapture { matrices: Vec::new() });
+
+    for l in 0..cfg.n_layers {
+        let p = format!("layer{l}");
+        // pre-LN attention block
+        let mut h = x.clone();
+        layer_norm_rows(
+            &mut h,
+            params.get(&format!("{p}/ln1_scale")).unwrap(),
+            params.get(&format!("{p}/ln1_bias")).unwrap(),
+            1e-5,
+        );
+        let (attn_out, mats) = attention_layer(params, cfg, l, &h);
+        if let Some(c) = capture.as_mut() {
+            c.matrices.push(mats);
+        }
+        x.add_assign(&attn_out);
+        // pre-LN FFN block
+        let mut h = x.clone();
+        layer_norm_rows(
+            &mut h,
+            params.get(&format!("{p}/ln2_scale")).unwrap(),
+            params.get(&format!("{p}/ln2_bias")).unwrap(),
+            1e-5,
+        );
+        let mut ff = matmul(&h, &params.mat(&format!("{p}/ffn_w1")).unwrap());
+        ff.add_row_vec(params.get(&format!("{p}/ffn_b1")).unwrap());
+        gelu_inplace(&mut ff);
+        let mut ff2 = matmul(&ff, &params.mat(&format!("{p}/ffn_w2")).unwrap());
+        ff2.add_row_vec(params.get(&format!("{p}/ffn_b2")).unwrap());
+        x.add_assign(&ff2);
+    }
+    layer_norm_rows(
+        &mut x,
+        params.get("final/ln_scale").unwrap(),
+        params.get("final/ln_bias").unwrap(),
+        1e-5,
+    );
+    EncodeOut { hidden: x, capture }
+}
+
+/// Multi-head attention for one layer; returns (output, per-head P).
+fn attention_layer(
+    params: &Params,
+    cfg: &ModelConfig,
+    layer: usize,
+    h: &Mat,
+) -> (Mat, Vec<Mat>) {
+    let p = format!("layer{layer}");
+    let n = h.rows;
+    let d = cfg.d_model;
+    let heads = cfg.n_heads;
+    let dh = cfg.d_head();
+
+    let mut q = matmul(h, &params.mat(&format!("{p}/wq")).unwrap());
+    q.add_row_vec(params.get(&format!("{p}/bq")).unwrap());
+    let mut k = matmul(h, &params.mat(&format!("{p}/wk")).unwrap());
+    k.add_row_vec(params.get(&format!("{p}/bk")).unwrap());
+    let mut v = matmul(h, &params.mat(&format!("{p}/wv")).unwrap());
+    v.add_row_vec(params.get(&format!("{p}/bv")).unwrap());
+
+    let mut ctx = Mat::zeros(n, d);
+    let mut mats = Vec::with_capacity(heads);
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    for head in 0..heads {
+        let qh = slice_head(&q, head, dh);
+        let kh = slice_head(&k, head, dh);
+        let vh = slice_head(&v, head, dh);
+
+        let (kbar, vbar) = match (cfg.attention, cfg.proj_mode) {
+            (Attention::Standard, _) => (kh, vh),
+            (Attention::Linformer, ProjMode::Pool) => {
+                let k = cfg.layer_k(layer);
+                (pool(&kh, k), pool(&vh, k))
+            }
+            (Attention::Linformer, ProjMode::Conv) => {
+                let (we, wf) = conv_weights(params, cfg, layer);
+                let k = cfg.layer_k(layer);
+                (conv(&kh, &we, k), conv(&vh, &wf, k))
+            }
+            (Attention::Linformer, ProjMode::Linear) => {
+                let (e, f) = projections(params, cfg, layer, head);
+                compress(&e, &f, &kh, &vh)
+            }
+        };
+        // P = softmax(q kbar^T * scale)  — (n × m)
+        let mut logits = matmul_nt(&qh, &kbar);
+        logits.scale(scale);
+        softmax_rows(&mut logits);
+        let out = matmul(&logits, &vbar);
+        for r in 0..n {
+            for c in 0..dh {
+                *ctx.at_mut(r, head * dh + c) = out.at(r, c);
+            }
+        }
+        mats.push(logits);
+    }
+    let mut o = matmul(&ctx, &params.mat(&format!("{p}/wo")).unwrap());
+    o.add_row_vec(params.get(&format!("{p}/bo")).unwrap());
+    (o, mats)
+}
+
+/// Extract head `h`'s (n × dh) slice from the packed (n × d) projection.
+fn slice_head(m: &Mat, head: usize, dh: usize) -> Mat {
+    let mut out = Mat::zeros(m.rows, dh);
+    for r in 0..m.rows {
+        let src = &m.row(r)[head * dh..(head + 1) * dh];
+        out.row_mut(r).copy_from_slice(src);
+    }
+    out
+}
+
+/// Resolve the (E, F) projection matrices for (layer, head) under the
+/// configured sharing mode.  Matrices are (k × max_len); callers slice
+/// columns to the live sequence length.
+fn projections(
+    params: &Params,
+    cfg: &ModelConfig,
+    layer: usize,
+    head: usize,
+) -> (Mat, Mat) {
+    match cfg.sharing {
+        Sharing::Layerwise => {
+            let e = params.mat("proj/E").expect("proj/E");
+            (e.clone(), e)
+        }
+        Sharing::KeyValue => {
+            let e = params.mat(&format!("layer{layer}/E")).unwrap();
+            (e.clone(), e)
+        }
+        Sharing::Headwise => (
+            params.mat(&format!("layer{layer}/E")).unwrap(),
+            params.mat(&format!("layer{layer}/F")).unwrap(),
+        ),
+        Sharing::None => (
+            params.mat3(&format!("layer{layer}/E"), head).unwrap(),
+            params.mat3(&format!("layer{layer}/F"), head).unwrap(),
+        ),
+    }
+}
+
+/// Sequence-compress per-head K/V with linear projections:
+/// (n × dh) -> (k × dh).  E is (k × max_len); its first n columns apply
+/// for shorter sequences (training always runs at max_len).
+fn compress(e: &Mat, f: &Mat, kh: &Mat, vh: &Mat) -> (Mat, Mat) {
+    let n = kh.rows;
+    let ecols = slice_cols(e, n);
+    let fcols = slice_cols(f, n);
+    (matmul(&ecols, kh), matmul(&fcols, vh))
+}
+
+/// Resolve the depthwise-conv projection weights for a layer.
+fn conv_weights(
+    params: &Params,
+    cfg: &ModelConfig,
+    layer: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    match cfg.sharing {
+        Sharing::Layerwise => {
+            let w = params.get("proj/conv_w").expect("proj/conv_w").to_vec();
+            (w.clone(), w)
+        }
+        Sharing::Headwise => (
+            params.get(&format!("layer{layer}/conv_w")).unwrap().to_vec(),
+            params.get(&format!("layer{layer}/conv_w_f")).unwrap().to_vec(),
+        ),
+        _ => {
+            let w = params
+                .get(&format!("layer{layer}/conv_w"))
+                .unwrap()
+                .to_vec();
+            (w.clone(), w)
+        }
+    }
+}
+
+fn slice_cols(m: &Mat, n: usize) -> Mat {
+    if m.cols == n {
+        return m.clone();
+    }
+    assert!(n < m.cols);
+    Mat::filled_with(m.rows, n, |r, c| m.at(r, c))
+}
+
+fn pool(x: &Mat, k: usize) -> Mat {
+    let win = x.rows / k;
+    assert!(win > 0 && x.rows % k == 0);
+    Mat::filled_with(k, x.cols, |r, c| {
+        (0..win).map(|w| x.at(r * win + w, c)).sum::<f32>() / win as f32
+    })
+}
+
+fn conv(x: &Mat, w: &[f32], k: usize) -> Mat {
+    let win = x.rows / k;
+    assert_eq!(w.len(), win);
+    Mat::filled_with(k, x.cols, |r, c| {
+        (0..win).map(|i| x.at(r * win + i, c) * w[i]).sum()
+    })
+}
+
+/// MLM head logits for one example: (n × vocab).
+pub fn mlm_logits(params: &Params, cfg: &ModelConfig, tokens: &[u32]) -> Mat {
+    let enc = encode(params, cfg, tokens, false);
+    let mut h = matmul(&enc.hidden, &params.mat("mlm/dense_w").unwrap());
+    h.add_row_vec(params.get("mlm/dense_b").unwrap());
+    gelu_inplace(&mut h);
+    layer_norm_rows(
+        &mut h,
+        params.get("mlm/ln_scale").unwrap(),
+        params.get("mlm/ln_bias").unwrap(),
+        1e-5,
+    );
+    // tied output embedding: logits = h · W_tokᵀ
+    let tok = params.mat("embed/tokens").unwrap(); // (vocab × d)
+    let mut logits = matmul_nt(&h, &tok);
+    logits.add_row_vec(params.get("mlm/out_bias").unwrap());
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn toks(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.below(cfg.vocab_size as u32)).collect()
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 0);
+        let t = toks(&cfg, cfg.max_len, 1);
+        let out = encode(&p, &cfg, &t, false);
+        assert_eq!(out.hidden.rows, cfg.max_len);
+        assert_eq!(out.hidden.cols, cfg.d_model);
+        assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn capture_shapes_linformer_vs_standard() {
+        let mut cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 0);
+        let t = toks(&cfg, cfg.max_len, 2);
+        let cap = encode(&p, &cfg, &t, true).capture.unwrap();
+        assert_eq!(cap.matrices.len(), cfg.n_layers);
+        assert_eq!(cap.matrices[0].len(), cfg.n_heads);
+        assert_eq!(cap.matrices[0][0].rows, cfg.max_len);
+        assert_eq!(cap.matrices[0][0].cols, cfg.k_proj);
+
+        cfg.attention = Attention::Standard;
+        let p = Params::init(&cfg, 0);
+        let cap = encode(&p, &cfg, &t, true).capture.unwrap();
+        assert_eq!(cap.matrices[0][0].cols, cfg.max_len);
+    }
+
+    #[test]
+    fn attention_rows_are_stochastic() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 3);
+        let t = toks(&cfg, cfg.max_len, 3);
+        let cap = encode(&p, &cfg, &t, true).capture.unwrap();
+        for layer in &cap.matrices {
+            for head in layer {
+                for r in 0..head.rows {
+                    let s: f32 = head.row(r).iter().sum();
+                    assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+                    assert!(head.row(r).iter().all(|&x| x >= 0.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mlm_logits_shape() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 4);
+        let t = toks(&cfg, 16, 4);
+        let logits = mlm_logits(&p, &cfg, &t);
+        assert_eq!(logits.rows, 16);
+        assert_eq!(logits.cols, cfg.vocab_size);
+    }
+
+    #[test]
+    fn shorter_sequences_supported() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 5);
+        let t = toks(&cfg, 8, 5);
+        let out = encode(&p, &cfg, &t, false);
+        assert_eq!(out.hidden.rows, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds max_len")]
+    fn overlong_sequence_panics() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 6);
+        let t = vec![0u32; cfg.max_len + 1];
+        encode(&p, &cfg, &t, false);
+    }
+
+    #[test]
+    fn all_sharing_modes_run() {
+        for sharing in [
+            Sharing::None,
+            Sharing::Headwise,
+            Sharing::KeyValue,
+            Sharing::Layerwise,
+        ] {
+            let mut cfg = ModelConfig::tiny();
+            cfg.sharing = sharing;
+            let p = Params::init(&cfg, 7);
+            let t = toks(&cfg, cfg.max_len, 7);
+            let out = encode(&p, &cfg, &t, false);
+            assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn pool_mode_runs() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.proj_mode = ProjMode::Pool;
+        let p = Params::init(&cfg, 8);
+        let t = toks(&cfg, cfg.max_len, 8);
+        let out = encode(&p, &cfg, &t, false);
+        assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+    }
+}

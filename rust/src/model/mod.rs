@@ -1,0 +1,14 @@
+//! Pure-Rust reference model (config, flat parameter store, encoder).
+//!
+//! The serving/training hot path runs the AOT-compiled XLA artifacts via
+//! [`crate::runtime`]; this module is the XLA-independent reference used by
+//! the spectrum analysis (Fig 1), the CPU baselines and the cross-language
+//! integration tests.
+
+pub mod config;
+pub mod encoder;
+pub mod params;
+
+pub use config::{Attention, ModelConfig, ProjMode, Sharing};
+pub use encoder::{encode, mlm_logits, AttnCapture, EncodeOut};
+pub use params::{param_count, param_spec, Params};

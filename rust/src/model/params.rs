@@ -1,0 +1,335 @@
+//! Flat-packed parameter store, mirroring `model.param_spec` in Python.
+//!
+//! The contract: all model parameters live in a single contiguous f32
+//! vector; the ordered `(name, shape)` spec defines each tensor's offset.
+//! `python/compile/aot.py` serializes the spec into the manifest; the Rust
+//! generator below must (and is tested to) reproduce it exactly, so both
+//! languages agree on byte layout — checkpoints and PJRT buffers are
+//! interchangeable.
+
+use super::config::{Attention, ModelConfig, ProjMode, Sharing};
+use crate::util::rng::Pcg32;
+
+/// Ordered parameter spec: (name, shape).
+pub type Spec = Vec<(String, Vec<usize>)>;
+
+/// Generate the canonical spec for a config (mirror of Python
+/// `model.param_spec`).
+pub fn param_spec(cfg: &ModelConfig) -> Spec {
+    let (d, ff, v, n) = (cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.max_len);
+    let mut spec: Spec = vec![
+        ("embed/tokens".into(), vec![v, d]),
+        ("embed/positions".into(), vec![n, d]),
+        ("embed/ln_scale".into(), vec![d]),
+        ("embed/ln_bias".into(), vec![d]),
+    ];
+    for l in 0..cfg.n_layers {
+        let p = format!("layer{l}");
+        for (suffix, shape) in [
+            ("ln1_scale", vec![d]),
+            ("ln1_bias", vec![d]),
+            ("wq", vec![d, d]),
+            ("bq", vec![d]),
+            ("wk", vec![d, d]),
+            ("bk", vec![d]),
+            ("wv", vec![d, d]),
+            ("bv", vec![d]),
+            ("wo", vec![d, d]),
+            ("bo", vec![d]),
+            ("ln2_scale", vec![d]),
+            ("ln2_bias", vec![d]),
+            ("ffn_w1", vec![d, ff]),
+            ("ffn_b1", vec![ff]),
+            ("ffn_w2", vec![ff, d]),
+            ("ffn_b2", vec![d]),
+        ] {
+            spec.push((format!("{p}/{suffix}"), shape));
+        }
+    }
+    spec.extend(proj_param_shapes(cfg));
+    spec.extend([
+        ("final/ln_scale".into(), vec![d]),
+        ("final/ln_bias".into(), vec![d]),
+        ("mlm/dense_w".into(), vec![d, d]),
+        ("mlm/dense_b".into(), vec![d]),
+        ("mlm/ln_scale".into(), vec![d]),
+        ("mlm/ln_bias".into(), vec![d]),
+        ("mlm/out_bias".into(), vec![v]),
+        ("cls/w".into(), vec![d, cfg.num_classes]),
+        ("cls/b".into(), vec![cfg.num_classes]),
+    ]);
+    if !cfg.tie_embeddings {
+        spec.push(("mlm/out_w".into(), vec![d, v]));
+    }
+    spec
+}
+
+fn proj_param_shapes(cfg: &ModelConfig) -> Spec {
+    let mut spec = Spec::new();
+    if cfg.attention != Attention::Linformer || cfg.proj_mode == ProjMode::Pool
+    {
+        return spec;
+    }
+    let n = cfg.max_len;
+    if cfg.proj_mode == ProjMode::Conv {
+        let w = n / cfg.k_proj;
+        match cfg.sharing {
+            Sharing::Layerwise => spec.push(("proj/conv_w".into(), vec![w])),
+            _ => {
+                for l in 0..cfg.n_layers {
+                    spec.push((format!("layer{l}/conv_w"), vec![w]));
+                    if cfg.sharing == Sharing::Headwise {
+                        spec.push((format!("layer{l}/conv_w_f"), vec![w]));
+                    }
+                }
+            }
+        }
+        return spec;
+    }
+    match cfg.sharing {
+        Sharing::Layerwise => {
+            spec.push(("proj/E".into(), vec![cfg.k_proj, n]));
+        }
+        Sharing::KeyValue => {
+            for l in 0..cfg.n_layers {
+                spec.push((format!("layer{l}/E"), vec![cfg.layer_k(l), n]));
+            }
+        }
+        Sharing::Headwise => {
+            for l in 0..cfg.n_layers {
+                let k = cfg.layer_k(l);
+                spec.push((format!("layer{l}/E"), vec![k, n]));
+                spec.push((format!("layer{l}/F"), vec![k, n]));
+            }
+        }
+        Sharing::None => {
+            for l in 0..cfg.n_layers {
+                let k = cfg.layer_k(l);
+                let h = cfg.n_heads;
+                spec.push((format!("layer{l}/E"), vec![h, k, n]));
+                spec.push((format!("layer{l}/F"), vec![h, k, n]));
+            }
+        }
+    }
+    spec
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+pub fn param_count(cfg: &ModelConfig) -> usize {
+    param_spec(cfg).iter().map(|(_, s)| numel(s)).sum()
+}
+
+/// Flat parameter vector with named views.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub flat: Vec<f32>,
+    spec: Spec,
+    offsets: Vec<(String, usize, Vec<usize>)>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParamError {
+    #[error("parameter '{0}' not found")]
+    NotFound(String),
+    #[error("flat vector has {got} floats, spec needs {want}")]
+    SizeMismatch { got: usize, want: usize },
+}
+
+impl Params {
+    pub fn from_flat(flat: Vec<f32>, spec: Spec) -> Result<Params, ParamError> {
+        let want: usize = spec.iter().map(|(_, s)| numel(s)).sum();
+        if flat.len() != want {
+            return Err(ParamError::SizeMismatch { got: flat.len(), want });
+        }
+        let mut offsets = Vec::with_capacity(spec.len());
+        let mut off = 0;
+        for (name, shape) in &spec {
+            offsets.push((name.clone(), off, shape.clone()));
+            off += numel(shape);
+        }
+        Ok(Params { flat, spec, offsets })
+    }
+
+    /// Random initialisation (independent of the Python init — used for
+    /// standalone Rust analyses; artifact-backed flows load `init.bin`).
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Params {
+        let spec = param_spec(cfg);
+        let mut rng = Pcg32::seeded(seed);
+        let mut flat = Vec::with_capacity(param_count(cfg));
+        for (name, shape) in &spec {
+            let n = numel(shape);
+            let start = flat.len();
+            flat.resize(start + n, 0.0);
+            let slice = &mut flat[start..];
+            if name.contains("ln") && name.ends_with("scale") {
+                slice.fill(1.0);
+            } else if name.ends_with("bias")
+                || name.ends_with("/bq")
+                || name.ends_with("/bk")
+                || name.ends_with("/bv")
+                || name.ends_with("/bo")
+                || name.ends_with("_b1")
+                || name.ends_with("_b2")
+                || name.ends_with("/b")
+            {
+                // zero
+            } else if name.contains("/E") || name.contains("/F") {
+                let k = shape[shape.len() - 2] as f32;
+                rng.fill_normal(slice, 1.0 / k.sqrt());
+            } else if name.contains("conv_w") {
+                slice.fill(1.0 / *shape.last().unwrap() as f32);
+            } else {
+                rng.fill_normal(slice, 0.02);
+            }
+        }
+        Params::from_flat(flat, spec).expect("init size")
+    }
+
+    pub fn spec(&self) -> &Spec {
+        &self.spec
+    }
+
+    pub fn len(&self) -> usize {
+        self.flat.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flat.is_empty()
+    }
+
+    fn lookup(&self, name: &str) -> Result<(usize, &[usize]), ParamError> {
+        self.offsets
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, off, shape)| (*off, shape.as_slice()))
+            .ok_or_else(|| ParamError::NotFound(name.to_string()))
+    }
+
+    /// Borrow a named tensor as a flat slice.
+    pub fn get(&self, name: &str) -> Result<&[f32], ParamError> {
+        let (off, shape) = self.lookup(name)?;
+        Ok(&self.flat[off..off + numel(shape)])
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize], ParamError> {
+        Ok(self.lookup(name)?.1)
+    }
+
+    /// Borrow a named 2-D tensor as a [`crate::linalg::Mat`]-shaped view
+    /// (copies — Mat owns its data; fine off the hot path).
+    pub fn mat(&self, name: &str) -> Result<crate::linalg::Mat, ParamError> {
+        let (off, shape) = self.lookup(name)?;
+        let (r, c) = match shape {
+            [r, c] => (*r, *c),
+            [c] => (1usize, *c),
+            _ => (shape[0], numel(&shape[1..])),
+        };
+        Ok(crate::linalg::Mat::from_vec(
+            r,
+            c,
+            self.flat[off..off + r * c].to_vec(),
+        ))
+    }
+
+    /// Sub-matrix of a stacked 3-D tensor (e.g. per-head E of shape
+    /// `[h, k, n]`).
+    pub fn mat3(
+        &self,
+        name: &str,
+        index: usize,
+    ) -> Result<crate::linalg::Mat, ParamError> {
+        let (off, shape) = self.lookup(name)?;
+        assert_eq!(shape.len(), 3, "{name} is not 3-D");
+        let (h, r, c) = (shape[0], shape[1], shape[2]);
+        assert!(index < h);
+        let base = off + index * r * c;
+        Ok(crate::linalg::Mat::from_vec(
+            r,
+            c,
+            self.flat[base..base + r * c].to_vec(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_offsets_contiguous() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 0);
+        let mut off = 0;
+        for (name, shape) in p.spec().clone() {
+            let t = p.get(&name).unwrap();
+            assert_eq!(t.len(), numel(&shape));
+            assert_eq!(t.as_ptr() as usize - p.flat.as_ptr() as usize, off * 4);
+            off += numel(&shape);
+        }
+        assert_eq!(off, p.len());
+    }
+
+    #[test]
+    fn sharing_mode_changes_spec() {
+        let mut cfg = ModelConfig::tiny();
+        let count = |c: &ModelConfig| {
+            param_spec(c)
+                .iter()
+                .filter(|(n, _)| n.contains("/E") || n.contains("/F"))
+                .count()
+        };
+        cfg.sharing = Sharing::Layerwise;
+        assert_eq!(count(&cfg), 1);
+        cfg.sharing = Sharing::KeyValue;
+        assert_eq!(count(&cfg), 2);
+        cfg.sharing = Sharing::Headwise;
+        assert_eq!(count(&cfg), 4);
+        cfg.sharing = Sharing::None;
+        assert_eq!(count(&cfg), 4); // stacked per-head tensors
+        let spec = param_spec(&cfg);
+        let e0 = spec.iter().find(|(n, _)| n == "layer0/E").unwrap();
+        assert_eq!(e0.1, vec![cfg.n_heads, cfg.k_proj, cfg.max_len]);
+    }
+
+    #[test]
+    fn standard_attention_has_no_projections() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.attention = Attention::Standard;
+        assert!(param_spec(&cfg)
+            .iter()
+            .all(|(n, _)| !n.contains("/E") && !n.contains("/F")));
+    }
+
+    #[test]
+    fn ln_scales_init_to_one() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 3);
+        assert!(p.get("embed/ln_scale").unwrap().iter().all(|&x| x == 1.0));
+        assert!(p.get("layer0/bq").unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let cfg = ModelConfig::tiny();
+        let spec = param_spec(&cfg);
+        assert!(matches!(
+            Params::from_flat(vec![0.0; 3], spec),
+            Err(ParamError::SizeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn mat3_indexes_heads() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.sharing = Sharing::None;
+        let p = Params::init(&cfg, 1);
+        let e0 = p.mat3("layer0/E", 0).unwrap();
+        let e1 = p.mat3("layer0/E", 1).unwrap();
+        assert_eq!(e0.rows, cfg.k_proj);
+        assert_eq!(e0.cols, cfg.max_len);
+        assert_ne!(e0.data, e1.data);
+    }
+}

@@ -1,0 +1,328 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `artifacts/manifest.json` describes every exported model (config, flat
+//! parameter spec, initial parameter file) and every lowered program (HLO
+//! file, input signature, output names).  This module parses it and loads
+//! the binary sidecar files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::config::ModelConfig;
+use crate::model::params::Spec;
+use crate::runtime::tensor::DType;
+use crate::util::json::{self, Json};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("io error on {path}: {err}")]
+    Io { path: String, err: std::io::Error },
+    #[error("manifest parse error: {0}")]
+    Parse(String),
+    #[error("model '{0}' not in manifest")]
+    NoModel(String),
+    #[error("program '{1}' not exported for model '{0}'")]
+    NoProgram(String, String),
+    #[error("{0}")]
+    Config(#[from] crate::model::config::ConfigError),
+}
+
+/// One program input slot.
+#[derive(Debug, Clone)]
+pub struct InputSig {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered HLO program.
+#[derive(Debug, Clone)]
+pub struct ProgramInfo {
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<InputSig>,
+    pub outputs: Vec<String>,
+}
+
+/// Golden test vector descriptor (tiny model only).
+#[derive(Debug, Clone)]
+pub struct GoldenFile {
+    pub path: PathBuf,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+/// One exported model.
+#[derive(Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub config: ModelConfig,
+    pub batch: usize,
+    pub param_count: usize,
+    pub param_spec: Spec,
+    pub init_path: PathBuf,
+    pub programs: BTreeMap<String, ProgramInfo>,
+    pub golden: BTreeMap<String, GoldenFile>,
+}
+
+/// Parsed manifest (all models).
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn read_file(path: &Path) -> Result<String, ArtifactError> {
+    std::fs::read_to_string(path).map_err(|err| ArtifactError::Io {
+        path: path.display().to_string(),
+        err,
+    })
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ArtifactError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = read_file(&dir.join("manifest.json"))?;
+        let root = json::parse(&text)
+            .map_err(|e| ArtifactError::Parse(e.to_string()))?;
+        let mut models = BTreeMap::new();
+        let model_obj = root
+            .get("models")
+            .as_obj()
+            .ok_or_else(|| ArtifactError::Parse("missing 'models'".into()))?;
+        for (name, entry) in model_obj {
+            models.insert(name.clone(), parse_model(name, entry, &dir)?);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry, ArtifactError> {
+        self.models
+            .get(name)
+            .ok_or_else(|| ArtifactError::NoModel(name.to_string()))
+    }
+
+    /// Model names, sorted.
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+}
+
+fn parse_model(
+    name: &str,
+    j: &Json,
+    dir: &Path,
+) -> Result<ModelEntry, ArtifactError> {
+    let config = ModelConfig::from_json(j.get("config"))?;
+    let param_count = j
+        .get("param_count")
+        .as_usize()
+        .ok_or_else(|| ArtifactError::Parse(format!("{name}: param_count")))?;
+    let mut param_spec = Spec::new();
+    for item in j.get("param_spec").as_arr().unwrap_or(&[]) {
+        let pname = item
+            .idx(0)
+            .as_str()
+            .ok_or_else(|| ArtifactError::Parse("param_spec name".into()))?;
+        let shape: Vec<usize> = item
+            .idx(1)
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        param_spec.push((pname.to_string(), shape));
+    }
+    let mut programs = BTreeMap::new();
+    if let Some(progs) = j.get("programs").as_obj() {
+        for (pname, pj) in progs {
+            let hlo = pj
+                .get("hlo")
+                .as_str()
+                .ok_or_else(|| ArtifactError::Parse("program hlo".into()))?;
+            let mut inputs = Vec::new();
+            for sig in pj.get("inputs").as_arr().unwrap_or(&[]) {
+                inputs.push(InputSig {
+                    name: sig.get("name").as_str().unwrap_or("?").into(),
+                    dtype: DType::parse(
+                        sig.get("dtype").as_str().unwrap_or("f32"),
+                    )
+                    .ok_or_else(|| {
+                        ArtifactError::Parse("bad dtype".into())
+                    })?,
+                    shape: sig
+                        .get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                });
+            }
+            let outputs = pj
+                .get("outputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|o| o.as_str().map(String::from))
+                .collect();
+            programs.insert(
+                pname.clone(),
+                ProgramInfo { hlo_path: dir.join(hlo), inputs, outputs },
+            );
+        }
+    }
+    let mut golden = BTreeMap::new();
+    if let Some(g) = j.get("golden").as_obj() {
+        for (key, gj) in g {
+            golden.insert(
+                key.clone(),
+                GoldenFile {
+                    path: dir.join(gj.get("file").as_str().unwrap_or("")),
+                    dtype: DType::parse(
+                        gj.get("dtype").as_str().unwrap_or("f32"),
+                    )
+                    .unwrap_or(DType::F32),
+                    shape: gj
+                        .get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                },
+            );
+        }
+    }
+    Ok(ModelEntry {
+        name: name.to_string(),
+        config,
+        batch: j.get("batch").as_usize().unwrap_or(1),
+        param_count,
+        param_spec,
+        init_path: dir.join(j.get("init").as_str().unwrap_or("")),
+        programs,
+        golden,
+    })
+}
+
+impl ModelEntry {
+    pub fn program(&self, name: &str) -> Result<&ProgramInfo, ArtifactError> {
+        self.programs.get(name).ok_or_else(|| {
+            ArtifactError::NoProgram(self.name.clone(), name.to_string())
+        })
+    }
+
+    /// Load the initial flat parameter vector (little-endian f32).
+    pub fn load_init(&self) -> Result<Vec<f32>, ArtifactError> {
+        read_f32(&self.init_path, self.param_count)
+    }
+}
+
+/// Read a little-endian f32 binary file, checking the expected count.
+pub fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>, ArtifactError> {
+    let bytes = std::fs::read(path).map_err(|err| ArtifactError::Io {
+        path: path.display().to_string(),
+        err,
+    })?;
+    if bytes.len() != expect * 4 {
+        return Err(ArtifactError::Parse(format!(
+            "{}: expected {} f32 ({} bytes), file has {} bytes",
+            path.display(),
+            expect,
+            expect * 4,
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a little-endian i32 binary file.
+pub fn read_i32(path: &Path, expect: usize) -> Result<Vec<i32>, ArtifactError> {
+    let bytes = std::fs::read(path).map_err(|err| ArtifactError::Io {
+        path: path.display().to_string(),
+        err,
+    })?;
+    if bytes.len() != expect * 4 {
+        return Err(ArtifactError::Parse(format!(
+            "{}: expected {} i32, got {} bytes",
+            path.display(),
+            expect,
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+      "models": {
+        "m": {
+          "config": {"vocab_size": 512, "max_len": 64, "d_model": 32,
+                     "n_heads": 2, "n_layers": 2, "d_ff": 64,
+                     "attention": "linformer", "k_proj": 16,
+                     "sharing": "layerwise", "proj_mode": "linear",
+                     "k_schedule": null, "num_classes": 2,
+                     "tie_embeddings": true},
+          "batch": 4,
+          "param_count": 100,
+          "param_spec": [["a", [10, 5]], ["b", [50]]],
+          "init": "m.init.bin",
+          "programs": {
+            "fwd": {
+              "hlo": "m.fwd.hlo.txt",
+              "inputs": [
+                {"name": "params", "dtype": "f32", "shape": [100]},
+                {"name": "tokens", "dtype": "i32", "shape": [4, 64]}
+              ],
+              "outputs": ["logits"]
+            }
+          }
+        }
+      }
+    }"#;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    }
+
+    #[test]
+    fn parses_model_entry() {
+        let dir = std::env::temp_dir().join("linformer_manifest_test1");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let entry = m.model("m").unwrap();
+        assert_eq!(entry.batch, 4);
+        assert_eq!(entry.param_count, 100);
+        assert_eq!(entry.param_spec[0], ("a".into(), vec![10, 5]));
+        let prog = entry.program("fwd").unwrap();
+        assert_eq!(prog.inputs.len(), 2);
+        assert_eq!(prog.inputs[1].dtype, DType::I32);
+        assert_eq!(prog.outputs, vec!["logits"]);
+        assert!(m.model("missing").is_err());
+        assert!(entry.program("missing").is_err());
+    }
+
+    #[test]
+    fn read_f32_validates_length() {
+        let dir = std::env::temp_dir().join("linformer_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let data: Vec<u8> =
+            [1.0f32, 2.0, 3.0].iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&p, &data).unwrap();
+        assert_eq!(read_f32(&p, 3).unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(read_f32(&p, 4).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Checkpoint format: flat f32 vectors with a small self-describing header.
+//!
+//! Layout (little-endian):
+//!   magic   "LNFM"          4 bytes
+//!   version u32             4 bytes
+//!   step    u64             8 bytes
+//!   n_slots u32             4 bytes
+//!   per slot: name_len u32, name bytes, count u64, f32 data
+//!
+//! A training checkpoint stores three slots: `params`, `adam_m`, `adam_v`.
+//! Because parameters are flat-packed (see model::params), a checkpoint is
+//! directly executable by any artifact with the same param spec.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LNFM";
+const VERSION: u32 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CkptError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("not a checkpoint (bad magic)")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    BadVersion(u32),
+    #[error("truncated checkpoint")]
+    Truncated,
+    #[error("slot '{0}' missing")]
+    MissingSlot(String),
+}
+
+/// In-memory checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub slots: BTreeMap<String, Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn new(step: u64) -> Checkpoint {
+        Checkpoint { step, slots: BTreeMap::new() }
+    }
+
+    pub fn with_slot(mut self, name: &str, data: Vec<f32>) -> Checkpoint {
+        self.slots.insert(name.to_string(), data);
+        self
+    }
+
+    pub fn slot(&self, name: &str) -> Result<&[f32], CkptError> {
+        self.slots
+            .get(name)
+            .map(Vec::as_slice)
+            .ok_or_else(|| CkptError::MissingSlot(name.to_string()))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), CkptError> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.extend_from_slice(&(self.slots.len() as u32).to_le_bytes());
+        for (name, data) in &self.slots {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            for x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        // atomic-ish write: temp file + rename
+        let tmp = path.as_ref().with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint, CkptError> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8], CkptError> {
+            if *pos + n > bytes.len() {
+                return Err(CkptError::Truncated);
+            }
+            let s = &bytes[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 4)? != MAGIC {
+            return Err(CkptError::BadMagic);
+        }
+        let version =
+            u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        if version != VERSION {
+            return Err(CkptError::BadVersion(version));
+        }
+        let step = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap());
+        let n_slots =
+            u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+        let mut slots = BTreeMap::new();
+        for _ in 0..n_slots {
+            let name_len =
+                u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap())
+                    as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .map_err(|_| CkptError::Truncated)?;
+            let count =
+                u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap())
+                    as usize;
+            let raw = take(&mut pos, count * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            slots.insert(name, data);
+        }
+        Ok(Checkpoint { step, slots })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("linformer_ckpt_{name}"))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint::new(123)
+            .with_slot("params", vec![1.0, -2.5, 3.25])
+            .with_slot("adam_m", vec![0.0; 5]);
+        let p = tmpfile("roundtrip.bin");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.slot("params").unwrap(), &[1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmpfile("badmagic.bin");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(matches!(Checkpoint::load(&p), Err(CkptError::BadMagic)));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let ck = Checkpoint::new(1).with_slot("x", vec![1.0; 100]);
+        let p = tmpfile("trunc.bin");
+        ck.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(matches!(Checkpoint::load(&p), Err(CkptError::Truncated)));
+    }
+
+    #[test]
+    fn missing_slot_reported() {
+        let ck = Checkpoint::new(0);
+        assert!(matches!(
+            ck.slot("params"),
+            Err(CkptError::MissingSlot(_))
+        ));
+    }
+
+    #[test]
+    fn empty_slots_ok() {
+        let p = tmpfile("empty.bin");
+        Checkpoint::new(9).save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.step, 9);
+        assert!(back.slots.is_empty());
+    }
+}

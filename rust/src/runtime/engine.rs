@@ -1,0 +1,281 @@
+//! PJRT engine: load HLO-text artifacts, compile once, execute many.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  HLO *text* is the interchange format
+//! (jax ≥ 0.5 emits 64-bit-id protos that xla_extension 0.5.1 rejects).
+//!
+//! One [`Engine`] per process; one [`Executable`] per (model, program).
+//! Executables validate inputs against the manifest signature before
+//! touching FFI, so shape bugs surface as typed Rust errors.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::runtime::artifact::ProgramInfo;
+use crate::runtime::tensor::Tensor;
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("input {index} ('{name}'): expected {want}, got {got}")]
+    BadInput { index: usize, name: String, want: String, got: String },
+    #[error("program expects {want} inputs, got {got}")]
+    Arity { want: usize, got: usize },
+    #[error("output count mismatch: program declares {want}, runtime returned {got}")]
+    OutputArity { want: usize, got: usize },
+}
+
+impl From<xla::Error> for EngineError {
+    fn from(e: xla::Error) -> Self {
+        EngineError::Xla(e.to_string())
+    }
+}
+
+/// Process-wide PJRT client handle (cheap to clone — Arc inside).
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine, EngineError> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file with its manifest signature.
+    pub fn load_program(
+        &self,
+        info: &ProgramInfo,
+    ) -> Result<Executable, EngineError> {
+        self.load_hlo(&info.hlo_path, info.inputs.len(), info.outputs.len())
+            .map(|mut e| {
+                e.signature = Some(info.clone());
+                e
+            })
+    }
+
+    /// Load + compile an HLO text file without a signature (tests/tools).
+    pub fn load_hlo(
+        &self,
+        path: &Path,
+        n_inputs: usize,
+        n_outputs: usize,
+    ) -> Result<Executable, EngineError> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable {
+            exe: Arc::new(exe),
+            signature: None,
+            n_inputs,
+            n_outputs,
+            compile_time: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// A compiled program, ready to execute.
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    signature: Option<ProgramInfo>,
+    n_inputs: usize,
+    n_outputs: usize,
+    /// Seconds spent in PJRT compilation (reported by the CLI).
+    pub compile_time: f64,
+}
+
+/// A host tensor pre-marshalled into an XLA literal.
+///
+/// Marshalling a large tensor (the flat parameter vector is megabytes)
+/// costs a full copy; inputs that stay constant across calls — serving
+/// parameters above all — should be prepared once via
+/// [`Executable::prepare`] and passed to [`Executable::run_prepared`].
+/// This removed the largest constant from the serving hot path (see
+/// EXPERIMENTS.md §Perf/L3).
+pub struct Prepared {
+    literal: xla::Literal,
+    shape: Vec<usize>,
+    dtype: crate::runtime::tensor::DType,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns host tensors.
+    ///
+    /// The program root is a tuple (aot.py lowers with return_tuple=True);
+    /// it is decomposed into `n_outputs` tensors.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, EngineError> {
+        self.validate(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_, _>>()?;
+        self.execute_literals(&literals)
+    }
+
+    /// Marshal a tensor once for repeated use.
+    pub fn prepare(&self, t: &Tensor) -> Result<Prepared, EngineError> {
+        Ok(Prepared {
+            literal: to_literal(t)?,
+            shape: t.shape().to_vec(),
+            dtype: t.dtype(),
+        })
+    }
+
+    /// Execute with a mix of prepared and fresh inputs, positionally:
+    /// `inputs[i]` is taken from `prepared` when `Some`, else from the
+    /// next entry of `fresh`.
+    pub fn run_prepared(
+        &self,
+        slots: &[Option<&Prepared>],
+        fresh: &[Tensor],
+    ) -> Result<Vec<Tensor>, EngineError> {
+        if slots.len() != self.n_inputs {
+            return Err(EngineError::Arity {
+                want: self.n_inputs,
+                got: slots.len(),
+            });
+        }
+        let mut fresh_iter = fresh.iter();
+        let mut fresh_lits: Vec<Option<xla::Literal>> =
+            Vec::with_capacity(slots.len());
+        // validate shapes against the signature where we have one
+        for (i, slot) in slots.iter().enumerate() {
+            match slot {
+                Some(p) => {
+                    if let Some(sig) = &self.signature {
+                        let s = &sig.inputs[i];
+                        let ok = p.dtype == s.dtype
+                            && (p.shape == s.shape
+                                || (s.shape.is_empty() && p.shape.is_empty()));
+                        if !ok {
+                            return Err(EngineError::BadInput {
+                                index: i,
+                                name: s.name.clone(),
+                                want: format!(
+                                    "{}{:?}",
+                                    s.dtype.name(),
+                                    s.shape
+                                ),
+                                got: format!(
+                                    "{}{:?}",
+                                    p.dtype.name(),
+                                    p.shape
+                                ),
+                            });
+                        }
+                    }
+                    fresh_lits.push(None);
+                }
+                None => {
+                    let t = fresh_iter.next().ok_or(EngineError::Arity {
+                        want: self.n_inputs,
+                        got: fresh.len(),
+                    })?;
+                    fresh_lits.push(Some(to_literal(t)?));
+                }
+            }
+        }
+        let refs: Vec<&xla::Literal> = slots
+            .iter()
+            .zip(&fresh_lits)
+            .map(|(slot, fresh)| match slot {
+                Some(p) => &p.literal,
+                None => fresh.as_ref().expect("fresh literal"),
+            })
+            .collect();
+        self.execute_literals(&refs)
+    }
+
+    fn execute_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        literals: &[L],
+    ) -> Result<Vec<Tensor>, EngineError> {
+        let result = self.exe.execute::<L>(literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        let parts = root.to_tuple()?;
+        if parts.len() != self.n_outputs {
+            return Err(EngineError::OutputArity {
+                want: self.n_outputs,
+                got: parts.len(),
+            });
+        }
+        parts.into_iter().map(|l| from_literal(&l)).collect()
+    }
+
+    /// Number of declared inputs.
+    pub fn arity(&self) -> usize {
+        self.n_inputs
+    }
+
+    fn validate(&self, inputs: &[Tensor]) -> Result<(), EngineError> {
+        if inputs.len() != self.n_inputs {
+            return Err(EngineError::Arity {
+                want: self.n_inputs,
+                got: inputs.len(),
+            });
+        }
+        if let Some(sig) = &self.signature {
+            for (i, (t, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
+                let shape_ok = t.shape() == s.shape.as_slice()
+                    // scalars lower as rank-0; manifest writes []
+                    || (s.shape.is_empty() && t.len() == 1);
+                if t.dtype() != s.dtype || !shape_ok {
+                    return Err(EngineError::BadInput {
+                        index: i,
+                        name: s.name.clone(),
+                        want: format!("{}{:?}", s.dtype.name(), s.shape),
+                        got: format!("{}{:?}", t.dtype().name(), t.shape()),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal, EngineError> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32 { data, .. } => {
+            if dims.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+        Tensor::I32 { data, .. } => {
+            if dims.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+fn from_literal(l: &xla::Literal) -> Result<Tensor, EngineError> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(Tensor::F32 {
+            shape: dims,
+            data: l.to_vec::<f32>()?,
+        }),
+        xla::ElementType::S32 => Ok(Tensor::I32 {
+            shape: dims,
+            data: l.to_vec::<i32>()?,
+        }),
+        other => Err(EngineError::Xla(format!(
+            "unsupported output element type {other:?}"
+        ))),
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 runtime: load and execute the AOT artifacts via PJRT.
+//!
+//! `artifact` parses the manifest contract, `engine` wraps the `xla` crate
+//! (compile once, execute many), `checkpoint` persists flat parameter
+//! vectors, `tensor` is the host-side value type.
+
+pub mod artifact;
+pub mod checkpoint;
+pub mod engine;
+pub mod tensor;
+
+pub use artifact::{ArtifactError, Manifest, ModelEntry, ProgramInfo};
+pub use checkpoint::{Checkpoint, CkptError};
+pub use engine::{Engine, EngineError, Executable};
+pub use tensor::{DType, Tensor, TensorError};

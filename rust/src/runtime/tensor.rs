@@ -1,0 +1,186 @@
+//! Host-side tensors crossing the PJRT boundary.
+
+/// Element type of a tensor (the manifest uses "f32" / "i32").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// A host tensor: shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum TensorError {
+    #[error("shape {shape:?} needs {want} elements, got {got}")]
+    ShapeMismatch { shape: Vec<usize>, want: usize, got: usize },
+    #[error("dtype mismatch: expected {want}, got {got}")]
+    DTypeMismatch { want: &'static str, got: &'static str },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor, TensorError> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            return Err(TensorError::ShapeMismatch {
+                shape,
+                want,
+                got: data.len(),
+            });
+        }
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Tensor, TensorError> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            return Err(TensorError::ShapeMismatch {
+                shape,
+                want,
+                got: data.len(),
+            });
+        }
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    /// Token matrix helper: (batch, len) i32 from u32 ids.
+    pub fn tokens(batch: &[Vec<u32>]) -> Tensor {
+        let rows = batch.len();
+        let cols = batch.first().map_or(0, Vec::len);
+        let mut data = Vec::with_capacity(rows * cols);
+        for row in batch {
+            assert_eq!(row.len(), cols, "ragged token batch");
+            data.extend(row.iter().map(|&t| t as i32));
+        }
+        Tensor::I32 { shape: vec![rows, cols], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32], TensorError> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => Err(TensorError::DTypeMismatch {
+                want: "f32",
+                got: "i32",
+            }),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32], TensorError> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => Err(TensorError::DTypeMismatch {
+                want: "i32",
+                got: "f32",
+            }),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>, TensorError> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => Err(TensorError::DTypeMismatch {
+                want: "f32",
+                got: "i32",
+            }),
+        }
+    }
+
+    /// First element as f32 (for scalar losses).
+    pub fn scalar(&self) -> Option<f32> {
+        match self {
+            Tensor::F32 { data, .. } => data.first().copied(),
+            Tensor::I32 { data, .. } => data.first().map(|&x| x as f32),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(matches!(
+            Tensor::f32(vec![2, 3], vec![0.0; 5]),
+            Err(TensorError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn tokens_packs_rows() {
+        let t = Tensor::tokens(&[vec![1, 2], vec![3, 4]]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.as_i32().unwrap(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let t = Tensor::scalar_f32(2.5);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.scalar(), Some(2.5));
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_batch_panics() {
+        Tensor::tokens(&[vec![1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32"), Some(DType::F32));
+        assert_eq!(DType::parse("i32"), Some(DType::I32));
+        assert_eq!(DType::parse("f64"), None);
+    }
+}

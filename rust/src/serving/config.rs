@@ -1,0 +1,206 @@
+//! Launcher configuration: TOML files → typed runtime configs.
+//!
+//! One file configures the whole deployment (see `configs/serve.toml`):
+//!
+//! ```toml
+//! [serving]
+//! models = ["tiny", "serve_128"]
+//! queue_capacity = 512
+//! max_delay_ms = 10
+//! merge_up = true
+//! cost_model = "linear"        # or "quadratic"
+//! cost_k = 32
+//!
+//! [training]
+//! steps = 200
+//! peak_lr = 0.001
+//! warmup = 20
+//! eval_every = 25
+//! ```
+
+use std::time::Duration;
+
+use crate::coordinator::{BatcherConfig, CostModel};
+use crate::training::{LrSchedule, TrainConfig};
+use crate::util::json::Json;
+use crate::util::toml;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("toml: {0}")]
+    Toml(#[from] toml::TomlError),
+    #[error("config: {0}")]
+    Invalid(String),
+}
+
+/// Parsed launcher file.
+#[derive(Debug)]
+pub struct LauncherConfig {
+    pub models: Vec<String>,
+    pub batcher: BatcherConfig,
+    pub train: TrainConfig,
+    pub artifacts_dir: String,
+}
+
+impl Default for LauncherConfig {
+    fn default() -> Self {
+        LauncherConfig {
+            models: vec!["tiny".into(), "serve_128".into()],
+            batcher: BatcherConfig::default(),
+            train: TrainConfig::default(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl LauncherConfig {
+    pub fn from_file(path: &str) -> Result<LauncherConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<LauncherConfig, ConfigError> {
+        let root = toml::parse(text)?;
+        let mut cfg = LauncherConfig::default();
+        if let Some(dir) = root.get("artifacts").as_str() {
+            cfg.artifacts_dir = dir.to_string();
+        }
+        let serving = root.get("serving");
+        if !serving.is_null() {
+            if let Some(models) = serving.get("models").as_arr() {
+                cfg.models = models
+                    .iter()
+                    .filter_map(Json::as_str)
+                    .map(String::from)
+                    .collect();
+                if cfg.models.is_empty() {
+                    return Err(ConfigError::Invalid(
+                        "serving.models must be non-empty".into(),
+                    ));
+                }
+            }
+            if let Some(c) = serving.get("queue_capacity").as_usize() {
+                cfg.batcher.queue_capacity = c;
+            }
+            if let Some(ms) = serving.get("max_delay_ms").as_f64() {
+                cfg.batcher.max_delay = Duration::from_micros(
+                    (ms * 1000.0) as u64,
+                );
+            }
+            if let Some(m) = serving.get("merge_up").as_bool() {
+                cfg.batcher.merge_up = m;
+            }
+            let k = serving.get("cost_k").as_usize().unwrap_or(32);
+            match serving.get("cost_model").as_str() {
+                Some("linear") | None => {
+                    cfg.batcher.cost_model = CostModel::Linear { k };
+                }
+                Some("quadratic") => {
+                    cfg.batcher.cost_model = CostModel::Quadratic;
+                }
+                Some(o) => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown cost_model '{o}'"
+                    )))
+                }
+            }
+        }
+        let training = root.get("training");
+        if !training.is_null() {
+            let steps = training
+                .get("steps")
+                .as_usize()
+                .unwrap_or(cfg.train.steps);
+            let peak = training
+                .get("peak_lr")
+                .as_f64()
+                .unwrap_or(1e-3) as f32;
+            let warmup = training
+                .get("warmup")
+                .as_usize()
+                .unwrap_or(steps / 10);
+            if warmup > steps {
+                return Err(ConfigError::Invalid(
+                    "training.warmup exceeds steps".into(),
+                ));
+            }
+            cfg.train.steps = steps;
+            cfg.train.schedule = LrSchedule::linear(peak, warmup, steps);
+            if let Some(e) = training.get("eval_every").as_usize() {
+                cfg.train.eval_every = e;
+            }
+            if let Some(s) = training.get("seed").as_usize() {
+                cfg.train.seed = s as u64;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let c = LauncherConfig::from_toml("").unwrap();
+        assert_eq!(c.models, vec!["tiny", "serve_128"]);
+        assert_eq!(c.artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn full_file_parses() {
+        let c = LauncherConfig::from_toml(
+            r#"
+            artifacts = "my_artifacts"
+            [serving]
+            models = ["a", "b"]
+            queue_capacity = 99
+            max_delay_ms = 2.5
+            merge_up = false
+            cost_model = "quadratic"
+            [training]
+            steps = 77
+            peak_lr = 0.01
+            warmup = 7
+            eval_every = 11
+            seed = 5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.models, vec!["a", "b"]);
+        assert_eq!(c.batcher.queue_capacity, 99);
+        assert_eq!(c.batcher.max_delay, Duration::from_micros(2500));
+        assert!(!c.batcher.merge_up);
+        assert_eq!(c.batcher.cost_model, CostModel::Quadratic);
+        assert_eq!(c.train.steps, 77);
+        assert_eq!(c.train.eval_every, 11);
+        assert_eq!(c.train.seed, 5);
+        assert!((c.train.schedule.at(77) - 0.0).abs() < 1e-9);
+        assert_eq!(c.artifacts_dir, "my_artifacts");
+    }
+
+    #[test]
+    fn rejects_bad_cost_model_and_warmup() {
+        assert!(LauncherConfig::from_toml(
+            "[serving]\ncost_model = \"cubic\""
+        )
+        .is_err());
+        assert!(LauncherConfig::from_toml(
+            "[training]\nsteps = 5\nwarmup = 10"
+        )
+        .is_err());
+        assert!(LauncherConfig::from_toml("[serving]\nmodels = []").is_err());
+    }
+
+    #[test]
+    fn linear_cost_k_applied() {
+        let c = LauncherConfig::from_toml(
+            "[serving]\ncost_model = \"linear\"\ncost_k = 64",
+        )
+        .unwrap();
+        assert_eq!(c.batcher.cost_model, CostModel::Linear { k: 64 });
+    }
+}

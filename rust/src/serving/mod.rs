@@ -1,0 +1,199 @@
+//! Serving assembly: wire manifest artifacts into a running
+//! [`Coordinator`] (bucket per model), plus a synthetic client-load
+//! generator used by the examples and benches.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub mod config;
+pub mod trace;
+
+pub use config::LauncherConfig;
+
+use crate::coordinator::{
+    BatchRunner, BatcherConfig, BucketSpec, Coordinator, CostModel,
+    RunnerFactory, XlaRunner,
+};
+use crate::data::{Corpus, CorpusConfig};
+use crate::runtime::{Engine, Manifest};
+use crate::training::TrainError;
+use crate::util::rng::Pcg32;
+
+/// Build a coordinator from manifest models (ascending max_len buckets).
+///
+/// Each named model becomes one bucket backed by its `mlm_logits` program
+/// and `init.bin` (or checkpoint) parameters.  PJRT handles are `!Send`,
+/// so each worker thread creates its own [`Engine`] and compiles its own
+/// executable inside the runner factory.
+pub fn build_coordinator(
+    manifest: &Manifest,
+    model_names: &[&str],
+    config: BatcherConfig,
+) -> Result<Coordinator, TrainError> {
+    let mut entries: Vec<&crate::runtime::ModelEntry> = model_names
+        .iter()
+        .map(|n| manifest.model(n))
+        .collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.config.max_len);
+    let mut buckets: Vec<(BucketSpec, RunnerFactory)> = Vec::new();
+    for entry in entries {
+        let spec = BucketSpec {
+            max_len: entry.config.max_len,
+            batch: entry.batch,
+        };
+        let info = entry.program("mlm_logits")?.clone();
+        let params = entry.load_init()?;
+        let batch = entry.batch;
+        let (len, vocab) = (entry.config.max_len, entry.config.vocab_size);
+        let factory: RunnerFactory = Box::new(move || {
+            let engine = Engine::cpu().map_err(|e| e.to_string())?;
+            let exe =
+                engine.load_program(&info).map_err(|e| e.to_string())?;
+            Ok(Box::new(XlaRunner::new(exe, params, batch, len, vocab))
+                as Box<dyn BatchRunner>)
+        });
+        buckets.push((spec, factory));
+    }
+    Ok(Coordinator::start(buckets, config))
+}
+
+/// Default serving batcher config tuned for the Linformer cost model.
+pub fn default_config(k: usize) -> BatcherConfig {
+    BatcherConfig {
+        max_delay: Duration::from_millis(10),
+        queue_capacity: 512,
+        merge_up: true,
+        cost_model: CostModel::Linear { k },
+    }
+}
+
+/// Result of a synthetic load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub sent: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub mean_latency_s: f64,
+    pub p95_latency_s: f64,
+}
+
+/// Drive `total` requests with mixed lengths through the coordinator from
+/// `clients` threads; lengths are sampled in [1, max_len].
+pub fn run_load(
+    coordinator: &Coordinator,
+    vocab: usize,
+    total: usize,
+    clients: usize,
+    seed: u64,
+) -> LoadReport {
+    let corpus = Arc::new(Corpus::new(
+        CorpusConfig {
+            vocab_words: vocab - crate::data::tokenizer::NUM_SPECIAL as usize,
+            ..CorpusConfig::default()
+        },
+        seed,
+    ));
+    let max_len = coordinator.max_len();
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    let (mut completed, mut rejected) = (0usize, 0usize);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let corpus = Arc::clone(&corpus);
+            let share =
+                total / clients + usize::from(c < total % clients);
+            let coord = &*coordinator;
+            handles.push(scope.spawn(move || {
+                let mut rng = Pcg32::new(seed, c as u64 + 1);
+                let mut lats = Vec::with_capacity(share);
+                let (mut done, mut rej) = (0usize, 0usize);
+                for _ in 0..share {
+                    let len = 1 + rng.below(max_len as u32) as usize;
+                    let tokens = corpus.sequence(len, 0, &mut rng);
+                    match coord.submit(tokens) {
+                        Ok(ticket) => {
+                            match ticket
+                                .wait_timeout(Duration::from_secs(120))
+                            {
+                                Ok(resp) if !resp.predictions.is_empty() => {
+                                    done += 1;
+                                    lats.push(resp.latency_s);
+                                }
+                                _ => rej += 1,
+                            }
+                        }
+                        Err(_) => rej += 1,
+                    }
+                }
+                (done, rej, lats)
+            }));
+        }
+        for h in handles {
+            let (done, rej, lats) = h.join().expect("client thread");
+            completed += done;
+            rejected += rej;
+            latencies.extend(lats);
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / latencies.len() as f64
+    };
+    let p95 = latencies
+        .get(((latencies.len() as f64 * 0.95) as usize).min(
+            latencies.len().saturating_sub(1),
+        ))
+        .copied()
+        .unwrap_or(0.0);
+    LoadReport {
+        sent: total,
+        completed,
+        rejected,
+        wall_s: wall,
+        throughput_rps: completed as f64 / wall,
+        mean_latency_s: mean,
+        p95_latency_s: p95,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockRunner;
+
+    #[test]
+    fn load_generator_round_trips_with_mock() {
+        let mk = |len: usize, cap: usize| {
+            let factory: RunnerFactory = Box::new(move || {
+                Ok(Box::new(MockRunner {
+                    capacity: cap,
+                    len,
+                    delay: Duration::from_millis(1),
+                    fail: false,
+                }) as Box<dyn BatchRunner>)
+            });
+            (BucketSpec { max_len: len, batch: cap }, factory)
+        };
+        let coord =
+            Coordinator::start(vec![mk(32, 4), mk(128, 2)], default_config(32));
+        let report = run_load(&coord, 256, 40, 4, 11);
+        assert_eq!(report.sent, 40);
+        assert_eq!(report.completed + report.rejected, 40);
+        assert!(report.completed > 0);
+        assert!(report.throughput_rps > 0.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn default_config_uses_linear_cost() {
+        let c = default_config(64);
+        assert!(c.merge_up);
+        assert_eq!(c.cost_model, CostModel::Linear { k: 64 });
+    }
+}

@@ -1,0 +1,297 @@
+//! Workload traces: arrival-time + length streams for serving evaluation.
+//!
+//! The paper benchmarks with "randomly generated data up to some sequence
+//! length" (§5.3); production serving evaluations replay *traces*.  This
+//! module synthesizes open-loop traces (Poisson or bursty MMPP-style
+//! arrivals × mixed length distributions), can persist/reload them as
+//! JSON, and replays them against a [`Coordinator`] with correct open-loop
+//! timing (late arrivals are not back-pressured by slow clients).
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Coordinator;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+/// One trace entry: arrival offset + sequence length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub at_s: f64,
+    pub len: usize,
+}
+
+/// Length distribution families seen in long-document serving.
+#[derive(Debug, Clone, Copy)]
+pub enum LengthDist {
+    /// Uniform in [1, max].
+    Uniform { max: usize },
+    /// Mostly short with a heavy tail of long documents:
+    /// P(short) = 0.9 in [1, max/8], else [max/8, max].
+    HeavyTail { max: usize },
+    /// Bimodal chat/document mix.
+    Bimodal { short: usize, long: usize },
+}
+
+impl LengthDist {
+    fn sample(&self, rng: &mut Pcg32) -> usize {
+        match *self {
+            LengthDist::Uniform { max } => 1 + rng.below(max as u32) as usize,
+            LengthDist::HeavyTail { max } => {
+                if rng.chance(0.9) {
+                    1 + rng.below((max / 8).max(1) as u32) as usize
+                } else {
+                    max / 8 + rng.below((max - max / 8).max(1) as u32) as usize
+                }
+            }
+            LengthDist::Bimodal { short, long } => {
+                if rng.chance(0.7) {
+                    1 + rng.below(short as u32) as usize
+                } else {
+                    long / 2 + rng.below((long / 2).max(1) as u32) as usize
+                }
+            }
+        }
+    }
+}
+
+/// Synthesize an open-loop Poisson trace at `rate_rps` for `n` events.
+pub fn poisson_trace(
+    n: usize,
+    rate_rps: f64,
+    dist: LengthDist,
+    seed: u64,
+) -> Vec<TraceEvent> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            // exponential inter-arrival
+            let u = rng.next_f64().max(1e-12);
+            t += -u.ln() / rate_rps;
+            TraceEvent { at_s: t, len: dist.sample(&mut rng) }
+        })
+        .collect()
+}
+
+/// Bursty trace: alternating high/low-rate phases (MMPP-2).
+pub fn bursty_trace(
+    n: usize,
+    base_rps: f64,
+    burst_rps: f64,
+    phase_s: f64,
+    dist: LengthDist,
+    seed: u64,
+) -> Vec<TraceEvent> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            let in_burst = ((t / phase_s) as u64) % 2 == 1;
+            let rate = if in_burst { burst_rps } else { base_rps };
+            let u = rng.next_f64().max(1e-12);
+            t += -u.ln() / rate;
+            TraceEvent { at_s: t, len: dist.sample(&mut rng) }
+        })
+        .collect()
+}
+
+/// Serialize a trace to JSON (replayable across runs/machines).
+pub fn to_json(trace: &[TraceEvent]) -> String {
+    let arr: Vec<Json> = trace
+        .iter()
+        .map(|e| {
+            let mut m = BTreeMap::new();
+            m.insert("at_s".to_string(), Json::Num(e.at_s));
+            m.insert("len".to_string(), Json::Num(e.len as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    Json::Arr(arr).to_string()
+}
+
+/// Parse a trace from JSON.
+pub fn from_json(text: &str) -> Result<Vec<TraceEvent>, String> {
+    let v = crate::util::json::parse(text).map_err(|e| e.to_string())?;
+    let arr = v.as_arr().ok_or("trace must be a JSON array")?;
+    arr.iter()
+        .map(|e| {
+            Ok(TraceEvent {
+                at_s: e.get("at_s").as_f64().ok_or("missing at_s")?,
+                len: e.get("len").as_usize().ok_or("missing len")?,
+            })
+        })
+        .collect()
+}
+
+/// Replay outcome.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub sent: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub wall_s: f64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Fraction of events submitted within 1ms of their trace time
+    /// (open-loop fidelity).
+    pub on_time_frac: f64,
+}
+
+/// Replay a trace open-loop (arrivals follow trace time, optionally
+/// time-scaled; responses are collected on a separate thread so slow
+/// requests never delay later arrivals).
+pub fn replay(
+    coordinator: &Coordinator,
+    trace: &[TraceEvent],
+    vocab: usize,
+    time_scale: f64,
+) -> ReplayReport {
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(trace.len());
+    let mut rejected = 0usize;
+    let mut on_time = 0usize;
+    let mut rng = Pcg32::seeded(99);
+    for ev in trace {
+        let due = ev.at_s * time_scale;
+        let now = t0.elapsed().as_secs_f64();
+        if due > now {
+            std::thread::sleep(Duration::from_secs_f64(due - now));
+        }
+        if (t0.elapsed().as_secs_f64() - due).abs() < 1e-3 {
+            on_time += 1;
+        }
+        let tokens: Vec<u32> = (0..ev.len.max(1))
+            .map(|_| rng.below(vocab as u32))
+            .collect();
+        match coordinator.submit(tokens) {
+            Ok(t) => tickets.push(t),
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut latencies = Vec::with_capacity(tickets.len());
+    let mut completed = 0usize;
+    for t in tickets {
+        match t.wait_timeout(Duration::from_secs(120)) {
+            Ok(r) if !r.predictions.is_empty() => {
+                completed += 1;
+                latencies.push(r.latency_s);
+            }
+            _ => rejected += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<f64>() / latencies.len() as f64
+    };
+    let p99 = latencies
+        .get(((latencies.len() as f64 * 0.99) as usize)
+            .min(latencies.len().saturating_sub(1)))
+        .copied()
+        .unwrap_or(0.0);
+    ReplayReport {
+        sent: trace.len(),
+        completed,
+        rejected,
+        wall_s: wall,
+        mean_latency_s: mean,
+        p99_latency_s: p99,
+        on_time_frac: on_time as f64 / trace.len().max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_is_sorted_and_rate_close() {
+        let t = poisson_trace(2000, 100.0, LengthDist::Uniform { max: 64 }, 1);
+        assert!(t.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        let span = t.last().unwrap().at_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 100.0).abs() < 10.0, "rate {rate}");
+    }
+
+    #[test]
+    fn heavy_tail_is_mostly_short() {
+        let mut rng = Pcg32::seeded(2);
+        let d = LengthDist::HeavyTail { max: 1024 };
+        let lens: Vec<usize> = (0..2000).map(|_| d.sample(&mut rng)).collect();
+        let short = lens.iter().filter(|&&l| l <= 128).count();
+        assert!(short > 1600, "short {short}");
+        assert!(lens.iter().any(|&l| l > 512), "no tail");
+        assert!(lens.iter().all(|&l| (1..=1024).contains(&l)));
+    }
+
+    #[test]
+    fn bursty_trace_has_rate_variation() {
+        let t = bursty_trace(
+            4000,
+            50.0,
+            500.0,
+            0.5,
+            LengthDist::Uniform { max: 32 },
+            3,
+        );
+        // count arrivals per phase window; variance must exceed Poisson's
+        let span = t.last().unwrap().at_s;
+        let windows = (span / 0.5).ceil() as usize;
+        let mut counts = vec![0f64; windows + 1];
+        for e in &t {
+            counts[(e.at_s / 0.5) as usize] += 1.0;
+        }
+        let mean = counts.iter().sum::<f64>() / counts.len() as f64;
+        let var = counts.iter().map(|c| (c - mean) * (c - mean)).sum::<f64>()
+            / counts.len() as f64;
+        assert!(var > 2.0 * mean, "var {var} mean {mean}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = poisson_trace(50, 10.0, LengthDist::Bimodal { short: 32, long: 256 }, 4);
+        let s = to_json(&t);
+        let back = from_json(&s).unwrap();
+        assert_eq!(back.len(), t.len());
+        for (a, b) in t.iter().zip(&back) {
+            assert_eq!(a.len, b.len);
+            assert!((a.at_s - b.at_s).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json("[{\"at_s\": 1}]").is_err());
+        assert!(from_json("not json").is_err());
+    }
+
+    #[test]
+    fn replay_against_mock_coordinator() {
+        use crate::coordinator::{
+            BatcherConfig, BucketSpec, Coordinator, MockRunner, RunnerFactory,
+        };
+        let factory: RunnerFactory = Box::new(|| {
+            Ok(Box::new(MockRunner {
+                capacity: 8,
+                len: 64,
+                delay: Duration::from_millis(1),
+                fail: false,
+            }) as Box<dyn crate::coordinator::BatchRunner>)
+        });
+        let coord = Coordinator::start(
+            vec![(BucketSpec { max_len: 64, batch: 8 }, factory)],
+            BatcherConfig::default(),
+        );
+        let trace =
+            poisson_trace(40, 2000.0, LengthDist::Uniform { max: 64 }, 5);
+        let report = replay(&coord, &trace, 128, 1.0);
+        assert_eq!(report.sent, 40);
+        assert_eq!(report.completed + report.rejected, 40);
+        assert!(report.completed > 30);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,159 @@
+//! Fine-tuning driver for the Table 2 reproduction: classification heads
+//! (`cls_train_step` / `cls_logits` artifacts) on the synthetic GLUE/IMDB
+//! analogues from [`crate::data::tasks`].
+
+use crate::data::tasks::{accuracy, Example, Task, TaskGen};
+use crate::data::CorpusConfig;
+use crate::runtime::tensor::Tensor;
+use crate::runtime::{Engine, ModelEntry};
+use crate::training::schedule::LrSchedule;
+use crate::training::trainer::TrainError;
+use crate::util::rng::Pcg32;
+
+/// Result of fine-tuning one (model, task) pair.
+#[derive(Debug, Clone)]
+pub struct FinetuneResult {
+    pub task: Task,
+    pub train_accuracy: f32,
+    pub eval_accuracy: f32,
+    pub final_loss: f32,
+    pub steps: usize,
+}
+
+pub struct FinetuneConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub train_examples: usize,
+    pub eval_examples: usize,
+    pub seed: u64,
+}
+
+impl Default for FinetuneConfig {
+    fn default() -> Self {
+        FinetuneConfig {
+            steps: 60,
+            lr: 1e-3,
+            train_examples: 512,
+            eval_examples: 128,
+            seed: 0,
+        }
+    }
+}
+
+/// Fine-tune `entry`'s classifier head on `task`, starting from the given
+/// flat params (pretrained or init).
+pub fn finetune(
+    engine: &Engine,
+    entry: &ModelEntry,
+    start_params: Vec<f32>,
+    task: Task,
+    cfg: &FinetuneConfig,
+) -> Result<FinetuneResult, TrainError> {
+    let step_exe = engine.load_program(entry.program("cls_train_step")?)?;
+    let logits_exe = engine.load_program(entry.program("cls_logits")?)?;
+    let batch = entry.batch;
+    let seq = entry.config.max_len;
+
+    let corpus_cfg = CorpusConfig {
+        vocab_words: entry.config.vocab_size
+            - crate::data::tokenizer::NUM_SPECIAL as usize,
+        ..CorpusConfig::default()
+    };
+    let gen = TaskGen::new(task, corpus_cfg, seq, cfg.seed);
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let train = gen.split(cfg.train_examples, &mut rng);
+    let eval = gen.split(cfg.eval_examples, &mut rng);
+
+    let mut params = start_params;
+    let n = params.len();
+    let mut adam_m = vec![0.0f32; n];
+    let mut adam_v = vec![0.0f32; n];
+    let schedule = LrSchedule::constant(cfg.lr);
+    let mut final_loss = f32::NAN;
+
+    for step in 1..=cfg.steps {
+        // sample a batch from the train split
+        let idx: Vec<usize> =
+            (0..batch).map(|_| rng.range_usize(0, train.len())).collect();
+        let rows: Vec<Vec<u32>> =
+            idx.iter().map(|&i| train[i].tokens.clone()).collect();
+        let labels: Vec<i32> =
+            idx.iter().map(|&i| train[i].label as i32).collect();
+        let inputs = [
+            Tensor::F32 { shape: vec![n], data: std::mem::take(&mut params) },
+            Tensor::F32 { shape: vec![n], data: std::mem::take(&mut adam_m) },
+            Tensor::F32 { shape: vec![n], data: std::mem::take(&mut adam_v) },
+            Tensor::scalar_f32(step as f32),
+            Tensor::scalar_f32(schedule.at(step)),
+            Tensor::tokens(&rows),
+            Tensor::I32 { shape: vec![batch], data: labels },
+        ];
+        let mut out = step_exe.run(&inputs)?;
+        final_loss = out[3].scalar().unwrap_or(f32::NAN);
+        adam_v = std::mem::replace(
+            &mut out[2],
+            Tensor::F32 { shape: vec![], data: vec![] },
+        )
+        .into_f32()
+        .expect("adam_v");
+        adam_m = std::mem::replace(
+            &mut out[1],
+            Tensor::F32 { shape: vec![], data: vec![] },
+        )
+        .into_f32()
+        .expect("adam_m");
+        params = std::mem::replace(
+            &mut out[0],
+            Tensor::F32 { shape: vec![], data: vec![] },
+        )
+        .into_f32()
+        .expect("params");
+    }
+
+    let train_acc = eval_accuracy(&logits_exe, &params, &train, batch, entry)?;
+    let eval_acc = eval_accuracy(&logits_exe, &params, &eval, batch, entry)?;
+    Ok(FinetuneResult {
+        task,
+        train_accuracy: train_acc,
+        eval_accuracy: eval_acc,
+        final_loss,
+        steps: cfg.steps,
+    })
+}
+
+fn eval_accuracy(
+    logits_exe: &crate::runtime::Executable,
+    params: &[f32],
+    split: &[Example],
+    batch: usize,
+    entry: &ModelEntry,
+) -> Result<f32, TrainError> {
+    let classes = entry.config.num_classes;
+    let mut preds = Vec::with_capacity(split.len());
+    let mut golds = Vec::with_capacity(split.len());
+    for chunk in split.chunks(batch) {
+        let mut rows: Vec<Vec<u32>> =
+            chunk.iter().map(|e| e.tokens.clone()).collect();
+        while rows.len() < batch {
+            rows.push(rows[0].clone()); // pad with a repeat, ignored below
+        }
+        let inputs = [
+            Tensor::F32 { shape: vec![params.len()], data: params.to_vec() },
+            Tensor::tokens(&rows),
+        ];
+        let out = logits_exe.run(&inputs)?;
+        let logits = out[0].as_f32().expect("logits f32");
+        for (i, ex) in chunk.iter().enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            preds.push(best as u32);
+            golds.push(ex.label);
+        }
+    }
+    Ok(accuracy(&preds, &golds))
+}

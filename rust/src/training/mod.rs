@@ -1,0 +1,10 @@
+//! Training stack: MLM pretraining (Fig 3), fine-tuning (Table 2),
+//! lr schedules, checkpointing.
+
+pub mod finetune;
+pub mod schedule;
+pub mod trainer;
+
+pub use finetune::{finetune, FinetuneConfig, FinetuneResult};
+pub use schedule::{perplexity, LrSchedule};
+pub use trainer::{LogPoint, TrainConfig, TrainError, TrainReport, Trainer};

@@ -1,0 +1,97 @@
+//! Learning-rate schedules.  The AdamW update itself lives inside the
+//! `train_step` HLO artifact; the Rust trainer owns the schedule and feeds
+//! the lr in as a scalar input each step (so schedule changes never require
+//! re-exporting artifacts).
+
+/// Linear warmup then linear decay to zero — the schedule RoBERTa/Devlin
+/// pretraining uses and the paper inherits.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub peak: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    /// Floor as a fraction of peak (0.0 = decay to zero).
+    pub floor_frac: f32,
+}
+
+impl LrSchedule {
+    pub fn linear(peak: f32, warmup: usize, total: usize) -> LrSchedule {
+        assert!(total >= warmup.max(1));
+        LrSchedule {
+            peak,
+            warmup_steps: warmup,
+            total_steps: total,
+            floor_frac: 0.0,
+        }
+    }
+
+    /// Constant lr (used by short fine-tuning runs).
+    pub fn constant(lr: f32) -> LrSchedule {
+        LrSchedule { peak: lr, warmup_steps: 0, total_steps: 1, floor_frac: 1.0 }
+    }
+
+    /// Learning rate at 1-based step `step`.
+    pub fn at(&self, step: usize) -> f32 {
+        let floor = self.peak * self.floor_frac;
+        if self.warmup_steps > 0 && step <= self.warmup_steps {
+            return self.peak * step as f32 / self.warmup_steps as f32;
+        }
+        if step >= self.total_steps {
+            return floor;
+        }
+        let span = (self.total_steps - self.warmup_steps) as f32;
+        let into = (step - self.warmup_steps) as f32;
+        floor + (self.peak - floor) * (1.0 - into / span)
+    }
+}
+
+/// Perplexity from a mean cross-entropy loss (nats).
+pub fn perplexity(loss: f32) -> f32 {
+    loss.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::linear(1.0, 10, 100);
+        assert!((s.at(1) - 0.1).abs() < 1e-6);
+        assert!((s.at(5) - 0.5).abs() < 1e-6);
+        assert!((s.at(10) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decay_reaches_floor() {
+        let s = LrSchedule::linear(1.0, 10, 100);
+        assert!(s.at(55) < 1.0);
+        assert!(s.at(99) > 0.0);
+        assert_eq!(s.at(100), 0.0);
+        assert_eq!(s.at(1000), 0.0);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = LrSchedule::linear(3e-4, 20, 200);
+        let mut prev = f32::INFINITY;
+        for step in 21..=200 {
+            let lr = s.at(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.01);
+        assert_eq!(s.at(1), 0.01);
+        assert_eq!(s.at(10_000), 0.01);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let v = 1024.0f32;
+        assert!((perplexity(v.ln()) - v).abs() / v < 1e-4);
+    }
+}

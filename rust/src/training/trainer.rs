@@ -1,0 +1,291 @@
+//! MLM pretraining driver: the Rust side of the Fig 3 experiments and the
+//! end-to-end `examples/pretrain_mlm.rs`.
+//!
+//! The `train_step` artifact is one fused HLO module (forward + backward +
+//! AdamW); the trainer owns the python-free outer loop: data synthesis,
+//! masking, lr schedule, eval, checkpointing, logging.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::data::masking::{mask_batch, MaskingConfig};
+use crate::data::{Corpus, CorpusConfig};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::{Checkpoint, Engine, EngineError, ModelEntry};
+use crate::training::schedule::{perplexity, LrSchedule};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, thiserror::Error)]
+pub enum TrainError {
+    #[error("engine: {0}")]
+    Engine(#[from] EngineError),
+    #[error("artifact: {0}")]
+    Artifact(#[from] crate::runtime::ArtifactError),
+    #[error("checkpoint: {0}")]
+    Ckpt(#[from] crate::runtime::CkptError),
+    #[error("model '{0}' exports no train_step program")]
+    NotTrainable(String),
+}
+
+/// One recorded point of the training curve.
+#[derive(Debug, Clone)]
+pub struct LogPoint {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub eval_loss: Option<f32>,
+    pub wall_s: f64,
+}
+
+/// Training run report (consumed by EXPERIMENTS.md generation).
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub points: Vec<LogPoint>,
+    pub final_eval_loss: f32,
+    pub final_perplexity: f32,
+    pub steps_per_sec: f64,
+}
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub schedule: LrSchedule,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            schedule: LrSchedule::linear(1e-3, 10, 100),
+            eval_every: 25,
+            eval_batches: 4,
+            log_every: 10,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// The MLM trainer bound to one model's artifacts.
+pub struct Trainer {
+    step_exe: crate::runtime::Executable,
+    eval_exe: Option<crate::runtime::Executable>,
+    pub params: Vec<f32>,
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    batch: usize,
+    seq_len: usize,
+    corpus: Corpus,
+    masking: MaskingConfig,
+    step: usize,
+}
+
+impl Trainer {
+    /// Build from a manifest entry (loads init params, compiles programs).
+    pub fn new(engine: &Engine, entry: &ModelEntry) -> Result<Trainer, TrainError> {
+        let step_info = entry
+            .program("train_step")
+            .map_err(|_| TrainError::NotTrainable(entry.name.clone()))?;
+        let step_exe = engine.load_program(step_info)?;
+        let eval_exe = match entry.program("mlm_loss") {
+            Ok(info) => Some(engine.load_program(info)?),
+            Err(_) => None,
+        };
+        let params = entry.load_init()?;
+        let n = params.len();
+        let corpus_cfg = CorpusConfig {
+            vocab_words: entry.config.vocab_size
+                - crate::data::tokenizer::NUM_SPECIAL as usize,
+            ..CorpusConfig::default()
+        };
+        Ok(Trainer {
+            step_exe,
+            eval_exe,
+            params,
+            adam_m: vec![0.0; n],
+            adam_v: vec![0.0; n],
+            batch: entry.batch,
+            seq_len: entry.config.max_len,
+            corpus: Corpus::new(corpus_cfg, 7),
+            masking: MaskingConfig::bert(entry.config.vocab_size),
+            step: 0,
+        })
+    }
+
+    pub fn current_step(&self) -> usize {
+        self.step
+    }
+
+    /// Synthesize + mask one batch; returns (tokens, labels, weights).
+    fn make_batch(&self, rng: &mut Pcg32) -> (Tensor, Tensor, Tensor) {
+        let seqs = self.corpus.batch(self.batch, self.seq_len, rng);
+        let masked = mask_batch(&seqs, &self.masking, rng);
+        let tokens: Vec<Vec<u32>> =
+            masked.iter().map(|e| e.tokens.clone()).collect();
+        let labels: Vec<Vec<u32>> =
+            masked.iter().map(|e| e.labels.clone()).collect();
+        let mut weights = Vec::with_capacity(self.batch * self.seq_len);
+        for e in &masked {
+            weights.extend_from_slice(&e.weights);
+        }
+        (
+            Tensor::tokens(&tokens),
+            Tensor::tokens(&labels),
+            Tensor::F32 {
+                shape: vec![self.batch, self.seq_len],
+                data: weights,
+            },
+        )
+    }
+
+    /// Run one optimizer step; returns the loss.
+    pub fn train_step(
+        &mut self,
+        lr: f32,
+        rng: &mut Pcg32,
+    ) -> Result<f32, TrainError> {
+        self.step += 1;
+        let (tokens, labels, weights) = self.make_batch(rng);
+        let inputs = [
+            Tensor::F32 {
+                shape: vec![self.params.len()],
+                data: std::mem::take(&mut self.params),
+            },
+            Tensor::F32 {
+                shape: vec![self.adam_m.len()],
+                data: std::mem::take(&mut self.adam_m),
+            },
+            Tensor::F32 {
+                shape: vec![self.adam_v.len()],
+                data: std::mem::take(&mut self.adam_v),
+            },
+            Tensor::scalar_f32(self.step as f32),
+            Tensor::scalar_f32(lr),
+            tokens,
+            labels,
+            weights,
+        ];
+        let mut out = self.step_exe.run(&inputs)?;
+        // outputs: params, adam_m, adam_v, loss
+        let loss = out[3].scalar().unwrap_or(f32::NAN);
+        self.adam_v = std::mem::replace(
+            &mut out[2],
+            Tensor::F32 { shape: vec![], data: vec![] },
+        )
+        .into_f32()
+        .expect("adam_v f32");
+        self.adam_m = std::mem::replace(
+            &mut out[1],
+            Tensor::F32 { shape: vec![], data: vec![] },
+        )
+        .into_f32()
+        .expect("adam_m f32");
+        self.params = std::mem::replace(
+            &mut out[0],
+            Tensor::F32 { shape: vec![], data: vec![] },
+        )
+        .into_f32()
+        .expect("params f32");
+        Ok(loss)
+    }
+
+    /// Mean eval loss over `batches` fresh batches (held-out stream).
+    pub fn evaluate(
+        &self,
+        batches: usize,
+        rng: &mut Pcg32,
+    ) -> Result<f32, TrainError> {
+        let exe = match &self.eval_exe {
+            Some(e) => e,
+            None => return Ok(f32::NAN),
+        };
+        let mut total = 0.0f32;
+        for _ in 0..batches {
+            let (tokens, labels, weights) = self.make_batch(rng);
+            let params = Tensor::F32 {
+                shape: vec![self.params.len()],
+                data: self.params.clone(),
+            };
+            let out = exe.run(&[params, tokens, labels, weights])?;
+            total += out[0].scalar().unwrap_or(f32::NAN);
+        }
+        Ok(total / batches as f32)
+    }
+
+    /// Full training run per `cfg`.
+    pub fn run(&mut self, cfg: &TrainConfig) -> Result<TrainReport, TrainError> {
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let mut eval_rng = Pcg32::new(cfg.seed, 999); // held-out stream
+        let mut report = TrainReport::default();
+        let t0 = Instant::now();
+        for s in 1..=cfg.steps {
+            let lr = cfg.schedule.at(s);
+            let loss = self.train_step(lr, &mut rng)?;
+            let want_eval = cfg.eval_every > 0
+                && (s % cfg.eval_every == 0 || s == cfg.steps);
+            let eval_loss = if want_eval {
+                Some(self.evaluate(cfg.eval_batches, &mut eval_rng)?)
+            } else {
+                None
+            };
+            if s % cfg.log_every == 0 || want_eval || s == 1 {
+                let point = LogPoint {
+                    step: s,
+                    loss,
+                    lr,
+                    eval_loss,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                };
+                if cfg.verbose {
+                    match eval_loss {
+                        Some(e) => println!(
+                            "step {s:>5}  loss {loss:.4}  eval {e:.4}  \
+                             ppl {:.1}  lr {lr:.2e}",
+                            perplexity(e)
+                        ),
+                        None => println!(
+                            "step {s:>5}  loss {loss:.4}  lr {lr:.2e}"
+                        ),
+                    }
+                }
+                report.points.push(point);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        report.steps_per_sec = cfg.steps as f64 / wall;
+        report.final_eval_loss = report
+            .points
+            .iter()
+            .rev()
+            .find_map(|p| p.eval_loss)
+            .unwrap_or(f32::NAN);
+        report.final_perplexity = perplexity(report.final_eval_loss);
+        Ok(report)
+    }
+
+    /// Persist params + optimizer state.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<(), TrainError> {
+        Checkpoint::new(self.step as u64)
+            .with_slot("params", self.params.clone())
+            .with_slot("adam_m", self.adam_m.clone())
+            .with_slot("adam_v", self.adam_v.clone())
+            .save(path)?;
+        Ok(())
+    }
+
+    /// Restore params + optimizer state.
+    pub fn load_checkpoint(&mut self, path: impl AsRef<Path>) -> Result<(), TrainError> {
+        let ck = Checkpoint::load(path)?;
+        self.params = ck.slot("params")?.to_vec();
+        self.adam_m = ck.slot("adam_m")?.to_vec();
+        self.adam_v = ck.slot("adam_v")?.to_vec();
+        self.step = ck.step as usize;
+        Ok(())
+    }
+}

@@ -1,0 +1,191 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Unknown flags are an error, so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    known: Vec<(String, String)>, // (name, help)
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+}
+
+impl Args {
+    /// Parse `argv` against a declared flag set `[(name, help)]`.
+    /// Flags declared with a trailing `!` are boolean (no value).
+    pub fn parse(
+        argv: impl IntoIterator<Item = String>,
+        spec: &[(&str, &str)],
+    ) -> Result<Args, CliError> {
+        let mut args = Args {
+            known: spec
+                .iter()
+                .map(|(n, h)| (n.to_string(), h.to_string()))
+                .collect(),
+            ..Args::default()
+        };
+        let bools: Vec<&str> = spec
+            .iter()
+            .filter(|(n, _)| n.ends_with('!'))
+            .map(|(n, _)| n.trim_end_matches('!'))
+            .collect();
+        let valued: Vec<&str> = spec
+            .iter()
+            .filter(|(n, _)| !n.ends_with('!'))
+            .map(|(n, _)| *n)
+            .collect();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if bools.contains(&key.as_str()) {
+                    args.flags.insert(key, "true".into());
+                } else if valued.contains(&key.as_str()) {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError::MissingValue(key.clone()))?,
+                    };
+                    args.flags.insert(key, val);
+                } else {
+                    return Err(CliError::Unknown(key));
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(key.into(), v.into())),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(key.into(), v.into())),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Usage text from the declared spec.
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("usage: {prog} [flags]\n");
+        for (name, help) in &self.known {
+            let display = if name.ends_with('!') {
+                format!("--{}", name.trim_end_matches('!'))
+            } else {
+                format!("--{name} <value>")
+            };
+            s.push_str(&format!("  {display:28} {help}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    const SPEC: &[(&str, &str)] = &[
+        ("steps", "number of steps"),
+        ("lr", "learning rate"),
+        ("verbose!", "chatty"),
+    ];
+
+    #[test]
+    fn parses_valued_and_bool_flags() {
+        let a = Args::parse(
+            argv(&["--steps", "100", "--verbose", "--lr=0.1", "pos1"]),
+            SPEC,
+        )
+        .unwrap();
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.1);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(argv(&[]), SPEC).unwrap();
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(
+            Args::parse(argv(&["--nope"]), SPEC),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(argv(&["--steps"]), SPEC),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn invalid_value_rejected() {
+        let a = Args::parse(argv(&["--steps", "abc"]), SPEC).unwrap();
+        assert!(matches!(
+            a.usize_or("steps", 0),
+            Err(CliError::Invalid(_, _))
+        ));
+    }
+
+    #[test]
+    fn usage_lists_flags() {
+        let a = Args::parse(argv(&[]), SPEC).unwrap();
+        let u = a.usage("repro");
+        assert!(u.contains("--steps <value>"));
+        assert!(u.contains("--verbose"));
+    }
+}

@@ -1,0 +1,9 @@
+//! From-scratch utility substrates (the offline build has no serde_json,
+//! toml, clap, criterion, proptest or rand — see Cargo.toml).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,103 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Pcg32`]; the runner executes it
+//! for `cases` independent seeds and, on failure, re-raises with the
+//! failing seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! prop_check("batcher never exceeds max_batch", 200, |rng| {
+//!     let reqs = gen_requests(rng);
+//!     ...
+//!     assert!(batch.len() <= max);
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Run `property` for `cases` seeds; panics with the failing seed attached.
+pub fn prop_check(name: &str, cases: u64, property: impl Fn(&mut Pcg32)) {
+    // Honor PROP_SEED for replaying a single failing case.
+    if let Ok(seed) = std::env::var("PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PROP_SEED must be a u64");
+        let mut rng = Pcg32::seeded(seed);
+        property(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x9E37_79B9_7F4A_7C15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(0xDEAD_BEEF);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Pcg32::seeded(seed);
+            property(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers shared by property tests.
+pub mod gen {
+    use super::Pcg32;
+
+    /// Vector of length in [lo, hi) with elements from `f`.
+    pub fn vec_of<T>(
+        rng: &mut Pcg32,
+        lo: usize,
+        hi: usize,
+        mut f: impl FnMut(&mut Pcg32) -> T,
+    ) -> Vec<T> {
+        let len = rng.range_usize(lo, hi);
+        (0..len).map(|_| f(rng)).collect()
+    }
+
+    /// A plausible request length: mixture of short/medium/long.
+    pub fn seq_len(rng: &mut Pcg32, max: usize) -> usize {
+        let bucket = rng.below(3);
+        let hi = match bucket {
+            0 => max / 8,
+            1 => max / 2,
+            _ => max,
+        }
+        .max(2);
+        rng.range_usize(1, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("u32 below bound", 50, |rng| {
+            let b = 1 + rng.below(100);
+            assert!(rng.below(b) < b);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with PROP_SEED=")]
+    fn reports_failing_seed() {
+        prop_check("always fails eventually", 20, |rng| {
+            assert!(rng.next_f32() < 0.5, "drew a large value");
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        prop_check("vec_of bounds", 50, |rng| {
+            let v = gen::vec_of(rng, 2, 10, |r| r.next_u32());
+            assert!((2..10).contains(&v.len()));
+        });
+    }
+}

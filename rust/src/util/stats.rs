@@ -1,0 +1,145 @@
+//! Timing statistics for the benchmark harness (criterion is unavailable
+//! offline, so `cargo bench` targets use this module with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a sample of durations (seconds).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from_secs(mut xs: Vec<f64>) -> Summary {
+        assert!(!xs.is_empty());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n.max(2) as f64;
+        let pct = |p: f64| xs[(((n - 1) as f64) * p).round() as usize];
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: xs[n - 1],
+        }
+    }
+
+    /// Render as "12.3ms ±0.4 (p50 12.1, p95 13.0)".
+    pub fn human(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s >= 1.0 {
+                format!("{s:.3}s")
+            } else if s >= 1e-3 {
+                format!("{:.2}ms", s * 1e3)
+            } else {
+                format!("{:.1}us", s * 1e6)
+            }
+        }
+        format!(
+            "{} ±{} (p50 {}, p95 {}, n={})",
+            fmt(self.mean),
+            fmt(self.std),
+            fmt(self.p50),
+            fmt(self.p95),
+            self.n
+        )
+    }
+}
+
+/// Benchmark runner: warms up, then times `iters` calls of `f`.
+///
+/// `f` returns an opaque value that is black-boxed to stop the optimizer
+/// from deleting the work.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::from_secs(samples)
+}
+
+/// Time-budgeted runner: runs until `budget` elapses (at least `min_iters`).
+pub fn bench_for<T>(
+    budget: Duration,
+    min_iters: usize,
+    mut f: impl FnMut() -> T,
+) -> Summary {
+    black_box(f()); // warmup
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < min_iters || start.elapsed() < budget {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    Summary::from_secs(samples)
+}
+
+/// Optimization barrier (stable-Rust clone of `std::hint::black_box`
+/// semantics via volatile read).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles_ordered() {
+        let s = Summary::from_secs((1..=100).map(|i| i as f64 / 100.0).collect());
+        assert_eq!(s.n, 100);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p99 <= s.max);
+        assert!((s.mean - 0.505).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::from_secs(vec![0.25]);
+        assert_eq!(s.p50, 0.25);
+        assert_eq!(s.max, 0.25);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut calls = 0usize;
+        let s = bench(2, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(s.n, 5);
+        assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn human_formats_scales() {
+        let s = Summary::from_secs(vec![2.0, 2.0]);
+        assert!(s.human().contains("2.000s"));
+        let ms = Summary::from_secs(vec![0.005, 0.005]);
+        assert!(ms.human().contains("5.00ms"));
+        let us = Summary::from_secs(vec![5e-5, 5e-5]);
+        assert!(us.human().contains("50.0us"));
+    }
+}

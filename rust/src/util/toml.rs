@@ -1,0 +1,199 @@
+//! Minimal TOML subset parser for the config system.
+//!
+//! Supports the subset the launcher configs use: `[table.subtable]`
+//! headers, `key = value` with strings, integers, floats, booleans and
+//! homogeneous inline arrays, plus `#` comments.  Values land in the same
+//! [`Json`] tree the manifest uses, so the config layer has one value type.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, TomlError> {
+    Err(TomlError { line, msg: msg.into() })
+}
+
+/// Parse TOML text into a nested `Json::Obj` tree.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix('[') {
+            let header = match header.strip_suffix(']') {
+                Some(h) => h.trim(),
+                None => return err(line_no, "unterminated table header"),
+            };
+            if header.is_empty() {
+                return err(line_no, "empty table header");
+            }
+            current_path =
+                header.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_table(&mut root, &current_path, line_no)?;
+            continue;
+        }
+        let (key, val) = match line.split_once('=') {
+            Some((k, v)) => (k.trim(), v.trim()),
+            None => return err(line_no, "expected 'key = value'"),
+        };
+        if key.is_empty() {
+            return err(line_no, "empty key");
+        }
+        let parsed = parse_value(val, line_no)?;
+        let table = ensure_table(&mut root, &current_path, line_no)?;
+        if table.insert(key.to_string(), parsed).is_some() {
+            return err(line_no, format!("duplicate key '{key}'"));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, Json>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return err(line, format!("'{part}' is not a table")),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Json, TomlError> {
+    let t = text.trim();
+    if t.is_empty() {
+        return err(line, "missing value");
+    }
+    if let Some(inner) = t.strip_prefix('"') {
+        let inner = match inner.strip_suffix('"') {
+            Some(s) => s,
+            None => return err(line, "unterminated string"),
+        };
+        return Ok(Json::Str(inner.replace("\\n", "\n").replace("\\\"", "\"")));
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = match inner.strip_suffix(']') {
+            Some(s) => s,
+            None => return err(line, "unterminated array"),
+        };
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    match t {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    if let Ok(n) = t.parse::<f64>() {
+        return Ok(Json::Num(n));
+    }
+    err(line, format!("cannot parse value '{t}'"))
+}
+
+/// Split on commas that are not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let v = parse("a = 1\nb = \"x\"\nc = true\nd = 2.5").unwrap();
+        assert_eq!(v.get("a").as_f64(), Some(1.0));
+        assert_eq!(v.get("b").as_str(), Some("x"));
+        assert_eq!(v.get("c").as_bool(), Some(true));
+        assert_eq!(v.get("d").as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn parses_tables_and_nesting() {
+        let v = parse("[model]\nd = 64\n[serving.batcher]\nmax = 8").unwrap();
+        assert_eq!(v.get("model").get("d").as_usize(), Some(64));
+        assert_eq!(
+            v.get("serving").get("batcher").get("max").as_usize(),
+            Some(8)
+        );
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("ks = [8, 16, 32]\nnames = [\"a\", \"b\"]").unwrap();
+        assert_eq!(v.get("ks").as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("names").idx(1).as_str(), Some("b"));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let v = parse("# top\na = 1  # trailing\n\nb = \"has # inside\"")
+            .unwrap();
+        assert_eq!(v.get("a").as_usize(), Some(1));
+        assert_eq!(v.get("b").as_str(), Some("has # inside"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("bad value").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("x = \"open").is_err());
+    }
+
+    #[test]
+    fn table_conflict_detected() {
+        assert!(parse("a = 1\n[a]\nb = 2").is_err());
+    }
+}

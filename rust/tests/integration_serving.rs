@@ -1,0 +1,69 @@
+//! End-to-end serving integration: manifest → coordinator (real PJRT
+//! runners in worker threads) → concurrent clients.  Requires
+//! `make artifacts`.
+
+use std::time::Duration;
+
+use linformer::coordinator::BatcherConfig;
+use linformer::runtime::Manifest;
+use linformer::serving;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping serving integration (make artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn serve_tiny_bucket_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let coord = serving::build_coordinator(
+        &m,
+        &["tiny"],
+        BatcherConfig {
+            max_delay: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let entry = m.model("tiny").unwrap();
+    let n = entry.config.max_len;
+    let ticket = coord
+        .submit((0..n / 2).map(|i| (i % entry.config.vocab_size) as u32).collect())
+        .unwrap();
+    let resp = ticket.wait_timeout(Duration::from_secs(120)).unwrap();
+    assert_eq!(resp.predictions.len(), n / 2, "one prediction per token");
+    assert!(resp
+        .predictions
+        .iter()
+        .all(|&p| (p as usize) < entry.config.vocab_size));
+    assert_eq!(resp.bucket_len, n);
+    coord.shutdown();
+}
+
+#[test]
+fn serve_two_buckets_routes_and_completes_under_load() {
+    let Some(m) = manifest() else { return };
+    let coord = serving::build_coordinator(
+        &m,
+        &["tiny", "serve_128"],
+        serving::default_config(32),
+    )
+    .unwrap();
+    // NOTE: tiny (vocab 512) and serve_128 (vocab 2048) — use the smaller
+    // vocab so every token is valid for both buckets.
+    let report = serving::run_load(&coord, 512, 24, 3, 42);
+    assert_eq!(report.completed + report.rejected, 24);
+    assert!(
+        report.completed >= 20,
+        "too many failures: {report:?}"
+    );
+    assert!(coord.metrics.occupancy() > 0.0);
+    let j = coord.metrics.to_json();
+    assert!(j.get("batches").as_usize().unwrap() > 0);
+    coord.shutdown();
+}
