@@ -172,8 +172,45 @@ fn bench_merge_ablation(label: &str, merge_up: bool, cm: CostModel) {
     coord.shutdown();
 }
 
+/// End-to-end with *real* model workers: the pure-Rust batched reference
+/// encoder behind the coordinator (no PJRT, no mocks) — what `repro serve`
+/// runs on a clean machine.
+fn bench_reference_serving() {
+    use linformer::model::{ModelConfig, Params};
+    println!("\n== end-to-end with ReferenceRunner workers (rust encoder) ==");
+    let mut cfg = ModelConfig::tiny();
+    cfg.max_len = 128;
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.d_ff = 128;
+    cfg.k_proj = 32;
+    cfg.vocab_size = 512;
+    let params = Params::init(&cfg, 0);
+    let coord = linformer::serving::build_reference_coordinator(
+        &cfg,
+        &params,
+        &[(64, 8), (128, 4)],
+        BatcherConfig {
+            max_delay: Duration::from_millis(2),
+            queue_capacity: 4096,
+            merge_up: true,
+            cost_model: CostModel::Linear { k: cfg.k_proj },
+        },
+    );
+    let report = run_load(&coord, cfg.vocab_size, 200, 8, 3);
+    println!(
+        "  {:>7.0} req/s   mean {:>7.2}ms   p95 {:>7.2}ms   occupancy {:>5.1}%",
+        report.throughput_rps,
+        report.mean_latency_s * 1e3,
+        report.p95_latency_s * 1e3,
+        coord.metrics.occupancy() * 100.0
+    );
+    coord.shutdown();
+}
+
 fn main() {
     bench_batcher_throughput();
+    bench_reference_serving();
 
     println!("\n== end-to-end with mock workers (2ms service) ==");
     bench_end_to_end(

@@ -1,107 +1,295 @@
-//! Bench: Fig 2 (top right) — inference time vs sequence length through
-//! the real PJRT artifacts (encode program, batch 1).
+//! Bench: Fig 2 (top right) — inference time vs sequence length.
 //!
 //! The paper holds total tokens fixed and shows the Transformer curve
-//! rising with n while Linformer stays flat.  We measure per-token time
-//! (time / n) for the bench-profile artifacts at n ∈ {128..2048(+4096)}.
+//! rising with n while Linformer stays flat.  The default half measures
+//! the pure-Rust reference encoder (scratch-reused, threaded GEMM,
+//! batched via `encode_batch`) so the curve exists on a clean machine;
+//! with `--features pjrt` the artifact-backed half runs too.
 //!
-//! Needs `make artifacts-all` (the `bench` profile); skips missing models.
+//! Every measurement is appended to `BENCH_encoder.json` (section
+//! `fig2_inference`) so future PRs have a perf trajectory.
 //!
 //! Run: `cargo bench --bench fig2_inference`
 
-use linformer::runtime::{Engine, Manifest, Tensor};
+use linformer::linalg::{gemm, Mat, MatView};
+use linformer::model::{
+    encode_batch, encode_with, Attention, EncodeScratch, ModelConfig, Params,
+};
+use linformer::util::json::Json;
 use linformer::util::rng::Pcg32;
-use linformer::util::stats::{bench, Summary};
+use linformer::util::stats::{bench, bench_record, emit_bench_json};
 
-fn measure(
-    engine: &Engine,
-    manifest: &Manifest,
-    model: &str,
-    iters: usize,
-) -> Option<(usize, Summary)> {
-    let entry = manifest.model(model).ok()?;
-    let info = entry.program("encode").ok()?;
-    let exe = engine.load_program(info).ok()?;
-    let params = entry.load_init().ok()?;
-    let n = entry.config.max_len;
-    let mut rng = Pcg32::seeded(3);
-    let tokens: Vec<Vec<u32>> = (0..entry.batch)
-        .map(|_| {
-            (0..n).map(|_| rng.below(entry.config.vocab_size as u32)).collect()
-        })
-        .collect();
-    let p = Tensor::F32 { shape: vec![params.len()], data: params };
-    let t = Tensor::tokens(&tokens);
-    let s = bench(1, iters, || exe.run(&[p.clone(), t.clone()]).unwrap());
-    Some((n, s))
+fn model(n: usize, attention: Attention, k: usize) -> (ModelConfig, Params) {
+    let mut cfg = ModelConfig::tiny();
+    cfg.max_len = n;
+    cfg.attention = attention;
+    cfg.k_proj = k;
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.n_layers = 2;
+    cfg.d_ff = 128;
+    cfg.vocab_size = 1024;
+    let params = Params::init(&cfg, 0);
+    (cfg, params)
+}
+
+fn record(
+    bench_name: &str,
+    attention: &str,
+    n: usize,
+    k: usize,
+    batch: usize,
+    threads: usize,
+    ns_per_token: f64,
+) -> Json {
+    bench_record(&[
+        ("bench", Json::Str(bench_name.into())),
+        ("attention", Json::Str(attention.into())),
+        ("seq_len", Json::Num(n as f64)),
+        ("k", Json::Num(k as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("ns_per_token", Json::Num(ns_per_token)),
+    ])
 }
 
 fn main() {
-    let manifest = match Manifest::load("artifacts") {
-        Ok(m) => m,
-        Err(e) => {
-            println!("fig2_inference: no artifacts ({e}); run `make artifacts-all`");
-            return;
-        }
-    };
-    let engine = Engine::cpu().expect("pjrt cpu");
-    println!("== Fig 2: inference time vs sequence length (batch 1) ==");
+    let threads = gemm::max_threads();
+    let mut records = Vec::new();
+
+    // -- gemm scaling: the kernel the whole hot path stands on ----------
+    println!("== threaded GEMM (512x512x512), {threads} worker cap ==");
+    let mut rng = Pcg32::seeded(1);
+    let mut a = Mat::zeros(512, 512);
+    let mut b = Mat::zeros(512, 512);
+    rng.fill_normal(&mut a.data, 1.0);
+    rng.fill_normal(&mut b.data, 1.0);
+    let mut c = Mat::zeros(0, 0);
+    let serial = bench(1, 5, || {
+        gemm::matmul_view(MatView::full(&a), MatView::full(&b), &mut c, 1);
+        c.data[0]
+    });
+    let par = bench(1, 5, || {
+        gemm::matmul_view(MatView::full(&a), MatView::full(&b), &mut c, threads);
+        c.data[0]
+    });
     println!(
-        "{:>6} {:>16} {:>16} {:>16} {:>10}",
-        "n", "standard", "linformer k=64", "lin k=256", "speedup"
+        "  serial {}   threaded {}   speedup {:.2}x",
+        serial.human(),
+        par.human(),
+        serial.mean / par.mean
     );
-    let mut printed_any = false;
-    for n in [128usize, 256, 512, 1024, 2048] {
-        let iters = if n >= 1024 { 3 } else { 6 };
-        let std = measure(&engine, &manifest, &format!("bench_std_n{n}"), iters);
-        let lin64 =
-            measure(&engine, &manifest, &format!("bench_lin_n{n}_k64"), iters);
-        let lin256 = measure(
-            &engine,
-            &manifest,
-            &format!("bench_lin_n{n}_k256"),
-            iters,
+    records.push(bench_record(&[
+        ("bench", Json::Str("gemm_512".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("serial_s", Json::Num(serial.mean)),
+        ("threaded_s", Json::Num(par.mean)),
+        ("speedup", Json::Num(serial.mean / par.mean)),
+    ]));
+
+    // -- Fig 2: per-token time vs n, rust reference ----------------------
+    println!("\n== Fig 2 (rust reference): per-token time vs n (batch 1) ==");
+    println!(
+        "{:>6} {:>18} {:>18} {:>9}",
+        "n", "standard", "linformer k=64", "speedup"
+    );
+    let mut rng = Pcg32::seeded(3);
+    let mut scratch = EncodeScratch::new();
+    for n in [128usize, 256, 512, 1024] {
+        let iters = if n >= 1024 { 3 } else { 5 };
+        let (scfg, sparams) = model(n, Attention::Standard, 64);
+        let (lcfg, lparams) = model(n, Attention::Linformer, 64);
+        let tokens: Vec<u32> =
+            (0..n).map(|_| rng.below(scfg.vocab_size as u32)).collect();
+        let st = bench(1, iters, || {
+            encode_with(&sparams, &scfg, &tokens, false, &mut scratch)
+                .hidden
+                .data[0]
+        });
+        let lt = bench(1, iters, || {
+            encode_with(&lparams, &lcfg, &tokens, false, &mut scratch)
+                .hidden
+                .data[0]
+        });
+        println!(
+            "{:>6} {:>18} {:>18} {:>8.2}x",
+            n,
+            st.human(),
+            lt.human(),
+            st.mean / lt.mean
         );
-        if std.is_none() && lin64.is_none() {
-            continue;
-        }
-        printed_any = true;
-        let fmt = |x: &Option<(usize, Summary)>| {
-            x.as_ref().map_or("-".to_string(), |(_, s)| s.human())
+        records.push(record(
+            "encode", "standard", n, 0, 1, threads,
+            st.mean * 1e9 / n as f64,
+        ));
+        records.push(record(
+            "encode", "linformer", n, 64, 1, threads,
+            lt.mean * 1e9 / n as f64,
+        ));
+    }
+
+    // -- encode_batch: example-parallel throughput -----------------------
+    println!("\n== encode_batch (linformer k=64, batch 8, ragged) ==");
+    println!("{:>6} {:>16} {:>16} {:>9}", "n", "looped", "batched", "speedup");
+    for n in [256usize, 1024] {
+        let (cfg, params) = model(n, Attention::Linformer, 64);
+        // ragged batch: lengths n, n/2, n, n/4, ... exercises the real
+        // serving mix rather than a uniform best case
+        let seqs: Vec<Vec<u32>> = (0..8)
+            .map(|i| {
+                let len = match i % 3 {
+                    0 => n,
+                    1 => n / 2,
+                    _ => (n / 4).max(1),
+                };
+                (0..len).map(|_| rng.below(cfg.vocab_size as u32)).collect()
+            })
+            .collect();
+        let total_tokens: usize = seqs.iter().map(Vec::len).sum();
+        // looped baseline keeps intra-GEMM threading, so the comparison
+        // is example-parallelism vs matmul-parallelism, not vs serial
+        let looped = bench(1, 3, || {
+            let mut scratch = EncodeScratch::new();
+            seqs.iter()
+                .map(|s| {
+                    encode_with(&params, &cfg, s, false, &mut scratch)
+                        .hidden
+                        .data[0]
+                })
+                .sum::<f32>()
+        });
+        let batched = bench(1, 3, || {
+            encode_batch(&params, &cfg, &seqs)
+                .iter()
+                .map(|m| m.data[0])
+                .sum::<f32>()
+        });
+        println!(
+            "{:>6} {:>16} {:>16} {:>8.2}x",
+            n,
+            looped.human(),
+            batched.human(),
+            looped.mean / batched.mean
+        );
+        records.push(record(
+            "encode_batch", "linformer", n, 64, 8, threads,
+            batched.mean * 1e9 / total_tokens as f64,
+        ));
+    }
+
+    emit_bench_json("BENCH_encoder.json", "fig2_inference", records);
+
+    #[cfg(feature = "pjrt")]
+    pjrt::measured();
+    #[cfg(not(feature = "pjrt"))]
+    println!("\n(pjrt feature off — artifact-measured half skipped)");
+}
+
+/// The original artifact-backed measurement (needs `make artifacts-all`).
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use linformer::runtime::{Engine, Manifest, Tensor};
+    use linformer::util::rng::Pcg32;
+    use linformer::util::stats::{bench, Summary};
+
+    fn measure(
+        engine: &Engine,
+        manifest: &Manifest,
+        model: &str,
+        iters: usize,
+    ) -> Option<(usize, Summary)> {
+        let entry = manifest.model(model).ok()?;
+        let info = entry.program("encode").ok()?;
+        let exe = engine.load_program(info).ok()?;
+        let params = entry.load_init().ok()?;
+        let n = entry.config.max_len;
+        let mut rng = Pcg32::seeded(3);
+        let tokens: Vec<Vec<u32>> = (0..entry.batch)
+            .map(|_| {
+                (0..n)
+                    .map(|_| rng.below(entry.config.vocab_size as u32))
+                    .collect()
+            })
+            .collect();
+        let p = Tensor::F32 { shape: vec![params.len()], data: params };
+        let t = Tensor::tokens(&tokens);
+        let s = bench(1, iters, || exe.run(&[p.clone(), t.clone()]).unwrap());
+        Some((n, s))
+    }
+
+    pub fn measured() {
+        let manifest = match Manifest::load("artifacts") {
+            Ok(m) => m,
+            Err(e) => {
+                println!(
+                    "\nfig2_inference: no artifacts ({e}); run `make artifacts-all`"
+                );
+                return;
+            }
         };
-        let speedup = match (&std, &lin64) {
-            (Some((_, s)), Some((_, l))) => format!("{:.2}x", s.mean / l.mean),
-            _ => "-".into(),
-        };
+        let engine = Engine::cpu().expect("pjrt cpu");
+        println!("\n== Fig 2 (PJRT artifacts): inference time vs n (batch 1) ==");
         println!(
             "{:>6} {:>16} {:>16} {:>16} {:>10}",
-            n,
-            fmt(&std),
-            fmt(&lin64),
-            fmt(&lin256),
-            speedup
+            "n", "standard", "linformer k=64", "lin k=256", "speedup"
         );
-    }
-    // linformer-only tail (standard would be too slow/big to export)
-    for n in [4096usize] {
-        for k in [128usize, 256] {
-            if let Some((_, s)) = measure(
+        let mut printed_any = false;
+        for n in [128usize, 256, 512, 1024, 2048] {
+            let iters = if n >= 1024 { 3 } else { 6 };
+            let std =
+                measure(&engine, &manifest, &format!("bench_std_n{n}"), iters);
+            let lin64 =
+                measure(&engine, &manifest, &format!("bench_lin_n{n}_k64"), iters);
+            let lin256 = measure(
                 &engine,
                 &manifest,
-                &format!("bench_lin_n{n}_k{k}"),
-                2,
-            ) {
-                printed_any = true;
-                println!("{:>6} {:>16} {:>16} (linformer k={k})", n, "-", s.human());
+                &format!("bench_lin_n{n}_k256"),
+                iters,
+            );
+            if std.is_none() && lin64.is_none() {
+                continue;
+            }
+            printed_any = true;
+            let fmt = |x: &Option<(usize, Summary)>| {
+                x.as_ref().map_or("-".to_string(), |(_, s)| s.human())
+            };
+            let speedup = match (&std, &lin64) {
+                (Some((_, s)), Some((_, l))) => format!("{:.2}x", s.mean / l.mean),
+                _ => "-".into(),
+            };
+            println!(
+                "{:>6} {:>16} {:>16} {:>16} {:>10}",
+                n,
+                fmt(&std),
+                fmt(&lin64),
+                fmt(&lin256),
+                speedup
+            );
+        }
+        // linformer-only tail (standard would be too slow/big to export)
+        for n in [4096usize] {
+            for k in [128usize, 256] {
+                if let Some((_, s)) = measure(
+                    &engine,
+                    &manifest,
+                    &format!("bench_lin_n{n}_k{k}"),
+                    2,
+                ) {
+                    printed_any = true;
+                    println!(
+                        "{:>6} {:>16} {:>16} (linformer k={k})",
+                        n, "-", s.human()
+                    );
+                }
             }
         }
-    }
-    if !printed_any {
-        println!("(bench profile not exported — run `make artifacts-all`)");
-    } else {
-        println!(
-            "\nexpected shape (paper Fig 2): standard time/token grows with n; \
-             linformer stays ~flat, speedup grows with n and shrinks with k."
-        );
+        if !printed_any {
+            println!("(bench profile not exported — run `make artifacts-all`)");
+        } else {
+            println!(
+                "\nexpected shape (paper Fig 2): standard time/token grows with n; \
+                 linformer stays ~flat, speedup grows with n and shrinks with k."
+            );
+        }
     }
 }

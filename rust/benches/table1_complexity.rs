@@ -8,7 +8,9 @@
 //! Run: `cargo bench --bench table1_complexity`
 
 use linformer::analysis::complexity::{table1, Arch};
-use linformer::model::{encode, Attention, ModelConfig, Params};
+use linformer::model::{
+    encode_with, Attention, EncodeScratch, ModelConfig, Params,
+};
 use linformer::util::rng::Pcg32;
 use linformer::util::stats::bench;
 
@@ -34,6 +36,9 @@ fn main() {
     );
     let mut prev: Option<(f64, f64)> = None;
     let mut rng = Pcg32::seeded(0);
+    // one scratch for the whole sweep: the steady-state (allocation-free)
+    // hot path is what Table 1 is about
+    let mut scratch = EncodeScratch::new();
     for n in [128usize, 256, 512, 1024] {
         let (scfg, sparams) = model(n, Attention::Standard, 64);
         let (lcfg, lparams) = model(n, Attention::Linformer, 64);
@@ -41,10 +46,14 @@ fn main() {
             (0..n).map(|_| rng.below(scfg.vocab_size as u32)).collect();
         let iters = if n >= 1024 { 3 } else { 5 };
         let std_t = bench(1, iters, || {
-            encode(&sparams, &scfg, &tokens, false).hidden.data[0]
+            encode_with(&sparams, &scfg, &tokens, false, &mut scratch)
+                .hidden
+                .data[0]
         });
         let lin_t = bench(1, iters, || {
-            encode(&lparams, &lcfg, &tokens, false).hidden.data[0]
+            encode_with(&lparams, &lcfg, &tokens, false, &mut scratch)
+                .hidden
+                .data[0]
         });
         println!(
             "{:>6} {:>18} {:>18} {:>8.2}x",

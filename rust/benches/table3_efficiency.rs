@@ -1,84 +1,102 @@
-//! Bench: Table 3 — inference-time speedup (left, measured on PJRT
-//! artifacts) and memory saving (right, activation-byte model) of
-//! Linformer over the Transformer across the (n, k) grid.
+//! Bench: Table 3 — inference-time speedup (left, measured) and memory
+//! saving (right, activation-byte model) of Linformer over the
+//! Transformer across the (n, k) grid.
 //!
-//! Paper grid: n ∈ {512..65536}, k ∈ {128..2048} on a 16 GB V100.  Our
-//! measured grid is scaled (n ≤ 2048 for the standard baseline — CPU
-//! PJRT); the analytic model extends both tables to the paper's full
-//! range, and the *shape* (monotone in n, anti-monotone in k, dashes at
-//! k ≥ n) is the reproduction target.
+//! Paper grid: n ∈ {512..65536}, k ∈ {128..2048} on a 16 GB V100.  The
+//! default measured half runs the pure-Rust reference encoder (threaded
+//! GEMM + scratch reuse), so the grid exists on a clean machine; with
+//! `--features pjrt` the artifact-measured half runs too.  The analytic
+//! model extends both tables to the paper's full range, and the *shape*
+//! (monotone in n, anti-monotone in k, dashes at k ≥ n) is the
+//! reproduction target.
 //!
-//! Needs `make artifacts-all` for the measured half.
+//! Measurements are appended to `BENCH_encoder.json` (section
+//! `table3_efficiency`).
 //!
 //! Run: `cargo bench --bench table3_efficiency`
 
 use linformer::analysis::complexity::speedup_vs_transformer;
 use linformer::analysis::{memory_saving, DEFAULT_BUDGET};
-use linformer::model::{Attention, ModelConfig};
-use linformer::runtime::{Engine, Manifest, Tensor};
+use linformer::linalg::gemm;
+use linformer::model::{
+    encode_with, Attention, EncodeScratch, ModelConfig, Params,
+};
+use linformer::util::json::Json;
 use linformer::util::rng::Pcg32;
-use linformer::util::stats::bench;
+use linformer::util::stats::{bench, bench_record, emit_bench_json};
 
-fn time_model(
-    engine: &Engine,
-    manifest: &Manifest,
-    name: &str,
-    iters: usize,
-) -> Option<f64> {
-    let entry = manifest.model(name).ok()?;
-    let exe = engine.load_program(entry.program("encode").ok()?).ok()?;
-    let params = entry.load_init().ok()?;
-    let n = entry.config.max_len;
-    let mut rng = Pcg32::seeded(1);
-    let tokens: Vec<Vec<u32>> = (0..entry.batch)
-        .map(|_| {
-            (0..n).map(|_| rng.below(entry.config.vocab_size as u32)).collect()
-        })
-        .collect();
-    let p = Tensor::F32 { shape: vec![params.len()], data: params };
-    let t = Tensor::tokens(&tokens);
-    Some(bench(1, iters, || exe.run(&[p.clone(), t.clone()]).unwrap()).mean)
+fn model(n: usize, attention: Attention, k: usize) -> (ModelConfig, Params) {
+    let mut cfg = ModelConfig::tiny();
+    cfg.max_len = n;
+    cfg.attention = attention;
+    cfg.k_proj = k;
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.n_layers = 2;
+    cfg.d_ff = 128;
+    cfg.vocab_size = 1024;
+    let params = Params::init(&cfg, 0);
+    (cfg, params)
 }
 
 fn main() {
-    let ks = [32usize, 64, 128, 256];
-    let ns_measured = [128usize, 256, 512, 1024, 2048];
+    let threads = gemm::max_threads();
+    let ks = [32usize, 64, 128];
+    let ns = [256usize, 512, 1024];
+    let mut records = Vec::new();
 
-    println!("== Table 3 (left): measured time speedup, PJRT CPU ==");
-    match Manifest::load("artifacts") {
-        Err(e) => println!("(skipping measured half: {e})"),
-        Ok(manifest) => {
-            let engine = Engine::cpu().expect("pjrt cpu");
-            print!("{:>7}", "n\\k");
-            for k in ks {
-                print!("{k:>8}");
-            }
-            println!();
-            for n in ns_measured {
-                let iters = if n >= 1024 { 3 } else { 5 };
-                let std =
-                    time_model(&engine, &manifest, &format!("bench_std_n{n}"), iters);
-                print!("{n:>7}");
-                for k in ks {
-                    if k >= n {
-                        print!("{:>8}", "-");
-                        continue;
-                    }
-                    let lin = time_model(
-                        &engine,
-                        &manifest,
-                        &format!("bench_lin_n{n}_k{k}"),
-                        iters,
-                    );
-                    match (std, lin) {
-                        (Some(s), Some(l)) => print!("{:>7.2}x", s / l),
-                        _ => print!("{:>8}", "?"),
-                    }
-                }
-                println!();
-            }
-        }
+    println!("== Table 3 (left): measured time speedup, rust reference ==");
+    print!("{:>7}", "n\\k");
+    for k in ks {
+        print!("{k:>8}");
     }
+    println!();
+    let mut rng = Pcg32::seeded(1);
+    let mut scratch = EncodeScratch::new();
+    for n in ns {
+        let iters = if n >= 1024 { 3 } else { 5 };
+        let (scfg, sparams) = model(n, Attention::Standard, ks[0]);
+        let tokens: Vec<u32> =
+            (0..n).map(|_| rng.below(scfg.vocab_size as u32)).collect();
+        let std_t = bench(1, iters, || {
+            encode_with(&sparams, &scfg, &tokens, false, &mut scratch)
+                .hidden
+                .data[0]
+        })
+        .mean;
+        print!("{n:>7}");
+        for k in ks {
+            if k >= n {
+                print!("{:>8}", "-");
+                continue;
+            }
+            let (lcfg, lparams) = model(n, Attention::Linformer, k);
+            let lin_t = bench(1, iters, || {
+                encode_with(&lparams, &lcfg, &tokens, false, &mut scratch)
+                    .hidden
+                    .data[0]
+            })
+            .mean;
+            print!("{:>7.2}x", std_t / lin_t);
+            records.push(bench_record(&[
+                ("bench", Json::Str("speedup_grid".into())),
+                ("seq_len", Json::Num(n as f64)),
+                ("k", Json::Num(k as f64)),
+                ("batch", Json::Num(1.0)),
+                ("threads", Json::Num(threads as f64)),
+                ("standard_ns_per_token", Json::Num(std_t * 1e9 / n as f64)),
+                ("linformer_ns_per_token", Json::Num(lin_t * 1e9 / n as f64)),
+                ("speedup", Json::Num(std_t / lin_t)),
+            ]));
+        }
+        println!();
+    }
+    emit_bench_json("BENCH_encoder.json", "table3_efficiency", records);
+
+    #[cfg(feature = "pjrt")]
+    pjrt::measured();
+    #[cfg(not(feature = "pjrt"))]
+    println!("\n(pjrt feature off — artifact-measured half skipped)");
 
     println!("\n== Table 3 (left, analytic FLOP model, full paper grid) ==");
     let ns_full = [512usize, 1024, 2048, 4096, 8192, 16384, 32768, 65536];
@@ -137,4 +155,79 @@ fn main() {
          with k; dashes where k >= n.  Paper reports 1.5x/1.7x at (512,128) \
          up to 20x/60x+ at (65536,128)."
     );
+}
+
+/// The original artifact-backed measured half (needs `make artifacts-all`).
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use linformer::runtime::{Engine, Manifest, Tensor};
+    use linformer::util::rng::Pcg32;
+    use linformer::util::stats::bench;
+
+    fn time_model(
+        engine: &Engine,
+        manifest: &Manifest,
+        name: &str,
+        iters: usize,
+    ) -> Option<f64> {
+        let entry = manifest.model(name).ok()?;
+        let exe = engine.load_program(entry.program("encode").ok()?).ok()?;
+        let params = entry.load_init().ok()?;
+        let n = entry.config.max_len;
+        let mut rng = Pcg32::seeded(1);
+        let tokens: Vec<Vec<u32>> = (0..entry.batch)
+            .map(|_| {
+                (0..n)
+                    .map(|_| rng.below(entry.config.vocab_size as u32))
+                    .collect()
+            })
+            .collect();
+        let p = Tensor::F32 { shape: vec![params.len()], data: params };
+        let t = Tensor::tokens(&tokens);
+        Some(bench(1, iters, || exe.run(&[p.clone(), t.clone()]).unwrap()).mean)
+    }
+
+    pub fn measured() {
+        let ks = [32usize, 64, 128, 256];
+        let ns_measured = [128usize, 256, 512, 1024, 2048];
+        println!("\n== Table 3 (left): measured time speedup, PJRT CPU ==");
+        match Manifest::load("artifacts") {
+            Err(e) => println!("(skipping measured half: {e})"),
+            Ok(manifest) => {
+                let engine = Engine::cpu().expect("pjrt cpu");
+                print!("{:>7}", "n\\k");
+                for k in ks {
+                    print!("{k:>8}");
+                }
+                println!();
+                for n in ns_measured {
+                    let iters = if n >= 1024 { 3 } else { 5 };
+                    let std = time_model(
+                        &engine,
+                        &manifest,
+                        &format!("bench_std_n{n}"),
+                        iters,
+                    );
+                    print!("{n:>7}");
+                    for k in ks {
+                        if k >= n {
+                            print!("{:>8}", "-");
+                            continue;
+                        }
+                        let lin = time_model(
+                            &engine,
+                            &manifest,
+                            &format!("bench_lin_n{n}_k{k}"),
+                            iters,
+                        );
+                        match (std, lin) {
+                            (Some(s), Some(l)) => print!("{:>7.2}x", s / l),
+                            _ => print!("{:>8}", "?"),
+                        }
+                    }
+                    println!();
+                }
+            }
+        }
+    }
 }

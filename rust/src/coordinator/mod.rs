@@ -24,7 +24,9 @@ pub mod worker;
 pub use batcher::{Batch, Batcher, BatcherConfig, BucketSpec, CostModel};
 pub use metrics::Metrics;
 pub use request::{Reject, Request, Response};
-pub use worker::{BatchRunner, MockRunner, RunnerFactory, XlaRunner};
+pub use worker::{BatchRunner, MockRunner, ReferenceRunner, RunnerFactory};
+#[cfg(feature = "pjrt")]
+pub use worker::XlaRunner;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};

@@ -1,12 +1,16 @@
-//! Batch execution: the `BatchRunner` abstraction and the PJRT-backed
-//! implementation.
+//! Batch execution: the `BatchRunner` abstraction and its implementations.
 //!
-//! The coordinator is tested against `MockRunner`; production uses
-//! [`XlaRunner`], which pads the batch to the artifact's static shape,
-//! executes the `mlm_logits` program and arg-maxes per position.
+//! The coordinator is tested against `MockRunner`.  Production uses
+//! `XlaRunner` (behind the `pjrt` feature), which pads the batch to the
+//! artifact's static shape, executes the `mlm_logits` program and
+//! arg-maxes per position; [`ReferenceRunner`] serves the same contract
+//! through the pure-Rust batched encoder (`model::mlm_predict_batch`) —
+//! no padding, no XLA — and is the default on machines without PJRT.
 
 use crate::data::tokenizer::PAD;
+use crate::model::{mlm_predict_batch, ModelConfig, Params};
 use crate::runtime::tensor::Tensor;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Executable;
 
 /// Executes one padded batch for one length bucket.
@@ -76,10 +80,77 @@ pub fn argmax_tokens(
     out
 }
 
+/// Pure-Rust runner: executes batches through the reference encoder's
+/// batched MLM path.  Ragged rows run at their true length (no padding to
+/// a static shape) and examples parallelise across cores via
+/// `model::mlm_predict_batch`.
+pub struct ReferenceRunner {
+    params: Params,
+    cfg: ModelConfig,
+    bucket_len: usize,
+    capacity: usize,
+}
+
+impl ReferenceRunner {
+    pub fn new(
+        cfg: ModelConfig,
+        params: Params,
+        bucket_len: usize,
+        capacity: usize,
+    ) -> ReferenceRunner {
+        assert!(
+            bucket_len <= cfg.max_len,
+            "bucket length {bucket_len} exceeds model max_len {}",
+            cfg.max_len
+        );
+        assert!(capacity > 0, "capacity must be positive");
+        ReferenceRunner { params, cfg, bucket_len, capacity }
+    }
+}
+
+impl BatchRunner for ReferenceRunner {
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn bucket_len(&self) -> usize {
+        self.bucket_len
+    }
+
+    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        if rows.len() > self.capacity {
+            return Err(format!(
+                "batch of {} exceeds capacity {}",
+                rows.len(),
+                self.capacity
+            ));
+        }
+        for row in rows {
+            if row.is_empty() {
+                return Err("empty row".into());
+            }
+            if row.len() > self.bucket_len {
+                return Err(format!(
+                    "row of {} tokens exceeds bucket length {}",
+                    row.len(),
+                    self.bucket_len
+                ));
+            }
+            if let Some(&t) =
+                row.iter().find(|&&t| t as usize >= self.cfg.vocab_size)
+            {
+                return Err(format!("token id {t} out of vocab"));
+            }
+        }
+        Ok(mlm_predict_batch(&self.params, &self.cfg, rows))
+    }
+}
+
 /// PJRT-backed runner: one compiled `mlm_logits` executable + its flat
 /// parameter vector, pre-marshalled once (§Perf/L3: parameters are
 /// megabytes and constant across requests — re-marshalling them per batch
 /// was the largest fixed cost on the serving path).
+#[cfg(feature = "pjrt")]
 pub struct XlaRunner {
     exe: Executable,
     params: crate::runtime::engine::Prepared,
@@ -88,6 +159,7 @@ pub struct XlaRunner {
     vocab: usize,
 }
 
+#[cfg(feature = "pjrt")]
 impl XlaRunner {
     pub fn new(
         exe: Executable,
@@ -102,6 +174,7 @@ impl XlaRunner {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl BatchRunner for XlaRunner {
     fn capacity(&self) -> usize {
         self.batch
@@ -194,6 +267,36 @@ mod tests {
         };
         let preds = argmax_tokens(&logits, 1, 2, 3);
         assert_eq!(preds, vec![vec![1, 0]]);
+    }
+
+    #[test]
+    fn reference_runner_serves_ragged_batches() {
+        let cfg = ModelConfig::tiny();
+        let params = Params::init(&cfg, 0);
+        let r = ReferenceRunner::new(cfg.clone(), params, cfg.max_len, 4);
+        assert_eq!(r.capacity(), 4);
+        assert_eq!(r.bucket_len(), cfg.max_len);
+        let rows = vec![vec![1, 2, 3], vec![7; cfg.max_len], vec![5]];
+        let preds = r.run(&rows).unwrap();
+        assert_eq!(preds.len(), 3);
+        for (row, pred) in rows.iter().zip(&preds) {
+            assert_eq!(pred.len(), row.len(), "one prediction per token");
+            assert!(pred.iter().all(|&p| (p as usize) < cfg.vocab_size));
+        }
+        // deterministic: same batch, same predictions
+        assert_eq!(r.run(&rows).unwrap(), preds);
+    }
+
+    #[test]
+    fn reference_runner_rejects_bad_input_without_panicking() {
+        let cfg = ModelConfig::tiny();
+        let params = Params::init(&cfg, 1);
+        let r = ReferenceRunner::new(cfg.clone(), params, 8, 2);
+        assert!(r.run(&[vec![1; 9]]).is_err(), "overlong row");
+        assert!(r.run(&[vec![1], vec![2], vec![3]]).is_err(), "over capacity");
+        assert!(r.run(&[vec![]]).is_err(), "empty row");
+        let bad_token = cfg.vocab_size as u32;
+        assert!(r.run(&[vec![bad_token]]).is_err(), "out-of-vocab token");
     }
 
     #[test]

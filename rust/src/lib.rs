@@ -8,13 +8,43 @@
 //! - **L2** (`python/compile/model.py`): the JAX encoder (all sharing
 //!   modes, nonuniform-k, pool/conv projections) + fused AdamW train step,
 //!   AOT-lowered to HLO text artifacts with a JSON manifest.
-//! - **L3** (this crate): PJRT runtime, serving coordinator (length-
-//!   bucketed dynamic batcher, backpressure, workers, metrics), training
-//!   and fine-tuning drivers, and the analyses behind every paper
-//!   table/figure.
+//! - **L3** (this crate): PJRT runtime (behind the `pjrt` feature),
+//!   serving coordinator (length-bucketed dynamic batcher, backpressure,
+//!   workers, metrics), training and fine-tuning drivers, and the
+//!   analyses behind every paper table/figure.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `repro` binary is self-contained.
+//!
+//! # The pure-Rust hot path
+//!
+//! Without the `pjrt` feature this crate still serves and benches a full
+//! Linformer through [`model::encoder`], which is engineered to be
+//! complexity- rather than overhead-bound:
+//!
+//! - **Zero-copy views.** [`linalg::MatView`] windows a column range of a
+//!   row-major matrix with a stride, so per-head Q/K/V slices, weight
+//!   matrices (via `Params::view`) and length-sliced E/F projections are
+//!   all borrowed straight from the flat parameter store — the hot path
+//!   clones nothing.
+//! - **Scratch reuse.** `model::EncodeScratch` owns every per-layer
+//!   buffer; `encode_with` reuses it across layers and calls, so after a
+//!   warmup call the forward pass allocates no matrix temporaries
+//!   (parameter-name strings remain; see ROADMAP).
+//! - **Threaded GEMM.** `linalg::gemm` row-partitions large products
+//!   across `std::thread::scope` workers (tunable via
+//!   `gemm::set_max_threads` / `LINFORMER_THREADS`, serial below a FLOP
+//!   threshold).  Each output row is computed by one worker with a fixed
+//!   accumulation order, so results are **bitwise identical for any
+//!   thread count** — the determinism guarantee the whole stack leans on.
+//! - **Example-level batching.** `model::encode_batch` /
+//!   `mlm_predict_batch` stripe a (possibly ragged) batch across workers,
+//!   each with a serial scratch; `coordinator::ReferenceRunner` exposes
+//!   that as a `BatchRunner`, making the coordinator/batcher stack fully
+//!   functional — end to end — without XLA.
+//!
+//! Bench trajectories for this path land in `BENCH_encoder.json` (see
+//! `benches/fig2_inference.rs` and `benches/table3_efficiency.rs`).
 
 pub mod analysis;
 pub mod coordinator;

@@ -1,63 +1,243 @@
-//! Blocked single-threaded f32 GEMM.
+//! Blocked, optionally multi-threaded f32 GEMM over [`Mat`] and strided
+//! [`MatView`]s.
 //!
 //! `matmul` computes `C = A·B`, `matmul_nt` computes `C = A·Bᵀ` (the layout
 //! attention wants for Q·Kᵀ without materialising a transpose).  Both use
-//! cache blocking plus an 8-wide unrolled inner kernel; good enough that the
-//! Rust reference model is compute- rather than overhead-bound.
+//! cache blocking plus an 8-wide unrolled inner kernel, and above
+//! [`PAR_FLOP_THRESHOLD`] they row-partition the output across
+//! `std::thread::scope` workers (no dependencies, no thread pool to poison).
+//!
+//! # Determinism
+//!
+//! Every output row is produced by exactly one worker running the same
+//! serial per-row kernel in the same accumulation order (ascending `k`),
+//! so results are **bitwise identical** for any thread count — the
+//! `threaded_matches_serial_bitwise` test pins this down.  This is what
+//! lets `encode_batch` parallelise freely while still matching per-example
+//! `encode` bit-for-bit.
+//!
+//! # NaN/Inf propagation
+//!
+//! The old serial kernel skipped `A[i][k] == 0.0` rows of B as a sparsity
+//! fast path, which silently dropped NaN/Inf coming from B
+//! (`0.0 * NaN = NaN` must surface).  The branch is gone; the
+//! `nan_propagates_through_zero_entries` test keeps it gone.
 
-use super::Mat;
+use super::{Mat, MatView};
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 const BLOCK_M: usize = 64;
 const BLOCK_N: usize = 64;
 const BLOCK_K: usize = 256;
 
-/// C = A (m×k) · B (k×n).
+/// Below this many FLOPs (2·m·k·n) a GEMM stays serial: thread spawn and
+/// join overhead (~tens of µs) would dominate the kernel.
+pub const PAR_FLOP_THRESHOLD: usize = 1 << 22;
+
+/// Process-wide worker cap (0 = not yet resolved).
+static THREAD_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap the number of GEMM worker threads (also settable via the
+/// `LINFORMER_THREADS` env var; defaults to `available_parallelism`).
+pub fn set_max_threads(n: usize) {
+    THREAD_CAP.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Resolved worker cap for this process.
+pub fn max_threads() -> usize {
+    let t = THREAD_CAP.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let t = std::env::var("LINFORMER_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        });
+    THREAD_CAP.store(t, Ordering::Relaxed);
+    t
+}
+
+/// Worker count for an (m × k) · (k × n) product under a caller cap:
+/// 1 below [`PAR_FLOP_THRESHOLD`], else `cap` clamped to the row count.
+pub fn plan_threads(m: usize, k: usize, n: usize, cap: usize) -> usize {
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(k)
+        .saturating_mul(n);
+    if flops < PAR_FLOP_THRESHOLD {
+        1
+    } else {
+        cap.min(m).max(1)
+    }
+}
+
+/// C = A (m×k) · B (k×n), auto-threaded.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(0, 0);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A·B into a reusable output buffer (resized in place, no
+/// reallocation once its capacity suffices).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let t = plan_threads(a.rows, a.cols, b.cols, max_threads());
+    matmul_view(MatView::full(a), MatView::full(b), c, t);
+}
+
+/// C = A (m×k) · Bᵀ where B is (n×k): dot products of rows, auto-threaded.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(0, 0);
+    matmul_nt_into(a, b, &mut c);
+    c
+}
+
+/// C = A·Bᵀ into a reusable output buffer.
+pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let t = plan_threads(a.rows, a.cols, b.rows, max_threads());
+    matmul_nt_view(MatView::full(a), MatView::full(b), c, t);
+}
+
+/// C = A·B over strided views with an explicit worker count.  `c` is
+/// resized (allocation-free after warmup) and fully overwritten.
+pub fn matmul_view(a: MatView<'_>, b: MatView<'_>, c: &mut Mat, threads: usize) {
     assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
-    for i0 in (0..m).step_by(BLOCK_M) {
-        let i1 = (i0 + BLOCK_M).min(m);
+    c.reset(a.rows, b.cols);
+    let (m, n) = (a.rows, b.cols);
+    if m == 0 || n == 0 || a.cols == 0 {
+        return;
+    }
+    let t = threads.clamp(1, m);
+    if t == 1 {
+        mm_rows(a, b, &mut c.data, 0);
+        return;
+    }
+    let rows_per = (m + t - 1) / t;
+    std::thread::scope(|s| {
+        for (w, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || mm_rows(a, b, chunk, w * rows_per));
+        }
+    });
+}
+
+/// C = A·Bᵀ over strided views with an explicit worker count.
+pub fn matmul_nt_view(a: MatView<'_>, b: MatView<'_>, c: &mut Mat, threads: usize) {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dims: {} vs {}", a.cols, b.cols);
+    c.reset(a.rows, b.rows);
+    let (m, n) = (a.rows, b.rows);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let t = threads.clamp(1, m);
+    if t == 1 {
+        mmnt_rows(a, b, &mut c.data, 0);
+        return;
+    }
+    let rows_per = (m + t - 1) / t;
+    std::thread::scope(|s| {
+        for (w, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || mmnt_rows(a, b, chunk, w * rows_per));
+        }
+    });
+}
+
+/// `out[:, col0..col0+b.cols] = A·B` — writes the product into a column
+/// block of a wider row-major matrix (the per-head context slot), with no
+/// intermediate buffer.  Rows outside the block are untouched.
+pub fn matmul_view_cols(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    out: &mut Mat,
+    col0: usize,
+    threads: usize,
+) {
+    assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
+    assert_eq!(a.rows, out.rows, "matmul_view_cols: row mismatch");
+    assert!(col0 + b.cols <= out.cols, "matmul_view_cols: column overflow");
+    let (m, stride) = (a.rows, out.cols);
+    if m == 0 || b.cols == 0 {
+        return;
+    }
+    let t = threads.clamp(1, m);
+    if t == 1 {
+        mm_cols_rows(a, b, &mut out.data, 0, col0, stride);
+        return;
+    }
+    let rows_per = (m + t - 1) / t;
+    std::thread::scope(|s| {
+        for (w, chunk) in out.data.chunks_mut(rows_per * stride).enumerate() {
+            s.spawn(move || mm_cols_rows(a, b, chunk, w * rows_per, col0, stride));
+        }
+    });
+}
+
+/// Serial blocked kernel over output rows `row0..row0 + c.len()/n` of A·B.
+/// `c` is the contiguous, zeroed output block for those rows.
+fn mm_rows(a: MatView<'_>, b: MatView<'_>, c: &mut [f32], row0: usize) {
+    let k = a.cols;
+    let n = b.cols;
+    let rows = c.len() / n;
+    for i0 in (0..rows).step_by(BLOCK_M) {
+        let i1 = (i0 + BLOCK_M).min(rows);
         for k0 in (0..k).step_by(BLOCK_K) {
             let k1 = (k0 + BLOCK_K).min(k);
             for j0 in (0..n).step_by(BLOCK_N) {
                 let j1 = (j0 + BLOCK_N).min(n);
                 for i in i0..i1 {
-                    let arow = &a.data[i * k..(i + 1) * k];
-                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    let arow = a.row(row0 + i);
+                    let crow = &mut c[i * n..(i + 1) * n];
                     for kk in k0..k1 {
-                        let av = arow[kk];
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b.data[kk * n..(kk + 1) * n];
-                        axpy(av, &brow[j0..j1], &mut crow[j0..j1]);
+                        // no zero-skip: 0.0 * NaN must stay NaN
+                        axpy(arow[kk], &b.row(kk)[j0..j1], &mut crow[j0..j1]);
                     }
                 }
             }
         }
     }
-    c
 }
 
-/// C = A (m×k) · Bᵀ where B is (n×k): dot products of rows.
-pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.cols, "matmul_nt inner dims: {} vs {}", a.cols, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
-        for j in 0..n {
-            crow[j] = dot(arow, &b.data[j * k..(j + 1) * k]);
+/// Serial kernel over output rows of A·Bᵀ.
+fn mmnt_rows(a: MatView<'_>, b: MatView<'_>, c: &mut [f32], row0: usize) {
+    let n = b.rows;
+    let rows = c.len() / n;
+    for i in 0..rows {
+        let arow = a.row(row0 + i);
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv = dot(arow, b.row(j));
         }
     }
-    c
+}
+
+/// Serial kernel writing A·B into columns `[col0, col0+b.cols)` of a
+/// stride-`stride` output block.
+fn mm_cols_rows(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    chunk: &mut [f32],
+    row0: usize,
+    col0: usize,
+    stride: usize,
+) {
+    let rows = chunk.len() / stride;
+    let w = b.cols;
+    for i in 0..rows {
+        let arow = a.row(row0 + i);
+        let base = i * stride + col0;
+        let crow = &mut chunk[base..base + w];
+        crow.fill(0.0);
+        for (kk, &av) in arow.iter().enumerate() {
+            axpy(av, b.row(kk), crow);
+        }
+    }
 }
 
 /// y += alpha * x, 8-way unrolled.
 #[inline]
-fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+pub(crate) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     let n = x.len().min(y.len());
     let chunks = n / 8;
     for c in 0..chunks {
@@ -136,6 +316,116 @@ mod tests {
                 got.max_abs_diff(&want)
             );
         }
+    }
+
+    #[test]
+    fn threaded_matches_serial_bitwise() {
+        let mut rng = Pcg32::seeded(9);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (65, 130, 70), (64, 64, 64)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let (av, bv) = (MatView::full(&a), MatView::full(&b));
+            let mut serial = Mat::zeros(0, 0);
+            matmul_view(av, bv, &mut serial, 1);
+            for threads in [2, 3, 4, 7] {
+                let mut par = Mat::zeros(0, 0);
+                matmul_view(av, bv, &mut par, threads);
+                assert_eq!(
+                    serial.data, par.data,
+                    "({m},{k},{n}) with {threads} threads is not bitwise equal"
+                );
+            }
+            // same property for the transposed kernel
+            let bt = rand_mat(&mut rng, n, k);
+            let btv = MatView::full(&bt);
+            let mut serial = Mat::zeros(0, 0);
+            matmul_nt_view(av, btv, &mut serial, 1);
+            for threads in [2, 5] {
+                let mut par = Mat::zeros(0, 0);
+                matmul_nt_view(av, btv, &mut par, threads);
+                assert_eq!(serial.data, par.data);
+            }
+        }
+    }
+
+    #[test]
+    fn nan_propagates_through_zero_entries() {
+        // A has a 0.0 exactly where B carries NaN / Inf: the product must
+        // be NaN (0·NaN = NaN, 0·Inf = NaN) — the old zero-skip ate it.
+        let a = Mat::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Mat::from_vec(2, 2, vec![f32::NAN, f32::INFINITY, 3.0, 4.0]);
+        let c = matmul(&a, &b);
+        assert!(c.at(0, 0).is_nan(), "NaN dropped: {}", c.at(0, 0));
+        assert!(c.at(0, 1).is_nan(), "Inf·0 dropped: {}", c.at(0, 1));
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer() {
+        let mut rng = Pcg32::seeded(4);
+        let a = rand_mat(&mut rng, 9, 11);
+        let b = rand_mat(&mut rng, 11, 5);
+        let mut c = Mat::zeros(0, 0);
+        matmul_into(&a, &b, &mut c);
+        let want = c.clone();
+        let ptr = c.data.as_ptr();
+        let cap = c.data.capacity();
+        // stale garbage in the buffer must not leak into the next product
+        c.data.iter_mut().for_each(|x| *x = f32::NAN);
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.data, want.data);
+        assert_eq!(c.data.as_ptr(), ptr, "buffer was reallocated");
+        assert_eq!(c.data.capacity(), cap);
+    }
+
+    #[test]
+    fn strided_views_match_materialized_slices() {
+        let mut rng = Pcg32::seeded(5);
+        let packed = rand_mat(&mut rng, 13, 12); // 3 heads × 4 cols
+        let other = rand_mat(&mut rng, 13, 4);
+        for head in 0..3 {
+            let view = MatView::cols(&packed, head * 4, 4);
+            let copy = view.to_mat();
+            assert_eq!(copy.rows, 13);
+            assert_eq!(copy.cols, 4);
+            // view GEMM == owned GEMM, bitwise
+            let mut from_view = Mat::zeros(0, 0);
+            matmul_nt_view(view, MatView::full(&other), &mut from_view, 1);
+            let want = matmul_nt(&copy, &other);
+            assert_eq!(from_view.data, want.data);
+        }
+    }
+
+    #[test]
+    fn view_cols_writes_only_its_block() {
+        let mut rng = Pcg32::seeded(6);
+        let logits = rand_mat(&mut rng, 7, 5);
+        let v = rand_mat(&mut rng, 5, 3);
+        let want = matmul(&logits, &v);
+        let mut ctx = Mat::filled_with(7, 10, |_, _| 99.0);
+        for threads in [1, 3] {
+            matmul_view_cols(
+                MatView::full(&logits),
+                MatView::full(&v),
+                &mut ctx,
+                4,
+                threads,
+            );
+            for r in 0..7 {
+                for c in 0..3 {
+                    assert_eq!(ctx.at(r, 4 + c), want.at(r, c));
+                }
+                assert_eq!(ctx.at(r, 0), 99.0, "wrote outside the block");
+                assert_eq!(ctx.at(r, 9), 99.0, "wrote outside the block");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_threads_keeps_small_gemms_serial() {
+        assert_eq!(plan_threads(32, 16, 16, 8), 1);
+        assert!(plan_threads(512, 512, 512, 8) > 1);
+        // never more workers than rows
+        assert_eq!(plan_threads(2, 4096, 4096, 8), 2);
     }
 
     #[test]

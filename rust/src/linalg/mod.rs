@@ -3,14 +3,16 @@
 //! Used by (a) the pure-Rust reference transformer in [`crate::model`]
 //! (the CPU baseline independent of XLA), (b) the Fig 1 spectrum analysis
 //! (SVD of attention matrices), and (c) assorted substrates.  Not intended
-//! to compete with BLAS — the XLA runtime owns the hot path — but the gemm
-//! is blocked and unrolled enough to make the Rust baseline respectable
-//! (see EXPERIMENTS.md §Perf).
+//! to compete with BLAS — but the gemm is blocked, unrolled and
+//! multi-threaded (see [`gemm`]) so the Rust baseline is compute- rather
+//! than overhead-bound, and [`MatView`] gives zero-copy strided access to
+//! sub-matrices (per-head Q/K/V slices, parameter tensors, sliced E/F
+//! projections) so the encoder hot path never copies its inputs.
 
 pub mod gemm;
 pub mod svd;
 
-pub use gemm::{matmul, matmul_nt};
+pub use gemm::{matmul, matmul_into, matmul_nt, matmul_nt_into};
 
 /// Dense row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -121,6 +123,87 @@ impl Mat {
             }
         }
     }
+
+    /// Reshape in place to (rows × cols), zero-filled.  Reuses the
+    /// existing allocation whenever capacity suffices — the contract the
+    /// encoder scratch buffers rely on for an allocation-free hot path.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `src`, reusing the existing allocation.
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
+    }
+}
+
+/// Borrowed, read-only view of a row-major matrix with an arbitrary row
+/// stride — the zero-copy counterpart of [`Mat`].
+///
+/// A view can window any column range of a wider matrix (a per-head slice
+/// of packed Q/K/V, the first `n` columns of a (k × max_len) projection)
+/// without materialising it; the [`gemm`] kernels consume views directly.
+#[derive(Debug, Clone, Copy)]
+pub struct MatView<'a> {
+    data: &'a [f32],
+    pub rows: usize,
+    pub cols: usize,
+    stride: usize,
+}
+
+impl<'a> MatView<'a> {
+    /// View over raw storage: row `r` is `data[r*stride .. r*stride+cols]`.
+    pub fn new(data: &'a [f32], rows: usize, cols: usize, stride: usize) -> Self {
+        assert!(cols <= stride || rows <= 1, "view cols exceed stride");
+        if rows > 0 {
+            let need = (rows - 1) * stride + cols;
+            assert!(need <= data.len(), "view out of bounds: {need} > {}", data.len());
+        }
+        MatView { data, rows, cols, stride }
+    }
+
+    /// The whole of `m`, as a view.
+    pub fn full(m: &'a Mat) -> Self {
+        Self::new(&m.data, m.rows, m.cols, m.cols)
+    }
+
+    /// Columns `[col0, col0 + cols)` of `m` — a strided window, no copy.
+    pub fn cols(m: &'a Mat, col0: usize, cols: usize) -> Self {
+        assert!(col0 + cols <= m.cols, "column window out of range");
+        if m.rows == 0 {
+            return Self::new(&[], 0, cols, cols.max(1));
+        }
+        Self::new(&m.data[col0..], m.rows, cols, m.cols)
+    }
+
+    /// Restrict the view to its first `n` columns (stride unchanged) —
+    /// how a (k × max_len) E/F projection is sliced to a live length.
+    pub fn first_cols(mut self, n: usize) -> Self {
+        assert!(n <= self.cols, "first_cols out of range");
+        self.cols = n;
+        self
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.stride..r * self.stride + self.cols]
+    }
+
+    /// Materialise the view as an owned [`Mat`] (tests / capture only).
+    pub fn to_mat(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            m.row_mut(r).copy_from_slice(self.row(r));
+        }
+        m
+    }
 }
 
 /// Numerically-stable in-place row softmax.
@@ -220,5 +303,45 @@ mod tests {
     #[should_panic(expected = "shape mismatch")]
     fn from_vec_validates_len() {
         Mat::from_vec(2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn reset_reuses_allocation_and_zeroes() {
+        let mut m = Mat::filled_with(4, 8, |r, c| (r * 8 + c) as f32 + 1.0);
+        let ptr = m.data.as_ptr();
+        m.reset(2, 5);
+        assert_eq!((m.rows, m.cols), (2, 5));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+        assert_eq!(m.data.as_ptr(), ptr, "shrinking reset must not realloc");
+        m.reset(4, 8);
+        assert_eq!(m.data.as_ptr(), ptr, "growing back within capacity must not realloc");
+        assert!(m.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn copy_from_matches_clone() {
+        let src = Mat::filled_with(3, 4, |r, c| (r + c) as f32);
+        let mut dst = Mat::zeros(5, 5);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn view_windows_columns_without_copying() {
+        let m = Mat::filled_with(3, 6, |r, c| (r * 10 + c) as f32);
+        let v = MatView::cols(&m, 2, 3);
+        assert_eq!(v.rows, 3);
+        assert_eq!(v.cols, 3);
+        assert_eq!(v.row(1), &[12.0, 13.0, 14.0]);
+        assert_eq!(v.to_mat().at(2, 0), 22.0);
+        let first = MatView::full(&m).first_cols(2);
+        assert_eq!(first.row(2), &[20.0, 21.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "column window out of range")]
+    fn view_cols_bounds_checked() {
+        let m = Mat::zeros(2, 4);
+        MatView::cols(&m, 3, 2);
     }
 }

@@ -14,8 +14,11 @@
 
 use linformer::analysis::{self, complexity::Arch};
 use linformer::model::{Attention, ModelConfig, Params};
-use linformer::runtime::{Engine, Manifest};
+#[cfg(feature = "pjrt")]
+use linformer::runtime::Engine;
+use linformer::runtime::Manifest;
 use linformer::serving;
+#[cfg(feature = "pjrt")]
 use linformer::training::{
     finetune, FinetuneConfig, LrSchedule, TrainConfig, Trainer,
 };
@@ -76,10 +79,27 @@ fn manifest_from(args: &Args) -> Result<Manifest, AnyError> {
     Ok(Manifest::load(dir)?)
 }
 
+/// Stub for artifact-driven commands in builds without the PJRT runtime.
+#[cfg(not(feature = "pjrt"))]
+fn needs_pjrt(cmd: &str) -> Result<(), AnyError> {
+    Err(format!(
+        "`{cmd}` drives the PJRT artifacts — rebuild with \
+         `cargo build --features pjrt` (needs the XLA toolchain; see \
+         rust/Cargo.toml)"
+    )
+    .into())
+}
+
 // ---------------------------------------------------------------------------
 // pretrain (Fig 3)
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pretrain(_argv: Vec<String>) -> Result<(), AnyError> {
+    needs_pjrt("pretrain")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pretrain(argv: Vec<String>) -> Result<(), AnyError> {
     let args = Args::parse(
         argv,
@@ -137,6 +157,12 @@ fn cmd_pretrain(argv: Vec<String>) -> Result<(), AnyError> {
 // fig3: pretraining sweeps (requires the `experiments` artifact profile)
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_fig3(_argv: Vec<String>) -> Result<(), AnyError> {
+    needs_pjrt("fig3")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_fig3(argv: Vec<String>) -> Result<(), AnyError> {
     let args = Args::parse(
         argv,
@@ -210,6 +236,12 @@ fn cmd_fig3(argv: Vec<String>) -> Result<(), AnyError> {
 // table2: fine-tuning across all t2 models × tasks
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_table2(_argv: Vec<String>) -> Result<(), AnyError> {
+    needs_pjrt("table2")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_table2(argv: Vec<String>) -> Result<(), AnyError> {
     let args = Args::parse(
         argv,
@@ -278,6 +310,12 @@ fn cmd_table2(argv: Vec<String>) -> Result<(), AnyError> {
 // finetune (Table 2)
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_finetune(_argv: Vec<String>) -> Result<(), AnyError> {
+    needs_pjrt("finetune")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_finetune(argv: Vec<String>) -> Result<(), AnyError> {
     let args = Args::parse(
         argv,
@@ -330,6 +368,65 @@ fn cmd_finetune(argv: Vec<String>) -> Result<(), AnyError> {
 // serve
 // ---------------------------------------------------------------------------
 
+/// Without PJRT, `serve` runs the same coordinator/batcher stack on the
+/// pure-Rust batched reference encoder (fresh-init weights) — the
+/// end-to-end demo of `encode_batch` on a clean machine.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("requests", "synthetic requests to send (default 64)"),
+            ("clients", "client threads (default 4)"),
+            ("seed", "rng seed"),
+        ],
+    )?;
+    let mut cfg = ModelConfig::tiny();
+    cfg.max_len = 128;
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.d_ff = 128;
+    cfg.k_proj = 32;
+    cfg.vocab_size = 512;
+    let params = Params::init(&cfg, 0);
+    println!(
+        "[serve] pjrt feature off — serving the pure-Rust reference \
+         encoder (n={}, k={})",
+        cfg.max_len, cfg.k_proj
+    );
+    let coord = serving::build_reference_coordinator(
+        &cfg,
+        &params,
+        &[(64, 8), (128, 4)],
+        serving::default_config(cfg.k_proj),
+    );
+    let total = args.usize_or("requests", 64)?;
+    let clients = args.usize_or("clients", 4)?;
+    println!("[serve] sending {total} requests from {clients} clients…");
+    let report = serving::run_load(
+        &coord,
+        cfg.vocab_size,
+        total,
+        clients,
+        args.usize_or("seed", 0)? as u64,
+    );
+    println!(
+        "[serve] completed {}/{} ({} rejected) in {:.2}s — {:.1} req/s, \
+         mean latency {:.1}ms, p95 {:.1}ms",
+        report.completed,
+        report.sent,
+        report.rejected,
+        report.wall_s,
+        report.throughput_rps,
+        report.mean_latency_s * 1e3,
+        report.p95_latency_s * 1e3
+    );
+    println!("[serve] metrics: {}", coord.metrics.to_json());
+    coord.shutdown();
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
     let args = Args::parse(
         argv,

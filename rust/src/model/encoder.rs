@@ -1,16 +1,34 @@
 //! Pure-Rust reference transformer / Linformer encoder forward pass.
 //!
-//! This is NOT the serving hot path (the PJRT runtime executes the AOT
-//! artifacts there); it exists to (a) run the Fig 1 spectrum analysis,
-//! which needs the *materialized* attention matrices P — something the
-//! fused kernels intentionally never produce — (b) provide an
-//! XLA-independent CPU baseline for the benches, and (c) cross-check the
-//! Python model numerically through `tests/integration_runtime.rs`.
+//! This is the CPU baseline for every bench and the serving fallback when
+//! PJRT is absent (see [`crate::coordinator::ReferenceRunner`]), plus the
+//! substrate for the Fig 1 spectrum analysis, which needs the
+//! *materialized* attention matrices P — something the fused kernels
+//! intentionally never produce.
+//!
+//! # Hot-path architecture
+//!
+//! - **Zero copies.** Weights are read through [`Params::view`] /
+//!   [`Params::view3`] (borrowed [`MatView`]s of the flat store); per-head
+//!   Q/K/V slices are strided column windows of the packed projections;
+//!   E/F projections are sliced to the live length by restricting a view's
+//!   column count — the per-head clones of the old path are gone.
+//! - **Scratch reuse.** All per-layer buffers (pre-LN hidden, packed
+//!   q/k/v, compressed K̄/V̄, attention logits, context, FFN activations)
+//!   live in an [`EncodeScratch`] passed through [`encode_with`]; after a
+//!   warmup call the forward pass allocates no matrix temporaries beyond
+//!   its output.  (Parameter-name `format!` strings are still built per
+//!   call — interned handles are a ROADMAP open item.)
+//! - **Threading.** Large GEMMs row-partition across scoped threads (see
+//!   [`crate::linalg::gemm`]); [`encode_batch`] additionally parallelises
+//!   across examples, splitting the core budget between the two levels.
+//!   Both are bitwise-deterministic, so `encode_batch` output equals
+//!   looped [`encode`] output exactly, for any thread count.
 
 use super::config::{Attention, ModelConfig, ProjMode, Sharing};
 use super::params::Params;
 use crate::linalg::{
-    gelu_inplace, layer_norm_rows, matmul, matmul_nt, softmax_rows, Mat,
+    gelu_inplace, gemm, layer_norm_rows, softmax_rows, Mat, MatView,
 };
 
 /// Per-head attention matrices captured during a forward pass
@@ -28,12 +46,96 @@ pub struct EncodeOut {
     pub capture: Option<AttnCapture>,
 }
 
-/// Encoder forward for a single example.
+/// Reusable workspace for the encoder forward pass.
+///
+/// Holds every per-layer buffer so repeated [`encode_with`] calls touch
+/// the allocator only while buffers are still growing toward their
+/// steady-state sizes.  A scratch is cheap to create and not tied to any
+/// particular config or parameter set.
+pub struct EncodeScratch {
+    /// Worker cap for intra-GEMM threading (reduced inside batch workers
+    /// so the two parallelism levels share the machine).
+    threads: usize,
+    h: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    kbar: Mat,
+    vbar: Mat,
+    logits: Mat,
+    ctx: Mat,
+    attn_out: Mat,
+    ff: Mat,
+    ff2: Mat,
+}
+
+impl EncodeScratch {
+    /// Scratch whose big GEMMs may use up to [`gemm::max_threads`] workers.
+    pub fn new() -> EncodeScratch {
+        Self::with_threads(gemm::max_threads())
+    }
+
+    /// Scratch with an explicit intra-GEMM worker cap (use 1 when the
+    /// caller already parallelises across examples).
+    pub fn with_threads(threads: usize) -> EncodeScratch {
+        let z = || Mat::zeros(0, 0);
+        EncodeScratch {
+            threads: threads.max(1),
+            h: z(),
+            q: z(),
+            k: z(),
+            v: z(),
+            kbar: z(),
+            vbar: z(),
+            logits: z(),
+            ctx: z(),
+            attn_out: z(),
+            ff: z(),
+            ff2: z(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Data pointers of the per-layer buffers — lets tests assert the
+    /// buffers are reused (not reallocated) across calls.
+    pub fn buffer_ptrs(&self) -> Vec<*const f32> {
+        [
+            &self.h, &self.q, &self.k, &self.v, &self.kbar, &self.vbar,
+            &self.logits, &self.ctx, &self.attn_out, &self.ff, &self.ff2,
+        ]
+        .iter()
+        .map(|m| m.data.as_ptr() as *const f32)
+        .collect()
+    }
+}
+
+impl Default for EncodeScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Encoder forward for a single example (convenience wrapper that pays a
+/// scratch construction per call — loops should use [`encode_with`]).
 pub fn encode(
     params: &Params,
     cfg: &ModelConfig,
     tokens: &[u32],
     capture_attn: bool,
+) -> EncodeOut {
+    encode_with(params, cfg, tokens, capture_attn, &mut EncodeScratch::new())
+}
+
+/// Encoder forward reusing a caller-owned [`EncodeScratch`].
+pub fn encode_with(
+    params: &Params,
+    cfg: &ModelConfig,
+    tokens: &[u32],
+    capture_attn: bool,
+    scratch: &mut EncodeScratch,
 ) -> EncodeOut {
     assert!(
         tokens.len() <= cfg.max_len,
@@ -49,8 +151,8 @@ pub fn encode(
     for (i, &t) in tokens.iter().enumerate() {
         let t = t as usize;
         assert!(t < cfg.vocab_size, "token id {t} out of vocab");
-        for j in 0..d {
-            *x.at_mut(i, j) = tok_emb[t * d + j] + pos_emb[i * d + j];
+        for (j, out) in x.row_mut(i).iter_mut().enumerate() {
+            *out = tok_emb[t * d + j] + pos_emb[i * d + j];
         }
     }
     layer_norm_rows(
@@ -66,32 +168,43 @@ pub fn encode(
     for l in 0..cfg.n_layers {
         let p = format!("layer{l}");
         // pre-LN attention block
-        let mut h = x.clone();
+        scratch.h.copy_from(&x);
         layer_norm_rows(
-            &mut h,
+            &mut scratch.h,
             params.get(&format!("{p}/ln1_scale")).unwrap(),
             params.get(&format!("{p}/ln1_bias")).unwrap(),
             1e-5,
         );
-        let (attn_out, mats) = attention_layer(params, cfg, l, &h);
+        let mats = attention_layer(params, cfg, l, scratch, capture.is_some());
         if let Some(c) = capture.as_mut() {
             c.matrices.push(mats);
         }
-        x.add_assign(&attn_out);
+        x.add_assign(&scratch.attn_out);
         // pre-LN FFN block
-        let mut h = x.clone();
+        scratch.h.copy_from(&x);
         layer_norm_rows(
-            &mut h,
+            &mut scratch.h,
             params.get(&format!("{p}/ln2_scale")).unwrap(),
             params.get(&format!("{p}/ln2_bias")).unwrap(),
             1e-5,
         );
-        let mut ff = matmul(&h, &params.mat(&format!("{p}/ffn_w1")).unwrap());
-        ff.add_row_vec(params.get(&format!("{p}/ffn_b1")).unwrap());
-        gelu_inplace(&mut ff);
-        let mut ff2 = matmul(&ff, &params.mat(&format!("{p}/ffn_w2")).unwrap());
-        ff2.add_row_vec(params.get(&format!("{p}/ffn_b2")).unwrap());
-        x.add_assign(&ff2);
+        let t = scratch.threads;
+        gemm::matmul_view(
+            MatView::full(&scratch.h),
+            params.view(&format!("{p}/ffn_w1")).unwrap(),
+            &mut scratch.ff,
+            gemm::plan_threads(n, d, cfg.d_ff, t),
+        );
+        scratch.ff.add_row_vec(params.get(&format!("{p}/ffn_b1")).unwrap());
+        gelu_inplace(&mut scratch.ff);
+        gemm::matmul_view(
+            MatView::full(&scratch.ff),
+            params.view(&format!("{p}/ffn_w2")).unwrap(),
+            &mut scratch.ff2,
+            gemm::plan_threads(n, cfg.d_ff, d, t),
+        );
+        scratch.ff2.add_row_vec(params.get(&format!("{p}/ffn_b2")).unwrap());
+        x.add_assign(&scratch.ff2);
     }
     layer_norm_rows(
         &mut x,
@@ -102,188 +215,346 @@ pub fn encode(
     EncodeOut { hidden: x, capture }
 }
 
-/// Multi-head attention for one layer; returns (output, per-head P).
+/// Multi-head attention for one layer.  Reads `scratch.h`, leaves the
+/// block output in `scratch.attn_out`; returns the per-head P matrices
+/// when `capture` is set (empty vec otherwise).
 fn attention_layer(
     params: &Params,
     cfg: &ModelConfig,
     layer: usize,
-    h: &Mat,
-) -> (Mat, Vec<Mat>) {
+    scratch: &mut EncodeScratch,
+    capture: bool,
+) -> Vec<Mat> {
     let p = format!("layer{layer}");
+    let EncodeScratch {
+        threads, h, q, k, v, kbar, vbar, logits, ctx, attn_out, ..
+    } = scratch;
+    let threads = *threads;
     let n = h.rows;
     let d = cfg.d_model;
     let heads = cfg.n_heads;
     let dh = cfg.d_head();
+    let plan = |kdim: usize, ncols: usize| gemm::plan_threads(n, kdim, ncols, threads);
 
-    let mut q = matmul(h, &params.mat(&format!("{p}/wq")).unwrap());
+    gemm::matmul_view(MatView::full(h), params.view(&format!("{p}/wq")).unwrap(), q, plan(d, d));
     q.add_row_vec(params.get(&format!("{p}/bq")).unwrap());
-    let mut k = matmul(h, &params.mat(&format!("{p}/wk")).unwrap());
+    gemm::matmul_view(MatView::full(h), params.view(&format!("{p}/wk")).unwrap(), k, plan(d, d));
     k.add_row_vec(params.get(&format!("{p}/bk")).unwrap());
-    let mut v = matmul(h, &params.mat(&format!("{p}/wv")).unwrap());
+    gemm::matmul_view(MatView::full(h), params.view(&format!("{p}/wv")).unwrap(), v, plan(d, d));
     v.add_row_vec(params.get(&format!("{p}/bv")).unwrap());
 
-    let mut ctx = Mat::zeros(n, d);
-    let mut mats = Vec::with_capacity(heads);
+    ctx.reset(n, d);
+    let mut mats = Vec::with_capacity(if capture { heads } else { 0 });
     let scale = 1.0 / (dh as f32).sqrt();
+    let lk = cfg.layer_k(layer);
+    let convw = match (cfg.attention, cfg.proj_mode) {
+        (Attention::Linformer, ProjMode::Conv) => {
+            Some(conv_weights(params, cfg, layer))
+        }
+        _ => None,
+    };
 
     for head in 0..heads {
-        let qh = slice_head(&q, head, dh);
-        let kh = slice_head(&k, head, dh);
-        let vh = slice_head(&v, head, dh);
+        let col0 = head * dh;
+        let qh = MatView::cols(q, col0, dh);
+        let kh = MatView::cols(k, col0, dh);
+        let vh = MatView::cols(v, col0, dh);
 
-        let (kbar, vbar) = match (cfg.attention, cfg.proj_mode) {
+        let (kb, vb) = match (cfg.attention, cfg.proj_mode) {
             (Attention::Standard, _) => (kh, vh),
             (Attention::Linformer, ProjMode::Pool) => {
-                let k = cfg.layer_k(layer);
-                (pool(&kh, k), pool(&vh, k))
+                pool_into(kh, lk, kbar);
+                pool_into(vh, lk, vbar);
+                (MatView::full(kbar), MatView::full(vbar))
             }
             (Attention::Linformer, ProjMode::Conv) => {
-                let (we, wf) = conv_weights(params, cfg, layer);
-                let k = cfg.layer_k(layer);
-                (conv(&kh, &we, k), conv(&vh, &wf, k))
+                let (we, wf) = convw.unwrap();
+                conv_into(kh, we, lk, kbar);
+                conv_into(vh, wf, lk, vbar);
+                (MatView::full(kbar), MatView::full(vbar))
             }
             (Attention::Linformer, ProjMode::Linear) => {
-                let (e, f) = projections(params, cfg, layer, head);
-                compress(&e, &f, &kh, &vh)
+                let (e, f) = proj_views(params, cfg, layer, head, n);
+                gemm::matmul_view(e, kh, kbar, gemm::plan_threads(e.rows, n, dh, threads));
+                gemm::matmul_view(f, vh, vbar, gemm::plan_threads(f.rows, n, dh, threads));
+                (MatView::full(kbar), MatView::full(vbar))
             }
         };
         // P = softmax(q kbar^T * scale)  — (n × m)
-        let mut logits = matmul_nt(&qh, &kbar);
+        gemm::matmul_nt_view(qh, kb, logits, plan(dh, kb.rows));
         logits.scale(scale);
-        softmax_rows(&mut logits);
-        let out = matmul(&logits, &vbar);
-        for r in 0..n {
-            for c in 0..dh {
-                *ctx.at_mut(r, head * dh + c) = out.at(r, c);
-            }
+        softmax_rows(logits);
+        if capture {
+            mats.push(logits.clone());
         }
-        mats.push(logits);
+        gemm::matmul_view_cols(MatView::full(logits), vb, ctx, col0, plan(kb.rows, dh));
     }
-    let mut o = matmul(&ctx, &params.mat(&format!("{p}/wo")).unwrap());
-    o.add_row_vec(params.get(&format!("{p}/bo")).unwrap());
-    (o, mats)
+
+    gemm::matmul_view(
+        MatView::full(ctx),
+        params.view(&format!("{p}/wo")).unwrap(),
+        attn_out,
+        plan(d, d),
+    );
+    attn_out.add_row_vec(params.get(&format!("{p}/bo")).unwrap());
+    mats
 }
 
-/// Extract head `h`'s (n × dh) slice from the packed (n × d) projection.
-fn slice_head(m: &Mat, head: usize, dh: usize) -> Mat {
-    let mut out = Mat::zeros(m.rows, dh);
-    for r in 0..m.rows {
-        let src = &m.row(r)[head * dh..(head + 1) * dh];
-        out.row_mut(r).copy_from_slice(src);
-    }
-    out
-}
-
-/// Resolve the (E, F) projection matrices for (layer, head) under the
-/// configured sharing mode.  Matrices are (k × max_len); callers slice
-/// columns to the live sequence length.
-fn projections(
-    params: &Params,
+/// Resolve the (E, F) projections for (layer, head) under the configured
+/// sharing mode, sliced to the live length `n` — all zero-copy views of
+/// the flat parameter store (the old path cloned the full (k × max_len)
+/// matrices per head per layer per call).
+fn proj_views<'a>(
+    params: &'a Params,
     cfg: &ModelConfig,
     layer: usize,
     head: usize,
-) -> (Mat, Mat) {
-    match cfg.sharing {
+    n: usize,
+) -> (MatView<'a>, MatView<'a>) {
+    let (e, f) = match cfg.sharing {
         Sharing::Layerwise => {
-            let e = params.mat("proj/E").expect("proj/E");
-            (e.clone(), e)
+            let e = params.view("proj/E").expect("proj/E");
+            (e, e)
         }
         Sharing::KeyValue => {
-            let e = params.mat(&format!("layer{layer}/E")).unwrap();
-            (e.clone(), e)
+            let e = params.view(&format!("layer{layer}/E")).unwrap();
+            (e, e)
         }
         Sharing::Headwise => (
-            params.mat(&format!("layer{layer}/E")).unwrap(),
-            params.mat(&format!("layer{layer}/F")).unwrap(),
+            params.view(&format!("layer{layer}/E")).unwrap(),
+            params.view(&format!("layer{layer}/F")).unwrap(),
         ),
         Sharing::None => (
-            params.mat3(&format!("layer{layer}/E"), head).unwrap(),
-            params.mat3(&format!("layer{layer}/F"), head).unwrap(),
+            params.view3(&format!("layer{layer}/E"), head).unwrap(),
+            params.view3(&format!("layer{layer}/F"), head).unwrap(),
         ),
-    }
+    };
+    (e.first_cols(n), f.first_cols(n))
 }
 
-/// Sequence-compress per-head K/V with linear projections:
-/// (n × dh) -> (k × dh).  E is (k × max_len); its first n columns apply
-/// for shorter sequences (training always runs at max_len).
-fn compress(e: &Mat, f: &Mat, kh: &Mat, vh: &Mat) -> (Mat, Mat) {
-    let n = kh.rows;
-    let ecols = slice_cols(e, n);
-    let fcols = slice_cols(f, n);
-    (matmul(&ecols, kh), matmul(&fcols, vh))
-}
-
-/// Resolve the depthwise-conv projection weights for a layer.
-fn conv_weights(
-    params: &Params,
+/// Resolve the depthwise-conv projection weights for a layer (borrowed —
+/// no clone).
+fn conv_weights<'a>(
+    params: &'a Params,
     cfg: &ModelConfig,
     layer: usize,
-) -> (Vec<f32>, Vec<f32>) {
+) -> (&'a [f32], &'a [f32]) {
     match cfg.sharing {
         Sharing::Layerwise => {
-            let w = params.get("proj/conv_w").expect("proj/conv_w").to_vec();
-            (w.clone(), w)
+            let w = params.get("proj/conv_w").expect("proj/conv_w");
+            (w, w)
         }
         Sharing::Headwise => (
-            params.get(&format!("layer{layer}/conv_w")).unwrap().to_vec(),
-            params.get(&format!("layer{layer}/conv_w_f")).unwrap().to_vec(),
+            params.get(&format!("layer{layer}/conv_w")).unwrap(),
+            params.get(&format!("layer{layer}/conv_w_f")).unwrap(),
         ),
         _ => {
-            let w = params
-                .get(&format!("layer{layer}/conv_w"))
-                .unwrap()
-                .to_vec();
-            (w.clone(), w)
+            let w = params.get(&format!("layer{layer}/conv_w")).unwrap();
+            (w, w)
         }
     }
 }
 
-fn slice_cols(m: &Mat, n: usize) -> Mat {
-    if m.cols == n {
-        return m.clone();
+/// Balanced window `r` of `n` rows split into `k` windows: sizes differ by
+/// at most one, every window non-empty when `k <= n` — this is what makes
+/// pool/conv tolerate live lengths not divisible by `k` (the old code
+/// asserted divisibility and panicked on ragged sequences).
+fn window(n: usize, k: usize, r: usize) -> (usize, usize) {
+    (r * n / k, (r + 1) * n / k)
+}
+
+/// Mean-pool an (n × dh) view down to (k × dh).  Ragged tails are averaged
+/// over their true window length; if `n < k` the output shrinks to `n`
+/// rows rather than emitting empty windows.
+fn pool_into(x: MatView<'_>, k: usize, out: &mut Mat) {
+    assert!(x.rows > 0, "pool of empty sequence");
+    let k = k.min(x.rows);
+    out.reset(k, x.cols);
+    for r in 0..k {
+        let (start, end) = window(x.rows, k, r);
+        let row = out.row_mut(r);
+        for src in start..end {
+            for (o, &xv) in row.iter_mut().zip(x.row(src)) {
+                *o += xv;
+            }
+        }
+        let len = (end - start) as f32;
+        for o in row.iter_mut() {
+            *o /= len;
+        }
     }
-    assert!(n < m.cols);
-    Mat::filled_with(m.rows, n, |r, c| m.at(r, c))
 }
 
-fn pool(x: &Mat, k: usize) -> Mat {
-    let win = x.rows / k;
-    assert!(win > 0 && x.rows % k == 0);
-    Mat::filled_with(k, x.cols, |r, c| {
-        (0..win).map(|w| x.at(r * win + w, c)).sum::<f32>() / win as f32
+/// Depthwise-conv compress an (n × dh) view down to (k × dh) with window
+/// weights `w`.  Windows are balanced like [`pool_into`], so for every
+/// supported config (max_len divisible by k_proj, n ≤ max_len) a window
+/// never outgrows the learned kernel; a nonuniform k-schedule that
+/// violates that is a config error and panics loudly rather than
+/// silently dropping rows.
+fn conv_into(x: MatView<'_>, w: &[f32], k: usize, out: &mut Mat) {
+    assert!(x.rows > 0, "conv of empty sequence");
+    let k = k.min(x.rows);
+    out.reset(k, x.cols);
+    for r in 0..k {
+        let (start, end) = window(x.rows, k, r);
+        assert!(
+            end - start <= w.len(),
+            "conv window of {} rows exceeds learned kernel of {} \
+             (k-schedule incompatible with conv projection)",
+            end - start,
+            w.len()
+        );
+        let row = out.row_mut(r);
+        for (i, src) in (start..end).enumerate() {
+            let wi = w[i];
+            for (o, &xv) in row.iter_mut().zip(x.row(src)) {
+                *o += wi * xv;
+            }
+        }
+    }
+}
+
+/// Run `n_items` independent forward passes, striping items across up to
+/// `threads` scoped workers.  The worker cap is split between the two
+/// parallelism levels (batch × intra-GEMM) so a small batch on a wide
+/// machine still uses every core without oversubscribing — and since GEMM
+/// results are bitwise thread-count-independent, the split never changes
+/// the output.
+fn batch_map<F>(n_items: usize, threads: usize, f: F) -> Vec<Mat>
+where
+    F: Fn(&mut EncodeScratch, usize) -> Mat + Sync,
+{
+    let t = threads.min(n_items).max(1);
+    if t <= 1 {
+        // single worker keeps the caller's full budget for intra-GEMM
+        // threading (which still respects the cap it was handed)
+        let mut scratch = EncodeScratch::with_threads(threads.max(1));
+        return (0..n_items).map(|i| f(&mut scratch, i)).collect();
+    }
+    let inner = (threads / t).max(1);
+    let mut out: Vec<Option<Mat>> = (0..n_items).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (0..t)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut scratch = EncodeScratch::with_threads(inner);
+                    (w..n_items)
+                        .step_by(t)
+                        .map(|i| (i, f(&mut scratch, i)))
+                        .collect::<Vec<(usize, Mat)>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, m) in h.join().expect("encode batch worker") {
+                out[i] = Some(m);
+            }
+        }
+    });
+    out.into_iter().map(|m| m.expect("item computed")).collect()
+}
+
+/// Batched encoder forward: runs every (possibly ragged) sequence through
+/// [`encode_with`], parallelised across examples.  Output is bitwise
+/// identical to calling [`encode`] per sequence, in order.
+pub fn encode_batch(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+) -> Vec<Mat> {
+    batch_map(seqs.len(), gemm::max_threads(), |scratch, i| {
+        encode_with(params, cfg, &seqs[i], false, scratch).hidden
     })
 }
 
-fn conv(x: &Mat, w: &[f32], k: usize) -> Mat {
-    let win = x.rows / k;
-    assert_eq!(w.len(), win);
-    Mat::filled_with(k, x.cols, |r, c| {
-        (0..win).map(|i| x.at(r * win + i, c) * w[i]).sum()
-    })
-}
-
-/// MLM head logits for one example: (n × vocab).
-pub fn mlm_logits(params: &Params, cfg: &ModelConfig, tokens: &[u32]) -> Mat {
-    let enc = encode(params, cfg, tokens, false);
-    let mut h = matmul(&enc.hidden, &params.mat("mlm/dense_w").unwrap());
-    h.add_row_vec(params.get("mlm/dense_b").unwrap());
-    gelu_inplace(&mut h);
+/// MLM head logits for one example, reusing a scratch: (n × vocab).
+pub fn mlm_logits_with(
+    params: &Params,
+    cfg: &ModelConfig,
+    tokens: &[u32],
+    scratch: &mut EncodeScratch,
+) -> Mat {
+    let hidden = encode_with(params, cfg, tokens, false, scratch).hidden;
+    let n = hidden.rows;
+    let d = cfg.d_model;
+    let t = scratch.threads;
+    // dense + gelu + ln in scratch.h (free after encode)
+    gemm::matmul_view(
+        MatView::full(&hidden),
+        params.view("mlm/dense_w").unwrap(),
+        &mut scratch.h,
+        gemm::plan_threads(n, d, d, t),
+    );
+    scratch.h.add_row_vec(params.get("mlm/dense_b").unwrap());
+    gelu_inplace(&mut scratch.h);
     layer_norm_rows(
-        &mut h,
+        &mut scratch.h,
         params.get("mlm/ln_scale").unwrap(),
         params.get("mlm/ln_bias").unwrap(),
         1e-5,
     );
     // tied output embedding: logits = h · W_tokᵀ
-    let tok = params.mat("embed/tokens").unwrap(); // (vocab × d)
-    let mut logits = matmul_nt(&h, &tok);
+    let tok = params.view("embed/tokens").unwrap(); // (vocab × d)
+    let mut logits = Mat::zeros(0, 0);
+    gemm::matmul_nt_view(
+        MatView::full(&scratch.h),
+        tok,
+        &mut logits,
+        gemm::plan_threads(n, d, cfg.vocab_size, t),
+    );
     logits.add_row_vec(params.get("mlm/out_bias").unwrap());
     logits
+}
+
+/// MLM head logits for one example: (n × vocab).
+pub fn mlm_logits(params: &Params, cfg: &ModelConfig, tokens: &[u32]) -> Mat {
+    mlm_logits_with(params, cfg, tokens, &mut EncodeScratch::new())
+}
+
+/// Batched MLM logits, parallelised across examples like [`encode_batch`].
+pub fn mlm_logits_batch(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+) -> Vec<Mat> {
+    batch_map(seqs.len(), gemm::max_threads(), |scratch, i| {
+        mlm_logits_with(params, cfg, &seqs[i], scratch)
+    })
+}
+
+/// Batched MLM argmax predictions (one token id per input position) — the
+/// pure-Rust serving path behind [`crate::coordinator::ReferenceRunner`].
+pub fn mlm_predict_batch(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+) -> Vec<Vec<u32>> {
+    mlm_logits_batch(params, cfg, seqs)
+        .into_iter()
+        .map(|logits| {
+            (0..logits.rows)
+                .map(|r| {
+                    let row = logits.row(r);
+                    let mut best = 0usize;
+                    let mut best_v = f32::NEG_INFINITY;
+                    for (i, &x) in row.iter().enumerate() {
+                        if x > best_v {
+                            best_v = x;
+                            best = i;
+                        }
+                    }
+                    best as u32
+                })
+                .collect()
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::prop_check;
     use crate::util::rng::Pcg32;
 
     fn toks(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<u32> {
@@ -389,5 +660,131 @@ mod tests {
         let t = toks(&cfg, cfg.max_len, 8);
         let out = encode(&p, &cfg, &t, false);
         assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn pool_and_conv_accept_ragged_lengths() {
+        // live length not divisible by k — the old pool()/conv() asserted
+        // x.rows % k == 0 and panicked on exactly this input.
+        for proj_mode in [ProjMode::Pool, ProjMode::Conv] {
+            let mut cfg = ModelConfig::tiny();
+            cfg.proj_mode = proj_mode;
+            let p = Params::init(&cfg, 9);
+            for n in [cfg.k_proj - 3, 13, cfg.max_len - 1] {
+                let t = toks(&cfg, n, 9);
+                let out = encode(&p, &cfg, &t, false);
+                assert_eq!(out.hidden.rows, n);
+                assert!(
+                    out.hidden.data.iter().all(|x| x.is_finite()),
+                    "{proj_mode:?} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_into_averages_ragged_tail() {
+        // 5 rows into k=2: windows [0,2) and [2,5)
+        let x = Mat::from_vec(5, 1, vec![1.0, 3.0, 6.0, 6.0, 6.0]);
+        let mut out = Mat::zeros(0, 0);
+        pool_into(MatView::full(&x), 2, &mut out);
+        assert_eq!(out.rows, 2);
+        assert!((out.at(0, 0) - 2.0).abs() < 1e-6);
+        assert!((out.at(1, 0) - 6.0).abs() < 1e-6);
+        // n < k shrinks instead of emitting empty windows
+        pool_into(MatView::full(&x), 9, &mut out);
+        assert_eq!(out.rows, 5);
+        assert_eq!(out.at(4, 0), 6.0);
+    }
+
+    #[test]
+    fn conv_into_weights_ragged_windows() {
+        let x = Mat::from_vec(3, 1, vec![1.0, 10.0, 100.0]);
+        let w = [0.5, 0.25];
+        let mut out = Mat::zeros(0, 0);
+        conv_into(MatView::full(&x), &w, 2, &mut out);
+        assert_eq!(out.rows, 2);
+        // windows [0,1) and [1,3): 0.5*1 ; 0.5*10 + 0.25*100
+        assert!((out.at(0, 0) - 0.5).abs() < 1e-6);
+        assert!((out.at(1, 0) - 30.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_encode_bitwise() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 10);
+        let mut scratch = EncodeScratch::new();
+        // interleave lengths to force buffer reshapes between calls
+        for (i, n) in [cfg.max_len, 8, 13, cfg.max_len, 5].into_iter().enumerate() {
+            let t = toks(&cfg, n, 20 + i as u64);
+            let reused = encode_with(&p, &cfg, &t, false, &mut scratch);
+            let fresh = encode(&p, &cfg, &t, false);
+            assert_eq!(reused.hidden.data, fresh.hidden.data, "call {i} (n={n})");
+        }
+    }
+
+    #[test]
+    fn scratch_buffers_stable_after_warmup() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 11);
+        let t = toks(&cfg, cfg.max_len, 11);
+        let mut scratch = EncodeScratch::with_threads(1);
+        encode_with(&p, &cfg, &t, false, &mut scratch); // warmup
+        let ptrs = scratch.buffer_ptrs();
+        for seed in 0..3u64 {
+            let t = toks(&cfg, cfg.max_len, 30 + seed);
+            encode_with(&p, &cfg, &t, false, &mut scratch);
+            assert_eq!(
+                scratch.buffer_ptrs(),
+                ptrs,
+                "per-layer buffers were reallocated after warmup"
+            );
+        }
+    }
+
+    #[test]
+    fn encode_batch_matches_looped_encode_bitwise() {
+        prop_check("encode_batch == looped encode", 12, |rng| {
+            let mut cfg = ModelConfig::tiny();
+            // vary the architecture a little across cases
+            cfg.sharing = match rng.below(3) {
+                0 => Sharing::Layerwise,
+                1 => Sharing::Headwise,
+                _ => Sharing::None,
+            };
+            let p = Params::init(&cfg, 12);
+            let batch = 1 + rng.below(6) as usize;
+            let seqs: Vec<Vec<u32>> = (0..batch)
+                .map(|_| {
+                    let n = rng.range_usize(1, cfg.max_len + 1);
+                    (0..n).map(|_| rng.below(cfg.vocab_size as u32)).collect()
+                })
+                .collect();
+            let batched = encode_batch(&p, &cfg, &seqs);
+            assert_eq!(batched.len(), seqs.len());
+            for (i, seq) in seqs.iter().enumerate() {
+                let single = encode(&p, &cfg, seq, false).hidden;
+                assert_eq!(
+                    batched[i].data, single.data,
+                    "example {i} (len {}) diverged",
+                    seq.len()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn mlm_predict_batch_shapes_and_vocab_range() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 13);
+        let seqs = vec![toks(&cfg, 7, 40), toks(&cfg, cfg.max_len, 41)];
+        let preds = mlm_predict_batch(&p, &cfg, &seqs);
+        assert_eq!(preds.len(), 2);
+        assert_eq!(preds[0].len(), 7);
+        assert_eq!(preds[1].len(), cfg.max_len);
+        assert!(preds
+            .iter()
+            .flatten()
+            .all(|&t| (t as usize) < cfg.vocab_size));
     }
 }

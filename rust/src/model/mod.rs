@@ -10,5 +10,8 @@ pub mod encoder;
 pub mod params;
 
 pub use config::{Attention, ModelConfig, ProjMode, Sharing};
-pub use encoder::{encode, mlm_logits, AttnCapture, EncodeOut};
+pub use encoder::{
+    encode, encode_batch, encode_with, mlm_logits, mlm_logits_batch,
+    mlm_logits_with, mlm_predict_batch, AttnCapture, EncodeOut, EncodeScratch,
+};
 pub use params::{param_count, param_spec, Params};

@@ -8,6 +8,7 @@
 //! interchangeable.
 
 use super::config::{Attention, ModelConfig, ProjMode, Sharing};
+use crate::linalg::MatView;
 use crate::util::rng::Pcg32;
 
 /// Ordered parameter spec: (name, shape).
@@ -218,6 +219,33 @@ impl Params {
         Ok(self.lookup(name)?.1)
     }
 
+    /// Borrow a named 2-D tensor as a zero-copy [`MatView`] — the hot-path
+    /// accessor: no clone of the weight matrix, ever.
+    pub fn view(&self, name: &str) -> Result<MatView<'_>, ParamError> {
+        let (off, shape) = self.lookup(name)?;
+        let (r, c) = match shape {
+            [r, c] => (*r, *c),
+            [c] => (1usize, *c),
+            _ => (shape[0], numel(&shape[1..])),
+        };
+        Ok(MatView::new(&self.flat[off..off + r * c], r, c, c))
+    }
+
+    /// Zero-copy view of one index of a stacked 3-D tensor (e.g. per-head
+    /// E of shape `[h, k, n]`).
+    pub fn view3(
+        &self,
+        name: &str,
+        index: usize,
+    ) -> Result<MatView<'_>, ParamError> {
+        let (off, shape) = self.lookup(name)?;
+        assert_eq!(shape.len(), 3, "{name} is not 3-D");
+        let (h, r, c) = (shape[0], shape[1], shape[2]);
+        assert!(index < h);
+        let base = off + index * r * c;
+        Ok(MatView::new(&self.flat[base..base + r * c], r, c, c))
+    }
+
     /// Borrow a named 2-D tensor as a [`crate::linalg::Mat`]-shaped view
     /// (copies — Mat owns its data; fine off the hot path).
     pub fn mat(&self, name: &str) -> Result<crate::linalg::Mat, ParamError> {
@@ -319,6 +347,31 @@ mod tests {
             Params::from_flat(vec![0.0; 3], spec),
             Err(ParamError::SizeMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn view_matches_mat_copy() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 2);
+        for name in ["layer0/wq", "embed/tokens", "proj/E"] {
+            let owned = p.mat(name).unwrap();
+            let view = p.view(name).unwrap();
+            assert_eq!((view.rows, view.cols), (owned.rows, owned.cols));
+            assert_eq!(view.to_mat(), owned, "{name}");
+        }
+    }
+
+    #[test]
+    fn view3_matches_mat3() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.sharing = Sharing::None;
+        let p = Params::init(&cfg, 1);
+        for head in 0..cfg.n_heads {
+            assert_eq!(
+                p.view3("layer0/E", head).unwrap().to_mat(),
+                p.mat3("layer0/E", head).unwrap()
+            );
+        }
     }
 
     #[test]

@@ -6,10 +6,12 @@
 
 pub mod artifact;
 pub mod checkpoint;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod tensor;
 
 pub use artifact::{ArtifactError, Manifest, ModelEntry, ProgramInfo};
 pub use checkpoint::{Checkpoint, CkptError};
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, EngineError, Executable};
 pub use tensor::{DType, Tensor, TensorError};

@@ -1,6 +1,7 @@
-//! Serving assembly: wire manifest artifacts into a running
-//! [`Coordinator`] (bucket per model), plus a synthetic client-load
-//! generator used by the examples and benches.
+//! Serving assembly: wire manifest artifacts (PJRT) or the pure-Rust
+//! reference encoder into a running [`Coordinator`] (bucket per model),
+//! plus a synthetic client-load generator used by the examples and
+//! benches.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -10,14 +11,56 @@ pub mod trace;
 
 pub use config::LauncherConfig;
 
+#[cfg(feature = "pjrt")]
+use crate::coordinator::XlaRunner;
 use crate::coordinator::{
     BatchRunner, BatcherConfig, BucketSpec, Coordinator, CostModel,
-    RunnerFactory, XlaRunner,
+    ReferenceRunner, RunnerFactory,
 };
 use crate::data::{Corpus, CorpusConfig};
+use crate::model::{ModelConfig, Params};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Manifest};
+#[cfg(feature = "pjrt")]
 use crate::training::TrainError;
 use crate::util::rng::Pcg32;
+
+/// Build a coordinator whose buckets are served by the pure-Rust batched
+/// reference encoder — no artifacts, no PJRT.  `buckets` lists
+/// `(max_len, batch_capacity)` pairs; every bucket shares `cfg`/`params`
+/// (each worker owns a clone) and every bucket length must be ≤
+/// `cfg.max_len`.  This is the serving path on machines without the
+/// `pjrt` feature, and the end-to-end harness for `encode_batch`.
+pub fn build_reference_coordinator(
+    cfg: &ModelConfig,
+    params: &Params,
+    buckets: &[(usize, usize)],
+    config: BatcherConfig,
+) -> Coordinator {
+    assert!(!buckets.is_empty(), "at least one bucket required");
+    let mut sorted = buckets.to_vec();
+    sorted.sort_by_key(|&(len, _)| len);
+    let mut specs: Vec<(BucketSpec, RunnerFactory)> = Vec::new();
+    for (len, cap) in sorted {
+        // validate here, on the calling thread: the same assert inside
+        // ReferenceRunner::new would only fire on the spawned worker,
+        // leaving clients to time out instead of failing fast
+        assert!(
+            len <= cfg.max_len,
+            "bucket length {len} exceeds model max_len {}",
+            cfg.max_len
+        );
+        assert!(cap > 0, "bucket capacity must be positive");
+        let cfg = cfg.clone();
+        let params = params.clone();
+        let factory: RunnerFactory = Box::new(move || {
+            Ok(Box::new(ReferenceRunner::new(cfg, params, len, cap))
+                as Box<dyn BatchRunner>)
+        });
+        specs.push((BucketSpec { max_len: len, batch: cap }, factory));
+    }
+    Coordinator::start(specs, config)
+}
 
 /// Build a coordinator from manifest models (ascending max_len buckets).
 ///
@@ -25,6 +68,7 @@ use crate::util::rng::Pcg32;
 /// and `init.bin` (or checkpoint) parameters.  PJRT handles are `!Send`,
 /// so each worker thread creates its own [`Engine`] and compiles its own
 /// executable inside the runner factory.
+#[cfg(feature = "pjrt")]
 pub fn build_coordinator(
     manifest: &Manifest,
     model_names: &[&str],
@@ -187,6 +231,52 @@ mod tests {
         assert_eq!(report.completed + report.rejected, 40);
         assert!(report.completed > 0);
         assert!(report.throughput_rps > 0.0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn reference_coordinator_serves_end_to_end() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let params = crate::model::Params::init(&cfg, 3);
+        let coord = build_reference_coordinator(
+            &cfg,
+            &params,
+            &[(16, 4), (cfg.max_len, 2)],
+            BatcherConfig {
+                max_delay: Duration::from_millis(2),
+                ..Default::default()
+            },
+        );
+        // short request routes to the small bucket, long to the big one
+        let short = coord.submit(vec![1, 2, 3]).unwrap();
+        let long = coord.submit(vec![4; 24]).unwrap();
+        let rs = short.wait_timeout(Duration::from_secs(30)).unwrap();
+        let rl = long.wait_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(rs.predictions.len(), 3);
+        assert_eq!(rs.bucket_len, 16);
+        assert_eq!(rl.predictions.len(), 24);
+        assert_eq!(rl.bucket_len, cfg.max_len);
+        assert!(rs
+            .predictions
+            .iter()
+            .all(|&p| (p as usize) < cfg.vocab_size));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn reference_coordinator_handles_concurrent_load() {
+        let cfg = crate::model::ModelConfig::tiny();
+        let params = crate::model::Params::init(&cfg, 4);
+        let coord = build_reference_coordinator(
+            &cfg,
+            &params,
+            &[(cfg.max_len, 4)],
+            default_config(cfg.k_proj),
+        );
+        let report = run_load(&coord, cfg.vocab_size, 24, 3, 7);
+        assert_eq!(report.completed + report.rejected, 24);
+        assert!(report.completed >= 20, "too many failures: {report:?}");
+        assert!(coord.metrics.occupancy() > 0.0);
         coord.shutdown();
     }
 

@@ -7,7 +7,7 @@ use crate::data::CorpusConfig;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::{Engine, ModelEntry};
 use crate::training::schedule::LrSchedule;
-use crate::training::trainer::TrainError;
+use crate::training::TrainError;
 use crate::util::rng::Pcg32;
 
 /// Result of fine-tuning one (model, task) pair.

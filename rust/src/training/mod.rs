@@ -1,10 +1,31 @@
 //! Training stack: MLM pretraining (Fig 3), fine-tuning (Table 2),
 //! lr schedules, checkpointing.
+//!
+//! The trainers drive the fused `train_step` PJRT artifacts, so they only
+//! exist under the `pjrt` feature; the schedule math and [`TrainError`]
+//! (which serving shares for artifact errors) are always available.
 
+#[cfg(feature = "pjrt")]
 pub mod finetune;
 pub mod schedule;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
+#[cfg(feature = "pjrt")]
 pub use finetune::{finetune, FinetuneConfig, FinetuneResult};
 pub use schedule::{perplexity, LrSchedule};
-pub use trainer::{LogPoint, TrainConfig, TrainError, TrainReport, Trainer};
+#[cfg(feature = "pjrt")]
+pub use trainer::{LogPoint, TrainConfig, TrainReport, Trainer};
+
+#[derive(Debug, thiserror::Error)]
+pub enum TrainError {
+    #[cfg(feature = "pjrt")]
+    #[error("engine: {0}")]
+    Engine(#[from] crate::runtime::EngineError),
+    #[error("artifact: {0}")]
+    Artifact(#[from] crate::runtime::ArtifactError),
+    #[error("checkpoint: {0}")]
+    Ckpt(#[from] crate::runtime::CkptError),
+    #[error("model '{0}' exports no train_step program")]
+    NotTrainable(String),
+}

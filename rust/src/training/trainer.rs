@@ -11,21 +11,10 @@ use std::time::Instant;
 use crate::data::masking::{mask_batch, MaskingConfig};
 use crate::data::{Corpus, CorpusConfig};
 use crate::runtime::tensor::Tensor;
-use crate::runtime::{Checkpoint, Engine, EngineError, ModelEntry};
+use crate::runtime::{Checkpoint, Engine, ModelEntry};
 use crate::training::schedule::{perplexity, LrSchedule};
+use crate::training::TrainError;
 use crate::util::rng::Pcg32;
-
-#[derive(Debug, thiserror::Error)]
-pub enum TrainError {
-    #[error("engine: {0}")]
-    Engine(#[from] EngineError),
-    #[error("artifact: {0}")]
-    Artifact(#[from] crate::runtime::ArtifactError),
-    #[error("checkpoint: {0}")]
-    Ckpt(#[from] crate::runtime::CkptError),
-    #[error("model '{0}' exports no train_step program")]
-    NotTrainable(String),
-}
 
 /// One recorded point of the training curve.
 #[derive(Debug, Clone)]

@@ -1,7 +1,11 @@
 //! Timing statistics for the benchmark harness (criterion is unavailable
-//! offline, so `cargo bench` targets use this module with `harness = false`).
+//! offline, so `cargo bench` targets use this module with `harness = false`),
+//! plus the machine-readable bench log (`BENCH_encoder.json`) that gives
+//! future PRs a perf trajectory.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
 
 /// Summary statistics over a sample of durations (seconds).
 #[derive(Debug, Clone)]
@@ -102,6 +106,47 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Build one machine-readable bench record from (key, value) pairs.
+pub fn bench_record(pairs: &[(&str, Json)]) -> Json {
+    Json::Obj(
+        pairs
+            .iter()
+            .map(|(k, v)| ((*k).to_string(), v.clone()))
+            .collect(),
+    )
+}
+
+/// Merge a named section of bench records into a JSON file (each bench
+/// binary owns one top-level key, so fig2/table3 can share
+/// `BENCH_encoder.json` without clobbering each other).  IO errors are
+/// reported to stderr, never fatal — benches must not fail on a
+/// read-only checkout.
+pub fn emit_bench_json(path: &str, section: &str, records: Vec<Json>) {
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(s) => match json::parse(&s) {
+            Ok(Json::Obj(m)) => m,
+            Ok(_) | Err(_) => {
+                eprintln!(
+                    "[bench] warning: {path} exists but is not a JSON \
+                     object; starting a fresh log"
+                );
+                Default::default()
+            }
+        },
+        Err(_) => Default::default(), // no existing log
+    };
+    root.insert(section.to_string(), Json::Arr(records));
+    let body = Json::Obj(root).to_string();
+    // write-then-rename so a killed bench never truncates the log
+    let tmp = format!("{path}.tmp");
+    let result = std::fs::write(&tmp, body)
+        .and_then(|()| std::fs::rename(&tmp, path));
+    match result {
+        Ok(()) => println!("[bench] wrote {path} (section '{section}')"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,6 +176,28 @@ mod tests {
         });
         assert_eq!(s.n, 5);
         assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn emit_bench_json_merges_sections() {
+        let path = std::env::temp_dir().join("linformer_bench_emit_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let rec = |v: f64| {
+            bench_record(&[("seq_len", Json::Num(128.0)), ("ns_per_token", Json::Num(v))])
+        };
+        emit_bench_json(&path, "fig2", vec![rec(1.0)]);
+        emit_bench_json(&path, "table3", vec![rec(2.0), rec(3.0)]);
+        // second write for the same section replaces it, keeps the other
+        emit_bench_json(&path, "fig2", vec![rec(4.0)]);
+        let parsed = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("fig2").as_arr().unwrap().len(), 1);
+        assert_eq!(
+            parsed.get("fig2").idx(0).get("ns_per_token").as_f64(),
+            Some(4.0)
+        );
+        assert_eq!(parsed.get("table3").as_arr().unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

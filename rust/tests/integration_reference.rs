@@ -1,0 +1,50 @@
+//! End-to-end integration for the XLA-free path: batched reference
+//! encoder → ReferenceRunner workers → coordinator → concurrent clients.
+//! Runs on a clean machine (no artifacts, no `pjrt` feature).
+
+use std::time::Duration;
+
+use linformer::coordinator::BatcherConfig;
+use linformer::model::{encode, encode_batch, ModelConfig, Params};
+use linformer::serving;
+
+#[test]
+fn reference_serving_round_trips_under_load() {
+    let mut cfg = ModelConfig::tiny();
+    cfg.max_len = 64;
+    let params = Params::init(&cfg, 42);
+    let coord = serving::build_reference_coordinator(
+        &cfg,
+        &params,
+        &[(16, 4), (64, 2)],
+        BatcherConfig {
+            max_delay: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let report = serving::run_load(&coord, cfg.vocab_size, 32, 4, 9);
+    assert_eq!(report.completed + report.rejected, 32);
+    assert!(report.completed >= 28, "too many failures: {report:?}");
+    assert!(report.throughput_rps > 0.0);
+    let j = coord.metrics.to_json();
+    assert!(j.get("batches").as_usize().unwrap() > 0);
+    coord.shutdown();
+}
+
+#[test]
+fn batched_and_single_encode_agree_across_thread_counts() {
+    let cfg = ModelConfig::tiny();
+    let params = Params::init(&cfg, 7);
+    let seqs: Vec<Vec<u32>> = (0..5)
+        .map(|i| {
+            (0..(3 + 5 * i).min(cfg.max_len))
+                .map(|j| ((i * 31 + j * 7) % cfg.vocab_size) as u32)
+                .collect()
+        })
+        .collect();
+    let batched = encode_batch(&params, &cfg, &seqs);
+    for (i, seq) in seqs.iter().enumerate() {
+        let single = encode(&params, &cfg, seq, false).hidden;
+        assert_eq!(batched[i].data, single.data, "example {i}");
+    }
+}

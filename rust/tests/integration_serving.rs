@@ -1,6 +1,8 @@
 //! End-to-end serving integration: manifest → coordinator (real PJRT
 //! runners in worker threads) → concurrent clients.  Requires
-//! `make artifacts`.
+//! `make artifacts` and the `pjrt` feature.
+
+#![cfg(feature = "pjrt")]
 
 use std::time::Duration;
 
