@@ -185,7 +185,7 @@ fn bench_reference_serving() {
     cfg.d_ff = 128;
     cfg.k_proj = 32;
     cfg.vocab_size = 512;
-    let params = Params::init(&cfg, 0);
+    let params = std::sync::Arc::new(Params::init(&cfg, 0));
     let coord = linformer::serving::build_reference_coordinator(
         &cfg,
         &params,
@@ -209,6 +209,11 @@ fn bench_reference_serving() {
 }
 
 fn main() {
+    println!(
+        "compute budget: {} threads ({} pool workers)\n",
+        linformer::linalg::gemm::max_threads(),
+        linformer::linalg::pool::global().workers()
+    );
     bench_batcher_throughput();
     bench_reference_serving();
 

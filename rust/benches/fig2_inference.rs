@@ -11,7 +11,7 @@
 //!
 //! Run: `cargo bench --bench fig2_inference`
 
-use linformer::linalg::{gemm, Mat, MatView};
+use linformer::linalg::{gemm, pool, Mat, MatView};
 use linformer::model::{
     encode_batch, encode_with, Attention, EncodeScratch, ModelConfig, Params,
 };
@@ -49,12 +49,19 @@ fn record(
         ("k", Json::Num(k as f64)),
         ("batch", Json::Num(batch as f64)),
         ("threads", Json::Num(threads as f64)),
+        // the pool size IS the process compute budget every record ran
+        // under ("threads" is the per-measurement worker cap)
+        ("pool_workers", Json::Num(pool::global().workers() as f64)),
         ("ns_per_token", Json::Num(ns_per_token)),
     ])
 }
 
 fn main() {
     let threads = gemm::max_threads();
+    println!(
+        "compute budget: {threads} threads ({} pool workers)",
+        pool::global().workers()
+    );
     let mut records = Vec::new();
 
     // -- gemm scaling: the kernel the whole hot path stands on ----------
@@ -82,6 +89,7 @@ fn main() {
     records.push(bench_record(&[
         ("bench", Json::Str("gemm_512".into())),
         ("threads", Json::Num(threads as f64)),
+        ("pool_workers", Json::Num(pool::global().workers() as f64)),
         ("serial_s", Json::Num(serial.mean)),
         ("threaded_s", Json::Num(par.mean)),
         ("speedup", Json::Num(serial.mean / par.mean)),

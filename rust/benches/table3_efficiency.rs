@@ -17,7 +17,7 @@
 
 use linformer::analysis::complexity::speedup_vs_transformer;
 use linformer::analysis::{memory_saving, DEFAULT_BUDGET};
-use linformer::linalg::gemm;
+use linformer::linalg::{gemm, pool};
 use linformer::model::{
     encode_with, Attention, EncodeScratch, ModelConfig, Params,
 };
@@ -41,6 +41,10 @@ fn model(n: usize, attention: Attention, k: usize) -> (ModelConfig, Params) {
 
 fn main() {
     let threads = gemm::max_threads();
+    println!(
+        "compute budget: {threads} threads ({} pool workers)",
+        pool::global().workers()
+    );
     let ks = [32usize, 64, 128];
     let ns = [256usize, 512, 1024];
     let mut records = Vec::new();
@@ -84,6 +88,7 @@ fn main() {
                 ("k", Json::Num(k as f64)),
                 ("batch", Json::Num(1.0)),
                 ("threads", Json::Num(threads as f64)),
+                ("pool_workers", Json::Num(pool::global().workers() as f64)),
                 ("standard_ns_per_token", Json::Num(std_t * 1e9 / n as f64)),
                 ("linformer_ns_per_token", Json::Num(lin_t * 1e9 / n as f64)),
                 ("speedup", Json::Num(std_t / lin_t)),

@@ -38,7 +38,7 @@ impl Histogram {
             .bounds
             .iter()
             .position(|&b| seconds < b)
-            .unwrap_or(self.bounds.len());
+            .unwrap_or_else(|| self.bounds.len());
         self.counts[idx].fetch_add(1, Ordering::Relaxed);
         self.sum_us
             .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);

@@ -15,6 +15,12 @@
 //! The dispatcher is the only thread touching the batcher; workers only see
 //! flushed [`Batch`]es, so no locks sit on the request path (one mpsc hop
 //! in, one out).
+//!
+//! Bucket worker threads are *control* threads: the model compute they
+//! trigger (e.g. [`ReferenceRunner`] → `model::mlm_predict_batch`) runs as
+//! tasks on the process-wide [`crate::linalg::pool`], so concurrently-busy
+//! buckets share one global compute-thread budget instead of each using
+//! the whole machine.
 
 pub mod batcher;
 pub mod metrics;

@@ -7,6 +7,8 @@
 //! through the pure-Rust batched encoder (`model::mlm_predict_batch`) —
 //! no padding, no XLA — and is the default on machines without PJRT.
 
+use std::sync::Arc;
+
 use crate::data::tokenizer::PAD;
 use crate::model::{mlm_predict_batch, ModelConfig, Params};
 use crate::runtime::tensor::Tensor;
@@ -82,10 +84,16 @@ pub fn argmax_tokens(
 
 /// Pure-Rust runner: executes batches through the reference encoder's
 /// batched MLM path.  Ragged rows run at their true length (no padding to
-/// a static shape) and examples parallelise across cores via
-/// `model::mlm_predict_batch`.
+/// a static shape) and examples parallelise on the global compute pool
+/// via `model::mlm_predict_batch` — concurrent buckets share the one
+/// process-wide thread budget.
+///
+/// Parameters are shared: every bucket's runner holds an `Arc` to the
+/// same `Params`, so a multi-bucket deployment keeps exactly one copy of
+/// the weights in memory (the old path cloned the full flat store per
+/// worker).
 pub struct ReferenceRunner {
-    params: Params,
+    params: Arc<Params>,
     cfg: ModelConfig,
     bucket_len: usize,
     capacity: usize,
@@ -94,7 +102,7 @@ pub struct ReferenceRunner {
 impl ReferenceRunner {
     pub fn new(
         cfg: ModelConfig,
-        params: Params,
+        params: Arc<Params>,
         bucket_len: usize,
         capacity: usize,
     ) -> ReferenceRunner {
@@ -272,7 +280,7 @@ mod tests {
     #[test]
     fn reference_runner_serves_ragged_batches() {
         let cfg = ModelConfig::tiny();
-        let params = Params::init(&cfg, 0);
+        let params = Arc::new(Params::init(&cfg, 0));
         let r = ReferenceRunner::new(cfg.clone(), params, cfg.max_len, 4);
         assert_eq!(r.capacity(), 4);
         assert_eq!(r.bucket_len(), cfg.max_len);
@@ -288,9 +296,34 @@ mod tests {
     }
 
     #[test]
+    fn reference_runners_share_one_params_allocation() {
+        // N bucket runners hold Arc refs to ONE Params — no per-worker
+        // weight clones, however many buckets a deployment configures
+        let cfg = ModelConfig::tiny();
+        let params = Arc::new(Params::init(&cfg, 9));
+        let runners: Vec<ReferenceRunner> = (0..4)
+            .map(|i| {
+                ReferenceRunner::new(
+                    cfg.clone(),
+                    Arc::clone(&params),
+                    cfg.max_len,
+                    i + 1,
+                )
+            })
+            .collect();
+        assert_eq!(Arc::strong_count(&params), 1 + runners.len());
+        let base = params.flat.as_ptr();
+        for r in &runners {
+            assert!(std::ptr::eq(r.params.flat.as_ptr(), base));
+        }
+        drop(runners);
+        assert_eq!(Arc::strong_count(&params), 1);
+    }
+
+    #[test]
     fn reference_runner_rejects_bad_input_without_panicking() {
         let cfg = ModelConfig::tiny();
-        let params = Params::init(&cfg, 1);
+        let params = Arc::new(Params::init(&cfg, 1));
         let r = ReferenceRunner::new(cfg.clone(), params, 8, 2);
         assert!(r.run(&[vec![1; 9]]).is_err(), "overlong row");
         assert!(r.run(&[vec![1], vec![2], vec![3]]).is_err(), "over capacity");

@@ -22,29 +22,49 @@
 //! Linformer through [`model::encoder`], which is engineered to be
 //! complexity- rather than overhead-bound:
 //!
+//! - **One compute budget, one pool.** All parallel work — GEMM row
+//!   chunks, batch striping, every serving bucket's batches — executes as
+//!   tasks on the persistent process-wide [`linalg::pool`], sized to the
+//!   global thread budget.  However many buckets are busy at once, at
+//!   most `budget` threads compute; the per-batch thread spawns and
+//!   cross-bucket oversubscription of the old scoped-thread path are
+//!   gone.
 //! - **Zero-copy views.** [`linalg::MatView`] windows a column range of a
 //!   row-major matrix with a stride, so per-head Q/K/V slices, weight
-//!   matrices (via `Params::view`) and length-sliced E/F projections are
-//!   all borrowed straight from the flat parameter store — the hot path
-//!   clones nothing.
-//! - **Scratch reuse.** `model::EncodeScratch` owns every per-layer
-//!   buffer; `encode_with` reuses it across layers and calls, so after a
-//!   warmup call the forward pass allocates no matrix temporaries
-//!   (parameter-name strings remain; see ROADMAP).
-//! - **Threaded GEMM.** `linalg::gemm` row-partitions large products
-//!   across `std::thread::scope` workers (tunable via
-//!   `gemm::set_max_threads` / `LINFORMER_THREADS`, serial below a FLOP
-//!   threshold).  Each output row is computed by one worker with a fixed
-//!   accumulation order, so results are **bitwise identical for any
-//!   thread count** — the determinism guarantee the whole stack leans on.
+//!   matrices and length-sliced E/F projections are all borrowed straight
+//!   from the flat parameter store — the hot path clones nothing.
+//! - **Interned parameter handles.** `model::EncoderHandles` resolves
+//!   every hot-path parameter name once per `(Params, ModelConfig)` into
+//!   `(offset, shape)` handles cached in the scratch; combined with
+//!   `model::EncodeScratch` buffer reuse, a warm `encode_with` performs
+//!   **zero heap allocations** beyond its output in the serial regime
+//!   (GEMMs below the parallel threshold or an intra-GEMM cap of 1 —
+//!   pinned by the counting-allocator test in `tests/alloc_free.rs`;
+//!   parallel GEMMs additionally queue a few boxed pool tasks per call).
+//! - **Deterministic threading.** `linalg::gemm` row-partitions large
+//!   products into pool tasks (serial below a FLOP threshold).  Each
+//!   output row is computed by one task with a fixed accumulation order,
+//!   so results are **bitwise identical for any budget or pool size** —
+//!   the determinism guarantee the whole stack leans on.
 //! - **Example-level batching.** `model::encode_batch` /
-//!   `mlm_predict_batch` stripe a (possibly ragged) batch across workers,
-//!   each with a serial scratch; `coordinator::ReferenceRunner` exposes
-//!   that as a `BatchRunner`, making the coordinator/batcher stack fully
-//!   functional — end to end — without XLA.
+//!   `mlm_predict_batch` stripe a (possibly ragged) batch across pool
+//!   tasks, each with a serial scratch; `coordinator::ReferenceRunner`
+//!   exposes that as a `BatchRunner` — all buckets sharing one
+//!   `Arc<Params>` — making the coordinator/batcher stack fully
+//!   functional, end to end, without XLA.
+//!
+//! # Environment variables
+//!
+//! - `LINFORMER_THREADS` — the global compute-thread budget: the size of
+//!   the persistent pool and the cap on workers per GEMM.  Defaults to
+//!   `available_parallelism`; zero or non-numeric values are rejected
+//!   with a one-time warning and fall back to the default.  Read once at
+//!   first parallel use — set it (or call `gemm::set_max_threads`) before
+//!   any compute runs.
 //!
 //! Bench trajectories for this path land in `BENCH_encoder.json` (see
-//! `benches/fig2_inference.rs` and `benches/table3_efficiency.rs`).
+//! `benches/fig2_inference.rs` and `benches/table3_efficiency.rs`; each
+//! record carries the `budget` / `pool_workers` it was measured under).
 
 pub mod analysis;
 pub mod coordinator;

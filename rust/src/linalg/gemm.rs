@@ -4,17 +4,20 @@
 //! `matmul` computes `C = A·B`, `matmul_nt` computes `C = A·Bᵀ` (the layout
 //! attention wants for Q·Kᵀ without materialising a transpose).  Both use
 //! cache blocking plus an 8-wide unrolled inner kernel, and above
-//! [`PAR_FLOP_THRESHOLD`] they row-partition the output across
-//! `std::thread::scope` workers (no dependencies, no thread pool to poison).
+//! [`PAR_FLOP_THRESHOLD`] they row-partition the output into tasks on the
+//! process-wide persistent [`pool`](super::pool) — no per-call thread
+//! spawns, and concurrent callers (e.g. several serving buckets) share the
+//! one global compute budget instead of each planning against the whole
+//! machine.
 //!
 //! # Determinism
 //!
-//! Every output row is produced by exactly one worker running the same
+//! Every output row is produced by exactly one task running the same
 //! serial per-row kernel in the same accumulation order (ascending `k`),
-//! so results are **bitwise identical** for any thread count — the
-//! `threaded_matches_serial_bitwise` test pins this down.  This is what
-//! lets `encode_batch` parallelise freely while still matching per-example
-//! `encode` bit-for-bit.
+//! so results are **bitwise identical** for any worker cap or pool size —
+//! the `threaded_matches_serial_bitwise` test pins this down.  This is
+//! what lets `encode_batch` parallelise freely while still matching
+//! per-example `encode` bit-for-bit.
 //!
 //! # NaN/Inf propagation
 //!
@@ -23,8 +26,9 @@
 //! (`0.0 * NaN = NaN` must surface).  The branch is gone; the
 //! `nan_propagates_through_zero_entries` test keeps it gone.
 
-use super::{Mat, MatView};
+use super::{pool, Mat, MatView};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Once;
 
 const BLOCK_M: usize = 64;
 const BLOCK_N: usize = 64;
@@ -37,25 +41,55 @@ pub const PAR_FLOP_THRESHOLD: usize = 1 << 22;
 /// Process-wide worker cap (0 = not yet resolved).
 static THREAD_CAP: AtomicUsize = AtomicUsize::new(0);
 
+/// Warn about a malformed `LINFORMER_THREADS` at most once per process.
+static ENV_WARNING: Once = Once::new();
+
 /// Cap the number of GEMM worker threads (also settable via the
 /// `LINFORMER_THREADS` env var; defaults to `available_parallelism`).
+///
+/// This is also the size of the process-wide [`pool`] — call it (or set
+/// the env var) *before* any parallel work runs; once the pool exists its
+/// worker count is fixed, and later changes only affect how many tasks a
+/// single GEMM is split into.
 pub fn set_max_threads(n: usize) {
     THREAD_CAP.store(n.max(1), Ordering::Relaxed);
 }
 
-/// Resolved worker cap for this process.
+/// Parse a `LINFORMER_THREADS`-style value.  Returns the cap plus whether
+/// the raw value was valid; invalid values (zero, negative, non-numeric)
+/// fall back to `default` rather than silently degenerating the thread
+/// plan to a useless cap.
+fn parse_thread_env(raw: &str, default: usize) -> (usize, bool) {
+    match raw.trim().parse::<usize>() {
+        Ok(t) if t > 0 => (t, true),
+        _ => (default, false),
+    }
+}
+
+/// Resolved worker cap for this process — the global compute budget.
 pub fn max_threads() -> usize {
     let t = THREAD_CAP.load(Ordering::Relaxed);
     if t != 0 {
         return t;
     }
-    let t = std::env::var("LINFORMER_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&t| t > 0)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map_or(1, |n| n.get())
-        });
+    let default =
+        std::thread::available_parallelism().map_or(1, |n| n.get());
+    let t = match std::env::var("LINFORMER_THREADS") {
+        Ok(raw) => {
+            let (t, valid) = parse_thread_env(&raw, default);
+            if !valid {
+                ENV_WARNING.call_once(|| {
+                    eprintln!(
+                        "[linformer] warning: LINFORMER_THREADS={raw:?} is \
+                         not a positive integer; falling back to \
+                         available_parallelism ({default})"
+                    );
+                });
+            }
+            t
+        }
+        Err(_) => default,
+    };
     THREAD_CAP.store(t, Ordering::Relaxed);
     t
 }
@@ -101,8 +135,11 @@ pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     matmul_nt_view(MatView::full(a), MatView::full(b), c, t);
 }
 
-/// C = A·B over strided views with an explicit worker count.  `c` is
-/// resized (allocation-free after warmup) and fully overwritten.
+/// C = A·B over strided views with an explicit worker cap.  `c` is
+/// resized (allocation-free after warmup) and fully overwritten.  Above
+/// one worker the rows are partitioned into tasks on the global
+/// [`pool`]; partitioning depends only on `threads`, so output is
+/// bitwise identical for any pool size.
 pub fn matmul_view(a: MatView<'_>, b: MatView<'_>, c: &mut Mat, threads: usize) {
     assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
     c.reset(a.rows, b.cols);
@@ -110,20 +147,12 @@ pub fn matmul_view(a: MatView<'_>, b: MatView<'_>, c: &mut Mat, threads: usize) 
     if m == 0 || n == 0 || a.cols == 0 {
         return;
     }
-    let t = threads.clamp(1, m);
-    if t == 1 {
-        mm_rows(a, b, &mut c.data, 0);
-        return;
-    }
-    let rows_per = (m + t - 1) / t;
-    std::thread::scope(|s| {
-        for (w, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
-            s.spawn(move || mm_rows(a, b, chunk, w * rows_per));
-        }
+    run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+        mm_rows(a, b, chunk, row0)
     });
 }
 
-/// C = A·Bᵀ over strided views with an explicit worker count.
+/// C = A·Bᵀ over strided views with an explicit worker cap.
 pub fn matmul_nt_view(a: MatView<'_>, b: MatView<'_>, c: &mut Mat, threads: usize) {
     assert_eq!(a.cols, b.cols, "matmul_nt inner dims: {} vs {}", a.cols, b.cols);
     c.reset(a.rows, b.rows);
@@ -131,16 +160,8 @@ pub fn matmul_nt_view(a: MatView<'_>, b: MatView<'_>, c: &mut Mat, threads: usiz
     if m == 0 || n == 0 {
         return;
     }
-    let t = threads.clamp(1, m);
-    if t == 1 {
-        mmnt_rows(a, b, &mut c.data, 0);
-        return;
-    }
-    let rows_per = (m + t - 1) / t;
-    std::thread::scope(|s| {
-        for (w, chunk) in c.data.chunks_mut(rows_per * n).enumerate() {
-            s.spawn(move || mmnt_rows(a, b, chunk, w * rows_per));
-        }
+    run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+        mmnt_rows(a, b, chunk, row0)
     });
 }
 
@@ -161,17 +182,41 @@ pub fn matmul_view_cols(
     if m == 0 || b.cols == 0 {
         return;
     }
+    run_row_chunks(&mut out.data, m, threads, stride, move |chunk, row0| {
+        mm_cols_rows(a, b, chunk, row0, col0, stride)
+    });
+}
+
+/// Split `data` (m rows of width `stride`) into up to `threads`
+/// contiguous row blocks and run `kernel(chunk, row0)` over each as
+/// tasks on the global [`pool`] — the one fork-join shape every GEMM
+/// variant shares.  `threads == 1` runs inline on the caller (the
+/// serial fast path).  Chunking depends only on `threads`, and each
+/// chunk is produced by the same serial kernel either way, so outputs
+/// are bitwise identical for any pool size.
+fn run_row_chunks<'env, K>(
+    data: &'env mut [f32],
+    m: usize,
+    threads: usize,
+    stride: usize,
+    kernel: K,
+) where
+    K: Fn(&mut [f32], usize) + Send + Copy + 'env,
+{
     let t = threads.clamp(1, m);
     if t == 1 {
-        mm_cols_rows(a, b, &mut out.data, 0, col0, stride);
+        kernel(data, 0);
         return;
     }
     let rows_per = (m + t - 1) / t;
-    std::thread::scope(|s| {
-        for (w, chunk) in out.data.chunks_mut(rows_per * stride).enumerate() {
-            s.spawn(move || mm_cols_rows(a, b, chunk, w * rows_per, col0, stride));
-        }
-    });
+    let tasks: Vec<pool::Task<'env>> = data
+        .chunks_mut(rows_per * stride)
+        .enumerate()
+        .map(|(w, chunk)| {
+            Box::new(move || kernel(chunk, w * rows_per)) as pool::Task<'env>
+        })
+        .collect();
+    pool::global().run(tasks);
 }
 
 /// Serial blocked kernel over output rows `row0..row0 + c.len()/n` of A·B.
@@ -458,5 +503,45 @@ mod tests {
     #[should_panic(expected = "matmul inner dims")]
     fn shape_mismatch_panics() {
         matmul(&Mat::zeros(2, 3), &Mat::zeros(4, 2));
+    }
+
+    #[test]
+    fn thread_env_zero_falls_back_to_default() {
+        let (t, valid) = parse_thread_env("0", 8);
+        assert_eq!(t, 8);
+        assert!(!valid, "0 must be rejected, not become a degenerate plan");
+    }
+
+    #[test]
+    fn thread_env_garbage_falls_back_to_default() {
+        for raw in ["abc", "", "-3", "4.5", "1e3"] {
+            let (t, valid) = parse_thread_env(raw, 6);
+            assert_eq!(t, 6, "raw {raw:?}");
+            assert!(!valid, "raw {raw:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn thread_env_valid_values_pass_through() {
+        assert_eq!(parse_thread_env("4", 8), (4, true));
+        assert_eq!(parse_thread_env(" 16 ", 8), (16, true));
+    }
+
+    #[test]
+    fn pool_gemm_matches_serial_for_any_chunking() {
+        // same property as threaded_matches_serial_bitwise, phrased
+        // against the pool explicitly: however the rows are chunked into
+        // pool tasks, output is bitwise identical to the serial kernel
+        let mut rng = Pcg32::seeded(21);
+        let a = rand_mat(&mut rng, 37, 53);
+        let b = rand_mat(&mut rng, 53, 29);
+        let (av, bv) = (MatView::full(&a), MatView::full(&b));
+        let mut serial = Mat::zeros(0, 0);
+        matmul_view(av, bv, &mut serial, 1);
+        for chunks in [2, 8, 37, 64] {
+            let mut pooled = Mat::zeros(0, 0);
+            matmul_view(av, bv, &mut pooled, chunks);
+            assert_eq!(serial.data, pooled.data, "{chunks} chunks diverged");
+        }
     }
 }

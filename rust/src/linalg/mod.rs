@@ -7,9 +7,13 @@
 //! multi-threaded (see [`gemm`]) so the Rust baseline is compute- rather
 //! than overhead-bound, and [`MatView`] gives zero-copy strided access to
 //! sub-matrices (per-head Q/K/V slices, parameter tensors, sliced E/F
-//! projections) so the encoder hot path never copies its inputs.
+//! projections) so the encoder hot path never copies its inputs.  All
+//! parallel work executes on the persistent process-wide [`pool`], which
+//! caps compute at one global thread budget however many callers are in
+//! flight.
 
 pub mod gemm;
+pub mod pool;
 pub mod svd;
 
 pub use gemm::{matmul, matmul_into, matmul_nt, matmul_nt_into};

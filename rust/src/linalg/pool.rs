@@ -1,0 +1,403 @@
+//! Process-wide persistent compute pool — the single thread budget every
+//! parallel hot path draws from.
+//!
+//! Before this module, each parallel region (`gemm` row partitions,
+//! `encode_batch` example striping, every coordinator bucket worker's
+//! batch) spawned its own `std::thread::scope` threads and planned against
+//! the *whole* machine.  At serving concurrency that meant a thread spawn
+//! per batch per GEMM and, worse, N concurrently-busy buckets each using
+//! `gemm::max_threads()` workers — N-fold oversubscription.  The pool
+//! replaces all of that:
+//!
+//! - **One set of workers.**  [`global()`] lazily spawns
+//!   [`gemm::max_threads()`](super::gemm::max_threads) persistent workers
+//!   (the process compute budget, set via `LINFORMER_THREADS` or
+//!   [`gemm::set_max_threads`](super::gemm::set_max_threads) *before*
+//!   first use).  They live for the process; there is no per-batch spawn
+//!   or join cost.
+//! - **A hard concurrency bound.**  Parallel tasks execute *only* on pool
+//!   workers; a non-worker caller of [`Pool::run`] parks until its tasks
+//!   finish instead of computing alongside them.  However many buckets,
+//!   batches and GEMMs are in flight, at most `budget` threads do compute
+//!   work at any instant (pinned by `concurrency_never_exceeds_workers`
+//!   and the `pool_stress` integration test).  Work below the GEMM
+//!   parallel threshold stays inline on the caller, exactly as before.
+//! - **Determinism.**  The pool only changes *where* a task runs, never
+//!   how work is partitioned: each task is the same serial kernel over the
+//!   same chunk the scoped-thread path used, so outputs stay bitwise
+//!   identical for any pool size (see `gemm::threaded_matches_serial_bitwise`).
+//!
+//! # Nesting and deadlock-freedom
+//!
+//! `encode_batch` tasks call back into `gemm`, which may submit nested
+//! task sets.  A pool worker that waits on a nested set would deadlock if
+//! it merely parked (all workers could end up waiting on queued tasks no
+//! thread is left to run), so a *worker* waiting on [`Pool::run`] helps
+//! drain the queue instead of sleeping.  Task sets form a strict DAG
+//! (batch item → GEMM chunks, chunks are leaves), so helping always makes
+//! progress and every `run` returns.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// A unit of compute work borrowed from the caller's stack frame.
+/// [`Pool::run`] guarantees every task has finished before it returns,
+/// which is what makes the borrow sound.
+pub type Task<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+type StaticTask = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion state of one `run` call (one "scope" of tasks).
+struct ScopeState {
+    /// Tasks submitted but not yet finished executing.
+    pending: AtomicUsize,
+    /// Mutex/condvar pair the owner parks on until `pending` hits zero.
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+    /// First panic payload raised by a task, re-raised on the owner.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+struct QueuedTask {
+    scope: Arc<ScopeState>,
+    task: StaticTask,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<QueuedTask>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    /// Tasks executing right now / the high-water mark — the budget
+    /// instrumentation the stress test asserts against.
+    busy: AtomicUsize,
+    peak_busy: AtomicUsize,
+}
+
+/// A persistent worker pool.  Use [`global()`] everywhere except tests.
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+std::thread_local! {
+    /// Set on pool worker threads: a nested [`Pool::run`] from a worker
+    /// helps drain the queue instead of parking (see module docs).
+    static IS_POOL_WORKER: std::cell::Cell<bool> =
+        const { std::cell::Cell::new(false) };
+
+    /// Whether this thread is already inside [`execute`]: a worker that
+    /// *helps* while blocked in a nested [`Pool::run`] re-enters
+    /// `execute` on the same thread, and must not be counted in `busy` a
+    /// second time — `busy` counts threads doing compute, not stack
+    /// frames.
+    static IN_TASK: std::cell::Cell<bool> =
+        const { std::cell::Cell::new(false) };
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool, sized to [`super::gemm::max_threads()`] at first
+/// use.  Call [`super::gemm::set_max_threads`] (or export
+/// `LINFORMER_THREADS`) before any parallel work to change the budget.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| Pool::new(super::gemm::max_threads()))
+}
+
+impl Pool {
+    /// Spawn a pool with `workers` persistent threads (at least one).
+    pub fn new(workers: usize) -> Pool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            busy: AtomicUsize::new(0),
+            peak_busy: AtomicUsize::new(0),
+        });
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("linformer-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+        }
+        Pool { shared, workers }
+    }
+
+    /// The compute-thread budget: number of persistent workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// High-water mark of concurrently-executing tasks since the pool
+    /// started.  By construction this never exceeds [`Pool::workers`].
+    pub fn peak_busy(&self) -> usize {
+        self.shared.peak_busy.load(Ordering::Relaxed)
+    }
+
+    /// Execute every task and return once **all** of them have finished.
+    ///
+    /// Tasks may borrow from the caller's stack (they are `'env`, not
+    /// `'static`); the blocking contract is what makes that sound.  A
+    /// single-task set runs inline on the caller — it is the serial case
+    /// and paying a queue round-trip for it would only add latency.  If a
+    /// task panics, the panic is re-raised here after the remaining tasks
+    /// finish.
+    pub fn run<'env>(&self, tasks: Vec<Task<'env>>) {
+        let mut tasks = tasks;
+        if tasks.len() <= 1 {
+            if let Some(task) = tasks.pop() {
+                task();
+            }
+            return;
+        }
+        let scope = Arc::new(ScopeState {
+            pending: AtomicUsize::new(tasks.len()),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().expect("pool queue");
+            for task in tasks {
+                // SAFETY: this function does not return until `pending`
+                // reaches zero, i.e. until every queued task has finished
+                // executing, so the 'env borrows inside each task strictly
+                // outlive every use.  The box is only ever called once.
+                let task: StaticTask = unsafe { std::mem::transmute(task) };
+                q.push_back(QueuedTask { scope: Arc::clone(&scope), task });
+            }
+        }
+        self.shared.work_cv.notify_all();
+
+        let helping = IS_POOL_WORKER.with(|f| f.get());
+        while scope.pending.load(Ordering::Acquire) != 0 {
+            if helping {
+                // A worker must not sleep while work is queued: the queued
+                // tasks may be exactly the ones it is waiting for (or be
+                // blocking the workers that hold them) — see module docs.
+                let next =
+                    self.shared.queue.lock().expect("pool queue").pop_back();
+                if let Some(qt) = next {
+                    execute(&self.shared, qt);
+                    continue;
+                }
+            }
+            let guard = scope.done_mx.lock().expect("pool scope");
+            if scope.pending.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            // Timeout as a missed-wakeup backstop; completion also
+            // notifies, so the common path wakes immediately.
+            let _ = scope
+                .done_cv
+                .wait_timeout(guard, Duration::from_millis(1))
+                .expect("pool scope wait");
+        }
+        if let Some(payload) = scope.panic.lock().expect("pool panic").take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // Only test pools are ever dropped (the global pool lives for the
+        // process): signal workers so their threads exit once idle.
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let next = {
+            let mut q = shared.queue.lock().expect("pool queue");
+            loop {
+                if let Some(qt) = q.pop_front() {
+                    break Some(qt);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).expect("pool wait");
+            }
+        };
+        match next {
+            Some(qt) => execute(shared, qt),
+            None => return,
+        }
+    }
+}
+
+/// Run one task, maintain the busy instrumentation, record any panic and
+/// signal the owning scope when its last task finishes.  The busy count
+/// is per *thread*, not per stack frame: a helping worker re-entering
+/// here from a nested wait is already counted by its outermost frame.
+fn execute(shared: &Shared, qt: QueuedTask) {
+    let QueuedTask { scope, task } = qt;
+    let outermost = IN_TASK.with(|f| !f.replace(true));
+    if outermost {
+        let now = shared.busy.fetch_add(1, Ordering::AcqRel) + 1;
+        shared.peak_busy.fetch_max(now, Ordering::AcqRel);
+    }
+    let result = catch_unwind(AssertUnwindSafe(task));
+    if outermost {
+        shared.busy.fetch_sub(1, Ordering::AcqRel);
+        IN_TASK.with(|f| f.set(false));
+    }
+    if let Err(payload) = result {
+        let mut slot = scope.panic.lock().expect("pool panic");
+        if slot.is_none() {
+            *slot = Some(payload);
+        }
+    }
+    if scope.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // last task: wake the owner (lock pairs with the owner's
+        // check-then-wait so the notify cannot be missed)
+        let _guard = scope.done_mx.lock().expect("pool scope");
+        scope.done_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::SeqCst;
+
+    #[test]
+    fn run_executes_every_task_exactly_once() {
+        let pool = Pool::new(3);
+        let counts: Vec<AtomicUsize> =
+            (0..64).map(|_| AtomicUsize::new(0)).collect();
+        let tasks: Vec<Task<'_>> = counts
+            .iter()
+            .map(|c| {
+                Box::new(move || {
+                    c.fetch_add(1, SeqCst);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert!(counts.iter().all(|c| c.load(SeqCst) == 1));
+    }
+
+    #[test]
+    fn empty_and_single_task_sets_run_inline() {
+        let pool = Pool::new(2);
+        pool.run(Vec::new());
+        let hit = AtomicUsize::new(0);
+        let hit_r = &hit;
+        pool.run(vec![Box::new(move || {
+            hit_r.fetch_add(1, SeqCst);
+        }) as Task<'_>]);
+        assert_eq!(hit.load(SeqCst), 1);
+    }
+
+    #[test]
+    fn concurrency_never_exceeds_workers() {
+        let pool = Pool::new(2);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let (live_r, peak_r) = (&live, &peak);
+        let tasks: Vec<Task<'_>> = (0..32)
+            .map(|_| {
+                Box::new(move || {
+                    let now = live_r.fetch_add(1, SeqCst) + 1;
+                    peak_r.fetch_max(now, SeqCst);
+                    std::thread::sleep(Duration::from_millis(2));
+                    live_r.fetch_sub(1, SeqCst);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert!(peak.load(SeqCst) >= 1);
+        assert!(
+            peak.load(SeqCst) <= 2,
+            "budget exceeded: {} tasks ran concurrently on a 2-worker pool",
+            peak.load(SeqCst)
+        );
+        assert!(pool.peak_busy() <= 2);
+    }
+
+    #[test]
+    fn nested_run_from_workers_completes() {
+        let pool = Pool::new(2);
+        let sum = AtomicUsize::new(0);
+        let (sum_r, pool_r) = (&sum, &pool);
+        let outer: Vec<Task<'_>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    let inner: Vec<Task<'_>> = (0..4)
+                        .map(|j| {
+                            Box::new(move || {
+                                sum_r.fetch_add(100 * i + j, SeqCst);
+                            }) as Task<'_>
+                        })
+                        .collect();
+                    pool_r.run(inner);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(outer);
+        let want: usize =
+            (0..4).map(|i| (0..4).map(|j| 100 * i + j).sum::<usize>()).sum();
+        assert_eq!(sum.load(SeqCst), want);
+        // a worker helping inside a nested run is one busy thread, not
+        // two — the budget instrumentation must not double-count it
+        assert!(
+            pool.peak_busy() <= 2,
+            "nested helping double-counted: peak {} on 2 workers",
+            pool.peak_busy()
+        );
+    }
+
+    #[test]
+    fn parallel_callers_share_one_pool() {
+        let pool = Pool::new(2);
+        let total = AtomicUsize::new(0);
+        let (total_r, pool_r) = (&total, &pool);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        let tasks: Vec<Task<'_>> = (0..3)
+                            .map(|_| {
+                                Box::new(move || {
+                                    total_r.fetch_add(1, SeqCst);
+                                })
+                                    as Task<'_>
+                            })
+                            .collect();
+                        pool_r.run(tasks);
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(SeqCst), 4 * 8 * 3);
+        assert!(pool.peak_busy() <= 2, "peak {} > 2", pool.peak_busy());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn task_panic_propagates_to_owner() {
+        let pool = Pool::new(2);
+        let tasks: Vec<Task<'static>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("boom")),
+            Box::new(|| {}),
+        ];
+        pool.run(tasks);
+    }
+
+    #[test]
+    fn global_pool_is_sized_to_the_budget() {
+        let p = global();
+        assert_eq!(p.workers(), crate::linalg::gemm::max_threads());
+        assert!(p.peak_busy() <= p.workers());
+    }
+}

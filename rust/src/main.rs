@@ -388,7 +388,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
     cfg.d_ff = 128;
     cfg.k_proj = 32;
     cfg.vocab_size = 512;
-    let params = Params::init(&cfg, 0);
+    let params = std::sync::Arc::new(Params::init(&cfg, 0));
     println!(
         "[serve] pjrt feature off — serving the pure-Rust reference \
          encoder (n={}, k={})",

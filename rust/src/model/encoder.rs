@@ -8,28 +8,38 @@
 //!
 //! # Hot-path architecture
 //!
-//! - **Zero copies.** Weights are read through [`Params::view`] /
-//!   [`Params::view3`] (borrowed [`MatView`]s of the flat store); per-head
-//!   Q/K/V slices are strided column windows of the packed projections;
-//!   E/F projections are sliced to the live length by restricting a view's
-//!   column count — the per-head clones of the old path are gone.
+//! - **Zero copies.** Weights are read through interned [`ParamHandle`]s
+//!   (resolved `(offset, shape)` entries, borrowed as [`MatView`]s of the
+//!   flat store); per-head Q/K/V slices are strided column windows of the
+//!   packed projections; E/F projections are sliced to the live length by
+//!   restricting a view's column count — the per-head clones of the old
+//!   path are gone.
+//! - **Interned handles.** [`EncoderHandles`] resolves every parameter
+//!   name the forward pass touches *once* per `(Params, ModelConfig)` and
+//!   is cached inside the scratch, so the per-layer loop builds no
+//!   `format!` name strings and runs no `Params::lookup` linear scans.
 //! - **Scratch reuse.** All per-layer buffers (pre-LN hidden, packed
 //!   q/k/v, compressed K̄/V̄, attention logits, context, FFN activations)
 //!   live in an [`EncodeScratch`] passed through [`encode_with`]; after a
-//!   warmup call the forward pass allocates no matrix temporaries beyond
-//!   its output.  (Parameter-name `format!` strings are still built per
-//!   call — interned handles are a ROADMAP open item.)
-//! - **Threading.** Large GEMMs row-partition across scoped threads (see
-//!   [`crate::linalg::gemm`]); [`encode_batch`] additionally parallelises
-//!   across examples, splitting the core budget between the two levels.
-//!   Both are bitwise-deterministic, so `encode_batch` output equals
-//!   looped [`encode`] output exactly, for any thread count.
+//!   warmup call the forward pass performs **zero heap allocations**
+//!   beyond its output matrix in the serial regime (GEMMs below the
+//!   parallel threshold or an intra-GEMM cap of 1 — pinned by the
+//!   counting-allocator test in `tests/alloc_free.rs`; above the
+//!   threshold each parallel GEMM also queues a few boxed pool tasks).
+//! - **Threading.** Large GEMMs row-partition into tasks on the
+//!   process-wide persistent pool (see [`crate::linalg::pool`]);
+//!   [`encode_batch`] additionally parallelises across examples on the
+//!   same pool, so however many serving buckets are busy, compute never
+//!   exceeds the one global thread budget.  Both levels are
+//!   bitwise-deterministic, so `encode_batch` output equals looped
+//!   [`encode`] output exactly, for any budget or pool size.
 
 use super::config::{Attention, ModelConfig, ProjMode, Sharing};
-use super::params::Params;
+use super::params::{ParamHandle, Params};
 use crate::linalg::{
-    gelu_inplace, gemm, layer_norm_rows, softmax_rows, Mat, MatView,
+    gelu_inplace, gemm, layer_norm_rows, pool, softmax_rows, Mat, MatView,
 };
+use std::sync::Mutex;
 
 /// Per-head attention matrices captured during a forward pass
 /// (only when requested — they are O(n²) / O(nk)).
@@ -46,6 +56,176 @@ pub struct EncodeOut {
     pub capture: Option<AttnCapture>,
 }
 
+/// How one layer compresses K/V, with its projection parameters
+/// pre-resolved.
+#[derive(Debug, Clone, Copy)]
+enum ProjHandles {
+    /// Standard (uncompressed) attention.
+    Identity,
+    /// Mean-pool compression — no learned parameters.
+    Pool,
+    /// Depthwise-conv compression with window weight slices for K (`e`)
+    /// and V (`f`) — equal handles under weight sharing.
+    Conv { e: ParamHandle, f: ParamHandle },
+    /// Learned linear projections E/F; `per_head` marks stacked 3-D
+    /// tensors indexed by head (`Sharing::None`).
+    Linear { e: ParamHandle, f: ParamHandle, per_head: bool },
+}
+
+/// Interned handles for every tensor one encoder layer touches.
+#[derive(Debug, Clone, Copy)]
+struct LayerHandles {
+    ln1_scale: ParamHandle,
+    ln1_bias: ParamHandle,
+    wq: ParamHandle,
+    bq: ParamHandle,
+    wk: ParamHandle,
+    bk: ParamHandle,
+    wv: ParamHandle,
+    bv: ParamHandle,
+    wo: ParamHandle,
+    bo: ParamHandle,
+    ln2_scale: ParamHandle,
+    ln2_bias: ParamHandle,
+    ffn_w1: ParamHandle,
+    ffn_b1: ParamHandle,
+    ffn_w2: ParamHandle,
+    ffn_b2: ParamHandle,
+    proj: ProjHandles,
+}
+
+/// Every parameter name the encoder (and MLM head) hot path used to
+/// resolve per call, interned once per `(Params, ModelConfig)`.
+///
+/// Built lazily by [`encode_with`] and cached inside [`EncodeScratch`];
+/// rebuilt only when the scratch is used with a different parameter
+/// store or config (checked via [`EncoderHandles::matches`] on the
+/// store's process-unique [`Params::generation`] — clones of a store
+/// share it, distinct stores never do, so a freed-and-reused allocation
+/// can't alias a stale cache).
+pub struct EncoderHandles {
+    /// [`Params::generation`] of the store this was built against — a
+    /// process-unique id, so a dropped store whose allocation gets
+    /// reused can never be mistaken for the original (no pointer ABA).
+    params_gen: u64,
+    cfg: ModelConfig,
+    tok_emb: ParamHandle,
+    pos_emb: ParamHandle,
+    embed_ln_scale: ParamHandle,
+    embed_ln_bias: ParamHandle,
+    final_ln_scale: ParamHandle,
+    final_ln_bias: ParamHandle,
+    mlm_dense_w: ParamHandle,
+    mlm_dense_b: ParamHandle,
+    mlm_ln_scale: ParamHandle,
+    mlm_ln_bias: ParamHandle,
+    mlm_out_bias: ParamHandle,
+    layers: Vec<LayerHandles>,
+}
+
+impl EncoderHandles {
+    /// Resolve every hot-path parameter name for `(params, cfg)`.  This is
+    /// the only place the encoder builds name strings; panics (like the
+    /// old per-call lookups) if the store is missing a tensor.
+    pub fn build(params: &Params, cfg: &ModelConfig) -> EncoderHandles {
+        let get = |name: &str| {
+            params
+                .handle(name)
+                .unwrap_or_else(|e| panic!("encoder handles: {e}"))
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let p = format!("layer{l}");
+            let lget = |suffix: &str| get(&format!("{p}/{suffix}"));
+            let proj = match (cfg.attention, cfg.proj_mode) {
+                (Attention::Standard, _) => ProjHandles::Identity,
+                (Attention::Linformer, ProjMode::Pool) => ProjHandles::Pool,
+                (Attention::Linformer, ProjMode::Conv) => {
+                    let (e, f) = match cfg.sharing {
+                        Sharing::Layerwise => {
+                            let w = get("proj/conv_w");
+                            (w, w)
+                        }
+                        Sharing::Headwise => {
+                            (lget("conv_w"), lget("conv_w_f"))
+                        }
+                        _ => {
+                            let w = lget("conv_w");
+                            (w, w)
+                        }
+                    };
+                    ProjHandles::Conv { e, f }
+                }
+                (Attention::Linformer, ProjMode::Linear) => {
+                    match cfg.sharing {
+                        Sharing::Layerwise => {
+                            let e = get("proj/E");
+                            ProjHandles::Linear { e, f: e, per_head: false }
+                        }
+                        Sharing::KeyValue => {
+                            let e = lget("E");
+                            ProjHandles::Linear { e, f: e, per_head: false }
+                        }
+                        Sharing::Headwise => ProjHandles::Linear {
+                            e: lget("E"),
+                            f: lget("F"),
+                            per_head: false,
+                        },
+                        Sharing::None => ProjHandles::Linear {
+                            e: lget("E"),
+                            f: lget("F"),
+                            per_head: true,
+                        },
+                    }
+                }
+            };
+            layers.push(LayerHandles {
+                ln1_scale: lget("ln1_scale"),
+                ln1_bias: lget("ln1_bias"),
+                wq: lget("wq"),
+                bq: lget("bq"),
+                wk: lget("wk"),
+                bk: lget("bk"),
+                wv: lget("wv"),
+                bv: lget("bv"),
+                wo: lget("wo"),
+                bo: lget("bo"),
+                ln2_scale: lget("ln2_scale"),
+                ln2_bias: lget("ln2_bias"),
+                ffn_w1: lget("ffn_w1"),
+                ffn_b1: lget("ffn_b1"),
+                ffn_w2: lget("ffn_w2"),
+                ffn_b2: lget("ffn_b2"),
+                proj,
+            });
+        }
+        EncoderHandles {
+            params_gen: params.generation(),
+            cfg: cfg.clone(),
+            tok_emb: get("embed/tokens"),
+            pos_emb: get("embed/positions"),
+            embed_ln_scale: get("embed/ln_scale"),
+            embed_ln_bias: get("embed/ln_bias"),
+            final_ln_scale: get("final/ln_scale"),
+            final_ln_bias: get("final/ln_bias"),
+            mlm_dense_w: get("mlm/dense_w"),
+            mlm_dense_b: get("mlm/dense_b"),
+            mlm_ln_scale: get("mlm/ln_scale"),
+            mlm_ln_bias: get("mlm/ln_bias"),
+            mlm_out_bias: get("mlm/out_bias"),
+            layers,
+        }
+    }
+
+    /// Whether these handles were built against this exact `(params,
+    /// cfg)` pair (cheap: one integer plus a small config compare — no
+    /// allocation).  A clone of the original store also matches: clones
+    /// share the generation, layout and values.
+    pub fn matches(&self, params: &Params, cfg: &ModelConfig) -> bool {
+        self.params_gen == params.generation() && self.cfg == *cfg
+    }
+}
+
 /// Reusable workspace for the encoder forward pass.
 ///
 /// Holds every per-layer buffer so repeated [`encode_with`] calls touch
@@ -54,8 +234,11 @@ pub struct EncodeOut {
 /// particular config or parameter set.
 pub struct EncodeScratch {
     /// Worker cap for intra-GEMM threading (reduced inside batch workers
-    /// so the two parallelism levels share the machine).
+    /// so the two parallelism levels share the budget).
     threads: usize,
+    /// Interned parameter handles, cached across calls (rebuilt only when
+    /// the scratch meets a different `(Params, ModelConfig)`).
+    handles: Option<EncoderHandles>,
     h: Mat,
     q: Mat,
     k: Mat,
@@ -81,6 +264,7 @@ impl EncodeScratch {
         let z = || Mat::zeros(0, 0);
         EncodeScratch {
             threads: threads.max(1),
+            handles: None,
             h: z(),
             q: z(),
             k: z(),
@@ -143,10 +327,17 @@ pub fn encode_with(
         tokens.len(),
         cfg.max_len
     );
+    // Interned handles: taken out of the scratch for the duration of the
+    // call (sidesteps aliasing with the mutable buffer borrows), rebuilt
+    // only when the scratch meets a new (params, cfg) pair.
+    let hd = match scratch.handles.take() {
+        Some(h) if h.matches(params, cfg) => h,
+        _ => EncoderHandles::build(params, cfg),
+    };
     let n = tokens.len();
     let d = cfg.d_model;
-    let tok_emb = params.get("embed/tokens").expect("embed/tokens");
-    let pos_emb = params.get("embed/positions").expect("embed/positions");
+    let tok_emb = params.slice(hd.tok_emb);
+    let pos_emb = params.slice(hd.pos_emb);
     let mut x = Mat::zeros(n, d);
     for (i, &t) in tokens.iter().enumerate() {
         let t = t as usize;
@@ -157,8 +348,8 @@ pub fn encode_with(
     }
     layer_norm_rows(
         &mut x,
-        params.get("embed/ln_scale").unwrap(),
-        params.get("embed/ln_bias").unwrap(),
+        params.slice(hd.embed_ln_scale),
+        params.slice(hd.embed_ln_bias),
         1e-5,
     );
 
@@ -166,16 +357,17 @@ pub fn encode_with(
         capture_attn.then(|| AttnCapture { matrices: Vec::new() });
 
     for l in 0..cfg.n_layers {
-        let p = format!("layer{l}");
+        let lh = &hd.layers[l];
         // pre-LN attention block
         scratch.h.copy_from(&x);
         layer_norm_rows(
             &mut scratch.h,
-            params.get(&format!("{p}/ln1_scale")).unwrap(),
-            params.get(&format!("{p}/ln1_bias")).unwrap(),
+            params.slice(lh.ln1_scale),
+            params.slice(lh.ln1_bias),
             1e-5,
         );
-        let mats = attention_layer(params, cfg, l, scratch, capture.is_some());
+        let mats =
+            attention_layer(params, cfg, &hd, l, scratch, capture.is_some());
         if let Some(c) = capture.as_mut() {
             c.matrices.push(mats);
         }
@@ -184,48 +376,51 @@ pub fn encode_with(
         scratch.h.copy_from(&x);
         layer_norm_rows(
             &mut scratch.h,
-            params.get(&format!("{p}/ln2_scale")).unwrap(),
-            params.get(&format!("{p}/ln2_bias")).unwrap(),
+            params.slice(lh.ln2_scale),
+            params.slice(lh.ln2_bias),
             1e-5,
         );
         let t = scratch.threads;
         gemm::matmul_view(
             MatView::full(&scratch.h),
-            params.view(&format!("{p}/ffn_w1")).unwrap(),
+            params.view_at(lh.ffn_w1),
             &mut scratch.ff,
             gemm::plan_threads(n, d, cfg.d_ff, t),
         );
-        scratch.ff.add_row_vec(params.get(&format!("{p}/ffn_b1")).unwrap());
+        scratch.ff.add_row_vec(params.slice(lh.ffn_b1));
         gelu_inplace(&mut scratch.ff);
         gemm::matmul_view(
             MatView::full(&scratch.ff),
-            params.view(&format!("{p}/ffn_w2")).unwrap(),
+            params.view_at(lh.ffn_w2),
             &mut scratch.ff2,
             gemm::plan_threads(n, cfg.d_ff, d, t),
         );
-        scratch.ff2.add_row_vec(params.get(&format!("{p}/ffn_b2")).unwrap());
+        scratch.ff2.add_row_vec(params.slice(lh.ffn_b2));
         x.add_assign(&scratch.ff2);
     }
     layer_norm_rows(
         &mut x,
-        params.get("final/ln_scale").unwrap(),
-        params.get("final/ln_bias").unwrap(),
+        params.slice(hd.final_ln_scale),
+        params.slice(hd.final_ln_bias),
         1e-5,
     );
+    scratch.handles = Some(hd);
     EncodeOut { hidden: x, capture }
 }
 
 /// Multi-head attention for one layer.  Reads `scratch.h`, leaves the
 /// block output in `scratch.attn_out`; returns the per-head P matrices
-/// when `capture` is set (empty vec otherwise).
+/// when `capture` is set (empty vec otherwise).  All parameters come in
+/// through pre-resolved handles — no name building, no lookups.
 fn attention_layer(
     params: &Params,
     cfg: &ModelConfig,
+    hd: &EncoderHandles,
     layer: usize,
     scratch: &mut EncodeScratch,
     capture: bool,
 ) -> Vec<Mat> {
-    let p = format!("layer{layer}");
+    let lh = &hd.layers[layer];
     let EncodeScratch {
         threads, h, q, k, v, kbar, vbar, logits, ctx, attn_out, ..
     } = scratch;
@@ -236,21 +431,19 @@ fn attention_layer(
     let dh = cfg.d_head();
     let plan = |kdim: usize, ncols: usize| gemm::plan_threads(n, kdim, ncols, threads);
 
-    gemm::matmul_view(MatView::full(h), params.view(&format!("{p}/wq")).unwrap(), q, plan(d, d));
-    q.add_row_vec(params.get(&format!("{p}/bq")).unwrap());
-    gemm::matmul_view(MatView::full(h), params.view(&format!("{p}/wk")).unwrap(), k, plan(d, d));
-    k.add_row_vec(params.get(&format!("{p}/bk")).unwrap());
-    gemm::matmul_view(MatView::full(h), params.view(&format!("{p}/wv")).unwrap(), v, plan(d, d));
-    v.add_row_vec(params.get(&format!("{p}/bv")).unwrap());
+    gemm::matmul_view(MatView::full(h), params.view_at(lh.wq), q, plan(d, d));
+    q.add_row_vec(params.slice(lh.bq));
+    gemm::matmul_view(MatView::full(h), params.view_at(lh.wk), k, plan(d, d));
+    k.add_row_vec(params.slice(lh.bk));
+    gemm::matmul_view(MatView::full(h), params.view_at(lh.wv), v, plan(d, d));
+    v.add_row_vec(params.slice(lh.bv));
 
     ctx.reset(n, d);
     let mut mats = Vec::with_capacity(if capture { heads } else { 0 });
     let scale = 1.0 / (dh as f32).sqrt();
     let lk = cfg.layer_k(layer);
-    let convw = match (cfg.attention, cfg.proj_mode) {
-        (Attention::Linformer, ProjMode::Conv) => {
-            Some(conv_weights(params, cfg, layer))
-        }
+    let convw = match lh.proj {
+        ProjHandles::Conv { e, f } => Some((params.slice(e), params.slice(f))),
         _ => None,
     };
 
@@ -260,99 +453,57 @@ fn attention_layer(
         let kh = MatView::cols(k, col0, dh);
         let vh = MatView::cols(v, col0, dh);
 
-        let (kb, vb) = match (cfg.attention, cfg.proj_mode) {
-            (Attention::Standard, _) => (kh, vh),
-            (Attention::Linformer, ProjMode::Pool) => {
+        let (kb, vb) = match lh.proj {
+            ProjHandles::Identity => (kh, vh),
+            ProjHandles::Pool => {
                 pool_into(kh, lk, kbar);
                 pool_into(vh, lk, vbar);
                 (MatView::full(kbar), MatView::full(vbar))
             }
-            (Attention::Linformer, ProjMode::Conv) => {
+            ProjHandles::Conv { .. } => {
                 let (we, wf) = convw.unwrap();
                 conv_into(kh, we, lk, kbar);
                 conv_into(vh, wf, lk, vbar);
                 (MatView::full(kbar), MatView::full(vbar))
             }
-            (Attention::Linformer, ProjMode::Linear) => {
-                let (e, f) = proj_views(params, cfg, layer, head, n);
-                gemm::matmul_view(e, kh, kbar, gemm::plan_threads(e.rows, n, dh, threads));
-                gemm::matmul_view(f, vh, vbar, gemm::plan_threads(f.rows, n, dh, threads));
+            ProjHandles::Linear { e, f, per_head } => {
+                let (ev, fv) = if per_head {
+                    (params.view3_at(e, head), params.view3_at(f, head))
+                } else {
+                    (params.view_at(e), params.view_at(f))
+                };
+                // sliced to the live length — zero-copy views throughout
+                let (ev, fv) = (ev.first_cols(n), fv.first_cols(n));
+                gemm::matmul_view(ev, kh, kbar, gemm::plan_threads(ev.rows, n, dh, threads));
+                gemm::matmul_view(fv, vh, vbar, gemm::plan_threads(fv.rows, n, dh, threads));
                 (MatView::full(kbar), MatView::full(vbar))
             }
         };
-        // P = softmax(q kbar^T * scale)  — (n × m)
-        gemm::matmul_nt_view(qh, kb, logits, plan(dh, kb.rows));
-        logits.scale(scale);
-        softmax_rows(logits);
-        if capture {
-            mats.push(logits.clone());
-        }
-        gemm::matmul_view_cols(MatView::full(logits), vb, ctx, col0, plan(kb.rows, dh));
+        // P = softmax(q kbar^T * scale)  — (n × m).  Head logits land in
+        // the reused scratch buffer, or — when capture is requested —
+        // directly in the returned per-head matrix (the old path computed
+        // into scratch and then pushed `logits.clone()`, a redundant
+        // allocate-and-copy per head per layer).
+        let lbuf: &mut Mat = if capture {
+            mats.push(Mat::zeros(0, 0));
+            mats.last_mut().unwrap()
+        } else {
+            &mut *logits
+        };
+        gemm::matmul_nt_view(qh, kb, lbuf, plan(dh, kb.rows));
+        lbuf.scale(scale);
+        softmax_rows(lbuf);
+        gemm::matmul_view_cols(MatView::full(lbuf), vb, ctx, col0, plan(kb.rows, dh));
     }
 
     gemm::matmul_view(
         MatView::full(ctx),
-        params.view(&format!("{p}/wo")).unwrap(),
+        params.view_at(lh.wo),
         attn_out,
         plan(d, d),
     );
-    attn_out.add_row_vec(params.get(&format!("{p}/bo")).unwrap());
+    attn_out.add_row_vec(params.slice(lh.bo));
     mats
-}
-
-/// Resolve the (E, F) projections for (layer, head) under the configured
-/// sharing mode, sliced to the live length `n` — all zero-copy views of
-/// the flat parameter store (the old path cloned the full (k × max_len)
-/// matrices per head per layer per call).
-fn proj_views<'a>(
-    params: &'a Params,
-    cfg: &ModelConfig,
-    layer: usize,
-    head: usize,
-    n: usize,
-) -> (MatView<'a>, MatView<'a>) {
-    let (e, f) = match cfg.sharing {
-        Sharing::Layerwise => {
-            let e = params.view("proj/E").expect("proj/E");
-            (e, e)
-        }
-        Sharing::KeyValue => {
-            let e = params.view(&format!("layer{layer}/E")).unwrap();
-            (e, e)
-        }
-        Sharing::Headwise => (
-            params.view(&format!("layer{layer}/E")).unwrap(),
-            params.view(&format!("layer{layer}/F")).unwrap(),
-        ),
-        Sharing::None => (
-            params.view3(&format!("layer{layer}/E"), head).unwrap(),
-            params.view3(&format!("layer{layer}/F"), head).unwrap(),
-        ),
-    };
-    (e.first_cols(n), f.first_cols(n))
-}
-
-/// Resolve the depthwise-conv projection weights for a layer (borrowed —
-/// no clone).
-fn conv_weights<'a>(
-    params: &'a Params,
-    cfg: &ModelConfig,
-    layer: usize,
-) -> (&'a [f32], &'a [f32]) {
-    match cfg.sharing {
-        Sharing::Layerwise => {
-            let w = params.get("proj/conv_w").expect("proj/conv_w");
-            (w, w)
-        }
-        Sharing::Headwise => (
-            params.get(&format!("layer{layer}/conv_w")).unwrap(),
-            params.get(&format!("layer{layer}/conv_w_f")).unwrap(),
-        ),
-        _ => {
-            let w = params.get(&format!("layer{layer}/conv_w")).unwrap();
-            (w, w)
-        }
-    }
 }
 
 /// Balanced window `r` of `n` rows split into `k` windows: sizes differ by
@@ -415,11 +566,14 @@ fn conv_into(x: MatView<'_>, w: &[f32], k: usize, out: &mut Mat) {
 }
 
 /// Run `n_items` independent forward passes, striping items across up to
-/// `threads` scoped workers.  The worker cap is split between the two
-/// parallelism levels (batch × intra-GEMM) so a small batch on a wide
-/// machine still uses every core without oversubscribing — and since GEMM
+/// `threads` tasks on the process-wide [`pool`].  The worker cap is split
+/// between the two parallelism levels (batch × intra-GEMM) so a small
+/// batch on a wide machine still uses the whole budget — and since GEMM
 /// results are bitwise thread-count-independent, the split never changes
-/// the output.
+/// the output.  Because all tasks (including each task's nested GEMM
+/// chunks) execute on the one global pool, concurrent callers — e.g.
+/// several busy serving buckets — share a single compute-thread budget
+/// instead of oversubscribing the machine.
 fn batch_map<F>(n_items: usize, threads: usize, f: F) -> Vec<Mat>
 where
     F: Fn(&mut EncodeScratch, usize) -> Mat + Sync,
@@ -432,27 +586,30 @@ where
         return (0..n_items).map(|i| f(&mut scratch, i)).collect();
     }
     let inner = (threads / t).max(1);
-    let mut out: Vec<Option<Mat>> = (0..n_items).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let f = &f;
-        let handles: Vec<_> = (0..t)
-            .map(|w| {
-                s.spawn(move || {
-                    let mut scratch = EncodeScratch::with_threads(inner);
-                    (w..n_items)
-                        .step_by(t)
-                        .map(|i| (i, f(&mut scratch, i)))
-                        .collect::<Vec<(usize, Mat)>>()
-                })
-            })
-            .collect();
-        for h in handles {
-            for (i, m) in h.join().expect("encode batch worker") {
-                out[i] = Some(m);
-            }
-        }
-    });
-    out.into_iter().map(|m| m.expect("item computed")).collect()
+    let out: Mutex<Vec<Option<Mat>>> =
+        Mutex::new((0..n_items).map(|_| None).collect());
+    let (f, out_ref) = (&f, &out);
+    let tasks: Vec<pool::Task<'_>> = (0..t)
+        .map(|w| {
+            Box::new(move || {
+                let mut scratch = EncodeScratch::with_threads(inner);
+                let stripe: Vec<(usize, Mat)> = (w..n_items)
+                    .step_by(t)
+                    .map(|i| (i, f(&mut scratch, i)))
+                    .collect();
+                let mut slots = out_ref.lock().expect("batch results");
+                for (i, m) in stripe {
+                    slots[i] = Some(m);
+                }
+            }) as pool::Task<'_>
+        })
+        .collect();
+    pool::global().run(tasks);
+    out.into_inner()
+        .expect("batch results")
+        .into_iter()
+        .map(|m| m.expect("item computed"))
+        .collect()
 }
 
 /// Batched encoder forward: runs every (possibly ragged) sequence through
@@ -476,26 +633,28 @@ pub fn mlm_logits_with(
     scratch: &mut EncodeScratch,
 ) -> Mat {
     let hidden = encode_with(params, cfg, tokens, false, scratch).hidden;
+    // handles were just interned (or validated) by encode_with
+    let hd = scratch.handles.take().expect("handles interned by encode");
     let n = hidden.rows;
     let d = cfg.d_model;
     let t = scratch.threads;
     // dense + gelu + ln in scratch.h (free after encode)
     gemm::matmul_view(
         MatView::full(&hidden),
-        params.view("mlm/dense_w").unwrap(),
+        params.view_at(hd.mlm_dense_w),
         &mut scratch.h,
         gemm::plan_threads(n, d, d, t),
     );
-    scratch.h.add_row_vec(params.get("mlm/dense_b").unwrap());
+    scratch.h.add_row_vec(params.slice(hd.mlm_dense_b));
     gelu_inplace(&mut scratch.h);
     layer_norm_rows(
         &mut scratch.h,
-        params.get("mlm/ln_scale").unwrap(),
-        params.get("mlm/ln_bias").unwrap(),
+        params.slice(hd.mlm_ln_scale),
+        params.slice(hd.mlm_ln_bias),
         1e-5,
     );
     // tied output embedding: logits = h · W_tokᵀ
-    let tok = params.view("embed/tokens").unwrap(); // (vocab × d)
+    let tok = params.view_at(hd.tok_emb); // (vocab × d)
     let mut logits = Mat::zeros(0, 0);
     gemm::matmul_nt_view(
         MatView::full(&scratch.h),
@@ -503,7 +662,8 @@ pub fn mlm_logits_with(
         &mut logits,
         gemm::plan_threads(n, d, cfg.vocab_size, t),
     );
-    logits.add_row_vec(params.get("mlm/out_bias").unwrap());
+    logits.add_row_vec(params.slice(hd.mlm_out_bias));
+    scratch.handles = Some(hd);
     logits
 }
 
@@ -740,6 +900,51 @@ mod tests {
                 "per-layer buffers were reallocated after warmup"
             );
         }
+    }
+
+    #[test]
+    fn interned_handles_survive_warmup_and_invalidate_on_swap() {
+        // one scratch alternating between two parameter sets and two
+        // configs: the handle cache must rebuild exactly when (params,
+        // cfg) changes and never corrupt results
+        let cfg_a = ModelConfig::tiny();
+        let mut cfg_b = ModelConfig::tiny();
+        cfg_b.sharing = Sharing::Headwise;
+        let pa = Params::init(&cfg_a, 31);
+        let pb = Params::init(&cfg_b, 32);
+        let mut scratch = EncodeScratch::with_threads(1);
+        for round in 0..3 {
+            let t = toks(&cfg_a, 16, 60 + round);
+            let a = encode_with(&pa, &cfg_a, &t, false, &mut scratch);
+            assert_eq!(
+                a.hidden.data,
+                encode(&pa, &cfg_a, &t, false).hidden.data,
+                "round {round} params A"
+            );
+            let b = encode_with(&pb, &cfg_b, &t, false, &mut scratch);
+            assert_eq!(
+                b.hidden.data,
+                encode(&pb, &cfg_b, &t, false).hidden.data,
+                "round {round} params B"
+            );
+        }
+    }
+
+    #[test]
+    fn handles_match_only_their_own_pair() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 33);
+        let other = Params::init(&cfg, 34);
+        let hd = EncoderHandles::build(&p, &cfg);
+        assert!(hd.matches(&p, &cfg));
+        assert!(
+            hd.matches(&p.clone(), &cfg),
+            "a clone shares layout and values — no rebuild needed"
+        );
+        assert!(!hd.matches(&other, &cfg), "different store must rebuild");
+        let mut cfg2 = cfg.clone();
+        cfg2.k_proj = cfg.k_proj / 2;
+        assert!(!hd.matches(&p, &cfg2), "different config must rebuild");
     }
 
     #[test]

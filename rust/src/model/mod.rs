@@ -12,6 +12,7 @@ pub mod params;
 pub use config::{Attention, ModelConfig, ProjMode, Sharing};
 pub use encoder::{
     encode, encode_batch, encode_with, mlm_logits, mlm_logits_batch,
-    mlm_logits_with, mlm_predict_batch, AttnCapture, EncodeOut, EncodeScratch,
+    mlm_logits_with, mlm_predict_batch, AttnCapture, EncodeOut,
+    EncodeScratch, EncoderHandles,
 };
-pub use params::{param_count, param_spec, Params};
+pub use params::{param_count, param_spec, ParamHandle, Params};

@@ -129,7 +129,15 @@ pub struct Params {
     pub flat: Vec<f32>,
     spec: Spec,
     offsets: Vec<(String, usize, Vec<usize>)>,
+    /// Process-unique id assigned at construction (clones share it —
+    /// they have the identical layout *and* values).  Lets handle caches
+    /// detect a different store without pointer-identity ABA hazards.
+    generation: u64,
 }
+
+/// Source of [`Params::generation`] ids.
+static NEXT_GENERATION: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(1);
 
 #[derive(Debug, thiserror::Error)]
 pub enum ParamError {
@@ -137,6 +145,33 @@ pub enum ParamError {
     NotFound(String),
     #[error("flat vector has {got} floats, spec needs {want}")]
     SizeMismatch { got: usize, want: usize },
+}
+
+/// Pre-resolved location of a named tensor in the flat store: the
+/// allocation-free counterpart of a name lookup.
+///
+/// [`Params::lookup`] builds a name `String` comparison per call and
+/// linear-scans the spec — fine off the hot path, but `encode_with` used
+/// to pay it (plus a `format!` per name) for every layer of every call.
+/// A handle is resolved once (per `(Params, ModelConfig)`, see
+/// `model::EncoderHandles`) and then borrowed through [`Params::slice`] /
+/// [`Params::view_at`] / [`Params::view3_at`] with nothing but offset
+/// arithmetic.
+///
+/// Handles encode *layout*, not values: a handle resolved against one
+/// `Params` is valid for any other `Params` with the identical spec.  The
+/// `total` stamp (full flat length) guards against cross-layout misuse in
+/// debug builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamHandle {
+    off: usize,
+    len: usize,
+    /// Leading dim of a stacked 3-D tensor (1 for 1-D/2-D).
+    planes: usize,
+    rows: usize,
+    cols: usize,
+    /// Flat length of the store this was resolved against.
+    total: usize,
 }
 
 impl Params {
@@ -151,7 +186,14 @@ impl Params {
             offsets.push((name.clone(), off, shape.clone()));
             off += numel(shape);
         }
-        Ok(Params { flat, spec, offsets })
+        let generation = NEXT_GENERATION
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(Params { flat, spec, offsets, generation })
+    }
+
+    /// Process-unique id of this store (shared by its clones).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Random initialisation (independent of the Python init — used for
@@ -213,6 +255,58 @@ impl Params {
     pub fn get(&self, name: &str) -> Result<&[f32], ParamError> {
         let (off, shape) = self.lookup(name)?;
         Ok(&self.flat[off..off + numel(shape)])
+    }
+
+    /// Resolve a name into an interned [`ParamHandle`] (one lookup, then
+    /// allocation-free access forever after).
+    pub fn handle(&self, name: &str) -> Result<ParamHandle, ParamError> {
+        let (off, shape) = self.lookup(name)?;
+        let len = numel(shape);
+        let (planes, rows, cols) = match shape.len() {
+            1 => (1, 1, shape[0]),
+            2 => (1, shape[0], shape[1]),
+            3 => (shape[0], shape[1], shape[2]),
+            _ => (1, shape[0], len / shape[0].max(1)),
+        };
+        Ok(ParamHandle {
+            off,
+            len,
+            planes,
+            rows,
+            cols,
+            total: self.flat.len(),
+        })
+    }
+
+    /// Borrow the tensor behind a handle as a flat slice (no lookup).
+    #[inline]
+    pub fn slice(&self, h: ParamHandle) -> &[f32] {
+        debug_assert_eq!(h.total, self.flat.len(), "handle from other layout");
+        &self.flat[h.off..h.off + h.len]
+    }
+
+    /// Zero-copy [`MatView`] of a 1-D/2-D tensor behind a handle.
+    #[inline]
+    pub fn view_at(&self, h: ParamHandle) -> MatView<'_> {
+        debug_assert_eq!(h.total, self.flat.len(), "handle from other layout");
+        debug_assert_eq!(h.planes, 1, "3-D handle needs view3_at");
+        let n = h.rows * h.cols;
+        MatView::new(&self.flat[h.off..h.off + n], h.rows, h.cols, h.cols)
+    }
+
+    /// Zero-copy view of one plane of a stacked 3-D tensor behind a
+    /// handle (e.g. per-head E of shape `[h, k, n]`).
+    #[inline]
+    pub fn view3_at(&self, h: ParamHandle, index: usize) -> MatView<'_> {
+        debug_assert_eq!(h.total, self.flat.len(), "handle from other layout");
+        assert!(index < h.planes, "plane {index} out of {}", h.planes);
+        let base = h.off + index * h.rows * h.cols;
+        MatView::new(
+            &self.flat[base..base + h.rows * h.cols],
+            h.rows,
+            h.cols,
+            h.cols,
+        )
     }
 
     pub fn shape(&self, name: &str) -> Result<&[usize], ParamError> {
@@ -372,6 +466,56 @@ mod tests {
                 p.mat3("layer0/E", head).unwrap()
             );
         }
+    }
+
+    #[test]
+    fn handle_access_matches_name_access() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 5);
+        for name in ["layer0/wq", "embed/tokens", "proj/E", "layer1/bq"] {
+            let h = p.handle(name).unwrap();
+            assert_eq!(p.slice(h), p.get(name).unwrap(), "{name}");
+            let hv = p.view_at(h);
+            let nv = p.view(name).unwrap();
+            assert_eq!((hv.rows, hv.cols), (nv.rows, nv.cols), "{name}");
+            assert_eq!(hv.to_mat(), nv.to_mat(), "{name}");
+        }
+        assert!(p.handle("layer0/nonexistent").is_err());
+    }
+
+    #[test]
+    fn handle_view3_matches_view3() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.sharing = Sharing::None;
+        let p = Params::init(&cfg, 6);
+        let h = p.handle("layer0/E").unwrap();
+        for head in 0..cfg.n_heads {
+            assert_eq!(
+                p.view3_at(h, head).to_mat(),
+                p.view3("layer0/E", head).unwrap().to_mat()
+            );
+        }
+    }
+
+    #[test]
+    fn generations_are_unique_per_store_and_shared_by_clones() {
+        let cfg = ModelConfig::tiny();
+        let a = Params::init(&cfg, 1);
+        let b = Params::init(&cfg, 1); // same seed, still a distinct store
+        assert_ne!(a.generation(), b.generation());
+        assert_eq!(a.generation(), a.clone().generation());
+    }
+
+    #[test]
+    fn handles_are_layout_portable_across_same_spec_params() {
+        // a handle resolved on one Params reads the right tensor from
+        // another Params with the identical spec (what lets EncoderHandles
+        // be cached per layout, not per value)
+        let cfg = ModelConfig::tiny();
+        let a = Params::init(&cfg, 1);
+        let b = Params::init(&cfg, 2);
+        let h = a.handle("layer0/wk").unwrap();
+        assert_eq!(b.slice(h), b.get("layer0/wk").unwrap());
     }
 
     #[test]

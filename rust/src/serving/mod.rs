@@ -27,13 +27,16 @@ use crate::util::rng::Pcg32;
 
 /// Build a coordinator whose buckets are served by the pure-Rust batched
 /// reference encoder — no artifacts, no PJRT.  `buckets` lists
-/// `(max_len, batch_capacity)` pairs; every bucket shares `cfg`/`params`
-/// (each worker owns a clone) and every bucket length must be ≤
-/// `cfg.max_len`.  This is the serving path on machines without the
-/// `pjrt` feature, and the end-to-end harness for `encode_batch`.
+/// `(max_len, batch_capacity)` pairs; every bucket shares `cfg` and the
+/// *same* `Arc<Params>` (one copy of the weights in memory regardless of
+/// bucket count) and every bucket length must be ≤ `cfg.max_len`.  All
+/// bucket workers draw their compute from the process-wide pool, so
+/// concurrently-busy buckets never oversubscribe the thread budget.  This
+/// is the serving path on machines without the `pjrt` feature, and the
+/// end-to-end harness for `encode_batch`.
 pub fn build_reference_coordinator(
     cfg: &ModelConfig,
-    params: &Params,
+    params: &Arc<Params>,
     buckets: &[(usize, usize)],
     config: BatcherConfig,
 ) -> Coordinator {
@@ -52,7 +55,7 @@ pub fn build_reference_coordinator(
         );
         assert!(cap > 0, "bucket capacity must be positive");
         let cfg = cfg.clone();
-        let params = params.clone();
+        let params = Arc::clone(params);
         let factory: RunnerFactory = Box::new(move || {
             Ok(Box::new(ReferenceRunner::new(cfg, params, len, cap))
                 as Box<dyn BatchRunner>)
@@ -237,7 +240,7 @@ mod tests {
     #[test]
     fn reference_coordinator_serves_end_to_end() {
         let cfg = crate::model::ModelConfig::tiny();
-        let params = crate::model::Params::init(&cfg, 3);
+        let params = Arc::new(crate::model::Params::init(&cfg, 3));
         let coord = build_reference_coordinator(
             &cfg,
             &params,
@@ -266,7 +269,7 @@ mod tests {
     #[test]
     fn reference_coordinator_handles_concurrent_load() {
         let cfg = crate::model::ModelConfig::tiny();
-        let params = crate::model::Params::init(&cfg, 4);
+        let params = Arc::new(crate::model::Params::init(&cfg, 4));
         let coord = build_reference_coordinator(
             &cfg,
             &params,
@@ -278,6 +281,37 @@ mod tests {
         assert!(report.completed >= 20, "too many failures: {report:?}");
         assert!(coord.metrics.occupancy() > 0.0);
         coord.shutdown();
+    }
+
+    #[test]
+    fn reference_coordinator_shares_params_across_buckets() {
+        // three buckets, one Arc<Params>: after every bucket has served a
+        // request (so every runner exists), the only copies of the
+        // weights are Arc refs — 1 here + 1 per runner — and shutdown
+        // releases them all
+        let cfg = crate::model::ModelConfig::tiny();
+        let params = Arc::new(crate::model::Params::init(&cfg, 5));
+        let coord = build_reference_coordinator(
+            &cfg,
+            &params,
+            &[(8, 2), (16, 2), (cfg.max_len, 2)],
+            BatcherConfig {
+                max_delay: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        for len in [4usize, 12, 24] {
+            let t = coord.submit(vec![1; len]).unwrap();
+            let r = t.wait_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(r.predictions.len(), len);
+        }
+        assert_eq!(
+            Arc::strong_count(&params),
+            1 + 3,
+            "expected exactly one Arc ref per bucket runner"
+        );
+        coord.shutdown();
+        assert_eq!(Arc::strong_count(&params), 1);
     }
 
     #[test]

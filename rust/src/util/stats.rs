@@ -26,8 +26,11 @@ impl Summary {
         xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
+        // Bessel-corrected sample variance: divisor n−1 (a single sample
+        // has zero spread, not half of it — the old `n.max(2)` divisor
+        // biased every ±std in BENCH_encoder.json, for every n).
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
-            / n.max(2) as f64;
+            / (n - 1).max(1) as f64;
         let pct = |p: f64| xs[(((n - 1) as f64) * p).round() as usize];
         Summary {
             n,
@@ -165,6 +168,26 @@ mod tests {
         let s = Summary::from_secs(vec![0.25]);
         assert_eq!(s.p50, 0.25);
         assert_eq!(s.max, 0.25);
+        // one sample has no spread (the old n.max(2) divisor reported
+        // half the squared deviation instead of zero)
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn summary_std_is_bessel_corrected() {
+        // hand-computed: xs = [1, 2, 3, 4]; mean 2.5;
+        // Σ(x−mean)² = 2.25 + 0.25 + 0.25 + 2.25 = 5;
+        // sample variance = 5 / (4−1) = 5/3; std = √(5/3) ≈ 1.290994…
+        let s = Summary::from_secs(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!(
+            (s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12,
+            "std {} != sqrt(5/3)",
+            s.std
+        );
+        // two samples: variance = Σ/1, not Σ/2 (the old divisor)
+        let s2 = Summary::from_secs(vec![0.0, 2.0]);
+        assert!((s2.std - 2.0f64.sqrt()).abs() < 1e-12, "std {}", s2.std);
     }
 
     #[test]

@@ -1,0 +1,110 @@
+//! Pins the acceptance guarantee that `encode_with` performs **zero heap
+//! allocations after warmup** beyond its output matrix: no `format!`
+//! parameter-name strings, no `Params::lookup` scans, no scratch-buffer
+//! regrowth — the per-layer loop runs entirely on interned handles and
+//! reused buffers.
+//!
+//! Method: a counting `#[global_allocator]` with a *thread-local* counter
+//! (const-initialised, so counting itself never allocates and parallel
+//! test threads cannot interfere).  The measured call runs with an
+//! intra-GEMM cap of 1 so no pool tasks (whose queue boxes rightly
+//! allocate) are submitted — the serial hot path is the regime the
+//! guarantee targets.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use linformer::model::{
+    encode_with, mlm_logits_with, EncodeScratch, ModelConfig, Params,
+};
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+fn bump() {
+    // try_with: never panic inside the allocator (TLS teardown edge)
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn encode_with_allocates_only_its_output_after_warmup() {
+    let cfg = ModelConfig::tiny();
+    let params = Params::init(&cfg, 1);
+    let tokens: Vec<u32> =
+        (0..cfg.max_len).map(|i| (i % cfg.vocab_size) as u32).collect();
+    let mut scratch = EncodeScratch::with_threads(1);
+    for _ in 0..2 {
+        encode_with(&params, &cfg, &tokens, false, &mut scratch);
+    }
+    let before = allocs_now();
+    let out = encode_with(&params, &cfg, &tokens, false, &mut scratch);
+    let after = allocs_now();
+    assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+    assert_eq!(
+        after - before,
+        1,
+        "warm encode_with must allocate exactly once (the output \
+         matrix); extra allocations mean name strings, lookups or \
+         scratch regrowth crept back into the hot path"
+    );
+}
+
+#[test]
+fn warm_mlm_path_stays_free_of_name_lookups() {
+    // the MLM head allocates its hidden + logits outputs, but after
+    // warmup nothing else: handles cover the head parameters too
+    let cfg = ModelConfig::tiny();
+    let params = Params::init(&cfg, 2);
+    let tokens: Vec<u32> =
+        (0..16u32).map(|i| i % cfg.vocab_size as u32).collect();
+    let mut scratch = EncodeScratch::with_threads(1);
+    for _ in 0..2 {
+        mlm_logits_with(&params, &cfg, &tokens, &mut scratch);
+    }
+    let before = allocs_now();
+    let logits = mlm_logits_with(&params, &cfg, &tokens, &mut scratch);
+    let after = allocs_now();
+    assert_eq!(logits.rows, 16);
+    assert!(
+        after - before <= 2,
+        "warm mlm_logits_with should allocate at most its two outputs \
+         (hidden + logits), saw {}",
+        after - before
+    );
+}

@@ -2,6 +2,7 @@
 //! encoder → ReferenceRunner workers → coordinator → concurrent clients.
 //! Runs on a clean machine (no artifacts, no `pjrt` feature).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use linformer::coordinator::BatcherConfig;
@@ -12,7 +13,7 @@ use linformer::serving;
 fn reference_serving_round_trips_under_load() {
     let mut cfg = ModelConfig::tiny();
     cfg.max_len = 64;
-    let params = Params::init(&cfg, 42);
+    let params = Arc::new(Params::init(&cfg, 42));
     let coord = serving::build_reference_coordinator(
         &cfg,
         &params,

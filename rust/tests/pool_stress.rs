@@ -1,0 +1,104 @@
+//! Stress test for the process-wide compute pool under serving-style
+//! concurrency: several "bucket workers" hammer `encode_batch`
+//! simultaneously and we assert (a) the global compute budget is never
+//! exceeded — the oversubscription the pool exists to prevent — and
+//! (b) outputs stay bitwise identical to the serial per-example path.
+//!
+//! Sized to force parallel GEMMs (above `gemm::PAR_FLOP_THRESHOLD`), so
+//! it is `#[ignore]`d under plain `cargo test -q` and run in release by
+//! `scripts/check.sh`:
+//!
+//! ```text
+//! cargo test --release --test pool_stress -- --ignored
+//! ```
+
+use linformer::linalg::{gemm, pool};
+use linformer::model::{
+    encode_batch, encode_with, Attention, EncodeScratch, ModelConfig, Params,
+};
+
+fn stress_model() -> (ModelConfig, Params) {
+    let mut cfg = ModelConfig::tiny();
+    cfg.attention = Attention::Linformer;
+    cfg.max_len = 512; // QKV GEMMs: 2·512·64·64 ≈ 4.2 MFLOP > threshold
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.n_layers = 2;
+    cfg.d_ff = 128;
+    cfg.k_proj = 64;
+    cfg.vocab_size = 256;
+    let params = Params::init(&cfg, 17);
+    (cfg, params)
+}
+
+#[test]
+#[ignore = "heavy (parallel-threshold GEMMs): run via scripts/check.sh in --release"]
+fn concurrent_buckets_respect_budget_and_stay_bitwise_exact() {
+    let (cfg, params) = stress_model();
+    const BUCKETS: usize = 4;
+    const ROUNDS: usize = 3;
+
+    // ragged per-bucket batches, like a real serving mix
+    let batches: Vec<Vec<Vec<u32>>> = (0..BUCKETS)
+        .map(|b| {
+            (0..4)
+                .map(|i| {
+                    let len = match (b + i) % 3 {
+                        0 => cfg.max_len,
+                        1 => cfg.max_len / 2,
+                        _ => cfg.max_len / 4,
+                    };
+                    (0..len)
+                        .map(|j| ((b * 131 + i * 31 + j * 7) % cfg.vocab_size) as u32)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    // serial ground truth, one example at a time with a 1-thread scratch
+    let expected: Vec<Vec<Vec<f32>>> = batches
+        .iter()
+        .map(|seqs| {
+            let mut scratch = EncodeScratch::with_threads(1);
+            seqs.iter()
+                .map(|s| {
+                    encode_with(&params, &cfg, s, false, &mut scratch)
+                        .hidden
+                        .data
+                })
+                .collect()
+        })
+        .collect();
+
+    // concurrent "bucket workers": every encode_batch draws on the one
+    // global pool
+    std::thread::scope(|s| {
+        for (b, seqs) in batches.iter().enumerate() {
+            let (params, cfg, expected) = (&params, &cfg, &expected);
+            s.spawn(move || {
+                for round in 0..ROUNDS {
+                    let got = encode_batch(params, cfg, seqs);
+                    for (i, m) in got.iter().enumerate() {
+                        assert_eq!(
+                            m.data, expected[b][i],
+                            "bucket {b} round {round} example {i} diverged"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    let p = pool::global();
+    if gemm::max_threads() > 1 {
+        // on a multi-core machine the batch striping must have used it
+        assert!(p.peak_busy() >= 1, "pool never ran a task");
+    }
+    assert!(
+        p.peak_busy() <= p.workers(),
+        "global compute budget exceeded: peak {} busy on {} workers",
+        p.peak_busy(),
+        p.workers()
+    );
+}

@@ -23,13 +23,16 @@ else
     fi
 fi
 
-# deny the lints that flag real bugs; style lints stay advisory
+# deny the lints that flag real bugs; style lints stay advisory.
+# clippy::perf is denied too so the linalg/model hot paths cannot regrow
+# hidden allocations or copies (any perf lint anywhere fails the check —
+# the tree is clean of them as of the compute-pool PR).
 if command -v cargo-clippy >/dev/null 2>&1 || cargo clippy --version >/dev/null 2>&1; then
     # -A first, -D second: lint-level flags are last-wins per lint, so
     # the deny must come after the blanket allow to actually deny
     cargo clippy --all-targets --quiet -- \
-        -A clippy::all -D clippy::correctness || {
-        echo "[check] clippy correctness lints failed" >&2
+        -A clippy::all -D clippy::correctness -D clippy::perf || {
+        echo "[check] clippy correctness/perf lints failed" >&2
         exit 1
     }
 else
@@ -39,4 +42,10 @@ fi
 # tier-1
 cargo build --release
 cargo test -q
+
+# the pool stress test forces parallel-threshold GEMMs from several
+# concurrent buckets; debug-mode kernels would dominate its runtime, so
+# it is #[ignore]d under tier-1 and run here in release
+cargo test --release --test pool_stress -- --ignored
+
 echo "[check] OK"
