@@ -33,7 +33,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             e.config.max_len, e.batch, e.config.k_proj
         );
     }
-    println!("compiling executables in worker threads…");
+    println!("compiling executables on pinned runner threads…");
     let coord = serving::build_coordinator(
         &manifest,
         &names,
@@ -60,6 +60,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("mean latency  {:.1} ms", report.mean_latency_s * 1e3);
     println!("p95 latency   {:.1} ms", report.p95_latency_s * 1e3);
     println!("occupancy     {:.1}%", coord.metrics.occupancy() * 100.0);
+    use std::sync::atomic::Ordering;
+    println!(
+        "shed/abandoned {}/{} (deadline scheduler drops, never computed)",
+        coord.metrics.shed.load(Ordering::Relaxed),
+        coord.metrics.abandoned.load(Ordering::Relaxed)
+    );
     println!("metrics json  {}", coord.metrics.to_json());
     coord.shutdown();
     Ok(())

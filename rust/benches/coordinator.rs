@@ -1,28 +1,45 @@
-//! Bench: coordinator overhead + batching-policy ablation (DESIGN.md §7).
+//! Bench: scheduler overhead + batching/deadline-policy ablations.
 //!
 //! Measures (a) raw batcher push/poll throughput — the L3 hot path that
 //! must never bottleneck the model, (b) end-to-end latency/throughput with
-//! mock workers, and (c) the merge-up policy ablation under the two cost
+//! mock runners, (c) the merge-up policy ablation under the two cost
 //! models (quadratic vs linear) — the serving-policy consequence of
-//! Linformer's flat latency curve.
+//! Linformer's flat latency curve — and (d) the deadline ablation: the
+//! legacy FIFO pipeline vs the EDF scheduler with admission control and
+//! expiry shedding under a 3× overload trace.
 //!
 //! Run: `cargo bench --bench coordinator`
 
-use std::sync::mpsc;
+use std::sync::atomic::AtomicBool;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use linformer::coordinator::{
     Batch, Batcher, BatcherConfig, BucketSpec, Coordinator, CostModel,
-    MockRunner, Request, RunnerFactory,
+    MockRunner, Priority, Request, RunnerFactory, SchedPolicy,
+};
+use linformer::serving::trace::{
+    assign_slos, poisson_trace, replay, LengthDist,
 };
 use linformer::serving::run_load;
 use linformer::util::rng::Pcg32;
 use linformer::util::stats::{black_box, Summary};
 
-fn mk_request(id: u64, len: usize) -> (Request, mpsc::Receiver<linformer::coordinator::Response>) {
+fn mk_request(
+    id: u64,
+    len: usize,
+) -> (Request, mpsc::Receiver<linformer::coordinator::Response>) {
     let (tx, rx) = mpsc::channel();
     (
-        Request { id, tokens: vec![1; len], enqueued: Instant::now(), reply: tx },
+        Request {
+            id,
+            tokens: vec![1; len],
+            enqueued: Instant::now(),
+            priority: Priority::Interactive,
+            deadline: None,
+            cancelled: Arc::new(AtomicBool::new(false)),
+            reply: tx,
+        },
         rx,
     )
 }
@@ -88,6 +105,7 @@ fn bench_end_to_end(label: &str, delay_ms: u64, merge_up: bool, cm: CostModel) -
             queue_capacity: 4096,
             merge_up,
             cost_model: cm,
+            ..Default::default()
         },
     );
     let report = run_load(&coord, 512, 400, 8, 3);
@@ -129,6 +147,7 @@ fn bench_merge_ablation(label: &str, merge_up: bool, cm: CostModel) {
             queue_capacity: 4096,
             merge_up,
             cost_model: cm,
+            ..Default::default()
         },
     );
     let mut rng = Pcg32::seeded(5);
@@ -172,8 +191,95 @@ fn bench_merge_ablation(label: &str, merge_up: bool, cm: CostModel) {
     coord.shutdown();
 }
 
+/// Deadline-policy ablation under a 3× overload trace: the legacy FIFO
+/// pipeline (compute everything, in arrival order) vs the EDF scheduler
+/// (admission control + expiry shedding).  The number that matters is
+/// the interactive p99 over *served* requests — under FIFO, interactive
+/// traffic queues behind the backlog and blows through its SLO; EDF
+/// sheds what cannot make it and serves the admitted class in time.
+fn bench_deadline_policies() {
+    println!(
+        "\n== deadline scheduling ablation: FIFO baseline vs EDF + \
+         admission + shedding (3× overload) =="
+    );
+    // one 128 bucket, batch 4, 5ms mock service, 2 in flight
+    //   → ≈1600 req/s capacity; the trace arrives at ≈4000 req/s
+    let slo_s = 0.08;
+    let mut trace =
+        poisson_trace(600, 4000.0, LengthDist::Uniform { max: 128 }, 21);
+    assign_slos(&mut trace, 0.7, slo_s, 22);
+    let run = |label: &str, cfg: BatcherConfig| {
+        let factory: RunnerFactory = Box::new(|| {
+            Ok(Box::new(MockRunner {
+                capacity: 4,
+                len: 128,
+                delay: Duration::from_millis(5),
+                fail: false,
+            }) as Box<dyn linformer::coordinator::BatchRunner>)
+        });
+        let coord = Coordinator::start(
+            vec![(BucketSpec { max_len: 128, batch: 4 }, factory)],
+            cfg,
+        );
+        let report = replay(&coord, &trace, 512, 1.0);
+        println!(
+            "  {label:<28} served {:>3}  missed {:>3}  shed {:>3}  \
+             rejected {:>3}  interactive p99 {:>7.1}ms",
+            report.count(linformer::serving::trace::ReplayOutcome::Served),
+            report.deadline_missed,
+            report.shed,
+            report.count(
+                linformer::serving::trace::ReplayOutcome::Rejected
+            ),
+            report.interactive_p99_s * 1e3
+        );
+        println!("    summary: {}", report.summary_json());
+        coord.shutdown();
+        report
+    };
+    let fifo = run(
+        "fifo (legacy pipeline)",
+        BatcherConfig {
+            max_delay: Duration::from_millis(2),
+            queue_capacity: 4096,
+            policy: SchedPolicy::Fifo,
+            admission: false,
+            shed_expired: false,
+            ..Default::default()
+        },
+    );
+    let edf = run(
+        "edf + admission + shed",
+        BatcherConfig {
+            max_delay: Duration::from_millis(2),
+            queue_capacity: 4096,
+            policy: SchedPolicy::Edf,
+            admission: true,
+            shed_expired: true,
+            ..Default::default()
+        },
+    );
+    // informational, not an assert: the timing-pinned version of this
+    // invariant lives in tests/scheduler_overload.rs (release, check.sh)
+    if edf.interactive_p99_s > fifo.interactive_p99_s {
+        println!(
+            "\nWARNING: EDF interactive p99 ({:.1}ms) did not beat FIFO \
+             ({:.1}ms) on this run — noisy machine?",
+            edf.interactive_p99_s * 1e3,
+            fifo.interactive_p99_s * 1e3
+        );
+    }
+    println!(
+        "\nexpected: FIFO serves everything eventually but its \
+         interactive p99 sits far past the {:.0}ms SLO; EDF admits what \
+         fits, sheds the rest before compute, and keeps the served \
+         interactive class inside the SLO.",
+        slo_s * 1e3
+    );
+}
+
 /// End-to-end with *real* model workers: the pure-Rust batched reference
-/// encoder behind the coordinator (no PJRT, no mocks) — what `repro serve`
+/// encoder behind the scheduler (no PJRT, no mocks) — what `repro serve`
 /// runs on a clean machine.
 fn bench_reference_serving() {
     use linformer::model::{ModelConfig, Params};
@@ -195,6 +301,7 @@ fn bench_reference_serving() {
             queue_capacity: 4096,
             merge_up: true,
             cost_model: CostModel::Linear { k: cfg.k_proj },
+            ..Default::default()
         },
     );
     let report = run_load(&coord, cfg.vocab_size, 200, 8, 3);
@@ -244,5 +351,7 @@ fn main() {
          stream in fewer batches; the quadratic waste guard blocks those \
          promotions."
     );
+
+    bench_deadline_policies();
     let _ = Batch { bucket: 0, bucket_len: 0, requests: vec![] };
 }

@@ -1,18 +1,31 @@
-//! Length-bucketed dynamic batcher — the core serving policy.
+//! Length-bucketed scheduling core — queues, flush policy, admission.
 //!
 //! Requests are routed to the smallest length bucket that fits (each bucket
-//! corresponds to one compiled artifact with static shapes `(batch,
-//! bucket_len)`); a bucket flushes when it is full or when its oldest
-//! request has waited `max_delay`.
+//! corresponds to one runner with capacity `(batch, bucket_len)`).  Within
+//! a bucket the queue is ordered by the flush policy: FIFO (arrival order)
+//! or EDF (priority class first, then earliest deadline; deadline-less
+//! requests keep arrival order behind deadline-bearing ones).  A bucket
+//! flushes when it is full, when its head request has waited `max_delay`,
+//! or — under EDF — when its head deadline is about to become infeasible
+//! given the bucket's observed service time.
 //!
 //! Linformer changes the *cost model* behind the policy (paper Fig 2: its
 //! latency-vs-n curve is flat, the Transformer's is quadratic), so this
 //! module also implements both cost models and exposes a policy ablation:
 //! with a quadratic backend, mixing a short request into a long bucket
 //! wastes ~n²/m² of its compute; with Linformer the waste is only linear —
-//! greedier merging across buckets becomes profitable.  The
-//! `merge_up` knob encodes that and `rust/benches/coordinator.rs`
-//! measures both settings.
+//! greedier merging across buckets becomes profitable.  The `merge_up`
+//! knob encodes that and `rust/benches/coordinator.rs` measures both
+//! settings.
+//!
+//! Overload handling is two-stage:
+//! - **Admission control** (`push`): once the per-bucket service-time
+//!   estimate is calibrated from completed batches, a deadline-bearing
+//!   request whose estimated completion falls past its deadline is
+//!   rejected at submit instead of queued to die.
+//! - **Load shedding** (`reap`): queued requests that have expired (or
+//!   provably cannot be served in time) and requests whose client dropped
+//!   the ticket are removed *before* flush — they are never computed.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -51,6 +64,17 @@ impl CostModel {
     }
 }
 
+/// Queue ordering + flush-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Arrival order, first ready bucket flushes (the legacy dispatcher).
+    Fifo,
+    /// Earliest-deadline-first: queues order by (priority, deadline),
+    /// the ready bucket with the most urgent head request flushes first.
+    #[default]
+    Edf,
+}
+
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     /// Flush a bucket when its oldest request has waited this long.
@@ -63,6 +87,20 @@ pub struct BatcherConfig {
     /// Linear cost model; usually not under Quadratic).
     pub merge_up: bool,
     pub cost_model: CostModel,
+    /// Queue ordering + flush-selection policy.
+    pub policy: SchedPolicy,
+    /// Reject deadline-bearing requests at submit when the estimated
+    /// completion already falls past their deadline (requires a
+    /// calibrated service-time estimate; inert until then).
+    pub admission: bool,
+    /// Drop expired queued requests at reap time instead of computing
+    /// them.  `false` restores the legacy compute-everything behavior
+    /// (useful as a baseline in policy ablations).
+    pub shed_expired: bool,
+    /// Batches a single bucket may have in flight on the compute pool;
+    /// a saturated bucket stops flushing until a batch completes (the
+    /// backpressure that used to live in the bounded worker channel).
+    pub max_inflight: usize,
 }
 
 impl Default for BatcherConfig {
@@ -72,11 +110,15 @@ impl Default for BatcherConfig {
             queue_capacity: 256,
             merge_up: false,
             cost_model: CostModel::Linear { k: 32 },
+            policy: SchedPolicy::Edf,
+            admission: true,
+            shed_expired: true,
+            max_inflight: 2,
         }
     }
 }
 
-/// A flushed batch ready for a worker.
+/// A flushed batch ready for execution.
 #[derive(Debug)]
 pub struct Batch {
     pub bucket: usize,
@@ -84,13 +126,58 @@ pub struct Batch {
     pub requests: Vec<Request>,
 }
 
-/// The batcher: per-bucket FIFO queues + flush policy.  Single-threaded by
-/// design; the dispatcher owns it (workers only see flushed `Batch`es).
+/// Why [`Batcher::reap`] removed a request without computing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeadCause {
+    /// Deadline passed (or provably unmeetable) while queued.
+    Expired,
+    /// Client dropped its ticket.
+    Abandoned,
+}
+
+/// Safety margins on deadline decisions.  The service estimate is an
+/// EWMA *mean*, not an upper bound, and the control loop only samples
+/// time once per ~1ms tick, so the shed and urgent-flush horizons need
+/// headroom.  A request is shed when even `SHED_SAFETY ×` the estimated
+/// service time no longer fits before its deadline; it turns urgent
+/// (flush even though the bucket is neither full nor timed out) at the
+/// strictly earlier `URGENT_SAFETY` horizon, so every urgent request
+/// gets at least one flush window before the reaper may shed it.
+const SHED_SAFETY: f64 = 2.0;
+const URGENT_SAFETY: f64 = 4.0;
+/// Scheduler tick allowance (seconds) added to both horizons.
+const TICK_MARGIN_S: f64 = 0.002;
+
+/// Strict scheduling order: does `a` go ahead of `b`?
+///
+/// Priority class first, then deadline (deadline-bearing ahead of
+/// deadline-less), then nothing — equal keys keep arrival order, which is
+/// what makes the EDF queue degrade to exact FIFO when no deadlines are
+/// in play.
+fn sched_before(a: &Request, b: &Request) -> bool {
+    if a.priority != b.priority {
+        return a.priority < b.priority;
+    }
+    match (a.deadline, b.deadline) {
+        (Some(da), Some(db)) => da < db,
+        (Some(_), None) => true,
+        _ => false,
+    }
+}
+
+/// The scheduling core: per-bucket ordered queues + flush policy +
+/// admission state.  Single-threaded by design; the scheduler control
+/// loop owns it (the pool only sees flushed [`Batch`]es).
 pub struct Batcher {
     buckets: Vec<BucketSpec>,
     queues: Vec<VecDeque<Request>>,
     config: BatcherConfig,
     queued: usize,
+    /// Batches currently executing per bucket (see `note_dispatch`).
+    inflight: Vec<usize>,
+    /// EWMA of observed per-batch service seconds, per bucket; `None`
+    /// until the first completion — admission stays inert uncalibrated.
+    service_est_s: Vec<Option<f64>>,
 }
 
 impl Batcher {
@@ -98,12 +185,23 @@ impl Batcher {
     pub fn new(mut buckets: Vec<BucketSpec>, config: BatcherConfig) -> Batcher {
         assert!(!buckets.is_empty(), "need at least one bucket");
         buckets.sort_by_key(|b| b.max_len);
-        let queues = buckets.iter().map(|_| VecDeque::new()).collect();
-        Batcher { buckets, queues, config, queued: 0 }
+        let n = buckets.len();
+        Batcher {
+            buckets,
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            config,
+            queued: 0,
+            inflight: vec![0; n],
+            service_est_s: vec![None; n],
+        }
     }
 
     pub fn buckets(&self) -> &[BucketSpec] {
         &self.buckets
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.config
     }
 
     /// Total requests currently queued.
@@ -125,7 +223,64 @@ impl Batcher {
             })
     }
 
-    /// Enqueue a request (validates routing + backpressure).
+    // -- in-flight + service-time accounting (fed by the scheduler) -----
+
+    /// A batch from `bucket` was handed to the compute pool.
+    pub fn note_dispatch(&mut self, bucket: usize) {
+        self.inflight[bucket] += 1;
+    }
+
+    /// A batch from `bucket` finished after `service_s` seconds.
+    pub fn note_complete(&mut self, bucket: usize, service_s: f64) {
+        self.inflight[bucket] = self.inflight[bucket].saturating_sub(1);
+        let est = &mut self.service_est_s[bucket];
+        *est = Some(match *est {
+            Some(prev) => 0.7 * prev + 0.3 * service_s,
+            None => service_s,
+        });
+    }
+
+    pub fn inflight(&self, bucket: usize) -> usize {
+        self.inflight[bucket]
+    }
+
+    /// Per-bucket saturation snapshot (introspection/tests): a bucket at
+    /// its in-flight limit will not flush again until a batch completes
+    /// ([`Self::poll`] checks this internally).
+    pub fn saturated(&self) -> Vec<bool> {
+        self.inflight
+            .iter()
+            .map(|&n| n >= self.config.max_inflight)
+            .collect()
+    }
+
+    /// Urgent-flush horizon (seconds): strictly wider than the head-of-
+    /// queue shed horizon (service time + tick), so an urgent request
+    /// always gets a flush window before the reaper may give up on it.
+    fn urgent_horizon_s(&self, bucket: usize) -> f64 {
+        URGENT_SAFETY * self.service_est_s[bucket].unwrap_or(0.0)
+            + 2.0 * TICK_MARGIN_S
+    }
+
+    /// Estimated seconds until a request joining `bucket` at queue
+    /// position `idx` would *complete*, assuming the queue drains
+    /// batch-by-batch at the observed service rate.  Position-aware:
+    /// an EDF head-insert only waits for in-flight work plus its own
+    /// batch, however much lower-priority traffic sits behind it.
+    /// `None` until calibrated.
+    fn estimated_completion_s(&self, bucket: usize, idx: usize) -> Option<f64> {
+        let svc = self.service_est_s[bucket]?;
+        let spec = self.buckets[bucket];
+        // batches ahead of the insertion position + the batch this
+        // request joins + any already in flight (conservative: assumes
+        // serial execution)
+        let ahead = idx / spec.batch + self.inflight[bucket] + 1;
+        Some(ahead as f64 * svc)
+    }
+
+    // -- queue mutation -------------------------------------------------
+
+    /// Enqueue a request (validates routing, admission, backpressure).
     pub fn push(&mut self, req: Request) -> Result<(), (Reject, Request)> {
         let bucket = match self.route(req.tokens.len()) {
             Ok(b) => b,
@@ -137,55 +292,170 @@ impl Batcher {
                 req,
             ));
         }
-        self.queues[bucket].push_back(req);
+        // find the insertion position first: admission prices the wait
+        // at the position this request would actually occupy
+        let q = &self.queues[bucket];
+        let mut idx = q.len();
+        if self.config.policy == SchedPolicy::Edf {
+            // insertion keeps the queue sorted by `sched_before`; equal
+            // keys append, so deadline-less traffic stays exact FIFO
+            while idx > 0 && sched_before(&req, &q[idx - 1]) {
+                idx -= 1;
+            }
+        }
+        if self.config.admission {
+            if let (Some(deadline), Some(est_s)) =
+                (req.deadline, self.estimated_completion_s(bucket, idx))
+            {
+                // budget from *now*, not from enqueue: time already spent
+                // reaching the scheduler is spent budget.  The threshold
+                // carries the same SHED_SAFETY margin the reaper uses, so
+                // an admitted request can never be shed on the very next
+                // tick (est ≥ svc ⇒ margin·est ≥ shed horizon).
+                let budget =
+                    deadline.saturating_duration_since(Instant::now());
+                let need = SHED_SAFETY * est_s + TICK_MARGIN_S;
+                if need > budget.as_secs_f64() {
+                    return Err((
+                        Reject::WontMeetDeadline {
+                            estimated_ms: (need * 1e3) as u64,
+                            budget_ms: budget.as_millis() as u64,
+                        },
+                        req,
+                    ));
+                }
+            }
+        }
+        self.queues[bucket].insert(idx, req);
         self.queued += 1;
         Ok(())
     }
 
+    /// Remove and return every queued request that must not be computed:
+    /// abandoned tickets, and — when `shed_expired` — requests whose
+    /// deadline has passed or falls inside their position's shed horizon
+    /// (no safe way to serve them anymore; see [`SHED_SAFETY`]).
+    ///
+    /// The common no-deadline steady state is allocation-free: a queue
+    /// is only rebuilt after a scan finds something dead in it.  The
+    /// pre-scan uses each request's *current* index, which only
+    /// over-approximates its post-reap position — it can trigger a
+    /// rebuild that keeps everything, never the reverse.
+    pub fn reap(&mut self, now: Instant) -> Vec<(Request, DeadCause)> {
+        let mut dead = Vec::new();
+        let shed = self.config.shed_expired;
+        for i in 0..self.queues.len() {
+            if self.queues[i].is_empty() {
+                continue;
+            }
+            // position-aware shed horizon: the queue head needs only its
+            // own service time (+ tick allowance); deeper positions add
+            // the safety-margined queue-drain estimate.  Uncalibrated
+            // buckets shed only what has truly expired.
+            let svc = self.service_est_s[i];
+            let batch = self.buckets[i].batch;
+            let horizon = move |pos: usize| match svc {
+                Some(s) => Duration::from_secs_f64(
+                    s * (SHED_SAFETY * (pos / batch) as f64 + 1.0)
+                        + TICK_MARGIN_S,
+                ),
+                None => Duration::ZERO,
+            };
+            let expired = |r: &Request, pos: usize| {
+                shed && r
+                    .deadline
+                    .is_some_and(|d| d <= now + horizon(pos))
+            };
+            if !self.queues[i]
+                .iter()
+                .enumerate()
+                .any(|(pos, r)| r.abandoned() || expired(r, pos))
+            {
+                continue;
+            }
+            let drained = std::mem::take(&mut self.queues[i]);
+            let mut kept = 0usize;
+            for r in drained {
+                if r.abandoned() {
+                    dead.push((r, DeadCause::Abandoned));
+                } else if expired(&r, kept) {
+                    dead.push((r, DeadCause::Expired));
+                } else {
+                    self.queues[i].push_back(r);
+                    kept += 1;
+                }
+            }
+        }
+        self.queued -= dead.len();
+        dead
+    }
+
+    // -- flush policy ---------------------------------------------------
+
     /// Flush decision: returns the next ready batch, if any.
     ///
-    /// A bucket is ready when it has `batch` requests, or when its oldest
-    /// has waited ≥ `max_delay`.  With `merge_up`, a timed-out bucket
-    /// first tries to also drain smaller buckets into spare slots.
+    /// A bucket is ready when it has `batch` requests, when its head has
+    /// waited ≥ `max_delay`, or (EDF) when its head deadline leaves no
+    /// slack beyond the bucket's estimated service time.  Under EDF the
+    /// most urgent ready bucket flushes first; under FIFO the first ready
+    /// bucket does.  With `merge_up`, a flush may also drain smaller
+    /// buckets into spare slots.
     pub fn poll(&mut self, now: Instant) -> Option<Batch> {
         self.poll_masked(now, &[])
     }
 
-    /// Like [`Self::poll`] but skipping buckets whose worker is saturated
-    /// (`skip[i] == true`).  The dispatcher uses this to avoid
-    /// head-of-line blocking: a full bucket with a busy worker must not
-    /// starve the other buckets' flushes.
+    /// Like [`Self::poll`] but also skipping the explicitly masked
+    /// buckets (`skip[i] == true`).  Buckets at their in-flight limit
+    /// are always skipped — that is the backpressure that keeps a busy
+    /// bucket from head-of-line-blocking the others — and, under
+    /// `merge_up`, may escalate into a larger unsaturated bucket.
     pub fn poll_masked(&mut self, now: Instant, skip: &[bool]) -> Option<Batch> {
-        let skipped =
-            |i: usize| -> bool { skip.get(i).copied().unwrap_or(false) };
-        // full buckets first
+        let skipped = |i: usize| -> bool {
+            skip.get(i).copied().unwrap_or(false)
+                || self.inflight[i] >= self.config.max_inflight
+        };
         let mut candidate: Option<usize> = None;
         for (i, q) in self.queues.iter().enumerate() {
-            if !skipped(i) && q.len() >= self.buckets[i].batch {
-                candidate = Some(i);
-                break;
+            if skipped(i) {
+                continue;
+            }
+            let Some(front) = q.front() else { continue };
+            let full = q.len() >= self.buckets[i].batch;
+            let timed_out =
+                now.duration_since(front.enqueued) >= self.config.max_delay;
+            let urgent = self.config.policy == SchedPolicy::Edf
+                && front.deadline.is_some_and(|d| {
+                    d <= now
+                        + Duration::from_secs_f64(self.urgent_horizon_s(i))
+                });
+            if !(full || timed_out || urgent) {
+                continue;
+            }
+            match self.config.policy {
+                SchedPolicy::Fifo => {
+                    candidate = Some(i);
+                    break;
+                }
+                SchedPolicy::Edf => {
+                    // most urgent head request wins across buckets
+                    candidate = match candidate {
+                        Some(c)
+                            if !sched_before(
+                                front,
+                                self.queues[c].front().unwrap(),
+                            ) =>
+                        {
+                            Some(c)
+                        }
+                        _ => Some(i),
+                    };
+                }
             }
         }
-        // then timeouts
-        if candidate.is_none() {
-            for (i, q) in self.queues.iter().enumerate() {
-                if skipped(i) {
-                    continue;
-                }
-                if let Some(front) = q.front() {
-                    if now.duration_since(front.enqueued)
-                        >= self.config.max_delay
-                    {
-                        candidate = Some(i);
-                        break;
-                    }
-                }
-            }
-        }
-        // escalation (merge_up): a ready bucket whose own worker is
+        // escalation (merge_up): a ready bucket whose own runner is
         // saturated may flush into a LARGER non-saturated bucket when the
         // cost model prices the padding waste under 50%.  Under the
-        // Linformer (linear) model this turns idle long-bucket workers
+        // Linformer (linear) model this turns idle long-bucket runners
         // into overflow capacity for short traffic; under the quadratic
         // model the waste guard blocks it (n² padding is ruinous).
         if candidate.is_none() && self.config.merge_up {
@@ -232,8 +502,7 @@ impl Batcher {
         if self.config.merge_up && requests.len() < spec.batch {
             for smaller in (0..bucket).rev() {
                 while requests.len() < spec.batch {
-                    let fits = self.queues[smaller].front().map_or(
-                        false,
+                    let fits = self.queues[smaller].front().is_some_and(
                         |r| {
                             self.config
                                 .cost_model
@@ -251,20 +520,6 @@ impl Batcher {
         }
         self.queued -= requests.len();
         Some(Batch { bucket, bucket_len: spec.max_len, requests })
-    }
-
-    /// Return a polled-but-undispatched batch to the front of its queue
-    /// (used when the worker channel is full — downstream backpressure).
-    /// FIFO order is preserved.
-    pub fn unpoll(&mut self, batch: Batch) {
-        let bucket = batch.bucket;
-        for req in batch.requests.into_iter().rev() {
-            self.queued += 1;
-            // merge-up may have stolen from smaller buckets; route each
-            // request back to its own bucket rather than the batch's.
-            let home = self.route(req.tokens.len()).unwrap_or(bucket);
-            self.queues[home].push_front(req);
-        }
     }
 
     /// Drain everything immediately (shutdown path).
@@ -290,12 +545,35 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Priority;
     use crate::util::prop::prop_check;
-    use std::sync::mpsc;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::{mpsc, Arc};
 
     fn req(id: u64, len: usize, at: Instant) -> Request {
         let (tx, _rx) = mpsc::channel();
-        Request { id, tokens: vec![7; len], enqueued: at, reply: tx }
+        Request {
+            id,
+            tokens: vec![7; len],
+            enqueued: at,
+            priority: Priority::Interactive,
+            deadline: None,
+            cancelled: Arc::new(AtomicBool::new(false)),
+            reply: tx,
+        }
+    }
+
+    fn req_with(
+        id: u64,
+        len: usize,
+        at: Instant,
+        priority: Priority,
+        slo: Option<Duration>,
+    ) -> Request {
+        let mut r = req(id, len, at);
+        r.priority = priority;
+        r.deadline = slo.map(|d| at + d);
+        r
     }
 
     fn mk(buckets: &[(usize, usize)], cfg: BatcherConfig) -> Batcher {
@@ -363,6 +641,202 @@ mod tests {
     }
 
     #[test]
+    fn edf_orders_by_priority_then_deadline() {
+        let now = Instant::now();
+        let mut b = mk(&[(64, 4)], Default::default());
+        let ms = |n: u64| Some(Duration::from_millis(n));
+        b.push(req_with(1, 5, now, Priority::Batch, None)).unwrap();
+        b.push(req_with(2, 5, now, Priority::Interactive, ms(50))).unwrap();
+        b.push(req_with(3, 5, now, Priority::Interactive, ms(10))).unwrap();
+        b.push(req_with(4, 5, now, Priority::Interactive, None)).unwrap();
+        let batch = b.poll(now + Duration::from_millis(6)).unwrap();
+        let order: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        // tightest interactive deadline first, then looser, then
+        // deadline-less interactive, then batch class
+        assert_eq!(order, vec![3, 2, 4, 1]);
+    }
+
+    #[test]
+    fn fifo_policy_keeps_arrival_order() {
+        let now = Instant::now();
+        let cfg = BatcherConfig {
+            policy: SchedPolicy::Fifo,
+            ..Default::default()
+        };
+        let mut b = mk(&[(64, 4)], cfg);
+        let ms = |n: u64| Some(Duration::from_millis(n));
+        b.push(req_with(1, 5, now, Priority::Batch, None)).unwrap();
+        b.push(req_with(2, 5, now, Priority::Interactive, ms(1))).unwrap();
+        b.push(req_with(3, 5, now, Priority::Interactive, ms(9))).unwrap();
+        let batch = b.poll(now + Duration::from_millis(6)).unwrap();
+        let order: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn reap_sheds_expired_and_abandoned_only() {
+        let now = Instant::now();
+        let mut b = mk(&[(64, 8)], Default::default());
+        b.push(req_with(1, 5, now, Priority::Interactive,
+            Some(Duration::from_millis(5)))).unwrap();
+        b.push(req_with(2, 5, now, Priority::Interactive,
+            Some(Duration::from_secs(60)))).unwrap();
+        let abandoned = req(3, 5, now);
+        abandoned.cancelled.store(true, std::sync::atomic::Ordering::Relaxed);
+        b.push(abandoned).unwrap();
+        b.push(req(4, 5, now)).unwrap(); // no deadline: never shed
+        let dead = b.reap(now + Duration::from_millis(10));
+        let mut ids: Vec<(u64, DeadCause)> =
+            dead.iter().map(|(r, c)| (r.id, *c)).collect();
+        ids.sort_by_key(|(id, _)| *id);
+        assert_eq!(
+            ids,
+            vec![(1, DeadCause::Expired), (3, DeadCause::Abandoned)]
+        );
+        assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn reap_respects_shed_expired_off() {
+        let now = Instant::now();
+        let cfg = BatcherConfig { shed_expired: false, ..Default::default() };
+        let mut b = mk(&[(64, 8)], cfg);
+        b.push(req_with(1, 5, now, Priority::Interactive,
+            Some(Duration::from_millis(1)))).unwrap();
+        assert!(b.reap(now + Duration::from_secs(1)).is_empty());
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn admission_rejects_unmeetable_deadline_once_calibrated() {
+        let now = Instant::now();
+        let mut b = mk(&[(64, 2)], Default::default());
+        // uncalibrated: anything is admitted
+        b.push(req_with(1, 5, now, Priority::Interactive,
+            Some(Duration::from_millis(1)))).unwrap();
+        // calibrate: batches take ~100ms each
+        b.note_dispatch(0);
+        b.note_complete(0, 0.1);
+        // queue holds 1 request → estimated completion ≈ 1 batch ≈ 100ms;
+        // a 5ms budget is infeasible, a 10s budget is fine
+        let (rej, _) = b
+            .push(req_with(2, 5, now, Priority::Interactive,
+                Some(Duration::from_millis(5))))
+            .unwrap_err();
+        assert!(matches!(rej, Reject::WontMeetDeadline { .. }), "{rej:?}");
+        b.push(req_with(3, 5, now, Priority::Interactive,
+            Some(Duration::from_secs(10)))).unwrap();
+        // no deadline → admission never applies
+        b.push(req(4, 5, now)).unwrap();
+    }
+
+    #[test]
+    fn urgent_deadline_flushes_before_max_delay() {
+        let now = Instant::now();
+        let cfg = BatcherConfig {
+            max_delay: Duration::from_secs(100),
+            ..Default::default()
+        };
+        let mut b = mk(&[(64, 8)], cfg);
+        b.note_dispatch(0);
+        b.note_complete(0, 0.02); // svc ≈ 20ms → urgent horizon 84ms
+        b.push(req_with(1, 5, now, Priority::Interactive,
+            Some(Duration::from_millis(200)))).unwrap();
+        // plenty of slack at t=0 …
+        assert!(b.poll(now).is_none());
+        // … but at t=130ms only 70ms of slack remain — inside the
+        // urgent horizon (4×svc + tick margin): flush now, not at
+        // max_delay
+        let batch = b.poll(now + Duration::from_millis(130)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn urgent_horizon_is_wider_than_shed_horizon() {
+        // an urgent request must get a flush window before the reaper
+        // may shed it: at a time inside the urgent horizon but outside
+        // the shed horizon, reap() keeps it and poll() flushes it
+        let now = Instant::now();
+        let cfg = BatcherConfig {
+            max_delay: Duration::from_secs(100),
+            ..Default::default()
+        };
+        let mut b = mk(&[(64, 8)], cfg);
+        b.note_dispatch(0);
+        b.note_complete(0, 0.02); // head shed horizon 22ms, urgent 84ms
+        b.push(req_with(1, 5, now, Priority::Interactive,
+            Some(Duration::from_millis(200)))).unwrap();
+        // 70ms slack: urgent, not sheddable — exactly the scheduler's
+        // reap-then-poll order within one tick
+        let t = now + Duration::from_millis(130);
+        assert!(b.reap(t).is_empty(), "shed a still-servable request");
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn admission_prices_the_edf_insertion_position() {
+        let now = Instant::now();
+        let mut b = mk(&[(64, 2)], Default::default());
+        b.note_dispatch(0);
+        b.note_complete(0, 0.1); // svc ≈ 100ms
+        // a pile of deadline-less batch-class work …
+        for id in 0..4 {
+            b.push(req_with(id, 5, now, Priority::Batch, None)).unwrap();
+        }
+        // … must not inflate the estimate for an interactive request
+        // that inserts at the queue head: its safety-margined wait is
+        // one batch (2×100ms + 2ms), not (4/2 + 1) batches (~600ms)
+        b.push(req_with(10, 5, now, Priority::Interactive,
+            Some(Duration::from_millis(250)))).unwrap();
+        // while a genuinely infeasible budget is still rejected
+        let (rej, _) = b
+            .push(req_with(11, 5, now, Priority::Interactive,
+                Some(Duration::from_millis(50))))
+            .unwrap_err();
+        assert!(matches!(rej, Reject::WontMeetDeadline { .. }), "{rej:?}");
+    }
+
+    #[test]
+    fn admitted_requests_survive_the_next_reap() {
+        // admission carries the reaper's safety margin, so a request
+        // can never be accepted at push and shed one tick later
+        let now = Instant::now();
+        let mut b = mk(&[(64, 2)], Default::default());
+        b.note_dispatch(0);
+        b.note_complete(0, 0.1); // svc 100ms → shed horizon 202ms
+        // 150ms of slack sits between the raw estimate (100ms) and the
+        // shed horizon (202ms): margin-less admission would accept it
+        // and the reaper would immediately drop it uncomputed
+        let r = b.push(req_with(1, 5, now, Priority::Interactive,
+            Some(Duration::from_millis(150))));
+        match r {
+            Ok(()) => {
+                let dead = b.reap(Instant::now());
+                assert!(dead.is_empty(), "admitted then instantly shed");
+            }
+            Err((rej, _)) => {
+                assert!(
+                    matches!(rej, Reject::WontMeetDeadline { .. }),
+                    "{rej:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_mask_tracks_inflight_limit() {
+        let mut b = mk(&[(64, 2), (128, 2)], Default::default());
+        assert_eq!(b.saturated(), vec![false, false]);
+        b.note_dispatch(0);
+        b.note_dispatch(0);
+        assert_eq!(b.saturated(), vec![true, false]);
+        b.note_complete(0, 0.01);
+        assert_eq!(b.saturated(), vec![false, false]);
+        assert_eq!(b.inflight(0), 1);
+    }
+
+    #[test]
     fn merge_up_fills_spare_slots_linear_model() {
         let now = Instant::now();
         let cfg = BatcherConfig {
@@ -375,9 +849,6 @@ mod tests {
         b.push(req(1, 100, now)).unwrap(); // bucket 1
         b.push(req(2, 10, now)).unwrap(); // bucket 0
         b.push(req(3, 10, now)).unwrap(); // bucket 0
-        // timeout fires on bucket 0 first (iteration order); drain it, then
-        // bucket 1 flushes alone.  Push enough into bucket1 to trigger it
-        // first instead:
         let batch = b.poll(now).unwrap();
         // whichever flushed, total across flushes must preserve requests
         let mut total = batch.requests.len();
@@ -393,9 +864,6 @@ mod tests {
         // a len-10 request in a 128 bucket wastes 1 - 100/16384 ≈ 99.4% > 50%
         let cm = CostModel::Quadratic;
         assert!(cm.waste(10, 128) > 0.5);
-        // under linear with k=16 the waste is 1 - 10/128 ≈ 92%... also high;
-        // cost is n*k so waste = 1 - 10/128. Hmm: linear waste only depends
-        // on n ratio.
         let lin = CostModel::Linear { k: 16 };
         assert!((lin.waste(64, 128) - 0.5).abs() < 1e-9);
         assert!(lin.waste(100, 128) < 0.25);
@@ -426,6 +894,11 @@ mod tests {
                 BatcherConfig {
                     queue_capacity: 1000,
                     merge_up: rng.chance(0.5),
+                    policy: if rng.chance(0.5) {
+                        SchedPolicy::Edf
+                    } else {
+                        SchedPolicy::Fifo
+                    },
                     ..Default::default()
                 },
             );
@@ -433,7 +906,17 @@ mod tests {
             let mut pushed = Vec::new();
             for id in 0..n as u64 {
                 let len = rng.range_usize(1, 257);
-                if b.push(req(id, len, now)).is_ok() {
+                let slo = if rng.chance(0.3) {
+                    Some(Duration::from_secs(3600)) // far future: not shed
+                } else {
+                    None
+                };
+                let pri = if rng.chance(0.5) {
+                    Priority::Interactive
+                } else {
+                    Priority::Batch
+                };
+                if b.push(req_with(id, len, now, pri, slo)).is_ok() {
                     pushed.push(id);
                 }
             }
@@ -449,12 +932,15 @@ mod tests {
                 }
             }
             seen.sort_unstable();
+            pushed.sort_unstable();
             assert_eq!(seen, pushed, "requests lost or duplicated");
         });
     }
 
     #[test]
     fn prop_fifo_within_bucket() {
+        // with no deadlines in play the EDF queue must degrade to exact
+        // FIFO (stable insertion among equal keys)
         prop_check("batcher FIFO per bucket", 50, |rng| {
             let now = Instant::now();
             let mut b = mk(&[(64, 3)], Default::default());
@@ -474,4 +960,5 @@ mod tests {
             }
         });
     }
+
 }

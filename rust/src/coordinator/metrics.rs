@@ -77,21 +77,45 @@ impl Histogram {
         }
         *self.bounds.last().unwrap()
     }
+
+    /// `{count, p50_s, p95_s, p99_s}` for the JSON dump.
+    fn quantiles_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".into(), Json::Num(self.count() as f64));
+        m.insert("p50_s".into(), Json::Num(self.quantile(0.50)));
+        m.insert("p95_s".into(), Json::Num(self.quantile(0.95)));
+        m.insert("p99_s".into(), Json::Num(self.quantile(0.99)));
+        Json::Obj(m)
+    }
 }
 
-/// Global-ish registry the coordinator threads share.
+/// Global-ish registry shared by the scheduler thread, the batch tasks on
+/// the compute pool, and metric readers.
 pub struct Metrics {
     pub accepted: AtomicU64,
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
+    /// Queued requests dropped because their deadline expired — never
+    /// computed (load shedding).
+    pub shed: AtomicU64,
+    /// Queued requests skipped because the client dropped its ticket.
+    pub abandoned: AtomicU64,
+    /// Requests served *after* their deadline (computed, but late).
+    pub deadline_missed: AtomicU64,
     pub batches: AtomicU64,
     pub batch_slots_used: AtomicU64,
     pub batch_slots_total: AtomicU64,
+    /// Gauge: requests currently queued in the scheduler.
+    pub queue_depth: AtomicU64,
+    /// Gauge: batches currently executing on the compute pool.
+    pub inflight_batches: AtomicU64,
     pub latency: Histogram,
     pub queue_wait: Histogram,
     pub model_time: Histogram,
     /// Per-bucket flush counts.
     bucket_flushes: Mutex<BTreeMap<usize, u64>>,
+    /// Per-bucket end-to-end latency histograms (keyed by bucket_len).
+    bucket_latency: Mutex<BTreeMap<usize, Histogram>>,
 }
 
 impl Default for Metrics {
@@ -106,13 +130,19 @@ impl Metrics {
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             completed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            abandoned: AtomicU64::new(0),
+            deadline_missed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batch_slots_used: AtomicU64::new(0),
             batch_slots_total: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            inflight_batches: AtomicU64::new(0),
             latency: Histogram::latency(),
             queue_wait: Histogram::latency(),
             model_time: Histogram::latency(),
             bucket_flushes: Mutex::new(BTreeMap::new()),
+            bucket_latency: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -126,6 +156,37 @@ impl Metrics {
             .unwrap()
             .entry(bucket_len)
             .or_default() += 1;
+    }
+
+    /// Record one served request's end-to-end latency, globally and
+    /// against its bucket's histogram.
+    pub fn record_latency(&self, bucket_len: usize, seconds: f64) {
+        self.record_latencies(bucket_len, std::slice::from_ref(&seconds));
+    }
+
+    /// Batch variant: one bucket-map lock per *batch* of served
+    /// requests, not per request (the reply loop is latency-critical).
+    pub fn record_latencies(&self, bucket_len: usize, seconds: &[f64]) {
+        if seconds.is_empty() {
+            return;
+        }
+        for &s in seconds {
+            self.latency.observe(s);
+        }
+        let mut map = self.bucket_latency.lock().unwrap();
+        let h = map.entry(bucket_len).or_insert_with(Histogram::latency);
+        for &s in seconds {
+            h.observe(s);
+        }
+    }
+
+    /// p-quantile of one bucket's end-to-end latency (0.0 if unseen).
+    pub fn bucket_quantile(&self, bucket_len: usize, q: f64) -> f64 {
+        self.bucket_latency
+            .lock()
+            .unwrap()
+            .get(&bucket_len)
+            .map_or(0.0, |h| h.quantile(q))
     }
 
     /// Fraction of batch slots carrying real requests (1.0 = no padding).
@@ -143,15 +204,28 @@ impl Metrics {
         obj.insert("accepted".into(), n(&self.accepted));
         obj.insert("rejected".into(), n(&self.rejected));
         obj.insert("completed".into(), n(&self.completed));
+        obj.insert("shed".into(), n(&self.shed));
+        obj.insert("abandoned".into(), n(&self.abandoned));
+        obj.insert("deadline_missed".into(), n(&self.deadline_missed));
         obj.insert("batches".into(), n(&self.batches));
+        obj.insert("queue_depth".into(), n(&self.queue_depth));
+        obj.insert("inflight_batches".into(), n(&self.inflight_batches));
         obj.insert("occupancy".into(), Json::Num(self.occupancy()));
         obj.insert(
             "latency_mean_s".into(),
             Json::Num(self.latency.mean_s()),
         );
         obj.insert(
+            "latency_p50_s".into(),
+            Json::Num(self.latency.quantile(0.50)),
+        );
+        obj.insert(
             "latency_p95_s".into(),
             Json::Num(self.latency.quantile(0.95)),
+        );
+        obj.insert(
+            "latency_p99_s".into(),
+            Json::Num(self.latency.quantile(0.99)),
         );
         obj.insert(
             "model_time_mean_s".into(),
@@ -163,6 +237,12 @@ impl Metrics {
             fm.insert(len.to_string(), Json::Num(*count as f64));
         }
         obj.insert("bucket_flushes".into(), Json::Obj(fm));
+        let lat = self.bucket_latency.lock().unwrap();
+        let mut lm = BTreeMap::new();
+        for (len, h) in lat.iter() {
+            lm.insert(len.to_string(), h.quantiles_json());
+        }
+        obj.insert("bucket_latency".into(), Json::Obj(lm));
         Json::Obj(obj)
     }
 }
@@ -213,6 +293,37 @@ mod tests {
             j.get("bucket_flushes").get("128").as_usize(),
             Some(1)
         );
+        // new scheduler gauges are always present
+        assert_eq!(j.get("shed").as_usize(), Some(0));
+        assert_eq!(j.get("abandoned").as_usize(), Some(0));
+        assert_eq!(j.get("queue_depth").as_usize(), Some(0));
+        assert_eq!(j.get("deadline_missed").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn per_bucket_latency_quantiles_exported() {
+        let m = Metrics::new();
+        for i in 1..=50 {
+            m.record_latency(64, i as f64 * 1e-3);
+        }
+        m.record_latency(128, 0.5);
+        assert!(m.bucket_quantile(64, 0.5) > 0.0);
+        assert!(m.bucket_quantile(64, 0.5) <= m.bucket_quantile(64, 0.99));
+        assert_eq!(m.bucket_quantile(256, 0.5), 0.0);
+        let j = m.to_json();
+        let b64 = j.get("bucket_latency").get("64");
+        assert_eq!(b64.get("count").as_usize(), Some(50));
+        assert!(b64.get("p50_s").as_f64().unwrap() > 0.0);
+        assert!(
+            b64.get("p50_s").as_f64().unwrap()
+                <= b64.get("p99_s").as_f64().unwrap()
+        );
+        assert_eq!(
+            j.get("bucket_latency").get("128").get("count").as_usize(),
+            Some(1)
+        );
+        // global latency histogram sees every observation
+        assert_eq!(m.latency.count(), 51);
     }
 
     #[test]

@@ -1,138 +1,182 @@
-//! L3 coordinator: request router, length-bucketed dynamic batcher, worker
-//! pool, metrics — the serving system a Linformer deployment runs
-//! (reference architecture: vllm-project/router, adapted to fixed-n
-//! encoder serving).
+//! L3 coordinator: a deadline-aware serving core — request router,
+//! length-bucketed scheduler with admission control and load shedding,
+//! metrics — the serving system a Linformer deployment runs.
+//!
+//! The paper's serving consequence (Fig 2): Linformer's latency-vs-n
+//! curve is flat, so merging and reordering across length buckets is
+//! cheap — *policy*, not compute shape, is the bottleneck under load.
+//! The scheduler therefore owns policy end to end: EDF flush order,
+//! deadline admission, expiry shedding, and cost-model merge-up.
 //!
 //! Threading model (std threads; the offline build has no tokio):
 //!
 //! ```text
-//!  clients ── submit() ──► dispatcher thread ──► per-bucket worker thread
-//!                           (owns Batcher)        (owns BatchRunner)
-//!                                 ▲                      │
-//!                                 └──── metrics ◄────────┘
+//!  clients ── submit()/submit_with() ──► scheduler thread
+//!     │            (Ticket; drop = cancel)  owns Batcher (EDF queues,
+//!     │                                     admission, shedding) +
+//!     │                                     runner table, one per bucket
+//!     │                                          │ flush → batch task
+//!     │                                          ▼
+//!     └──── Response ◄──────────── batch task on linalg::pool
+//!                                   (runner.run → per-request replies,
+//!                                    then BatchDone back to scheduler)
 //! ```
 //!
-//! The dispatcher is the only thread touching the batcher; workers only see
-//! flushed [`Batch`]es, so no locks sit on the request path (one mpsc hop
-//! in, one out).
+//! One control loop owns all scheduling state — there are no per-bucket
+//! worker threads and no second hop.  Flushed batches are submitted as
+//! detached tasks on the process-wide [`crate::linalg::pool`], so all
+//! buckets' model compute shares the one global thread budget; the
+//! scheduler applies backpressure by capping in-flight batches per bucket
+//! (`max_inflight`) and sheds queued work that can no longer meet its
+//! deadline — an expired request is **never** computed.  Replies flow
+//! straight from the batch task to the client; the scheduler only hears
+//! `BatchDone`, which feeds the service-time estimate admission control
+//! uses.
 //!
-//! Bucket worker threads are *control* threads: the model compute they
-//! trigger (e.g. [`ReferenceRunner`] → `model::mlm_predict_batch`) runs as
-//! tasks on the process-wide [`crate::linalg::pool`], so concurrently-busy
-//! buckets share one global compute-thread budget instead of each using
-//! the whole machine.
+//! Only placement and ordering changed relative to the old
+//! dispatcher/worker pipeline: batches still execute the same runner code
+//! on the same rows, so model outputs are bitwise identical.
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod worker;
 
-pub use batcher::{Batch, Batcher, BatcherConfig, BucketSpec, CostModel};
+pub use batcher::{
+    Batch, Batcher, BatcherConfig, BucketSpec, CostModel, DeadCause,
+    SchedPolicy,
+};
 pub use metrics::Metrics;
-pub use request::{Reject, Request, Response};
-pub use worker::{BatchRunner, MockRunner, ReferenceRunner, RunnerFactory};
+pub use request::{
+    Outcome, Priority, Reject, Request, Response, SubmitOptions,
+};
+pub use worker::{
+    BatchRunner, CountingRunner, LocalBatchRunner, LocalRunnerFactory,
+    MockRunner, PendingPinnedRunner, PinnedRunner, ReferenceRunner,
+    RunnerFactory,
+};
 #[cfg(feature = "pjrt")]
 pub use worker::XlaRunner;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-enum DispatcherMsg {
+enum SchedMsg {
     Submit(Request),
+    /// A dispatched batch finished on the pool (service time feeds the
+    /// admission controller's estimate).
+    BatchDone { bucket: usize, service_s: f64 },
     Shutdown,
 }
 
 /// Handle returned by [`Coordinator::submit`]: await the response on it.
+///
+/// Dropping the ticket *cancels* the request: the scheduler skips it at
+/// flush time instead of computing into a closed reply channel.  (A
+/// request already dispatched to the pool still completes — cancellation
+/// is a queue-stage mechanism.)
 #[derive(Debug)]
 pub struct Ticket {
     pub id: u64,
     rx: mpsc::Receiver<Response>,
+    cancelled: Arc<AtomicBool>,
 }
 
 impl Ticket {
-    pub fn wait(self) -> Result<Response, mpsc::RecvError> {
+    pub fn wait(&self) -> Result<Response, mpsc::RecvError> {
         self.rx.recv()
     }
 
     pub fn wait_timeout(
-        self,
+        &self,
         d: Duration,
     ) -> Result<Response, mpsc::RecvTimeoutError> {
         self.rx.recv_timeout(d)
+    }
+
+    /// Explicitly abandon the request (dropping the ticket does the same).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        self.cancelled.store(true, Ordering::Relaxed);
     }
 }
 
 /// The running coordinator.
 pub struct Coordinator {
-    tx: mpsc::Sender<DispatcherMsg>,
+    tx: mpsc::Sender<SchedMsg>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
-    dispatcher: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    scheduler: Option<JoinHandle<()>>,
     max_len: usize,
 }
 
 impl Coordinator {
-    /// Start the coordinator with one (bucket spec, runner factory) per
-    /// bucket.  Factories run *on their worker thread* — the PJRT handles
-    /// inside real runners are `!Send`, so each worker owns its own client
-    /// and compiled executable.
+    /// Start the scheduler with one (bucket spec, runner factory) per
+    /// bucket.  Factories run on the scheduler thread at startup; a
+    /// factory that needs a dedicated thread (e.g. `!Send` PJRT handles)
+    /// should return a [`PinnedRunner`].  A failed factory marks its
+    /// bucket dead — requests routed there fail fast instead of hanging.
     pub fn start(
         buckets: Vec<(BucketSpec, RunnerFactory)>,
         config: BatcherConfig,
     ) -> Coordinator {
         assert!(!buckets.is_empty());
         let metrics = Arc::new(Metrics::new());
-        let specs: Vec<BucketSpec> = buckets.iter().map(|(s, _)| *s).collect();
-        let max_len = specs.iter().map(|b| b.max_len).max().unwrap();
+        let max_len =
+            buckets.iter().map(|(s, _)| s.max_len).max().unwrap();
 
-        // One worker thread per bucket, constructing + owning its runner.
-        // Channels are BOUNDED (2 batches in flight): when a worker falls
-        // behind, batches stay in the batcher and its queue_capacity turns
-        // into client-visible backpressure instead of unbounded buffering.
-        let mut worker_txs = Vec::new();
-        let mut workers = Vec::new();
-        for (_, factory) in buckets {
-            let (wtx, wrx) = mpsc::sync_channel::<Batch>(2);
-            let m = Arc::clone(&metrics);
-            workers.push(std::thread::spawn(move || {
-                match factory() {
-                    Ok(runner) => worker_loop(runner, wrx, m),
-                    Err(e) => {
-                        eprintln!("[coordinator] runner init failed: {e}");
-                        // reply with empty responses so clients unblock
-                        while let Ok(batch) = wrx.recv() {
-                            for req in batch.requests {
-                                let _ = req.reply.send(Response {
-                                    id: req.id,
-                                    predictions: Vec::new(),
-                                    latency_s: 0.0,
-                                    batch_size: 0,
-                                    bucket_len: batch.bucket_len,
-                                });
-                            }
+        let (tx, rx) = mpsc::channel::<SchedMsg>();
+        let m = Arc::clone(&metrics);
+        let tx_sched = tx.clone();
+        let scheduler = std::thread::Builder::new()
+            .name("linformer-scheduler".into())
+            .spawn(move || {
+                // construct runners in bucket order (sorted by max_len,
+                // matching the Batcher's internal order)
+                let mut sorted = buckets;
+                sorted.sort_by_key(|(s, _)| s.max_len);
+                let mut runners: Vec<Option<Arc<dyn BatchRunner>>> =
+                    Vec::with_capacity(sorted.len());
+                let mut bucket_specs = Vec::with_capacity(sorted.len());
+                for (spec, factory) in sorted {
+                    bucket_specs.push(spec);
+                    match factory() {
+                        Ok(r) => runners.push(Some(Arc::from(r))),
+                        Err(e) => {
+                            eprintln!(
+                                "[coordinator] runner init failed for \
+                                 bucket {}: {e}",
+                                spec.max_len
+                            );
+                            runners.push(None);
                         }
                     }
                 }
-            }));
-            worker_txs.push(wtx);
-        }
-        let buckets = specs;
-
-        let (tx, rx) = mpsc::channel::<DispatcherMsg>();
-        let m = Arc::clone(&metrics);
-        let dispatcher = std::thread::spawn(move || {
-            dispatcher_loop(rx, Batcher::new(buckets, config), worker_txs, m)
-        });
+                let batcher = Batcher::new(bucket_specs, config);
+                Scheduler {
+                    batcher,
+                    runners,
+                    metrics: m,
+                    tx: tx_sched,
+                    inflight_total: 0,
+                    shutting_down: false,
+                }
+                .run(rx);
+            })
+            .expect("spawn scheduler thread");
 
         Coordinator {
             tx,
             next_id: AtomicU64::new(1),
             metrics,
-            dispatcher: Some(dispatcher),
-            workers,
+            scheduler: Some(scheduler),
             max_len,
         }
     }
@@ -142,12 +186,22 @@ impl Coordinator {
         self.max_len
     }
 
-    /// Submit a request; returns a ticket to wait on.
+    /// Submit an interactive request with no deadline.
+    pub fn submit(&self, tokens: Vec<u32>) -> Result<Ticket, Reject> {
+        self.submit_with(tokens, SubmitOptions::default())
+    }
+
+    /// Submit with an explicit priority class and optional SLO.
     ///
     /// Over-long / empty sequences are rejected synchronously; queue-full
-    /// rejections arrive asynchronously as an error response (the
-    /// dispatcher owns the queue state).
-    pub fn submit(&self, tokens: Vec<u32>) -> Result<Ticket, Reject> {
+    /// and admission-control rejections arrive asynchronously as a
+    /// [`Response`] with [`Outcome::Rejected`] (the scheduler owns the
+    /// queue state).
+    pub fn submit_with(
+        &self,
+        tokens: Vec<u32>,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, Reject> {
         if tokens.is_empty() {
             return Err(Reject::Empty);
         }
@@ -156,156 +210,271 @@ impl Coordinator {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
-        let req = Request { id, tokens, enqueued: Instant::now(), reply: rtx };
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let now = Instant::now();
+        let req = Request {
+            id,
+            tokens,
+            enqueued: now,
+            priority: opts.priority,
+            deadline: opts.slo.map(|slo| now + slo),
+            cancelled: Arc::clone(&cancelled),
+            reply: rtx,
+        };
         self.tx
-            .send(DispatcherMsg::Submit(req))
+            .send(SchedMsg::Submit(req))
             .map_err(|_| Reject::ShuttingDown)?;
-        Ok(Ticket { id, rx: rrx })
+        Ok(Ticket { id, rx: rrx, cancelled })
     }
 
-    /// Graceful shutdown: flush all queues, join all threads.
+    /// Graceful shutdown: flush all queues, finish in-flight batches,
+    /// join the scheduler.
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(DispatcherMsg::Shutdown);
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        let _ = self.tx.send(SchedMsg::Shutdown);
+        if let Some(s) = self.scheduler.take() {
+            let _ = s.join();
         }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(DispatcherMsg::Shutdown);
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        let _ = self.tx.send(SchedMsg::Shutdown);
+        if let Some(s) = self.scheduler.take() {
+            let _ = s.join();
         }
     }
 }
 
-fn dispatcher_loop(
-    rx: mpsc::Receiver<DispatcherMsg>,
-    mut batcher: Batcher,
-    worker_txs: Vec<mpsc::SyncSender<Batch>>,
+/// The single control loop owning every piece of scheduling state.
+struct Scheduler {
+    batcher: Batcher,
+    runners: Vec<Option<Arc<dyn BatchRunner>>>,
     metrics: Arc<Metrics>,
-) {
-    let tick = Duration::from_millis(1);
-    loop {
-        match rx.recv_timeout(tick) {
-            Ok(DispatcherMsg::Submit(req)) => {
-                match batcher.push(req) {
+    /// Clone of the coordinator channel, handed to batch tasks so they
+    /// can report `BatchDone`.
+    tx: mpsc::Sender<SchedMsg>,
+    inflight_total: usize,
+    shutting_down: bool,
+}
+
+impl Scheduler {
+    fn run(mut self, rx: mpsc::Receiver<SchedMsg>) {
+        let tick = Duration::from_millis(1);
+        loop {
+            // Block up to one tick for the first message, then drain the
+            // backlog — the timeout is what makes a lone request flush
+            // after `max_delay` with no further traffic (idle tick).
+            match rx.recv_timeout(tick) {
+                Ok(msg) => {
+                    self.handle(msg);
+                    while let Ok(msg) = rx.try_recv() {
+                        self.handle(msg);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    self.shutting_down = true;
+                }
+            }
+            let now = Instant::now();
+            // shed: expired deadlines + abandoned tickets, never computed
+            for (req, cause) in self.batcher.reap(now) {
+                let outcome = match cause {
+                    DeadCause::Expired => {
+                        self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                        Outcome::Shed
+                    }
+                    DeadCause::Abandoned => {
+                        self.metrics
+                            .abandoned
+                            .fetch_add(1, Ordering::Relaxed);
+                        Outcome::Canceled
+                    }
+                };
+                let _ = req
+                    .reply
+                    .send(Response::unserved(req.id, outcome, 0));
+            }
+            if self.shutting_down {
+                for batch in self.batcher.drain() {
+                    self.dispatch(batch);
+                }
+                if self.inflight_total == 0 {
+                    break;
+                }
+            } else {
+                // poll() skips saturated buckets internally (in-flight
+                // limit), so each dispatch eventually masks its bucket
+                while let Some(batch) = self.batcher.poll(now) {
+                    self.dispatch(batch);
+                }
+            }
+            self.metrics
+                .queue_depth
+                .store(self.batcher.queued() as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn handle(&mut self, msg: SchedMsg) {
+        match msg {
+            SchedMsg::Submit(req) => {
+                if self.shutting_down {
+                    self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.reply.send(Response::unserved(
+                        req.id,
+                        Outcome::Rejected,
+                        0,
+                    ));
+                    return;
+                }
+                // fail fast on buckets whose runner never constructed;
+                // Rejected (refused before queuing) keeps the metrics
+                // counter and the response outcome in agreement
+                if let Ok(bucket) = self.batcher.route(req.tokens.len()) {
+                    if self.runners[bucket].is_none() {
+                        self.metrics
+                            .rejected
+                            .fetch_add(1, Ordering::Relaxed);
+                        let _ = req.reply.send(Response::unserved(
+                            req.id,
+                            Outcome::Rejected,
+                            self.batcher.buckets()[bucket].max_len,
+                        ));
+                        return;
+                    }
+                }
+                match self.batcher.push(req) {
                     Ok(()) => {
-                        metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                        self.metrics
+                            .accepted
+                            .fetch_add(1, Ordering::Relaxed);
                     }
                     Err((_reject, req)) => {
-                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                        // deliver rejection as an empty-prediction response
-                        let _ = req.reply.send(Response {
-                            id: req.id,
-                            predictions: Vec::new(),
-                            latency_s: 0.0,
-                            batch_size: 0,
-                            bucket_len: 0,
-                        });
+                        self.metrics
+                            .rejected
+                            .fetch_add(1, Ordering::Relaxed);
+                        let _ = req.reply.send(Response::unserved(
+                            req.id,
+                            Outcome::Rejected,
+                            0,
+                        ));
                     }
                 }
             }
-            Ok(DispatcherMsg::Shutdown) => {
-                for batch in batcher.drain() {
-                    let _ = worker_txs[batch.bucket].send(batch);
-                }
-                break; // dropping worker_txs closes the worker loops
+            SchedMsg::BatchDone { bucket, service_s } => {
+                self.batcher.note_complete(bucket, service_s);
+                self.inflight_total = self.inflight_total.saturating_sub(1);
+                self.metrics
+                    .inflight_batches
+                    .fetch_sub(1, Ordering::Relaxed);
             }
-            Err(mpsc::RecvTimeoutError::Timeout) => {}
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                for batch in batcher.drain() {
-                    let _ = worker_txs[batch.bucket].send(batch);
-                }
-                break;
+            SchedMsg::Shutdown => {
+                self.shutting_down = true;
             }
         }
-        let now = Instant::now();
-        // Per-tick saturation mask: a bucket whose worker channel is full
-        // is skipped for the rest of the tick so it cannot starve other
-        // buckets' flushes (no head-of-line blocking across buckets).
-        let mut saturated = vec![false; worker_txs.len()];
-        while let Some(batch) = batcher.poll_masked(now, &saturated) {
-            match worker_txs[batch.bucket].try_send(batch) {
-                Ok(()) => {}
-                Err(mpsc::TrySendError::Full(batch)) => {
-                    // worker saturated: keep requests queued so client
-                    // backpressure (queue_capacity) engages upstream
-                    saturated[batch.bucket] = true;
-                    batcher.unpoll(batch);
-                }
-                Err(mpsc::TrySendError::Disconnected(batch)) => {
-                    for req in batch.requests {
-                        let _ = req.reply.send(Response {
-                            id: req.id,
-                            predictions: Vec::new(),
-                            latency_s: 0.0,
-                            batch_size: 0,
-                            bucket_len: batch.bucket_len,
-                        });
-                    }
-                }
+    }
+
+    /// Hand one flushed batch to the compute pool as a detached task.
+    fn dispatch(&mut self, batch: Batch) {
+        if batch.requests.is_empty() {
+            return;
+        }
+        let Some(runner) = self.runners[batch.bucket].as_ref() else {
+            // dead bucket (failed factory): unblock clients immediately
+            for req in batch.requests {
+                let _ = req.reply.send(Response::unserved(
+                    req.id,
+                    Outcome::Failed,
+                    batch.bucket_len,
+                ));
             }
+            return;
+        };
+        self.batcher.note_dispatch(batch.bucket);
+        self.inflight_total += 1;
+        self.metrics.inflight_batches.fetch_add(1, Ordering::Relaxed);
+        let runner = Arc::clone(runner);
+        let metrics = Arc::clone(&self.metrics);
+        let tx = self.tx.clone();
+        if runner.offloads_compute() {
+            // the batch only waits on a pinned backend thread: a shim
+            // thread carries the wait so no pool worker is parked idle
+            std::thread::spawn(move || {
+                run_batch(runner, batch, &metrics, &tx);
+            });
+        } else {
+            crate::linalg::pool::global().spawn(move || {
+                run_batch(runner, batch, &metrics, &tx);
+            });
         }
     }
 }
 
-fn worker_loop(
-    runner: Box<dyn BatchRunner>,
-    rx: mpsc::Receiver<Batch>,
-    metrics: Arc<Metrics>,
+/// Execute one batch on the pool: run the model, reply per request,
+/// report completion to the scheduler.
+fn run_batch(
+    runner: Arc<dyn BatchRunner>,
+    batch: Batch,
+    metrics: &Metrics,
+    tx: &mpsc::Sender<SchedMsg>,
 ) {
-    while let Ok(batch) = rx.recv() {
-        let rows: Vec<Vec<u32>> =
-            batch.requests.iter().map(|r| r.tokens.clone()).collect();
-        let used = rows.len();
-        metrics.record_batch(batch.bucket_len, used, runner.capacity());
-        let t0 = Instant::now();
-        let result = runner.run(&rows);
-        metrics.model_time.observe(t0.elapsed().as_secs_f64());
-        let finished = Instant::now();
-        match result {
-            Ok(preds) => {
-                for (req, pred) in batch.requests.into_iter().zip(preds) {
-                    let latency =
-                        finished.duration_since(req.enqueued).as_secs_f64();
-                    metrics.latency.observe(latency);
-                    metrics
-                        .queue_wait
-                        .observe(t0.duration_since(req.enqueued).as_secs_f64());
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        predictions: pred,
-                        latency_s: latency,
-                        batch_size: used,
-                        bucket_len: batch.bucket_len,
-                    });
+    let rows: Vec<Vec<u32>> =
+        batch.requests.iter().map(|r| r.tokens.clone()).collect();
+    let used = rows.len();
+    metrics.record_batch(batch.bucket_len, used, runner.capacity());
+    let t0 = Instant::now();
+    // a panicking runner must still produce replies + BatchDone, or the
+    // scheduler's in-flight count never drains and shutdown hangs
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || runner.run(&rows),
+    ))
+    .unwrap_or_else(|_| Err("runner panicked".into()));
+    // release the runner before signalling BatchDone: once the scheduler
+    // has seen every completion, no task-side runner clones linger (the
+    // shutdown path relies on this to release shared weights promptly)
+    drop(runner);
+    let service_s = t0.elapsed().as_secs_f64();
+    metrics.model_time.observe(service_s);
+    let finished = Instant::now();
+    match result {
+        Ok(preds) => {
+            let mut latencies = Vec::with_capacity(used);
+            for (req, pred) in batch.requests.into_iter().zip(preds) {
+                let latency =
+                    finished.duration_since(req.enqueued).as_secs_f64();
+                latencies.push(latency);
+                metrics
+                    .queue_wait
+                    .observe(t0.duration_since(req.enqueued).as_secs_f64());
+                if req.deadline.is_some_and(|d| finished > d) {
+                    metrics.deadline_missed.fetch_add(1, Ordering::Relaxed);
                 }
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.reply.send(Response {
+                    id: req.id,
+                    predictions: pred,
+                    latency_s: latency,
+                    batch_size: used,
+                    bucket_len: batch.bucket_len,
+                    outcome: Outcome::Served,
+                });
             }
-            Err(_) => {
-                // failure: deliver empty responses (clients treat
-                // empty predictions for non-empty input as an error)
-                for req in batch.requests {
-                    let _ = req.reply.send(Response {
-                        id: req.id,
-                        predictions: Vec::new(),
-                        latency_s: 0.0,
-                        batch_size: used,
-                        bucket_len: batch.bucket_len,
-                    });
-                }
+            metrics.record_latencies(batch.bucket_len, &latencies);
+        }
+        Err(_) => {
+            // failure: deliver explicit failure responses (clients also
+            // treat empty predictions for non-empty input as an error)
+            for req in batch.requests {
+                let _ = req.reply.send(Response::unserved(
+                    req.id,
+                    Outcome::Failed,
+                    batch.bucket_len,
+                ));
             }
         }
     }
+    let _ = tx.send(SchedMsg::BatchDone { bucket: batch.bucket, service_s });
 }
 
 #[cfg(test)]
@@ -341,6 +510,7 @@ mod tests {
         let t = c.submit(vec![1, 2, 3]).unwrap();
         let resp = t.wait_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.predictions, vec![2, 3, 4]);
+        assert_eq!(resp.outcome, Outcome::Served);
         assert!(resp.latency_s >= 0.0);
         c.shutdown();
     }
@@ -392,7 +562,7 @@ mod tests {
             max_delay: Duration::from_secs(10),
             ..Default::default()
         };
-        // slow worker + tiny queue => rejections
+        // slow runner + tiny queue => rejections
         let c = mock_coord(&[(8, 1)], 50, cfg);
         let tickets: Vec<Ticket> =
             (0..20).filter_map(|_| c.submit(vec![1; 4]).ok()).collect();
@@ -400,6 +570,7 @@ mod tests {
         for t in tickets {
             let r = t.wait_timeout(Duration::from_secs(10)).unwrap();
             if r.predictions.is_empty() {
+                assert_eq!(r.outcome, Outcome::Rejected);
                 empty += 1;
             }
         }
@@ -424,6 +595,109 @@ mod tests {
     }
 
     #[test]
+    fn lone_request_flushes_within_max_delay() {
+        // idle-flush semantics: with NO further submits, a lone request
+        // still flushes once it has waited max_delay — the scheduler must
+        // tick on a timeout, not only on messages
+        let cfg = BatcherConfig {
+            max_delay: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let c = mock_coord(&[(16, 8)], 0, cfg);
+        let t0 = Instant::now();
+        let t = c.submit(vec![1, 2, 3]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        let elapsed = t0.elapsed();
+        assert_eq!(r.outcome, Outcome::Served);
+        assert_eq!(r.predictions, vec![2, 3, 4]);
+        assert!(
+            elapsed >= Duration::from_millis(15),
+            "flushed before max_delay: {elapsed:?}"
+        );
+        assert!(
+            elapsed < Duration::from_secs(2),
+            "idle flush never fired: {elapsed:?}"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn expired_requests_are_shed_not_computed() {
+        let counting = CountingRunner::new(MockRunner {
+            capacity: 1,
+            len: 16,
+            delay: Duration::from_millis(80),
+            fail: false,
+        });
+        let (rows_run, _) = counting.counters();
+        let factory: RunnerFactory =
+            Box::new(move || Ok(Box::new(counting) as Box<dyn BatchRunner>));
+        let c = Coordinator::start(
+            vec![(BucketSpec { max_len: 16, batch: 1 }, factory)],
+            BatcherConfig { max_inflight: 1, ..Default::default() },
+        );
+        // first request occupies the only in-flight slot for 80ms
+        let t1 = c.submit(vec![1]).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        // second request's 10ms SLO expires while queued behind it
+        let t2 = c
+            .submit_with(
+                vec![2],
+                SubmitOptions::interactive(Duration::from_millis(10)),
+            )
+            .unwrap();
+        let r2 = t2.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r2.outcome, Outcome::Shed);
+        assert!(r2.predictions.is_empty());
+        let r1 = t1.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r1.outcome, Outcome::Served);
+        let metrics = Arc::clone(&c.metrics);
+        c.shutdown();
+        // the shed request never reached the model
+        assert_eq!(
+            rows_run.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "shed request was computed"
+        );
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn dropped_ticket_cancels_queued_request() {
+        let counting = CountingRunner::new(MockRunner {
+            capacity: 1,
+            len: 16,
+            delay: Duration::from_millis(60),
+            fail: false,
+        });
+        let (rows_run, _) = counting.counters();
+        let factory: RunnerFactory =
+            Box::new(move || Ok(Box::new(counting) as Box<dyn BatchRunner>));
+        let c = Coordinator::start(
+            vec![(BucketSpec { max_len: 16, batch: 1 }, factory)],
+            BatcherConfig { max_inflight: 1, ..Default::default() },
+        );
+        let t1 = c.submit(vec![1]).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let t2 = c.submit(vec![2]).unwrap(); // queued behind t1
+        drop(t2); // client walks away
+        let r1 = t1.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r1.outcome, Outcome::Served);
+        // give the scheduler a tick to reap, then serve a third request
+        let t3 = c.submit(vec![3]).unwrap();
+        let r3 = t3.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r3.outcome, Outcome::Served);
+        let abandoned = c.metrics.abandoned.load(Ordering::Relaxed);
+        c.shutdown();
+        assert_eq!(abandoned, 1, "abandoned request not counted");
+        assert_eq!(
+            rows_run.load(std::sync::atomic::Ordering::Relaxed),
+            2,
+            "cancelled request was computed"
+        );
+    }
+
+    #[test]
     fn metrics_accumulate() {
         let c = mock_coord(&[(8, 2)], 0, Default::default());
         for _ in 0..6 {
@@ -435,6 +709,11 @@ mod tests {
         assert!(c.metrics.latency.count() == 6);
         let j = c.metrics.to_json();
         assert_eq!(j.get("completed").as_usize(), Some(6));
+        // per-bucket quantiles ride along in the dump
+        assert_eq!(
+            j.get("bucket_latency").get("8").get("count").as_usize(),
+            Some(6)
+        );
         c.shutdown();
     }
 
@@ -455,6 +734,7 @@ mod tests {
         let t = c.submit(vec![1, 2]).unwrap();
         let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.predictions.is_empty());
+        assert_eq!(r.outcome, Outcome::Failed);
         c.shutdown();
     }
 
@@ -469,6 +749,10 @@ mod tests {
         let t = c.submit(vec![1, 2]).unwrap();
         let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.predictions.is_empty());
+        // dead bucket = refused before queuing, consistent with the
+        // metrics.rejected counter it increments
+        assert_eq!(r.outcome, Outcome::Rejected);
+        assert_eq!(c.metrics.rejected.load(Ordering::Relaxed), 1);
         c.shutdown();
     }
 }

@@ -1,17 +1,98 @@
-//! Request/response types flowing through the coordinator.
+//! Request/response types flowing through the scheduler.
 
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Scheduling class of a request.  Interactive traffic is ordered ahead
+/// of batch traffic in every queue; under overload the scheduler sheds
+/// whatever cannot meet its deadline, so batch work degrades first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+impl Priority {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Per-submit scheduling options: priority class + optional SLO.
+///
+/// `slo` is a *relative* latency budget; the scheduler turns it into an
+/// absolute deadline at submit time.  A request with no SLO never expires
+/// and is never shed — only queue-capacity backpressure applies.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    pub slo: Option<Duration>,
+}
+
+impl SubmitOptions {
+    pub fn interactive(slo: Duration) -> SubmitOptions {
+        SubmitOptions { priority: Priority::Interactive, slo: Some(slo) }
+    }
+
+    pub fn batch() -> SubmitOptions {
+        SubmitOptions { priority: Priority::Batch, slo: None }
+    }
+}
 
 /// An inference request: a token sequence awaiting MLM logits (or a
-/// classification decision — the worker decides by program).
+/// classification decision — the runner decides by program).
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<u32>,
     pub enqueued: Instant,
+    pub priority: Priority,
+    /// Absolute deadline (enqueue time + SLO); `None` = never expires.
+    pub deadline: Option<Instant>,
+    /// Set by the client dropping its `Ticket`: the scheduler skips the
+    /// request instead of computing into a closed reply channel.
+    pub cancelled: Arc<AtomicBool>,
     /// Channel the response is delivered on.
     pub reply: mpsc::Sender<Response>,
+}
+
+impl Request {
+    /// Client dropped its ticket; nobody is waiting for the answer.
+    pub fn abandoned(&self) -> bool {
+        self.cancelled.load(Ordering::Relaxed)
+    }
+}
+
+/// How a request left the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Computed and answered.
+    Served,
+    /// Refused before queuing (queue full, admission control, dead bucket).
+    Rejected,
+    /// Expired in queue and dropped without ever being computed.
+    Shed,
+    /// Client abandoned it (ticket dropped) before dispatch.
+    Canceled,
+    /// The runner errored while computing its batch.
+    Failed,
+}
+
+impl Outcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Outcome::Served => "served",
+            Outcome::Rejected => "rejected",
+            Outcome::Shed => "shed",
+            Outcome::Canceled => "canceled",
+            Outcome::Failed => "failed",
+        }
+    }
 }
 
 /// Completed request.
@@ -19,6 +100,8 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     /// Argmax token id per position (MLM) or class id (classifier).
+    /// Empty unless `outcome == Served` (kept as the legacy error signal:
+    /// empty predictions for non-empty input means "not served").
     pub predictions: Vec<u32>,
     /// Wall-clock latency from enqueue to completion.
     pub latency_s: f64,
@@ -26,6 +109,21 @@ pub struct Response {
     pub batch_size: usize,
     /// The length bucket it was routed to.
     pub bucket_len: usize,
+    pub outcome: Outcome,
+}
+
+impl Response {
+    /// A terminal non-served response (rejection, shed, cancel, failure).
+    pub fn unserved(id: u64, outcome: Outcome, bucket_len: usize) -> Response {
+        Response {
+            id,
+            predictions: Vec::new(),
+            latency_s: 0.0,
+            batch_size: 0,
+            bucket_len,
+            outcome,
+        }
+    }
 }
 
 /// Why a request could not be accepted.
@@ -35,6 +133,11 @@ pub enum Reject {
     TooLong { len: usize, max: usize },
     #[error("queue full (capacity {capacity}) — backpressure")]
     QueueFull { capacity: usize },
+    #[error(
+        "admission control: estimated completion in {estimated_ms}ms \
+         exceeds the {budget_ms}ms deadline budget"
+    )]
+    WontMeetDeadline { estimated_ms: u64, budget_ms: u64 },
     #[error("coordinator is shutting down")]
     ShuttingDown,
     #[error("empty sequence")]

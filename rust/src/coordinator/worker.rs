@@ -1,13 +1,16 @@
 //! Batch execution: the `BatchRunner` abstraction and its implementations.
 //!
-//! The coordinator is tested against `MockRunner`.  Production uses
-//! `XlaRunner` (behind the `pjrt` feature), which pads the batch to the
-//! artifact's static shape, executes the `mlm_logits` program and
-//! arg-maxes per position; [`ReferenceRunner`] serves the same contract
-//! through the pure-Rust batched encoder (`model::mlm_predict_batch`) —
-//! no padding, no XLA — and is the default on machines without PJRT.
+//! The scheduler executes batches as tasks on the process-wide compute
+//! pool, so runners must be `Send + Sync` — any pool worker may execute
+//! any bucket's batch.  The coordinator is tested against `MockRunner`;
+//! [`ReferenceRunner`] serves through the pure-Rust batched encoder
+//! (`model::mlm_predict_batch`) — no padding, no XLA — and is the default
+//! on machines without PJRT.  Backends whose handles are `!Send` (the
+//! `xla` crate's PJRT client holds `Rc` internals) implement
+//! [`LocalBatchRunner`] instead and are adapted by [`PinnedRunner`],
+//! which pins them to one dedicated thread and forwards batches to it.
 
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::data::tokenizer::PAD;
 use crate::model::{mlm_predict_batch, ModelConfig, Params};
@@ -15,12 +18,8 @@ use crate::runtime::tensor::Tensor;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Executable;
 
-/// Executes one padded batch for one length bucket.
-///
-/// Runners are constructed *inside* their worker thread via a
-/// [`RunnerFactory`] (the `xla` crate's PJRT handles are `!Send` — they
-/// hold `Rc` internals — so each worker owns its own client + executable).
-pub trait BatchRunner {
+/// Executes one batch for one length bucket, from any thread.
+pub trait BatchRunner: Send + Sync {
     /// Static batch capacity of the underlying executable.
     fn capacity(&self) -> usize;
 
@@ -30,11 +29,155 @@ pub trait BatchRunner {
     /// Run `rows` (each ≤ bucket_len tokens; ≤ capacity rows) and return
     /// per-row predictions truncated to each row's true length.
     fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String>;
+
+    /// True when `run` merely *waits* on compute owned elsewhere (e.g. a
+    /// pinned PJRT thread).  The scheduler then executes the batch on a
+    /// cheap shim thread instead of a compute-pool worker — parking pool
+    /// workers in channel waits would starve real pool compute.
+    fn offloads_compute(&self) -> bool {
+        false
+    }
 }
 
-/// Deferred runner construction, executed on the worker thread.
+/// A runner that is *not* thread-safe (e.g. wraps `Rc`-based PJRT
+/// handles).  Constructed and driven on one thread via [`PinnedRunner`].
+pub trait LocalBatchRunner {
+    fn capacity(&self) -> usize;
+    fn bucket_len(&self) -> usize;
+    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String>;
+}
+
+/// Deferred runner construction, executed when the scheduler starts.
 pub type RunnerFactory =
     Box<dyn FnOnce() -> Result<Box<dyn BatchRunner>, String> + Send>;
+
+/// Deferred construction of a `!Send` runner, executed on the pinned
+/// thread that will own it.
+pub type LocalRunnerFactory =
+    Box<dyn FnOnce() -> Result<Box<dyn LocalBatchRunner>, String> + Send>;
+
+type PinnedReply = mpsc::Sender<Result<Vec<Vec<u32>>, String>>;
+
+/// Adapts a [`LocalBatchRunner`] to the thread-safe [`BatchRunner`]
+/// contract: one dedicated thread constructs and owns the runner (PJRT
+/// handles never migrate), and `run` forwards batches to it over a
+/// channel.  The adapter itself is `Send + Sync`, so scheduler batch
+/// tasks on the compute pool can call it from any worker.
+pub struct PinnedRunner {
+    jobs: Mutex<mpsc::Sender<(Vec<Vec<u32>>, PinnedReply)>>,
+    capacity: usize,
+    bucket_len: usize,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// A [`PinnedRunner`] whose owning thread is still constructing its
+/// runner.  [`PinnedRunner::launch`] returns immediately with one of
+/// these, so a multi-bucket deployment can kick off every (slow) backend
+/// compile concurrently and only then [`Self::wait`] for each.
+pub struct PendingPinnedRunner {
+    init: mpsc::Receiver<Result<(usize, usize), String>>,
+    jobs: mpsc::Sender<(Vec<Vec<u32>>, PinnedReply)>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl PendingPinnedRunner {
+    /// Block until the pinned thread reports ready (or failed).
+    pub fn wait(self) -> Result<PinnedRunner, String> {
+        match self.init.recv() {
+            Ok(Ok((capacity, bucket_len))) => Ok(PinnedRunner {
+                jobs: Mutex::new(self.jobs),
+                capacity,
+                bucket_len,
+                thread: Some(self.thread),
+            }),
+            Ok(Err(e)) => {
+                let _ = self.thread.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = self.thread.join();
+                Err("pinned runner thread died during init".into())
+            }
+        }
+    }
+}
+
+impl PinnedRunner {
+    /// Start the owning thread and return without waiting: `factory`
+    /// (e.g. an XLA engine + executable compile) runs concurrently with
+    /// other launches.
+    pub fn launch(
+        factory: LocalRunnerFactory,
+    ) -> Result<PendingPinnedRunner, String> {
+        let (jtx, jrx) =
+            mpsc::channel::<(Vec<Vec<u32>>, PinnedReply)>();
+        let (itx, irx) = mpsc::channel::<Result<(usize, usize), String>>();
+        let thread = std::thread::Builder::new()
+            .name("linformer-pinned-runner".into())
+            .spawn(move || {
+                let runner = match factory() {
+                    Ok(r) => {
+                        let _ =
+                            itx.send(Ok((r.capacity(), r.bucket_len())));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = itx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok((rows, reply)) = jrx.recv() {
+                    let _ = reply.send(runner.run(&rows));
+                }
+            })
+            .map_err(|e| format!("spawn pinned runner: {e}"))?;
+        Ok(PendingPinnedRunner { init: irx, jobs: jtx, thread })
+    }
+
+    /// Spawn the owning thread, run `factory` on it, and block until the
+    /// runner reports ready (or construction fails).
+    pub fn spawn(factory: LocalRunnerFactory) -> Result<PinnedRunner, String> {
+        Self::launch(factory)?.wait()
+    }
+}
+
+impl BatchRunner for PinnedRunner {
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn bucket_len(&self) -> usize {
+        self.bucket_len
+    }
+
+    fn offloads_compute(&self) -> bool {
+        // run() blocks on the pinned thread's reply — keep that wait off
+        // the compute pool
+        true
+    }
+
+    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        let (rtx, rrx) = mpsc::channel();
+        self.jobs
+            .lock()
+            .map_err(|_| "pinned runner mutex poisoned".to_string())?
+            .send((rows.to_vec(), rtx))
+            .map_err(|_| "pinned runner thread gone".to_string())?;
+        rrx.recv()
+            .map_err(|_| "pinned runner died mid-batch".to_string())?
+    }
+}
+
+impl Drop for PinnedRunner {
+    fn drop(&mut self) {
+        // replace the sender so the owning thread's recv loop ends
+        let (dead, _) = mpsc::channel();
+        *self.jobs.lock().unwrap_or_else(|e| e.into_inner()) = dead;
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
 
 /// Pad a batch of rows to (capacity × len) with [PAD].
 pub fn pad_batch(rows: &[Vec<u32>], capacity: usize, len: usize) -> Vec<Vec<u32>> {
@@ -158,6 +301,9 @@ impl BatchRunner for ReferenceRunner {
 /// parameter vector, pre-marshalled once (§Perf/L3: parameters are
 /// megabytes and constant across requests — re-marshalling them per batch
 /// was the largest fixed cost on the serving path).
+///
+/// PJRT handles hold `Rc` internals, so this is a [`LocalBatchRunner`]:
+/// the serving assembly wraps it in a [`PinnedRunner`].
 #[cfg(feature = "pjrt")]
 pub struct XlaRunner {
     exe: Executable,
@@ -183,7 +329,7 @@ impl XlaRunner {
 }
 
 #[cfg(feature = "pjrt")]
-impl BatchRunner for XlaRunner {
+impl LocalBatchRunner for XlaRunner {
     fn capacity(&self) -> usize {
         self.batch
     }
@@ -243,6 +389,59 @@ impl BatchRunner for MockRunner {
             .iter()
             .map(|r| r.iter().map(|&t| t + 1).collect())
             .collect())
+    }
+}
+
+/// Wraps any runner and counts the rows/batches that actually reach the
+/// model — the instrument overload tests use to *prove* shed requests
+/// are never computed (`rows_run == served responses`, exactly).
+pub struct CountingRunner<R> {
+    pub inner: R,
+    pub rows_run: Arc<std::sync::atomic::AtomicUsize>,
+    pub batches_run: Arc<std::sync::atomic::AtomicUsize>,
+}
+
+impl<R> CountingRunner<R> {
+    pub fn new(inner: R) -> CountingRunner<R> {
+        CountingRunner {
+            inner,
+            rows_run: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+            batches_run: Arc::new(std::sync::atomic::AtomicUsize::new(0)),
+        }
+    }
+
+    /// Handles to the counters, for asserting after the runner is moved
+    /// into a factory.
+    pub fn counters(
+        &self,
+    ) -> (
+        Arc<std::sync::atomic::AtomicUsize>,
+        Arc<std::sync::atomic::AtomicUsize>,
+    ) {
+        (Arc::clone(&self.rows_run), Arc::clone(&self.batches_run))
+    }
+}
+
+impl<R: BatchRunner> BatchRunner for CountingRunner<R> {
+    fn capacity(&self) -> usize {
+        self.inner.capacity()
+    }
+
+    fn bucket_len(&self) -> usize {
+        self.inner.bucket_len()
+    }
+
+    fn offloads_compute(&self) -> bool {
+        // forward, or wrapping a PinnedRunner would silently park pool
+        // workers in its channel wait
+        self.inner.offloads_compute()
+    }
+
+    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        use std::sync::atomic::Ordering;
+        self.rows_run.fetch_add(rows.len(), Ordering::Relaxed);
+        self.batches_run.fetch_add(1, Ordering::Relaxed);
+        self.inner.run(rows)
     }
 }
 
@@ -353,5 +552,78 @@ mod tests {
             fail: true,
         };
         assert!(m.run(&[vec![1]]).is_err());
+    }
+
+    #[test]
+    fn counting_runner_tracks_rows_and_batches() {
+        let c = CountingRunner::new(MockRunner {
+            capacity: 4,
+            len: 8,
+            delay: std::time::Duration::ZERO,
+            fail: false,
+        });
+        let (rows, batches) = c.counters();
+        c.run(&[vec![1], vec![2]]).unwrap();
+        c.run(&[vec![3]]).unwrap();
+        use std::sync::atomic::Ordering;
+        assert_eq!(rows.load(Ordering::Relaxed), 3);
+        assert_eq!(batches.load(Ordering::Relaxed), 2);
+    }
+
+    /// A `!Send` runner (holds an `Rc`) — stands in for PJRT handles.
+    struct RcRunner {
+        state: std::rc::Rc<std::cell::Cell<u32>>,
+    }
+
+    impl LocalBatchRunner for RcRunner {
+        fn capacity(&self) -> usize {
+            3
+        }
+        fn bucket_len(&self) -> usize {
+            16
+        }
+        fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+            self.state.set(self.state.get() + 1);
+            Ok(rows
+                .iter()
+                .map(|r| r.iter().map(|&t| t + self.state.get()).collect())
+                .collect())
+        }
+    }
+
+    #[test]
+    fn pinned_runner_drives_non_send_backend_from_any_thread() {
+        let factory: LocalRunnerFactory = Box::new(|| {
+            Ok(Box::new(RcRunner {
+                state: std::rc::Rc::new(std::cell::Cell::new(0)),
+            }) as Box<dyn LocalBatchRunner>)
+        });
+        let pinned = Arc::new(PinnedRunner::spawn(factory).unwrap());
+        assert_eq!(pinned.capacity(), 3);
+        assert_eq!(pinned.bucket_len(), 16);
+        // call it concurrently from several threads — the Rc state never
+        // leaves its owning thread
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = Arc::clone(&pinned);
+            handles.push(std::thread::spawn(move || {
+                p.run(&[vec![10, 20]]).unwrap()
+            }));
+        }
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out[0].len(), 2);
+            assert!(out[0][0] > 10, "state advanced: {out:?}");
+        }
+    }
+
+    #[test]
+    fn pinned_runner_surfaces_factory_failure() {
+        let factory: LocalRunnerFactory =
+            Box::new(|| Err("compile exploded".into()));
+        match PinnedRunner::spawn(factory) {
+            Err(e) => assert!(e.contains("compile exploded")),
+            Ok(_) => panic!("expected spawn failure"),
+        }
     }
 }

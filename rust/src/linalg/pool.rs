@@ -64,6 +64,11 @@ struct ScopeState {
 struct QueuedTask {
     scope: Arc<ScopeState>,
     task: StaticTask,
+    /// Submitted via [`Pool::spawn`] (no owner waiting).  Helpers skip
+    /// these: a worker blocked on a few nested chunk tasks must not
+    /// inline a whole detached serving batch (tens of ms) and couple its
+    /// own caller's latency to another bucket's work.
+    detached: bool,
 }
 
 struct Shared {
@@ -168,7 +173,11 @@ impl Pool {
                 // executing, so the 'env borrows inside each task strictly
                 // outlive every use.  The box is only ever called once.
                 let task: StaticTask = unsafe { std::mem::transmute(task) };
-                q.push_back(QueuedTask { scope: Arc::clone(&scope), task });
+                q.push_back(QueuedTask {
+                    scope: Arc::clone(&scope),
+                    task,
+                    detached: false,
+                });
             }
         }
         self.shared.work_cv.notify_all();
@@ -179,8 +188,17 @@ impl Pool {
                 // A worker must not sleep while work is queued: the queued
                 // tasks may be exactly the ones it is waiting for (or be
                 // blocking the workers that hold them) — see module docs.
-                let next =
-                    self.shared.queue.lock().expect("pool queue").pop_back();
+                // Detached tasks are skipped: they belong to no scope, so
+                // they can never be what this worker waits on, and
+                // inlining one would stall this scope for its full
+                // duration.
+                let next = {
+                    let mut q =
+                        self.shared.queue.lock().expect("pool queue");
+                    q.iter()
+                        .rposition(|t| !t.detached)
+                        .and_then(|i| q.remove(i))
+                };
                 if let Some(qt) = next {
                     execute(&self.shared, qt);
                     continue;
@@ -200,6 +218,27 @@ impl Pool {
         if let Some(payload) = scope.panic.lock().expect("pool panic").take() {
             resume_unwind(payload);
         }
+    }
+
+    /// Submit one detached `'static` task and return immediately.
+    ///
+    /// Unlike [`Pool::run`] nothing blocks on completion — the caller is
+    /// responsible for its own completion signalling (the serving
+    /// scheduler sends itself a message from inside the task).  A panic
+    /// inside a detached task is caught and swallowed by the worker (there
+    /// is no owner to re-raise it on); tasks that can fail should carry
+    /// their own error channel.
+    pub fn spawn(&self, task: impl FnOnce() + Send + 'static) {
+        let scope = Arc::new(ScopeState {
+            pending: AtomicUsize::new(1),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        self.shared.queue.lock().expect("pool queue").push_back(
+            QueuedTask { scope, task: Box::new(task), detached: true },
+        );
+        self.shared.work_cv.notify_one();
     }
 }
 
@@ -239,7 +278,7 @@ fn worker_loop(shared: &Shared) {
 /// is per *thread*, not per stack frame: a helping worker re-entering
 /// here from a nested wait is already counted by its outermost frame.
 fn execute(shared: &Shared, qt: QueuedTask) {
-    let QueuedTask { scope, task } = qt;
+    let QueuedTask { scope, task, .. } = qt;
     let outermost = IN_TASK.with(|f| !f.replace(true));
     if outermost {
         let now = shared.busy.fetch_add(1, Ordering::AcqRel) + 1;
@@ -380,6 +419,48 @@ mod tests {
         });
         assert_eq!(total.load(SeqCst), 4 * 8 * 3);
         assert!(pool.peak_busy() <= 2, "peak {} > 2", pool.peak_busy());
+    }
+
+    #[test]
+    fn spawn_runs_detached_tasks() {
+        let pool = Pool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..16usize {
+            let tx = tx.clone();
+            pool.spawn(move || {
+                let _ = tx.send(i);
+            });
+        }
+        let mut got: Vec<usize> = (0..16)
+            .map(|_| rx.recv_timeout(Duration::from_secs(5)).unwrap())
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spawned_task_can_nest_blocking_runs() {
+        // a detached task that fans out a nested task set (exactly what a
+        // dispatched serving batch does via encode_batch) must complete
+        // even on a single-worker pool — the worker helps drain
+        let pool: &'static Pool = Box::leak(Box::new(Pool::new(1)));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let sum = Arc::new(AtomicUsize::new(0));
+        let sum2 = Arc::clone(&sum);
+        pool.spawn(move || {
+            let tasks: Vec<Task<'_>> = (0..8)
+                .map(|i| {
+                    let s = Arc::clone(&sum2);
+                    Box::new(move || {
+                        s.fetch_add(i, SeqCst);
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run(tasks);
+            let _ = tx.send(());
+        });
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(sum.load(SeqCst), (0..8).sum::<usize>());
     }
 
     #[test]

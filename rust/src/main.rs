@@ -368,9 +368,12 @@ fn cmd_finetune(argv: Vec<String>) -> Result<(), AnyError> {
 // serve
 // ---------------------------------------------------------------------------
 
-/// Without PJRT, `serve` runs the same coordinator/batcher stack on the
-/// pure-Rust batched reference encoder (fresh-init weights) — the
-/// end-to-end demo of `encode_batch` on a clean machine.
+/// Without PJRT, `serve` runs the same scheduler stack on the pure-Rust
+/// batched reference encoder (fresh-init weights) — the end-to-end demo
+/// of `encode_batch` on a clean machine.  With `--trace` it replays a
+/// JSON trace open-loop through the deadline scheduler and prints the
+/// machine-readable outcome summary (served / rejected / shed /
+/// deadline-missed) used for policy diffs.
 #[cfg(not(feature = "pjrt"))]
 fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
     let args = Args::parse(
@@ -379,6 +382,13 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
             ("requests", "synthetic requests to send (default 64)"),
             ("clients", "client threads (default 4)"),
             ("seed", "rng seed"),
+            ("trace", "replay a JSON trace file through the scheduler"),
+            ("slo-ms", "interactive SLO when tagging a trace (default 50)"),
+            (
+                "interactive-frac",
+                "fraction of trace tagged interactive (default 0.7)",
+            ),
+            ("policy", "edf (default) or fifo (legacy baseline)"),
         ],
     )?;
     let mut cfg = ModelConfig::tiny();
@@ -389,38 +399,69 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
     cfg.k_proj = 32;
     cfg.vocab_size = 512;
     let params = std::sync::Arc::new(Params::init(&cfg, 0));
+    let mut bc = serving::default_config(cfg.k_proj);
+    match args.str_or("policy", "edf").as_str() {
+        "edf" => {}
+        "fifo" => {
+            // the legacy baseline: arrival order, no admission, no shed
+            bc.policy = linformer::coordinator::SchedPolicy::Fifo;
+            bc.admission = false;
+            bc.shed_expired = false;
+        }
+        other => return Err(format!("unknown policy '{other}'").into()),
+    }
     println!(
         "[serve] pjrt feature off — serving the pure-Rust reference \
-         encoder (n={}, k={})",
-        cfg.max_len, cfg.k_proj
+         encoder (n={}, k={}, policy={})",
+        cfg.max_len,
+        cfg.k_proj,
+        args.str_or("policy", "edf")
     );
     let coord = serving::build_reference_coordinator(
         &cfg,
         &params,
         &[(64, 8), (128, 4)],
-        serving::default_config(cfg.k_proj),
+        bc,
     );
-    let total = args.usize_or("requests", 64)?;
-    let clients = args.usize_or("clients", 4)?;
-    println!("[serve] sending {total} requests from {clients} clients…");
-    let report = serving::run_load(
-        &coord,
-        cfg.vocab_size,
-        total,
-        clients,
-        args.usize_or("seed", 0)? as u64,
-    );
-    println!(
-        "[serve] completed {}/{} ({} rejected) in {:.2}s — {:.1} req/s, \
-         mean latency {:.1}ms, p95 {:.1}ms",
-        report.completed,
-        report.sent,
-        report.rejected,
-        report.wall_s,
-        report.throughput_rps,
-        report.mean_latency_s * 1e3,
-        report.p95_latency_s * 1e3
-    );
+    if let Some(path) = args.get("trace") {
+        let text = std::fs::read_to_string(path)?;
+        let mut trace = serving::trace::from_json(&text)?;
+        if trace.iter().all(|e| e.slo_s.is_none()) {
+            // untagged trace: apply the CLI's SLO mix
+            serving::trace::assign_slos(
+                &mut trace,
+                args.f64_or("interactive-frac", 0.7)?,
+                args.f64_or("slo-ms", 50.0)? / 1e3,
+                args.usize_or("seed", 0)? as u64,
+            );
+        }
+        println!("[serve] replaying {} events from {path}…", trace.len());
+        let report =
+            serving::trace::replay(&coord, &trace, cfg.vocab_size, 1.0);
+        println!("[serve] trace summary: {}", report.summary_json());
+    } else {
+        let total = args.usize_or("requests", 64)?;
+        let clients = args.usize_or("clients", 4)?;
+        println!("[serve] sending {total} requests from {clients} clients…");
+        let report = serving::run_load(
+            &coord,
+            cfg.vocab_size,
+            total,
+            clients,
+            args.usize_or("seed", 0)? as u64,
+        );
+        println!(
+            "[serve] completed {}/{} ({} rejected) in {:.2}s — {:.1} req/s, \
+             mean latency {:.1}ms, p95 {:.1}ms",
+            report.completed,
+            report.sent,
+            report.rejected,
+            report.wall_s,
+            report.throughput_rps,
+            report.mean_latency_s * 1e3,
+            report.p95_latency_s * 1e3
+        );
+    }
     println!("[serve] metrics: {}", coord.metrics.to_json());
     coord.shutdown();
     Ok(())

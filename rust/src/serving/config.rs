@@ -10,6 +10,10 @@
 //! merge_up = true
 //! cost_model = "linear"        # or "quadratic"
 //! cost_k = 32
+//! policy = "edf"               # or "fifo"
+//! admission = true             # deadline admission control
+//! shed_expired = true          # drop expired queued requests
+//! max_inflight = 2             # in-flight batches per bucket
 //!
 //! [training]
 //! steps = 200
@@ -20,7 +24,7 @@
 
 use std::time::Duration;
 
-use crate::coordinator::{BatcherConfig, CostModel};
+use crate::coordinator::{BatcherConfig, CostModel, SchedPolicy};
 use crate::training::{LrSchedule, TrainConfig};
 use crate::util::json::Json;
 use crate::util::toml;
@@ -106,6 +110,33 @@ impl LauncherConfig {
                     )))
                 }
             }
+            match serving.get("policy").as_str() {
+                Some("edf") | None => {
+                    cfg.batcher.policy = SchedPolicy::Edf;
+                }
+                Some("fifo") => {
+                    cfg.batcher.policy = SchedPolicy::Fifo;
+                }
+                Some(o) => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown policy '{o}'"
+                    )))
+                }
+            }
+            if let Some(a) = serving.get("admission").as_bool() {
+                cfg.batcher.admission = a;
+            }
+            if let Some(s) = serving.get("shed_expired").as_bool() {
+                cfg.batcher.shed_expired = s;
+            }
+            if let Some(n) = serving.get("max_inflight").as_usize() {
+                if n == 0 {
+                    return Err(ConfigError::Invalid(
+                        "serving.max_inflight must be ≥ 1".into(),
+                    ));
+                }
+                cfg.batcher.max_inflight = n;
+            }
         }
         let training = root.get("training");
         if !training.is_null() {
@@ -148,6 +179,9 @@ mod tests {
         let c = LauncherConfig::from_toml("").unwrap();
         assert_eq!(c.models, vec!["tiny", "serve_128"]);
         assert_eq!(c.artifacts_dir, "artifacts");
+        assert_eq!(c.batcher.policy, SchedPolicy::Edf);
+        assert!(c.batcher.admission);
+        assert!(c.batcher.shed_expired);
     }
 
     #[test]
@@ -161,6 +195,10 @@ mod tests {
             max_delay_ms = 2.5
             merge_up = false
             cost_model = "quadratic"
+            policy = "fifo"
+            admission = false
+            shed_expired = false
+            max_inflight = 4
             [training]
             steps = 77
             peak_lr = 0.01
@@ -175,6 +213,10 @@ mod tests {
         assert_eq!(c.batcher.max_delay, Duration::from_micros(2500));
         assert!(!c.batcher.merge_up);
         assert_eq!(c.batcher.cost_model, CostModel::Quadratic);
+        assert_eq!(c.batcher.policy, SchedPolicy::Fifo);
+        assert!(!c.batcher.admission);
+        assert!(!c.batcher.shed_expired);
+        assert_eq!(c.batcher.max_inflight, 4);
         assert_eq!(c.train.steps, 77);
         assert_eq!(c.train.eval_every, 11);
         assert_eq!(c.train.seed, 5);
@@ -186,6 +228,14 @@ mod tests {
     fn rejects_bad_cost_model_and_warmup() {
         assert!(LauncherConfig::from_toml(
             "[serving]\ncost_model = \"cubic\""
+        )
+        .is_err());
+        assert!(LauncherConfig::from_toml(
+            "[serving]\npolicy = \"random\""
+        )
+        .is_err());
+        assert!(LauncherConfig::from_toml(
+            "[serving]\nmax_inflight = 0"
         )
         .is_err());
         assert!(LauncherConfig::from_toml(

@@ -12,7 +12,9 @@ pub mod trace;
 pub use config::LauncherConfig;
 
 #[cfg(feature = "pjrt")]
-use crate::coordinator::XlaRunner;
+use crate::coordinator::{
+    LocalBatchRunner, LocalRunnerFactory, PinnedRunner, XlaRunner,
+};
 use crate::coordinator::{
     BatchRunner, BatcherConfig, BucketSpec, Coordinator, CostModel,
     ReferenceRunner, RunnerFactory,
@@ -69,8 +71,11 @@ pub fn build_reference_coordinator(
 ///
 /// Each named model becomes one bucket backed by its `mlm_logits` program
 /// and `init.bin` (or checkpoint) parameters.  PJRT handles are `!Send`,
-/// so each worker thread creates its own [`Engine`] and compiles its own
-/// executable inside the runner factory.
+/// so each bucket's [`XlaRunner`] is built inside a [`PinnedRunner`]: a
+/// dedicated thread owns the engine + executable and the scheduler's
+/// pool tasks forward batches to it.  All buckets are *launched* here,
+/// before the coordinator starts, so their engine/compile work runs
+/// concurrently (startup is the slowest compile, not the sum).
 #[cfg(feature = "pjrt")]
 pub fn build_coordinator(
     manifest: &Manifest,
@@ -92,25 +97,35 @@ pub fn build_coordinator(
         let params = entry.load_init()?;
         let batch = entry.batch;
         let (len, vocab) = (entry.config.max_len, entry.config.vocab_size);
-        let factory: RunnerFactory = Box::new(move || {
+        let local: LocalRunnerFactory = Box::new(move || {
             let engine = Engine::cpu().map_err(|e| e.to_string())?;
-            let exe =
-                engine.load_program(&info).map_err(|e| e.to_string())?;
+            let exe = engine
+                .load_program(&info)
+                .map_err(|e| e.to_string())?;
             Ok(Box::new(XlaRunner::new(exe, params, batch, len, vocab))
-                as Box<dyn BatchRunner>)
+                as Box<dyn LocalBatchRunner>)
+        });
+        // launch now (compiles start concurrently); the coordinator's
+        // factory only waits for readiness
+        let pending = PinnedRunner::launch(local)
+            .map_err(crate::training::TrainError::Serving)?;
+        let factory: RunnerFactory = Box::new(move || {
+            Ok(Box::new(pending.wait()?) as Box<dyn BatchRunner>)
         });
         buckets.push((spec, factory));
     }
     Ok(Coordinator::start(buckets, config))
 }
 
-/// Default serving batcher config tuned for the Linformer cost model.
+/// Default serving batcher config tuned for the Linformer cost model:
+/// EDF scheduling, admission control and expiry shedding on.
 pub fn default_config(k: usize) -> BatcherConfig {
     BatcherConfig {
         max_delay: Duration::from_millis(10),
         queue_capacity: 512,
         merge_up: true,
         cost_model: CostModel::Linear { k },
+        ..BatcherConfig::default()
     }
 }
 
@@ -192,12 +207,7 @@ pub fn run_load(
     } else {
         latencies.iter().sum::<f64>() / latencies.len() as f64
     };
-    let p95 = latencies
-        .get(((latencies.len() as f64 * 0.95) as usize).min(
-            latencies.len().saturating_sub(1),
-        ))
-        .copied()
-        .unwrap_or(0.0);
+    let p95 = crate::util::stats::percentile(&latencies, 0.95);
     LoadReport {
         sent: total,
         completed,
@@ -315,9 +325,12 @@ mod tests {
     }
 
     #[test]
-    fn default_config_uses_linear_cost() {
+    fn default_config_uses_linear_cost_and_edf() {
         let c = default_config(64);
         assert!(c.merge_up);
         assert_eq!(c.cost_model, CostModel::Linear { k: 64 });
+        assert_eq!(c.policy, crate::coordinator::SchedPolicy::Edf);
+        assert!(c.admission);
+        assert!(c.shed_expired);
     }
 }

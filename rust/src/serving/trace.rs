@@ -1,24 +1,35 @@
-//! Workload traces: arrival-time + length streams for serving evaluation.
+//! Workload traces: arrival-time + length + SLO streams for serving
+//! evaluation.
 //!
 //! The paper benchmarks with "randomly generated data up to some sequence
 //! length" (§5.3); production serving evaluations replay *traces*.  This
 //! module synthesizes open-loop traces (Poisson or bursty MMPP-style
-//! arrivals × mixed length distributions), can persist/reload them as
-//! JSON, and replays them against a [`Coordinator`] with correct open-loop
-//! timing (late arrivals are not back-pressured by slow clients).
+//! arrivals × mixed length distributions), optionally tags events with a
+//! priority class + latency SLO, persists/reloads them as JSON, and
+//! replays them against a [`Coordinator`] with correct open-loop timing
+//! (late arrivals are not back-pressured by slow clients).  Replay
+//! records a per-request outcome (served / deadline-missed / rejected /
+//! shed / canceled / failed) and emits a machine-readable summary JSON so
+//! benches can diff scheduling policies.
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{
+    Coordinator, Outcome, Priority, SubmitOptions, Ticket,
+};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
+use crate::util::stats::percentile;
 use std::collections::BTreeMap;
 
-/// One trace entry: arrival offset + sequence length.
+/// One trace entry: arrival offset, sequence length, scheduling class.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
     pub at_s: f64,
     pub len: usize,
+    pub priority: Priority,
+    /// Latency SLO in (trace-time) seconds; `None` = no deadline.
+    pub slo_s: Option<f64>,
 }
 
 /// Length distribution families seen in long-document serving.
@@ -56,6 +67,7 @@ impl LengthDist {
 }
 
 /// Synthesize an open-loop Poisson trace at `rate_rps` for `n` events.
+/// Events default to interactive with no SLO (see [`assign_slos`]).
 pub fn poisson_trace(
     n: usize,
     rate_rps: f64,
@@ -69,7 +81,12 @@ pub fn poisson_trace(
             // exponential inter-arrival
             let u = rng.next_f64().max(1e-12);
             t += -u.ln() / rate_rps;
-            TraceEvent { at_s: t, len: dist.sample(&mut rng) }
+            TraceEvent {
+                at_s: t,
+                len: dist.sample(&mut rng),
+                priority: Priority::Interactive,
+                slo_s: None,
+            }
         })
         .collect()
 }
@@ -91,9 +108,35 @@ pub fn bursty_trace(
             let rate = if in_burst { burst_rps } else { base_rps };
             let u = rng.next_f64().max(1e-12);
             t += -u.ln() / rate;
-            TraceEvent { at_s: t, len: dist.sample(&mut rng) }
+            TraceEvent {
+                at_s: t,
+                len: dist.sample(&mut rng),
+                priority: Priority::Interactive,
+                slo_s: None,
+            }
         })
         .collect()
+}
+
+/// Tag a fraction of events as interactive-with-SLO; the rest become
+/// deadline-less batch traffic.  This is the standard mixed-class
+/// workload the scheduler benches and overload tests replay.
+pub fn assign_slos(
+    trace: &mut [TraceEvent],
+    interactive_frac: f64,
+    slo_s: f64,
+    seed: u64,
+) {
+    let mut rng = Pcg32::seeded(seed);
+    for ev in trace.iter_mut() {
+        if rng.chance(interactive_frac as f32) {
+            ev.priority = Priority::Interactive;
+            ev.slo_s = Some(slo_s);
+        } else {
+            ev.priority = Priority::Batch;
+            ev.slo_s = None;
+        }
+    }
 }
 
 /// Serialize a trace to JSON (replayable across runs/machines).
@@ -104,43 +147,140 @@ pub fn to_json(trace: &[TraceEvent]) -> String {
             let mut m = BTreeMap::new();
             m.insert("at_s".to_string(), Json::Num(e.at_s));
             m.insert("len".to_string(), Json::Num(e.len as f64));
+            m.insert(
+                "priority".to_string(),
+                Json::Str(e.priority.name().to_string()),
+            );
+            if let Some(slo) = e.slo_s {
+                m.insert("slo_s".to_string(), Json::Num(slo));
+            }
             Json::Obj(m)
         })
         .collect();
     Json::Arr(arr).to_string()
 }
 
-/// Parse a trace from JSON.
+/// Parse a trace from JSON.  `priority`/`slo_s` are optional (older
+/// traces replay as interactive, deadline-less).
 pub fn from_json(text: &str) -> Result<Vec<TraceEvent>, String> {
     let v = crate::util::json::parse(text).map_err(|e| e.to_string())?;
     let arr = v.as_arr().ok_or("trace must be a JSON array")?;
     arr.iter()
         .map(|e| {
+            let priority = match e.get("priority").as_str() {
+                Some("batch") => Priority::Batch,
+                Some("interactive") | None => Priority::Interactive,
+                Some(o) => return Err(format!("unknown priority '{o}'")),
+            };
+            let slo_s = match e.get("slo_s") {
+                Json::Null => None,
+                v => Some(
+                    v.as_f64().ok_or("slo_s must be a number")?,
+                ),
+            };
             Ok(TraceEvent {
                 at_s: e.get("at_s").as_f64().ok_or("missing at_s")?,
                 len: e.get("len").as_usize().ok_or("missing len")?,
+                priority,
+                slo_s,
             })
         })
         .collect()
 }
 
-/// Replay outcome.
+/// Per-request replay outcome (trace order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayOutcome {
+    /// Served within its SLO (or has none).
+    Served,
+    /// Served, but past its deadline.
+    DeadlineMissed,
+    /// Refused at submit (backpressure or admission control).
+    Rejected,
+    /// Expired in queue; dropped without being computed.
+    Shed,
+    /// Ticket dropped before dispatch.
+    Canceled,
+    /// Runner error or lost response.
+    Failed,
+}
+
+impl ReplayOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplayOutcome::Served => "served",
+            ReplayOutcome::DeadlineMissed => "deadline_missed",
+            ReplayOutcome::Rejected => "rejected",
+            ReplayOutcome::Shed => "shed",
+            ReplayOutcome::Canceled => "canceled",
+            ReplayOutcome::Failed => "failed",
+        }
+    }
+}
+
+/// Replay outcome summary.
 #[derive(Debug, Clone)]
 pub struct ReplayReport {
     pub sent: usize,
+    /// Responses carrying predictions (served in or out of SLO).
     pub completed: usize,
+    /// Everything else: submit rejections, shed, canceled, failed.
     pub rejected: usize,
+    /// Served past deadline (subset of `completed`).
+    pub deadline_missed: usize,
+    /// Expired in queue, never computed.
+    pub shed: usize,
+    pub canceled: usize,
     pub wall_s: f64,
     pub mean_latency_s: f64,
     pub p99_latency_s: f64,
+    /// p99 latency over served *interactive* requests (the SLO class).
+    pub interactive_p99_s: f64,
     /// Fraction of events submitted within 1ms of their trace time
     /// (open-loop fidelity).
     pub on_time_frac: f64,
+    /// Per-request outcome, in trace order.
+    pub outcomes: Vec<ReplayOutcome>,
+}
+
+impl ReplayReport {
+    pub fn count(&self, o: ReplayOutcome) -> usize {
+        self.outcomes.iter().filter(|&&x| x == o).count()
+    }
+
+    /// Machine-readable summary for policy diffs (benches dump this).
+    pub fn summary_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("sent".into(), Json::Num(self.sent as f64));
+        for o in [
+            ReplayOutcome::Served,
+            ReplayOutcome::DeadlineMissed,
+            ReplayOutcome::Rejected,
+            ReplayOutcome::Shed,
+            ReplayOutcome::Canceled,
+            ReplayOutcome::Failed,
+        ] {
+            m.insert(o.name().into(), Json::Num(self.count(o) as f64));
+        }
+        m.insert("wall_s".into(), Json::Num(self.wall_s));
+        m.insert(
+            "mean_latency_s".into(),
+            Json::Num(self.mean_latency_s),
+        );
+        m.insert("p99_latency_s".into(), Json::Num(self.p99_latency_s));
+        m.insert(
+            "interactive_p99_s".into(),
+            Json::Num(self.interactive_p99_s),
+        );
+        m.insert("on_time_frac".into(), Json::Num(self.on_time_frac));
+        Json::Obj(m)
+    }
 }
 
 /// Replay a trace open-loop (arrivals follow trace time, optionally
-/// time-scaled; responses are collected on a separate thread so slow
-/// requests never delay later arrivals).
+/// time-scaled; SLOs scale with it so deadlines stay meaningful).
+/// Responses are collected after the send loop, so slow requests never
+/// delay later arrivals.
 pub fn replay(
     coordinator: &Coordinator,
     trace: &[TraceEvent],
@@ -148,11 +288,11 @@ pub fn replay(
     time_scale: f64,
 ) -> ReplayReport {
     let t0 = Instant::now();
-    let mut tickets = Vec::with_capacity(trace.len());
-    let mut rejected = 0usize;
+    let mut tickets: Vec<(usize, Ticket)> = Vec::with_capacity(trace.len());
+    let mut outcomes = vec![ReplayOutcome::Rejected; trace.len()];
     let mut on_time = 0usize;
     let mut rng = Pcg32::seeded(99);
-    for ev in trace {
+    for (i, ev) in trace.iter().enumerate() {
         let due = ev.at_s * time_scale;
         let now = t0.elapsed().as_secs_f64();
         if due > now {
@@ -164,42 +304,81 @@ pub fn replay(
         let tokens: Vec<u32> = (0..ev.len.max(1))
             .map(|_| rng.below(vocab as u32))
             .collect();
-        match coordinator.submit(tokens) {
-            Ok(t) => tickets.push(t),
-            Err(_) => rejected += 1,
+        let opts = SubmitOptions {
+            priority: ev.priority,
+            slo: ev
+                .slo_s
+                .map(|s| Duration::from_secs_f64(s * time_scale)),
+        };
+        match coordinator.submit_with(tokens, opts) {
+            Ok(t) => tickets.push((i, t)),
+            Err(_) => outcomes[i] = ReplayOutcome::Rejected,
         }
     }
     let mut latencies = Vec::with_capacity(tickets.len());
-    let mut completed = 0usize;
-    for t in tickets {
-        match t.wait_timeout(Duration::from_secs(120)) {
-            Ok(r) if !r.predictions.is_empty() => {
-                completed += 1;
-                latencies.push(r.latency_s);
-            }
-            _ => rejected += 1,
-        }
+    let mut interactive_lat = Vec::new();
+    for (i, t) in tickets {
+        let ev = &trace[i];
+        outcomes[i] = match t.wait_timeout(Duration::from_secs(120)) {
+            Ok(r) => match r.outcome {
+                Outcome::Served => {
+                    latencies.push(r.latency_s);
+                    if ev.priority == Priority::Interactive {
+                        interactive_lat.push(r.latency_s);
+                    }
+                    let late = ev
+                        .slo_s
+                        .is_some_and(|s| r.latency_s > s * time_scale);
+                    if late {
+                        ReplayOutcome::DeadlineMissed
+                    } else {
+                        ReplayOutcome::Served
+                    }
+                }
+                Outcome::Rejected => ReplayOutcome::Rejected,
+                Outcome::Shed => ReplayOutcome::Shed,
+                Outcome::Canceled => ReplayOutcome::Canceled,
+                Outcome::Failed => ReplayOutcome::Failed,
+            },
+            Err(_) => ReplayOutcome::Failed,
+        };
     }
     let wall = t0.elapsed().as_secs_f64();
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    interactive_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = if latencies.is_empty() {
         0.0
     } else {
         latencies.iter().sum::<f64>() / latencies.len() as f64
     };
-    let p99 = latencies
-        .get(((latencies.len() as f64 * 0.99) as usize)
-            .min(latencies.len().saturating_sub(1)))
-        .copied()
-        .unwrap_or(0.0);
+    let completed = outcomes
+        .iter()
+        .filter(|&&o| {
+            o == ReplayOutcome::Served || o == ReplayOutcome::DeadlineMissed
+        })
+        .count();
     ReplayReport {
         sent: trace.len(),
         completed,
-        rejected,
+        rejected: trace.len() - completed,
+        deadline_missed: outcomes
+            .iter()
+            .filter(|&&o| o == ReplayOutcome::DeadlineMissed)
+            .count(),
+        shed: outcomes
+            .iter()
+            .filter(|&&o| o == ReplayOutcome::Shed)
+            .count(),
+        canceled: outcomes
+            .iter()
+            .filter(|&&o| o == ReplayOutcome::Canceled)
+            .count(),
         wall_s: wall,
         mean_latency_s: mean,
-        p99_latency_s: p99,
+        p99_latency_s: percentile(&latencies, 0.99),
+        interactive_p99_s: percentile(&interactive_lat, 0.99),
         on_time_frac: on_time as f64 / trace.len().max(1) as f64,
+        outcomes,
     }
 }
 
@@ -251,22 +430,64 @@ mod tests {
     }
 
     #[test]
+    fn assign_slos_splits_classes() {
+        let mut t =
+            poisson_trace(500, 100.0, LengthDist::Uniform { max: 32 }, 8);
+        assign_slos(&mut t, 0.7, 0.05, 9);
+        let interactive = t
+            .iter()
+            .filter(|e| e.priority == Priority::Interactive)
+            .count();
+        assert!(
+            (250..450).contains(&interactive),
+            "interactive {interactive}"
+        );
+        for e in &t {
+            match e.priority {
+                Priority::Interactive => assert_eq!(e.slo_s, Some(0.05)),
+                Priority::Batch => assert_eq!(e.slo_s, None),
+            }
+        }
+    }
+
+    #[test]
     fn json_roundtrip() {
-        let t = poisson_trace(50, 10.0, LengthDist::Bimodal { short: 32, long: 256 }, 4);
+        let mut t = poisson_trace(
+            50,
+            10.0,
+            LengthDist::Bimodal { short: 32, long: 256 },
+            4,
+        );
+        assign_slos(&mut t, 0.5, 0.1, 5);
         let s = to_json(&t);
         let back = from_json(&s).unwrap();
         assert_eq!(back.len(), t.len());
         for (a, b) in t.iter().zip(&back) {
             assert_eq!(a.len, b.len);
             assert!((a.at_s - b.at_s).abs() < 1e-9);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.slo_s, b.slo_s);
         }
     }
 
     #[test]
-    fn from_json_rejects_garbage() {
+    fn from_json_rejects_garbage_and_defaults_optionals() {
         assert!(from_json("{}").is_err());
         assert!(from_json("[{\"at_s\": 1}]").is_err());
         assert!(from_json("not json").is_err());
+        assert!(
+            from_json("[{\"at_s\": 1, \"len\": 2, \"priority\": \"vip\"}]")
+                .is_err()
+        );
+        // a malformed SLO must not silently replay deadline-less
+        assert!(
+            from_json("[{\"at_s\": 1, \"len\": 2, \"slo_s\": \"0.05\"}]")
+                .is_err()
+        );
+        // legacy traces (no priority/slo) parse as interactive/no-SLO
+        let t = from_json("[{\"at_s\": 1.5, \"len\": 2}]").unwrap();
+        assert_eq!(t[0].priority, Priority::Interactive);
+        assert_eq!(t[0].slo_s, None);
     }
 
     #[test]
@@ -292,6 +513,21 @@ mod tests {
         assert_eq!(report.sent, 40);
         assert_eq!(report.completed + report.rejected, 40);
         assert!(report.completed > 30);
+        assert_eq!(report.outcomes.len(), 40);
+        // machine-readable summary accounts for every event
+        let j = report.summary_json();
+        let total: usize = [
+            "served",
+            "deadline_missed",
+            "rejected",
+            "shed",
+            "canceled",
+            "failed",
+        ]
+        .iter()
+        .map(|k| j.get(k).as_usize().unwrap())
+        .sum();
+        assert_eq!(total, 40);
         coord.shutdown();
     }
 }

@@ -15,7 +15,35 @@ pub mod trainer;
 pub use finetune::{finetune, FinetuneConfig, FinetuneResult};
 pub use schedule::{perplexity, LrSchedule};
 #[cfg(feature = "pjrt")]
-pub use trainer::{LogPoint, TrainConfig, TrainReport, Trainer};
+pub use trainer::{LogPoint, TrainReport, Trainer};
+
+/// Trainer configuration.  Lives here, not in the pjrt-gated `trainer`
+/// module: the serving launcher parses it from TOML in every build,
+/// including ones without the PJRT trainers.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub schedule: LrSchedule,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            schedule: LrSchedule::linear(1e-3, 10, 100),
+            eval_every: 25,
+            eval_batches: 4,
+            log_every: 10,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
 
 #[derive(Debug, thiserror::Error)]
 pub enum TrainError {
@@ -28,4 +56,6 @@ pub enum TrainError {
     Ckpt(#[from] crate::runtime::CkptError),
     #[error("model '{0}' exports no train_step program")]
     NotTrainable(String),
+    #[error("serving: {0}")]
+    Serving(String),
 }

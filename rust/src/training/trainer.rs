@@ -12,7 +12,7 @@ use crate::data::masking::{mask_batch, MaskingConfig};
 use crate::data::{Corpus, CorpusConfig};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::{Checkpoint, Engine, ModelEntry};
-use crate::training::schedule::{perplexity, LrSchedule};
+use crate::training::schedule::perplexity;
 use crate::training::TrainError;
 use crate::util::rng::Pcg32;
 
@@ -35,31 +35,7 @@ pub struct TrainReport {
     pub steps_per_sec: f64,
 }
 
-/// Trainer configuration.
-#[derive(Debug, Clone)]
-pub struct TrainConfig {
-    pub steps: usize,
-    pub schedule: LrSchedule,
-    pub eval_every: usize,
-    pub eval_batches: usize,
-    pub log_every: usize,
-    pub seed: u64,
-    pub verbose: bool,
-}
-
-impl Default for TrainConfig {
-    fn default() -> Self {
-        TrainConfig {
-            steps: 100,
-            schedule: LrSchedule::linear(1e-3, 10, 100),
-            eval_every: 25,
-            eval_batches: 4,
-            log_every: 10,
-            seed: 0,
-            verbose: false,
-        }
-    }
-}
+pub use crate::training::TrainConfig;
 
 /// The MLM trainer bound to one model's artifacts.
 pub struct Trainer {

@@ -109,6 +109,19 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Rank-based percentile of an ascending-sorted slice (0.0 if empty).
+/// The one shared convention (`⌊len·q⌋`, clamped) — serving reports and
+/// trace replays must agree on what "p99" means to be comparable.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    sorted
+        .get(
+            ((sorted.len() as f64 * q) as usize)
+                .min(sorted.len().saturating_sub(1)),
+        )
+        .copied()
+        .unwrap_or(0.0)
+}
+
 /// Build one machine-readable bench record from (key, value) pairs.
 pub fn bench_record(pairs: &[(&str, Json)]) -> Json {
     Json::Obj(

@@ -48,4 +48,9 @@ cargo test -q
 # it is #[ignore]d under tier-1 and run here in release
 cargo test --release --test pool_stress -- --ignored
 
+# the scheduler overload ablation is timing-sensitive (burst trace vs
+# SLOs), so it also runs in release only: FIFO must miss deadlines, EDF
+# must shed instead of computing expired work
+cargo test --release --test scheduler_overload -- --ignored
+
 echo "[check] OK"
