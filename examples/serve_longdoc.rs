@@ -1,14 +1,19 @@
 //! Long-document serving scenario — the workload the paper's introduction
-//! motivates (Linformer makes long-sequence inference affordable).
+//! motivates (Linformer makes long-sequence inference affordable), now
+//! multi-tenant: one coordinator serves a short-context "chat" model and
+//! a long-context "longdoc" model concurrently, across task kinds, on
+//! the pure-Rust reference encoder (no artifacts, no PJRT).
 //!
-//! Starts the coordinator with two length buckets (tiny n=64 + serve_128
-//! n=128), drives a mixed short/long synthetic workload from concurrent
-//! clients, and prints the throughput/latency/occupancy metrics the
-//! coordinator collects.
+//! Drives a mixed workload from concurrent clients, hot-swaps the
+//! longdoc model's weights mid-run, and prints the per-model /
+//! per-task / per-bucket metrics the coordinator collects.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_longdoc`
+//! Run: `cargo run --release --example serve_longdoc`
 
-use linformer::runtime::Manifest;
+use std::sync::Arc;
+
+use linformer::coordinator::{ModelRegistry, Task};
+use linformer::model::{ModelConfig, Params};
 use linformer::serving;
 use linformer::util::cli::Args;
 
@@ -18,47 +23,113 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         &[
             ("requests", "total requests (default 96)"),
             ("clients", "client threads (default 6)"),
-            ("models", "comma-separated buckets (default tiny,serve_128)"),
+            ("seed", "rng seed (default 7)"),
         ],
     )?;
-    let manifest = Manifest::load("artifacts")?;
-    let names_s = args.str_or("models", "tiny,serve_128");
-    let names: Vec<&str> = names_s.split(',').collect();
 
-    println!("== long-document serving ==");
-    for n in &names {
-        let e = manifest.model(n)?;
+    // two tenants: a short-context chat model and a long-document model
+    let mut chat = ModelConfig::tiny();
+    chat.max_len = 64;
+    chat.d_model = 32;
+    chat.k_proj = 16;
+    chat.vocab_size = 512;
+    let mut longdoc = chat.clone();
+    longdoc.max_len = 256;
+    longdoc.k_proj = 32;
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_init("chat", chat.clone(), 1)?;
+    registry.register_init("longdoc", longdoc.clone(), 2)?;
+
+    println!("== multi-tenant long-document serving ==");
+    for name in registry.names() {
+        let e = registry.get(&name).unwrap();
         println!(
-            "bucket {n}: n={}, batch={}, k={}",
-            e.config.max_len, e.batch, e.config.k_proj
+            "model {name}: n={}, k={}, params={}, generation={}",
+            e.cfg.max_len,
+            e.cfg.k_proj,
+            e.params.len(),
+            e.generation()
         );
     }
-    println!("compiling executables on pinned runner threads…");
-    let coord = serving::build_coordinator(
-        &manifest,
-        &names,
-        serving::default_config(32),
-    )?;
 
-    // vocab of the smallest model bounds valid token ids for all buckets
-    let vocab = names
-        .iter()
-        .map(|n| manifest.model(n).unwrap().config.vocab_size)
-        .min()
-        .unwrap();
+    let coord = serving::build_registry_coordinator(
+        Arc::clone(&registry),
+        &[(64, 8), (256, 4)],
+        serving::default_config(32),
+    );
 
     let total = args.usize_or("requests", 96)?;
     let clients = args.usize_or("clients", 6)?;
-    println!("driving {total} requests from {clients} concurrent clients…");
-    let report = serving::run_load(&coord, vocab, total, clients, 7);
+    let seed = args.usize_or("seed", 7)? as u64;
+    println!(
+        "driving {total} requests from {clients} concurrent clients \
+         (2 models × 3 tasks)…"
+    );
+    let models = vec!["chat".to_string(), "longdoc".to_string()];
+    let tasks =
+        [Task::MlmPredict, Task::Encode, Task::Classify { head: 0 }];
+    let report = serving::run_load_mix(
+        &coord,
+        chat.vocab_size,
+        total / 2,
+        clients,
+        seed,
+        &models,
+        &tasks,
+    );
+
+    // hot-swap the longdoc weights while the second half of the load is
+    // in flight — in-flight batches keep their pinned generation, new
+    // flushes pick up the fresh weights, nothing drops
+    let report2 = std::thread::scope(|scope| {
+        let coord = &coord;
+        let (models, tasks) = (&models, &tasks);
+        let second = scope.spawn(move || {
+            serving::run_load_mix(
+                coord,
+                chat.vocab_size,
+                total - total / 2,
+                clients,
+                seed + 1,
+                models,
+                tasks,
+            )
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let v = registry
+            .reload("longdoc", Arc::new(Params::init(&longdoc, 99)))
+            .expect("reload longdoc");
+        println!(
+            "hot-swapped longdoc mid-load → version {v} (generation {})",
+            registry.get("longdoc").unwrap().generation()
+        );
+        second.join().expect("second load half")
+    });
 
     println!("\n== results ==");
-    println!("completed     {}/{}", report.completed, report.sent);
-    println!("rejected      {}", report.rejected);
-    println!("wall time     {:.2}s", report.wall_s);
-    println!("throughput    {:.1} req/s", report.throughput_rps);
-    println!("mean latency  {:.1} ms", report.mean_latency_s * 1e3);
-    println!("p95 latency   {:.1} ms", report.p95_latency_s * 1e3);
+    let completed = report.completed + report2.completed;
+    println!("completed     {completed}/{total}");
+    println!("rejected      {}", report.rejected + report2.rejected);
+    println!(
+        "wall time     {:.2}s",
+        report.wall_s + report2.wall_s
+    );
+    println!(
+        "throughput    {:.1} req/s",
+        completed as f64 / (report.wall_s + report2.wall_s)
+    );
+    // latency quantiles don't aggregate across halves; report each
+    println!(
+        "mean latency  {:.1} ms pre-swap / {:.1} ms post-swap",
+        report.mean_latency_s * 1e3,
+        report2.mean_latency_s * 1e3
+    );
+    println!(
+        "p95 latency   {:.1} ms pre-swap / {:.1} ms post-swap",
+        report.p95_latency_s * 1e3,
+        report2.p95_latency_s * 1e3
+    );
     println!("occupancy     {:.1}%", coord.metrics.occupancy() * 100.0);
     use std::sync::atomic::Ordering;
     println!(

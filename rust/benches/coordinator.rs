@@ -16,14 +16,18 @@ use std::time::{Duration, Instant};
 
 use linformer::coordinator::{
     Batch, Batcher, BatcherConfig, BucketSpec, Coordinator, CostModel,
-    MockRunner, Priority, Request, RunnerFactory, SchedPolicy,
+    MockRunner, ModelRegistry, Outcome, Priority, Request, RunnerFactory,
+    SchedPolicy, Task,
 };
 use linformer::serving::trace::{
-    assign_slos, poisson_trace, replay, LengthDist,
+    assign_slos, poisson_trace, replay, LengthDist, ReplayReport,
 };
-use linformer::serving::run_load;
+use linformer::serving::{run_load, run_load_mix};
+use linformer::util::json::Json;
 use linformer::util::rng::Pcg32;
-use linformer::util::stats::{black_box, Summary};
+use linformer::util::stats::{
+    bench_record, black_box, emit_bench_json, Summary,
+};
 
 fn mk_request(
     id: u64,
@@ -33,6 +37,8 @@ fn mk_request(
     (
         Request {
             id,
+            model: Arc::from("default"),
+            task: Task::MlmPredict,
             tokens: vec![1; len],
             enqueued: Instant::now(),
             priority: Priority::Interactive,
@@ -197,7 +203,29 @@ fn bench_merge_ablation(label: &str, merge_up: bool, cm: CostModel) {
 /// the interactive p99 over *served* requests — under FIFO, interactive
 /// traffic queues behind the backlog and blows through its SLO; EDF
 /// sheds what cannot make it and serves the admitted class in time.
-fn bench_deadline_policies() {
+fn policy_record(label: &str, r: &ReplayReport) -> Json {
+    bench_record(&[
+        ("bench", Json::Str("deadline_policy".into())),
+        ("policy", Json::Str(label.into())),
+        ("sent", Json::Num(r.sent as f64)),
+        (
+            "served",
+            Json::Num(r.count(
+                linformer::serving::trace::ReplayOutcome::Served,
+            ) as f64),
+        ),
+        ("deadline_missed", Json::Num(r.deadline_missed as f64)),
+        ("shed", Json::Num(r.shed as f64)),
+        ("interactive_p99_s", Json::Num(r.interactive_p99_s)),
+        ("wall_s", Json::Num(r.wall_s)),
+        (
+            "pool_workers",
+            Json::Num(linformer::linalg::pool::global().workers() as f64),
+        ),
+    ])
+}
+
+fn bench_deadline_policies(records: &mut Vec<Json>) {
     println!(
         "\n== deadline scheduling ablation: FIFO baseline vs EDF + \
          admission + shedding (3× overload) =="
@@ -259,6 +287,8 @@ fn bench_deadline_policies() {
             ..Default::default()
         },
     );
+    records.push(policy_record("fifo", &fifo));
+    records.push(policy_record("edf", &edf));
     // informational, not an assert: the timing-pinned version of this
     // invariant lives in tests/scheduler_overload.rs (release, check.sh)
     if edf.interactive_p99_s > fifo.interactive_p99_s {
@@ -276,6 +306,83 @@ fn bench_deadline_policies() {
          interactive class inside the SLO.",
         slo_s * 1e3
     );
+}
+
+/// Multi-tenant serving: two registered models × two task kinds behind
+/// ONE scheduler on the real reference encoder — the registry refactor's
+/// throughput surface.  Appends machine-readable per-(model, task)
+/// records to `BENCH_serving.json` so the serving trajectory is diffable
+/// across PRs.
+fn bench_multi_tenant(records: &mut Vec<Json>) {
+    use linformer::model::ModelConfig;
+    println!(
+        "\n== multi-tenant serving: 2 models × 2 tasks, one scheduler =="
+    );
+    let mut small = ModelConfig::tiny();
+    small.max_len = 64;
+    small.d_model = 32;
+    small.k_proj = 16;
+    small.vocab_size = 512;
+    let mut large = small.clone();
+    large.max_len = 128;
+    large.d_model = 64;
+    large.n_heads = 4;
+    large.d_ff = 128;
+    large.k_proj = 32;
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_init("small", small, 1).unwrap();
+    registry.register_init("large", large, 2).unwrap();
+    let coord = linformer::serving::build_registry_coordinator(
+        Arc::clone(&registry),
+        &[(64, 8), (128, 4)],
+        BatcherConfig {
+            max_delay: Duration::from_millis(2),
+            queue_capacity: 4096,
+            merge_up: true,
+            cost_model: CostModel::Linear { k: 32 },
+            ..Default::default()
+        },
+    );
+    let models = vec!["small".to_string(), "large".to_string()];
+    let tasks = [Task::MlmPredict, Task::Classify { head: 0 }];
+    let total = 200;
+    let report =
+        run_load_mix(&coord, 512, total, 8, 3, &models, &tasks);
+    println!(
+        "  mixed load: {:>6.0} req/s   mean {:>7.2}ms   p95 {:>7.2}ms   \
+         occupancy {:>5.1}%",
+        report.throughput_rps,
+        report.mean_latency_s * 1e3,
+        report.p95_latency_s * 1e3,
+        coord.metrics.occupancy() * 100.0
+    );
+    for model in &models {
+        for task in tasks {
+            let served =
+                coord.metrics.model_task_count(model, task, Outcome::Served);
+            println!(
+                "  {model:<8} {:<12} served {served:>4}  \
+                 ({:>6.1} req/s of the mix)",
+                task.name(),
+                served as f64 / report.wall_s
+            );
+            records.push(bench_record(&[
+                ("bench", Json::Str("multi_tenant".into())),
+                ("model", Json::Str(model.clone())),
+                ("task", Json::Str(task.name().into())),
+                ("served", Json::Num(served as f64)),
+                ("rps", Json::Num(served as f64 / report.wall_s)),
+                ("wall_s", Json::Num(report.wall_s)),
+                (
+                    "pool_workers",
+                    Json::Num(
+                        linformer::linalg::pool::global().workers() as f64,
+                    ),
+                ),
+            ]));
+        }
+    }
+    coord.shutdown();
 }
 
 /// End-to-end with *real* model workers: the pure-Rust batched reference
@@ -321,8 +428,10 @@ fn main() {
         linformer::linalg::gemm::max_threads(),
         linformer::linalg::pool::global().workers()
     );
+    let mut records: Vec<Json> = Vec::new();
     bench_batcher_throughput();
     bench_reference_serving();
+    bench_multi_tenant(&mut records);
 
     println!("\n== end-to-end with mock workers (2ms service) ==");
     bench_end_to_end(
@@ -352,6 +461,13 @@ fn main() {
          promotions."
     );
 
-    bench_deadline_policies();
-    let _ = Batch { bucket: 0, bucket_len: 0, requests: vec![] };
+    bench_deadline_policies(&mut records);
+    emit_bench_json("BENCH_serving.json", "coordinator", records);
+    let _ = Batch {
+        bucket: 0,
+        bucket_len: 0,
+        model: Arc::from("default"),
+        task: Task::MlmPredict,
+        requests: vec![],
+    };
 }

@@ -1,13 +1,17 @@
 //! Length-bucketed scheduling core — queues, flush policy, admission.
 //!
 //! Requests are routed to the smallest length bucket that fits (each bucket
-//! corresponds to one runner with capacity `(batch, bucket_len)`).  Within
-//! a bucket the queue is ordered by the flush policy: FIFO (arrival order)
-//! or EDF (priority class first, then earliest deadline; deadline-less
-//! requests keep arrival order behind deadline-bearing ones).  A bucket
-//! flushes when it is full, when its head request has waited `max_delay`,
-//! or — under EDF — when its head deadline is about to become infeasible
-//! given the bucket's observed service time.
+//! corresponds to one runner slot with capacity `(batch, bucket_len)`).
+//! Inside a bucket, requests are segregated into **lanes keyed by
+//! `(model, task)`** — the multi-tenant batch key: a flushed [`Batch`]
+//! always holds requests of exactly one `(model, task, bucket)` triple, so
+//! runners never mix models, tasks, or weight generations within a batch.
+//! Within a lane the queue is ordered by the flush policy: FIFO (arrival
+//! order) or EDF (priority class first, then earliest deadline;
+//! deadline-less requests keep arrival order behind deadline-bearing
+//! ones).  A lane flushes when it holds a full batch, when its head
+//! request has waited `max_delay`, or — under EDF — when its head deadline
+//! is about to become infeasible given the bucket's observed service time.
 //!
 //! Linformer changes the *cost model* behind the policy (paper Fig 2: its
 //! latency-vs-n curve is flat, the Transformer's is quadratic), so this
@@ -16,7 +20,9 @@
 //! wastes ~n²/m² of its compute; with Linformer the waste is only linear —
 //! greedier merging across buckets becomes profitable.  The `merge_up`
 //! knob encodes that and `rust/benches/coordinator.rs` measures both
-//! settings.
+//! settings.  Merging only ever combines requests from lanes with the
+//! *same* `(model, task)` key — the cost model reasons about padding, not
+//! about mixing tenants.
 //!
 //! Overload handling is two-stage:
 //! - **Admission control** (`push`): once the per-bucket service-time
@@ -28,9 +34,10 @@
 //!   the ticket are removed *before* flush — they are never computed.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::request::{Reject, Request};
+use super::request::{Reject, Request, Task};
 
 /// One compiled shape the backend can run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,24 +74,25 @@ impl CostModel {
 /// Queue ordering + flush-selection policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SchedPolicy {
-    /// Arrival order, first ready bucket flushes (the legacy dispatcher).
+    /// Arrival order, first ready lane flushes (the legacy dispatcher).
     Fifo,
-    /// Earliest-deadline-first: queues order by (priority, deadline),
-    /// the ready bucket with the most urgent head request flushes first.
+    /// Earliest-deadline-first: lanes order by (priority, deadline),
+    /// the ready lane with the most urgent head request flushes first.
     #[default]
     Edf,
 }
 
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
-    /// Flush a bucket when its oldest request has waited this long.
+    /// Flush a lane when its oldest request has waited this long.
     pub max_delay: Duration,
-    /// Per-bucket queue capacity; pushes beyond it are rejected
-    /// (backpressure).
+    /// Per-bucket queue capacity (summed across that bucket's lanes);
+    /// pushes beyond it are rejected (backpressure).
     pub queue_capacity: usize,
-    /// If true, a non-full bucket's requests may be promoted into the next
+    /// If true, a non-full lane's requests may be promoted into the next
     /// larger bucket's flush to fill spare slots (profitable under the
-    /// Linear cost model; usually not under Quadratic).
+    /// Linear cost model; usually not under Quadratic).  Only same
+    /// `(model, task)` lanes ever merge.
     pub merge_up: bool,
     pub cost_model: CostModel,
     /// Queue ordering + flush-selection policy.
@@ -118,11 +126,14 @@ impl Default for BatcherConfig {
     }
 }
 
-/// A flushed batch ready for execution.
+/// A flushed batch ready for execution: requests of one
+/// `(model, task, bucket)` key.
 #[derive(Debug)]
 pub struct Batch {
     pub bucket: usize,
     pub bucket_len: usize,
+    pub model: Arc<str>,
+    pub task: Task,
     pub requests: Vec<Request>,
 }
 
@@ -140,7 +151,7 @@ pub enum DeadCause {
 /// time once per ~1ms tick, so the shed and urgent-flush horizons need
 /// headroom.  A request is shed when even `SHED_SAFETY ×` the estimated
 /// service time no longer fits before its deadline; it turns urgent
-/// (flush even though the bucket is neither full nor timed out) at the
+/// (flush even though the lane is neither full nor timed out) at the
 /// strictly earlier `URGENT_SAFETY` horizon, so every urgent request
 /// gets at least one flush window before the reaper may shed it.
 const SHED_SAFETY: f64 = 2.0;
@@ -165,14 +176,31 @@ fn sched_before(a: &Request, b: &Request) -> bool {
     }
 }
 
-/// The scheduling core: per-bucket ordered queues + flush policy +
+/// One `(model, task)` queue inside a bucket.  Lanes are created on
+/// first use and dropped once drained, so steady single-tenant traffic
+/// pays for exactly one lane per bucket — the pre-registry layout.
+struct Lane {
+    model: Arc<str>,
+    task: Task,
+    q: VecDeque<Request>,
+}
+
+impl Lane {
+    fn matches(&self, model: &str, task: Task) -> bool {
+        &*self.model == model && self.task == task
+    }
+}
+
+/// The scheduling core: per-bucket `(model, task)` lanes + flush policy +
 /// admission state.  Single-threaded by design; the scheduler control
 /// loop owns it (the pool only sees flushed [`Batch`]es).
 pub struct Batcher {
     buckets: Vec<BucketSpec>,
-    queues: Vec<VecDeque<Request>>,
+    /// lanes[bucket] — creation-ordered `(model, task)` lanes.
+    lanes: Vec<Vec<Lane>>,
     config: BatcherConfig,
     queued: usize,
+    queued_per_bucket: Vec<usize>,
     /// Batches currently executing per bucket (see `note_dispatch`).
     inflight: Vec<usize>,
     /// EWMA of observed per-batch service seconds, per bucket; `None`
@@ -188,9 +216,10 @@ impl Batcher {
         let n = buckets.len();
         Batcher {
             buckets,
-            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            lanes: (0..n).map(|_| Vec::new()).collect(),
             config,
             queued: 0,
+            queued_per_bucket: vec![0; n],
             inflight: vec![0; n],
             service_est_s: vec![None; n],
         }
@@ -262,20 +291,51 @@ impl Batcher {
             + 2.0 * TICK_MARGIN_S
     }
 
-    /// Estimated seconds until a request joining `bucket` at queue
-    /// position `idx` would *complete*, assuming the queue drains
-    /// batch-by-batch at the observed service rate.  Position-aware:
-    /// an EDF head-insert only waits for in-flight work plus its own
-    /// batch, however much lower-priority traffic sits behind it.
-    /// `None` until calibrated.
-    fn estimated_completion_s(&self, bucket: usize, idx: usize) -> Option<f64> {
+    /// Does the flush order serve `q` before `r`?  The policy's queue
+    /// ordering plus the arrival-time tie-break [`Self::poll_masked`]
+    /// applies across lanes.
+    fn goes_ahead(&self, q: &Request, r: &Request) -> bool {
+        match self.config.policy {
+            SchedPolicy::Fifo => q.enqueued < r.enqueued,
+            SchedPolicy::Edf => {
+                sched_before(q, r)
+                    || (!sched_before(r, q) && q.enqueued < r.enqueued)
+            }
+        }
+    }
+
+    /// Requests in `bucket`'s *other* lanes that the flush order serves
+    /// before `r` — the cross-lane competition for the bucket's runner.
+    /// Under EDF a deadline-less foreign backlog counts for nothing
+    /// against a deadline-bearing request (urgent-flush serves the
+    /// deadline first); under FIFO every earlier arrival counts.  Lanes
+    /// are kept sorted in flush order, so the "ahead" prefix of each is
+    /// contiguous.
+    fn foreign_ahead(&self, bucket: usize, r: &Request) -> usize {
+        self.lanes[bucket]
+            .iter()
+            .filter(|l| !l.matches(&r.model, r.task))
+            .map(|l| {
+                l.q.iter().take_while(|q| self.goes_ahead(q, r)).count()
+            })
+            .sum()
+    }
+
+    /// Estimated seconds until a request joining `bucket` with
+    /// `ahead` requests scheduled before it would *complete*, assuming
+    /// the bucket drains batch-by-batch at the observed service rate.
+    /// Position-aware: an EDF head-insert only waits for in-flight work
+    /// plus its own batch, however much lower-priority traffic sits
+    /// behind it — in its own lane *or* any other.  `None` until
+    /// calibrated.
+    fn estimated_completion_s(&self, bucket: usize, ahead: usize) -> Option<f64> {
         let svc = self.service_est_s[bucket]?;
         let spec = self.buckets[bucket];
         // batches ahead of the insertion position + the batch this
         // request joins + any already in flight (conservative: assumes
         // serial execution)
-        let ahead = idx / spec.batch + self.inflight[bucket] + 1;
-        Some(ahead as f64 * svc)
+        let batches = ahead / spec.batch + self.inflight[bucket] + 1;
+        Some(batches as f64 * svc)
     }
 
     // -- queue mutation -------------------------------------------------
@@ -286,27 +346,42 @@ impl Batcher {
             Ok(b) => b,
             Err(r) => return Err((r, req)),
         };
-        if self.queues[bucket].len() >= self.config.queue_capacity {
+        if self.queued_per_bucket[bucket] >= self.config.queue_capacity {
             return Err((
                 Reject::QueueFull { capacity: self.config.queue_capacity },
                 req,
             ));
         }
         // find the insertion position first: admission prices the wait
-        // at the position this request would actually occupy
-        let q = &self.queues[bucket];
-        let mut idx = q.len();
+        // at the position this request would actually occupy — its slot
+        // in its own lane plus whatever the bucket's other lanes flush
+        // ahead of it under the configured policy.
+        let lane_pos = self.lanes[bucket]
+            .iter()
+            .position(|l| l.matches(&req.model, req.task));
+        let lane_len =
+            lane_pos.map_or(0, |li| self.lanes[bucket][li].q.len());
+        let mut idx = lane_len;
         if self.config.policy == SchedPolicy::Edf {
-            // insertion keeps the queue sorted by `sched_before`; equal
-            // keys append, so deadline-less traffic stays exact FIFO
-            while idx > 0 && sched_before(&req, &q[idx - 1]) {
-                idx -= 1;
+            if let Some(li) = lane_pos {
+                // insertion keeps the lane sorted by `sched_before`;
+                // equal keys append, so deadline-less traffic stays
+                // exact FIFO
+                let q = &self.lanes[bucket][li].q;
+                while idx > 0 && sched_before(&req, &q[idx - 1]) {
+                    idx -= 1;
+                }
             }
         }
-        if self.config.admission {
-            if let (Some(deadline), Some(est_s)) =
-                (req.deadline, self.estimated_completion_s(bucket, idx))
-            {
+        // deadline-less pushes never pay for the cross-lane scan
+        if self.config.admission && req.deadline.is_some() {
+            if let (Some(deadline), Some(est_s)) = (
+                req.deadline,
+                self.estimated_completion_s(
+                    bucket,
+                    idx + self.foreign_ahead(bucket, &req),
+                ),
+            ) {
                 // budget from *now*, not from enqueue: time already spent
                 // reaching the scheduler is spent budget.  The threshold
                 // carries the same SHED_SAFETY margin the reaper uses, so
@@ -326,34 +401,50 @@ impl Batcher {
                 }
             }
         }
-        self.queues[bucket].insert(idx, req);
+        let li = match lane_pos {
+            Some(li) => li,
+            None => {
+                self.lanes[bucket].push(Lane {
+                    model: Arc::clone(&req.model),
+                    task: req.task,
+                    q: VecDeque::new(),
+                });
+                self.lanes[bucket].len() - 1
+            }
+        };
+        self.lanes[bucket][li].q.insert(idx, req);
         self.queued += 1;
+        self.queued_per_bucket[bucket] += 1;
         Ok(())
     }
 
     /// Remove and return every queued request that must not be computed:
     /// abandoned tickets, and — when `shed_expired` — requests whose
     /// deadline has passed or falls inside their position's shed horizon
-    /// (no safe way to serve them anymore; see [`SHED_SAFETY`]).
+    /// (no safe way to serve them anymore; see [`SHED_SAFETY`]).  Each
+    /// entry carries the `max_len` of the bucket the request was queued
+    /// in, so the reply can report an attributable `bucket_len`.
     ///
-    /// The common no-deadline steady state is allocation-free: a queue
+    /// The common no-deadline steady state is allocation-free: a lane
     /// is only rebuilt after a scan finds something dead in it.  The
     /// pre-scan uses each request's *current* index, which only
     /// over-approximates its post-reap position — it can trigger a
     /// rebuild that keeps everything, never the reverse.
-    pub fn reap(&mut self, now: Instant) -> Vec<(Request, DeadCause)> {
+    pub fn reap(&mut self, now: Instant) -> Vec<(Request, DeadCause, usize)> {
         let mut dead = Vec::new();
         let shed = self.config.shed_expired;
-        for i in 0..self.queues.len() {
-            if self.queues[i].is_empty() {
-                continue;
-            }
-            // position-aware shed horizon: the queue head needs only its
-            // own service time (+ tick allowance); deeper positions add
-            // the safety-margined queue-drain estimate.  Uncalibrated
-            // buckets shed only what has truly expired.
-            let svc = self.service_est_s[i];
-            let batch = self.buckets[i].batch;
+        for b in 0..self.lanes.len() {
+            // position-aware shed horizon: the bucket head needs only
+            // its own service time (+ tick allowance); deeper positions
+            // add the safety-margined queue-drain estimate.  Like the
+            // admission estimate, a request's drain position is its
+            // slot in its own lane plus whatever the bucket's other
+            // lanes flush ahead of it ([`Self::foreign_ahead`] — only
+            // deadline-bearing requests ever pay for that scan).
+            // Uncalibrated buckets shed only what has truly expired.
+            let svc = self.service_est_s[b];
+            let batch = self.buckets[b].batch;
+            let bucket_len = self.buckets[b].max_len;
             let horizon = move |pos: usize| match svc {
                 Some(s) => Duration::from_secs_f64(
                     s * (SHED_SAFETY * (pos / batch) as f64 + 1.0)
@@ -361,29 +452,59 @@ impl Batcher {
                 ),
                 None => Duration::ZERO,
             };
-            let expired = |r: &Request, pos: usize| {
-                shed && r
-                    .deadline
-                    .is_some_and(|d| d <= now + horizon(pos))
-            };
-            if !self.queues[i]
-                .iter()
-                .enumerate()
-                .any(|(pos, r)| r.abandoned() || expired(r, pos))
-            {
-                continue;
-            }
-            let drained = std::mem::take(&mut self.queues[i]);
-            let mut kept = 0usize;
-            for r in drained {
-                if r.abandoned() {
-                    dead.push((r, DeadCause::Abandoned));
-                } else if expired(&r, kept) {
-                    dead.push((r, DeadCause::Expired));
+            let mut removed = 0usize;
+            for li in 0..self.lanes[b].len() {
+                // one cross-lane count per lane, measured at its most
+                // urgent deadline-bearing request (the lane is sorted
+                // in flush order and `goes_ahead` is transitive, so the
+                // count only grows for deeper requests — reusing it
+                // under-estimates their positions, which sheds *later*,
+                // never sooner than admission promised).  Deadline-free
+                // lanes skip the scan entirely.
+                let foreign = if shed {
+                    self.lanes[b][li]
+                        .q
+                        .iter()
+                        .find(|r| r.deadline.is_some())
+                        .map(|r| self.foreign_ahead(b, r))
+                        .unwrap_or(0)
                 } else {
-                    self.queues[i].push_back(r);
-                    kept += 1;
+                    0
+                };
+                let expired = |r: &Request, pos: usize| {
+                    shed && r
+                        .deadline
+                        .is_some_and(|d| d <= now + horizon(foreign + pos))
+                };
+                // read-only pre-scan: the common no-deadline steady
+                // state touches nothing and allocates nothing
+                let dirty = self.lanes[b][li]
+                    .q
+                    .iter()
+                    .enumerate()
+                    .any(|(pos, r)| r.abandoned() || expired(r, pos));
+                if !dirty {
+                    continue;
                 }
+                let drained = std::mem::take(&mut self.lanes[b][li].q);
+                let mut kept: Vec<Request> =
+                    Vec::with_capacity(drained.len());
+                for r in drained {
+                    if r.abandoned() {
+                        dead.push((r, DeadCause::Abandoned, bucket_len));
+                        removed += 1;
+                    } else if expired(&r, kept.len()) {
+                        dead.push((r, DeadCause::Expired, bucket_len));
+                        removed += 1;
+                    } else {
+                        kept.push(r);
+                    }
+                }
+                self.lanes[b][li].q = kept.into();
+            }
+            if removed > 0 {
+                self.queued_per_bucket[b] -= removed;
+                self.lanes[b].retain(|l| !l.q.is_empty());
             }
         }
         self.queued -= dead.len();
@@ -394,12 +515,12 @@ impl Batcher {
 
     /// Flush decision: returns the next ready batch, if any.
     ///
-    /// A bucket is ready when it has `batch` requests, when its head has
+    /// A lane is ready when it has `batch` requests, when its head has
     /// waited ≥ `max_delay`, or (EDF) when its head deadline leaves no
     /// slack beyond the bucket's estimated service time.  Under EDF the
-    /// most urgent ready bucket flushes first; under FIFO the first ready
-    /// bucket does.  With `merge_up`, a flush may also drain smaller
-    /// buckets into spare slots.
+    /// most urgent ready lane flushes first; under FIFO the first ready
+    /// lane does.  With `merge_up`, a flush may also drain same-key
+    /// lanes of smaller buckets into spare slots.
     pub fn poll(&mut self, now: Instant) -> Option<Batch> {
         self.poll_masked(now, &[])
     }
@@ -414,129 +535,193 @@ impl Batcher {
             skip.get(i).copied().unwrap_or(false)
                 || self.inflight[i] >= self.config.max_inflight
         };
-        let mut candidate: Option<usize> = None;
-        for (i, q) in self.queues.iter().enumerate() {
-            if skipped(i) {
+        // candidate = (bucket, lane index within that bucket)
+        let mut candidate: Option<(usize, usize)> = None;
+        'buckets: for (b, lanes) in self.lanes.iter().enumerate() {
+            if skipped(b) {
                 continue;
             }
-            let Some(front) = q.front() else { continue };
-            let full = q.len() >= self.buckets[i].batch;
-            let timed_out =
-                now.duration_since(front.enqueued) >= self.config.max_delay;
-            let urgent = self.config.policy == SchedPolicy::Edf
-                && front.deadline.is_some_and(|d| {
-                    d <= now
-                        + Duration::from_secs_f64(self.urgent_horizon_s(i))
-                });
-            if !(full || timed_out || urgent) {
-                continue;
-            }
-            match self.config.policy {
-                SchedPolicy::Fifo => {
-                    candidate = Some(i);
-                    break;
+            for (li, lane) in lanes.iter().enumerate() {
+                let Some(front) = lane.q.front() else { continue };
+                let full = lane.q.len() >= self.buckets[b].batch;
+                let timed_out = now.duration_since(front.enqueued)
+                    >= self.config.max_delay;
+                let urgent = self.config.policy == SchedPolicy::Edf
+                    && front.deadline.is_some_and(|d| {
+                        d <= now
+                            + Duration::from_secs_f64(
+                                self.urgent_horizon_s(b),
+                            )
+                    });
+                if !(full || timed_out || urgent) {
+                    continue;
                 }
-                SchedPolicy::Edf => {
-                    // most urgent head request wins across buckets
-                    candidate = match candidate {
-                        Some(c)
-                            if !sched_before(
-                                front,
-                                self.queues[c].front().unwrap(),
-                            ) =>
-                        {
-                            Some(c)
+                // The flush order ([`Self::goes_ahead`]: policy keys,
+                // then arrival time) decides between ready lanes — NOT
+                // lane creation order, so a lane kept continuously full
+                // by one tenant can't starve a neighbor lane whose
+                // older head has already timed out.
+                candidate = match candidate {
+                    None => Some((b, li)),
+                    Some((cb, cl)) => {
+                        let cur = self.lanes[cb][cl].q.front().unwrap();
+                        if self.goes_ahead(front, cur) {
+                            Some((b, li))
+                        } else {
+                            Some((cb, cl))
                         }
-                        _ => Some(i),
-                    };
-                }
+                    }
+                };
+            }
+            // FIFO keeps the legacy "first ready bucket flushes" shape:
+            // stop scanning once a ready bucket produced a candidate
+            if self.config.policy == SchedPolicy::Fifo
+                && candidate.is_some()
+            {
+                break 'buckets;
             }
         }
-        // escalation (merge_up): a ready bucket whose own runner is
-        // saturated may flush into a LARGER non-saturated bucket when the
-        // cost model prices the padding waste under 50%.  Under the
+        // escalation (merge_up): a ready lane whose own bucket's runner
+        // is saturated may flush into a LARGER non-saturated bucket when
+        // the cost model prices the padding waste under 50%.  Under the
         // Linformer (linear) model this turns idle long-bucket runners
         // into overflow capacity for short traffic; under the quadratic
-        // model the waste guard blocks it (n² padding is ruinous).
-        if candidate.is_none() && self.config.merge_up {
-            'outer: for i in 0..self.queues.len() {
-                if !skipped(i) || self.queues[i].is_empty() {
-                    continue;
-                }
-                let ready = self.queues[i].len() >= self.buckets[i].batch
-                    || self.queues[i].front().is_some_and(|f| {
-                        now.duration_since(f.enqueued)
-                            >= self.config.max_delay
-                    });
-                if !ready {
-                    continue;
-                }
-                for j in (i + 1)..self.queues.len() {
-                    if skipped(j) {
+        // model the waste guard blocks it (n² padding is ruinous).  The
+        // lane key travels with the flush — escalation never mixes
+        // models or tasks either.
+        let (bucket, model, task) = match candidate {
+            Some((b, li)) => {
+                let lane = &self.lanes[b][li];
+                (b, Arc::clone(&lane.model), lane.task)
+            }
+            None if self.config.merge_up => {
+                // among all promotable lanes, the flush order picks the
+                // winner (same goes_ahead tie-break as the main scan —
+                // creation order must not starve an older head here
+                // either); the target is the smallest viable bucket
+                let mut found: Option<(usize, usize, usize)> = None;
+                for i in 0..self.lanes.len() {
+                    if !skipped(i) {
                         continue;
                     }
-                    let ok_waste = self.queues[i].front().is_some_and(|f| {
-                        self.config.cost_model.waste(
-                            f.tokens.len().max(1),
-                            self.buckets[j].max_len,
-                        ) < 0.5
-                    });
-                    if ok_waste {
-                        candidate = Some(j);
-                        break 'outer;
+                    for (li, lane) in self.lanes[i].iter().enumerate() {
+                        let Some(front) = lane.q.front() else {
+                            continue;
+                        };
+                        let ready = lane.q.len() >= self.buckets[i].batch
+                            || now.duration_since(front.enqueued)
+                                >= self.config.max_delay;
+                        if !ready {
+                            continue;
+                        }
+                        let Some(j) = ((i + 1)..self.lanes.len()).find(
+                            |&j| {
+                                !skipped(j)
+                                    && self.config.cost_model.waste(
+                                        front.tokens.len().max(1),
+                                        self.buckets[j].max_len,
+                                    ) < 0.5
+                            },
+                        ) else {
+                            continue;
+                        };
+                        found = match found {
+                            None => Some((i, li, j)),
+                            Some((bi, bl, bj)) => {
+                                let cur =
+                                    self.lanes[bi][bl].q.front().unwrap();
+                                if self.goes_ahead(front, cur) {
+                                    Some((i, li, j))
+                                } else {
+                                    Some((bi, bl, bj))
+                                }
+                            }
+                        };
                     }
                 }
+                let (src_b, src_l, target) = found?;
+                let lane = &self.lanes[src_b][src_l];
+                (target, Arc::clone(&lane.model), lane.task)
             }
-        }
-        let bucket = candidate?;
+            None => return None,
+        };
         let spec = self.buckets[bucket];
         let mut requests = Vec::with_capacity(spec.batch);
-        while requests.len() < spec.batch {
-            match self.queues[bucket].pop_front() {
-                Some(r) => requests.push(r),
-                None => break,
+        if let Some(lane) = self.lanes[bucket]
+            .iter_mut()
+            .find(|l| l.matches(&model, task))
+        {
+            while requests.len() < spec.batch {
+                match lane.q.pop_front() {
+                    Some(r) => requests.push(r),
+                    None => break,
+                }
             }
+            self.queued_per_bucket[bucket] -= requests.len();
         }
-        // merge-up: steal from smaller buckets to fill spare slots when
-        // the cost model says the waste is acceptable (< 50%).
+        // merge-up: steal from smaller buckets' same-key lanes to fill
+        // spare slots when the cost model says the waste is acceptable
+        // (< 50%).
         if self.config.merge_up && requests.len() < spec.batch {
             for smaller in (0..bucket).rev() {
+                let Some(lane) = self.lanes[smaller]
+                    .iter_mut()
+                    .find(|l| l.matches(&model, task))
+                else {
+                    continue;
+                };
+                let mut stolen = 0usize;
                 while requests.len() < spec.batch {
-                    let fits = self.queues[smaller].front().is_some_and(
-                        |r| {
-                            self.config
-                                .cost_model
-                                .waste(r.tokens.len().max(1), spec.max_len)
-                                < 0.5
-                        },
-                    );
+                    let fits = lane.q.front().is_some_and(|r| {
+                        self.config
+                            .cost_model
+                            .waste(r.tokens.len().max(1), spec.max_len)
+                            < 0.5
+                    });
                     if !fits {
                         break;
                     }
-                    requests
-                        .push(self.queues[smaller].pop_front().unwrap());
+                    requests.push(lane.q.pop_front().unwrap());
+                    stolen += 1;
                 }
+                self.queued_per_bucket[smaller] -= stolen;
             }
         }
+        for lanes in self.lanes.iter_mut() {
+            lanes.retain(|l| !l.q.is_empty());
+        }
         self.queued -= requests.len();
-        Some(Batch { bucket, bucket_len: spec.max_len, requests })
+        Some(Batch {
+            bucket,
+            bucket_len: spec.max_len,
+            model,
+            task,
+            requests,
+        })
     }
 
     /// Drain everything immediately (shutdown path).
     pub fn drain(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        for (i, q) in self.queues.iter_mut().enumerate() {
-            while !q.is_empty() {
-                let spec = self.buckets[i];
-                let take = q.len().min(spec.batch);
-                let requests: Vec<Request> = q.drain(..take).collect();
-                self.queued -= requests.len();
-                out.push(Batch {
-                    bucket: i,
-                    bucket_len: spec.max_len,
-                    requests,
-                });
+        for (i, lanes) in self.lanes.iter_mut().enumerate() {
+            let spec = self.buckets[i];
+            for lane in lanes.iter_mut() {
+                while !lane.q.is_empty() {
+                    let take = lane.q.len().min(spec.batch);
+                    let requests: Vec<Request> =
+                        lane.q.drain(..take).collect();
+                    self.queued -= requests.len();
+                    self.queued_per_bucket[i] -= requests.len();
+                    out.push(Batch {
+                        bucket: i,
+                        bucket_len: spec.max_len,
+                        model: Arc::clone(&lane.model),
+                        task: lane.task,
+                        requests,
+                    });
+                }
             }
+            lanes.clear();
         }
         out
     }
@@ -554,6 +739,8 @@ mod tests {
         let (tx, _rx) = mpsc::channel();
         Request {
             id,
+            model: Arc::from("default"),
+            task: Task::MlmPredict,
             tokens: vec![7; len],
             enqueued: at,
             priority: Priority::Interactive,
@@ -573,6 +760,19 @@ mod tests {
         let mut r = req(id, len, at);
         r.priority = priority;
         r.deadline = slo.map(|d| at + d);
+        r
+    }
+
+    fn req_mt(
+        id: u64,
+        len: usize,
+        at: Instant,
+        model: &str,
+        task: Task,
+    ) -> Request {
+        let mut r = req(id, len, at);
+        r.model = Arc::from(model);
+        r.task = task;
         r
     }
 
@@ -610,6 +810,8 @@ mod tests {
         let batch = b.poll(now).unwrap();
         assert_eq!(batch.requests.len(), 2);
         assert_eq!(batch.bucket_len, 64);
+        assert_eq!(&*batch.model, "default");
+        assert_eq!(batch.task, Task::MlmPredict);
         assert_eq!(b.queued(), 0);
     }
 
@@ -638,6 +840,95 @@ mod tests {
         let (rej, r) = b.push(req(3, 5, now)).unwrap_err();
         assert_eq!(rej, Reject::QueueFull { capacity: 2 });
         assert_eq!(r.id, 3);
+    }
+
+    #[test]
+    fn capacity_is_per_bucket_across_lanes() {
+        // two tenants share one bucket's capacity — the backpressure
+        // budget is per runner shape, not per lane
+        let now = Instant::now();
+        let cfg = BatcherConfig { queue_capacity: 2, ..Default::default() };
+        let mut b = mk(&[(64, 8)], cfg);
+        b.push(req_mt(1, 5, now, "a", Task::MlmPredict)).unwrap();
+        b.push(req_mt(2, 5, now, "b", Task::Encode)).unwrap();
+        let (rej, _) =
+            b.push(req_mt(3, 5, now, "c", Task::MlmPredict)).unwrap_err();
+        assert_eq!(rej, Reject::QueueFull { capacity: 2 });
+    }
+
+    #[test]
+    fn batches_never_mix_models_or_tasks() {
+        // interleaved (model, task) traffic in one bucket: every flush
+        // is homogeneous, and nothing is lost
+        let now = Instant::now();
+        let mut b = mk(&[(64, 4)], Default::default());
+        let mix = [
+            ("a", Task::MlmPredict),
+            ("b", Task::MlmPredict),
+            ("a", Task::Encode),
+            ("a", Task::MlmPredict),
+            ("b", Task::MlmPredict),
+            ("a", Task::Encode),
+        ];
+        for (id, (m, t)) in mix.iter().enumerate() {
+            b.push(req_mt(id as u64, 5, now, m, *t)).unwrap();
+        }
+        let later = now + Duration::from_secs(1);
+        let mut total = 0;
+        while let Some(batch) = b.poll(later) {
+            assert!(batch.requests.iter().all(|r| {
+                &*r.model == &*batch.model && r.task == batch.task
+            }));
+            total += batch.requests.len();
+        }
+        assert_eq!(total, mix.len());
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn full_lane_flushes_even_when_bucket_holds_more() {
+        // 4 same-key requests = a full batch, regardless of how much
+        // other-tenant traffic shares the bucket
+        let now = Instant::now();
+        let mut b = mk(&[(64, 4)], Default::default());
+        b.push(req_mt(100, 5, now, "other", Task::Encode)).unwrap();
+        for id in 0..4 {
+            b.push(req_mt(id, 5, now, "a", Task::MlmPredict)).unwrap();
+        }
+        let batch = b.poll(now).unwrap();
+        assert_eq!(&*batch.model, "a");
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn timed_out_lane_not_starved_by_refilled_neighbor() {
+        // tenant "a" keeps its lane continuously full; tenant "b"'s
+        // lone request, though in a younger lane, has the OLDER head
+        // after the first "a" flush — arrival order, not lane creation
+        // order, must decide the tie (under both policies)
+        for policy in [SchedPolicy::Edf, SchedPolicy::Fifo] {
+            let now = Instant::now();
+            let at = |n: u64| now + Duration::from_millis(n);
+            let mut b = mk(
+                &[(64, 2)],
+                BatcherConfig { policy, ..Default::default() },
+            );
+            b.push(req_mt(1, 5, now, "a", Task::MlmPredict)).unwrap();
+            b.push(req_mt(2, 5, now, "a", Task::MlmPredict)).unwrap();
+            b.push(req_mt(3, 5, at(1), "b", Task::MlmPredict)).unwrap();
+            b.push(req_mt(4, 5, at(2), "a", Task::MlmPredict)).unwrap();
+            b.push(req_mt(5, 5, at(2), "a", Task::MlmPredict)).unwrap();
+            let t = at(7); // everyone ready: "a" full, "b" timed out
+            let f1 = b.poll(t).unwrap();
+            assert_eq!(&*f1.model, "a", "{policy:?}: oldest head first");
+            let f2 = b.poll(t).unwrap();
+            assert_eq!(
+                &*f2.model, "b",
+                "{policy:?}: refilled lane starved the older head"
+            );
+            assert_eq!(f2.requests[0].id, 3);
+        }
     }
 
     #[test]
@@ -687,13 +978,63 @@ mod tests {
         b.push(req(4, 5, now)).unwrap(); // no deadline: never shed
         let dead = b.reap(now + Duration::from_millis(10));
         let mut ids: Vec<(u64, DeadCause)> =
-            dead.iter().map(|(r, c)| (r.id, *c)).collect();
+            dead.iter().map(|(r, c, _)| (r.id, *c)).collect();
         ids.sort_by_key(|(id, _)| *id);
         assert_eq!(
             ids,
             vec![(1, DeadCause::Expired), (3, DeadCause::Abandoned)]
         );
+        // the reap entries name the bucket the request sat in, so the
+        // reply's bucket_len is attributable, not fabricated
+        assert!(dead.iter().all(|(_, _, len)| *len == 64));
         assert_eq!(b.queued(), 2);
+    }
+
+    #[test]
+    fn reap_counts_foreign_lane_backlog_the_flush_order_serves_first() {
+        // a batch-class deadline-bearing request admitted while the
+        // bucket was uncalibrated sits at position 0 of its own lane
+        // but behind 40 interactive foreign requests the flush order
+        // serves first — once calibrated, the reaper must price that
+        // backlog and shed it rather than compute it long past its
+        // deadline
+        let now = Instant::now();
+        let mut b = mk(&[(64, 2)], Default::default());
+        for id in 0..40 {
+            // interactive class: flushes ahead of the batch-class
+            // deadline request below
+            b.push(req_mt(id, 5, now, "other", Task::Encode)).unwrap();
+        }
+        b.push(req_with(
+            100,
+            5,
+            now,
+            Priority::Batch,
+            Some(Duration::from_millis(300)),
+        ))
+        .unwrap();
+        // calibrate after admission: ~100ms per batch → ≥20 batches of
+        // foreign work ahead, far past the 300ms budget
+        b.note_dispatch(0);
+        b.note_complete(0, 0.1);
+        let dead = b.reap(now + Duration::from_millis(1));
+        assert_eq!(dead.len(), 1, "doomed request not shed");
+        assert_eq!(dead[0].0.id, 100);
+        assert_eq!(dead[0].1, DeadCause::Expired);
+        // the deadline-less foreign backlog is untouched — and a
+        // deadline-bearing INTERACTIVE request, which EDF serves ahead
+        // of all of it, is NOT doomed and survives the reaper
+        assert_eq!(b.queued(), 40);
+        b.push(req_with(
+            101,
+            5,
+            Instant::now(),
+            Priority::Interactive,
+            Some(Duration::from_millis(300)),
+        ))
+        .unwrap();
+        assert!(b.reap(Instant::now()).is_empty());
+        assert_eq!(b.queued(), 41);
     }
 
     #[test]
@@ -798,6 +1139,52 @@ mod tests {
     }
 
     #[test]
+    fn admission_prices_cross_lane_competition_by_flush_order() {
+        let now = Instant::now();
+        let calibrated = |policy| {
+            let mut b = mk(
+                &[(64, 2)],
+                BatcherConfig { policy, ..Default::default() },
+            );
+            b.note_dispatch(0);
+            b.note_complete(0, 0.1); // svc ≈ 100ms
+            b
+        };
+        // EDF: a deadline-less *batch-class* foreign backlog flushes
+        // BEHIND a deadline-bearing interactive request, so it must not
+        // inflate that request's estimate …
+        let mut b = calibrated(SchedPolicy::Edf);
+        for id in 0..4 {
+            let mut r = req_mt(id, 5, now, "other", Task::Encode);
+            r.priority = Priority::Batch;
+            b.push(r).unwrap();
+        }
+        b.push(req_with(10, 5, now, Priority::Interactive,
+            Some(Duration::from_millis(250)))).unwrap();
+        // … while foreign traffic the flush order genuinely serves
+        // first (higher class than a batch-class deadline request) is
+        // real competition: 4 ahead → 3 batches ≈ 300ms > 250ms budget
+        let mut b = calibrated(SchedPolicy::Edf);
+        for id in 0..4 {
+            b.push(req_mt(id, 5, now, "other", Task::Encode)).unwrap();
+        }
+        let doomed = req_with(11, 5, now, Priority::Batch,
+            Some(Duration::from_millis(250)));
+        let (rej, _) = b.push(doomed).unwrap_err();
+        assert!(matches!(rej, Reject::WontMeetDeadline { .. }), "{rej:?}");
+        // FIFO: every earlier foreign arrival is ahead, whatever its
+        // class or deadline
+        let mut b = calibrated(SchedPolicy::Fifo);
+        for id in 0..4 {
+            b.push(req_mt(id, 5, now, "other", Task::Encode)).unwrap();
+        }
+        let late = req_with(12, 5, now + Duration::from_millis(1),
+            Priority::Interactive, Some(Duration::from_millis(250)));
+        let (rej, _) = b.push(late).unwrap_err();
+        assert!(matches!(rej, Reject::WontMeetDeadline { .. }), "{rej:?}");
+    }
+
+    #[test]
     fn admitted_requests_survive_the_next_reap() {
         // admission carries the reaper's safety margin, so a request
         // can never be accepted at push and shed one tick later
@@ -860,6 +1247,75 @@ mod tests {
     }
 
     #[test]
+    fn merge_up_never_crosses_lane_keys() {
+        // a long "a" flush steals the waiting short "a" request into its
+        // spare slots — but never the other tenant's, however promotable
+        // its length
+        let now = Instant::now();
+        let cfg = BatcherConfig {
+            merge_up: true,
+            cost_model: CostModel::Linear { k: 16 },
+            max_delay: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let mut b = mk(&[(96, 4), (128, 4)], cfg);
+        // the deadline makes the long "a" lane the EDF flush candidate
+        // while the short lanes still hold their requests
+        let mut long = req_mt(1, 120, now, "a", Task::MlmPredict);
+        long.deadline = Some(now + Duration::from_millis(10));
+        b.push(long).unwrap();
+        // len 70: waste in a 128 slot = 1 − 70/128 ≈ 45% < 50% — both
+        // are promotable by cost, only the same-tenant one may move
+        b.push(req_mt(2, 70, now, "a", Task::MlmPredict)).unwrap();
+        b.push(req_mt(3, 70, now, "b", Task::MlmPredict)).unwrap();
+        let batch = b.poll(now).unwrap();
+        assert_eq!(&*batch.model, "a");
+        assert_eq!(batch.bucket_len, 128);
+        let mut ids: Vec<u64> =
+            batch.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2], "same-key short request not merged");
+        // tenant "b" stays queued, untouched by the merge
+        assert_eq!(b.queued(), 1);
+        let next = b.poll(now).unwrap();
+        assert_eq!(&*next.model, "b");
+        assert_eq!(next.requests[0].id, 3);
+    }
+
+    #[test]
+    fn escalation_picks_lanes_by_flush_order_not_creation_order() {
+        // bucket 0 saturated, merge_up on: both lanes can only flush by
+        // escalating into bucket 1.  Lane "a" was created first, but
+        // lane "b"'s head carries a deadline — the flush order, not
+        // creation order, must pick the escalating lane.
+        let now = Instant::now();
+        let cfg = BatcherConfig {
+            merge_up: true,
+            cost_model: CostModel::Linear { k: 16 },
+            max_delay: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let mut b = mk(&[(96, 2), (128, 4)], cfg);
+        b.note_dispatch(0);
+        b.note_dispatch(0); // bucket 0 at max_inflight
+        b.push(req_mt(1, 70, now, "a", Task::MlmPredict)).unwrap();
+        let mut urgent = req_mt(
+            2,
+            70,
+            now + Duration::from_millis(1),
+            "b",
+            Task::MlmPredict,
+        );
+        urgent.deadline = Some(now + Duration::from_millis(50));
+        b.push(urgent).unwrap();
+        let batch = b.poll(now + Duration::from_millis(2)).unwrap();
+        assert_eq!(&*batch.model, "b", "escalation ignored flush order");
+        assert_eq!(batch.bucket_len, 128);
+        assert_eq!(batch.requests[0].id, 2);
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
     fn merge_up_respects_quadratic_waste() {
         // a len-10 request in a 128 bucket wastes 1 - 100/16384 ≈ 99.4% > 50%
         let cm = CostModel::Quadratic;
@@ -916,7 +1372,16 @@ mod tests {
                 } else {
                     Priority::Batch
                 };
-                if b.push(req_with(id, len, now, pri, slo)).is_ok() {
+                let mut r = req_with(id, len, now, pri, slo);
+                // multi-tenant mix: 2 models × 2 tasks
+                r.model =
+                    Arc::from(if rng.chance(0.5) { "a" } else { "b" });
+                r.task = if rng.chance(0.5) {
+                    Task::MlmPredict
+                } else {
+                    Task::Encode
+                };
+                if b.push(r).is_ok() {
                     pushed.push(id);
                 }
             }
@@ -926,8 +1391,11 @@ mod tests {
                 let spec = b.buckets()[batch.bucket];
                 assert!(batch.requests.len() <= spec.batch);
                 for r in &batch.requests {
-                    // every request fits its bucket
+                    // every request fits its bucket and matches the
+                    // batch key — no mixed-tenant batches, ever
                     assert!(r.tokens.len() <= batch.bucket_len);
+                    assert_eq!(&*r.model, &*batch.model);
+                    assert_eq!(r.task, batch.task);
                     seen.push(r.id);
                 }
             }

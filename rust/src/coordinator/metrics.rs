@@ -116,6 +116,9 @@ pub struct Metrics {
     bucket_flushes: Mutex<BTreeMap<usize, u64>>,
     /// Per-bucket end-to-end latency histograms (keyed by bucket_len).
     bucket_latency: Mutex<BTreeMap<usize, Histogram>>,
+    /// Multi-tenant accounting: model → task → outcome → count.
+    /// Every request lands here exactly once, at its terminal outcome.
+    per_model: Mutex<BTreeMap<String, BTreeMap<String, BTreeMap<String, u64>>>>,
 }
 
 impl Default for Metrics {
@@ -143,7 +146,67 @@ impl Metrics {
             model_time: Histogram::latency(),
             bucket_flushes: Mutex::new(BTreeMap::new()),
             bucket_latency: Mutex::new(BTreeMap::new()),
+            per_model: Mutex::new(BTreeMap::new()),
         }
+    }
+
+    /// Count one request's terminal outcome against its `(model, task)`.
+    pub fn record_outcome(
+        &self,
+        model: &str,
+        task: crate::coordinator::Task,
+        outcome: crate::coordinator::Outcome,
+    ) {
+        self.record_outcomes(model, task, outcome, 1);
+    }
+
+    /// Batch variant — the reply loop records one count per *batch*
+    /// (every request of a batch shares `(model, task, outcome)`), so
+    /// the latency-critical path takes the map lock once, and, after
+    /// the first sighting of a key, allocates nothing.
+    pub fn record_outcomes(
+        &self,
+        model: &str,
+        task: crate::coordinator::Task,
+        outcome: crate::coordinator::Outcome,
+        n: u64,
+    ) {
+        if n == 0 {
+            return;
+        }
+        let mut map = self.per_model.lock().unwrap();
+        // warm path: borrowed-&str lookups, no String construction
+        if let Some(c) = map
+            .get_mut(model)
+            .and_then(|m| m.get_mut(task.name()))
+            .and_then(|m| m.get_mut(outcome.name()))
+        {
+            *c += n;
+            return;
+        }
+        *map.entry(model.to_string())
+            .or_default()
+            .entry(task.name().to_string())
+            .or_default()
+            .entry(outcome.name().to_string())
+            .or_default() += n;
+    }
+
+    /// One `(model, task)`'s count for a given outcome (0 if unseen).
+    pub fn model_task_count(
+        &self,
+        model: &str,
+        task: crate::coordinator::Task,
+        outcome: crate::coordinator::Outcome,
+    ) -> u64 {
+        self.per_model
+            .lock()
+            .unwrap()
+            .get(model)
+            .and_then(|m| m.get(task.name()))
+            .and_then(|m| m.get(outcome.name()))
+            .copied()
+            .unwrap_or(0)
     }
 
     pub fn record_batch(&self, bucket_len: usize, used: usize, cap: usize) {
@@ -243,6 +306,20 @@ impl Metrics {
             lm.insert(len.to_string(), h.quantiles_json());
         }
         obj.insert("bucket_latency".into(), Json::Obj(lm));
+        let per_model = self.per_model.lock().unwrap();
+        let mut pm = BTreeMap::new();
+        for (model, tasks) in per_model.iter() {
+            let mut tm = BTreeMap::new();
+            for (task, outcomes) in tasks {
+                let mut om = BTreeMap::new();
+                for (outcome, count) in outcomes {
+                    om.insert(outcome.clone(), Json::Num(*count as f64));
+                }
+                tm.insert(task.clone(), Json::Obj(om));
+            }
+            pm.insert(model.clone(), Json::Obj(tm));
+        }
+        obj.insert("per_model".into(), Json::Obj(pm));
         Json::Obj(obj)
     }
 }
@@ -324,6 +401,49 @@ mod tests {
         );
         // global latency histogram sees every observation
         assert_eq!(m.latency.count(), 51);
+    }
+
+    #[test]
+    fn per_model_outcome_counts_exported() {
+        use crate::coordinator::{Outcome, Task};
+        let m = Metrics::new();
+        m.record_outcome("a", Task::MlmPredict, Outcome::Served);
+        // batch variant accumulates (and hits the allocation-free warm
+        // path on the repeat)
+        m.record_outcomes("a", Task::MlmPredict, Outcome::Served, 1);
+        m.record_outcome("a", Task::Classify { head: 0 }, Outcome::Shed);
+        m.record_outcome("b", Task::Encode, Outcome::Rejected);
+        m.record_outcomes("b", Task::Encode, Outcome::Rejected, 0); // no-op
+        assert_eq!(
+            m.model_task_count("a", Task::MlmPredict, Outcome::Served),
+            2
+        );
+        assert_eq!(
+            m.model_task_count(
+                "a",
+                Task::Classify { head: 0 },
+                Outcome::Shed
+            ),
+            1
+        );
+        assert_eq!(
+            m.model_task_count("b", Task::Encode, Outcome::Served),
+            0
+        );
+        let j = m.to_json();
+        let pm = j.get("per_model");
+        assert_eq!(
+            pm.get("a").get("mlm_predict").get("served").as_usize(),
+            Some(2)
+        );
+        assert_eq!(
+            pm.get("a").get("classify").get("shed").as_usize(),
+            Some(1)
+        );
+        assert_eq!(
+            pm.get("b").get("encode").get("rejected").as_usize(),
+            Some(1)
+        );
     }
 
     #[test]

@@ -1,6 +1,7 @@
-//! L3 coordinator: a deadline-aware serving core — request router,
-//! length-bucketed scheduler with admission control and load shedding,
-//! metrics — the serving system a Linformer deployment runs.
+//! L3 coordinator: a multi-tenant, deadline-aware serving core — request
+//! router, length-bucketed scheduler with admission control and load
+//! shedding, model registry, metrics — the serving system a Linformer
+//! deployment runs.
 //!
 //! The paper's serving consequence (Fig 2): Linformer's latency-vs-n
 //! curve is flat, so merging and reordering across length buckets is
@@ -8,18 +9,29 @@
 //! The scheduler therefore owns policy end to end: EDF flush order,
 //! deadline admission, expiry shedding, and cost-model merge-up.
 //!
+//! One coordinator serves **N models × M task kinds** behind one
+//! scheduler and one compute pool: requests carry a registered model
+//! name and a [`Task`] (`Encode` / `MlmPredict` / `Classify` /
+//! `AttnCapture`), queues are keyed by `(model, task, length bucket)`,
+//! and weights hot-swap under live traffic via
+//! [`registry::ModelRegistry::reload`] — in-flight batches pin their
+//! weight snapshot, queued requests meet the new generation at flush,
+//! and no batch ever mixes generations (every [`Response`] carries the
+//! generation and batch id that prove it).
+//!
 //! Threading model (std threads; the offline build has no tokio):
 //!
 //! ```text
 //!  clients ── submit()/submit_with() ──► scheduler thread
-//!     │            (Ticket; drop = cancel)  owns Batcher (EDF queues,
-//!     │                                     admission, shedding) +
-//!     │                                     runner table, one per bucket
-//!     │                                          │ flush → batch task
-//!     │                                          ▼
+//!     │       (model, task, priority,)   owns Batcher ((model, task,
+//!     │       (SLO; Ticket; drop=cancel) bucket) lanes, admission,
+//!     │                                  shedding) + runner table
+//!     │                                       │ flush → batch task
+//!     │                                       ▼
 //!     └──── Response ◄──────────── batch task on linalg::pool
-//!                                   (runner.run → per-request replies,
-//!                                    then BatchDone back to scheduler)
+//!                                  (registry.get(model) pins weights,
+//!                                   runner.run → per-request replies,
+//!                                   then BatchDone back to scheduler)
 //! ```
 //!
 //! One control loop owns all scheduling state — there are no per-bucket
@@ -35,10 +47,12 @@
 //!
 //! Only placement and ordering changed relative to the old
 //! dispatcher/worker pipeline: batches still execute the same runner code
-//! on the same rows, so model outputs are bitwise identical.
+//! on the same rows, so model outputs are bitwise identical to direct
+//! single-model encoder calls (pinned by `tests/multi_tenant.rs`).
 
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod request;
 pub mod worker;
 
@@ -47,13 +61,15 @@ pub use batcher::{
     SchedPolicy,
 };
 pub use metrics::Metrics;
+pub use registry::{ModelRegistry, RegistryEntry, RegistryError};
 pub use request::{
-    Outcome, Priority, Reject, Request, Response, SubmitOptions,
+    Outcome, Priority, Reject, Request, Response, SubmitOptions, Task,
+    TaskOutput,
 };
 pub use worker::{
-    BatchRunner, CountingRunner, LocalBatchRunner, LocalRunnerFactory,
-    MockRunner, PendingPinnedRunner, PinnedRunner, ReferenceRunner,
-    RunnerFactory,
+    BatchResult, BatchRunner, CountingRunner, LocalBatchRunner,
+    LocalRunnerFactory, MockRunner, PendingPinnedRunner, PinnedRunner,
+    ReferenceRunner, RunnerFactory,
 };
 #[cfg(feature = "pjrt")]
 pub use worker::XlaRunner;
@@ -115,19 +131,46 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     scheduler: Option<JoinHandle<()>>,
     max_len: usize,
+    default_model: Arc<str>,
+    registry: Option<Arc<ModelRegistry>>,
 }
 
 impl Coordinator {
     /// Start the scheduler with one (bucket spec, runner factory) per
-    /// bucket.  Factories run on the scheduler thread at startup; a
-    /// factory that needs a dedicated thread (e.g. `!Send` PJRT handles)
-    /// should return a [`PinnedRunner`].  A failed factory marks its
-    /// bucket dead — requests routed there fail fast instead of hanging.
+    /// bucket and no model registry: model names pass through to the
+    /// runners unchecked and `submit` targets the `"default"` model —
+    /// the single-tenant legacy mode (mock tests, bucket-per-model PJRT
+    /// deployments).
     pub fn start(
         buckets: Vec<(BucketSpec, RunnerFactory)>,
         config: BatcherConfig,
     ) -> Coordinator {
+        Self::start_with(buckets, config, None, "default")
+    }
+
+    /// Start the scheduler with a shared [`ModelRegistry`]: submits are
+    /// validated against registered models (unknown names and per-model
+    /// over-length sequences reject synchronously), `default_model`
+    /// names the entry that deadline-less `submit` targets, and
+    /// [`Self::registry`] exposes the handle reloads go through.
+    ///
+    /// Factories run on the scheduler thread at startup; a factory that
+    /// needs a dedicated thread (e.g. `!Send` PJRT handles) should
+    /// return a [`PinnedRunner`].  A failed factory marks its bucket
+    /// dead — requests routed there fail fast instead of hanging.
+    pub fn start_with(
+        buckets: Vec<(BucketSpec, RunnerFactory)>,
+        config: BatcherConfig,
+        registry: Option<Arc<ModelRegistry>>,
+        default_model: &str,
+    ) -> Coordinator {
         assert!(!buckets.is_empty());
+        if let Some(reg) = &registry {
+            assert!(
+                reg.get(default_model).is_some(),
+                "default model '{default_model}' is not registered"
+            );
+        }
         let metrics = Arc::new(Metrics::new());
         let max_len =
             buckets.iter().map(|(s, _)| s.max_len).max().unwrap();
@@ -166,6 +209,7 @@ impl Coordinator {
                     metrics: m,
                     tx: tx_sched,
                     inflight_total: 0,
+                    next_batch_id: 0,
                     shutting_down: false,
                 }
                 .run(rx);
@@ -178,25 +222,42 @@ impl Coordinator {
             metrics,
             scheduler: Some(scheduler),
             max_len,
+            default_model: Arc::from(default_model),
+            registry,
         }
     }
 
-    /// Maximum sequence length any bucket accepts.
+    /// Maximum sequence length any bucket accepts (per-model `max_len`
+    /// may restrict further; see [`Self::submit_with`]).
     pub fn max_len(&self) -> usize {
         self.max_len
     }
 
-    /// Submit an interactive request with no deadline.
+    /// The model deadline-less [`Self::submit`] targets.
+    pub fn default_model(&self) -> &str {
+        &self.default_model
+    }
+
+    /// The shared model registry, when this coordinator runs one —
+    /// [`ModelRegistry::reload`] through it hot-swaps weights under
+    /// live traffic.
+    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
+        self.registry.as_ref()
+    }
+
+    /// Submit an interactive request with no deadline, for the default
+    /// model's default task.
     pub fn submit(&self, tokens: Vec<u32>) -> Result<Ticket, Reject> {
         self.submit_with(tokens, SubmitOptions::default())
     }
 
-    /// Submit with an explicit priority class and optional SLO.
+    /// Submit with an explicit priority class, optional SLO, and
+    /// `(model, task)` target.
     ///
-    /// Over-long / empty sequences are rejected synchronously; queue-full
-    /// and admission-control rejections arrive asynchronously as a
-    /// [`Response`] with [`Outcome::Rejected`] (the scheduler owns the
-    /// queue state).
+    /// Over-long / empty sequences and unknown model names are rejected
+    /// synchronously; queue-full and admission-control rejections arrive
+    /// asynchronously as a [`Response`] with [`Outcome::Rejected`] (the
+    /// scheduler owns the queue state).
     pub fn submit_with(
         &self,
         tokens: Vec<u32>,
@@ -205,8 +266,28 @@ impl Coordinator {
         if tokens.is_empty() {
             return Err(Reject::Empty);
         }
-        if tokens.len() > self.max_len {
-            return Err(Reject::TooLong { len: tokens.len(), max: self.max_len });
+        let model: Arc<str> = match &opts.model {
+            Some(name) => Arc::from(name.as_str()),
+            None => Arc::clone(&self.default_model),
+        };
+        let mut max = self.max_len;
+        if let Some(reg) = &self.registry {
+            let Some(entry) = reg.get(&model) else {
+                return Err(Reject::UnknownModel {
+                    model: model.to_string(),
+                });
+            };
+            // a sequence must fit both a bucket and the model
+            max = max.min(entry.cfg.max_len);
+        } else if *model != *self.default_model {
+            // registry-less deployments serve exactly one model per
+            // bucket: a foreign name would be silently answered with
+            // the wrong weights (and fragment batching into its own
+            // lane) — reject it like any other unknown model
+            return Err(Reject::UnknownModel { model: model.to_string() });
+        }
+        if tokens.len() > max {
+            return Err(Reject::TooLong { len: tokens.len(), max });
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
@@ -214,6 +295,8 @@ impl Coordinator {
         let now = Instant::now();
         let req = Request {
             id,
+            model,
+            task: opts.task,
             tokens,
             enqueued: now,
             priority: opts.priority,
@@ -255,6 +338,9 @@ struct Scheduler {
     /// can report `BatchDone`.
     tx: mpsc::Sender<SchedMsg>,
     inflight_total: usize,
+    /// Source of [`Response::batch_id`]s (responses sharing one were
+    /// computed together, against one weight generation).
+    next_batch_id: u64,
     shutting_down: bool,
 }
 
@@ -279,7 +365,7 @@ impl Scheduler {
             }
             let now = Instant::now();
             // shed: expired deadlines + abandoned tickets, never computed
-            for (req, cause) in self.batcher.reap(now) {
+            for (req, cause, bucket_len) in self.batcher.reap(now) {
                 let outcome = match cause {
                     DeadCause::Expired => {
                         self.metrics.shed.fetch_add(1, Ordering::Relaxed);
@@ -292,9 +378,14 @@ impl Scheduler {
                         Outcome::Canceled
                     }
                 };
-                let _ = req
-                    .reply
-                    .send(Response::unserved(req.id, outcome, 0));
+                self.metrics.record_outcome(&req.model, req.task, outcome);
+                let _ = req.reply.send(Response::unserved(
+                    req.id,
+                    req.model,
+                    req.task,
+                    outcome,
+                    bucket_len,
+                ));
             }
             if self.shutting_down {
                 for batch in self.batcher.drain() {
@@ -316,16 +407,35 @@ impl Scheduler {
         }
     }
 
+    /// The bucket a request of this length lands in — rejection replies
+    /// report it so per-bucket reject metrics stay attributable (0 only
+    /// when no bucket fits at all).
+    fn bucket_len_for(&self, len: usize) -> usize {
+        self.batcher
+            .route(len)
+            .map(|b| self.batcher.buckets()[b].max_len)
+            .unwrap_or(0)
+    }
+
+    fn reject(&self, req: Request) {
+        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        self.metrics
+            .record_outcome(&req.model, req.task, Outcome::Rejected);
+        let bucket_len = self.bucket_len_for(req.tokens.len());
+        let _ = req.reply.send(Response::unserved(
+            req.id,
+            Arc::clone(&req.model),
+            req.task,
+            Outcome::Rejected,
+            bucket_len,
+        ));
+    }
+
     fn handle(&mut self, msg: SchedMsg) {
         match msg {
             SchedMsg::Submit(req) => {
                 if self.shutting_down {
-                    self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                    let _ = req.reply.send(Response::unserved(
-                        req.id,
-                        Outcome::Rejected,
-                        0,
-                    ));
+                    self.reject(req);
                     return;
                 }
                 // fail fast on buckets whose runner never constructed;
@@ -333,14 +443,7 @@ impl Scheduler {
                 // counter and the response outcome in agreement
                 if let Ok(bucket) = self.batcher.route(req.tokens.len()) {
                     if self.runners[bucket].is_none() {
-                        self.metrics
-                            .rejected
-                            .fetch_add(1, Ordering::Relaxed);
-                        let _ = req.reply.send(Response::unserved(
-                            req.id,
-                            Outcome::Rejected,
-                            self.batcher.buckets()[bucket].max_len,
-                        ));
+                        self.reject(req);
                         return;
                     }
                 }
@@ -350,15 +453,10 @@ impl Scheduler {
                             .accepted
                             .fetch_add(1, Ordering::Relaxed);
                     }
+                    // includes Reject::WontMeetDeadline: the reply names
+                    // the bucket the request would have landed in
                     Err((_reject, req)) => {
-                        self.metrics
-                            .rejected
-                            .fetch_add(1, Ordering::Relaxed);
-                        let _ = req.reply.send(Response::unserved(
-                            req.id,
-                            Outcome::Rejected,
-                            0,
-                        ));
+                        self.reject(req);
                     }
                 }
             }
@@ -382,9 +480,17 @@ impl Scheduler {
         }
         let Some(runner) = self.runners[batch.bucket].as_ref() else {
             // dead bucket (failed factory): unblock clients immediately
+            self.metrics.record_outcomes(
+                &batch.model,
+                batch.task,
+                Outcome::Failed,
+                batch.requests.len() as u64,
+            );
             for req in batch.requests {
                 let _ = req.reply.send(Response::unserved(
                     req.id,
+                    req.model,
+                    req.task,
                     Outcome::Failed,
                     batch.bucket_len,
                 ));
@@ -393,6 +499,8 @@ impl Scheduler {
         };
         self.batcher.note_dispatch(batch.bucket);
         self.inflight_total += 1;
+        self.next_batch_id += 1;
+        let batch_id = self.next_batch_id;
         self.metrics.inflight_batches.fetch_add(1, Ordering::Relaxed);
         let runner = Arc::clone(runner);
         let metrics = Arc::clone(&self.metrics);
@@ -401,35 +509,51 @@ impl Scheduler {
             // the batch only waits on a pinned backend thread: a shim
             // thread carries the wait so no pool worker is parked idle
             std::thread::spawn(move || {
-                run_batch(runner, batch, &metrics, &tx);
+                run_batch(runner, batch, batch_id, &metrics, &tx);
             });
         } else {
             crate::linalg::pool::global().spawn(move || {
-                run_batch(runner, batch, &metrics, &tx);
+                run_batch(runner, batch, batch_id, &metrics, &tx);
             });
         }
     }
 }
 
-/// Execute one batch on the pool: run the model, reply per request,
-/// report completion to the scheduler.
+/// Execute one batch on the pool: run the model against one pinned
+/// weight snapshot, reply per request, report completion to the
+/// scheduler.
 fn run_batch(
     runner: Arc<dyn BatchRunner>,
     batch: Batch,
+    batch_id: u64,
     metrics: &Metrics,
     tx: &mpsc::Sender<SchedMsg>,
 ) {
+    let Batch { bucket, bucket_len, model, task, requests } = batch;
     let rows: Vec<Vec<u32>> =
-        batch.requests.iter().map(|r| r.tokens.clone()).collect();
+        requests.iter().map(|r| r.tokens.clone()).collect();
     let used = rows.len();
-    metrics.record_batch(batch.bucket_len, used, runner.capacity());
+    metrics.record_batch(bucket_len, used, runner.capacity());
     let t0 = Instant::now();
     // a panicking runner must still produce replies + BatchDone, or the
     // scheduler's in-flight count never drains and shutdown hangs
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-        || runner.run(&rows),
+        || runner.run(&model, task, &rows),
     ))
     .unwrap_or_else(|_| Err("runner panicked".into()));
+    // a runner that miscounts its outputs would leave clients hanging on
+    // the zip below — fail the whole batch loudly instead
+    let result = result.and_then(|r| {
+        if r.outputs.len() == used {
+            Ok(r)
+        } else {
+            Err(format!(
+                "runner returned {} outputs for {} rows",
+                r.outputs.len(),
+                used
+            ))
+        }
+    });
     // release the runner before signalling BatchDone: once the scheduler
     // has seen every completion, no task-side runner clones linger (the
     // shutdown path relies on this to release shared weights promptly)
@@ -438,9 +562,17 @@ fn run_batch(
     metrics.model_time.observe(service_s);
     let finished = Instant::now();
     match result {
-        Ok(preds) => {
+        Ok(BatchResult { outputs, generation }) => {
+            // one per-model count for the whole batch (every request
+            // shares its key) — keeps the reply loop off the map lock
+            metrics.record_outcomes(
+                &model,
+                task,
+                Outcome::Served,
+                used as u64,
+            );
             let mut latencies = Vec::with_capacity(used);
-            for (req, pred) in batch.requests.into_iter().zip(preds) {
+            for (req, output) in requests.into_iter().zip(outputs) {
                 let latency =
                     finished.duration_since(req.enqueued).as_secs_f64();
                 latencies.push(latency);
@@ -453,33 +585,51 @@ fn run_batch(
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Response {
                     id: req.id,
-                    predictions: pred,
+                    model: req.model,
+                    task: req.task,
+                    // intentionally duplicates token-shaped output for
+                    // legacy `predictions` readers — one small Vec per
+                    // served request, noise next to the model forward
+                    predictions: output.token_view(),
+                    output: Some(output),
+                    generation,
+                    batch_id,
                     latency_s: latency,
                     batch_size: used,
-                    bucket_len: batch.bucket_len,
+                    bucket_len,
                     outcome: Outcome::Served,
                 });
             }
-            metrics.record_latencies(batch.bucket_len, &latencies);
+            metrics.record_latencies(bucket_len, &latencies);
         }
         Err(_) => {
             // failure: deliver explicit failure responses (clients also
-            // treat empty predictions for non-empty input as an error)
-            for req in batch.requests {
+            // treat empty predictions for non-empty token-task input as
+            // an error)
+            metrics.record_outcomes(
+                &model,
+                task,
+                Outcome::Failed,
+                used as u64,
+            );
+            for req in requests {
                 let _ = req.reply.send(Response::unserved(
                     req.id,
+                    req.model,
+                    req.task,
                     Outcome::Failed,
-                    batch.bucket_len,
+                    bucket_len,
                 ));
             }
         }
     }
-    let _ = tx.send(SchedMsg::BatchDone { bucket: batch.bucket, service_s });
+    let _ = tx.send(SchedMsg::BatchDone { bucket, service_s });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::ModelConfig;
 
     fn mock_coord(
         buckets: &[(usize, usize)],
@@ -511,6 +661,13 @@ mod tests {
         let resp = t.wait_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.predictions, vec![2, 3, 4]);
         assert_eq!(resp.outcome, Outcome::Served);
+        assert_eq!(&*resp.model, "default");
+        assert_eq!(resp.task, Task::MlmPredict);
+        assert_eq!(
+            resp.output,
+            Some(TaskOutput::Tokens(vec![2, 3, 4]))
+        );
+        assert!(resp.batch_id > 0, "served responses carry a batch id");
         assert!(resp.latency_s >= 0.0);
         c.shutdown();
     }
@@ -556,6 +713,86 @@ mod tests {
     }
 
     #[test]
+    fn registry_backed_submits_validate_model_names() {
+        // registry-aware coordinator: unknown names reject synchronously
+        // and per-model max_len restricts below the bucket ceiling
+        let cfg = ModelConfig::tiny(); // max_len 32
+        let registry = Arc::new(ModelRegistry::new());
+        registry.register_init("tiny", cfg, 0).unwrap();
+        let factory: RunnerFactory = Box::new(|| {
+            Ok(Box::new(MockRunner {
+                capacity: 2,
+                len: 64,
+                delay: Duration::ZERO,
+                fail: false,
+            }) as Box<dyn BatchRunner>)
+        });
+        let c = Coordinator::start_with(
+            vec![(BucketSpec { max_len: 64, batch: 2 }, factory)],
+            Default::default(),
+            Some(Arc::clone(&registry)),
+            "tiny",
+        );
+        assert_eq!(c.default_model(), "tiny");
+        assert!(c.registry().is_some());
+        match c.submit_with(vec![1], SubmitOptions::model("ghost")) {
+            Err(Reject::UnknownModel { model }) => {
+                assert_eq!(model, "ghost")
+            }
+            other => panic!("{other:?}"),
+        }
+        // bucket fits 64 but the model only 32
+        match c.submit(vec![1; 40]) {
+            Err(Reject::TooLong { len: 40, max: 32 }) => {}
+            other => panic!("{other:?}"),
+        }
+        let t = c
+            .submit_with(vec![1, 2], SubmitOptions::model("tiny"))
+            .unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.outcome, Outcome::Served);
+        assert_eq!(&*r.model, "tiny");
+        c.shutdown();
+    }
+
+    #[test]
+    fn registry_less_coordinator_rejects_foreign_model_names() {
+        // without a registry there is exactly one model; a typo'd name
+        // must not be silently served with the default weights
+        let c = mock_coord(&[(16, 2)], 0, Default::default());
+        match c.submit_with(vec![1, 2], SubmitOptions::model("typo")) {
+            Err(Reject::UnknownModel { model }) => {
+                assert_eq!(model, "typo")
+            }
+            other => panic!("{other:?}"),
+        }
+        // naming the default explicitly still works
+        let t = c
+            .submit_with(vec![1, 2], SubmitOptions::model("default"))
+            .unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.outcome, Outcome::Served);
+        c.shutdown();
+    }
+
+    #[test]
+    fn task_flows_through_to_response() {
+        let c = mock_coord(&[(16, 2)], 0, Default::default());
+        let t = c
+            .submit_with(
+                vec![5, 6],
+                SubmitOptions::default().with_task(Task::Encode),
+            )
+            .unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        // the mock serves every task with token output; what matters is
+        // the task key rode the whole path and came back
+        assert_eq!(r.task, Task::Encode);
+        assert_eq!(r.outcome, Outcome::Served);
+        c.shutdown();
+    }
+
+    #[test]
     fn backpressure_rejects_async() {
         let cfg = BatcherConfig {
             queue_capacity: 1,
@@ -571,6 +808,9 @@ mod tests {
             let r = t.wait_timeout(Duration::from_secs(10)).unwrap();
             if r.predictions.is_empty() {
                 assert_eq!(r.outcome, Outcome::Rejected);
+                // rejection replies attribute the bucket the request
+                // would have landed in — never a fabricated 0
+                assert_eq!(r.bucket_len, 8);
                 empty += 1;
             }
         }
@@ -649,6 +889,8 @@ mod tests {
         let r2 = t2.wait_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r2.outcome, Outcome::Shed);
         assert!(r2.predictions.is_empty());
+        // shed replies report the bucket the request sat in
+        assert_eq!(r2.bucket_len, 16);
         let r1 = t1.wait_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r1.outcome, Outcome::Served);
         let metrics = Arc::clone(&c.metrics);
@@ -660,6 +902,15 @@ mod tests {
             "shed request was computed"
         );
         assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+        // …and the per-model map attributes it
+        assert_eq!(
+            metrics.model_task_count(
+                "default",
+                Task::MlmPredict,
+                Outcome::Shed
+            ),
+            1
+        );
     }
 
     #[test]
@@ -714,6 +965,15 @@ mod tests {
             j.get("bucket_latency").get("8").get("count").as_usize(),
             Some(6)
         );
+        // …and so does the per-model/per-task breakdown
+        assert_eq!(
+            j.get("per_model")
+                .get("default")
+                .get("mlm_predict")
+                .get("served")
+                .as_usize(),
+            Some(6)
+        );
         c.shutdown();
     }
 
@@ -734,6 +994,7 @@ mod tests {
         let t = c.submit(vec![1, 2]).unwrap();
         let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.predictions.is_empty());
+        assert!(r.output.is_none());
         assert_eq!(r.outcome, Outcome::Failed);
         c.shutdown();
     }
@@ -752,6 +1013,7 @@ mod tests {
         // dead bucket = refused before queuing, consistent with the
         // metrics.rejected counter it increments
         assert_eq!(r.outcome, Outcome::Rejected);
+        assert_eq!(r.bucket_len, 8);
         assert_eq!(c.metrics.rejected.load(Ordering::Relaxed), 1);
         c.shutdown();
     }

@@ -1,0 +1,449 @@
+//! Multi-tenant model registry: named, versioned weight stores with
+//! zero-downtime hot-swap.
+//!
+//! One [`ModelRegistry`] is the single source of truth for every model a
+//! coordinator serves.  Each entry pairs an `Arc<Params>` with its
+//! [`ModelConfig`] and prebuilt [`EncoderHandles`] (registration fails
+//! fast on a store missing encoder tensors — no panics on worker threads
+//! mid-batch), tagged with a monotonically increasing per-name `version`
+//! and the store's process-unique [`Params::generation`].
+//!
+//! # Hot-swap semantics
+//!
+//! [`ModelRegistry::reload`] atomically replaces an entry's weights under
+//! live traffic:
+//!
+//! - **In-flight batches pin their snapshot.**  A runner resolves
+//!   [`ModelRegistry::get`] once per batch and holds the returned
+//!   `Arc<RegistryEntry>` for the batch's lifetime, so a swap can never
+//!   change the weights under a running batch — and every response of
+//!   one batch carries one generation.
+//! - **Queued requests pick up the new weights at flush.**  The next
+//!   batch's `get` observes the new entry; nothing queued is dropped or
+//!   recomputed by a swap.
+//! - **Old weights are released promptly.**  The registry drops its
+//!   reference at swap; the allocation is freed when the last in-flight
+//!   batch finishes.
+//!
+//! The registry hands out snapshots (`Arc<RegistryEntry>`) rather than
+//! guards, so readers never hold the lock across model compute; the lock
+//! guards only the name → entry map.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::model::{
+    param_count, param_spec, EncoderHandles, ModelConfig, Params,
+};
+use crate::runtime::checkpoint::{Checkpoint, CkptError};
+
+/// One immutable registered-model snapshot.  Swaps replace the whole
+/// entry — an `Arc<RegistryEntry>` in hand is a consistent
+/// `(config, weights, handles)` triple forever.
+pub struct RegistryEntry {
+    pub name: String,
+    /// Per-name reload counter, starting at 1 for the initial
+    /// registration.
+    pub version: u64,
+    pub cfg: ModelConfig,
+    pub params: Arc<Params>,
+    /// Hot-path parameter handles, resolved once at registration —
+    /// their construction IS the "this store really contains an
+    /// encoder" validation, and callers driving the encoder directly
+    /// can seed a warm scratch from a clone
+    /// ([`crate::model::EncodeScratch::with_handles`]).  The batched
+    /// serving paths still resolve per worker scratch; threading these
+    /// through `batch_map` is a ROADMAP item.
+    pub handles: Arc<EncoderHandles>,
+}
+
+impl RegistryEntry {
+    /// Process-unique id of the weight store (see
+    /// [`Params::generation`]) — what responses carry to prove a batch
+    /// never mixed weight generations.
+    pub fn generation(&self) -> u64 {
+        self.params.generation()
+    }
+}
+
+impl std::fmt::Debug for RegistryEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RegistryEntry")
+            .field("name", &self.name)
+            .field("version", &self.version)
+            .field("generation", &self.generation())
+            .field("max_len", &self.cfg.max_len)
+            .field("params", &self.params.len())
+            .finish()
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RegistryError {
+    #[error("model '{0}' is not registered")]
+    Unknown(String),
+    #[error("model '{0}' is already registered (use reload to swap weights)")]
+    Duplicate(String),
+    #[error("model '{name}': {source}")]
+    Config {
+        name: String,
+        source: crate::model::config::ConfigError,
+    },
+    #[error("model '{name}': flat store has {got} floats, config needs {want}")]
+    SizeMismatch { name: String, got: usize, want: usize },
+    #[error("model '{name}': {msg}")]
+    Handles { name: String, msg: String },
+    #[error("model '{name}': checkpoint: {source}")]
+    Checkpoint { name: String, source: CkptError },
+    #[error("model '{name}': {source}")]
+    Params {
+        name: String,
+        source: crate::model::params::ParamError,
+    },
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: BTreeMap<String, Arc<RegistryEntry>>,
+    /// Registration order — the first entry is the coordinator's
+    /// default model.
+    order: Vec<String>,
+}
+
+/// Thread-safe name → model map shared by the coordinator, its runners,
+/// and whatever control surface drives reloads.
+#[derive(Default)]
+pub struct ModelRegistry {
+    inner: RwLock<Inner>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    fn validate(
+        name: &str,
+        cfg: &ModelConfig,
+        params: &Params,
+    ) -> Result<Arc<EncoderHandles>, RegistryError> {
+        cfg.validate().map_err(|source| RegistryError::Config {
+            name: name.to_string(),
+            source,
+        })?;
+        let want = param_count(cfg);
+        if params.len() != want {
+            return Err(RegistryError::SizeMismatch {
+                name: name.to_string(),
+                got: params.len(),
+                want,
+            });
+        }
+        EncoderHandles::try_build(params, cfg)
+            .map(Arc::new)
+            .map_err(|msg| RegistryError::Handles {
+                name: name.to_string(),
+                msg,
+            })
+    }
+
+    /// Register a new named model.  Fails on duplicate names and on any
+    /// store/config mismatch — a registered entry is guaranteed
+    /// servable.
+    pub fn register(
+        &self,
+        name: &str,
+        cfg: ModelConfig,
+        params: Arc<Params>,
+    ) -> Result<Arc<RegistryEntry>, RegistryError> {
+        let handles = Self::validate(name, &cfg, &params)?;
+        let mut inner = self.inner.write().expect("registry lock");
+        if inner.entries.contains_key(name) {
+            return Err(RegistryError::Duplicate(name.to_string()));
+        }
+        let entry = Arc::new(RegistryEntry {
+            name: name.to_string(),
+            version: 1,
+            cfg,
+            params,
+            handles,
+        });
+        inner.entries.insert(name.to_string(), Arc::clone(&entry));
+        inner.order.push(name.to_string());
+        Ok(entry)
+    }
+
+    /// Register a fresh seeded initialisation (demo/bench convenience).
+    pub fn register_init(
+        &self,
+        name: &str,
+        cfg: ModelConfig,
+        seed: u64,
+    ) -> Result<Arc<RegistryEntry>, RegistryError> {
+        let params = Arc::new(Params::init(&cfg, seed));
+        self.register(name, cfg, params)
+    }
+
+    /// Register a model from a checkpoint's `params` slot (see
+    /// [`crate::runtime::checkpoint`]); the flat layout must match
+    /// `cfg`'s param spec exactly.
+    pub fn register_checkpoint(
+        &self,
+        name: &str,
+        cfg: ModelConfig,
+        path: &str,
+    ) -> Result<Arc<RegistryEntry>, RegistryError> {
+        let params = Self::params_from_checkpoint(name, &cfg, path)?;
+        self.register(name, cfg, params)
+    }
+
+    fn params_from_checkpoint(
+        name: &str,
+        cfg: &ModelConfig,
+        path: &str,
+    ) -> Result<Arc<Params>, RegistryError> {
+        let ckpt = Checkpoint::load(path).map_err(|source| {
+            RegistryError::Checkpoint { name: name.to_string(), source }
+        })?;
+        let flat = ckpt
+            .slot("params")
+            .map_err(|source| RegistryError::Checkpoint {
+                name: name.to_string(),
+                source,
+            })?
+            .to_vec();
+        Params::from_flat(flat, param_spec(cfg))
+            .map(Arc::new)
+            .map_err(|source| RegistryError::Params {
+                name: name.to_string(),
+                source,
+            })
+    }
+
+    /// Atomically swap a registered model's weights (same config) —
+    /// zero-downtime hot-swap.  Returns the new version number.
+    ///
+    /// The swap is generation-tracked and can never mix weights inside a
+    /// batch: in-flight batches hold their `Arc<RegistryEntry>` pin and
+    /// finish on the old generation; queued requests resolve the new
+    /// entry at flush.
+    pub fn reload(
+        &self,
+        name: &str,
+        params: Arc<Params>,
+    ) -> Result<u64, RegistryError> {
+        // validate against the *current* config outside the write lock
+        // (handle building walks the whole spec); a racing reload just
+        // means last-write-wins on the entry, which is the semantics of
+        // a swap anyway
+        let cfg = self
+            .get(name)
+            .ok_or_else(|| RegistryError::Unknown(name.to_string()))?
+            .cfg
+            .clone();
+        let handles = Self::validate(name, &cfg, &params)?;
+        let mut inner = self.inner.write().expect("registry lock");
+        let entry = inner
+            .entries
+            .get_mut(name)
+            .ok_or_else(|| RegistryError::Unknown(name.to_string()))?;
+        let version = entry.version + 1;
+        *entry = Arc::new(RegistryEntry {
+            name: name.to_string(),
+            version,
+            cfg,
+            params,
+            handles,
+        });
+        Ok(version)
+    }
+
+    /// [`Self::reload`] from a checkpoint file's `params` slot.
+    pub fn reload_checkpoint(
+        &self,
+        name: &str,
+        path: &str,
+    ) -> Result<u64, RegistryError> {
+        let cfg = self
+            .get(name)
+            .ok_or_else(|| RegistryError::Unknown(name.to_string()))?
+            .cfg
+            .clone();
+        let params = Self::params_from_checkpoint(name, &cfg, path)?;
+        self.reload(name, params)
+    }
+
+    /// Pin a consistent snapshot of a named model.  Runners call this
+    /// once per batch and hold the `Arc` for the batch's lifetime.
+    pub fn get(&self, name: &str) -> Option<Arc<RegistryEntry>> {
+        self.inner
+            .read()
+            .expect("registry lock")
+            .entries
+            .get(name)
+            .map(Arc::clone)
+    }
+
+    /// Registered names in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().expect("registry lock").order.clone()
+    }
+
+    /// The first-registered model — what `submit` targets when the
+    /// caller names none.
+    pub fn default_model(&self) -> Option<String> {
+        self.inner
+            .read()
+            .expect("registry lock")
+            .order
+            .first()
+            .cloned()
+    }
+
+    /// Largest `max_len` across registered models (bucket sizing aid).
+    pub fn max_len(&self) -> usize {
+        self.inner
+            .read()
+            .expect("registry lock")
+            .entries
+            .values()
+            .map(|e| e.cfg.max_len)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("registry lock").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_get_roundtrip_and_order() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.default_model(), None);
+        let cfg = ModelConfig::tiny();
+        reg.register_init("a", cfg.clone(), 1).unwrap();
+        let mut big = cfg.clone();
+        big.max_len = 64;
+        reg.register_init("b", big, 2).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["a", "b"]);
+        assert_eq!(reg.default_model().as_deref(), Some("a"));
+        assert_eq!(reg.max_len(), 64);
+        let a = reg.get("a").unwrap();
+        assert_eq!(a.version, 1);
+        assert_eq!(a.cfg, cfg);
+        assert!(a.generation() > 0);
+        assert!(reg.get("missing").is_none());
+    }
+
+    #[test]
+    fn duplicate_and_unknown_rejected() {
+        let reg = ModelRegistry::new();
+        let cfg = ModelConfig::tiny();
+        reg.register_init("a", cfg.clone(), 1).unwrap();
+        assert!(matches!(
+            reg.register_init("a", cfg.clone(), 2),
+            Err(RegistryError::Duplicate(_))
+        ));
+        assert!(matches!(
+            reg.reload("ghost", Arc::new(Params::init(&cfg, 3))),
+            Err(RegistryError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn register_validates_store_against_config() {
+        let reg = ModelRegistry::new();
+        let cfg = ModelConfig::tiny();
+        let mut other = cfg.clone();
+        other.n_layers += 1; // bigger spec
+        let wrong = Arc::new(Params::init(&other, 1));
+        assert!(matches!(
+            reg.register("a", cfg.clone(), wrong),
+            Err(RegistryError::SizeMismatch { .. })
+        ));
+        // invalid config rejected before any store inspection
+        let mut bad = cfg;
+        bad.n_heads = 3; // 16 % 3 != 0
+        assert!(matches!(
+            reg.register_init("a", bad, 1),
+            Err(RegistryError::Config { .. })
+        ));
+    }
+
+    #[test]
+    fn reload_bumps_version_and_swaps_generation_atomically() {
+        let reg = ModelRegistry::new();
+        let cfg = ModelConfig::tiny();
+        reg.register_init("m", cfg.clone(), 1).unwrap();
+        let pinned = reg.get("m").unwrap(); // an in-flight batch's pin
+        let g1 = pinned.generation();
+        let v = reg.reload("m", Arc::new(Params::init(&cfg, 2))).unwrap();
+        assert_eq!(v, 2);
+        let fresh = reg.get("m").unwrap();
+        assert_eq!(fresh.version, 2);
+        assert_ne!(fresh.generation(), g1, "swap must change generation");
+        // the pin still reads the old snapshot — a batch in flight
+        // during the swap finishes on the weights it started with
+        assert_eq!(pinned.generation(), g1);
+        assert_eq!(pinned.version, 1);
+        // reload validates the incoming store like register does
+        let mut other = cfg.clone();
+        other.n_layers += 1;
+        assert!(matches!(
+            reg.reload("m", Arc::new(Params::init(&other, 3))),
+            Err(RegistryError::SizeMismatch { .. })
+        ));
+        // …and a failed reload leaves the entry untouched
+        assert_eq!(reg.get("m").unwrap().version, 2);
+    }
+
+    #[test]
+    fn old_weights_released_when_last_pin_drops() {
+        let reg = ModelRegistry::new();
+        let cfg = ModelConfig::tiny();
+        let old = Arc::new(Params::init(&cfg, 1));
+        reg.register("m", cfg.clone(), Arc::clone(&old)).unwrap();
+        let pin = reg.get("m").unwrap();
+        reg.reload("m", Arc::new(Params::init(&cfg, 2))).unwrap();
+        // registry dropped its ref; only `old` here + the pinned entry
+        assert_eq!(Arc::strong_count(&old), 2);
+        drop(pin);
+        assert_eq!(Arc::strong_count(&old), 1, "old weights leaked");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_registers_and_reloads() {
+        let cfg = ModelConfig::tiny();
+        let params = Params::init(&cfg, 7);
+        let path = std::env::temp_dir().join("linformer_registry_ckpt.bin");
+        let path = path.to_str().unwrap().to_string();
+        Checkpoint::new(5)
+            .with_slot("params", params.flat.clone())
+            .save(&path)
+            .unwrap();
+        let reg = ModelRegistry::new();
+        let e = reg.register_checkpoint("m", cfg, &path).unwrap();
+        assert_eq!(e.params.flat, params.flat);
+        let v = reg.reload_checkpoint("m", &path).unwrap();
+        assert_eq!(v, 2);
+        assert!(matches!(
+            reg.register_checkpoint(
+                "x",
+                ModelConfig::tiny(),
+                "/nonexistent/ckpt.bin"
+            ),
+            Err(RegistryError::Checkpoint { .. })
+        ));
+    }
+}

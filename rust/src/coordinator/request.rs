@@ -4,6 +4,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+use crate::linalg::Mat;
+
 /// Scheduling class of a request.  Interactive traffic is ordered ahead
 /// of batch traffic in every queue; under overload the scheduler sheds
 /// whatever cannot meet its deadline, so batch work degrades first.
@@ -23,32 +25,146 @@ impl Priority {
     }
 }
 
-/// Per-submit scheduling options: priority class + optional SLO.
+/// What a request asks the model to compute.  Together with the model
+/// name and length bucket it forms the batch key: a flushed batch always
+/// holds requests of one `(model, task, bucket)` — runners never mix
+/// tasks (or weight generations) within a batch.
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default,
+)]
+pub enum Task {
+    /// Final hidden states (n × d_model) — the embedding-service task.
+    Encode,
+    /// Argmax MLM token prediction per position (the legacy default).
+    #[default]
+    MlmPredict,
+    /// Sequence classification over the position-0 ([CLS]) hidden state.
+    /// `head` selects the classifier head; the canonical `cls/{w,b}`
+    /// parameters are head 0 (the only head today's param spec carries).
+    Classify { head: usize },
+    /// Per-layer per-head attention matrices (debug/analysis traffic).
+    AttnCapture,
+}
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Encode => "encode",
+            Task::MlmPredict => "mlm_predict",
+            Task::Classify { .. } => "classify",
+            Task::AttnCapture => "attn_capture",
+        }
+    }
+
+    /// Inverse of [`Self::name`] — the one place the string mapping
+    /// lives (CLI flags and trace JSON both parse through it).
+    /// `"classify"` parses as head 0; callers carrying an explicit head
+    /// (e.g. a trace's `head` field) override it afterwards.
+    pub fn from_name(name: &str) -> Option<Task> {
+        Some(match name {
+            "encode" => Task::Encode,
+            "mlm_predict" => Task::MlmPredict,
+            "classify" => Task::Classify { head: 0 },
+            "attn_capture" => Task::AttnCapture,
+            _ => return None,
+        })
+    }
+}
+
+/// Task-dependent payload of a served [`Response`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskOutput {
+    /// [`Task::MlmPredict`]: one argmax token id per input position.
+    Tokens(Vec<u32>),
+    /// [`Task::Classify`]: winning class id plus the raw per-class
+    /// logits (so callers can compare bitwise against a direct call).
+    Class { id: u32, logits: Vec<f32> },
+    /// [`Task::Encode`]: final hidden states (n × d_model).
+    Hidden(Mat),
+    /// [`Task::AttnCapture`]: `[layer][head]` attention matrices.
+    Attn(Vec<Vec<Mat>>),
+}
+
+impl TaskOutput {
+    /// Token-shaped view for the legacy `predictions` field: MLM tokens,
+    /// or the single winning class id.  Float-valued outputs (hidden
+    /// states, attention matrices) have no token view — callers of those
+    /// tasks read [`Response::output`] and rely on the outcome, not the
+    /// empty-predictions sentinel.
+    pub fn token_view(&self) -> Vec<u32> {
+        match self {
+            TaskOutput::Tokens(t) => t.clone(),
+            TaskOutput::Class { id, .. } => vec![*id],
+            TaskOutput::Hidden(_) | TaskOutput::Attn(_) => Vec::new(),
+        }
+    }
+}
+
+/// Per-submit scheduling options: priority class, optional SLO, and the
+/// `(model, task)` the request addresses.
 ///
 /// `slo` is a *relative* latency budget; the scheduler turns it into an
 /// absolute deadline at submit time.  A request with no SLO never expires
 /// and is never shed — only queue-capacity backpressure applies.
-#[derive(Debug, Clone, Copy, Default)]
+/// `model = None` targets the coordinator's default model, which is what
+/// keeps the pre-registry `submit(tokens)` API working unchanged.
+#[derive(Debug, Clone, Default)]
 pub struct SubmitOptions {
     pub priority: Priority,
     pub slo: Option<Duration>,
+    /// Registered model name; `None` = the coordinator's default model.
+    pub model: Option<String>,
+    pub task: Task,
 }
 
 impl SubmitOptions {
     pub fn interactive(slo: Duration) -> SubmitOptions {
-        SubmitOptions { priority: Priority::Interactive, slo: Some(slo) }
+        SubmitOptions {
+            priority: Priority::Interactive,
+            slo: Some(slo),
+            ..SubmitOptions::default()
+        }
     }
 
     pub fn batch() -> SubmitOptions {
-        SubmitOptions { priority: Priority::Batch, slo: None }
+        SubmitOptions {
+            priority: Priority::Batch,
+            ..SubmitOptions::default()
+        }
+    }
+
+    /// Address a specific registered model (default task).
+    pub fn model(name: &str) -> SubmitOptions {
+        SubmitOptions {
+            model: Some(name.to_string()),
+            ..SubmitOptions::default()
+        }
+    }
+
+    /// Address a specific `(model, task)` pair.
+    pub fn model_task(name: &str, task: Task) -> SubmitOptions {
+        SubmitOptions {
+            model: Some(name.to_string()),
+            task,
+            ..SubmitOptions::default()
+        }
+    }
+
+    pub fn with_task(mut self, task: Task) -> SubmitOptions {
+        self.task = task;
+        self
     }
 }
 
-/// An inference request: a token sequence awaiting MLM logits (or a
-/// classification decision — the runner decides by program).
+/// An inference request: a token sequence awaiting one [`Task`]'s output
+/// from one named model.
 #[derive(Debug)]
 pub struct Request {
     pub id: u64,
+    /// Registered model this request addresses (already resolved — the
+    /// scheduler never sees the `None`-means-default shorthand).
+    pub model: Arc<str>,
+    pub task: Task,
     pub tokens: Vec<u32>,
     pub enqueued: Instant,
     pub priority: Priority,
@@ -99,25 +215,56 @@ impl Outcome {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    /// Argmax token id per position (MLM) or class id (classifier).
-    /// Empty unless `outcome == Served` (kept as the legacy error signal:
-    /// empty predictions for non-empty input means "not served").
+    /// Model that served (or would have served) the request.
+    pub model: Arc<str>,
+    pub task: Task,
+    /// Token view of the output (argmax ids for MLM, the class id for
+    /// classification).  Empty unless `outcome == Served` — kept as the
+    /// legacy error signal for token-shaped tasks; float-valued tasks
+    /// (`Encode`, `AttnCapture`) leave it empty even when served and
+    /// deliver through `output`.
     pub predictions: Vec<u32>,
+    /// Full task output; `None` unless `outcome == Served`.
+    pub output: Option<TaskOutput>,
+    /// [`crate::model::Params::generation`] of the weights that computed
+    /// this response (0 when unserved or the runner has no versioned
+    /// weights, e.g. mocks).  Every response of one batch carries the
+    /// same generation — hot-swap never mixes weights within a batch.
+    pub generation: u64,
+    /// Scheduler-unique id of the batch this request was served in
+    /// (0 when never dispatched).  Responses sharing a `batch_id` were
+    /// computed together, by one runner call, against one generation.
+    pub batch_id: u64,
     /// Wall-clock latency from enqueue to completion.
     pub latency_s: f64,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
-    /// The length bucket it was routed to.
+    /// The length bucket it was routed to (for rejected/shed requests:
+    /// the bucket it *would have* landed in, so per-bucket reject
+    /// metrics stay attributable; 0 only when no bucket fits).
     pub bucket_len: usize,
     pub outcome: Outcome,
 }
 
 impl Response {
     /// A terminal non-served response (rejection, shed, cancel, failure).
-    pub fn unserved(id: u64, outcome: Outcome, bucket_len: usize) -> Response {
+    /// `bucket_len` is the bucket the request was (or would have been)
+    /// routed to — rejection sites must not fabricate it.
+    pub fn unserved(
+        id: u64,
+        model: Arc<str>,
+        task: Task,
+        outcome: Outcome,
+        bucket_len: usize,
+    ) -> Response {
         Response {
             id,
+            model,
+            task,
             predictions: Vec::new(),
+            output: None,
+            generation: 0,
+            batch_id: 0,
             latency_s: 0.0,
             batch_size: 0,
             bucket_len,
@@ -138,8 +285,89 @@ pub enum Reject {
          exceeds the {budget_ms}ms deadline budget"
     )]
     WontMeetDeadline { estimated_ms: u64, budget_ms: u64 },
+    #[error("model '{model}' is not registered")]
+    UnknownModel { model: String },
     #[error("coordinator is shutting down")]
     ShuttingDown,
     #[error("empty sequence")]
     Empty,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_default_is_mlm_predict() {
+        assert_eq!(Task::default(), Task::MlmPredict);
+        assert_eq!(SubmitOptions::default().task, Task::MlmPredict);
+        assert!(SubmitOptions::default().model.is_none());
+    }
+
+    #[test]
+    fn task_names_are_stable() {
+        assert_eq!(Task::Encode.name(), "encode");
+        assert_eq!(Task::MlmPredict.name(), "mlm_predict");
+        assert_eq!(Task::Classify { head: 0 }.name(), "classify");
+        assert_eq!(Task::AttnCapture.name(), "attn_capture");
+    }
+
+    #[test]
+    fn from_name_round_trips_every_task() {
+        for t in [
+            Task::Encode,
+            Task::MlmPredict,
+            Task::Classify { head: 0 },
+            Task::AttnCapture,
+        ] {
+            assert_eq!(Task::from_name(t.name()), Some(t));
+        }
+        assert_eq!(Task::from_name("dream"), None);
+    }
+
+    #[test]
+    fn token_view_mirrors_token_shaped_outputs_only() {
+        assert_eq!(
+            TaskOutput::Tokens(vec![3, 1]).token_view(),
+            vec![3, 1]
+        );
+        assert_eq!(
+            TaskOutput::Class { id: 1, logits: vec![0.1, 0.9] }
+                .token_view(),
+            vec![1]
+        );
+        assert!(TaskOutput::Hidden(Mat::zeros(2, 2))
+            .token_view()
+            .is_empty());
+        assert!(TaskOutput::Attn(Vec::new()).token_view().is_empty());
+    }
+
+    #[test]
+    fn unserved_carries_model_task_and_bucket() {
+        let r = Response::unserved(
+            7,
+            Arc::from("m"),
+            Task::Classify { head: 0 },
+            Outcome::Rejected,
+            128,
+        );
+        assert_eq!(&*r.model, "m");
+        assert_eq!(r.task, Task::Classify { head: 0 });
+        assert_eq!(r.bucket_len, 128);
+        assert!(r.predictions.is_empty());
+        assert!(r.output.is_none());
+        assert_eq!(r.generation, 0);
+        assert_eq!(r.batch_id, 0);
+    }
+
+    #[test]
+    fn submit_options_builders() {
+        let o = SubmitOptions::model_task("big", Task::Encode);
+        assert_eq!(o.model.as_deref(), Some("big"));
+        assert_eq!(o.task, Task::Encode);
+        let o = SubmitOptions::interactive(Duration::from_millis(5))
+            .with_task(Task::Classify { head: 0 });
+        assert_eq!(o.task, Task::Classify { head: 0 });
+        assert!(o.slo.is_some());
+    }
 }

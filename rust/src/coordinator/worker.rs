@@ -2,21 +2,47 @@
 //!
 //! The scheduler executes batches as tasks on the process-wide compute
 //! pool, so runners must be `Send + Sync` — any pool worker may execute
-//! any bucket's batch.  The coordinator is tested against `MockRunner`;
-//! [`ReferenceRunner`] serves through the pure-Rust batched encoder
-//! (`model::mlm_predict_batch`) — no padding, no XLA — and is the default
-//! on machines without PJRT.  Backends whose handles are `!Send` (the
-//! `xla` crate's PJRT client holds `Rc` internals) implement
-//! [`LocalBatchRunner`] instead and are adapted by [`PinnedRunner`],
-//! which pins them to one dedicated thread and forwards batches to it.
+//! any bucket's batch.  A runner receives the full batch key — model
+//! name, [`Task`], rows — and returns one [`TaskOutput`] per row plus
+//! the weight generation that computed them (a batch resolves its model
+//! snapshot exactly once, so hot-swap can never mix generations inside
+//! it).  The coordinator is tested against `MockRunner`;
+//! [`ReferenceRunner`] serves every task through the pure-Rust batched
+//! encoder against a shared [`ModelRegistry`] — no padding, no XLA — and
+//! is the default on machines without PJRT.  Backends whose handles are
+//! `!Send` (the `xla` crate's PJRT client holds `Rc` internals)
+//! implement [`LocalBatchRunner`] instead and are adapted by
+//! [`PinnedRunner`], which pins them to one dedicated thread and
+//! forwards batches to it.
 
 use std::sync::{mpsc, Arc, Mutex};
 
+use super::registry::ModelRegistry;
+use super::request::{Task, TaskOutput};
 use crate::data::tokenizer::PAD;
-use crate::model::{mlm_predict_batch, ModelConfig, Params};
+use crate::model::{
+    attn_capture_batch, classify_batch, encode_batch, mlm_predict_batch,
+};
 use crate::runtime::tensor::Tensor;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Executable;
+
+/// What one runner call produced: per-row outputs plus the weight
+/// generation that computed every one of them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchResult {
+    pub outputs: Vec<TaskOutput>,
+    /// [`crate::model::Params::generation`] of the weights used (0 when
+    /// the runner has no versioned weights, e.g. mocks).
+    pub generation: u64,
+}
+
+impl BatchResult {
+    /// Convenience for runners without versioned weights.
+    pub fn unversioned(outputs: Vec<TaskOutput>) -> BatchResult {
+        BatchResult { outputs, generation: 0 }
+    }
+}
 
 /// Executes one batch for one length bucket, from any thread.
 pub trait BatchRunner: Send + Sync {
@@ -26,9 +52,15 @@ pub trait BatchRunner: Send + Sync {
     /// Sequence length the executable was compiled for.
     fn bucket_len(&self) -> usize;
 
-    /// Run `rows` (each ≤ bucket_len tokens; ≤ capacity rows) and return
-    /// per-row predictions truncated to each row's true length.
-    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String>;
+    /// Run `rows` (each ≤ bucket_len tokens; ≤ capacity rows) of one
+    /// `(model, task)` key and return per-row outputs — exactly one per
+    /// row, in order — computed against a single weight generation.
+    fn run(
+        &self,
+        model: &str,
+        task: Task,
+        rows: &[Vec<u32>],
+    ) -> Result<BatchResult, String>;
 
     /// True when `run` merely *waits* on compute owned elsewhere (e.g. a
     /// pinned PJRT thread).  The scheduler then executes the batch on a
@@ -44,7 +76,12 @@ pub trait BatchRunner: Send + Sync {
 pub trait LocalBatchRunner {
     fn capacity(&self) -> usize;
     fn bucket_len(&self) -> usize;
-    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String>;
+    fn run(
+        &self,
+        model: &str,
+        task: Task,
+        rows: &[Vec<u32>],
+    ) -> Result<BatchResult, String>;
 }
 
 /// Deferred runner construction, executed when the scheduler starts.
@@ -56,15 +93,17 @@ pub type RunnerFactory =
 pub type LocalRunnerFactory =
     Box<dyn FnOnce() -> Result<Box<dyn LocalBatchRunner>, String> + Send>;
 
-type PinnedReply = mpsc::Sender<Result<Vec<Vec<u32>>, String>>;
+type PinnedJob = (String, Task, Vec<Vec<u32>>, PinnedReply);
+type PinnedReply = mpsc::Sender<Result<BatchResult, String>>;
 
 /// Adapts a [`LocalBatchRunner`] to the thread-safe [`BatchRunner`]
 /// contract: one dedicated thread constructs and owns the runner (PJRT
-/// handles never migrate), and `run` forwards batches to it over a
-/// channel.  The adapter itself is `Send + Sync`, so scheduler batch
-/// tasks on the compute pool can call it from any worker.
+/// handles never migrate), and `run` forwards batches — model, task and
+/// rows — to it over a channel.  The adapter itself is `Send + Sync`, so
+/// scheduler batch tasks on the compute pool can call it from any
+/// worker.
 pub struct PinnedRunner {
-    jobs: Mutex<mpsc::Sender<(Vec<Vec<u32>>, PinnedReply)>>,
+    jobs: Mutex<mpsc::Sender<PinnedJob>>,
     capacity: usize,
     bucket_len: usize,
     thread: Option<std::thread::JoinHandle<()>>,
@@ -76,7 +115,7 @@ pub struct PinnedRunner {
 /// compile concurrently and only then [`Self::wait`] for each.
 pub struct PendingPinnedRunner {
     init: mpsc::Receiver<Result<(usize, usize), String>>,
-    jobs: mpsc::Sender<(Vec<Vec<u32>>, PinnedReply)>,
+    jobs: mpsc::Sender<PinnedJob>,
     thread: std::thread::JoinHandle<()>,
 }
 
@@ -109,8 +148,7 @@ impl PinnedRunner {
     pub fn launch(
         factory: LocalRunnerFactory,
     ) -> Result<PendingPinnedRunner, String> {
-        let (jtx, jrx) =
-            mpsc::channel::<(Vec<Vec<u32>>, PinnedReply)>();
+        let (jtx, jrx) = mpsc::channel::<PinnedJob>();
         let (itx, irx) = mpsc::channel::<Result<(usize, usize), String>>();
         let thread = std::thread::Builder::new()
             .name("linformer-pinned-runner".into())
@@ -126,8 +164,8 @@ impl PinnedRunner {
                         return;
                     }
                 };
-                while let Ok((rows, reply)) = jrx.recv() {
-                    let _ = reply.send(runner.run(&rows));
+                while let Ok((model, task, rows, reply)) = jrx.recv() {
+                    let _ = reply.send(runner.run(&model, task, &rows));
                 }
             })
             .map_err(|e| format!("spawn pinned runner: {e}"))?;
@@ -156,12 +194,17 @@ impl BatchRunner for PinnedRunner {
         true
     }
 
-    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+    fn run(
+        &self,
+        model: &str,
+        task: Task,
+        rows: &[Vec<u32>],
+    ) -> Result<BatchResult, String> {
         let (rtx, rrx) = mpsc::channel();
         self.jobs
             .lock()
             .map_err(|_| "pinned runner mutex poisoned".to_string())?
-            .send((rows.to_vec(), rtx))
+            .send((model.to_string(), task, rows.to_vec(), rtx))
             .map_err(|_| "pinned runner thread gone".to_string())?;
         rrx.recv()
             .map_err(|_| "pinned runner died mid-batch".to_string())?
@@ -225,37 +268,33 @@ pub fn argmax_tokens(
     out
 }
 
-/// Pure-Rust runner: executes batches through the reference encoder's
-/// batched MLM path.  Ragged rows run at their true length (no padding to
-/// a static shape) and examples parallelise on the global compute pool
-/// via `model::mlm_predict_batch` — concurrent buckets share the one
-/// process-wide thread budget.
+/// Pure-Rust multi-tenant runner: dispatches every [`Task`] to the
+/// batched reference encoder against whatever model the batch names.
+/// Ragged rows run at their true length (no padding to a static shape)
+/// and examples parallelise on the global compute pool — concurrent
+/// buckets share the one process-wide thread budget.
 ///
-/// Parameters are shared: every bucket's runner holds an `Arc` to the
-/// same `Params`, so a multi-bucket deployment keeps exactly one copy of
-/// the weights in memory (the old path cloned the full flat store per
-/// worker).
+/// The runner holds no weights of its own: it pins a
+/// [`ModelRegistry`] snapshot **once per batch**, so (a) a multi-bucket
+/// deployment keeps exactly one copy of each model's weights in memory,
+/// and (b) a hot-swap ([`ModelRegistry::reload`]) under live traffic can
+/// never mix weight generations inside a batch — in-flight batches
+/// finish on their pinned `Arc`, queued requests meet the new weights at
+/// the next flush.
 pub struct ReferenceRunner {
-    params: Arc<Params>,
-    cfg: ModelConfig,
+    registry: Arc<ModelRegistry>,
     bucket_len: usize,
     capacity: usize,
 }
 
 impl ReferenceRunner {
     pub fn new(
-        cfg: ModelConfig,
-        params: Arc<Params>,
+        registry: Arc<ModelRegistry>,
         bucket_len: usize,
         capacity: usize,
     ) -> ReferenceRunner {
-        assert!(
-            bucket_len <= cfg.max_len,
-            "bucket length {bucket_len} exceeds model max_len {}",
-            cfg.max_len
-        );
         assert!(capacity > 0, "capacity must be positive");
-        ReferenceRunner { params, cfg, bucket_len, capacity }
+        ReferenceRunner { registry, bucket_len, capacity }
     }
 }
 
@@ -268,7 +307,18 @@ impl BatchRunner for ReferenceRunner {
         self.bucket_len
     }
 
-    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+    fn run(
+        &self,
+        model: &str,
+        task: Task,
+        rows: &[Vec<u32>],
+    ) -> Result<BatchResult, String> {
+        // one snapshot pin per batch: everything below reads this entry
+        let entry = self
+            .registry
+            .get(model)
+            .ok_or_else(|| format!("model '{model}' not registered"))?;
+        let (params, cfg) = (&entry.params, &entry.cfg);
         if rows.len() > self.capacity {
             return Err(format!(
                 "batch of {} exceeds capacity {}",
@@ -287,13 +337,49 @@ impl BatchRunner for ReferenceRunner {
                     self.bucket_len
                 ));
             }
+            if row.len() > cfg.max_len {
+                return Err(format!(
+                    "row of {} tokens exceeds model '{model}' max_len {}",
+                    row.len(),
+                    cfg.max_len
+                ));
+            }
             if let Some(&t) =
-                row.iter().find(|&&t| t as usize >= self.cfg.vocab_size)
+                row.iter().find(|&&t| t as usize >= cfg.vocab_size)
             {
                 return Err(format!("token id {t} out of vocab"));
             }
         }
-        Ok(mlm_predict_batch(&self.params, &self.cfg, rows))
+        let outputs = match task {
+            Task::MlmPredict => mlm_predict_batch(params, cfg, rows)
+                .into_iter()
+                .map(TaskOutput::Tokens)
+                .collect(),
+            Task::Encode => encode_batch(params, cfg, rows)
+                .into_iter()
+                .map(TaskOutput::Hidden)
+                .collect(),
+            Task::Classify { head } => {
+                // the param spec carries exactly one classifier head
+                // (`cls/{w,b}`); reject others loudly rather than
+                // silently serving the wrong head
+                if head != 0 {
+                    return Err(format!(
+                        "model '{model}' has 1 classifier head, \
+                         requested head {head}"
+                    ));
+                }
+                classify_batch(params, cfg, rows)
+                    .into_iter()
+                    .map(|(id, logits)| TaskOutput::Class { id, logits })
+                    .collect()
+            }
+            Task::AttnCapture => attn_capture_batch(params, cfg, rows)
+                .into_iter()
+                .map(TaskOutput::Attn)
+                .collect(),
+        };
+        Ok(BatchResult { outputs, generation: entry.generation() })
     }
 }
 
@@ -301,6 +387,12 @@ impl BatchRunner for ReferenceRunner {
 /// parameter vector, pre-marshalled once (§Perf/L3: parameters are
 /// megabytes and constant across requests — re-marshalling them per batch
 /// was the largest fixed cost on the serving path).
+///
+/// A compiled executable is one `(model, program)` pair, so this runner
+/// serves `Task::MlmPredict` only and rejects other tasks.  The legacy
+/// PJRT deployment is bucket-per-model (length routing picks the
+/// compiled model), so the batch's model *name* is informational here —
+/// the reference path is the one that dispatches by name.
 ///
 /// PJRT handles hold `Rc` internals, so this is a [`LocalBatchRunner`]:
 /// the serving assembly wraps it in a [`PinnedRunner`].
@@ -338,7 +430,18 @@ impl LocalBatchRunner for XlaRunner {
         self.len
     }
 
-    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+    fn run(
+        &self,
+        _model: &str,
+        task: Task,
+        rows: &[Vec<u32>],
+    ) -> Result<BatchResult, String> {
+        if task != Task::MlmPredict {
+            return Err(format!(
+                "XlaRunner serves mlm_predict only (got {})",
+                task.name()
+            ));
+        }
         let live = rows.len();
         let padded = pad_batch(rows, self.batch, self.len);
         let tokens = Tensor::tokens(&padded);
@@ -348,20 +451,23 @@ impl LocalBatchRunner for XlaRunner {
             .map_err(|e| e.to_string())?;
         let preds =
             argmax_tokens(&outputs[0], self.batch, self.len, self.vocab);
-        Ok(preds
-            .into_iter()
-            .take(live)
-            .zip(rows)
-            .map(|(mut p, r)| {
-                p.truncate(r.len());
-                p
-            })
-            .collect())
+        Ok(BatchResult::unversioned(
+            preds
+                .into_iter()
+                .take(live)
+                .zip(rows)
+                .map(|(mut p, r)| {
+                    p.truncate(r.len());
+                    TaskOutput::Tokens(p)
+                })
+                .collect(),
+        ))
     }
 }
 
 /// Deterministic mock for coordinator tests: "predicts" each input token
-/// plus one, after an optional simulated service delay.
+/// plus one, after an optional simulated service delay.  Serves any
+/// `(model, task)` key with token-shaped output.
 pub struct MockRunner {
     pub capacity: usize,
     pub len: usize,
@@ -378,17 +484,27 @@ impl BatchRunner for MockRunner {
         self.len
     }
 
-    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+    fn run(
+        &self,
+        _model: &str,
+        _task: Task,
+        rows: &[Vec<u32>],
+    ) -> Result<BatchResult, String> {
         if self.fail {
             return Err("mock failure".into());
         }
         if !self.delay.is_zero() {
             std::thread::sleep(self.delay);
         }
-        Ok(rows
-            .iter()
-            .map(|r| r.iter().map(|&t| t + 1).collect())
-            .collect())
+        Ok(BatchResult::unversioned(
+            rows.iter()
+                .map(|r| {
+                    TaskOutput::Tokens(
+                        r.iter().map(|&t| t + 1).collect(),
+                    )
+                })
+                .collect(),
+        ))
     }
 }
 
@@ -437,17 +553,26 @@ impl<R: BatchRunner> BatchRunner for CountingRunner<R> {
         self.inner.offloads_compute()
     }
 
-    fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+    fn run(
+        &self,
+        model: &str,
+        task: Task,
+        rows: &[Vec<u32>],
+    ) -> Result<BatchResult, String> {
         use std::sync::atomic::Ordering;
         self.rows_run.fetch_add(rows.len(), Ordering::Relaxed);
         self.batches_run.fetch_add(1, Ordering::Relaxed);
-        self.inner.run(rows)
+        self.inner.run(model, task, rows)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::{
+        cls_logits_with, mlm_predict_batch, EncodeScratch, ModelConfig,
+        Params,
+    };
 
     #[test]
     fn pad_batch_shapes() {
@@ -476,59 +601,132 @@ mod tests {
         assert_eq!(preds, vec![vec![1, 0]]);
     }
 
+    fn one_model_registry(seed: u64) -> (Arc<ModelRegistry>, ModelConfig) {
+        let cfg = ModelConfig::tiny();
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register_init("default", cfg.clone(), seed).unwrap();
+        (reg, cfg)
+    }
+
     #[test]
     fn reference_runner_serves_ragged_batches() {
-        let cfg = ModelConfig::tiny();
-        let params = Arc::new(Params::init(&cfg, 0));
-        let r = ReferenceRunner::new(cfg.clone(), params, cfg.max_len, 4);
+        let (reg, cfg) = one_model_registry(0);
+        let r = ReferenceRunner::new(Arc::clone(&reg), cfg.max_len, 4);
         assert_eq!(r.capacity(), 4);
         assert_eq!(r.bucket_len(), cfg.max_len);
         let rows = vec![vec![1, 2, 3], vec![7; cfg.max_len], vec![5]];
-        let preds = r.run(&rows).unwrap();
-        assert_eq!(preds.len(), 3);
-        for (row, pred) in rows.iter().zip(&preds) {
+        let out = r.run("default", Task::MlmPredict, &rows).unwrap();
+        assert_eq!(out.outputs.len(), 3);
+        assert_eq!(out.generation, reg.get("default").unwrap().generation());
+        for (row, pred) in rows.iter().zip(&out.outputs) {
+            let TaskOutput::Tokens(pred) = pred else {
+                panic!("mlm_predict must return tokens")
+            };
             assert_eq!(pred.len(), row.len(), "one prediction per token");
             assert!(pred.iter().all(|&p| (p as usize) < cfg.vocab_size));
         }
         // deterministic: same batch, same predictions
-        assert_eq!(r.run(&rows).unwrap(), preds);
+        assert_eq!(r.run("default", Task::MlmPredict, &rows).unwrap(), out);
+        // unknown model fails the batch, not the process
+        assert!(r.run("ghost", Task::MlmPredict, &rows).is_err());
     }
 
     #[test]
-    fn reference_runners_share_one_params_allocation() {
-        // N bucket runners hold Arc refs to ONE Params — no per-worker
-        // weight clones, however many buckets a deployment configures
-        let cfg = ModelConfig::tiny();
-        let params = Arc::new(Params::init(&cfg, 9));
+    fn reference_runner_dispatches_every_task() {
+        let (reg, cfg) = one_model_registry(8);
+        let entry = reg.get("default").unwrap();
+        let r = ReferenceRunner::new(Arc::clone(&reg), cfg.max_len, 4);
+        let rows = vec![vec![1, 2, 3, 4], vec![9; 7]];
+
+        // MlmPredict matches the direct batched call bitwise
+        let out = r.run("default", Task::MlmPredict, &rows).unwrap();
+        let direct = mlm_predict_batch(&entry.params, &cfg, &rows);
+        for (o, d) in out.outputs.iter().zip(&direct) {
+            assert_eq!(o, &TaskOutput::Tokens(d.clone()));
+        }
+
+        // Encode returns (n × d_model) hidden states
+        let out = r.run("default", Task::Encode, &rows).unwrap();
+        for (o, row) in out.outputs.iter().zip(&rows) {
+            let TaskOutput::Hidden(m) = o else { panic!("hidden") };
+            assert_eq!((m.rows, m.cols), (row.len(), cfg.d_model));
+        }
+
+        // Classify head 0 matches the direct classifier bitwise
+        let out =
+            r.run("default", Task::Classify { head: 0 }, &rows).unwrap();
+        let mut scratch = EncodeScratch::with_threads(1);
+        for (o, row) in out.outputs.iter().zip(&rows) {
+            let TaskOutput::Class { id, logits } = o else {
+                panic!("class")
+            };
+            let direct =
+                cls_logits_with(&entry.params, &cfg, row, &mut scratch);
+            assert_eq!(logits, &direct.data);
+            assert!((*id as usize) < cfg.num_classes);
+        }
+        // …and a head the spec doesn't carry is a loud error
+        assert!(r
+            .run("default", Task::Classify { head: 1 }, &rows)
+            .is_err());
+
+        // AttnCapture returns [layer][head] matrices of the right shape
+        let out = r.run("default", Task::AttnCapture, &rows).unwrap();
+        for (o, row) in out.outputs.iter().zip(&rows) {
+            let TaskOutput::Attn(layers) = o else { panic!("attn") };
+            assert_eq!(layers.len(), cfg.n_layers);
+            assert_eq!(layers[0].len(), cfg.n_heads);
+            assert_eq!(layers[0][0].rows, row.len());
+        }
+
+        // every task reports the same pinned generation
+        assert_eq!(out.generation, entry.generation());
+    }
+
+    #[test]
+    fn reference_runner_sees_reloaded_weights_next_batch() {
+        let (reg, cfg) = one_model_registry(3);
+        let r = ReferenceRunner::new(Arc::clone(&reg), cfg.max_len, 2);
+        let rows = vec![vec![1, 2, 3]];
+        let g1 = r.run("default", Task::MlmPredict, &rows).unwrap().generation;
+        reg.reload("default", Arc::new(Params::init(&cfg, 99))).unwrap();
+        let g2 = r.run("default", Task::MlmPredict, &rows).unwrap().generation;
+        assert_ne!(g1, g2, "reload must be visible to the next batch");
+        assert_eq!(g2, reg.get("default").unwrap().generation());
+    }
+
+    #[test]
+    fn reference_runners_share_one_registry_snapshot() {
+        // N bucket runners hold Arcs to ONE registry — one copy of each
+        // model's weights, however many buckets a deployment configures
+        let (reg, cfg) = one_model_registry(9);
+        let entry = reg.get("default").unwrap();
         let runners: Vec<ReferenceRunner> = (0..4)
             .map(|i| {
-                ReferenceRunner::new(
-                    cfg.clone(),
-                    Arc::clone(&params),
-                    cfg.max_len,
-                    i + 1,
-                )
+                ReferenceRunner::new(Arc::clone(&reg), cfg.max_len, i + 1)
             })
             .collect();
-        assert_eq!(Arc::strong_count(&params), 1 + runners.len());
-        let base = params.flat.as_ptr();
+        // the weights have exactly one owner — the registry entry;
+        // runners hold the registry, never weight clones (entry pins
+        // taken inside run() are released before it returns)
+        assert_eq!(Arc::strong_count(&entry.params), 1);
         for r in &runners {
-            assert!(std::ptr::eq(r.params.flat.as_ptr(), base));
+            let out = r.run("default", Task::MlmPredict, &[vec![1]]).unwrap();
+            assert_eq!(out.generation, entry.generation());
         }
-        drop(runners);
-        assert_eq!(Arc::strong_count(&params), 1);
+        assert_eq!(Arc::strong_count(&entry.params), 1);
     }
 
     #[test]
     fn reference_runner_rejects_bad_input_without_panicking() {
-        let cfg = ModelConfig::tiny();
-        let params = Arc::new(Params::init(&cfg, 1));
-        let r = ReferenceRunner::new(cfg.clone(), params, 8, 2);
-        assert!(r.run(&[vec![1; 9]]).is_err(), "overlong row");
-        assert!(r.run(&[vec![1], vec![2], vec![3]]).is_err(), "over capacity");
-        assert!(r.run(&[vec![]]).is_err(), "empty row");
+        let (reg, cfg) = one_model_registry(1);
+        let r = ReferenceRunner::new(Arc::clone(&reg), 8, 2);
+        let run = |rows: &[Vec<u32>]| r.run("default", Task::MlmPredict, rows);
+        assert!(run(&[vec![1; 9]]).is_err(), "overlong row");
+        assert!(run(&[vec![1], vec![2], vec![3]]).is_err(), "over capacity");
+        assert!(run(&[vec![]]).is_err(), "empty row");
         let bad_token = cfg.vocab_size as u32;
-        assert!(r.run(&[vec![bad_token]]).is_err(), "out-of-vocab token");
+        assert!(run(&[vec![bad_token]]).is_err(), "out-of-vocab token");
     }
 
     #[test]
@@ -539,8 +737,9 @@ mod tests {
             delay: std::time::Duration::ZERO,
             fail: false,
         };
-        let out = m.run(&[vec![1, 2, 3]]).unwrap();
-        assert_eq!(out, vec![vec![2, 3, 4]]);
+        let out = m.run("default", Task::MlmPredict, &[vec![1, 2, 3]]).unwrap();
+        assert_eq!(out.outputs, vec![TaskOutput::Tokens(vec![2, 3, 4])]);
+        assert_eq!(out.generation, 0);
     }
 
     #[test]
@@ -551,7 +750,7 @@ mod tests {
             delay: std::time::Duration::ZERO,
             fail: true,
         };
-        assert!(m.run(&[vec![1]]).is_err());
+        assert!(m.run("default", Task::MlmPredict, &[vec![1]]).is_err());
     }
 
     #[test]
@@ -563,8 +762,8 @@ mod tests {
             fail: false,
         });
         let (rows, batches) = c.counters();
-        c.run(&[vec![1], vec![2]]).unwrap();
-        c.run(&[vec![3]]).unwrap();
+        c.run("default", Task::MlmPredict, &[vec![1], vec![2]]).unwrap();
+        c.run("default", Task::MlmPredict, &[vec![3]]).unwrap();
         use std::sync::atomic::Ordering;
         assert_eq!(rows.load(Ordering::Relaxed), 3);
         assert_eq!(batches.load(Ordering::Relaxed), 2);
@@ -582,12 +781,24 @@ mod tests {
         fn bucket_len(&self) -> usize {
             16
         }
-        fn run(&self, rows: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        fn run(
+            &self,
+            _model: &str,
+            _task: Task,
+            rows: &[Vec<u32>],
+        ) -> Result<BatchResult, String> {
             self.state.set(self.state.get() + 1);
-            Ok(rows
-                .iter()
-                .map(|r| r.iter().map(|&t| t + self.state.get()).collect())
-                .collect())
+            Ok(BatchResult::unversioned(
+                rows.iter()
+                    .map(|r| {
+                        TaskOutput::Tokens(
+                            r.iter()
+                                .map(|&t| t + self.state.get())
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ))
         }
     }
 
@@ -607,13 +818,16 @@ mod tests {
         for _ in 0..4 {
             let p = Arc::clone(&pinned);
             handles.push(std::thread::spawn(move || {
-                p.run(&[vec![10, 20]]).unwrap()
+                p.run("default", Task::MlmPredict, &[vec![10, 20]]).unwrap()
             }));
         }
         for h in handles {
             let out = h.join().unwrap();
-            assert_eq!(out[0].len(), 2);
-            assert!(out[0][0] > 10, "state advanced: {out:?}");
+            let TaskOutput::Tokens(t) = &out.outputs[0] else {
+                panic!("tokens")
+            };
+            assert_eq!(t.len(), 2);
+            assert!(t[0] > 10, "state advanced: {out:?}");
         }
     }
 

@@ -9,10 +9,11 @@
 //!   modes, nonuniform-k, pool/conv projections) + fused AdamW train step,
 //!   AOT-lowered to HLO text artifacts with a JSON manifest.
 //! - **L3** (this crate): PJRT runtime (behind the `pjrt` feature),
-//!   deadline-aware serving scheduler (length-bucketed EDF batching,
-//!   admission control, load shedding, cancellation, metrics), training
-//!   and fine-tuning drivers, and the analyses behind every paper
-//!   table/figure.
+//!   multi-tenant deadline-aware serving scheduler (model registry with
+//!   zero-downtime weight hot-swap, `(model, task, bucket)`-keyed EDF
+//!   batching, admission control, load shedding, cancellation,
+//!   per-model metrics), training and fine-tuning drivers, and the
+//!   analyses behind every paper table/figure.
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! `repro` binary is self-contained.

@@ -6,13 +6,17 @@
 //! ```text
 //! repro pretrain    Fig 3  — MLM pretraining (single run or sweeps)
 //! repro finetune    Table 2 — downstream fine-tuning on synthetic tasks
-//! repro serve       serving demo: coordinator + synthetic load
+//! repro serve       serving demo: multi-tenant coordinator + load
+//! repro reload      zero-downtime weight hot-swap demonstration
 //! repro spectrum    Fig 1  — attention-spectrum analysis
 //! repro complexity  Table 1 — analytic complexity table
 //! repro efficiency  Table 3 — inference time & memory-saving grid
 //! ```
 
 use linformer::analysis::{self, complexity::Arch};
+use linformer::coordinator::ModelRegistry;
+#[cfg(not(feature = "pjrt"))]
+use linformer::coordinator::Task;
 use linformer::model::{Attention, ModelConfig, Params};
 #[cfg(feature = "pjrt")]
 use linformer::runtime::Engine;
@@ -23,6 +27,7 @@ use linformer::training::{
     finetune, FinetuneConfig, LrSchedule, TrainConfig, Trainer,
 };
 use linformer::util::cli::Args;
+use std::sync::Arc;
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -37,6 +42,7 @@ fn main() {
         "fig3" => cmd_fig3(argv),
         "table2" => cmd_table2(argv),
         "serve" => cmd_serve(argv),
+        "reload" => cmd_reload(argv),
         "spectrum" => cmd_spectrum(argv),
         "complexity" => cmd_complexity(argv),
         "efficiency" => cmd_efficiency(argv),
@@ -63,7 +69,9 @@ fn print_usage() {
          commands:\n  \
          pretrain    MLM pretraining (Fig 3)\n  \
          finetune    downstream fine-tuning (Table 2)\n  \
-         serve       serving demo with synthetic load\n  \
+         serve       multi-tenant serving demo with synthetic load\n  \
+         reload      weight hot-swap under live traffic (no drops,\n              \
+                     no mixed-generation batches)\n  \
          spectrum    attention spectrum analysis (Fig 1)\n  \
          complexity  analytic complexity table (Table 1)\n  \
          efficiency  inference efficiency grid (Table 3)\n  \
@@ -368,10 +376,95 @@ fn cmd_finetune(argv: Vec<String>) -> Result<(), AnyError> {
 // serve
 // ---------------------------------------------------------------------------
 
+/// Parse a `--tasks` mix ("mlm_predict,encode,classify,attn_capture").
+#[cfg(not(feature = "pjrt"))]
+fn parse_tasks(spec: &str) -> Result<Vec<Task>, AnyError> {
+    spec.split(',')
+        .map(|name| {
+            let name = name.trim();
+            Task::from_name(name)
+                .ok_or_else(|| format!("unknown task '{name}'").into())
+        })
+        .collect()
+}
+
+/// Build the serve/reload registry: `[[model]]` tables from `--config`
+/// first, then repeatable `--model name=<ckpt.bin|init[:seed]>` flags.
+/// With neither, one fresh-init model named "default" (the pre-registry
+/// behavior).  All entries share the demo `cfg`.
+#[cfg(not(feature = "pjrt"))]
+fn build_cli_registry(
+    cfg: &ModelConfig,
+    tables: &[serving::config::ModelTable],
+    flags: &[&str],
+) -> Result<Arc<ModelRegistry>, AnyError> {
+    let registry = Arc::new(ModelRegistry::new());
+    for t in tables {
+        match &t.checkpoint {
+            Some(path) => {
+                registry.register_checkpoint(&t.name, cfg.clone(), path)?
+            }
+            None => registry.register_init(&t.name, cfg.clone(), t.seed)?,
+        };
+        println!(
+            "[serve] registered model '{}' ({})",
+            t.name,
+            t.checkpoint.as_deref().unwrap_or("fresh init")
+        );
+    }
+    for spec in flags {
+        let (name, source) = spec.split_once('=').ok_or_else(|| {
+            format!("--model expects name=<ckpt.bin|init[:seed]>, got '{spec}'")
+        })?;
+        let init_seed = if source == "init" {
+            Some(0)
+        } else if let Some(s) = source.strip_prefix("init:") {
+            Some(
+                s.parse::<u64>()
+                    .map_err(|_| format!("bad init seed '{s}'"))?,
+            )
+        } else {
+            None
+        };
+        match init_seed {
+            Some(seed) => {
+                registry.register_init(name, cfg.clone(), seed)?;
+                println!(
+                    "[serve] registered model '{name}' (init seed {seed})"
+                );
+            }
+            None => {
+                registry.register_checkpoint(name, cfg.clone(), source)?;
+                println!("[serve] registered model '{name}' ({source})");
+            }
+        }
+    }
+    if registry.is_empty() {
+        registry.register_init("default", cfg.clone(), 0)?;
+        println!("[serve] registered model 'default' (fresh init)");
+    }
+    Ok(registry)
+}
+
+/// The demo model architecture `serve`/`reload` register their models
+/// with (checkpoints must match its param spec).
+fn demo_model_config() -> ModelConfig {
+    let mut cfg = ModelConfig::tiny();
+    cfg.max_len = 128;
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.d_ff = 128;
+    cfg.k_proj = 32;
+    cfg.vocab_size = 512;
+    cfg
+}
+
 /// Without PJRT, `serve` runs the same scheduler stack on the pure-Rust
-/// batched reference encoder (fresh-init weights) — the end-to-end demo
-/// of `encode_batch` on a clean machine.  With `--trace` it replays a
-/// JSON trace open-loop through the deadline scheduler and prints the
+/// batched reference encoder — the end-to-end multi-tenant demo on a
+/// clean machine: every `--model` (or `[[model]]` table in `--config`)
+/// registers one named model behind the one scheduler, and `--tasks`
+/// mixes task kinds across them.  With `--trace` it replays a JSON
+/// trace open-loop through the deadline scheduler and prints the
 /// machine-readable outcome summary (served / rejected / shed /
 /// deadline-missed) used for policy diffs.
 #[cfg(not(feature = "pjrt"))]
@@ -382,6 +475,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
             ("requests", "synthetic requests to send (default 64)"),
             ("clients", "client threads (default 4)"),
             ("seed", "rng seed"),
+            ("config", "TOML launcher config ([[model]] tables etc.)"),
+            (
+                "model",
+                "register name=<ckpt.bin|init[:seed]> (repeatable)",
+            ),
+            (
+                "tasks",
+                "comma-separated task mix (default mlm_predict; \
+                 mlm_predict,encode,classify,attn_capture)",
+            ),
             ("trace", "replay a JSON trace file through the scheduler"),
             ("slo-ms", "interactive SLO when tagging a trace (default 50)"),
             (
@@ -391,38 +494,63 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
             ("policy", "edf (default) or fifo (legacy baseline)"),
         ],
     )?;
-    let mut cfg = ModelConfig::tiny();
-    cfg.max_len = 128;
-    cfg.d_model = 64;
-    cfg.n_heads = 4;
-    cfg.d_ff = 128;
-    cfg.k_proj = 32;
-    cfg.vocab_size = 512;
-    let params = std::sync::Arc::new(Params::init(&cfg, 0));
-    let mut bc = serving::default_config(cfg.k_proj);
-    match args.str_or("policy", "edf").as_str() {
-        "edf" => {}
-        "fifo" => {
+    let cfg = demo_model_config();
+    // --config takes the whole batcher section; otherwise the serving
+    // defaults tuned for the Linformer cost model
+    let (launcher, mut bc) = match args.get("config") {
+        Some(path) => {
+            let l = serving::LauncherConfig::from_file(path)?;
+            let b = l.batcher.clone();
+            (l, b)
+        }
+        None => (
+            Default::default(),
+            serving::default_config(cfg.k_proj),
+        ),
+    };
+    // an explicit --policy overrides whatever --config chose (the flag
+    // absent leaves the config/default policy untouched)
+    match args.get("policy") {
+        None => {}
+        Some("edf") => {
+            bc.policy = linformer::coordinator::SchedPolicy::Edf;
+            bc.admission = true;
+            bc.shed_expired = true;
+        }
+        Some("fifo") => {
             // the legacy baseline: arrival order, no admission, no shed
             bc.policy = linformer::coordinator::SchedPolicy::Fifo;
             bc.admission = false;
             bc.shed_expired = false;
         }
-        other => return Err(format!("unknown policy '{other}'").into()),
+        Some(other) => return Err(format!("unknown policy '{other}'").into()),
     }
+    let policy_label = match bc.policy {
+        linformer::coordinator::SchedPolicy::Fifo => "fifo",
+        linformer::coordinator::SchedPolicy::Edf => "edf",
+    };
+    let registry = build_cli_registry(
+        &cfg,
+        &launcher.model_tables,
+        &args.all("model"),
+    )?;
+    let models = registry.names();
+    let tasks = parse_tasks(&args.str_or("tasks", "mlm_predict"))?;
     println!(
         "[serve] pjrt feature off — serving the pure-Rust reference \
-         encoder (n={}, k={}, policy={})",
+         encoder (n={}, k={}, policy={policy_label}, {} model(s) × {} \
+         task(s))",
         cfg.max_len,
         cfg.k_proj,
-        args.str_or("policy", "edf")
+        models.len(),
+        tasks.len()
     );
-    let coord = serving::build_reference_coordinator(
-        &cfg,
-        &params,
+    let coord = serving::build_registry_coordinator(
+        std::sync::Arc::clone(&registry),
         &[(64, 8), (128, 4)],
         bc,
     );
+    let seed = args.usize_or("seed", 0)? as u64;
     if let Some(path) = args.get("trace") {
         let text = std::fs::read_to_string(path)?;
         let mut trace = serving::trace::from_json(&text)?;
@@ -432,7 +560,29 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
                 &mut trace,
                 args.f64_or("interactive-frac", 0.7)?,
                 args.f64_or("slo-ms", 50.0)? / 1e3,
-                args.usize_or("seed", 0)? as u64,
+                seed,
+            );
+        }
+        // models and tasks are assigned independently: an un-modeled
+        // trace gets spread across a multi-model deployment, and an
+        // explicit --tasks always retags (the user's flag wins) — but a
+        // trace carrying its own task fields is never clobbered by the
+        // --tasks *default*
+        let model_mix: Vec<String> = if models.len() > 1
+            && trace.iter().all(|e| e.model.is_none())
+        {
+            models.clone()
+        } else {
+            Vec::new()
+        };
+        let task_mix: Vec<Task> = if args.get("tasks").is_some() {
+            tasks.clone()
+        } else {
+            Vec::new()
+        };
+        if !model_mix.is_empty() || !task_mix.is_empty() {
+            serving::trace::assign_tenants(
+                &mut trace, &model_mix, &task_mix, seed,
             );
         }
         println!("[serve] replaying {} events from {path}…", trace.len());
@@ -443,12 +593,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
         let total = args.usize_or("requests", 64)?;
         let clients = args.usize_or("clients", 4)?;
         println!("[serve] sending {total} requests from {clients} clients…");
-        let report = serving::run_load(
+        let model_mix: Vec<String> =
+            if models.len() > 1 { models.clone() } else { Vec::new() };
+        let report = serving::run_load_mix(
             &coord,
             cfg.vocab_size,
             total,
             clients,
-            args.usize_or("seed", 0)? as u64,
+            seed,
+            &model_mix,
+            &tasks,
         );
         println!(
             "[serve] completed {}/{} ({} rejected) in {:.2}s — {:.1} req/s, \
@@ -464,6 +618,152 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
     }
     println!("[serve] metrics: {}", coord.metrics.to_json());
     coord.shutdown();
+    Ok(())
+}
+
+/// Zero-downtime hot-swap demonstration (runs on the reference path,
+/// with or without PJRT): flood the coordinator from client threads,
+/// [`ModelRegistry::reload`] the default model's weights mid-burst, and
+/// verify from the responses that (a) every request was served — the
+/// swaps dropped nothing — and (b) no batch mixed weight generations
+/// (all responses sharing a `batch_id` carry one generation).
+fn cmd_reload(argv: Vec<String>) -> Result<(), AnyError> {
+    let args = Args::parse(
+        argv,
+        &[
+            ("requests", "requests to flood (default 400)"),
+            ("clients", "client threads (default 4)"),
+            ("swaps", "hot-swaps to perform mid-burst (default 3)"),
+            (
+                "checkpoint",
+                "reload weights from this checkpoint (default: fresh \
+                 inits with rotating seeds)",
+            ),
+            ("seed", "rng seed"),
+        ],
+    )?;
+    let mut cfg = demo_model_config();
+    cfg.max_len = 64; // keep the flood fast on small machines
+    let registry = Arc::new(ModelRegistry::new());
+    registry.register_init("default", cfg.clone(), 0)?;
+    let coord = serving::build_registry_coordinator(
+        Arc::clone(&registry),
+        &[(32, 8), (64, 4)],
+        serving::default_config(cfg.k_proj),
+    );
+    let total = args.usize_or("requests", 400)?;
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let swaps = args.usize_or("swaps", 3)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    println!(
+        "[reload] flooding {total} requests from {clients} clients, \
+         {swaps} hot-swap(s) mid-burst…"
+    );
+    // (batch_id, generation) per served response, collected per client
+    let mut observed: Vec<(u64, u64)> = Vec::with_capacity(total);
+    let mut unserved = 0usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let share = total / clients + usize::from(c < total % clients);
+            let coord = &coord;
+            let vocab = cfg.vocab_size;
+            let max_len = cfg.max_len;
+            handles.push(scope.spawn(move || {
+                let mut rng =
+                    linformer::util::rng::Pcg32::new(seed, c as u64 + 1);
+                let mut seen = Vec::with_capacity(share);
+                let mut missed = 0usize;
+                for _ in 0..share {
+                    let len = 1 + rng.below(max_len as u32) as usize;
+                    let tokens: Vec<u32> =
+                        (0..len).map(|_| rng.below(vocab as u32)).collect();
+                    match coord.submit(tokens) {
+                        Ok(t) => match t
+                            .wait_timeout(std::time::Duration::from_secs(120))
+                        {
+                            Ok(r)
+                                if r.outcome
+                                    == linformer::coordinator::Outcome::Served =>
+                            {
+                                seen.push((r.batch_id, r.generation))
+                            }
+                            _ => missed += 1,
+                        },
+                        Err(_) => missed += 1,
+                    }
+                }
+                (seen, missed)
+            }));
+        }
+        // perform the swaps while the flood runs
+        for s in 0..swaps {
+            std::thread::sleep(std::time::Duration::from_millis(150));
+            let version = match args.get("checkpoint") {
+                Some(path) => registry.reload_checkpoint("default", path),
+                None => registry.reload(
+                    "default",
+                    Arc::new(Params::init(&cfg, seed + 1 + s as u64)),
+                ),
+            };
+            match version {
+                Ok(v) => println!(
+                    "[reload] swap {} → version {v} (generation {})",
+                    s + 1,
+                    registry.get("default").unwrap().generation()
+                ),
+                Err(e) => eprintln!("[reload] swap {} failed: {e}", s + 1),
+            }
+        }
+        for h in handles {
+            let (seen, missed) = h.join().expect("client thread");
+            observed.extend(seen);
+            unserved += missed;
+        }
+    });
+    // -- verify: every batch is single-generation ----------------------
+    let mut by_batch: std::collections::BTreeMap<
+        u64,
+        std::collections::BTreeSet<u64>,
+    > = Default::default();
+    let mut by_gen: std::collections::BTreeMap<u64, usize> = Default::default();
+    for &(batch, gen) in &observed {
+        by_batch.entry(batch).or_default().insert(gen);
+        *by_gen.entry(gen).or_default() += 1;
+    }
+    let mixed: Vec<u64> = by_batch
+        .iter()
+        .filter(|(_, gens)| gens.len() > 1)
+        .map(|(b, _)| *b)
+        .collect();
+    println!(
+        "[reload] served {}/{total} across {} batches and {} weight \
+         generation(s):",
+        observed.len(),
+        by_batch.len(),
+        by_gen.len()
+    );
+    for (gen, count) in &by_gen {
+        println!("  generation {gen}: {count} responses");
+    }
+    println!("[reload] metrics: {}", coord.metrics.to_json());
+    coord.shutdown();
+    if !mixed.is_empty() {
+        return Err(format!(
+            "{} batch(es) mixed weight generations: {mixed:?}",
+            mixed.len()
+        )
+        .into());
+    }
+    if unserved > 0 {
+        return Err(format!(
+            "{unserved} request(s) not served — a hot-swap dropped traffic"
+        )
+        .into());
+    }
+    println!(
+        "[reload] OK — no request dropped, no batch mixed generations"
+    );
     Ok(())
 }
 

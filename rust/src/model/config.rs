@@ -126,11 +126,26 @@ impl ModelConfig {
             if ks.len() != self.n_layers {
                 return Err(ConfigError("k_schedule length != n_layers".into()));
             }
+            if let Some(l) = ks.iter().position(|&k| k == 0) {
+                return Err(ConfigError(format!(
+                    "k_schedule layer {l} has k=0"
+                )));
+            }
         }
-        if matches!(self.proj_mode, ProjMode::Pool | ProjMode::Conv)
-            && self.max_len % self.k_proj != 0
-        {
-            return Err(ConfigError("pool/conv requires k | n".into()));
+        if matches!(self.proj_mode, ProjMode::Pool | ProjMode::Conv) {
+            // every *per-layer* k must divide max_len, not just k_proj —
+            // a k_schedule entry that doesn't breaks pool_into/conv_into
+            // windowing (conv windows outgrow the learned kernel)
+            for l in 0..self.n_layers {
+                let k = self.layer_k(l);
+                if k == 0 || self.max_len % k != 0 {
+                    return Err(ConfigError(format!(
+                        "pool/conv requires k | n for every layer: \
+                         layer {l} has k={k}, max_len={}",
+                        self.max_len
+                    )));
+                }
+            }
         }
         Ok(())
     }
@@ -195,6 +210,32 @@ mod tests {
     fn rejects_bad_heads() {
         let mut cfg = ModelConfig::tiny();
         cfg.n_heads = 3;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn pool_conv_validate_every_scheduled_k() {
+        // regression: only k_proj used to be divisibility-checked — a
+        // k_schedule entry that doesn't divide max_len slipped through
+        // and broke pool/conv windowing at runtime
+        let mut cfg = ModelConfig::tiny(); // max_len 32, 2 layers
+        cfg.proj_mode = ProjMode::Pool;
+        cfg.k_proj = 8;
+        cfg.k_schedule = Some(vec![8, 5]); // 5 ∤ 32
+        assert!(cfg.validate().is_err());
+        cfg.k_schedule = Some(vec![8, 4]);
+        assert!(cfg.validate().is_ok());
+        cfg.proj_mode = ProjMode::Conv;
+        cfg.k_schedule = Some(vec![16, 5]);
+        assert!(cfg.validate().is_err());
+        cfg.k_schedule = Some(vec![16, 8]);
+        assert!(cfg.validate().is_ok());
+        // linear projections window nothing: non-dividing k stays legal
+        cfg.proj_mode = ProjMode::Linear;
+        cfg.k_schedule = Some(vec![8, 5]);
+        assert!(cfg.validate().is_ok());
+        // k = 0 is never a valid projected dimension
+        cfg.k_schedule = Some(vec![8, 0]);
         assert!(cfg.validate().is_err());
     }
 

@@ -103,6 +103,7 @@ struct LayerHandles {
 /// store's process-unique [`Params::generation`] — clones of a store
 /// share it, distinct stores never do, so a freed-and-reused allocation
 /// can't alias a stale cache).
+#[derive(Clone)]
 pub struct EncoderHandles {
     /// [`Params::generation`] of the store this was built against — a
     /// process-unique id, so a dropped store whose allocation gets
@@ -120,6 +121,8 @@ pub struct EncoderHandles {
     mlm_ln_scale: ParamHandle,
     mlm_ln_bias: ParamHandle,
     mlm_out_bias: ParamHandle,
+    cls_w: ParamHandle,
+    cls_b: ParamHandle,
     layers: Vec<LayerHandles>,
 }
 
@@ -128,10 +131,20 @@ impl EncoderHandles {
     /// the only place the encoder builds name strings; panics (like the
     /// old per-call lookups) if the store is missing a tensor.
     pub fn build(params: &Params, cfg: &ModelConfig) -> EncoderHandles {
+        Self::try_build(params, cfg).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible twin of [`Self::build`] — the model registry uses it to
+    /// reject a parameter store missing encoder tensors at registration
+    /// time, instead of panicking on a worker thread mid-batch.
+    pub fn try_build(
+        params: &Params,
+        cfg: &ModelConfig,
+    ) -> Result<EncoderHandles, String> {
         let get = |name: &str| {
             params
                 .handle(name)
-                .unwrap_or_else(|e| panic!("encoder handles: {e}"))
+                .map_err(|e| format!("encoder handles: {e}"))
         };
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
@@ -143,14 +156,14 @@ impl EncoderHandles {
                 (Attention::Linformer, ProjMode::Conv) => {
                     let (e, f) = match cfg.sharing {
                         Sharing::Layerwise => {
-                            let w = get("proj/conv_w");
+                            let w = get("proj/conv_w")?;
                             (w, w)
                         }
                         Sharing::Headwise => {
-                            (lget("conv_w"), lget("conv_w_f"))
+                            (lget("conv_w")?, lget("conv_w_f")?)
                         }
                         _ => {
-                            let w = lget("conv_w");
+                            let w = lget("conv_w")?;
                             (w, w)
                         }
                     };
@@ -159,62 +172,64 @@ impl EncoderHandles {
                 (Attention::Linformer, ProjMode::Linear) => {
                     match cfg.sharing {
                         Sharing::Layerwise => {
-                            let e = get("proj/E");
+                            let e = get("proj/E")?;
                             ProjHandles::Linear { e, f: e, per_head: false }
                         }
                         Sharing::KeyValue => {
-                            let e = lget("E");
+                            let e = lget("E")?;
                             ProjHandles::Linear { e, f: e, per_head: false }
                         }
                         Sharing::Headwise => ProjHandles::Linear {
-                            e: lget("E"),
-                            f: lget("F"),
+                            e: lget("E")?,
+                            f: lget("F")?,
                             per_head: false,
                         },
                         Sharing::None => ProjHandles::Linear {
-                            e: lget("E"),
-                            f: lget("F"),
+                            e: lget("E")?,
+                            f: lget("F")?,
                             per_head: true,
                         },
                     }
                 }
             };
             layers.push(LayerHandles {
-                ln1_scale: lget("ln1_scale"),
-                ln1_bias: lget("ln1_bias"),
-                wq: lget("wq"),
-                bq: lget("bq"),
-                wk: lget("wk"),
-                bk: lget("bk"),
-                wv: lget("wv"),
-                bv: lget("bv"),
-                wo: lget("wo"),
-                bo: lget("bo"),
-                ln2_scale: lget("ln2_scale"),
-                ln2_bias: lget("ln2_bias"),
-                ffn_w1: lget("ffn_w1"),
-                ffn_b1: lget("ffn_b1"),
-                ffn_w2: lget("ffn_w2"),
-                ffn_b2: lget("ffn_b2"),
+                ln1_scale: lget("ln1_scale")?,
+                ln1_bias: lget("ln1_bias")?,
+                wq: lget("wq")?,
+                bq: lget("bq")?,
+                wk: lget("wk")?,
+                bk: lget("bk")?,
+                wv: lget("wv")?,
+                bv: lget("bv")?,
+                wo: lget("wo")?,
+                bo: lget("bo")?,
+                ln2_scale: lget("ln2_scale")?,
+                ln2_bias: lget("ln2_bias")?,
+                ffn_w1: lget("ffn_w1")?,
+                ffn_b1: lget("ffn_b1")?,
+                ffn_w2: lget("ffn_w2")?,
+                ffn_b2: lget("ffn_b2")?,
                 proj,
             });
         }
-        EncoderHandles {
+        Ok(EncoderHandles {
             params_gen: params.generation(),
             cfg: cfg.clone(),
-            tok_emb: get("embed/tokens"),
-            pos_emb: get("embed/positions"),
-            embed_ln_scale: get("embed/ln_scale"),
-            embed_ln_bias: get("embed/ln_bias"),
-            final_ln_scale: get("final/ln_scale"),
-            final_ln_bias: get("final/ln_bias"),
-            mlm_dense_w: get("mlm/dense_w"),
-            mlm_dense_b: get("mlm/dense_b"),
-            mlm_ln_scale: get("mlm/ln_scale"),
-            mlm_ln_bias: get("mlm/ln_bias"),
-            mlm_out_bias: get("mlm/out_bias"),
+            tok_emb: get("embed/tokens")?,
+            pos_emb: get("embed/positions")?,
+            embed_ln_scale: get("embed/ln_scale")?,
+            embed_ln_bias: get("embed/ln_bias")?,
+            final_ln_scale: get("final/ln_scale")?,
+            final_ln_bias: get("final/ln_bias")?,
+            mlm_dense_w: get("mlm/dense_w")?,
+            mlm_dense_b: get("mlm/dense_b")?,
+            mlm_ln_scale: get("mlm/ln_scale")?,
+            mlm_ln_bias: get("mlm/ln_bias")?,
+            mlm_out_bias: get("mlm/out_bias")?,
+            cls_w: get("cls/w")?,
+            cls_b: get("cls/b")?,
             layers,
-        }
+        })
     }
 
     /// Whether these handles were built against this exact `(params,
@@ -256,6 +271,14 @@ impl EncodeScratch {
     /// Scratch whose big GEMMs may use up to [`gemm::max_threads`] workers.
     pub fn new() -> EncodeScratch {
         Self::with_threads(gemm::max_threads())
+    }
+
+    /// Scratch pre-warmed with prebuilt handles (e.g. a model-registry
+    /// entry's) — the first call skips the name-resolve pass entirely.
+    pub fn with_handles(handles: EncoderHandles) -> EncodeScratch {
+        let mut s = Self::new();
+        s.handles = Some(handles);
+        s
     }
 
     /// Scratch with an explicit intra-GEMM worker cap (use 1 when the
@@ -711,6 +734,76 @@ pub fn mlm_predict_batch(
         .collect()
 }
 
+/// Classifier-head logits for one example (mirror of Python
+/// `cls_logits`): the position-0 ([CLS]) hidden state through the
+/// `cls/{w,b}` linear head.  Returns a (1 × num_classes) matrix.
+pub fn cls_logits_with(
+    params: &Params,
+    cfg: &ModelConfig,
+    tokens: &[u32],
+    scratch: &mut EncodeScratch,
+) -> Mat {
+    let hidden = encode_with(params, cfg, tokens, false, scratch).hidden;
+    // handles were just interned (or validated) by encode_with
+    let hd = scratch.handles.take().expect("handles interned by encode");
+    let cls = MatView::new(hidden.row(0), 1, cfg.d_model, cfg.d_model);
+    let mut logits = Mat::zeros(0, 0);
+    gemm::matmul_view(cls, params.view_at(hd.cls_w), &mut logits, 1);
+    logits.add_row_vec(params.slice(hd.cls_b));
+    scratch.handles = Some(hd);
+    logits
+}
+
+/// Batched classifier head — the serving path behind
+/// [`crate::coordinator::Task::Classify`].  Per sequence: the winning
+/// class id plus the raw logits (so callers can compare bitwise against
+/// a direct [`cls_logits_with`] call).  Parallelised across examples
+/// like [`encode_batch`].
+pub fn classify_batch(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+) -> Vec<(u32, Vec<f32>)> {
+    batch_map(seqs.len(), gemm::max_threads(), |scratch, i| {
+        cls_logits_with(params, cfg, &seqs[i], scratch)
+    })
+    .into_iter()
+    .map(|logits| {
+        let row = logits.row(0);
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &x) in row.iter().enumerate() {
+            if x > best_v {
+                best_v = x;
+                best = i;
+            }
+        }
+        (best as u32, row.to_vec())
+    })
+    .collect()
+}
+
+/// Batched attention capture — the serving path behind
+/// [`crate::coordinator::Task::AttnCapture`].  Per sequence: the
+/// `[layer][head]` attention matrices.  Capture output dominates the
+/// cost (it materializes O(n·k) per head), so this runs serially on one
+/// reused scratch rather than striping across the pool.
+pub fn attn_capture_batch(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+) -> Vec<Vec<Vec<Mat>>> {
+    let mut scratch = EncodeScratch::new();
+    seqs.iter()
+        .map(|s| {
+            encode_with(params, cfg, s, true, &mut scratch)
+                .capture
+                .expect("capture requested")
+                .matrices
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -976,6 +1069,76 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn cls_logits_shape_and_batch_match() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 21);
+        let seqs = vec![toks(&cfg, 5, 50), toks(&cfg, cfg.max_len, 51)];
+        let mut scratch = EncodeScratch::with_threads(1);
+        let direct: Vec<Mat> = seqs
+            .iter()
+            .map(|s| cls_logits_with(&p, &cfg, s, &mut scratch))
+            .collect();
+        assert!(direct
+            .iter()
+            .all(|m| m.rows == 1 && m.cols == cfg.num_classes));
+        let batched = classify_batch(&p, &cfg, &seqs);
+        assert_eq!(batched.len(), 2);
+        for ((id, logits), m) in batched.iter().zip(&direct) {
+            assert_eq!(logits, &m.data, "batched logits diverged");
+            assert!((*id as usize) < cfg.num_classes);
+            // id is the argmax of the logits it ships with
+            let best = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(*id as usize, best);
+        }
+    }
+
+    #[test]
+    fn try_build_reports_missing_tensors_instead_of_panicking() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 22);
+        assert!(EncoderHandles::try_build(&p, &cfg).is_ok());
+        // a config wanting more layers than the store has must error
+        let mut deeper = cfg.clone();
+        deeper.n_layers += 1;
+        let err = EncoderHandles::try_build(&p, &deeper).unwrap_err();
+        assert!(err.contains("layer2"), "{err}");
+    }
+
+    #[test]
+    fn scratch_with_handles_starts_warm_and_correct() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 23);
+        let hd = EncoderHandles::build(&p, &cfg);
+        let mut warm = EncodeScratch::with_handles(hd);
+        let t = toks(&cfg, 9, 52);
+        let out = encode_with(&p, &cfg, &t, false, &mut warm);
+        assert_eq!(out.hidden.data, encode(&p, &cfg, &t, false).hidden.data);
+    }
+
+    #[test]
+    fn attn_capture_batch_matches_single_capture() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 24);
+        let seqs = vec![toks(&cfg, 6, 53), toks(&cfg, 12, 54)];
+        let batched = attn_capture_batch(&p, &cfg, &seqs);
+        assert_eq!(batched.len(), 2);
+        for (s, mats) in seqs.iter().zip(&batched) {
+            let single =
+                encode(&p, &cfg, s, true).capture.unwrap().matrices;
+            assert_eq!(mats.len(), cfg.n_layers);
+            for (a, b) in mats.iter().flatten().zip(single.iter().flatten())
+            {
+                assert_eq!(a.data, b.data, "capture diverged");
+            }
+        }
     }
 
     #[test]

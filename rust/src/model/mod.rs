@@ -11,7 +11,8 @@ pub mod params;
 
 pub use config::{Attention, ModelConfig, ProjMode, Sharing};
 pub use encoder::{
-    encode, encode_batch, encode_with, mlm_logits, mlm_logits_batch,
+    attn_capture_batch, classify_batch, cls_logits_with, encode,
+    encode_batch, encode_with, mlm_logits, mlm_logits_batch,
     mlm_logits_with, mlm_predict_batch, AttnCapture, EncodeOut,
     EncodeScratch, EncoderHandles,
 };

@@ -4,7 +4,7 @@
 //!
 //! ```toml
 //! [serving]
-//! models = ["tiny", "serve_128"]
+//! models = ["tiny", "serve_128"]   # PJRT path: manifest bucket models
 //! queue_capacity = 512
 //! max_delay_ms = 10
 //! merge_up = true
@@ -14,6 +14,18 @@
 //! admission = true             # deadline admission control
 //! shed_expired = true          # drop expired queued requests
 //! max_inflight = 2             # in-flight batches per bucket
+//!
+//! # Reference path: each [[model]] table registers one named model in
+//! # the coordinator's ModelRegistry (first table = the default model).
+//! # Weights come from a checkpoint's `params` slot, or a seeded init
+//! # when no checkpoint is given.  `repro reload` swaps them live.
+//! [[model]]
+//! name = "tiny"
+//! seed = 0
+//!
+//! [[model]]
+//! name = "longdoc"
+//! checkpoint = "ckpt/longdoc.bin"
 //!
 //! [training]
 //! steps = 200
@@ -39,10 +51,23 @@ pub enum ConfigError {
     Invalid(String),
 }
 
+/// One `[[model]]` table: a named registry entry's weight source.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelTable {
+    pub name: String,
+    /// Checkpoint path holding a `params` slot; `None` = seeded init.
+    pub checkpoint: Option<String>,
+    /// Init seed when no checkpoint is given.
+    pub seed: u64,
+}
+
 /// Parsed launcher file.
 #[derive(Debug)]
 pub struct LauncherConfig {
     pub models: Vec<String>,
+    /// Registry entries for the reference path (`[[model]]` tables, in
+    /// file order — the first is the coordinator's default model).
+    pub model_tables: Vec<ModelTable>,
     pub batcher: BatcherConfig,
     pub train: TrainConfig,
     pub artifacts_dir: String,
@@ -52,6 +77,7 @@ impl Default for LauncherConfig {
     fn default() -> Self {
         LauncherConfig {
             models: vec!["tiny".into(), "serve_128".into()],
+            model_tables: Vec::new(),
             batcher: BatcherConfig::default(),
             train: TrainConfig::default(),
             artifacts_dir: "artifacts".into(),
@@ -136,6 +162,32 @@ impl LauncherConfig {
                     ));
                 }
                 cfg.batcher.max_inflight = n;
+            }
+        }
+        if let Some(tables) = root.get("model").as_arr() {
+            for (i, t) in tables.iter().enumerate() {
+                let name = t
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| {
+                        ConfigError::Invalid(format!(
+                            "[[model]] table {i} is missing 'name'"
+                        ))
+                    })?
+                    .to_string();
+                if cfg.model_tables.iter().any(|m| m.name == name) {
+                    return Err(ConfigError::Invalid(format!(
+                        "duplicate [[model]] name '{name}'"
+                    )));
+                }
+                cfg.model_tables.push(ModelTable {
+                    name,
+                    checkpoint: t
+                        .get("checkpoint")
+                        .as_str()
+                        .map(String::from),
+                    seed: t.get("seed").as_usize().unwrap_or(0) as u64,
+                });
             }
         }
         let training = root.get("training");
@@ -243,6 +295,45 @@ mod tests {
         )
         .is_err());
         assert!(LauncherConfig::from_toml("[serving]\nmodels = []").is_err());
+    }
+
+    #[test]
+    fn model_tables_parse_in_order() {
+        let c = LauncherConfig::from_toml(
+            r#"
+            [serving]
+            queue_capacity = 7
+            [[model]]
+            name = "tiny"
+            seed = 3
+            [[model]]
+            name = "longdoc"
+            checkpoint = "ckpt/longdoc.bin"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.batcher.queue_capacity, 7);
+        assert_eq!(
+            c.model_tables,
+            vec![
+                ModelTable {
+                    name: "tiny".into(),
+                    checkpoint: None,
+                    seed: 3
+                },
+                ModelTable {
+                    name: "longdoc".into(),
+                    checkpoint: Some("ckpt/longdoc.bin".into()),
+                    seed: 0
+                },
+            ]
+        );
+        // nameless and duplicate-name tables are config errors
+        assert!(LauncherConfig::from_toml("[[model]]\nseed = 1").is_err());
+        assert!(LauncherConfig::from_toml(
+            "[[model]]\nname = \"a\"\n[[model]]\nname = \"a\""
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,7 +1,7 @@
-//! Serving assembly: wire manifest artifacts (PJRT) or the pure-Rust
-//! reference encoder into a running [`Coordinator`] (bucket per model),
-//! plus a synthetic client-load generator used by the examples and
-//! benches.
+//! Serving assembly: wire a multi-tenant [`ModelRegistry`] (pure-Rust
+//! reference encoder) or manifest artifacts (PJRT) into a running
+//! [`Coordinator`], plus a synthetic client-load generator used by the
+//! examples and benches.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -17,7 +17,8 @@ use crate::coordinator::{
 };
 use crate::coordinator::{
     BatchRunner, BatcherConfig, BucketSpec, Coordinator, CostModel,
-    ReferenceRunner, RunnerFactory,
+    ModelRegistry, Outcome, ReferenceRunner, RunnerFactory, SubmitOptions,
+    Task,
 };
 use crate::data::{Corpus, CorpusConfig};
 use crate::model::{ModelConfig, Params};
@@ -27,44 +28,70 @@ use crate::runtime::{Engine, Manifest};
 use crate::training::TrainError;
 use crate::util::rng::Pcg32;
 
-/// Build a coordinator whose buckets are served by the pure-Rust batched
-/// reference encoder — no artifacts, no PJRT.  `buckets` lists
-/// `(max_len, batch_capacity)` pairs; every bucket shares `cfg` and the
-/// *same* `Arc<Params>` (one copy of the weights in memory regardless of
-/// bucket count) and every bucket length must be ≤ `cfg.max_len`.  All
-/// bucket workers draw their compute from the process-wide pool, so
-/// concurrently-busy buckets never oversubscribe the thread budget.  This
-/// is the serving path on machines without the `pjrt` feature, and the
-/// end-to-end harness for `encode_batch`.
+/// Build a multi-tenant coordinator over a shared [`ModelRegistry`]:
+/// every bucket's runner dispatches any registered `(model, task)`
+/// through the pure-Rust batched reference encoder — no artifacts, no
+/// PJRT.  `buckets` lists `(max_len, batch_capacity)` pairs; the
+/// registry's first-registered model is the default target.  All bucket
+/// runners draw their compute from the process-wide pool, so
+/// concurrently-busy buckets never oversubscribe the thread budget, and
+/// [`ModelRegistry::reload`] hot-swaps any model's weights under live
+/// traffic.
+pub fn build_registry_coordinator(
+    registry: Arc<ModelRegistry>,
+    buckets: &[(usize, usize)],
+    config: BatcherConfig,
+) -> Coordinator {
+    assert!(!buckets.is_empty(), "at least one bucket required");
+    let default_model = registry
+        .default_model()
+        .expect("registry must hold at least one model");
+    let max_model_len = registry.max_len();
+    let mut sorted = buckets.to_vec();
+    sorted.sort_by_key(|&(len, _)| len);
+    let mut specs: Vec<(BucketSpec, RunnerFactory)> = Vec::new();
+    for (len, cap) in sorted {
+        // validate here, on the calling thread: failing inside a runner
+        // factory would only fire on the scheduler thread, leaving
+        // clients to time out instead of failing fast
+        assert!(
+            len <= max_model_len,
+            "bucket length {len} exceeds every model's max_len \
+             ({max_model_len})"
+        );
+        assert!(cap > 0, "bucket capacity must be positive");
+        let registry = Arc::clone(&registry);
+        let factory: RunnerFactory = Box::new(move || {
+            Ok(Box::new(ReferenceRunner::new(registry, len, cap))
+                as Box<dyn BatchRunner>)
+        });
+        specs.push((BucketSpec { max_len: len, batch: cap }, factory));
+    }
+    Coordinator::start_with(specs, config, Some(registry), &default_model)
+}
+
+/// Single-model convenience over [`build_registry_coordinator`]: wraps
+/// `(cfg, params)` into a one-entry registry named `"default"`.  This is
+/// the pre-registry API, preserved verbatim — and the serving path on
+/// machines without the `pjrt` feature.
 pub fn build_reference_coordinator(
     cfg: &ModelConfig,
     params: &Arc<Params>,
     buckets: &[(usize, usize)],
     config: BatcherConfig,
 ) -> Coordinator {
-    assert!(!buckets.is_empty(), "at least one bucket required");
-    let mut sorted = buckets.to_vec();
-    sorted.sort_by_key(|&(len, _)| len);
-    let mut specs: Vec<(BucketSpec, RunnerFactory)> = Vec::new();
-    for (len, cap) in sorted {
-        // validate here, on the calling thread: the same assert inside
-        // ReferenceRunner::new would only fire on the spawned worker,
-        // leaving clients to time out instead of failing fast
+    for &(len, _) in buckets {
         assert!(
             len <= cfg.max_len,
             "bucket length {len} exceeds model max_len {}",
             cfg.max_len
         );
-        assert!(cap > 0, "bucket capacity must be positive");
-        let cfg = cfg.clone();
-        let params = Arc::clone(params);
-        let factory: RunnerFactory = Box::new(move || {
-            Ok(Box::new(ReferenceRunner::new(cfg, params, len, cap))
-                as Box<dyn BatchRunner>)
-        });
-        specs.push((BucketSpec { max_len: len, batch: cap }, factory));
     }
-    Coordinator::start(specs, config)
+    let registry = Arc::new(ModelRegistry::new());
+    registry
+        .register("default", cfg.clone(), Arc::clone(params))
+        .unwrap_or_else(|e| panic!("register default model: {e}"));
+    build_registry_coordinator(registry, buckets, config)
 }
 
 /// Build a coordinator from manifest models (ascending max_len buckets).
@@ -76,6 +103,12 @@ pub fn build_reference_coordinator(
 /// pool tasks forward batches to it.  All buckets are *launched* here,
 /// before the coordinator starts, so their engine/compile work runs
 /// concurrently (startup is the slowest compile, not the sum).
+///
+/// A compiled executable is one `(model, program)` pair, so this path
+/// serves `Task::MlmPredict` against the bucket-owning model only —
+/// multi-task dispatch needs the reference path (or more compiled
+/// programs per entry; see ROADMAP).  Requests default to the first
+/// named model.
 #[cfg(feature = "pjrt")]
 pub fn build_coordinator(
     manifest: &Manifest,
@@ -87,6 +120,7 @@ pub fn build_coordinator(
         .map(|n| manifest.model(n))
         .collect::<Result<_, _>>()?;
     entries.sort_by_key(|e| e.config.max_len);
+    let default_model = model_names.first().copied().unwrap_or("default");
     let mut buckets: Vec<(BucketSpec, RunnerFactory)> = Vec::new();
     for entry in entries {
         let spec = BucketSpec {
@@ -114,7 +148,7 @@ pub fn build_coordinator(
         });
         buckets.push((spec, factory));
     }
-    Ok(Coordinator::start(buckets, config))
+    Ok(Coordinator::start_with(buckets, config, None, default_model))
 }
 
 /// Default serving batcher config tuned for the Linformer cost model:
@@ -142,13 +176,32 @@ pub struct LoadReport {
 }
 
 /// Drive `total` requests with mixed lengths through the coordinator from
-/// `clients` threads; lengths are sampled in [1, max_len].
+/// `clients` threads; lengths are sampled in [1, max_len].  Targets the
+/// default model's default task — see [`run_load_mix`] for multi-tenant
+/// load.
 pub fn run_load(
     coordinator: &Coordinator,
     vocab: usize,
     total: usize,
     clients: usize,
     seed: u64,
+) -> LoadReport {
+    run_load_mix(coordinator, vocab, total, clients, seed, &[], &[])
+}
+
+/// Multi-tenant load generator: each request picks a uniform-random
+/// `(model, task)` from the given mixes (empty mix = the coordinator's
+/// default).  Lengths respect both the bucket ceiling and the chosen
+/// model's `max_len`.  "Completed" means `Outcome::Served` — the right
+/// signal for float-valued tasks whose `predictions` view is empty.
+pub fn run_load_mix(
+    coordinator: &Coordinator,
+    vocab: usize,
+    total: usize,
+    clients: usize,
+    seed: u64,
+    models: &[String],
+    tasks: &[Task],
 ) -> LoadReport {
     let corpus = Arc::new(Corpus::new(
         CorpusConfig {
@@ -173,14 +226,44 @@ pub fn run_load(
                 let mut lats = Vec::with_capacity(share);
                 let (mut done, mut rej) = (0usize, 0usize);
                 for _ in 0..share {
-                    let len = 1 + rng.below(max_len as u32) as usize;
+                    let model = if models.is_empty() {
+                        None
+                    } else {
+                        let i = rng.below(models.len() as u32) as usize;
+                        Some(models[i].clone())
+                    };
+                    let task = if tasks.is_empty() {
+                        Task::MlmPredict
+                    } else {
+                        tasks[rng.below(tasks.len() as u32) as usize]
+                    };
+                    // respect the targeted model's own length ceiling
+                    // (the default model's too, when none is named —
+                    // its max_len may sit below the largest bucket)
+                    let mut cap = max_len;
+                    if let Some(reg) = coord.registry() {
+                        let name = model
+                            .as_deref()
+                            .unwrap_or_else(|| coord.default_model());
+                        if let Some(entry) = reg.get(name) {
+                            cap = cap.min(entry.cfg.max_len);
+                        }
+                    }
+                    let len = 1 + rng.below(cap as u32) as usize;
                     let tokens = corpus.sequence(len, 0, &mut rng);
-                    match coord.submit(tokens) {
+                    let opts = SubmitOptions {
+                        model,
+                        task,
+                        ..SubmitOptions::default()
+                    };
+                    match coord.submit_with(tokens, opts) {
                         Ok(ticket) => {
                             match ticket
                                 .wait_timeout(Duration::from_secs(120))
                             {
-                                Ok(resp) if !resp.predictions.is_empty() => {
+                                Ok(resp)
+                                    if resp.outcome == Outcome::Served =>
+                                {
                                     done += 1;
                                     lats.push(resp.latency_s);
                                 }
@@ -267,12 +350,58 @@ mod tests {
         let rl = long.wait_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(rs.predictions.len(), 3);
         assert_eq!(rs.bucket_len, 16);
+        assert_eq!(&*rs.model, "default");
+        assert!(rs.generation > 0, "reference path tags the generation");
         assert_eq!(rl.predictions.len(), 24);
         assert_eq!(rl.bucket_len, cfg.max_len);
         assert!(rs
             .predictions
             .iter()
             .all(|&p| (p as usize) < cfg.vocab_size));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn registry_coordinator_serves_two_models_and_tasks() {
+        // the multi-tenant assembly: two registered models behind one
+        // scheduler, requests addressing either, on two task kinds
+        let registry = Arc::new(ModelRegistry::new());
+        let small = crate::model::ModelConfig::tiny(); // max_len 32
+        let mut big = small.clone();
+        big.max_len = 64;
+        big.d_model = 32;
+        registry.register_init("small", small.clone(), 1).unwrap();
+        registry.register_init("big", big.clone(), 2).unwrap();
+        let coord = build_registry_coordinator(
+            Arc::clone(&registry),
+            &[(32, 4), (64, 2)],
+            BatcherConfig {
+                max_delay: Duration::from_millis(2),
+                ..Default::default()
+            },
+        );
+        assert_eq!(coord.default_model(), "small");
+        let a = coord
+            .submit_with(vec![1; 8], SubmitOptions::model("small"))
+            .unwrap();
+        let b = coord
+            .submit_with(
+                vec![2; 40],
+                SubmitOptions::model_task("big", Task::Classify { head: 0 }),
+            )
+            .unwrap();
+        let ra = a.wait_timeout(Duration::from_secs(30)).unwrap();
+        let rb = b.wait_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(ra.outcome, Outcome::Served);
+        assert_eq!(ra.generation, registry.get("small").unwrap().generation());
+        assert_eq!(rb.outcome, Outcome::Served);
+        assert_eq!(rb.generation, registry.get("big").unwrap().generation());
+        assert_eq!(rb.predictions.len(), 1, "classify yields one class id");
+        // a 40-token request can only fit the big model
+        assert!(matches!(
+            coord.submit_with(vec![1; 40], SubmitOptions::model("small")),
+            Err(crate::coordinator::Reject::TooLong { max: 32, .. })
+        ));
         coord.shutdown();
     }
 
@@ -295,10 +424,10 @@ mod tests {
 
     #[test]
     fn reference_coordinator_shares_params_across_buckets() {
-        // three buckets, one Arc<Params>: after every bucket has served a
-        // request (so every runner exists), the only copies of the
-        // weights are Arc refs — 1 here + 1 per runner — and shutdown
-        // releases them all
+        // three buckets, one registry entry: runners hold the registry,
+        // not weight clones — the only owners of the flat store are the
+        // caller and the registry entry, however many buckets exist, and
+        // shutdown releases the registry's
         let cfg = crate::model::ModelConfig::tiny();
         let params = Arc::new(crate::model::Params::init(&cfg, 5));
         let coord = build_reference_coordinator(
@@ -317,8 +446,8 @@ mod tests {
         }
         assert_eq!(
             Arc::strong_count(&params),
-            1 + 3,
-            "expected exactly one Arc ref per bucket runner"
+            2,
+            "expected exactly one shared copy inside the registry"
         );
         coord.shutdown();
         assert_eq!(Arc::strong_count(&params), 1);

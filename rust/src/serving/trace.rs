@@ -15,14 +15,15 @@
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{
-    Coordinator, Outcome, Priority, SubmitOptions, Ticket,
+    Coordinator, Outcome, Priority, SubmitOptions, Task, Ticket,
 };
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::util::stats::percentile;
 use std::collections::BTreeMap;
 
-/// One trace entry: arrival offset, sequence length, scheduling class.
+/// One trace entry: arrival offset, sequence length, scheduling class,
+/// and the `(model, task)` the request addresses.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
     pub at_s: f64,
@@ -30,6 +31,11 @@ pub struct TraceEvent {
     pub priority: Priority,
     /// Latency SLO in (trace-time) seconds; `None` = no deadline.
     pub slo_s: Option<f64>,
+    /// Registered model name; `None` = the coordinator's default model
+    /// (what every pre-registry trace replays as).
+    pub model: Option<String>,
+    /// Task kind (defaults to [`Task::MlmPredict`] in older traces).
+    pub task: Task,
 }
 
 /// Length distribution families seen in long-document serving.
@@ -86,6 +92,8 @@ pub fn poisson_trace(
                 len: dist.sample(&mut rng),
                 priority: Priority::Interactive,
                 slo_s: None,
+                model: None,
+                task: Task::MlmPredict,
             }
         })
         .collect()
@@ -113,9 +121,32 @@ pub fn bursty_trace(
                 len: dist.sample(&mut rng),
                 priority: Priority::Interactive,
                 slo_s: None,
+                model: None,
+                task: Task::MlmPredict,
             }
         })
         .collect()
+}
+
+/// Round-robin a trace's events across `(model, task)` pairs — the
+/// standard way to turn a single-tenant trace into a multi-tenant
+/// workload for the registry scheduler.
+pub fn assign_tenants(
+    trace: &mut [TraceEvent],
+    models: &[String],
+    tasks: &[Task],
+    seed: u64,
+) {
+    let mut rng = Pcg32::seeded(seed);
+    for ev in trace.iter_mut() {
+        if !models.is_empty() {
+            let i = rng.below(models.len() as u32) as usize;
+            ev.model = Some(models[i].clone());
+        }
+        if !tasks.is_empty() {
+            ev.task = tasks[rng.below(tasks.len() as u32) as usize];
+        }
+    }
 }
 
 /// Tag a fraction of events as interactive-with-SLO; the rest become
@@ -140,6 +171,8 @@ pub fn assign_slos(
 }
 
 /// Serialize a trace to JSON (replayable across runs/machines).
+/// `model`/`task` ride along when non-default, so pre-registry tooling
+/// keeps parsing the common case unchanged.
 pub fn to_json(trace: &[TraceEvent]) -> String {
     let arr: Vec<Json> = trace
         .iter()
@@ -154,14 +187,27 @@ pub fn to_json(trace: &[TraceEvent]) -> String {
             if let Some(slo) = e.slo_s {
                 m.insert("slo_s".to_string(), Json::Num(slo));
             }
+            if let Some(model) = &e.model {
+                m.insert("model".to_string(), Json::Str(model.clone()));
+            }
+            if e.task != Task::MlmPredict {
+                m.insert(
+                    "task".to_string(),
+                    Json::Str(e.task.name().to_string()),
+                );
+                if let Task::Classify { head } = e.task {
+                    m.insert("head".to_string(), Json::Num(head as f64));
+                }
+            }
             Json::Obj(m)
         })
         .collect();
     Json::Arr(arr).to_string()
 }
 
-/// Parse a trace from JSON.  `priority`/`slo_s` are optional (older
-/// traces replay as interactive, deadline-less).
+/// Parse a trace from JSON.  `priority`/`slo_s`/`model`/`task` are all
+/// optional (older traces replay as interactive, deadline-less,
+/// default-model MLM prediction).
 pub fn from_json(text: &str) -> Result<Vec<TraceEvent>, String> {
     let v = crate::util::json::parse(text).map_err(|e| e.to_string())?;
     let arr = v.as_arr().ok_or("trace must be a JSON array")?;
@@ -178,11 +224,33 @@ pub fn from_json(text: &str) -> Result<Vec<TraceEvent>, String> {
                     v.as_f64().ok_or("slo_s must be a number")?,
                 ),
             };
+            let model = match e.get("model") {
+                Json::Null => None,
+                v => Some(
+                    v.as_str()
+                        .ok_or("model must be a string")?
+                        .to_string(),
+                ),
+            };
+            let task = match e.get("task").as_str() {
+                None => Task::MlmPredict,
+                Some(name) => {
+                    let mut task = Task::from_name(name).ok_or_else(
+                        || format!("unknown task '{name}'"),
+                    )?;
+                    if let Task::Classify { head } = &mut task {
+                        *head = e.get("head").as_usize().unwrap_or(0);
+                    }
+                    task
+                }
+            };
             Ok(TraceEvent {
                 at_s: e.get("at_s").as_f64().ok_or("missing at_s")?,
                 len: e.get("len").as_usize().ok_or("missing len")?,
                 priority,
                 slo_s,
+                model,
+                task,
             })
         })
         .collect()
@@ -309,6 +377,8 @@ pub fn replay(
             slo: ev
                 .slo_s
                 .map(|s| Duration::from_secs_f64(s * time_scale)),
+            model: ev.model.clone(),
+            task: ev.task,
         };
         match coordinator.submit_with(tokens, opts) {
             Ok(t) => tickets.push((i, t)),
@@ -459,6 +529,16 @@ mod tests {
             4,
         );
         assign_slos(&mut t, 0.5, 0.1, 5);
+        assign_tenants(
+            &mut t,
+            &["small".to_string(), "big".to_string()],
+            &[
+                Task::MlmPredict,
+                Task::Encode,
+                Task::Classify { head: 0 },
+            ],
+            6,
+        );
         let s = to_json(&t);
         let back = from_json(&s).unwrap();
         assert_eq!(back.len(), t.len());
@@ -467,7 +547,13 @@ mod tests {
             assert!((a.at_s - b.at_s).abs() < 1e-9);
             assert_eq!(a.priority, b.priority);
             assert_eq!(a.slo_s, b.slo_s);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.task, b.task);
         }
+        // the tenant mix actually varied
+        assert!(t.iter().any(|e| e.model.as_deref() == Some("small")));
+        assert!(t.iter().any(|e| e.model.as_deref() == Some("big")));
+        assert!(t.iter().any(|e| e.task == Task::Encode));
     }
 
     #[test]
@@ -484,10 +570,26 @@ mod tests {
             from_json("[{\"at_s\": 1, \"len\": 2, \"slo_s\": \"0.05\"}]")
                 .is_err()
         );
-        // legacy traces (no priority/slo) parse as interactive/no-SLO
+        // an unknown task name must not silently replay as MLM
+        assert!(
+            from_json("[{\"at_s\": 1, \"len\": 2, \"task\": \"dream\"}]")
+                .is_err()
+        );
+        // legacy traces (no priority/slo/model/task) parse as
+        // interactive, no-SLO, default-model MLM prediction
         let t = from_json("[{\"at_s\": 1.5, \"len\": 2}]").unwrap();
         assert_eq!(t[0].priority, Priority::Interactive);
         assert_eq!(t[0].slo_s, None);
+        assert_eq!(t[0].model, None);
+        assert_eq!(t[0].task, Task::MlmPredict);
+        // classify round-trips its head index
+        let t = from_json(
+            "[{\"at_s\": 1, \"len\": 2, \"task\": \"classify\", \
+              \"head\": 0, \"model\": \"big\"}]",
+        )
+        .unwrap();
+        assert_eq!(t[0].task, Task::Classify { head: 0 });
+        assert_eq!(t[0].model.as_deref(), Some("big"));
     }
 
     #[test]

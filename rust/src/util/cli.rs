@@ -1,13 +1,16 @@
 //! Tiny declarative CLI argument parser (clap is unavailable offline).
 //!
-//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
-//! Unknown flags are an error, so typos fail fast.
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments.  A valued flag may repeat — [`Args::get`] returns the last
+//! occurrence (the legacy override behavior), [`Args::all`] returns every
+//! one in order (what repeatable flags like `repro serve --model a=…
+//! --model b=…` read).  Unknown flags are an error, so typos fail fast.
 
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default)]
 pub struct Args {
-    flags: BTreeMap<String, String>,
+    flags: BTreeMap<String, Vec<String>>,
     positional: Vec<String>,
     known: Vec<(String, String)>, // (name, help)
 }
@@ -54,7 +57,7 @@ impl Args {
                     None => (rest.to_string(), None),
                 };
                 if bools.contains(&key.as_str()) {
-                    args.flags.insert(key, "true".into());
+                    args.flags.entry(key).or_default().push("true".into());
                 } else if valued.contains(&key.as_str()) {
                     let val = match inline {
                         Some(v) => v,
@@ -62,7 +65,7 @@ impl Args {
                             .next()
                             .ok_or_else(|| CliError::MissingValue(key.clone()))?,
                     };
-                    args.flags.insert(key, val);
+                    args.flags.entry(key).or_default().push(val);
                 } else {
                     return Err(CliError::Unknown(key));
                 }
@@ -73,8 +76,20 @@ impl Args {
         Ok(args)
     }
 
+    /// Last occurrence of a flag (repeats override, the legacy rule).
     pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(String::as_str)
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .map(String::as_str)
+    }
+
+    /// Every occurrence of a repeatable flag, in argv order.
+    pub fn all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
@@ -147,6 +162,19 @@ mod tests {
         assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.1);
         assert!(a.flag("verbose"));
         assert_eq!(a.positional(), &["pos1"]);
+    }
+
+    #[test]
+    fn repeated_flags_collect_in_order_and_last_wins_for_get() {
+        let a = Args::parse(
+            argv(&["--steps", "1", "--steps=2", "--steps", "3"]),
+            SPEC,
+        )
+        .unwrap();
+        assert_eq!(a.all("steps"), vec!["1", "2", "3"]);
+        assert_eq!(a.get("steps"), Some("3"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 3);
+        assert!(a.all("lr").is_empty());
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Minimal TOML subset parser for the config system.
 //!
 //! Supports the subset the launcher configs use: `[table.subtable]`
-//! headers, `key = value` with strings, integers, floats, booleans and
-//! homogeneous inline arrays, plus `#` comments.  Values land in the same
-//! [`Json`] tree the manifest uses, so the config layer has one value type.
+//! headers, top-level `[[array-of-tables]]` headers (each occurrence
+//! appends a fresh table — what `serve.toml`'s repeated `[[model]]`
+//! entries use), `key = value` with strings, integers, floats, booleans
+//! and homogeneous inline arrays, plus `#` comments.  Values land in the
+//! same [`Json`] tree the manifest uses, so the config layer has one
+//! value type.
 
 use super::json::Json;
 use std::collections::BTreeMap;
@@ -27,6 +30,42 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
         let line_no = idx + 1;
         let line = strip_comment(raw).trim();
         if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix("[[") {
+            let header = match header.strip_suffix("]]") {
+                Some(h) => h.trim(),
+                None => {
+                    return err(
+                        line_no,
+                        "unterminated array-of-tables header",
+                    )
+                }
+            };
+            if header.is_empty() {
+                return err(line_no, "empty array-of-tables header");
+            }
+            if header.contains('.') {
+                return err(
+                    line_no,
+                    "nested array-of-tables not supported",
+                );
+            }
+            // each [[name]] appends a fresh table; following keys land
+            // in it (ensure_table descends into an array's last table)
+            let entry = root
+                .entry(header.to_string())
+                .or_insert_with(|| Json::Arr(Vec::new()));
+            match entry {
+                Json::Arr(items) => items.push(Json::Obj(BTreeMap::new())),
+                _ => {
+                    return err(
+                        line_no,
+                        format!("'{header}' is not an array of tables"),
+                    )
+                }
+            }
+            current_path = vec![header.to_string()];
             continue;
         }
         if let Some(header) = line.strip_prefix('[') {
@@ -83,6 +122,13 @@ fn ensure_table<'a>(
             .or_insert_with(|| Json::Obj(BTreeMap::new()));
         match entry {
             Json::Obj(m) => cur = m,
+            // an array of tables: keys land in its latest element
+            Json::Arr(items) => match items.last_mut() {
+                Some(Json::Obj(m)) => cur = m,
+                _ => {
+                    return err(line, format!("'{part}' is not a table"))
+                }
+            },
             _ => return err(line, format!("'{part}' is not a table")),
         }
     }
@@ -181,6 +227,33 @@ mod tests {
             .unwrap();
         assert_eq!(v.get("a").as_usize(), Some(1));
         assert_eq!(v.get("b").as_str(), Some("has # inside"));
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let v = parse(
+            "[serving]\nqueue = 8\n\
+             [[model]]\nname = \"tiny\"\nseed = 1\n\
+             [[model]]\nname = \"big\"\ncheckpoint = \"w.bin\"\n",
+        )
+        .unwrap();
+        assert_eq!(v.get("serving").get("queue").as_usize(), Some(8));
+        let models = v.get("model").as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].get("name").as_str(), Some("tiny"));
+        assert_eq!(models[0].get("seed").as_usize(), Some(1));
+        assert_eq!(models[1].get("name").as_str(), Some("big"));
+        assert_eq!(models[1].get("checkpoint").as_str(), Some("w.bin"));
+    }
+
+    #[test]
+    fn array_of_tables_conflicts_detected() {
+        assert!(parse("a = 1\n[[a]]\nb = 2").is_err());
+        assert!(parse("[[a.b]]\nc = 1").is_err());
+        assert!(parse("[[unterminated]\nc = 1").is_err());
+        // a plain [a] header after [[a]] lands in the last element; a
+        // scalar key conflicting with the array still errors
+        assert!(parse("[[a]]\nx = 1\n[a]\nx = 2").is_err()); // dup key
     }
 
     #[test]

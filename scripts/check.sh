@@ -53,4 +53,9 @@ cargo test --release --test pool_stress -- --ignored
 # must shed instead of computing expired work
 cargo test --release --test scheduler_overload -- --ignored
 
+# multi-tenant smoke in release: two models × two tasks through one
+# scheduler (bitwise vs direct encoder) + hot-swap under live traffic
+# (no dropped requests, no mixed-generation batches)
+cargo test --release --test multi_tenant
+
 echo "[check] OK"
