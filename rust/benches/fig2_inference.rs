@@ -7,7 +7,17 @@
 //! with `--features pjrt` the artifact-backed half runs too.
 //!
 //! Every measurement is appended to `BENCH_encoder.json` (section
-//! `fig2_inference`) so future PRs have a perf trajectory.
+//! `fig2_inference`) tagged with the GEMM kernel that produced it, and
+//! **both kernels run in one invocation**: the default SIMD microkernel
+//! and the pre-SIMD scalar baseline (`EncodeScratch::use_scalar_kernel`
+//! / `GemmScratch::scalar`), so every record set carries its own
+//! before/after pair at seq_len ∈ {512, 1024, 4096} without a second
+//! checkout.  Note this is a *kernel-isolating* ablation: both sides
+//! run under the current (retuned) `plan_threads` scheduling, so the
+//! scalar records measure the pre-change inner kernel, not a bit-exact
+//! replay of the pre-change build's thread plan.  (A build with
+//! `--features scalar-gemm` pins *both* sides to the scalar kernel —
+//! the whole-process fallback.)
 //!
 //! Run: `cargo bench --bench fig2_inference`
 
@@ -33,8 +43,10 @@ fn model(n: usize, attention: Attention, k: usize) -> (ModelConfig, Params) {
     (cfg, params)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn record(
     bench_name: &str,
+    kernel: &str,
     attention: &str,
     n: usize,
     k: usize,
@@ -44,6 +56,7 @@ fn record(
 ) -> Json {
     bench_record(&[
         ("bench", Json::Str(bench_name.into())),
+        ("kernel", Json::Str(kernel.into())),
         ("attention", Json::Str(attention.into())),
         ("seq_len", Json::Num(n as f64)),
         ("k", Json::Num(k as f64)),
@@ -65,6 +78,8 @@ fn main() {
     let mut records = Vec::new();
 
     // -- gemm scaling: the kernel the whole hot path stands on ----------
+    // both kernels in one run: the default entry points (SIMD unless the
+    // scalar-gemm feature pinned them) and the scalar baseline
     println!("== threaded GEMM (512x512x512), {threads} worker cap ==");
     let mut rng = Pcg32::seeded(1);
     let mut a = Mat::zeros(512, 512);
@@ -72,68 +87,95 @@ fn main() {
     rng.fill_normal(&mut a.data, 1.0);
     rng.fill_normal(&mut b.data, 1.0);
     let mut c = Mat::zeros(0, 0);
-    let serial = bench(1, 5, || {
-        gemm::matmul_view(MatView::full(&a), MatView::full(&b), &mut c, 1);
-        c.data[0]
-    });
-    let par = bench(1, 5, || {
-        gemm::matmul_view(MatView::full(&a), MatView::full(&b), &mut c, threads);
-        c.data[0]
-    });
-    println!(
-        "  serial {}   threaded {}   speedup {:.2}x",
-        serial.human(),
-        par.human(),
-        serial.mean / par.mean
-    );
-    records.push(bench_record(&[
-        ("bench", Json::Str("gemm_512".into())),
-        ("threads", Json::Num(threads as f64)),
-        ("pool_workers", Json::Num(pool::global().workers() as f64)),
-        ("serial_s", Json::Num(serial.mean)),
-        ("threaded_s", Json::Num(par.mean)),
-        ("speedup", Json::Num(serial.mean / par.mean)),
-    ]));
+    for scalar in [false, true] {
+        let kernel = if scalar { "scalar" } else { gemm::kernel_name() };
+        let mut gs = if scalar {
+            gemm::GemmScratch::scalar()
+        } else {
+            gemm::GemmScratch::new()
+        };
+        let serial = bench(1, 5, || {
+            gemm::matmul_view_in(
+                MatView::full(&a), MatView::full(&b), &mut c, 1, &mut gs,
+            );
+            c.data[0]
+        });
+        let par = bench(1, 5, || {
+            gemm::matmul_view_in(
+                MatView::full(&a), MatView::full(&b), &mut c, threads, &mut gs,
+            );
+            c.data[0]
+        });
+        println!(
+            "  [{kernel:>6}] serial {}   threaded {}   speedup {:.2}x",
+            serial.human(),
+            par.human(),
+            serial.mean / par.mean
+        );
+        records.push(bench_record(&[
+            ("bench", Json::Str("gemm_512".into())),
+            ("kernel", Json::Str(kernel.into())),
+            ("threads", Json::Num(threads as f64)),
+            ("pool_workers", Json::Num(pool::global().workers() as f64)),
+            ("serial_s", Json::Num(serial.mean)),
+            ("threaded_s", Json::Num(par.mean)),
+            ("speedup", Json::Num(serial.mean / par.mean)),
+        ]));
+    }
 
     // -- Fig 2: per-token time vs n, rust reference ----------------------
+    // (4096 added for the SIMD-kernel acceptance grid {512, 1024, 4096})
     println!("\n== Fig 2 (rust reference): per-token time vs n (batch 1) ==");
     println!(
-        "{:>6} {:>18} {:>18} {:>9}",
-        "n", "standard", "linformer k=64", "speedup"
+        "{:>6} {:>7} {:>18} {:>18} {:>9}",
+        "n", "kernel", "standard", "linformer k=64", "speedup"
     );
     let mut rng = Pcg32::seeded(3);
-    let mut scratch = EncodeScratch::new();
-    for n in [128usize, 256, 512, 1024] {
-        let iters = if n >= 1024 { 3 } else { 5 };
+    for n in [128usize, 256, 512, 1024, 4096] {
+        let iters = if n >= 4096 {
+            2
+        } else if n >= 1024 {
+            3
+        } else {
+            5
+        };
         let (scfg, sparams) = model(n, Attention::Standard, 64);
         let (lcfg, lparams) = model(n, Attention::Linformer, 64);
         let tokens: Vec<u32> =
             (0..n).map(|_| rng.below(scfg.vocab_size as u32)).collect();
-        let st = bench(1, iters, || {
-            encode_with(&sparams, &scfg, &tokens, false, &mut scratch)
-                .hidden
-                .data[0]
-        });
-        let lt = bench(1, iters, || {
-            encode_with(&lparams, &lcfg, &tokens, false, &mut scratch)
-                .hidden
-                .data[0]
-        });
-        println!(
-            "{:>6} {:>18} {:>18} {:>8.2}x",
-            n,
-            st.human(),
-            lt.human(),
-            st.mean / lt.mean
-        );
-        records.push(record(
-            "encode", "standard", n, 0, 1, threads,
-            st.mean * 1e9 / n as f64,
-        ));
-        records.push(record(
-            "encode", "linformer", n, 64, 1, threads,
-            lt.mean * 1e9 / n as f64,
-        ));
+        for scalar in [false, true] {
+            let kernel = if scalar { "scalar" } else { gemm::kernel_name() };
+            let mut scratch = EncodeScratch::new();
+            if scalar {
+                scratch.use_scalar_kernel(true);
+            }
+            let st = bench(1, iters, || {
+                encode_with(&sparams, &scfg, &tokens, false, &mut scratch)
+                    .hidden
+                    .data[0]
+            });
+            let lt = bench(1, iters, || {
+                encode_with(&lparams, &lcfg, &tokens, false, &mut scratch)
+                    .hidden
+                    .data[0]
+            });
+            println!(
+                "{:>6} {:>7} {:>18} {:>18} {:>8.2}x",
+                n,
+                kernel,
+                st.human(),
+                lt.human(),
+                st.mean / lt.mean
+            );
+            records.push(record(
+                "encode", kernel, "standard", n, 0, 1, threads,
+                st.mean * 1e9 / n as f64,
+            ));
+            records.push(record(
+                "encode", kernel, "linformer", n, 64, 1, threads,
+                lt.mean * 1e9 / n as f64,
+            ));
+        }
     }
 
     // -- encode_batch: example-parallel throughput -----------------------
@@ -180,8 +222,8 @@ fn main() {
             looped.mean / batched.mean
         );
         records.push(record(
-            "encode_batch", "linformer", n, 64, 8, threads,
-            batched.mean * 1e9 / total_tokens as f64,
+            "encode_batch", gemm::kernel_name(), "linformer", n, 64, 8,
+            threads, batched.mean * 1e9 / total_tokens as f64,
         ));
     }
 

@@ -11,7 +11,9 @@
 //! reproduction target.
 //!
 //! Measurements are appended to `BENCH_encoder.json` (section
-//! `table3_efficiency`).
+//! `table3_efficiency`), tagged with the GEMM kernel that produced them;
+//! one invocation measures the grid under **both** the SIMD microkernel
+//! and the pre-SIMD scalar baseline (before/after records).
 //!
 //! Run: `cargo bench --bench table3_efficiency`
 
@@ -49,52 +51,64 @@ fn main() {
     let ns = [256usize, 512, 1024];
     let mut records = Vec::new();
 
-    println!("== Table 3 (left): measured time speedup, rust reference ==");
-    print!("{:>7}", "n\\k");
-    for k in ks {
-        print!("{k:>8}");
-    }
-    println!();
+    // both kernels in one run (before/after): the default SIMD
+    // microkernel and the pre-SIMD scalar baseline
     let mut rng = Pcg32::seeded(1);
-    let mut scratch = EncodeScratch::new();
-    for n in ns {
-        let iters = if n >= 1024 { 3 } else { 5 };
-        let (scfg, sparams) = model(n, Attention::Standard, ks[0]);
-        let tokens: Vec<u32> =
-            (0..n).map(|_| rng.below(scfg.vocab_size as u32)).collect();
-        let std_t = bench(1, iters, || {
-            encode_with(&sparams, &scfg, &tokens, false, &mut scratch)
-                .hidden
-                .data[0]
-        })
-        .mean;
-        print!("{n:>7}");
+    for scalar in [false, true] {
+        let kernel = if scalar { "scalar" } else { gemm::kernel_name() };
+        let mut scratch = EncodeScratch::new();
+        if scalar {
+            scratch.use_scalar_kernel(true);
+        }
+        println!(
+            "== Table 3 (left): measured time speedup, rust reference \
+             [{kernel} kernel] =="
+        );
+        print!("{:>7}", "n\\k");
         for k in ks {
-            if k >= n {
-                print!("{:>8}", "-");
-                continue;
-            }
-            let (lcfg, lparams) = model(n, Attention::Linformer, k);
-            let lin_t = bench(1, iters, || {
-                encode_with(&lparams, &lcfg, &tokens, false, &mut scratch)
+            print!("{k:>8}");
+        }
+        println!();
+        for n in ns {
+            let iters = if n >= 1024 { 3 } else { 5 };
+            let (scfg, sparams) = model(n, Attention::Standard, ks[0]);
+            let tokens: Vec<u32> =
+                (0..n).map(|_| rng.below(scfg.vocab_size as u32)).collect();
+            let std_t = bench(1, iters, || {
+                encode_with(&sparams, &scfg, &tokens, false, &mut scratch)
                     .hidden
                     .data[0]
             })
             .mean;
-            print!("{:>7.2}x", std_t / lin_t);
-            records.push(bench_record(&[
-                ("bench", Json::Str("speedup_grid".into())),
-                ("seq_len", Json::Num(n as f64)),
-                ("k", Json::Num(k as f64)),
-                ("batch", Json::Num(1.0)),
-                ("threads", Json::Num(threads as f64)),
-                ("pool_workers", Json::Num(pool::global().workers() as f64)),
-                ("standard_ns_per_token", Json::Num(std_t * 1e9 / n as f64)),
-                ("linformer_ns_per_token", Json::Num(lin_t * 1e9 / n as f64)),
-                ("speedup", Json::Num(std_t / lin_t)),
-            ]));
+            print!("{n:>7}");
+            for k in ks {
+                if k >= n {
+                    print!("{:>8}", "-");
+                    continue;
+                }
+                let (lcfg, lparams) = model(n, Attention::Linformer, k);
+                let lin_t = bench(1, iters, || {
+                    encode_with(&lparams, &lcfg, &tokens, false, &mut scratch)
+                        .hidden
+                        .data[0]
+                })
+                .mean;
+                print!("{:>7.2}x", std_t / lin_t);
+                records.push(bench_record(&[
+                    ("bench", Json::Str("speedup_grid".into())),
+                    ("kernel", Json::Str(kernel.into())),
+                    ("seq_len", Json::Num(n as f64)),
+                    ("k", Json::Num(k as f64)),
+                    ("batch", Json::Num(1.0)),
+                    ("threads", Json::Num(threads as f64)),
+                    ("pool_workers", Json::Num(pool::global().workers() as f64)),
+                    ("standard_ns_per_token", Json::Num(std_t * 1e9 / n as f64)),
+                    ("linformer_ns_per_token", Json::Num(lin_t * 1e9 / n as f64)),
+                    ("speedup", Json::Num(std_t / lin_t)),
+                ]));
+            }
+            println!();
         }
-        println!();
     }
     emit_bench_json("BENCH_encoder.json", "table3_efficiency", records);
 

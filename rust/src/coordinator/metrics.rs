@@ -13,6 +13,13 @@ pub struct Histogram {
     counts: Vec<AtomicU64>,
     sum_us: AtomicU64,
     n: AtomicU64,
+    /// Largest observed sample, stored as `f64::to_bits` (samples are
+    /// non-negative, so the bit patterns order like the values and a
+    /// single `fetch_max` keeps this lock-free).  Quantiles landing in
+    /// the overflow bucket report this instead of clamping to the top
+    /// bound — otherwise p99 under overload silently underreports tail
+    /// latency as ~67 s however long requests actually waited.
+    max_bits: AtomicU64,
 }
 
 impl Histogram {
@@ -30,6 +37,7 @@ impl Histogram {
             counts,
             sum_us: AtomicU64::new(0),
             n: AtomicU64::new(0),
+            max_bits: AtomicU64::new(0),
         }
     }
 
@@ -43,6 +51,13 @@ impl Histogram {
         self.sum_us
             .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
         self.n.fetch_add(1, Ordering::Relaxed);
+        self.max_bits
+            .fetch_max(seconds.max(0.0).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Largest sample observed so far (0.0 when empty).
+    pub fn max_s(&self) -> f64 {
+        f64::from_bits(self.max_bits.load(Ordering::Relaxed))
     }
 
     pub fn count(&self) -> u64 {
@@ -57,7 +72,10 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / 1e6 / n as f64
     }
 
-    /// Approximate quantile from bucket boundaries.
+    /// Approximate quantile from bucket boundaries.  A quantile that
+    /// falls in the overflow bucket (beyond the last bound) reports the
+    /// observed maximum rather than clamping to the top bound, so tail
+    /// latency under overload is never underreported.
     pub fn quantile(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -71,11 +89,11 @@ impl Histogram {
                 return if i < self.bounds.len() {
                     self.bounds[i]
                 } else {
-                    *self.bounds.last().unwrap()
+                    self.max_s()
                 };
             }
         }
-        *self.bounds.last().unwrap()
+        self.max_s()
     }
 
     /// `{count, p50_s, p95_s, p99_s}` for the JSON dump.
@@ -348,6 +366,30 @@ mod tests {
         let p95 = h.quantile(0.95);
         assert!(p50 <= p95);
         assert!(p50 > 1e-4 && p95 < 0.1);
+    }
+
+    #[test]
+    fn quantile_overflow_reports_observed_max_not_top_bound() {
+        let h = Histogram::latency();
+        let top = 0.000_001 * 2f64.powi(26); // last bound ≈ 67.1 s
+        // 90 fast samples + 10 way past the last bound
+        for _ in 0..90 {
+            h.observe(0.001);
+        }
+        for i in 0..10 {
+            h.observe(200.0 + i as f64 * 10.0); // worst: 290 s
+        }
+        // p99 lands in the overflow bucket: the old code clamped it to
+        // the ~67 s top bound, underreporting a 290 s tail by >4×
+        let p99 = h.quantile(0.99);
+        assert!(p99 > top, "p99 {p99} clamped to the top bound");
+        assert_eq!(p99, 290.0, "overflow quantile must be the observed max");
+        assert_eq!(h.quantile(1.0), 290.0);
+        assert_eq!(h.max_s(), 290.0);
+        // quantiles below the overflow bucket are untouched
+        assert!(h.quantile(0.5) < 0.01);
+        // monotone even across the overflow boundary
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
     }
 
     #[test]

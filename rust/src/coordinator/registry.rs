@@ -49,11 +49,12 @@ pub struct RegistryEntry {
     pub params: Arc<Params>,
     /// Hot-path parameter handles, resolved once at registration —
     /// their construction IS the "this store really contains an
-    /// encoder" validation, and callers driving the encoder directly
-    /// can seed a warm scratch from a clone
-    /// ([`crate::model::EncodeScratch::with_handles`]).  The batched
-    /// serving paths still resolve per worker scratch; threading these
-    /// through `batch_map` is a ROADMAP item.
+    /// encoder" validation.  Callers driving the encoder directly can
+    /// seed a warm scratch from a clone
+    /// ([`crate::model::EncodeScratch::with_handles`]), and the batched
+    /// serving paths thread these through `batch_map` (the `*_warm`
+    /// batch variants), so every batch worker starts warm — no
+    /// per-task parameter-name resolution.
     pub handles: Arc<EncoderHandles>,
 }
 

@@ -21,7 +21,8 @@ use super::registry::ModelRegistry;
 use super::request::{Task, TaskOutput};
 use crate::data::tokenizer::PAD;
 use crate::model::{
-    attn_capture_batch, classify_batch, encode_batch, mlm_predict_batch,
+    attn_capture_batch_warm, classify_batch_warm, encode_batch_warm,
+    mlm_predict_batch_warm,
 };
 use crate::runtime::tensor::Tensor;
 #[cfg(feature = "pjrt")]
@@ -350,12 +351,17 @@ impl BatchRunner for ReferenceRunner {
                 return Err(format!("token id {t} out of vocab"));
             }
         }
+        // the entry's prebuilt handles ride along, so batch workers
+        // start warm: no per-task parameter-name resolution
+        let handles = Some(entry.handles.as_ref());
         let outputs = match task {
-            Task::MlmPredict => mlm_predict_batch(params, cfg, rows)
-                .into_iter()
-                .map(TaskOutput::Tokens)
-                .collect(),
-            Task::Encode => encode_batch(params, cfg, rows)
+            Task::MlmPredict => {
+                mlm_predict_batch_warm(params, cfg, rows, handles)
+                    .into_iter()
+                    .map(TaskOutput::Tokens)
+                    .collect()
+            }
+            Task::Encode => encode_batch_warm(params, cfg, rows, handles)
                 .into_iter()
                 .map(TaskOutput::Hidden)
                 .collect(),
@@ -369,15 +375,17 @@ impl BatchRunner for ReferenceRunner {
                          requested head {head}"
                     ));
                 }
-                classify_batch(params, cfg, rows)
+                classify_batch_warm(params, cfg, rows, handles)
                     .into_iter()
                     .map(|(id, logits)| TaskOutput::Class { id, logits })
                     .collect()
             }
-            Task::AttnCapture => attn_capture_batch(params, cfg, rows)
-                .into_iter()
-                .map(TaskOutput::Attn)
-                .collect(),
+            Task::AttnCapture => {
+                attn_capture_batch_warm(params, cfg, rows, handles)
+                    .into_iter()
+                    .map(TaskOutput::Attn)
+                    .collect()
+            }
         };
         Ok(BatchResult { outputs, generation: entry.generation() })
     }

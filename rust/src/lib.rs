@@ -43,11 +43,15 @@
 //!   (GEMMs below the parallel threshold or an intra-GEMM cap of 1 —
 //!   pinned by the counting-allocator test in `tests/alloc_free.rs`;
 //!   parallel GEMMs additionally queue a few boxed pool tasks per call).
-//! - **Deterministic threading.** `linalg::gemm` row-partitions large
-//!   products into pool tasks (serial below a FLOP threshold).  Each
-//!   output row is computed by one task with a fixed accumulation order,
-//!   so results are **bitwise identical for any budget or pool size** —
-//!   the determinism guarantee the whole stack leans on.
+//! - **Explicit SIMD kernel, deterministic threading.** `linalg::gemm`
+//!   funnels every product through the `linalg::kernel` microkernel —
+//!   portable `f32x8` lanes, 4×16 register tiles, lane-aligned B-panel
+//!   packing — and row-partitions large products into pool tasks (serial
+//!   below a FLOP threshold).  Each output element is one accumulator in
+//!   ascending-k order whichever tile, chunk or worker computed it, so
+//!   results are **bitwise identical for any budget or pool size** (and,
+//!   on the `A·B` paths, to the `scalar-gemm` baseline kernel) — the
+//!   determinism guarantee the whole stack leans on.
 //! - **Example-level batching.** `model::encode_batch` /
 //!   `mlm_predict_batch` stripe a (possibly ragged) batch across pool
 //!   tasks, each with a serial scratch; `coordinator::ReferenceRunner`

@@ -2,31 +2,51 @@
 //! [`MatView`]s.
 //!
 //! `matmul` computes `C = A·B`, `matmul_nt` computes `C = A·Bᵀ` (the layout
-//! attention wants for Q·Kᵀ without materialising a transpose).  Both use
-//! cache blocking plus an 8-wide unrolled inner kernel, and above
-//! [`PAR_FLOP_THRESHOLD`] they row-partition the output into tasks on the
-//! process-wide persistent [`pool`](super::pool) — no per-call thread
-//! spawns, and concurrent callers (e.g. several serving buckets) share the
-//! one global compute budget instead of each planning against the whole
-//! machine.
+//! attention wants for Q·Kᵀ without materialising a transpose).  Since the
+//! SIMD-microkernel rework, every entry point — `matmul_view`,
+//! `matmul_nt_view`, `matmul_view_cols`, serial or pool-parallel — funnels
+//! into the one explicit [`kernel`] path: B is packed into lane-aligned
+//! `NR`-wide panels once per call, then `MR×NR` register tiles of C are
+//! computed with portable [`kernel::F32x8`] lanes (see `linalg/kernel.rs`
+//! for the design).  The old autovectorizer-dependent scalar kernels are
+//! kept as a measured baseline: build with `--features scalar-gemm` (or
+//! pass a [`GemmScratch::scalar`]) to route through them instead.
+//!
+//! Above [`PAR_FLOP_THRESHOLD`] the output rows are partitioned into tasks
+//! on the process-wide persistent [`pool`](super::pool) — no per-call
+//! thread spawns, and concurrent callers (e.g. several serving buckets)
+//! share the one global compute budget instead of each planning against
+//! the whole machine.
 //!
 //! # Determinism
 //!
-//! Every output row is produced by exactly one task running the same
-//! serial per-row kernel in the same accumulation order (ascending `k`),
-//! so results are **bitwise identical** for any worker cap or pool size —
-//! the `threaded_matches_serial_bitwise` test pins this down.  This is
-//! what lets `encode_batch` parallelise freely while still matching
-//! per-example `encode` bit-for-bit.
+//! Every output element is one accumulator updated in ascending `k` order
+//! by the same unfused multiply-add sequence, whichever tile shape, chunk
+//! or worker computed it — so results are **bitwise identical** for any
+//! worker cap or pool size (pinned by `threaded_matches_serial_bitwise` /
+//! `pool_gemm_matches_serial_for_any_chunking`), and the `A·B` paths are
+//! additionally bitwise identical to the scalar fallback (pinned by
+//! `simd_matches_scalar_bitwise`).  This is what lets `encode_batch`
+//! parallelise freely while still matching per-example `encode`
+//! bit-for-bit.
 //!
 //! # NaN/Inf propagation
 //!
-//! The old serial kernel skipped `A[i][k] == 0.0` rows of B as a sparsity
-//! fast path, which silently dropped NaN/Inf coming from B
-//! (`0.0 * NaN = NaN` must surface).  The branch is gone; the
-//! `nan_propagates_through_zero_entries` test keeps it gone.
+//! The pre-rework serial kernel skipped `A[i][k] == 0.0` rows of B as a
+//! sparsity fast path, which silently dropped NaN/Inf coming from B
+//! (`0.0 * NaN = NaN` must surface).  Neither kernel has such a branch;
+//! the `nan_propagates_through_zero_entries` test keeps it that way.
+//!
+//! # Length contracts
+//!
+//! [`dot`] and [`axpy`] require equal-length inputs, asserted
+//! unconditionally.  They used to compute over the shorter prefix of
+//! mismatched slices, which turned upstream shape bugs into silently
+//! wrong numbers instead of a panic.
 
+use super::kernel::{self, F32x8, PackBuf, LANES};
 use super::{pool, Mat, MatView};
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Once;
 
@@ -35,8 +55,11 @@ const BLOCK_N: usize = 64;
 const BLOCK_K: usize = 256;
 
 /// Below this many FLOPs (2·m·k·n) a GEMM stays serial: thread spawn and
-/// join overhead (~tens of µs) would dominate the kernel.
-pub const PAR_FLOP_THRESHOLD: usize = 1 << 22;
+/// join overhead (~tens of µs) would dominate the kernel.  Retuned up
+/// from `1 << 22` for the SIMD microkernel — the serial kernel moves
+/// 2-4× more FLOPs in the same wall time, so the break-even point where
+/// fork/join overhead pays for itself moved up with it.
+pub const PAR_FLOP_THRESHOLD: usize = 1 << 23;
 
 /// Process-wide worker cap (0 = not yet resolved).
 static THREAD_CAP: AtomicUsize = AtomicUsize::new(0);
@@ -95,7 +118,10 @@ pub fn max_threads() -> usize {
 }
 
 /// Worker count for an (m × k) · (k × n) product under a caller cap:
-/// 1 below [`PAR_FLOP_THRESHOLD`], else `cap` clamped to the row count.
+/// 1 below [`PAR_FLOP_THRESHOLD`], else `cap` clamped to the row count
+/// *and* to a plan that leaves every worker at least a quarter threshold
+/// of work — fanning a marginal GEMM out to the whole budget just buys
+/// per-task overhead and steals workers from concurrent callers.
 pub fn plan_threads(m: usize, k: usize, n: usize, cap: usize) -> usize {
     let flops = 2usize
         .saturating_mul(m)
@@ -104,8 +130,87 @@ pub fn plan_threads(m: usize, k: usize, n: usize, cap: usize) -> usize {
     if flops < PAR_FLOP_THRESHOLD {
         1
     } else {
-        cap.min(m).max(1)
+        let busy = flops / (PAR_FLOP_THRESHOLD / 4);
+        cap.min(m).min(busy.max(1)).max(1)
     }
+}
+
+/// Which kernel this build routes the entry points through by default
+/// (benches tag their records with it).
+pub fn kernel_name() -> &'static str {
+    if cfg!(feature = "scalar-gemm") {
+        "scalar"
+    } else {
+        "simd"
+    }
+}
+
+/// Per-caller GEMM workspace: the B-panel [`PackBuf`] plus the kernel
+/// selection.  The encoder keeps one inside its `EncodeScratch` so the
+/// warm forward pass packs allocation-free; callers without a scratch
+/// (tests, benches, svd) go through the entry points that borrow a
+/// thread-local one.
+#[derive(Debug)]
+pub struct GemmScratch {
+    pub pack: PackBuf,
+    /// Route through the pre-SIMD scalar kernels (baseline measurements
+    /// and bitwise cross-checks).  Defaults to the `scalar-gemm` feature.
+    scalar: bool,
+}
+
+impl Default for GemmScratch {
+    /// Same as [`GemmScratch::new`] — in particular the kernel selection
+    /// follows the `scalar-gemm` feature, so the thread-local
+    /// take/put-back in `with_tl_scratch` can never flip a
+    /// scalar-pinned build back to SIMD.
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GemmScratch {
+    pub fn new() -> GemmScratch {
+        GemmScratch {
+            pack: PackBuf::new(),
+            scalar: cfg!(feature = "scalar-gemm"),
+        }
+    }
+
+    /// A scratch pinned to the scalar reference kernels.
+    pub fn scalar() -> GemmScratch {
+        GemmScratch { pack: PackBuf::new(), scalar: true }
+    }
+
+    pub fn set_scalar(&mut self, scalar: bool) {
+        self.scalar = scalar;
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.scalar
+    }
+}
+
+thread_local! {
+    /// Fallback workspace for entry points not handed a [`GemmScratch`].
+    /// Taken out (not borrowed) for the duration of a call: a pool
+    /// worker that *helps* while parked in its own GEMM's fork can
+    /// re-enter gemm on this thread, and must get a fresh buffer rather
+    /// than a RefCell panic.  The larger buffer wins the put-back.
+    static TL_SCRATCH: RefCell<GemmScratch> = RefCell::new(GemmScratch::new());
+}
+
+fn with_tl_scratch<R>(f: impl FnOnce(&mut GemmScratch) -> R) -> R {
+    let mut gs = TL_SCRATCH
+        .try_with(|s| std::mem::take(&mut *s.borrow_mut()))
+        .unwrap_or_default();
+    let r = f(&mut gs);
+    let _ = TL_SCRATCH.try_with(|s| {
+        let mut slot = s.borrow_mut();
+        if gs.pack.capacity_floats() >= slot.pack.capacity_floats() {
+            *slot = gs;
+        }
+    });
+    r
 }
 
 /// C = A (m×k) · B (k×n), auto-threaded.
@@ -135,39 +240,20 @@ pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     matmul_nt_view(MatView::full(a), MatView::full(b), c, t);
 }
 
-/// C = A·B over strided views with an explicit worker cap.  `c` is
-/// resized (allocation-free after warmup) and fully overwritten.  Above
-/// one worker the rows are partitioned into tasks on the global
-/// [`pool`]; partitioning depends only on `threads`, so output is
-/// bitwise identical for any pool size.
+/// C = A·B over strided views with an explicit worker cap (thread-local
+/// packing scratch; hot paths use [`matmul_view_in`]).
 pub fn matmul_view(a: MatView<'_>, b: MatView<'_>, c: &mut Mat, threads: usize) {
-    assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
-    c.reset(a.rows, b.cols);
-    let (m, n) = (a.rows, b.cols);
-    if m == 0 || n == 0 || a.cols == 0 {
-        return;
-    }
-    run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
-        mm_rows(a, b, chunk, row0)
-    });
+    with_tl_scratch(|gs| matmul_view_in(a, b, c, threads, gs));
 }
 
-/// C = A·Bᵀ over strided views with an explicit worker cap.
+/// C = A·Bᵀ over strided views with an explicit worker cap (thread-local
+/// packing scratch; hot paths use [`matmul_nt_view_in`]).
 pub fn matmul_nt_view(a: MatView<'_>, b: MatView<'_>, c: &mut Mat, threads: usize) {
-    assert_eq!(a.cols, b.cols, "matmul_nt inner dims: {} vs {}", a.cols, b.cols);
-    c.reset(a.rows, b.rows);
-    let (m, n) = (a.rows, b.rows);
-    if m == 0 || n == 0 {
-        return;
-    }
-    run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
-        mmnt_rows(a, b, chunk, row0)
-    });
+    with_tl_scratch(|gs| matmul_nt_view_in(a, b, c, threads, gs));
 }
 
-/// `out[:, col0..col0+b.cols] = A·B` — writes the product into a column
-/// block of a wider row-major matrix (the per-head context slot), with no
-/// intermediate buffer.  Rows outside the block are untouched.
+/// `out[:, col0..col0+b.cols] = A·B` with a thread-local packing
+/// scratch; hot paths use [`matmul_view_cols_in`].
 pub fn matmul_view_cols(
     a: MatView<'_>,
     b: MatView<'_>,
@@ -175,15 +261,105 @@ pub fn matmul_view_cols(
     col0: usize,
     threads: usize,
 ) {
+    with_tl_scratch(|gs| matmul_view_cols_in(a, b, out, col0, threads, gs));
+}
+
+/// C = A·B over strided views with an explicit worker cap and caller
+/// workspace.  `c` is resized (allocation-free after warmup) and fully
+/// overwritten.  Above one worker the rows are partitioned into tasks on
+/// the global [`pool`]; partitioning depends only on `threads`, so output
+/// is bitwise identical for any pool size.
+pub fn matmul_view_in(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut Mat,
+    threads: usize,
+    gs: &mut GemmScratch,
+) {
+    assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    if gs.scalar || k == 0 {
+        // the scalar kernel accumulates into a zeroed C, and k == 0
+        // contracts to all-zeros with no kernel pass at all
+        c.reset(m, n);
+        if gs.scalar && m > 0 && n > 0 && k > 0 {
+            run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+                mm_rows(a, b, chunk, row0)
+            });
+        }
+        return;
+    }
+    // SIMD path: every element is stored by a first-k-block tile whose
+    // accumulators start at zero, so the O(m·n) zeroing pass is skipped
+    c.resize_for_overwrite(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let packed = kernel::pack_nn(&mut gs.pack, b);
+    run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+        kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
+    });
+}
+
+/// C = A·Bᵀ over strided views with an explicit worker cap and caller
+/// workspace.  The transpose happens in the B-pack, so this is the same
+/// microkernel as [`matmul_view_in`].
+pub fn matmul_nt_view_in(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut Mat,
+    threads: usize,
+    gs: &mut GemmScratch,
+) {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dims: {} vs {}", a.cols, b.cols);
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    if gs.scalar || k == 0 {
+        c.reset(m, n);
+        if gs.scalar && m > 0 && n > 0 && k > 0 {
+            run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+                mmnt_rows(a, b, chunk, row0)
+            });
+        }
+        return;
+    }
+    // fully overwritten by the microkernel — no zeroing pass needed
+    c.resize_for_overwrite(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let packed = kernel::pack_nt(&mut gs.pack, b);
+    run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+        kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
+    });
+}
+
+/// `out[:, col0..col0+b.cols] = A·B` — writes the product into a column
+/// block of a wider row-major matrix (the per-head context slot), with no
+/// intermediate buffer.  Rows outside the block are untouched.
+pub fn matmul_view_cols_in(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    out: &mut Mat,
+    col0: usize,
+    threads: usize,
+    gs: &mut GemmScratch,
+) {
     assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
     assert_eq!(a.rows, out.rows, "matmul_view_cols: row mismatch");
     assert!(col0 + b.cols <= out.cols, "matmul_view_cols: column overflow");
-    let (m, stride) = (a.rows, out.cols);
-    if m == 0 || b.cols == 0 {
+    let (m, stride, k, w) = (a.rows, out.cols, a.cols, b.cols);
+    if m == 0 || w == 0 {
         return;
     }
+    if gs.scalar {
+        run_row_chunks(&mut out.data, m, threads, stride, move |chunk, row0| {
+            mm_cols_rows(a, b, chunk, row0, col0, stride)
+        });
+        return;
+    }
+    let packed = kernel::pack_nn(&mut gs.pack, b);
     run_row_chunks(&mut out.data, m, threads, stride, move |chunk, row0| {
-        mm_cols_rows(a, b, chunk, row0, col0, stride)
+        kernel::gemm_chunk(a, row0, packed, k, w, chunk, stride, col0)
     });
 }
 
@@ -219,6 +395,64 @@ fn run_row_chunks<'env, K>(
     pool::global().run(tasks);
 }
 
+// ---------------------------------------------------------------------
+// Scalar reference kernels — the pre-SIMD path, kept as the measured
+// baseline (`--features scalar-gemm` / `GemmScratch::scalar`) and as the
+// bitwise oracle for the microkernel's A·B accumulation order.  They use
+// *frozen verbatim copies* of the pre-change `axpy`/`dot` inner loops
+// (below), so the "scalar" records in the benches really measure the
+// pre-change kernel's numerics and codegen, not a re-vectorised
+// stand-in.
+// ---------------------------------------------------------------------
+
+/// Frozen pre-SIMD `axpy` (manual 8-wide unroll): the scalar-baseline
+/// kernels' inner loop, byte-for-byte what shipped before the
+/// microkernel.  Internal-only; the kernels always pass equal lengths.
+#[inline]
+fn axpy_scalar_ref(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let o = c * 8;
+        // manual unroll — the autovectorizer turns this into fma lanes
+        y[o] += alpha * x[o];
+        y[o + 1] += alpha * x[o + 1];
+        y[o + 2] += alpha * x[o + 2];
+        y[o + 3] += alpha * x[o + 3];
+        y[o + 4] += alpha * x[o + 4];
+        y[o + 5] += alpha * x[o + 5];
+        y[o + 6] += alpha * x[o + 6];
+        y[o + 7] += alpha * x[o + 7];
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Frozen pre-SIMD `dot` (4 split accumulators) — see
+/// [`axpy_scalar_ref`].  The public [`dot`] changed accumulation shape
+/// (one 8-lane accumulator), so the baseline keeps its own copy.
+#[inline]
+fn dot_scalar_ref(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let o = c * 4;
+        s0 += x[o] * y[o];
+        s1 += x[o + 1] * y[o + 1];
+        s2 += x[o + 2] * y[o + 2];
+        s3 += x[o + 3] * y[o + 3];
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..n {
+        tail += x[i] * y[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
 /// Serial blocked kernel over output rows `row0..row0 + c.len()/n` of A·B.
 /// `c` is the contiguous, zeroed output block for those rows.
 fn mm_rows(a: MatView<'_>, b: MatView<'_>, c: &mut [f32], row0: usize) {
@@ -236,7 +470,11 @@ fn mm_rows(a: MatView<'_>, b: MatView<'_>, c: &mut [f32], row0: usize) {
                     let crow = &mut c[i * n..(i + 1) * n];
                     for kk in k0..k1 {
                         // no zero-skip: 0.0 * NaN must stay NaN
-                        axpy(arow[kk], &b.row(kk)[j0..j1], &mut crow[j0..j1]);
+                        axpy_scalar_ref(
+                            arow[kk],
+                            &b.row(kk)[j0..j1],
+                            &mut crow[j0..j1],
+                        );
                     }
                 }
             }
@@ -252,7 +490,7 @@ fn mmnt_rows(a: MatView<'_>, b: MatView<'_>, c: &mut [f32], row0: usize) {
         let arow = a.row(row0 + i);
         let crow = &mut c[i * n..(i + 1) * n];
         for (j, cv) in crow.iter_mut().enumerate() {
-            *cv = dot(arow, b.row(j));
+            *cv = dot_scalar_ref(arow, b.row(j));
         }
     }
 }
@@ -275,51 +513,73 @@ fn mm_cols_rows(
         let crow = &mut chunk[base..base + w];
         crow.fill(0.0);
         for (kk, &av) in arow.iter().enumerate() {
-            axpy(av, b.row(kk), crow);
+            axpy_scalar_ref(av, b.row(kk), crow);
         }
     }
 }
 
-/// y += alpha * x, 8-way unrolled.
+// ---------------------------------------------------------------------
+// Lane-based vector primitives
+// ---------------------------------------------------------------------
+
+/// y += alpha * x, 8-lane vectorised with a scalar remainder.
+///
+/// **Contract: `x.len() == y.len()`**, enforced unconditionally (a
+/// single predictable branch): these used to compute over
+/// `min(x.len(), y.len())`, which turned upstream shape bugs into
+/// silently wrong numbers instead of a panic — in *either* direction,
+/// so a debug-only check on one side would not be enough.
 #[inline]
-pub(crate) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    let n = x.len().min(y.len());
-    let chunks = n / 8;
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(
+        x.len(),
+        y.len(),
+        "axpy length mismatch: x has {}, y has {}",
+        x.len(),
+        y.len()
+    );
+    let n = x.len();
+    let y = &mut y[..n];
+    let av = F32x8::splat(alpha);
+    let chunks = n / LANES;
     for c in 0..chunks {
-        let o = c * 8;
-        // manual unroll — the autovectorizer turns this into fma lanes
-        y[o] += alpha * x[o];
-        y[o + 1] += alpha * x[o + 1];
-        y[o + 2] += alpha * x[o + 2];
-        y[o + 3] += alpha * x[o + 3];
-        y[o + 4] += alpha * x[o + 4];
-        y[o + 5] += alpha * x[o + 5];
-        y[o + 6] += alpha * x[o + 6];
-        y[o + 7] += alpha * x[o + 7];
+        let o = c * LANES;
+        let xv = F32x8::load(&x[o..]);
+        let yv = F32x8::load(&y[o..]);
+        xv.mul_add(av, yv).store(&mut y[o..]);
     }
-    for i in chunks * 8..n {
+    for i in chunks * LANES..n {
         y[i] += alpha * x[i];
     }
 }
 
-/// Unrolled dot product with 4 accumulators (breaks the dependency chain).
+/// Dot product: one 8-lane accumulator (fixed-tree horizontal sum) plus
+/// an in-order scalar remainder.
+///
+/// **Contract: `x.len() == y.len()`**, enforced unconditionally — same
+/// rationale as [`axpy`].
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
-    let n = x.len().min(y.len());
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    let chunks = n / 4;
+    assert_eq!(
+        x.len(),
+        y.len(),
+        "dot length mismatch: x has {}, y has {}",
+        x.len(),
+        y.len()
+    );
+    let n = x.len();
+    let y = &y[..n];
+    let chunks = n / LANES;
+    let mut acc = F32x8::ZERO;
     for c in 0..chunks {
-        let o = c * 4;
-        s0 += x[o] * y[o];
-        s1 += x[o + 1] * y[o + 1];
-        s2 += x[o + 2] * y[o + 2];
-        s3 += x[o + 3] * y[o + 3];
+        let o = c * LANES;
+        acc = F32x8::load(&x[o..]).mul_add(F32x8::load(&y[o..]), acc);
     }
-    let mut tail = 0.0;
-    for i in chunks * 4..n {
+    let mut tail = 0.0f32;
+    for i in chunks * LANES..n {
         tail += x[i] * y[i];
     }
-    s0 + s1 + s2 + s3 + tail
+    acc.hsum() + tail
 }
 
 #[cfg(test)]
@@ -361,6 +621,103 @@ mod tests {
                 got.max_abs_diff(&want)
             );
         }
+    }
+
+    #[test]
+    fn microkernel_edge_tiles_match_naive() {
+        // every (m, n, k) below the MR/NR/LANES tile sizes, plus shapes
+        // straddling one tile boundary — the edge paths of the kernel
+        let mut rng = Pcg32::seeded(31);
+        let dims = [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17];
+        for &m in &dims {
+            for &n in &dims {
+                for &k in &[1usize, 2, 7, 8, 9] {
+                    let a = rand_mat(&mut rng, m, k);
+                    let b = rand_mat(&mut rng, k, n);
+                    let want = naive(&a, &b);
+                    let got = matmul(&a, &b);
+                    assert!(
+                        got.max_abs_diff(&want) < 1e-4,
+                        "NN ({m},{k},{n}): {}",
+                        got.max_abs_diff(&want)
+                    );
+                    let bt = b.transpose();
+                    let mut nt = Mat::zeros(0, 0);
+                    matmul_nt_view(
+                        MatView::full(&a),
+                        MatView::full(&bt),
+                        &mut nt,
+                        1,
+                    );
+                    assert!(
+                        nt.max_abs_diff(&want) < 1e-4,
+                        "NT ({m},{k},{n}): {}",
+                        nt.max_abs_diff(&want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar_bitwise() {
+        // the microkernel replays the scalar kernel's exact per-element
+        // operation sequence on the A·B paths (ascending k, unfused
+        // mul-add, one accumulator) — so outputs are bitwise equal, not
+        // merely close
+        let mut rng = Pcg32::seeded(32);
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 5, 7), (16, 16, 16), (17, 33, 9), (65, 300, 70)]
+        {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let (av, bv) = (MatView::full(&a), MatView::full(&b));
+            let mut simd = Mat::zeros(0, 0);
+            let mut scal = Mat::zeros(0, 0);
+            let mut gs = GemmScratch::new();
+            gs.set_scalar(false);
+            matmul_view_in(av, bv, &mut simd, 1, &mut gs);
+            matmul_view_in(av, bv, &mut scal, 1, &mut GemmScratch::scalar());
+            assert_eq!(simd.data, scal.data, "NN ({m},{k},{n}) diverged");
+            // the column-block variant shares the kernel
+            let mut wide_simd = Mat::filled_with(m, n + 5, |_, _| 9.0);
+            let mut wide_scal = wide_simd.clone();
+            matmul_view_cols_in(av, bv, &mut wide_simd, 3, 1, &mut gs);
+            matmul_view_cols_in(
+                av,
+                bv,
+                &mut wide_scal,
+                3,
+                1,
+                &mut GemmScratch::scalar(),
+            );
+            assert_eq!(wide_simd.data, wide_scal.data, "cols ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn nt_simd_matches_scalar_within_tolerance() {
+        // the NT path changed accumulation shape (packed panels vs the
+        // old 4-way split dot), so scalar and SIMD agree to rounding,
+        // both anchored to the f64 reference
+        let mut rng = Pcg32::seeded(33);
+        let a = rand_mat(&mut rng, 13, 21);
+        let b = rand_mat(&mut rng, 17, 21);
+        let want = naive(&a, &b.transpose());
+        let mut simd = Mat::zeros(0, 0);
+        let mut scal = Mat::zeros(0, 0);
+        let mut gs = GemmScratch::new();
+        gs.set_scalar(false);
+        matmul_nt_view_in(MatView::full(&a), MatView::full(&b), &mut simd, 1, &mut gs);
+        matmul_nt_view_in(
+            MatView::full(&a),
+            MatView::full(&b),
+            &mut scal,
+            1,
+            &mut GemmScratch::scalar(),
+        );
+        assert!(simd.max_abs_diff(&want) < 1e-4);
+        assert!(scal.max_abs_diff(&want) < 1e-4);
     }
 
     #[test]
@@ -423,6 +780,59 @@ mod tests {
     }
 
     #[test]
+    fn simd_path_overwrites_stale_garbage_without_a_zeroing_pass() {
+        // the SIMD entry points skip the O(m·n) reset: every element
+        // must still be stored over, including across shape changes
+        // that leave NaN garbage in the reused buffer's prefix
+        let mut rng = Pcg32::seeded(15);
+        let mut gs = GemmScratch::new();
+        gs.set_scalar(false);
+        let mut c = Mat::zeros(0, 0);
+        for &(m, k, n) in &[(9, 7, 11), (3, 5, 4), (21, 2, 17)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            c.data.iter_mut().for_each(|x| *x = f32::NAN);
+            matmul_view_in(MatView::full(&a), MatView::full(&b), &mut c, 1, &mut gs);
+            assert_eq!((c.rows, c.cols), (m, n));
+            // f32::max ignores NaN, so max_abs_diff alone can't catch a
+            // leaked NaN — check finiteness explicitly first
+            assert!(
+                c.data.iter().all(|x| x.is_finite()),
+                "NN ({m},{k},{n}) leaked stale garbage"
+            );
+            let want = naive(&a, &b);
+            assert!(c.max_abs_diff(&want) < 1e-4, "NN ({m},{k},{n})");
+            let bt = rand_mat(&mut rng, n, k);
+            c.data.iter_mut().for_each(|x| *x = f32::NAN);
+            matmul_nt_view_in(MatView::full(&a), MatView::full(&bt), &mut c, 1, &mut gs);
+            assert!(
+                c.data.iter().all(|x| x.is_finite()),
+                "NT ({m},{k},{n}) leaked stale garbage"
+            );
+        }
+    }
+
+    #[test]
+    fn pack_scratch_is_reused_across_calls() {
+        // a caller-owned GemmScratch must reach steady state: same pack
+        // allocation for repeated same-shape products
+        let mut rng = Pcg32::seeded(14);
+        let a = rand_mat(&mut rng, 12, 20);
+        let b = rand_mat(&mut rng, 20, 24);
+        let mut c = Mat::zeros(0, 0);
+        let mut gs = GemmScratch::new();
+        gs.set_scalar(false);
+        matmul_view_in(MatView::full(&a), MatView::full(&b), &mut c, 1, &mut gs);
+        let ptr = gs.pack.as_ptr();
+        let cap = gs.pack.capacity_floats();
+        for _ in 0..3 {
+            matmul_view_in(MatView::full(&a), MatView::full(&b), &mut c, 1, &mut gs);
+            assert_eq!(gs.pack.as_ptr(), ptr, "pack buffer reallocated");
+            assert_eq!(gs.pack.capacity_floats(), cap);
+        }
+    }
+
+    #[test]
     fn strided_views_match_materialized_slices() {
         let mut rng = Pcg32::seeded(5);
         let packed = rand_mat(&mut rng, 13, 12); // 3 heads × 4 cols
@@ -471,6 +881,14 @@ mod tests {
         assert!(plan_threads(512, 512, 512, 8) > 1);
         // never more workers than rows
         assert_eq!(plan_threads(2, 4096, 4096, 8), 2);
+        // a GEMM just past the threshold gets a partial fan-out, not the
+        // whole budget
+        let m = 16;
+        let kn = 512;
+        let flops = 2 * m * kn * kn;
+        assert!(flops >= PAR_FLOP_THRESHOLD && flops < 2 * PAR_FLOP_THRESHOLD);
+        let t = plan_threads(m, kn, kn, 64);
+        assert!(t > 1 && t <= 8, "marginal GEMM over-fanned: {t}");
     }
 
     #[test]
@@ -497,6 +915,50 @@ mod tests {
         let y: Vec<f32> = (0..37).map(|i| (37 - i) as f32).collect();
         let want: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
         assert!((dot(&x, &y) - want).abs() < 1e-2);
+    }
+
+    #[test]
+    fn axpy_and_dot_cover_every_remainder_lane() {
+        // every length 0..=2·LANES: full vectors, the scalar tail, and
+        // the empty case — axpy bitwise vs the scalar recurrence, dot
+        // against an f64 reference
+        for n in 0..=2 * LANES {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 + 1.0) * 0.25).collect();
+            let mut y: Vec<f32> = (0..n).map(|i| i as f32 - 3.0).collect();
+            let mut want = y.clone();
+            for i in 0..n {
+                want[i] += 1.5 * x[i];
+            }
+            axpy(1.5, &x, &mut y);
+            assert_eq!(y, want, "axpy len {n}");
+
+            let z: Vec<f32> = (0..n).map(|i| 0.5 - i as f32).collect();
+            let want: f64 = x
+                .iter()
+                .zip(&z)
+                .map(|(a, b)| f64::from(*a) * f64::from(*b))
+                .sum();
+            assert!(
+                (f64::from(dot(&x, &z)) - want).abs() < 1e-3,
+                "dot len {n}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "axpy length mismatch")]
+    fn axpy_length_mismatch_panics() {
+        let x = [1.0f32; 5];
+        let mut y = [0.0f32; 4];
+        axpy(2.0, &x, &mut y);
+    }
+
+    #[test]
+    #[should_panic(expected = "dot length mismatch")]
+    fn dot_length_mismatch_panics() {
+        // the short-x direction — exactly the case a debug-only or
+        // slice-based check would let slide in release builds
+        dot(&[1.0, 2.0], &[1.0, 2.0, 3.0]);
     }
 
     #[test]

@@ -1,0 +1,530 @@
+//! Explicit SIMD-width-aware GEMM microkernel: portable 8-lane f32
+//! vectors, an `MR×NR` register-tiled inner kernel, and B-panel packing
+//! into lane-aligned scratch.
+//!
+//! Every GEMM entry point in [`super::gemm`] routes through
+//! [`gemm_chunk`] (unless the `scalar-gemm` feature pins the old
+//! autovectorizer-dependent kernels for baseline measurements), in both
+//! the serial and pool-parallel regimes — one kernel, one accumulation
+//! order, everywhere.
+//!
+//! # Lane width
+//!
+//! [`F32x8`] is an array-of-8 wrapper (`#[repr(align(32))]`, one AVX
+//! register worth of f32) with elementwise `add`/`mul`/[`F32x8::mul_add`].
+//! It compiles on stable Rust: the elementwise loops are exactly the
+//! shape LLVM's SLP vectorizer turns into `mulps`/`addps` lanes, without
+//! relying on it to *discover* the vector shape in a blocked scalar GEMM
+//! the way the old kernel did.  `mul_add` is deliberately an **unfused**
+//! multiply-then-add: a fused `f32::mul_add` falls back to a libm `fmaf`
+//! call on targets compiled without `+fma` (catastrophically slow) and
+//! changes results by one rounding, which would break the bitwise
+//! scalar↔SIMD equivalence pinned in `gemm`'s tests.  Upgrading to
+//! `std::simd` (and optional true FMA) later only means swapping this
+//! struct's internals.
+//!
+//! # Tiling
+//!
+//! The microkernel computes an [`MR`]`×`[`NR`] block of C held entirely
+//! in registers: `MR = 4` rows × `NR = 16` columns = 8 live [`F32x8`]
+//! accumulators — enough independent dependency chains to cover FP add
+//! latency, few enough to stay out of spill territory on 16-register
+//! targets.  For each k step it broadcasts one A element per row and
+//! multiplies two packed B lanes, so the inner loop is 2 loads + `MR`
+//! broadcasts + `2·MR` multiply-adds.
+//!
+//! # Packing
+//!
+//! B is packed once per GEMM call (before the row-chunk fork, so every
+//! pool task reads the same panels) into [`PackBuf`]: `NR`-wide,
+//! K-major column panels, lane-aligned because the buffer stores whole
+//! [`F32x8`]s.  Packing makes the kernel's B loads unit-stride and
+//! cache-line aligned regardless of the source view's stride — it is
+//! also where `A·Bᵀ` becomes the *same* kernel as `A·B` (the transpose
+//! happens in the pack, nowhere else).  Tail panels are zero-padded to
+//! `NR`; the padding multiplies into accumulator lanes that are never
+//! stored, so it cannot leak into results (and a NaN/Inf in a *live*
+//! lane still propagates — there is no zero-skip anywhere).
+//!
+//! The buffer is reusable and never shrinks: the encoder owns one inside
+//! its `EncodeScratch` (via [`super::gemm::GemmScratch`]), so the warm
+//! forward pass performs zero packing allocations — pinned by
+//! `tests/alloc_free.rs`.
+//!
+//! # Determinism
+//!
+//! Every output element is one accumulator updated in ascending-`k`
+//! order with unfused multiply-adds; K-blocking only round-trips the
+//! accumulator through memory (lossless for f32).  That is the exact
+//! operation sequence of the old scalar `axpy` kernel, so `A·B` results
+//! are **bitwise identical** to the scalar fallback, and — as before —
+//! bitwise identical for any thread cap, chunking or pool size (each
+//! row's value never depends on which chunk or tile it landed in).
+
+use super::MatView;
+
+/// f32 lanes per vector — one 256-bit register.
+pub const LANES: usize = 8;
+/// Microkernel rows (A elements broadcast per k step).
+pub const MR: usize = 4;
+/// Microkernel columns (two [`F32x8`]s wide).
+pub const NR: usize = 2 * LANES;
+/// K-blocking depth: one `KC × NR` packed panel slice is ≤ 16 KiB, so
+/// the panel the inner loop streams stays L1-resident.
+pub const KC: usize = 256;
+
+/// Portable 8-lane f32 vector: an aligned array the optimizer lowers to
+/// one SIMD register.  All ops are elementwise; `mul_add` is unfused
+/// (see module docs).
+#[derive(Debug, Clone, Copy)]
+#[repr(C, align(32))]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    pub const ZERO: F32x8 = F32x8([0.0; LANES]);
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; LANES])
+    }
+
+    /// Load the first [`LANES`] values of `src`.
+    #[inline(always)]
+    pub fn load(src: &[f32]) -> F32x8 {
+        let mut out = [0.0; LANES];
+        out.copy_from_slice(&src[..LANES]);
+        F32x8(out)
+    }
+
+    /// Load up to [`LANES`] values; missing lanes are zero.
+    #[inline(always)]
+    pub fn load_partial(src: &[f32]) -> F32x8 {
+        let n = src.len().min(LANES);
+        let mut out = [0.0; LANES];
+        out[..n].copy_from_slice(&src[..n]);
+        F32x8(out)
+    }
+
+    /// Store all lanes into the first [`LANES`] slots of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [f32]) {
+        dst[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Store only the first `min(dst.len(), LANES)` lanes.
+    #[inline(always)]
+    pub fn store_partial(self, dst: &mut [f32]) {
+        let n = dst.len().min(LANES);
+        dst[..n].copy_from_slice(&self.0[..n]);
+    }
+
+    /// `self * a + b`, elementwise, as a separate multiply and add (not
+    /// IEEE-fused) — bitwise identical to the scalar kernel's
+    /// `acc += x * y` on every target.
+    #[inline(always)]
+    pub fn mul_add(self, a: F32x8, b: F32x8) -> F32x8 {
+        let mut out = [0.0; LANES];
+        for i in 0..LANES {
+            out[i] = self.0[i] * a.0[i] + b.0[i];
+        }
+        F32x8(out)
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: F32x8) -> F32x8 {
+        let mut out = [0.0; LANES];
+        for i in 0..LANES {
+            out[i] = self.0[i] + o.0[i];
+        }
+        F32x8(out)
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: F32x8) -> F32x8 {
+        let mut out = [0.0; LANES];
+        for i in 0..LANES {
+            out[i] = self.0[i] * o.0[i];
+        }
+        F32x8(out)
+    }
+
+    /// Horizontal sum in a fixed pairwise tree —
+    /// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` — so reductions are
+    /// deterministic across targets.
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let l = self.0;
+        ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+    }
+}
+
+/// Reusable, lane-aligned packing scratch.  Backed by whole [`F32x8`]s
+/// so the panel base is always 32-byte aligned; grows monotonically and
+/// never shrinks, so a warm caller (the encoder scratch, the
+/// thread-local fallback in `gemm`) packs allocation-free.
+#[derive(Debug, Default)]
+pub struct PackBuf {
+    lanes: Vec<F32x8>,
+}
+
+impl PackBuf {
+    pub fn new() -> PackBuf {
+        PackBuf::default()
+    }
+
+    /// Current capacity in floats (tests assert warm stability).
+    pub fn capacity_floats(&self) -> usize {
+        self.lanes.capacity() * LANES
+    }
+
+    /// Base pointer — lets buffer-reuse tests assert no reallocation.
+    pub fn as_ptr(&self) -> *const f32 {
+        self.lanes.as_ptr().cast()
+    }
+
+    /// Grow (never shrink) to at least `floats` and return the flat
+    /// mutable view of exactly that many floats.
+    fn flat_mut(&mut self, floats: usize) -> &mut [f32] {
+        let need = (floats + LANES - 1) / LANES;
+        if self.lanes.len() < need {
+            self.lanes.resize(need, F32x8::ZERO);
+        }
+        // SAFETY: F32x8 is repr(C), exactly LANES f32s, no padding, and
+        // align(32) ≥ align(f32), so a lane slice reinterprets soundly
+        // as a float slice of LANES× the length.
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.lanes.as_mut_ptr().cast::<f32>(),
+                floats,
+            )
+        }
+    }
+}
+
+/// Number of [`NR`]-wide panels covering `n` columns.
+#[inline]
+fn panels(n: usize) -> usize {
+    (n + NR - 1) / NR
+}
+
+/// Pack `b` (k × n, the `A·B` orientation) into K-major `NR`-wide
+/// panels: element `(kk, j0+jj)` lands at `(p·k + kk)·NR + jj` for panel
+/// `p = j0/NR`.  Tail-panel columns beyond `n` are zeroed.
+pub fn pack_nn<'a>(buf: &'a mut PackBuf, b: MatView<'_>) -> &'a [f32] {
+    let (k, n) = (b.rows, b.cols);
+    let dst = buf.flat_mut(panels(n) * k * NR);
+    for p in 0..panels(n) {
+        let j0 = p * NR;
+        let w = (n - j0).min(NR);
+        let base = p * k * NR;
+        for kk in 0..k {
+            let o = base + kk * NR;
+            dst[o..o + w].copy_from_slice(&b.row(kk)[j0..j0 + w]);
+            dst[o + w..o + NR].fill(0.0);
+        }
+    }
+    dst
+}
+
+/// Pack `b` (n × k, the `A·Bᵀ` orientation: C column `j` is B *row* `j`)
+/// into the same K-major panel layout as [`pack_nn`] — the transpose
+/// happens here, so the microkernel never sees it.
+pub fn pack_nt<'a>(buf: &'a mut PackBuf, b: MatView<'_>) -> &'a [f32] {
+    let (n, k) = (b.rows, b.cols);
+    let dst = buf.flat_mut(panels(n) * k * NR);
+    for p in 0..panels(n) {
+        let j0 = p * NR;
+        let w = (n - j0).min(NR);
+        let base = p * k * NR;
+        for jj in 0..w {
+            let row = b.row(j0 + jj);
+            for (kk, &v) in row.iter().enumerate() {
+                dst[base + kk * NR + jj] = v;
+            }
+        }
+        for jj in w..NR {
+            for kk in 0..k {
+                dst[base + kk * NR + jj] = 0.0;
+            }
+        }
+    }
+    dst
+}
+
+/// Full `MR × NR` register tile over one K-block.
+///
+/// `c` starts at the tile origin with row stride `cs`; `first` means
+/// this is the k0 == 0 block, so accumulators start at zero instead of
+/// reloading C (C may hold stale garbage — see `matmul_view_cols`).
+#[inline(always)]
+fn tile_full(
+    a: MatView<'_>,
+    row0: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    c: &mut [f32],
+    cs: usize,
+    first: bool,
+) {
+    let a0 = &a.row(row0)[k0..k0 + kc];
+    let a1 = &a.row(row0 + 1)[k0..k0 + kc];
+    let a2 = &a.row(row0 + 2)[k0..k0 + kc];
+    let a3 = &a.row(row0 + 3)[k0..k0 + kc];
+    let (mut c00, mut c01, mut c10, mut c11, mut c20, mut c21, mut c30, mut c31) =
+        if first {
+            let z = F32x8::ZERO;
+            (z, z, z, z, z, z, z, z)
+        } else {
+            (
+                F32x8::load(&c[0..]),
+                F32x8::load(&c[LANES..]),
+                F32x8::load(&c[cs..]),
+                F32x8::load(&c[cs + LANES..]),
+                F32x8::load(&c[2 * cs..]),
+                F32x8::load(&c[2 * cs + LANES..]),
+                F32x8::load(&c[3 * cs..]),
+                F32x8::load(&c[3 * cs + LANES..]),
+            )
+        };
+    for kk in 0..kc {
+        let b0 = F32x8::load(&panel[kk * NR..]);
+        let b1 = F32x8::load(&panel[kk * NR + LANES..]);
+        let s0 = F32x8::splat(a0[kk]);
+        c00 = b0.mul_add(s0, c00);
+        c01 = b1.mul_add(s0, c01);
+        let s1 = F32x8::splat(a1[kk]);
+        c10 = b0.mul_add(s1, c10);
+        c11 = b1.mul_add(s1, c11);
+        let s2 = F32x8::splat(a2[kk]);
+        c20 = b0.mul_add(s2, c20);
+        c21 = b1.mul_add(s2, c21);
+        let s3 = F32x8::splat(a3[kk]);
+        c30 = b0.mul_add(s3, c30);
+        c31 = b1.mul_add(s3, c31);
+    }
+    c00.store(&mut c[0..]);
+    c01.store(&mut c[LANES..]);
+    c10.store(&mut c[cs..]);
+    c11.store(&mut c[cs + LANES..]);
+    c20.store(&mut c[2 * cs..]);
+    c21.store(&mut c[2 * cs + LANES..]);
+    c30.store(&mut c[3 * cs..]);
+    c31.store(&mut c[3 * cs + LANES..]);
+}
+
+/// Edge tile: `mr ≤ MR` rows, `nr ≤ NR` live columns (partial loads and
+/// stores; padded panel lanes accumulate into lanes that are never
+/// stored).  Same per-element operation order as [`tile_full`], so a
+/// row's value does not depend on which tile shape computed it.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_edge(
+    a: MatView<'_>,
+    row0: usize,
+    mr: usize,
+    k0: usize,
+    kc: usize,
+    panel: &[f32],
+    c: &mut [f32],
+    cs: usize,
+    nr: usize,
+    first: bool,
+) {
+    let mut acc = [[F32x8::ZERO; 2]; MR];
+    if !first {
+        for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
+            let row = &c[r * cs..r * cs + nr];
+            acc_r[0] = F32x8::load_partial(row);
+            acc_r[1] = F32x8::load_partial(&row[row.len().min(LANES)..]);
+        }
+    }
+    for kk in 0..kc {
+        let b0 = F32x8::load(&panel[kk * NR..]);
+        let b1 = F32x8::load(&panel[kk * NR + LANES..]);
+        for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
+            let s = F32x8::splat(a.row(row0 + r)[k0 + kk]);
+            acc_r[0] = b0.mul_add(s, acc_r[0]);
+            acc_r[1] = b1.mul_add(s, acc_r[1]);
+        }
+    }
+    for (r, acc_r) in acc.iter().enumerate().take(mr) {
+        let row = &mut c[r * cs..r * cs + nr];
+        let split = row.len().min(LANES);
+        let (lo, hi) = row.split_at_mut(split);
+        acc_r[0].store_partial(lo);
+        acc_r[1].store_partial(hi);
+    }
+}
+
+/// Compute one contiguous row chunk of a GEMM against pre-packed B.
+///
+/// `c` holds `rows = c.len()/cs` output rows of stride `cs`; the live
+/// output block is columns `[col0, col0 + n)` of each row (other
+/// columns are untouched).  `row0` is the chunk's global row offset
+/// into A; `packed` is the full [`pack_nn`]/[`pack_nt`] image with
+/// inner dimension `k`.  This is the one kernel every `gemm` entry
+/// point funnels into.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_chunk(
+    a: MatView<'_>,
+    row0: usize,
+    packed: &[f32],
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    cs: usize,
+    col0: usize,
+) {
+    let rows = c.len() / cs;
+    if k == 0 {
+        // no accumulation steps: the contract is still "block fully
+        // overwritten", i.e. zeros
+        for i in 0..rows {
+            c[i * cs + col0..i * cs + col0 + n].fill(0.0);
+        }
+        return;
+    }
+    for p in 0..panels(n) {
+        let j0 = p * NR;
+        let nr = (n - j0).min(NR);
+        let base = p * k * NR;
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = (k - k0).min(KC);
+            let panel = &packed[base + k0 * NR..base + (k0 + kc) * NR];
+            let first = k0 == 0;
+            let mut i0 = 0;
+            while i0 < rows {
+                let mr = (rows - i0).min(MR);
+                let cbase = i0 * cs + col0 + j0;
+                if mr == MR && nr == NR {
+                    tile_full(a, row0 + i0, k0, kc, panel, &mut c[cbase..], cs, first);
+                } else {
+                    tile_edge(
+                        a,
+                        row0 + i0,
+                        mr,
+                        k0,
+                        kc,
+                        panel,
+                        &mut c[cbase..],
+                        cs,
+                        nr,
+                        first,
+                    );
+                }
+                i0 += MR;
+            }
+            k0 += kc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn f32x8_elementwise_ops() {
+        let a = F32x8::splat(2.0);
+        let b = F32x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.mul(b).0, [2.0, 4.0, 6.0, 8.0, 10.0, 12.0, 14.0, 16.0]);
+        assert_eq!(a.add(b).0[7], 10.0);
+        // mul_add = self*a + b, unfused
+        let r = b.mul_add(a, F32x8::splat(1.0));
+        assert_eq!(r.0, [3.0, 5.0, 7.0, 9.0, 11.0, 13.0, 15.0, 17.0]);
+        assert_eq!(b.hsum(), 36.0);
+    }
+
+    #[test]
+    fn partial_load_store_respect_bounds() {
+        let v = F32x8::load_partial(&[1.0, 2.0, 3.0]);
+        assert_eq!(v.0, [1.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let mut out = [9.0f32; 5];
+        v.store_partial(&mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0, 0.0, 0.0]);
+        // empty slices are fine
+        assert_eq!(F32x8::load_partial(&[]).0, [0.0; LANES]);
+        F32x8::splat(1.0).store_partial(&mut []);
+    }
+
+    #[test]
+    fn pack_nn_layout_and_zero_padding() {
+        // 3×5 B: panel 0 holds all 5 columns + 11 zeros per k row
+        let b = Mat::filled_with(3, 5, |r, c| (r * 10 + c) as f32);
+        let mut buf = PackBuf::new();
+        let packed = pack_nn(&mut buf, MatView::full(&b));
+        assert_eq!(packed.len(), 3 * NR);
+        for kk in 0..3 {
+            for jj in 0..5 {
+                assert_eq!(packed[kk * NR + jj], (kk * 10 + jj) as f32);
+            }
+            for jj in 5..NR {
+                assert_eq!(packed[kk * NR + jj], 0.0, "pad must be zero");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_nt_transposes_into_panels() {
+        // B is (n=18 × k=3): two panels; element (kk, j) = b[j][kk]
+        let b = Mat::filled_with(18, 3, |r, c| (r * 100 + c) as f32);
+        let mut buf = PackBuf::new();
+        let packed = pack_nt(&mut buf, MatView::full(&b));
+        assert_eq!(packed.len(), 2 * 3 * NR);
+        // panel 0, kk=2, jj=7 → b.row(7)[2]
+        assert_eq!(packed[2 * NR + 7], 702.0);
+        // panel 1 covers columns 16..18; jj=1 → b.row(17)[0]
+        assert_eq!(packed[3 * NR + 1], 1700.0);
+        // padded columns 18..32 are zero across all kk
+        for kk in 0..3 {
+            for jj in 2..NR {
+                assert_eq!(packed[(3 + kk) * NR + jj], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn packbuf_grows_monotonically_and_reuses() {
+        let mut buf = PackBuf::new();
+        let b_big = Mat::filled_with(20, 40, |r, c| (r + c) as f32);
+        pack_nn(&mut buf, MatView::full(&b_big));
+        let cap = buf.capacity_floats();
+        let ptr = buf.as_ptr();
+        assert!(cap >= 20 * 48);
+        // a smaller pack must not shrink or reallocate
+        let b_small = Mat::filled_with(2, 3, |_, _| 1.0);
+        pack_nn(&mut buf, MatView::full(&b_small));
+        assert_eq!(buf.capacity_floats(), cap);
+        assert_eq!(buf.as_ptr(), ptr, "small pack reallocated the buffer");
+    }
+
+    #[test]
+    fn gemm_chunk_writes_only_its_column_block() {
+        // C is 5 wide, live block is cols [1, 4) — cols 0 and 4 untouched
+        let a = Mat::filled_with(3, 2, |r, c| (r + c) as f32 + 1.0);
+        let b = Mat::filled_with(2, 3, |r, c| (r * 3 + c) as f32);
+        let mut buf = PackBuf::new();
+        let packed = pack_nn(&mut buf, MatView::full(&b));
+        let mut c = vec![7.0f32; 3 * 5];
+        gemm_chunk(MatView::full(&a), 0, packed, 2, 3, &mut c, 5, 1);
+        for i in 0..3 {
+            assert_eq!(c[i * 5], 7.0, "col 0 clobbered");
+            assert_eq!(c[i * 5 + 4], 7.0, "col 4 clobbered");
+            for j in 0..3 {
+                let want: f32 = (0..2)
+                    .map(|kk| a.at(i, kk) * b.at(kk, j))
+                    .sum();
+                assert_eq!(c[i * 5 + 1 + j], want);
+            }
+        }
+        // k == 0 zeroes the block (and only the block) even over garbage
+        gemm_chunk(MatView::full(&a).first_cols(0), 0, &[], 0, 3, &mut c, 5, 1);
+        for i in 0..3 {
+            assert_eq!(c[i * 5], 7.0);
+            assert_eq!(&c[i * 5 + 1..i * 5 + 4], &[0.0; 3]);
+        }
+    }
+}

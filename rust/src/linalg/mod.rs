@@ -3,9 +3,10 @@
 //! Used by (a) the pure-Rust reference transformer in [`crate::model`]
 //! (the CPU baseline independent of XLA), (b) the Fig 1 spectrum analysis
 //! (SVD of attention matrices), and (c) assorted substrates.  Not intended
-//! to compete with BLAS — but the gemm is blocked, unrolled and
-//! multi-threaded (see [`gemm`]) so the Rust baseline is compute- rather
-//! than overhead-bound, and [`MatView`] gives zero-copy strided access to
+//! to compete with BLAS — but the gemm runs an explicit SIMD-width-aware
+//! register-tiled microkernel over packed B panels (see [`kernel`] and
+//! [`gemm`]) and is multi-threaded, so the Rust baseline is compute-
+//! rather than overhead-bound, and [`MatView`] gives zero-copy strided access to
 //! sub-matrices (per-head Q/K/V slices, parameter tensors, sliced E/F
 //! projections) so the encoder hot path never copies its inputs.  All
 //! parallel work executes on the persistent process-wide [`pool`], which
@@ -13,6 +14,7 @@
 //! flight.
 
 pub mod gemm;
+pub mod kernel;
 pub mod pool;
 pub mod svd;
 
@@ -138,6 +140,18 @@ impl Mat {
         self.data.resize(rows * cols, 0.0);
     }
 
+    /// Reshape in place **without** zeroing surviving elements — for
+    /// callers that provably overwrite every element before reading it
+    /// (the SIMD GEMM entry points, whose first-k-block tiles start
+    /// their accumulators at zero instead of loading C).  Elements the
+    /// buffer grows by are still zero; stale values can only remain in
+    /// the reused prefix, which the caller must fully store over.
+    pub fn resize_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Become a copy of `src`, reusing the existing allocation.
     pub fn copy_from(&mut self, src: &Mat) {
         self.rows = src.rows;
@@ -211,10 +225,31 @@ impl<'a> MatView<'a> {
 }
 
 /// Numerically-stable in-place row softmax.
+///
+/// A **fully-masked row** (every logit `-inf`, e.g. an empty or wholly
+/// padded attention slice) is defined to produce the **uniform**
+/// distribution `1/n` — the same output as an all-zero logit row.
+/// Without the guard, `max = -inf` makes every shifted logit
+/// `-inf - -inf = NaN`, the row sum `0·NaN`, and the normalised row all
+/// NaN — which then poisons every downstream matmul.  Uniform keeps the
+/// "rows are stochastic" invariant the attention tests pin, and bounds
+/// the downstream context at the mean of V instead of corrupting it.
 pub fn softmax_rows(m: &mut Mat) {
     for r in 0..m.rows {
         let row = m.row_mut(r);
         let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        if max == f32::NEG_INFINITY {
+            // `f32::max` ignores NaN, so an all-NaN (or NaN + -inf) row
+            // also lands here — that is upstream *corruption*, not a
+            // mask, and must keep propagating as NaN (the same
+            // invariant the gemm's no-zero-skip rule pins).  Only a
+            // genuinely all--inf (or empty) row takes the uniform exit.
+            if row.iter().all(|x| *x == f32::NEG_INFINITY) {
+                let inv = 1.0 / row.len() as f32;
+                row.fill(inv);
+                continue;
+            }
+        }
         let mut sum = 0.0;
         for x in row.iter_mut() {
             *x = (*x - max).exp();
@@ -274,6 +309,49 @@ mod tests {
         }
         assert!((m.at(0, 0) - 1.0 / 3.0).abs() < 1e-5);
         assert!(m.at(1, 2) > m.at(1, 1) && m.at(1, 1) > m.at(1, 0));
+    }
+
+    #[test]
+    fn softmax_fully_masked_row_is_uniform() {
+        // an all--inf row used to become sum == 0 → inv = inf → NaN row;
+        // it must yield the documented uniform distribution instead, and
+        // leave neighbouring rows untouched
+        let ninf = f32::NEG_INFINITY;
+        let mut m = Mat::from_vec(
+            3,
+            4,
+            vec![
+                0.0, 1.0, 2.0, 3.0, // normal row
+                ninf, ninf, ninf, ninf, // fully masked
+                ninf, ninf, 5.0, ninf, // partially masked
+            ],
+        );
+        softmax_rows(&mut m);
+        assert!(m.data.iter().all(|x| x.is_finite()), "NaN leaked: {m:?}");
+        assert_eq!(m.row(1), &[0.25; 4], "masked row must be uniform");
+        for r in [0usize, 2] {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {r} sum {s}");
+        }
+        // a partially masked row puts all mass on the live logit
+        assert!((m.at(2, 2) - 1.0).abs() < 1e-6);
+        assert_eq!(m.at(2, 0), 0.0);
+    }
+
+    #[test]
+    fn softmax_does_not_launder_nan_rows() {
+        // f32::max ignores NaN, so an all-NaN row also sees max == -inf;
+        // it must stay NaN (upstream corruption has to surface), never
+        // become a plausible-looking uniform distribution
+        let ninf = f32::NEG_INFINITY;
+        let mut m = Mat::from_vec(
+            2,
+            3,
+            vec![f32::NAN, f32::NAN, f32::NAN, f32::NAN, ninf, ninf],
+        );
+        softmax_rows(&mut m);
+        assert!(m.row(0).iter().all(|x| x.is_nan()), "NaN laundered: {m:?}");
+        assert!(m.row(1).iter().any(|x| x.is_nan()), "NaN laundered: {m:?}");
     }
 
     #[test]

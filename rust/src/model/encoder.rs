@@ -19,7 +19,8 @@
 //!   is cached inside the scratch, so the per-layer loop builds no
 //!   `format!` name strings and runs no `Params::lookup` linear scans.
 //! - **Scratch reuse.** All per-layer buffers (pre-LN hidden, packed
-//!   q/k/v, compressed K̄/V̄, attention logits, context, FFN activations)
+//!   q/k/v, compressed K̄/V̄, attention logits, context, FFN activations,
+//!   and the GEMM kernel's lane-aligned B-panel packing buffer)
 //!   live in an [`EncodeScratch`] passed through [`encode_with`]; after a
 //!   warmup call the forward pass performs **zero heap allocations**
 //!   beyond its output matrix in the serial regime (GEMMs below the
@@ -254,6 +255,10 @@ pub struct EncodeScratch {
     /// Interned parameter handles, cached across calls (rebuilt only when
     /// the scratch meets a different `(Params, ModelConfig)`).
     handles: Option<EncoderHandles>,
+    /// GEMM workspace: the lane-aligned B-panel packing buffer (and the
+    /// kernel selection) every hot-path matmul uses — packing reuses
+    /// this allocation instead of touching the heap per call.
+    gs: gemm::GemmScratch,
     h: Mat,
     q: Mat,
     k: Mat,
@@ -288,6 +293,7 @@ impl EncodeScratch {
         EncodeScratch {
             threads: threads.max(1),
             handles: None,
+            gs: gemm::GemmScratch::new(),
             h: z(),
             q: z(),
             k: z(),
@@ -306,16 +312,25 @@ impl EncodeScratch {
         self.threads
     }
 
-    /// Data pointers of the per-layer buffers — lets tests assert the
-    /// buffers are reused (not reallocated) across calls.
+    /// Route this scratch's GEMMs through the pre-SIMD scalar kernels
+    /// (baseline benchmarking; see the `scalar-gemm` feature).
+    pub fn use_scalar_kernel(&mut self, scalar: bool) {
+        self.gs.set_scalar(scalar);
+    }
+
+    /// Data pointers of the per-layer buffers (including the GEMM
+    /// packing buffer) — lets tests assert the buffers are reused (not
+    /// reallocated) across calls.
     pub fn buffer_ptrs(&self) -> Vec<*const f32> {
-        [
+        let mut ptrs: Vec<*const f32> = [
             &self.h, &self.q, &self.k, &self.v, &self.kbar, &self.vbar,
             &self.logits, &self.ctx, &self.attn_out, &self.ff, &self.ff2,
         ]
         .iter()
         .map(|m| m.data.as_ptr() as *const f32)
-        .collect()
+        .collect();
+        ptrs.push(self.gs.pack.as_ptr());
+        ptrs
     }
 }
 
@@ -404,19 +419,21 @@ pub fn encode_with(
             1e-5,
         );
         let t = scratch.threads;
-        gemm::matmul_view(
+        gemm::matmul_view_in(
             MatView::full(&scratch.h),
             params.view_at(lh.ffn_w1),
             &mut scratch.ff,
             gemm::plan_threads(n, d, cfg.d_ff, t),
+            &mut scratch.gs,
         );
         scratch.ff.add_row_vec(params.slice(lh.ffn_b1));
         gelu_inplace(&mut scratch.ff);
-        gemm::matmul_view(
+        gemm::matmul_view_in(
             MatView::full(&scratch.ff),
             params.view_at(lh.ffn_w2),
             &mut scratch.ff2,
             gemm::plan_threads(n, cfg.d_ff, d, t),
+            &mut scratch.gs,
         );
         scratch.ff2.add_row_vec(params.slice(lh.ffn_b2));
         x.add_assign(&scratch.ff2);
@@ -445,7 +462,7 @@ fn attention_layer(
 ) -> Vec<Mat> {
     let lh = &hd.layers[layer];
     let EncodeScratch {
-        threads, h, q, k, v, kbar, vbar, logits, ctx, attn_out, ..
+        threads, gs, h, q, k, v, kbar, vbar, logits, ctx, attn_out, ..
     } = scratch;
     let threads = *threads;
     let n = h.rows;
@@ -454,11 +471,11 @@ fn attention_layer(
     let dh = cfg.d_head();
     let plan = |kdim: usize, ncols: usize| gemm::plan_threads(n, kdim, ncols, threads);
 
-    gemm::matmul_view(MatView::full(h), params.view_at(lh.wq), q, plan(d, d));
+    gemm::matmul_view_in(MatView::full(h), params.view_at(lh.wq), q, plan(d, d), gs);
     q.add_row_vec(params.slice(lh.bq));
-    gemm::matmul_view(MatView::full(h), params.view_at(lh.wk), k, plan(d, d));
+    gemm::matmul_view_in(MatView::full(h), params.view_at(lh.wk), k, plan(d, d), gs);
     k.add_row_vec(params.slice(lh.bk));
-    gemm::matmul_view(MatView::full(h), params.view_at(lh.wv), v, plan(d, d));
+    gemm::matmul_view_in(MatView::full(h), params.view_at(lh.wv), v, plan(d, d), gs);
     v.add_row_vec(params.slice(lh.bv));
 
     ctx.reset(n, d);
@@ -497,8 +514,8 @@ fn attention_layer(
                 };
                 // sliced to the live length — zero-copy views throughout
                 let (ev, fv) = (ev.first_cols(n), fv.first_cols(n));
-                gemm::matmul_view(ev, kh, kbar, gemm::plan_threads(ev.rows, n, dh, threads));
-                gemm::matmul_view(fv, vh, vbar, gemm::plan_threads(fv.rows, n, dh, threads));
+                gemm::matmul_view_in(ev, kh, kbar, gemm::plan_threads(ev.rows, n, dh, threads), gs);
+                gemm::matmul_view_in(fv, vh, vbar, gemm::plan_threads(fv.rows, n, dh, threads), gs);
                 (MatView::full(kbar), MatView::full(vbar))
             }
         };
@@ -513,17 +530,18 @@ fn attention_layer(
         } else {
             &mut *logits
         };
-        gemm::matmul_nt_view(qh, kb, lbuf, plan(dh, kb.rows));
+        gemm::matmul_nt_view_in(qh, kb, lbuf, plan(dh, kb.rows), gs);
         lbuf.scale(scale);
         softmax_rows(lbuf);
-        gemm::matmul_view_cols(MatView::full(lbuf), vb, ctx, col0, plan(kb.rows, dh));
+        gemm::matmul_view_cols_in(MatView::full(lbuf), vb, ctx, col0, plan(kb.rows, dh), gs);
     }
 
-    gemm::matmul_view(
+    gemm::matmul_view_in(
         MatView::full(ctx),
         params.view_at(lh.wo),
         attn_out,
         plan(d, d),
+        gs,
     );
     attn_out.add_row_vec(params.slice(lh.bo));
     mats
@@ -597,25 +615,42 @@ fn conv_into(x: MatView<'_>, w: &[f32], k: usize, out: &mut Mat) {
 /// chunks) execute on the one global pool, concurrent callers — e.g.
 /// several busy serving buckets — share a single compute-thread budget
 /// instead of oversubscribing the machine.
-fn batch_map<F>(n_items: usize, threads: usize, f: F) -> Vec<Mat>
+///
+/// `handles` seeds every worker's scratch with prebuilt [`EncoderHandles`]
+/// (e.g. a model-registry entry's), so batch workers start *warm*: no
+/// per-task parameter-name resolution.  Handles that do not match the
+/// `(params, cfg)` a worker then encounters are simply rebuilt by
+/// [`encode_with`]'s cache check, so a stale pass-through can never
+/// corrupt results.
+fn batch_map<F>(
+    n_items: usize,
+    threads: usize,
+    handles: Option<&EncoderHandles>,
+    f: F,
+) -> Vec<Mat>
 where
     F: Fn(&mut EncodeScratch, usize) -> Mat + Sync,
 {
+    let make_scratch = |t: usize| {
+        let mut s = EncodeScratch::with_threads(t);
+        s.handles = handles.cloned();
+        s
+    };
     let t = threads.min(n_items).max(1);
     if t <= 1 {
         // single worker keeps the caller's full budget for intra-GEMM
         // threading (which still respects the cap it was handed)
-        let mut scratch = EncodeScratch::with_threads(threads.max(1));
+        let mut scratch = make_scratch(threads.max(1));
         return (0..n_items).map(|i| f(&mut scratch, i)).collect();
     }
     let inner = (threads / t).max(1);
     let out: Mutex<Vec<Option<Mat>>> =
         Mutex::new((0..n_items).map(|_| None).collect());
-    let (f, out_ref) = (&f, &out);
+    let (f, out_ref, make_scratch) = (&f, &out, &make_scratch);
     let tasks: Vec<pool::Task<'_>> = (0..t)
         .map(|w| {
             Box::new(move || {
-                let mut scratch = EncodeScratch::with_threads(inner);
+                let mut scratch = make_scratch(inner);
                 let stripe: Vec<(usize, Mat)> = (w..n_items)
                     .step_by(t)
                     .map(|i| (i, f(&mut scratch, i)))
@@ -643,7 +678,18 @@ pub fn encode_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<Mat> {
-    batch_map(seqs.len(), gemm::max_threads(), |scratch, i| {
+    encode_batch_warm(params, cfg, seqs, None)
+}
+
+/// [`encode_batch`] with prebuilt handles (a registry entry's): batch
+/// workers skip the per-scratch parameter-name resolution entirely.
+pub fn encode_batch_warm(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+    handles: Option<&EncoderHandles>,
+) -> Vec<Mat> {
+    batch_map(seqs.len(), gemm::max_threads(), handles, |scratch, i| {
         encode_with(params, cfg, &seqs[i], false, scratch).hidden
     })
 }
@@ -662,11 +708,12 @@ pub fn mlm_logits_with(
     let d = cfg.d_model;
     let t = scratch.threads;
     // dense + gelu + ln in scratch.h (free after encode)
-    gemm::matmul_view(
+    gemm::matmul_view_in(
         MatView::full(&hidden),
         params.view_at(hd.mlm_dense_w),
         &mut scratch.h,
         gemm::plan_threads(n, d, d, t),
+        &mut scratch.gs,
     );
     scratch.h.add_row_vec(params.slice(hd.mlm_dense_b));
     gelu_inplace(&mut scratch.h);
@@ -679,11 +726,12 @@ pub fn mlm_logits_with(
     // tied output embedding: logits = h · W_tokᵀ
     let tok = params.view_at(hd.tok_emb); // (vocab × d)
     let mut logits = Mat::zeros(0, 0);
-    gemm::matmul_nt_view(
+    gemm::matmul_nt_view_in(
         MatView::full(&scratch.h),
         tok,
         &mut logits,
         gemm::plan_threads(n, d, cfg.vocab_size, t),
+        &mut scratch.gs,
     );
     logits.add_row_vec(params.slice(hd.mlm_out_bias));
     scratch.handles = Some(hd);
@@ -701,7 +749,17 @@ pub fn mlm_logits_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<Mat> {
-    batch_map(seqs.len(), gemm::max_threads(), |scratch, i| {
+    mlm_logits_batch_warm(params, cfg, seqs, None)
+}
+
+/// [`mlm_logits_batch`] with prebuilt handles — warm batch workers.
+pub fn mlm_logits_batch_warm(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+    handles: Option<&EncoderHandles>,
+) -> Vec<Mat> {
+    batch_map(seqs.len(), gemm::max_threads(), handles, |scratch, i| {
         mlm_logits_with(params, cfg, &seqs[i], scratch)
     })
 }
@@ -713,7 +771,17 @@ pub fn mlm_predict_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<Vec<u32>> {
-    mlm_logits_batch(params, cfg, seqs)
+    mlm_predict_batch_warm(params, cfg, seqs, None)
+}
+
+/// [`mlm_predict_batch`] with prebuilt handles — warm batch workers.
+pub fn mlm_predict_batch_warm(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+    handles: Option<&EncoderHandles>,
+) -> Vec<Vec<u32>> {
+    mlm_logits_batch_warm(params, cfg, seqs, handles)
         .into_iter()
         .map(|logits| {
             (0..logits.rows)
@@ -748,7 +816,7 @@ pub fn cls_logits_with(
     let hd = scratch.handles.take().expect("handles interned by encode");
     let cls = MatView::new(hidden.row(0), 1, cfg.d_model, cfg.d_model);
     let mut logits = Mat::zeros(0, 0);
-    gemm::matmul_view(cls, params.view_at(hd.cls_w), &mut logits, 1);
+    gemm::matmul_view_in(cls, params.view_at(hd.cls_w), &mut logits, 1, &mut scratch.gs);
     logits.add_row_vec(params.slice(hd.cls_b));
     scratch.handles = Some(hd);
     logits
@@ -764,7 +832,17 @@ pub fn classify_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<(u32, Vec<f32>)> {
-    batch_map(seqs.len(), gemm::max_threads(), |scratch, i| {
+    classify_batch_warm(params, cfg, seqs, None)
+}
+
+/// [`classify_batch`] with prebuilt handles — warm batch workers.
+pub fn classify_batch_warm(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+    handles: Option<&EncoderHandles>,
+) -> Vec<(u32, Vec<f32>)> {
+    batch_map(seqs.len(), gemm::max_threads(), handles, |scratch, i| {
         cls_logits_with(params, cfg, &seqs[i], scratch)
     })
     .into_iter()
@@ -793,7 +871,19 @@ pub fn attn_capture_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<Vec<Vec<Mat>>> {
+    attn_capture_batch_warm(params, cfg, seqs, None)
+}
+
+/// [`attn_capture_batch`] with prebuilt handles — the (serial) capture
+/// scratch starts warm.
+pub fn attn_capture_batch_warm(
+    params: &Params,
+    cfg: &ModelConfig,
+    seqs: &[Vec<u32>],
+    handles: Option<&EncoderHandles>,
+) -> Vec<Vec<Vec<Mat>>> {
     let mut scratch = EncodeScratch::new();
+    scratch.handles = handles.cloned();
     seqs.iter()
         .map(|s| {
             encode_with(params, cfg, s, true, &mut scratch)
@@ -1069,6 +1159,68 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn warm_batch_variants_match_cold_bitwise() {
+        // registry-style prebuilt handles threaded through batch_map:
+        // identical output, and stale handles are rebuilt, never trusted
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 40);
+        let hd = EncoderHandles::build(&p, &cfg);
+        let seqs = vec![
+            toks(&cfg, 9, 70),
+            toks(&cfg, cfg.max_len, 71),
+            toks(&cfg, 3, 72),
+        ];
+        let cold = encode_batch(&p, &cfg, &seqs);
+        let warm = encode_batch_warm(&p, &cfg, &seqs, Some(&hd));
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.data, w.data, "warm encode diverged");
+        }
+        assert_eq!(
+            mlm_predict_batch(&p, &cfg, &seqs),
+            mlm_predict_batch_warm(&p, &cfg, &seqs, Some(&hd))
+        );
+        assert_eq!(
+            classify_batch(&p, &cfg, &seqs),
+            classify_batch_warm(&p, &cfg, &seqs, Some(&hd))
+        );
+        let warm_cap = attn_capture_batch_warm(&p, &cfg, &seqs, Some(&hd));
+        let cold_cap = attn_capture_batch(&p, &cfg, &seqs);
+        for (w, c) in warm_cap.iter().flatten().flatten().zip(
+            cold_cap.iter().flatten().flatten(),
+        ) {
+            assert_eq!(w.data, c.data, "warm capture diverged");
+        }
+        // handles built for a *different* store: encode_with's cache
+        // check must rebuild them rather than read the wrong weights
+        let other = Params::init(&cfg, 41);
+        let stale = encode_batch_warm(&other, &cfg, &seqs, Some(&hd));
+        let fresh = encode_batch(&other, &cfg, &seqs);
+        for (s, f) in stale.iter().zip(&fresh) {
+            assert_eq!(s.data, f.data, "stale handles corrupted output");
+        }
+    }
+
+    #[test]
+    fn scalar_kernel_scratch_agrees_with_simd() {
+        // the A·B paths are bitwise-equal between kernels; the A·Bᵀ path
+        // differs only in accumulation shape, so a full forward pass
+        // agrees to rounding on the tiny config
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 42);
+        let t = toks(&cfg, cfg.max_len, 73);
+        let simd = encode(&p, &cfg, &t, false).hidden;
+        let mut scratch = EncodeScratch::with_threads(1);
+        scratch.use_scalar_kernel(true);
+        let scal = encode_with(&p, &cfg, &t, false, &mut scratch).hidden;
+        assert!(scal.data.iter().all(|x| x.is_finite()));
+        assert!(
+            simd.max_abs_diff(&scal) < 2e-3,
+            "kernels diverged: {}",
+            simd.max_abs_diff(&scal)
+        );
     }
 
     #[test]

@@ -11,9 +11,11 @@ pub mod params;
 
 pub use config::{Attention, ModelConfig, ProjMode, Sharing};
 pub use encoder::{
-    attn_capture_batch, classify_batch, cls_logits_with, encode,
-    encode_batch, encode_with, mlm_logits, mlm_logits_batch,
-    mlm_logits_with, mlm_predict_batch, AttnCapture, EncodeOut,
-    EncodeScratch, EncoderHandles,
+    attn_capture_batch, attn_capture_batch_warm, classify_batch,
+    classify_batch_warm, cls_logits_with, encode, encode_batch,
+    encode_batch_warm, encode_with, mlm_logits, mlm_logits_batch,
+    mlm_logits_batch_warm, mlm_logits_with, mlm_predict_batch,
+    mlm_predict_batch_warm, AttnCapture, EncodeOut, EncodeScratch,
+    EncoderHandles,
 };
 pub use params::{param_count, param_spec, ParamHandle, Params};

@@ -15,7 +15,8 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
 use linformer::model::{
-    encode_with, mlm_logits_with, EncodeScratch, ModelConfig, Params,
+    encode_batch, encode_batch_warm, encode_with, mlm_logits_with,
+    EncodeScratch, EncoderHandles, ModelConfig, Params,
 };
 
 thread_local! {
@@ -82,6 +83,39 @@ fn encode_with_allocates_only_its_output_after_warmup() {
         "warm encode_with must allocate exactly once (the output \
          matrix); extra allocations mean name strings, lookups or \
          scratch regrowth crept back into the hot path"
+    );
+}
+
+#[test]
+fn warm_batched_call_skips_name_resolution() {
+    // a batch handed prebuilt registry handles must not pay the
+    // per-scratch name-resolve pass (≥ 17 `format!` allocations per
+    // layer) that a cold batch performs.  A one-item batch runs inline
+    // on the calling thread, so the thread-local counter sees it; the
+    // per-batch scratch/output allocations are identical on both sides
+    // and cancel out of the comparison.
+    let cfg = ModelConfig::tiny();
+    let params = Params::init(&cfg, 3);
+    let handles = EncoderHandles::build(&params, &cfg);
+    let seqs =
+        vec![(0..16u32).map(|i| i % cfg.vocab_size as u32).collect::<Vec<_>>()];
+    // warm up both paths (thread-local gemm scratch, pool init, …)
+    encode_batch(&params, &cfg, &seqs);
+    encode_batch_warm(&params, &cfg, &seqs, Some(&handles));
+
+    let before = allocs_now();
+    encode_batch(&params, &cfg, &seqs);
+    let cold = allocs_now() - before;
+
+    let before = allocs_now();
+    encode_batch_warm(&params, &cfg, &seqs, Some(&handles));
+    let warm = allocs_now() - before;
+
+    let name_allocs_floor = (10 * cfg.n_layers) as u64;
+    assert!(
+        warm + name_allocs_floor <= cold,
+        "warm batched call saved too little: warm={warm} cold={cold} \
+         (handles are not reaching the batch workers)"
     );
 }
 

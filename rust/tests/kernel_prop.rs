@@ -1,0 +1,160 @@
+//! Property tests for the SIMD GEMM microkernel (`linalg::kernel`).
+//!
+//! Random odd shapes — including every `m, n, k` below the `MR`/`NR`/
+//! lane-width tile sizes, strided A views, and all thread plans — are
+//! checked against three oracles:
+//!
+//! 1. an f64 naive GEMM (accuracy),
+//! 2. the pre-SIMD scalar kernel (bitwise, on the `A·B` paths whose
+//!    accumulation order the microkernel replays exactly),
+//! 3. itself under different worker caps (bitwise thread-determinism).
+//!
+//! Plus an `axpy`/`dot` sweep across every remainder-lane length
+//! `0..=2·LANES`.  The full runs are `#[ignore]`d under tier-1 (debug
+//! kernels would dominate the suite's runtime) and run in release by
+//! `scripts/check.sh`, alongside `pool_stress`; a small smoke case stays
+//! in tier-1.
+
+use linformer::linalg::gemm::{self, GemmScratch};
+use linformer::linalg::kernel::LANES;
+use linformer::linalg::{Mat, MatView};
+use linformer::util::prop::prop_check;
+use linformer::util::rng::Pcg32;
+
+fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat {
+    let mut m = Mat::zeros(r, c);
+    rng.fill_normal(&mut m.data, 1.0);
+    m
+}
+
+/// f64-accumulated reference for C = A·B over views.
+fn naive(a: MatView<'_>, b: MatView<'_>) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0f64;
+            for k in 0..a.cols {
+                s += f64::from(a.row(i)[k]) * f64::from(b.row(k)[j]);
+            }
+            *c.at_mut(i, j) = s as f32;
+        }
+    }
+    c
+}
+
+fn check_one_shape(rng: &mut Pcg32) {
+    // bias toward edge tiles: small dims are as likely as large ones
+    let dim = |rng: &mut Pcg32| match rng.below(3) {
+        0 => rng.range_usize(1, LANES),       // below one lane
+        1 => rng.range_usize(1, 2 * LANES + 2), // straddling NR
+        _ => rng.range_usize(1, 80),
+    };
+    let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+    // A is a strided column window of a wider matrix half the time
+    let a_wide = rand_mat(rng, m, k + 7);
+    let a = if rng.below(2) == 0 {
+        MatView::cols(&a_wide, 3, k)
+    } else {
+        MatView::full(&a_wide).first_cols(k)
+    };
+    let b = rand_mat(rng, k, n);
+    let bv = MatView::full(&b);
+    let want = naive(a, bv);
+    // same tolerance the repo's longstanding naive-comparison tests use
+    // for k in the low hundreds
+    let tol = 1e-3f32;
+
+    // 1. accuracy vs the f64 reference
+    let mut simd = Mat::zeros(0, 0);
+    let mut gs = GemmScratch::new();
+    gs.set_scalar(false);
+    gemm::matmul_view_in(a, bv, &mut simd, 1, &mut gs);
+    assert!(
+        simd.max_abs_diff(&want) < tol,
+        "NN ({m},{k},{n}) off by {}",
+        simd.max_abs_diff(&want)
+    );
+
+    // 2. bitwise vs the scalar kernel on the A·B paths
+    let mut scal = Mat::zeros(0, 0);
+    gemm::matmul_view_in(a, bv, &mut scal, 1, &mut GemmScratch::scalar());
+    assert_eq!(simd.data, scal.data, "NN ({m},{k},{n}) not bitwise-scalar");
+
+    let mut wide_simd = Mat::filled_with(m, n + 3, |_, _| -5.5);
+    let mut wide_scal = wide_simd.clone();
+    gemm::matmul_view_cols_in(a, bv, &mut wide_simd, 2, 1, &mut gs);
+    gemm::matmul_view_cols_in(a, bv, &mut wide_scal, 2, 1, &mut GemmScratch::scalar());
+    assert_eq!(wide_simd.data, wide_scal.data, "cols ({m},{k},{n})");
+    for r in 0..m {
+        assert_eq!(wide_simd.at(r, 0), -5.5, "cols wrote outside block");
+        assert_eq!(wide_simd.at(r, 1), -5.5, "cols wrote outside block");
+    }
+
+    // 3. NT accuracy + thread-count bitwise determinism for both shapes
+    let bt = rand_mat(rng, n, k);
+    let btv = MatView::full(&bt);
+    let mut nt = Mat::zeros(0, 0);
+    gemm::matmul_nt_view_in(a, btv, &mut nt, 1, &mut gs);
+    let want_nt = naive(a, MatView::full(&bt.transpose()));
+    assert!(
+        nt.max_abs_diff(&want_nt) < tol,
+        "NT ({m},{k},{n}) off by {}",
+        nt.max_abs_diff(&want_nt)
+    );
+    for threads in [2usize, 3, 7] {
+        let mut par = Mat::zeros(0, 0);
+        gemm::matmul_view_in(a, bv, &mut par, threads, &mut gs);
+        assert_eq!(simd.data, par.data, "NN ({m},{k},{n}) t={threads}");
+        let mut par_nt = Mat::zeros(0, 0);
+        gemm::matmul_nt_view_in(a, btv, &mut par_nt, threads, &mut gs);
+        assert_eq!(nt.data, par_nt.data, "NT ({m},{k},{n}) t={threads}");
+    }
+}
+
+#[test]
+#[ignore = "heavy (hundreds of random GEMMs); run in release via scripts/check.sh"]
+fn microkernel_random_shapes_match_references() {
+    prop_check("simd microkernel vs naive/scalar/threads", 150, |rng| {
+        check_one_shape(rng);
+    });
+}
+
+#[test]
+#[ignore = "heavy; run in release via scripts/check.sh"]
+fn axpy_dot_every_remainder_lane_random_values() {
+    prop_check("axpy/dot remainder lanes", 100, |rng| {
+        for n in 0..=2 * LANES {
+            let mut x = vec![0.0f32; n];
+            let mut y = vec![0.0f32; n];
+            rng.fill_normal(&mut x, 1.0);
+            rng.fill_normal(&mut y, 1.0);
+            let alpha = rng.normal();
+            // axpy replays the scalar recurrence exactly — bitwise
+            let mut got = y.clone();
+            gemm::axpy(alpha, &x, &mut got);
+            let mut want = y.clone();
+            for i in 0..n {
+                want[i] += alpha * x[i];
+            }
+            assert_eq!(got, want, "axpy len {n} alpha {alpha}");
+            // dot against an f64 reference
+            let want: f64 = x
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| f64::from(*a) * f64::from(*b))
+                .sum();
+            let got = f64::from(gemm::dot(&x, &y));
+            assert!(
+                (got - want).abs() < 1e-3,
+                "dot len {n}: {got} vs {want}"
+            );
+        }
+    });
+}
+
+#[test]
+fn smoke_single_odd_shape() {
+    // tier-1 keeps one cheap case so this binary always runs something
+    let mut rng = Pcg32::seeded(7);
+    check_one_shape(&mut rng);
+}

@@ -48,6 +48,12 @@ cargo test -q
 # it is #[ignore]d under tier-1 and run here in release
 cargo test --release --test pool_stress -- --ignored
 
+# SIMD microkernel property tests: hundreds of random odd-shaped GEMMs
+# vs the f64 naive reference, the scalar kernel (bitwise on A·B paths)
+# and every thread plan, plus the axpy/dot remainder-lane sweep — too
+# slow for debug tier-1 (a smoke case runs there), full sweep in release
+cargo test --release --test kernel_prop -- --ignored
+
 # the scheduler overload ablation is timing-sensitive (burst trace vs
 # SLOs), so it also runs in release only: FIFO must miss deadlines, EDF
 # must shed instead of computing expired work
