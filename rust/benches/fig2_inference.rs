@@ -7,27 +7,36 @@
 //! with `--features pjrt` the artifact-backed half runs too.
 //!
 //! Every measurement is appended to `BENCH_encoder.json` (section
-//! `fig2_inference`) tagged with the GEMM kernel that produced it, and
-//! **both kernels run in one invocation**: the default SIMD microkernel
-//! and the pre-SIMD scalar baseline (`EncodeScratch::use_scalar_kernel`
-//! / `GemmScratch::scalar`), so every record set carries its own
-//! before/after pair at seq_len ∈ {512, 1024, 4096} without a second
-//! checkout.  Note this is a *kernel-isolating* ablation: both sides
-//! run under the current (retuned) `plan_threads` scheduling, so the
-//! scalar records measure the pre-change inner kernel, not a bit-exact
-//! replay of the pre-change build's thread plan.  (A build with
+//! `fig2_inference`) tagged with the GEMM kernel **and weight dtype**
+//! that produced it, and **both kernels run in one invocation**: the
+//! default SIMD microkernel and the pre-SIMD scalar baseline
+//! (`EncodeScratch::use_scalar_kernel` / `GemmScratch::scalar`), so
+//! every record set carries its own before/after pair at seq_len ∈
+//! {512, 1024, 4096} without a second checkout.  Note this is a
+//! *kernel-isolating* ablation: both sides run under the current
+//! (retuned) `plan_threads` scheduling, so the scalar records measure
+//! the pre-change inner kernel, not a bit-exact replay of the
+//! pre-change build's thread plan.  (A build with
 //! `--features scalar-gemm` pins *both* sides to the scalar kernel —
 //! the whole-process fallback.)
 //!
+//! The cached-panel section measures the f32 and int8 weight flavors
+//! **in the same invocation** through the generation-keyed
+//! `PackedWeights` cache (the serving warm path), and appends an
+//! accuracy-delta record: per-row MLM argmax agreement and max
+//! relative logit error of int8 vs the f32 reference.
+//!
 //! Run: `cargo bench --bench fig2_inference`
 
-use linformer::linalg::{gemm, pool, Mat, MatView};
+use linformer::linalg::{gemm, pool, Dtype, Mat, MatView};
 use linformer::model::{
-    encode_batch, encode_with, Attention, EncodeScratch, ModelConfig, Params,
+    encode_batch, encode_with, mlm_logits_batch_warm, Attention,
+    EncodeScratch, EncoderHandles, ModelConfig, Params,
 };
 use linformer::util::json::Json;
 use linformer::util::rng::Pcg32;
 use linformer::util::stats::{bench, bench_record, emit_bench_json};
+use std::sync::Arc;
 
 fn model(n: usize, attention: Attention, k: usize) -> (ModelConfig, Params) {
     let mut cfg = ModelConfig::tiny();
@@ -57,6 +66,9 @@ fn record(
     bench_record(&[
         ("bench", Json::Str(bench_name.into())),
         ("kernel", Json::Str(kernel.into())),
+        // the scalar/SIMD ablation always runs full-precision weights;
+        // the int8 flavor is measured in the cached-panel section below
+        ("dtype", Json::Str("f32".into())),
         ("attention", Json::Str(attention.into())),
         ("seq_len", Json::Num(n as f64)),
         ("k", Json::Num(k as f64)),
@@ -67,6 +79,36 @@ fn record(
         ("pool_workers", Json::Num(pool::global().workers() as f64)),
         ("ns_per_token", Json::Num(ns_per_token)),
     ])
+}
+
+/// Accuracy delta of quantized MLM logits vs the f32 reference:
+/// (fraction of rows whose argmax agrees, max |Δlogit| relative to the
+/// row's f32 magnitude).  Mirrors the gate in `tests/int8_accuracy.rs`.
+fn logit_delta(reference: &Mat, quantized: &Mat) -> (f64, f32) {
+    assert_eq!(reference.rows, quantized.rows);
+    assert_eq!(reference.cols, quantized.cols);
+    let cols = reference.cols;
+    let argmax = |row: &[f32]| {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+    let mut agree = 0usize;
+    let mut max_rel = 0f32;
+    for r in 0..reference.rows {
+        let fr = &reference.data[r * cols..(r + 1) * cols];
+        let qr = &quantized.data[r * cols..(r + 1) * cols];
+        if argmax(fr) == argmax(qr) {
+            agree += 1;
+        }
+        let scale = fr.iter().fold(0f32, |m, v| m.max(v.abs())).max(1e-6);
+        for (a, b) in fr.iter().zip(qr) {
+            max_rel = max_rel.max((a - b).abs() / scale);
+        }
+    }
+    (agree as f64 / reference.rows.max(1) as f64, max_rel)
 }
 
 fn main() {
@@ -115,6 +157,7 @@ fn main() {
         records.push(bench_record(&[
             ("bench", Json::Str("gemm_512".into())),
             ("kernel", Json::Str(kernel.into())),
+            ("dtype", Json::Str("f32".into())),
             ("threads", Json::Num(threads as f64)),
             ("pool_workers", Json::Num(pool::global().workers() as f64)),
             ("serial_s", Json::Num(serial.mean)),
@@ -225,6 +268,97 @@ fn main() {
             "encode_batch", gemm::kernel_name(), "linformer", n, 64, 8,
             threads, batched.mean * 1e9 / total_tokens as f64,
         ));
+    }
+
+    // -- cached panels: f32 vs int8 weight flavors in one run ------------
+    // The serving warm path: prebuilt EncoderHandles + a generation-keyed
+    // PackedWeights cache, so neither flavor re-packs or re-quantizes
+    // weights per call.  The int8 record also carries the accuracy delta
+    // vs the f32 reference (per-row MLM argmax agreement + max relative
+    // logit error), so every record set documents the quantization cost
+    // next to its speedup.
+    println!("\n== cached panels (linformer k=64, MLM logits): f32 vs int8 ==");
+    println!(
+        "{:>6} {:>6} {:>16} {:>8} {:>11} {:>12}",
+        "n", "dtype", "per call", "vs f32", "argmax agr", "max rel err"
+    );
+    for n in [512usize, 1024] {
+        let iters = if n >= 1024 { 3 } else { 5 };
+        let (cfg, params) = model(n, Attention::Linformer, 64);
+        let handles = EncoderHandles::build(&params, &cfg);
+        let tokens: Vec<u32> =
+            (0..n).map(|_| rng.below(cfg.vocab_size as u32)).collect();
+        let seqs = vec![tokens];
+        let mut f32_mean = 0f64;
+        let mut f32_logits: Option<Mat> = None;
+        for dtype in [Dtype::F32, Dtype::Int8] {
+            let packed = Arc::new(handles.pack_weights(&params, dtype));
+            let t = bench(1, iters, || {
+                mlm_logits_batch_warm(
+                    &params,
+                    &cfg,
+                    &seqs,
+                    Some(&handles),
+                    Some(&packed),
+                )[0]
+                    .data[0]
+            });
+            let logits = mlm_logits_batch_warm(
+                &params,
+                &cfg,
+                &seqs,
+                Some(&handles),
+                Some(&packed),
+            )
+            .remove(0);
+            let mut fields = vec![
+                ("bench", Json::Str("mlm_cached_panels".into())),
+                ("kernel", Json::Str(gemm::kernel_name().into())),
+                ("dtype", Json::Str(dtype.name().into())),
+                ("attention", Json::Str("linformer".into())),
+                ("seq_len", Json::Num(n as f64)),
+                ("k", Json::Num(64.0)),
+                ("batch", Json::Num(1.0)),
+                ("threads", Json::Num(threads as f64)),
+                ("pool_workers", Json::Num(pool::global().workers() as f64)),
+                ("ns_per_token", Json::Num(t.mean * 1e9 / n as f64)),
+                ("panel_bytes", Json::Num(packed.bytes() as f64)),
+            ];
+            match &f32_logits {
+                None => {
+                    f32_mean = t.mean;
+                    println!(
+                        "{:>6} {:>6} {:>16} {:>8} {:>11} {:>12}",
+                        n,
+                        dtype.name(),
+                        t.human(),
+                        "1.00x",
+                        "-",
+                        "-"
+                    );
+                    f32_logits = Some(logits);
+                }
+                Some(reference) => {
+                    let (agreement, max_rel) =
+                        logit_delta(reference, &logits);
+                    fields.push(("argmax_agreement", Json::Num(agreement)));
+                    fields.push((
+                        "max_rel_logit_err",
+                        Json::Num(max_rel as f64),
+                    ));
+                    println!(
+                        "{:>6} {:>6} {:>16} {:>7.2}x {:>11.3} {:>12.4}",
+                        n,
+                        dtype.name(),
+                        t.human(),
+                        f32_mean / t.mean,
+                        agreement,
+                        max_rel
+                    );
+                }
+            }
+            records.push(bench_record(&fields));
+        }
     }
 
     emit_bench_json("BENCH_encoder.json", "fig2_inference", records);

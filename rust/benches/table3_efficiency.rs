@@ -11,9 +11,12 @@
 //! reproduction target.
 //!
 //! Measurements are appended to `BENCH_encoder.json` (section
-//! `table3_efficiency`), tagged with the GEMM kernel that produced them;
-//! one invocation measures the grid under **both** the SIMD microkernel
-//! and the pre-SIMD scalar baseline (before/after records).
+//! `table3_efficiency`), tagged with the GEMM kernel and weight dtype
+//! that produced them; one invocation measures the grid under **both**
+//! the SIMD microkernel and the pre-SIMD scalar baseline (before/after
+//! records).  This grid runs full-precision weights — the paired
+//! f32/int8 cached-panel measurement (and its accuracy delta) lives in
+//! `cargo bench --bench fig2_inference`.
 //!
 //! Run: `cargo bench --bench table3_efficiency`
 
@@ -97,6 +100,7 @@ fn main() {
                 records.push(bench_record(&[
                     ("bench", Json::Str("speedup_grid".into())),
                     ("kernel", Json::Str(kernel.into())),
+                    ("dtype", Json::Str("f32".into())),
                     ("seq_len", Json::Num(n as f64)),
                     ("k", Json::Num(k as f64)),
                     ("batch", Json::Num(1.0)),

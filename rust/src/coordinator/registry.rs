@@ -32,14 +32,16 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
 
+use crate::linalg::Dtype;
 use crate::model::{
-    param_count, param_spec, EncoderHandles, ModelConfig, Params,
+    param_count, param_spec, EncoderHandles, ModelConfig, PackedWeights,
+    Params,
 };
 use crate::runtime::checkpoint::{Checkpoint, CkptError};
 
 /// One immutable registered-model snapshot.  Swaps replace the whole
 /// entry — an `Arc<RegistryEntry>` in hand is a consistent
-/// `(config, weights, handles)` triple forever.
+/// `(config, weights, handles, packed panels)` tuple forever.
 pub struct RegistryEntry {
     pub name: String,
     /// Per-name reload counter, starting at 1 for the initial
@@ -47,6 +49,11 @@ pub struct RegistryEntry {
     pub version: u64,
     pub cfg: ModelConfig,
     pub params: Arc<Params>,
+    /// Inference flavor: `f32` runs the weights as stored, `int8` runs
+    /// every weight-side GEMM through the pre-quantized panels in
+    /// `packed` (symmetric per-output-channel weights, dynamic
+    /// per-tensor activations).  Fixed at registration; reloads keep it.
+    pub dtype: Dtype,
     /// Hot-path parameter handles, resolved once at registration —
     /// their construction IS the "this store really contains an
     /// encoder" validation.  Callers driving the encoder directly can
@@ -56,6 +63,12 @@ pub struct RegistryEntry {
     /// batch variants), so every batch worker starts warm — no
     /// per-task parameter-name resolution.
     pub handles: Arc<EncoderHandles>,
+    /// Weight panels pre-packed (for int8: pre-quantized) at
+    /// register/reload time, keyed by this entry's generation: warm
+    /// batch workers do zero per-call weight packing, and a stale cache
+    /// after a swap misses on the generation check rather than serving
+    /// old weights.
+    pub packed: Arc<PackedWeights>,
 }
 
 impl RegistryEntry {
@@ -73,8 +86,10 @@ impl std::fmt::Debug for RegistryEntry {
             .field("name", &self.name)
             .field("version", &self.version)
             .field("generation", &self.generation())
+            .field("dtype", &self.dtype)
             .field("max_len", &self.cfg.max_len)
             .field("params", &self.params.len())
+            .field("packed_bytes", &self.packed.bytes())
             .finish()
     }
 }
@@ -123,11 +138,17 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
+    /// Validate `(cfg, params)` and build the entry's hot-path caches:
+    /// the interned handles AND the packed weight panels (for int8, the
+    /// quantization runs here, off the serving path).  Handle
+    /// construction is the "this store really contains an encoder"
+    /// check, so panel packing can only run against a servable store.
     fn validate(
         name: &str,
         cfg: &ModelConfig,
         params: &Params,
-    ) -> Result<Arc<EncoderHandles>, RegistryError> {
+        dtype: Dtype,
+    ) -> Result<(Arc<EncoderHandles>, Arc<PackedWeights>), RegistryError> {
         cfg.validate().map_err(|source| RegistryError::Config {
             name: name.to_string(),
             source,
@@ -140,24 +161,39 @@ impl ModelRegistry {
                 want,
             });
         }
-        EncoderHandles::try_build(params, cfg)
+        let handles = EncoderHandles::try_build(params, cfg)
             .map(Arc::new)
             .map_err(|msg| RegistryError::Handles {
                 name: name.to_string(),
                 msg,
-            })
+            })?;
+        let packed = Arc::new(handles.pack_weights(params, dtype));
+        Ok((handles, packed))
     }
 
-    /// Register a new named model.  Fails on duplicate names and on any
-    /// store/config mismatch — a registered entry is guaranteed
-    /// servable.
+    /// Register a new named model (f32 inference flavor).  Fails on
+    /// duplicate names and on any store/config mismatch — a registered
+    /// entry is guaranteed servable.
     pub fn register(
         &self,
         name: &str,
         cfg: ModelConfig,
         params: Arc<Params>,
     ) -> Result<Arc<RegistryEntry>, RegistryError> {
-        let handles = Self::validate(name, &cfg, &params)?;
+        self.register_dtype(name, cfg, params, Dtype::F32)
+    }
+
+    /// [`Self::register`] with an explicit inference flavor; `int8`
+    /// entries quantize and pack their weight panels here, once, so the
+    /// serving path never pays it.
+    pub fn register_dtype(
+        &self,
+        name: &str,
+        cfg: ModelConfig,
+        params: Arc<Params>,
+        dtype: Dtype,
+    ) -> Result<Arc<RegistryEntry>, RegistryError> {
+        let (handles, packed) = Self::validate(name, &cfg, &params, dtype)?;
         let mut inner = self.inner.write().expect("registry lock");
         if inner.entries.contains_key(name) {
             return Err(RegistryError::Duplicate(name.to_string()));
@@ -167,7 +203,9 @@ impl ModelRegistry {
             version: 1,
             cfg,
             params,
+            dtype,
             handles,
+            packed,
         });
         inner.entries.insert(name.to_string(), Arc::clone(&entry));
         inner.order.push(name.to_string());
@@ -181,8 +219,19 @@ impl ModelRegistry {
         cfg: ModelConfig,
         seed: u64,
     ) -> Result<Arc<RegistryEntry>, RegistryError> {
+        self.register_init_dtype(name, cfg, seed, Dtype::F32)
+    }
+
+    /// [`Self::register_init`] with an explicit inference flavor.
+    pub fn register_init_dtype(
+        &self,
+        name: &str,
+        cfg: ModelConfig,
+        seed: u64,
+        dtype: Dtype,
+    ) -> Result<Arc<RegistryEntry>, RegistryError> {
         let params = Arc::new(Params::init(&cfg, seed));
-        self.register(name, cfg, params)
+        self.register_dtype(name, cfg, params, dtype)
     }
 
     /// Register a model from a checkpoint's `params` slot (see
@@ -194,8 +243,19 @@ impl ModelRegistry {
         cfg: ModelConfig,
         path: &str,
     ) -> Result<Arc<RegistryEntry>, RegistryError> {
+        self.register_checkpoint_dtype(name, cfg, path, Dtype::F32)
+    }
+
+    /// [`Self::register_checkpoint`] with an explicit inference flavor.
+    pub fn register_checkpoint_dtype(
+        &self,
+        name: &str,
+        cfg: ModelConfig,
+        path: &str,
+        dtype: Dtype,
+    ) -> Result<Arc<RegistryEntry>, RegistryError> {
         let params = Self::params_from_checkpoint(name, &cfg, path)?;
-        self.register(name, cfg, params)
+        self.register_dtype(name, cfg, params, dtype)
     }
 
     fn params_from_checkpoint(
@@ -233,16 +293,16 @@ impl ModelRegistry {
         name: &str,
         params: Arc<Params>,
     ) -> Result<u64, RegistryError> {
-        // validate against the *current* config outside the write lock
-        // (handle building walks the whole spec); a racing reload just
-        // means last-write-wins on the entry, which is the semantics of
-        // a swap anyway
-        let cfg = self
+        // validate against the *current* config and dtype outside the
+        // write lock (handle building and panel packing walk the whole
+        // store); a racing reload just means last-write-wins on the
+        // entry, which is the semantics of a swap anyway
+        let current = self
             .get(name)
-            .ok_or_else(|| RegistryError::Unknown(name.to_string()))?
-            .cfg
-            .clone();
-        let handles = Self::validate(name, &cfg, &params)?;
+            .ok_or_else(|| RegistryError::Unknown(name.to_string()))?;
+        let (cfg, dtype) = (current.cfg.clone(), current.dtype);
+        drop(current);
+        let (handles, packed) = Self::validate(name, &cfg, &params, dtype)?;
         let mut inner = self.inner.write().expect("registry lock");
         let entry = inner
             .entries
@@ -254,7 +314,9 @@ impl ModelRegistry {
             version,
             cfg,
             params,
+            dtype,
             handles,
+            packed,
         });
         Ok(version)
     }
@@ -407,6 +469,48 @@ mod tests {
         ));
         // …and a failed reload leaves the entry untouched
         assert_eq!(reg.get("m").unwrap().version, 2);
+    }
+
+    #[test]
+    fn entries_default_to_f32_and_carry_matching_packed_panels() {
+        let reg = ModelRegistry::new();
+        let cfg = ModelConfig::tiny();
+        let e = reg.register_init("m", cfg.clone(), 1).unwrap();
+        assert_eq!(e.dtype, Dtype::F32);
+        assert_eq!(e.packed.dtype(), Dtype::F32);
+        assert_eq!(
+            e.packed.generation(),
+            e.generation(),
+            "panels must be packed from the entry's own store"
+        );
+        assert!(!e.packed.is_empty());
+        let q = reg
+            .register_init_dtype("q", cfg, 2, Dtype::Int8)
+            .unwrap();
+        assert_eq!(q.dtype, Dtype::Int8);
+        assert_eq!(q.packed.dtype(), Dtype::Int8);
+        assert_eq!(q.packed.generation(), q.generation());
+    }
+
+    #[test]
+    fn reload_rebuilds_packed_panels_and_keeps_dtype() {
+        let reg = ModelRegistry::new();
+        let cfg = ModelConfig::tiny();
+        reg.register_init_dtype("m", cfg.clone(), 1, Dtype::Int8)
+            .unwrap();
+        let before = reg.get("m").unwrap();
+        reg.reload("m", Arc::new(Params::init(&cfg, 2))).unwrap();
+        let after = reg.get("m").unwrap();
+        assert_eq!(after.dtype, Dtype::Int8, "reload must keep the flavor");
+        assert_ne!(after.generation(), before.generation());
+        assert_eq!(
+            after.packed.generation(),
+            after.generation(),
+            "swap must rebuild panels for the new generation"
+        );
+        // the old pin's panels still match the old pin's store — and
+        // cannot satisfy probes against the new generation
+        assert_eq!(before.packed.generation(), before.generation());
     }
 
     #[test]

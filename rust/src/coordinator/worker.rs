@@ -351,20 +351,25 @@ impl BatchRunner for ReferenceRunner {
                 return Err(format!("token id {t} out of vocab"));
             }
         }
-        // the entry's prebuilt handles ride along, so batch workers
-        // start warm: no per-task parameter-name resolution
+        // the entry's prebuilt handles and packed weight panels ride
+        // along, so batch workers start warm: no per-task parameter-name
+        // resolution and zero per-call weight packing/quantization —
+        // int8 entries run the quantized kernels purely through `packed`
         let handles = Some(entry.handles.as_ref());
+        let packed = Some(&entry.packed);
         let outputs = match task {
             Task::MlmPredict => {
-                mlm_predict_batch_warm(params, cfg, rows, handles)
+                mlm_predict_batch_warm(params, cfg, rows, handles, packed)
                     .into_iter()
                     .map(TaskOutput::Tokens)
                     .collect()
             }
-            Task::Encode => encode_batch_warm(params, cfg, rows, handles)
-                .into_iter()
-                .map(TaskOutput::Hidden)
-                .collect(),
+            Task::Encode => {
+                encode_batch_warm(params, cfg, rows, handles, packed)
+                    .into_iter()
+                    .map(TaskOutput::Hidden)
+                    .collect()
+            }
             Task::Classify { head } => {
                 // the param spec carries exactly one classifier head
                 // (`cls/{w,b}`); reject others loudly rather than
@@ -375,13 +380,13 @@ impl BatchRunner for ReferenceRunner {
                          requested head {head}"
                     ));
                 }
-                classify_batch_warm(params, cfg, rows, handles)
+                classify_batch_warm(params, cfg, rows, handles, packed)
                     .into_iter()
                     .map(|(id, logits)| TaskOutput::Class { id, logits })
                     .collect()
             }
             Task::AttnCapture => {
-                attn_capture_batch_warm(params, cfg, rows, handles)
+                attn_capture_batch_warm(params, cfg, rows, handles, packed)
                     .into_iter()
                     .map(TaskOutput::Attn)
                     .collect()
@@ -689,6 +694,36 @@ mod tests {
 
         // every task reports the same pinned generation
         assert_eq!(out.generation, entry.generation());
+    }
+
+    #[test]
+    fn reference_runner_serves_int8_models() {
+        let cfg = ModelConfig::tiny();
+        let reg = Arc::new(ModelRegistry::new());
+        reg.register_init_dtype(
+            "q",
+            cfg.clone(),
+            5,
+            crate::linalg::Dtype::Int8,
+        )
+        .unwrap();
+        let r = ReferenceRunner::new(Arc::clone(&reg), cfg.max_len, 4);
+        let rows = vec![vec![1, 2, 3], vec![9; 7]];
+        let out = r.run("q", Task::MlmPredict, &rows).unwrap();
+        for (row, pred) in rows.iter().zip(&out.outputs) {
+            let TaskOutput::Tokens(pred) = pred else { panic!("tokens") };
+            assert_eq!(pred.len(), row.len());
+            assert!(pred.iter().all(|&p| (p as usize) < cfg.vocab_size));
+        }
+        // int8 is deterministic: same batch, same predictions
+        assert_eq!(r.run("q", Task::MlmPredict, &rows).unwrap(), out);
+        // classify works through the quantized head too
+        let out = r.run("q", Task::Classify { head: 0 }, &rows).unwrap();
+        for o in &out.outputs {
+            let TaskOutput::Class { id, logits } = o else { panic!() };
+            assert!((*id as usize) < cfg.num_classes);
+            assert!(logits.iter().all(|x| x.is_finite()));
+        }
     }
 
     #[test]

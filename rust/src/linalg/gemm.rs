@@ -37,6 +37,27 @@
 //! (`0.0 * NaN = NaN` must surface).  Neither kernel has such a branch;
 //! the `nan_propagates_through_zero_entries` test keeps it that way.
 //!
+//! # Packed weights and the int8 path
+//!
+//! Weight matrices are immutable between registry reloads, so their
+//! packed panels can be built **once per `Params` generation** instead
+//! of once per GEMM call: [`PackedPanels`] owns one pre-packed B-operand
+//! image ([`Dtype::F32`], bitwise identical to packing per call) or a
+//! pre-quantized i8 image plus per-output-channel scales
+//! ([`Dtype::Int8`]), and [`matmul_packed_view_in`] consumes it with
+//! zero per-call packing or quantization of the weight side.  The int8
+//! flavor quantizes the activation side per tensor into the scratch,
+//! accumulates exactly in i32 and dequantizes in the kernel epilogue —
+//! bitwise deterministic across thread counts because integer
+//! accumulation is exact.  Packed entry points always run the
+//! microkernel (panels are its format); a scalar-pinned scratch should
+//! use the unpacked entry points.
+//!
+//! For tall GEMMs (`m ≥ kernel::A_PACK_MIN_M`) the f32 paths also pack
+//! A into `MR`-row panels — same values in the same order, so all the
+//! bitwise guarantees above are unaffected (row chunks round up to `MR`
+//! so pack panels coincide with chunk-local tiles).
+//!
 //! # Length contracts
 //!
 //! [`dot`] and [`axpy`] require equal-length inputs, asserted
@@ -44,7 +65,7 @@
 //! mismatched slices, which turned upstream shape bugs into silently
 //! wrong numbers instead of a panic.
 
-use super::kernel::{self, F32x8, PackBuf, LANES};
+use super::kernel::{self, F32x8, PackBuf, PackBufI8, LANES};
 use super::{pool, Mat, MatView};
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -145,14 +166,21 @@ pub fn kernel_name() -> &'static str {
     }
 }
 
-/// Per-caller GEMM workspace: the B-panel [`PackBuf`] plus the kernel
-/// selection.  The encoder keeps one inside its `EncodeScratch` so the
-/// warm forward pass packs allocation-free; callers without a scratch
-/// (tests, benches, svd) go through the entry points that borrow a
+/// Per-caller GEMM workspace: the B-panel [`PackBuf`], the A-panel
+/// buffer for tall GEMMs, the i8 activation-quantization buffer for the
+/// packed int8 path, plus the kernel selection.  The encoder keeps one
+/// inside its `EncodeScratch` so the warm forward pass packs and
+/// quantizes allocation-free; callers without a scratch (tests,
+/// benches, svd) go through the entry points that borrow a
 /// thread-local one.
 #[derive(Debug)]
 pub struct GemmScratch {
     pub pack: PackBuf,
+    /// A-panel scratch for the `m ≥ kernel::A_PACK_MIN_M` path.
+    apack: PackBuf,
+    /// Quantized-activation scratch for [`matmul_packed_view_in`] on
+    /// int8 panels.
+    qa: PackBufI8,
     /// Route through the pre-SIMD scalar kernels (baseline measurements
     /// and bitwise cross-checks).  Defaults to the `scalar-gemm` feature.
     scalar: bool,
@@ -172,13 +200,20 @@ impl GemmScratch {
     pub fn new() -> GemmScratch {
         GemmScratch {
             pack: PackBuf::new(),
+            apack: PackBuf::new(),
+            qa: PackBufI8::new(),
             scalar: cfg!(feature = "scalar-gemm"),
         }
     }
 
     /// A scratch pinned to the scalar reference kernels.
     pub fn scalar() -> GemmScratch {
-        GemmScratch { pack: PackBuf::new(), scalar: true }
+        GemmScratch {
+            pack: PackBuf::new(),
+            apack: PackBuf::new(),
+            qa: PackBufI8::new(),
+            scalar: true,
+        }
     }
 
     pub fn set_scalar(&mut self, scalar: bool) {
@@ -296,9 +331,16 @@ pub fn matmul_view_in(
         return;
     }
     let packed = kernel::pack_nn(&mut gs.pack, b);
-    run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
-        kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
-    });
+    if m >= kernel::A_PACK_MIN_M {
+        let apack = kernel::pack_a(&mut gs.apack, a);
+        run_row_chunks_mr(&mut c.data, m, threads, n, move |chunk, row0| {
+            kernel::gemm_chunk_pa(apack, row0, packed, k, n, chunk, n, 0)
+        });
+    } else {
+        run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+            kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
+        });
+    }
 }
 
 /// C = A·Bᵀ over strided views with an explicit worker cap and caller
@@ -328,9 +370,16 @@ pub fn matmul_nt_view_in(
         return;
     }
     let packed = kernel::pack_nt(&mut gs.pack, b);
-    run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
-        kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
-    });
+    if m >= kernel::A_PACK_MIN_M {
+        let apack = kernel::pack_a(&mut gs.apack, a);
+        run_row_chunks_mr(&mut c.data, m, threads, n, move |chunk, row0| {
+            kernel::gemm_chunk_pa(apack, row0, packed, k, n, chunk, n, 0)
+        });
+    } else {
+        run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+            kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
+        });
+    }
 }
 
 /// `out[:, col0..col0+b.cols] = A·B` — writes the product into a column
@@ -363,6 +412,230 @@ pub fn matmul_view_cols_in(
     });
 }
 
+/// Weight dtype flavor for packed inference panels: full-precision f32
+/// or symmetric per-output-channel int8 (see `kernel`'s int8 docs for
+/// the quantization scheme).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Dtype {
+    F32,
+    Int8,
+}
+
+impl Dtype {
+    /// Canonical lowercase name, as used in `serve.toml` and bench tags.
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::Int8 => "int8",
+        }
+    }
+
+    /// Parse a `serve.toml` / CLI dtype string.
+    pub fn from_name(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "int8" | "i8" => Some(Dtype::Int8),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One immutable pre-packed GEMM B-operand (a weight matrix), built
+/// once per `Params` generation and consumed by
+/// [`matmul_packed_view_in`] with no per-call packing.  The f32 flavor
+/// stores the exact [`kernel::pack_nn`]/[`kernel::pack_nt`] image, so
+/// consuming it is bitwise identical to packing per call; the int8
+/// flavor stores the quantized image plus its per-output-channel
+/// scales (indexed by packed column, `panels(n)·NR` entries).
+#[derive(Debug)]
+pub enum PackedPanels {
+    F32 {
+        buf: PackBuf,
+        k: usize,
+        n: usize,
+    },
+    Int8 {
+        buf: PackBufI8,
+        scales: Vec<f32>,
+        k: usize,
+        n: usize,
+    },
+}
+
+impl PackedPanels {
+    /// Pack a weight view for `C = A·B` (`transposed == false`, `b` is
+    /// k×n) or `C = A·Bᵀ` (`transposed == true`, `b` is n×k — the
+    /// orientation the tied-embedding MLM head consumes).
+    pub fn pack(dtype: Dtype, b: MatView<'_>, transposed: bool) -> PackedPanels {
+        let (k, n) = if transposed {
+            (b.cols, b.rows)
+        } else {
+            (b.rows, b.cols)
+        };
+        match dtype {
+            Dtype::F32 => {
+                let mut buf = PackBuf::new();
+                if transposed {
+                    kernel::pack_nt(&mut buf, b);
+                } else {
+                    kernel::pack_nn(&mut buf, b);
+                }
+                PackedPanels::F32 { buf, k, n }
+            }
+            Dtype::Int8 => {
+                let mut buf = PackBufI8::new();
+                let mut scales = Vec::new();
+                if transposed {
+                    kernel::pack_nt_i8(&mut buf, &mut scales, b);
+                } else {
+                    kernel::pack_nn_i8(&mut buf, &mut scales, b);
+                }
+                PackedPanels::Int8 { buf, scales, k, n }
+            }
+        }
+    }
+
+    /// Inner (accumulation) dimension of the packed operand.
+    pub fn k(&self) -> usize {
+        match self {
+            PackedPanels::F32 { k, .. } | PackedPanels::Int8 { k, .. } => *k,
+        }
+    }
+
+    /// Output-column count of the packed operand.
+    pub fn n(&self) -> usize {
+        match self {
+            PackedPanels::F32 { n, .. } | PackedPanels::Int8 { n, .. } => *n,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            PackedPanels::F32 { .. } => Dtype::F32,
+            PackedPanels::Int8 { .. } => Dtype::Int8,
+        }
+    }
+
+    /// Packed image size in bytes (cache accounting).
+    pub fn bytes(&self) -> usize {
+        let elems = kernel::panels(self.n()) * self.k() * kernel::NR;
+        match self {
+            PackedPanels::F32 { .. } => elems * 4,
+            PackedPanels::Int8 { scales, .. } => elems + scales.len() * 4,
+        }
+    }
+}
+
+/// C = A·W against a pre-packed weight operand: the per-call B-pack
+/// (for the tied-embedding MLM head, a whole (vocab × d)
+/// transpose-pack) is gone, so warm callers do **zero** weight packing
+/// or quantization work.  The f32 flavor routes through the exact
+/// kernels of [`matmul_view_in`]/[`matmul_nt_view_in`] (bitwise
+/// identical, including the packed-A tall-`m` path); the int8 flavor
+/// quantizes A per tensor into `gs` and dequantizes in the kernel
+/// epilogue — bitwise thread-count-deterministic because integer
+/// accumulation is exact.  Always runs the microkernel: panels are its
+/// format, so a scalar-pinned `gs` is not honoured here (callers
+/// wanting the scalar baseline use the unpacked entry points).
+pub fn matmul_packed_view_in(
+    a: MatView<'_>,
+    w: &PackedPanels,
+    c: &mut Mat,
+    threads: usize,
+    gs: &mut GemmScratch,
+) {
+    assert_eq!(
+        a.cols,
+        w.k(),
+        "matmul_packed inner dims: {} vs {}",
+        a.cols,
+        w.k()
+    );
+    let (m, n, k) = (a.rows, w.n(), w.k());
+    if k == 0 {
+        c.reset(m, n);
+        return;
+    }
+    c.resize_for_overwrite(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    match w {
+        PackedPanels::F32 { buf, .. } => {
+            let packed = buf.flat(kernel::panels(n) * k * kernel::NR);
+            if m >= kernel::A_PACK_MIN_M {
+                let apack = kernel::pack_a(&mut gs.apack, a);
+                run_row_chunks_mr(&mut c.data, m, threads, n, move |chunk, row0| {
+                    kernel::gemm_chunk_pa(apack, row0, packed, k, n, chunk, n, 0)
+                });
+            } else {
+                run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+                    kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
+                });
+            }
+        }
+        PackedPanels::Int8 { buf, scales, .. } => {
+            let packed = buf.flat(kernel::panels(n) * k * kernel::NR);
+            let (aq, a_scale) = kernel::quantize_activations(&mut gs.qa, a);
+            let scales = scales.as_slice();
+            run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+                kernel::gemm_chunk_i8(
+                    aq, row0, packed, k, n, a_scale, scales, chunk, n, 0,
+                )
+            });
+        }
+    }
+}
+
+/// Compare two kernel outputs: **bitwise** in the default build; within
+/// `ulps` units-in-last-place under the `fma` cargo feature, whose
+/// fused multiply-add changes each accumulation step by one rounding
+/// (callers budget a couple of ULPs per `k` step).  Lives here rather
+/// than in a test module so the integration suites
+/// (`tests/kernel_prop.rs`) share one definition.
+pub fn assert_f32s_match(got: &[f32], want: &[f32], ulps: u32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length mismatch");
+    #[cfg(not(feature = "fma"))]
+    {
+        let _ = ulps;
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                g.to_bits() == w.to_bits(),
+                "{ctx}: [{i}] {g} != {w} (bitwise)"
+            );
+        }
+    }
+    #[cfg(feature = "fma")]
+    {
+        // map bits to a monotone integer line so ULP distance is a
+        // subtraction; ±0 and NaN↔NaN pairs short-circuit as equal
+        fn ordered(x: f32) -> i64 {
+            let b = x.to_bits();
+            if b & 0x8000_0000 != 0 {
+                -i64::from(b & 0x7fff_ffff)
+            } else {
+                i64::from(b)
+            }
+        }
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            if g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan()) {
+                continue;
+            }
+            let dist = (ordered(*g) - ordered(*w)).unsigned_abs();
+            assert!(
+                dist <= u64::from(ulps),
+                "{ctx}: [{i}] {g} vs {w} is {dist} ULPs (budget {ulps})"
+            );
+        }
+    }
+}
+
 /// Split `data` (m rows of width `stride`) into up to `threads`
 /// contiguous row blocks and run `kernel(chunk, row0)` over each as
 /// tasks on the global [`pool`] — the one fork-join shape every GEMM
@@ -385,6 +658,38 @@ fn run_row_chunks<'env, K>(
         return;
     }
     let rows_per = (m + t - 1) / t;
+    let tasks: Vec<pool::Task<'env>> = data
+        .chunks_mut(rows_per * stride)
+        .enumerate()
+        .map(|(w, chunk)| {
+            Box::new(move || kernel(chunk, w * rows_per)) as pool::Task<'env>
+        })
+        .collect();
+    pool::global().run(tasks);
+}
+
+/// [`run_row_chunks`] with the row split rounded up to [`kernel::MR`]
+/// so every chunk's global row offset is MR-aligned — the packed-A
+/// kernel's row panels then coincide with chunk-local tiles.  Chunk
+/// boundaries never affect values (each row's accumulation is
+/// self-contained), so the rounded split is as bitwise-stable as the
+/// plain one.
+fn run_row_chunks_mr<'env, K>(
+    data: &'env mut [f32],
+    m: usize,
+    threads: usize,
+    stride: usize,
+    kernel: K,
+) where
+    K: Fn(&mut [f32], usize) + Send + Copy + 'env,
+{
+    let t = threads.clamp(1, m);
+    if t == 1 {
+        kernel(data, 0);
+        return;
+    }
+    let rows_per = (m + t - 1) / t;
+    let rows_per = (rows_per + kernel::MR - 1) / kernel::MR * kernel::MR;
     let tasks: Vec<pool::Task<'env>> = data
         .chunks_mut(rows_per * stride)
         .enumerate()
@@ -664,7 +969,10 @@ mod tests {
         // the microkernel replays the scalar kernel's exact per-element
         // operation sequence on the A·B paths (ascending k, unfused
         // mul-add, one accumulator) — so outputs are bitwise equal, not
-        // merely close
+        // merely close.  Under the `fma` feature the SIMD side fuses its
+        // multiply-adds, so the comparison relaxes to a ULP budget
+        // (~2 per k step) via assert_f32s_match; the default build still
+        // pins exact bit equality.
         let mut rng = Pcg32::seeded(32);
         for &(m, k, n) in
             &[(1, 1, 1), (3, 5, 7), (16, 16, 16), (17, 33, 9), (65, 300, 70)]
@@ -672,13 +980,19 @@ mod tests {
             let a = rand_mat(&mut rng, m, k);
             let b = rand_mat(&mut rng, k, n);
             let (av, bv) = (MatView::full(&a), MatView::full(&b));
+            let budget = (2 * k + 16) as u32;
             let mut simd = Mat::zeros(0, 0);
             let mut scal = Mat::zeros(0, 0);
             let mut gs = GemmScratch::new();
             gs.set_scalar(false);
             matmul_view_in(av, bv, &mut simd, 1, &mut gs);
             matmul_view_in(av, bv, &mut scal, 1, &mut GemmScratch::scalar());
-            assert_eq!(simd.data, scal.data, "NN ({m},{k},{n}) diverged");
+            assert_f32s_match(
+                &simd.data,
+                &scal.data,
+                budget,
+                &format!("NN ({m},{k},{n})"),
+            );
             // the column-block variant shares the kernel
             let mut wide_simd = Mat::filled_with(m, n + 5, |_, _| 9.0);
             let mut wide_scal = wide_simd.clone();
@@ -691,7 +1005,12 @@ mod tests {
                 1,
                 &mut GemmScratch::scalar(),
             );
-            assert_eq!(wide_simd.data, wide_scal.data, "cols ({m},{k},{n})");
+            assert_f32s_match(
+                &wide_simd.data,
+                &wide_scal.data,
+                budget,
+                &format!("cols ({m},{k},{n})"),
+            );
         }
     }
 
@@ -920,7 +1239,8 @@ mod tests {
     #[test]
     fn axpy_and_dot_cover_every_remainder_lane() {
         // every length 0..=2·LANES: full vectors, the scalar tail, and
-        // the empty case — axpy bitwise vs the scalar recurrence, dot
+        // the empty case — axpy bitwise vs the scalar recurrence (ULP
+        // budget under `fma`, which fuses the lane mul-adds), dot
         // against an f64 reference
         for n in 0..=2 * LANES {
             let x: Vec<f32> = (0..n).map(|i| (i as f32 + 1.0) * 0.25).collect();
@@ -930,7 +1250,7 @@ mod tests {
                 want[i] += 1.5 * x[i];
             }
             axpy(1.5, &x, &mut y);
-            assert_eq!(y, want, "axpy len {n}");
+            assert_f32s_match(&y, &want, 2, &format!("axpy len {n}"));
 
             let z: Vec<f32> = (0..n).map(|i| 0.5 - i as f32).collect();
             let want: f64 = x
@@ -1005,5 +1325,184 @@ mod tests {
             matmul_view(av, bv, &mut pooled, chunks);
             assert_eq!(serial.data, pooled.data, "{chunks} chunks diverged");
         }
+    }
+
+    #[test]
+    fn dtype_names_round_trip() {
+        for d in [Dtype::F32, Dtype::Int8] {
+            assert_eq!(Dtype::from_name(d.name()), Some(d));
+            assert_eq!(format!("{d}"), d.name());
+        }
+        assert_eq!(Dtype::from_name("i8"), Some(Dtype::Int8));
+        assert_eq!(Dtype::from_name("fp16"), None);
+    }
+
+    #[test]
+    fn packed_f32_panels_match_per_call_pack_bitwise() {
+        // consuming a cached f32 panel must be indistinguishable from
+        // packing per call — including tall shapes that take the
+        // packed-A path and the k == 0 degenerate contract
+        let mut rng = Pcg32::seeded(41);
+        for &(m, k, n) in
+            &[(1, 3, 5), (17, 33, 9), (50, 20, 40), (65, 130, 70), (4, 0, 6)]
+        {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let (av, bv) = (MatView::full(&a), MatView::full(&b));
+            let mut gs = GemmScratch::new();
+            gs.set_scalar(false);
+            let mut want = Mat::zeros(0, 0);
+            matmul_view_in(av, bv, &mut want, 1, &mut gs);
+            let p = PackedPanels::pack(Dtype::F32, bv, false);
+            assert_eq!((p.k(), p.n(), p.dtype()), (k, n, Dtype::F32));
+            let mut got = Mat::zeros(0, 0);
+            matmul_packed_view_in(av, &p, &mut got, 1, &mut gs);
+            assert_eq!(got.data, want.data, "NN ({m},{k},{n})");
+            // NT orientation (the MLM-head shape)
+            let bt = rand_mat(&mut rng, n, k);
+            let btv = MatView::full(&bt);
+            let mut want = Mat::zeros(0, 0);
+            matmul_nt_view_in(av, btv, &mut want, 1, &mut gs);
+            let p = PackedPanels::pack(Dtype::F32, btv, true);
+            assert_eq!((p.k(), p.n()), (k, n));
+            let mut got = Mat::zeros(0, 0);
+            matmul_packed_view_in(av, &p, &mut got, 1, &mut gs);
+            assert_eq!(got.data, want.data, "NT ({m},{k},{n})");
+        }
+    }
+
+    /// Independent replay of the documented int8 spec: per-column f32
+    /// scales from max |.|, round/clamp quantization, exact i64 integer
+    /// accumulation, one dequant multiply — must agree **bitwise** with
+    /// the kernel.
+    fn naive_int8(a: &Mat, b: &Mat) -> Mat {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let q = |v: f32, inv: f32| -> i64 {
+            ((v * inv).round().clamp(-127.0, 127.0) as i8) as i64
+        };
+        let mut a_max = 0.0f32;
+        for &v in &a.data {
+            a_max = a_max.max(v.abs());
+        }
+        let (a_scale, a_inv) = if a_max > 0.0 {
+            (a_max / 127.0, 127.0 / a_max)
+        } else {
+            (0.0, 0.0)
+        };
+        let mut c = Mat::zeros(m, n);
+        for j in 0..n {
+            let mut b_max = 0.0f32;
+            for kk in 0..k {
+                b_max = b_max.max(b.at(kk, j).abs());
+            }
+            let (scale, inv) = if b_max > 0.0 {
+                (b_max / 127.0, 127.0 / b_max)
+            } else {
+                (0.0, 0.0)
+            };
+            for i in 0..m {
+                let mut acc = 0i64;
+                for kk in 0..k {
+                    acc += q(a.at(i, kk), a_inv) * q(b.at(kk, j), inv);
+                }
+                *c.at_mut(i, j) = acc as f32 * (a_scale * scale);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn packed_int8_matches_spec_reference_bitwise() {
+        let mut rng = Pcg32::seeded(42);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (65, 40, 21)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let p = PackedPanels::pack(Dtype::Int8, MatView::full(&b), false);
+            assert_eq!(p.dtype(), Dtype::Int8);
+            let mut got = Mat::zeros(0, 0);
+            let mut gs = GemmScratch::new();
+            gs.set_scalar(false);
+            matmul_packed_view_in(MatView::full(&a), &p, &mut got, 1, &mut gs);
+            let want = naive_int8(&a, &b);
+            for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "int8 ({m},{k},{n}) elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_int8_thread_and_chunk_deterministic() {
+        // integer accumulation is exact, so any thread plan must be
+        // bitwise identical to serial — the int8 determinism guarantee
+        let mut rng = Pcg32::seeded(43);
+        let a = rand_mat(&mut rng, 53, 37);
+        let b = rand_mat(&mut rng, 37, 29);
+        let p = PackedPanels::pack(Dtype::Int8, MatView::full(&b), false);
+        let mut gs = GemmScratch::new();
+        gs.set_scalar(false);
+        let mut serial = Mat::zeros(0, 0);
+        matmul_packed_view_in(MatView::full(&a), &p, &mut serial, 1, &mut gs);
+        for threads in [2, 3, 7, 53] {
+            let mut par = Mat::zeros(0, 0);
+            matmul_packed_view_in(
+                MatView::full(&a),
+                &p,
+                &mut par,
+                threads,
+                &mut gs,
+            );
+            assert_eq!(serial.data, par.data, "t={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn int8_quantization_error_is_bounded() {
+        // dequantized int8 approximates the f32 product within the
+        // analytic bound: per-step error ≤ (|a|·s_b + |b|·s_a)/2, summed
+        // over k — asserted at 2× slack
+        let mut rng = Pcg32::seeded(44);
+        let (m, k, n) = (9, 31, 13);
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let p = PackedPanels::pack(Dtype::Int8, MatView::full(&b), false);
+        let mut gs = GemmScratch::new();
+        gs.set_scalar(false);
+        let mut got = Mat::zeros(0, 0);
+        matmul_packed_view_in(MatView::full(&a), &p, &mut got, 1, &mut gs);
+        let want = naive(&a, &b);
+        let a_max = a.data.iter().fold(0.0f32, |s, v| s.max(v.abs()));
+        let b_max = b.data.iter().fold(0.0f32, |s, v| s.max(v.abs()));
+        let bound = k as f32 * a_max * b_max / 127.0 * 2.0 + 1e-6;
+        assert!(
+            got.max_abs_diff(&want) <= bound,
+            "int8 error {} above bound {bound}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn a_panel_rounded_chunking_stays_bitwise() {
+        // m = 50 crosses A_PACK_MIN_M: thread splits round up to MR, and
+        // every plan must still be bitwise equal to serial
+        let mut rng = Pcg32::seeded(45);
+        let a = rand_mat(&mut rng, 50, 24);
+        let b = rand_mat(&mut rng, 24, 33);
+        let (av, bv) = (MatView::full(&a), MatView::full(&b));
+        assert!(a.rows >= kernel::A_PACK_MIN_M);
+        let mut serial = Mat::zeros(0, 0);
+        matmul_view(av, bv, &mut serial, 1);
+        for threads in [2, 3, 7, 13] {
+            let mut par = Mat::zeros(0, 0);
+            matmul_view(av, bv, &mut par, threads);
+            assert_eq!(serial.data, par.data, "t={threads}");
+        }
+        // and the packed-A path agrees bitwise with the scalar oracle
+        let mut scal = Mat::zeros(0, 0);
+        matmul_view_in(av, bv, &mut scal, 1, &mut GemmScratch::scalar());
+        assert_f32s_match(&scal.data, &serial.data, 64, "packed-A vs scalar");
     }
 }

@@ -1,6 +1,7 @@
 //! Explicit SIMD-width-aware GEMM microkernel: portable 8-lane f32
-//! vectors, an `MR×NR` register-tiled inner kernel, and B-panel packing
-//! into lane-aligned scratch.
+//! vectors, an `MR×NR` register-tiled inner kernel, B-panel (and, for
+//! large `m`, A-panel) packing into lane-aligned scratch, and an
+//! i8×i8→i32 quantized twin of the kernel for the int8 inference path.
 //!
 //! Every GEMM entry point in [`super::gemm`] routes through
 //! [`gemm_chunk`] (unless the `scalar-gemm` feature pins the old
@@ -15,13 +16,18 @@
 //! It compiles on stable Rust: the elementwise loops are exactly the
 //! shape LLVM's SLP vectorizer turns into `mulps`/`addps` lanes, without
 //! relying on it to *discover* the vector shape in a blocked scalar GEMM
-//! the way the old kernel did.  `mul_add` is deliberately an **unfused**
+//! the way the old kernel did.  `mul_add` is by default an **unfused**
 //! multiply-then-add: a fused `f32::mul_add` falls back to a libm `fmaf`
 //! call on targets compiled without `+fma` (catastrophically slow) and
 //! changes results by one rounding, which would break the bitwise
-//! scalar↔SIMD equivalence pinned in `gemm`'s tests.  Upgrading to
-//! `std::simd` (and optional true FMA) later only means swapping this
-//! struct's internals.
+//! scalar↔SIMD equivalence pinned in `gemm`'s tests.  The **`fma` cargo
+//! feature** switches it to a true fused `f32::mul_add` (one rounding
+//! per step) for targets built with hardware FMA enabled; under that
+//! feature the scalar↔SIMD comparisons relax to a ULP budget (see
+//! `gemm::assert_f32s_match`) while every SIMD↔SIMD guarantee
+//! (thread-count, chunking, warm-scratch bitwise determinism) is
+//! unchanged, because both sides of those comparisons run the same
+//! fused ops in the same order.
 //!
 //! # Tiling
 //!
@@ -38,7 +44,10 @@
 //! B is packed once per GEMM call (before the row-chunk fork, so every
 //! pool task reads the same panels) into [`PackBuf`]: `NR`-wide,
 //! K-major column panels, lane-aligned because the buffer stores whole
-//! [`F32x8`]s.  Packing makes the kernel's B loads unit-stride and
+//! [`F32x8`]s.  The buffer is an alias of the dtype-generic
+//! [`PanelBuf`], which backs the int8 image ([`PackBufI8`]) with the
+//! same monotone-growth contract.  Packing makes the kernel's B loads
+//! unit-stride and
 //! cache-line aligned regardless of the source view's stride — it is
 //! also where `A·Bᵀ` becomes the *same* kernel as `A·B` (the transpose
 //! happens in the pack, nowhere else).  Tail panels are zero-padded to
@@ -60,6 +69,30 @@
 //! are **bitwise identical** to the scalar fallback, and — as before —
 //! bitwise identical for any thread cap, chunking or pool size (each
 //! row's value never depends on which chunk or tile it landed in).
+//!
+//! # A-panel packing
+//!
+//! For tall GEMMs (`m ≥` [`A_PACK_MIN_M`]) the f32 entry points also
+//! pack A into [`MR`]-row K-major panels ([`pack_a`]) so the inner
+//! loop's broadcast loads become unit-stride.  [`gemm_chunk_pa`] reads
+//! the packed A image but replays the exact per-element operation order
+//! of [`gemm_chunk`], so results stay bitwise identical to the
+//! unpacked path — only load addresses change.
+//!
+//! # Int8 path
+//!
+//! [`gemm_chunk_i8`] is the quantized twin: weights are quantized
+//! symmetrically **per output channel** at pack time
+//! ([`pack_nn_i8`]/[`pack_nt_i8`] emit one f32 scale per packed
+//! column), activations **per tensor** at call time
+//! ([`quantize_activations`]), products accumulate exactly in i32
+//! (`k ≤` [`I8_K_MAX`] guards overflow), and the single rounding
+//! happens in one dequantizing multiply per output element.  Because
+//! integer accumulation is exact, int8 results are bitwise identical
+//! across thread counts and chunkings *by construction*.  Zero channels
+//! (and zero tensors) get scale 0 so their outputs dequantize to exact
+//! zeros; NaN quantizes to 0, i.e. the int8 path does not propagate
+//! NaN the way the f32 path does.
 
 use super::MatView;
 
@@ -118,14 +151,23 @@ impl F32x8 {
         dst[..n].copy_from_slice(&self.0[..n]);
     }
 
-    /// `self * a + b`, elementwise, as a separate multiply and add (not
-    /// IEEE-fused) — bitwise identical to the scalar kernel's
-    /// `acc += x * y` on every target.
+    /// `self * a + b`, elementwise.  Default build: a separate multiply
+    /// and add (not IEEE-fused) — bitwise identical to the scalar
+    /// kernel's `acc += x * y` on every target.  With the `fma` cargo
+    /// feature: a true fused `f32::mul_add`, one rounding per step (see
+    /// module docs for what that relaxes).
     #[inline(always)]
     pub fn mul_add(self, a: F32x8, b: F32x8) -> F32x8 {
         let mut out = [0.0; LANES];
         for i in 0..LANES {
-            out[i] = self.0[i] * a.0[i] + b.0[i];
+            #[cfg(not(feature = "fma"))]
+            {
+                out[i] = self.0[i] * a.0[i] + b.0[i];
+            }
+            #[cfg(feature = "fma")]
+            {
+                out[i] = self.0[i].mul_add(a.0[i], b.0[i]);
+            }
         }
         F32x8(out)
     }
@@ -158,52 +200,139 @@ impl F32x8 {
     }
 }
 
-/// Reusable, lane-aligned packing scratch.  Backed by whole [`F32x8`]s
-/// so the panel base is always 32-byte aligned; grows monotonically and
-/// never shrinks, so a warm caller (the encoder scratch, the
-/// thread-local fallback in `gemm`) packs allocation-free.
-#[derive(Debug, Default)]
-pub struct PackBuf {
-    lanes: Vec<F32x8>,
+/// i8 lanes per vector — one 256-bit register of bytes.
+pub const I8_LANES: usize = 32;
+
+/// Portable 32-lane i8 vector: the int8 kernel's packing/alignment
+/// unit (the quantized inner loop itself runs on scalar i32 math,
+/// which LLVM widens; what matters is the panel layout and alignment).
+#[derive(Debug, Clone, Copy)]
+#[repr(C, align(32))]
+pub struct I8x32(pub [i8; I8_LANES]);
+
+impl I8x32 {
+    pub const ZERO: I8x32 = I8x32([0; I8_LANES]);
 }
 
-impl PackBuf {
-    pub fn new() -> PackBuf {
-        PackBuf::default()
+/// Element/lane pairing for [`PanelBuf`]: one `Lane` is a whole SIMD
+/// register of `Elem`s, the allocation unit that keeps packed panels
+/// register-aligned whatever the element dtype.
+///
+/// # Safety
+///
+/// Implementors must be `#[repr(C)]` arrays of exactly `WIDTH` `Elem`s
+/// with no padding and alignment ≥ `Elem`'s — [`PanelBuf`] reinterprets
+/// lane storage as a flat `Elem` slice.
+pub unsafe trait Lane: Copy + std::fmt::Debug + 'static {
+    type Elem: Copy + std::fmt::Debug + 'static;
+    const ZERO_LANE: Self;
+    const WIDTH: usize;
+}
+
+// SAFETY: repr(C) array of exactly LANES f32s, align(32) ≥ align(f32).
+unsafe impl Lane for F32x8 {
+    type Elem = f32;
+    const ZERO_LANE: F32x8 = F32x8::ZERO;
+    const WIDTH: usize = LANES;
+}
+
+// SAFETY: repr(C) array of exactly I8_LANES i8s, align(32) ≥ align(i8).
+unsafe impl Lane for I8x32 {
+    type Elem = i8;
+    const ZERO_LANE: I8x32 = I8x32::ZERO;
+    const WIDTH: usize = I8_LANES;
+}
+
+/// Reusable, lane-aligned packing scratch, generic over element dtype.
+/// Backed by whole [`Lane`]s so the panel base is always 32-byte
+/// aligned; grows monotonically and never shrinks, so a warm caller
+/// (the encoder scratch, the thread-local fallback in `gemm`) packs
+/// allocation-free.  Also the storage behind the immutable per-model
+/// panel cache (`gemm::PackedPanels`), consumed through [`PanelBuf::flat`].
+#[derive(Debug)]
+pub struct PanelBuf<L: Lane> {
+    lanes: Vec<L>,
+}
+
+/// The f32 packing scratch every f32 GEMM call uses.
+pub type PackBuf = PanelBuf<F32x8>;
+/// The i8 image buffer behind quantized packs and activation scratch.
+pub type PackBufI8 = PanelBuf<I8x32>;
+
+impl<L: Lane> Default for PanelBuf<L> {
+    fn default() -> Self {
+        PanelBuf { lanes: Vec::new() }
+    }
+}
+
+impl<L: Lane> PanelBuf<L> {
+    pub fn new() -> PanelBuf<L> {
+        PanelBuf::default()
     }
 
-    /// Current capacity in floats (tests assert warm stability).
-    pub fn capacity_floats(&self) -> usize {
-        self.lanes.capacity() * LANES
+    /// Current capacity in elements (tests assert warm stability).
+    pub fn capacity_elems(&self) -> usize {
+        self.lanes.capacity() * L::WIDTH
     }
 
     /// Base pointer — lets buffer-reuse tests assert no reallocation.
-    pub fn as_ptr(&self) -> *const f32 {
+    pub fn as_elem_ptr(&self) -> *const L::Elem {
         self.lanes.as_ptr().cast()
     }
 
-    /// Grow (never shrink) to at least `floats` and return the flat
-    /// mutable view of exactly that many floats.
-    fn flat_mut(&mut self, floats: usize) -> &mut [f32] {
-        let need = (floats + LANES - 1) / LANES;
+    /// Grow (never shrink) to at least `elems` and return the flat
+    /// mutable view of exactly that many elements.
+    fn flat_mut(&mut self, elems: usize) -> &mut [L::Elem] {
+        let need = (elems + L::WIDTH - 1) / L::WIDTH;
         if self.lanes.len() < need {
-            self.lanes.resize(need, F32x8::ZERO);
+            self.lanes.resize(need, L::ZERO_LANE);
         }
-        // SAFETY: F32x8 is repr(C), exactly LANES f32s, no padding, and
-        // align(32) ≥ align(f32), so a lane slice reinterprets soundly
-        // as a float slice of LANES× the length.
+        // SAFETY: per the Lane contract, lane storage is a padding-free
+        // repr(C) array of WIDTH Elems with sufficient alignment, so a
+        // lane slice reinterprets soundly as an Elem slice of WIDTH×
+        // the length; `need` lanes cover `elems` elements.
         unsafe {
             std::slice::from_raw_parts_mut(
-                self.lanes.as_mut_ptr().cast::<f32>(),
-                floats,
+                self.lanes.as_mut_ptr().cast::<L::Elem>(),
+                elems,
+            )
+        }
+    }
+
+    /// Immutable flat view of the first `elems` elements — how a
+    /// previously packed image (e.g. a cached weight panel) is consumed
+    /// without re-packing.
+    pub fn flat(&self, elems: usize) -> &[L::Elem] {
+        assert!(
+            elems <= self.lanes.len() * L::WIDTH,
+            "flat view of {elems} elems beyond packed image"
+        );
+        // SAFETY: same layout argument as `flat_mut`, shared borrow.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.lanes.as_ptr().cast::<L::Elem>(),
+                elems,
             )
         }
     }
 }
 
+/// f32-named conveniences preserved from the pre-generic `PackBuf`.
+impl PackBuf {
+    /// Current capacity in floats (tests assert warm stability).
+    pub fn capacity_floats(&self) -> usize {
+        self.capacity_elems()
+    }
+
+    /// Base pointer — lets buffer-reuse tests assert no reallocation.
+    pub fn as_ptr(&self) -> *const f32 {
+        self.as_elem_ptr()
+    }
+}
+
 /// Number of [`NR`]-wide panels covering `n` columns.
 #[inline]
-fn panels(n: usize) -> usize {
+pub fn panels(n: usize) -> usize {
     (n + NR - 1) / NR
 }
 
@@ -245,6 +374,238 @@ pub fn pack_nt<'a>(buf: &'a mut PackBuf, b: MatView<'_>) -> &'a [f32] {
         for jj in w..NR {
             for kk in 0..k {
                 dst[base + kk * NR + jj] = 0.0;
+            }
+        }
+    }
+    dst
+}
+
+/// Largest inner dimension the i8 kernel accepts: `127·127·k` must stay
+/// below `i32::MAX` so integer accumulation cannot overflow.  Any larger
+/// `k` would need i64 or split accumulation; model dimensions here are
+/// orders of magnitude smaller.
+pub const I8_K_MAX: usize = (i32::MAX / (127 * 127)) as usize;
+
+/// Symmetric quantization scale for one channel/tensor with magnitude
+/// `max_abs`: returns `(scale, inv_scale)` = `(max_abs/127, 127/max_abs)`,
+/// or `(0, 0)` for an all-zero (or padding) channel — quantized values
+/// are then 0 and the dequant multiply reproduces exact zeros.
+#[inline]
+fn quant_scale(max_abs: f32) -> (f32, f32) {
+    if max_abs > 0.0 {
+        (max_abs / 127.0, 127.0 / max_abs)
+    } else {
+        (0.0, 0.0)
+    }
+}
+
+/// Round-to-nearest (ties away from zero) symmetric quantization of one
+/// value at inverse scale `inv`.  NaN maps to 0 like any saturating
+/// float→int cast.
+#[inline(always)]
+fn quantize(v: f32, inv: f32) -> i8 {
+    (v * inv).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Quantize-and-pack `b` (k × n, the `A·B` orientation) into i8 panels
+/// with the same K-major `NR`-wide layout as [`pack_nn`], extracting one
+/// symmetric per-output-channel scale per column into `scales` (resized
+/// to `panels(n)·NR`; padding columns get scale 0 and zero lanes).
+pub fn pack_nn_i8<'a>(
+    buf: &'a mut PackBufI8,
+    scales: &mut Vec<f32>,
+    b: MatView<'_>,
+) -> &'a [i8] {
+    let (k, n) = (b.rows, b.cols);
+    scales.clear();
+    scales.resize(panels(n) * NR, 0.0);
+    // inverse scales are a pack-time temporary: this runs once per
+    // weight generation (cache build), never in the warm hot path
+    let mut invs = vec![0.0f32; n];
+    for (j, inv) in invs.iter_mut().enumerate() {
+        let mut max_abs = 0.0f32;
+        for kk in 0..k {
+            max_abs = max_abs.max(b.row(kk)[j].abs());
+        }
+        let (s, i) = quant_scale(max_abs);
+        scales[j] = s;
+        *inv = i;
+    }
+    let dst = buf.flat_mut(panels(n) * k * NR);
+    for p in 0..panels(n) {
+        let j0 = p * NR;
+        let w = (n - j0).min(NR);
+        let base = p * k * NR;
+        for kk in 0..k {
+            let o = base + kk * NR;
+            let row = b.row(kk);
+            for jj in 0..w {
+                dst[o + jj] = quantize(row[j0 + jj], invs[j0 + jj]);
+            }
+            dst[o + w..o + NR].fill(0);
+        }
+    }
+    dst
+}
+
+/// Quantize-and-pack `b` (n × k, the `A·Bᵀ` orientation) into the same
+/// i8 panel layout as [`pack_nn_i8`]; output channel `j` is B *row* `j`,
+/// so the per-channel magnitude scans are contiguous.
+pub fn pack_nt_i8<'a>(
+    buf: &'a mut PackBufI8,
+    scales: &mut Vec<f32>,
+    b: MatView<'_>,
+) -> &'a [i8] {
+    let (n, k) = (b.rows, b.cols);
+    scales.clear();
+    scales.resize(panels(n) * NR, 0.0);
+    let dst = buf.flat_mut(panels(n) * k * NR);
+    for p in 0..panels(n) {
+        let j0 = p * NR;
+        let w = (n - j0).min(NR);
+        let base = p * k * NR;
+        for jj in 0..w {
+            let row = b.row(j0 + jj);
+            let mut max_abs = 0.0f32;
+            for &v in row {
+                max_abs = max_abs.max(v.abs());
+            }
+            let (s, inv) = quant_scale(max_abs);
+            scales[j0 + jj] = s;
+            for (kk, &v) in row.iter().enumerate() {
+                dst[base + kk * NR + jj] = quantize(v, inv);
+            }
+        }
+        for jj in w..NR {
+            for kk in 0..k {
+                dst[base + kk * NR + jj] = 0;
+            }
+        }
+    }
+    dst
+}
+
+/// Dynamic per-tensor symmetric quantization of an activation view into
+/// a reusable i8 buffer (row-major m × k).  Returns the quantized image
+/// and the tensor scale.  Runs once per GEMM call on the calling thread
+/// *before* the row-chunk fork, so every worker reads the same image
+/// and results stay thread-count-independent.
+pub fn quantize_activations<'a>(
+    buf: &'a mut PackBufI8,
+    a: MatView<'_>,
+) -> (&'a [i8], f32) {
+    let (m, k) = (a.rows, a.cols);
+    let mut max_abs = 0.0f32;
+    for i in 0..m {
+        for &v in a.row(i) {
+            max_abs = max_abs.max(v.abs());
+        }
+    }
+    let (scale, inv) = quant_scale(max_abs);
+    let dst = buf.flat_mut(m * k);
+    for i in 0..m {
+        let row = a.row(i);
+        for (o, &v) in dst[i * k..(i + 1) * k].iter_mut().zip(row) {
+            *o = quantize(v, inv);
+        }
+    }
+    (dst, scale)
+}
+
+/// i8×i8→i32 twin of [`gemm_chunk`]: one contiguous row chunk of
+/// `C = (a_scale · scales[j]) · (Aq · Bq)` against a pre-quantized,
+/// pre-packed B image ([`pack_nn_i8`]/[`pack_nt_i8`]).
+///
+/// `aq` is the whole quantized activation matrix (row-major, row stride
+/// `k`); `row0` indexes into it globally, like the f32 kernel's
+/// `MatView`.  Integer accumulation is exact, so — unlike the f32
+/// kernel, which must pin its operation order — results are bitwise
+/// identical across thread counts and chunkings *by construction*; the
+/// one rounding per element happens in the dequantizing multiply.
+/// Register tiling: [`MR`] rows × [`NR`] i32 accumulators.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_chunk_i8(
+    aq: &[i8],
+    row0: usize,
+    packed: &[i8],
+    k: usize,
+    n: usize,
+    a_scale: f32,
+    scales: &[f32],
+    c: &mut [f32],
+    cs: usize,
+    col0: usize,
+) {
+    let rows = c.len() / cs;
+    if k == 0 {
+        for i in 0..rows {
+            c[i * cs + col0..i * cs + col0 + n].fill(0.0);
+        }
+        return;
+    }
+    assert!(k <= I8_K_MAX, "i8 GEMM inner dim {k} could overflow i32");
+    for p in 0..panels(n) {
+        let j0 = p * NR;
+        let nr = (n - j0).min(NR);
+        let base = p * k * NR;
+        let mut i0 = 0;
+        while i0 < rows {
+            let mr = (rows - i0).min(MR);
+            let mut acc = [[0i32; NR]; MR];
+            for kk in 0..k {
+                let brow = &packed[base + kk * NR..base + (kk + 1) * NR];
+                for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
+                    let av = aq[(row0 + i0 + r) * k + kk] as i32;
+                    for (jj, &bv) in brow.iter().enumerate() {
+                        acc_r[jj] += av * bv as i32;
+                    }
+                }
+            }
+            for (r, acc_r) in acc.iter().enumerate().take(mr) {
+                let cbase = (i0 + r) * cs + col0 + j0;
+                for (jj, o) in c[cbase..cbase + nr].iter_mut().enumerate() {
+                    *o = acc_r[jj] as f32 * (a_scale * scales[j0 + jj]);
+                }
+            }
+            i0 += MR;
+        }
+    }
+}
+
+/// Number of [`MR`]-row panels covering `m` rows.
+#[inline]
+pub fn row_panels(m: usize) -> usize {
+    (m + MR - 1) / MR
+}
+
+/// Minimum `m` at which the f32 entry points also pack A into
+/// [`MR`]-row panels: the pack is one extra pass over A, repaid by
+/// unit-stride broadcast loads once each A row is re-read `panels(n)`
+/// times.  For short A (a handful of tile rows) the pass costs more
+/// than it saves.
+pub const A_PACK_MIN_M: usize = 48;
+
+/// Pack `a` (m × k, possibly a strided view) into K-major [`MR`]-row
+/// panels: element `(i0+ii, kk)` lands at `(rp·k + kk)·MR + ii` for
+/// row-panel `rp = i0/MR`; tail rows zero-pad into accumulator rows
+/// that are never stored.  Same values in the same accumulation order
+/// as reading A directly, so packed-A GEMMs stay bitwise identical.
+pub fn pack_a<'a>(buf: &'a mut PackBuf, a: MatView<'_>) -> &'a [f32] {
+    let (m, k) = (a.rows, a.cols);
+    let dst = buf.flat_mut(row_panels(m) * k * MR);
+    for rp in 0..row_panels(m) {
+        let i0 = rp * MR;
+        let h = (m - i0).min(MR);
+        let base = rp * k * MR;
+        for ii in 0..h {
+            let row = a.row(i0 + ii);
+            for (kk, &v) in row.iter().enumerate() {
+                dst[base + kk * MR + ii] = v;
+            }
+        }
+        for ii in h..MR {
+            for kk in 0..k {
+                dst[base + kk * MR + ii] = 0.0;
             }
         }
     }
@@ -421,6 +782,163 @@ pub fn gemm_chunk(
     }
 }
 
+/// [`tile_full`] reading A from a packed [`MR`]-row panel slice
+/// (`apanel[kk·MR + r]`): identical splat/mul_add sequence, so values
+/// are bitwise-equal to the unpacked tile.
+#[inline(always)]
+fn tile_full_pa(
+    apanel: &[f32],
+    kc: usize,
+    panel: &[f32],
+    c: &mut [f32],
+    cs: usize,
+    first: bool,
+) {
+    let (mut c00, mut c01, mut c10, mut c11, mut c20, mut c21, mut c30, mut c31) =
+        if first {
+            let z = F32x8::ZERO;
+            (z, z, z, z, z, z, z, z)
+        } else {
+            (
+                F32x8::load(&c[0..]),
+                F32x8::load(&c[LANES..]),
+                F32x8::load(&c[cs..]),
+                F32x8::load(&c[cs + LANES..]),
+                F32x8::load(&c[2 * cs..]),
+                F32x8::load(&c[2 * cs + LANES..]),
+                F32x8::load(&c[3 * cs..]),
+                F32x8::load(&c[3 * cs + LANES..]),
+            )
+        };
+    for kk in 0..kc {
+        let b0 = F32x8::load(&panel[kk * NR..]);
+        let b1 = F32x8::load(&panel[kk * NR + LANES..]);
+        let arow = &apanel[kk * MR..kk * MR + MR];
+        let s0 = F32x8::splat(arow[0]);
+        c00 = b0.mul_add(s0, c00);
+        c01 = b1.mul_add(s0, c01);
+        let s1 = F32x8::splat(arow[1]);
+        c10 = b0.mul_add(s1, c10);
+        c11 = b1.mul_add(s1, c11);
+        let s2 = F32x8::splat(arow[2]);
+        c20 = b0.mul_add(s2, c20);
+        c21 = b1.mul_add(s2, c21);
+        let s3 = F32x8::splat(arow[3]);
+        c30 = b0.mul_add(s3, c30);
+        c31 = b1.mul_add(s3, c31);
+    }
+    c00.store(&mut c[0..]);
+    c01.store(&mut c[LANES..]);
+    c10.store(&mut c[cs..]);
+    c11.store(&mut c[cs + LANES..]);
+    c20.store(&mut c[2 * cs..]);
+    c21.store(&mut c[2 * cs + LANES..]);
+    c30.store(&mut c[3 * cs..]);
+    c31.store(&mut c[3 * cs + LANES..]);
+}
+
+/// [`tile_edge`] reading A from a packed panel (zero-padded tail rows
+/// feed accumulator rows that are never stored).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_edge_pa(
+    apanel: &[f32],
+    mr: usize,
+    kc: usize,
+    panel: &[f32],
+    c: &mut [f32],
+    cs: usize,
+    nr: usize,
+    first: bool,
+) {
+    let mut acc = [[F32x8::ZERO; 2]; MR];
+    if !first {
+        for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
+            let row = &c[r * cs..r * cs + nr];
+            acc_r[0] = F32x8::load_partial(row);
+            acc_r[1] = F32x8::load_partial(&row[row.len().min(LANES)..]);
+        }
+    }
+    for kk in 0..kc {
+        let b0 = F32x8::load(&panel[kk * NR..]);
+        let b1 = F32x8::load(&panel[kk * NR + LANES..]);
+        let arow = &apanel[kk * MR..kk * MR + MR];
+        for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
+            let s = F32x8::splat(arow[r]);
+            acc_r[0] = b0.mul_add(s, acc_r[0]);
+            acc_r[1] = b1.mul_add(s, acc_r[1]);
+        }
+    }
+    for (r, acc_r) in acc.iter().enumerate().take(mr) {
+        let row = &mut c[r * cs..r * cs + nr];
+        let split = row.len().min(LANES);
+        let (lo, hi) = row.split_at_mut(split);
+        acc_r[0].store_partial(lo);
+        acc_r[1].store_partial(hi);
+    }
+}
+
+/// [`gemm_chunk`] against pre-packed A panels ([`pack_a`]): same
+/// panels, K-blocks, tile shapes and per-element operation order, so
+/// output is bitwise identical to the unpacked-A kernel — only A's load
+/// addresses change.  `row0` (the chunk's global row offset) must be
+/// [`MR`]-aligned so chunk-local tiles coincide with pack panels;
+/// `gemm`'s chunker rounds its row splits up to `MR` for this path.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_chunk_pa(
+    apack: &[f32],
+    row0: usize,
+    packed: &[f32],
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    cs: usize,
+    col0: usize,
+) {
+    debug_assert_eq!(row0 % MR, 0, "packed-A chunks must be MR-aligned");
+    let rows = c.len() / cs;
+    if k == 0 {
+        for i in 0..rows {
+            c[i * cs + col0..i * cs + col0 + n].fill(0.0);
+        }
+        return;
+    }
+    for p in 0..panels(n) {
+        let j0 = p * NR;
+        let nr = (n - j0).min(NR);
+        let base = p * k * NR;
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = (k - k0).min(KC);
+            let panel = &packed[base + k0 * NR..base + (k0 + kc) * NR];
+            let first = k0 == 0;
+            let mut i0 = 0;
+            while i0 < rows {
+                let mr = (rows - i0).min(MR);
+                let abase = (row0 + i0) / MR * (k * MR);
+                let apanel = &apack[abase + k0 * MR..abase + (k0 + kc) * MR];
+                let cbase = i0 * cs + col0 + j0;
+                if mr == MR && nr == NR {
+                    tile_full_pa(apanel, kc, panel, &mut c[cbase..], cs, first);
+                } else {
+                    tile_edge_pa(
+                        apanel,
+                        mr,
+                        kc,
+                        panel,
+                        &mut c[cbase..],
+                        cs,
+                        nr,
+                        first,
+                    );
+                }
+                i0 += MR;
+            }
+            k0 += kc;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -526,5 +1044,142 @@ mod tests {
             assert_eq!(c[i * 5], 7.0);
             assert_eq!(&c[i * 5 + 1..i * 5 + 4], &[0.0; 3]);
         }
+    }
+
+    #[test]
+    fn pack_nn_i8_layout_scales_and_padding() {
+        // column j has max |.| = 2 + j, so scale_j = (2 + j)/127 and the
+        // max element quantizes to exactly ±127
+        let b = Mat::filled_with(3, 5, |r, c| {
+            if r == 1 { -((2 + c) as f32) } else { (c as f32) / 10.0 }
+        });
+        let mut buf = PackBufI8::new();
+        let mut scales = Vec::new();
+        let packed = pack_nn_i8(&mut buf, &mut scales, MatView::full(&b));
+        assert_eq!(packed.len(), 3 * NR);
+        assert_eq!(scales.len(), NR, "one scale slot per packed column");
+        for j in 0..5 {
+            assert_eq!(scales[j], (2 + j) as f32 / 127.0);
+            assert_eq!(packed[NR + j], -127, "max element must hit -127");
+        }
+        // padding columns: zero scale, zero lanes
+        for j in 5..NR {
+            assert_eq!(scales[j], 0.0);
+            for kk in 0..3 {
+                assert_eq!(packed[kk * NR + j], 0);
+            }
+        }
+        // an all-zero column dequantizes to exact zeros via scale 0
+        let z = Mat::zeros(4, 2);
+        let packed = pack_nn_i8(&mut buf, &mut scales, MatView::full(&z));
+        assert_eq!(scales[0], 0.0);
+        assert!(packed.iter().all(|&q| q == 0));
+    }
+
+    #[test]
+    fn pack_nt_i8_per_row_channels() {
+        // NT: output channel j is B row j; row 1 is all ±4
+        let b = Mat::filled_with(3, 6, |r, c| {
+            if r == 1 { if c % 2 == 0 { 4.0 } else { -4.0 } } else { 0.5 }
+        });
+        let mut buf = PackBufI8::new();
+        let mut scales = Vec::new();
+        let packed = pack_nt_i8(&mut buf, &mut scales, MatView::full(&b));
+        assert_eq!(scales[1], 4.0 / 127.0);
+        for kk in 0..6 {
+            let want = if kk % 2 == 0 { 127 } else { -127 };
+            assert_eq!(packed[kk * NR + 1], want);
+        }
+        // channel 0 is constant 0.5 → scale 0.5/127, every value 127
+        assert_eq!(scales[0], 0.5 / 127.0);
+        assert_eq!(packed[0], 127);
+    }
+
+    #[test]
+    fn gemm_chunk_i8_matches_integer_reference() {
+        let a = Mat::filled_with(7, 9, |r, c| ((r * 9 + c) as f32).sin());
+        let b = Mat::filled_with(9, 19, |r, c| ((r * 19 + c) as f32).cos());
+        let mut bbuf = PackBufI8::new();
+        let mut scales = Vec::new();
+        let packed = pack_nt_i8(
+            &mut bbuf,
+            &mut scales,
+            MatView::full(&b.transpose()),
+        );
+        let mut abuf = PackBufI8::new();
+        let (aq, a_scale) = quantize_activations(&mut abuf, MatView::full(&a));
+        let mut c = vec![f32::NAN; 7 * 19];
+        gemm_chunk_i8(aq, 0, packed, 9, 19, a_scale, &scales, &mut c, 19, 0);
+        // replay the documented spec independently: exact i64 integer
+        // accumulation over the same quantized operands, then the same
+        // single-rounding dequant — must agree bitwise
+        for i in 0..7 {
+            for j in 0..19 {
+                let mut acc = 0i64;
+                for kk in 0..9 {
+                    let qb = i64::from(packed[kk * NR + (j % NR)
+                        + (j / NR) * 9 * NR]);
+                    acc += i64::from(aq[i * 9 + kk]) * qb;
+                }
+                let want = acc as f32 * (a_scale * scales[j]);
+                assert_eq!(
+                    c[i * 19 + j].to_bits(),
+                    want.to_bits(),
+                    "({i},{j})"
+                );
+            }
+        }
+        // and the dequantized result approximates the f32 product
+        for i in 0..7 {
+            for j in 0..19 {
+                let want: f32 =
+                    (0..9).map(|kk| a.at(i, kk) * b.at(kk, j)).sum();
+                assert!(
+                    (c[i * 19 + j] - want).abs() < 0.15,
+                    "({i},{j}): {} vs {}",
+                    c[i * 19 + j],
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        // 6×3 A → two MR-row panels, rows 6..8 zero-padded
+        let a = Mat::filled_with(6, 3, |r, c| (r * 10 + c) as f32);
+        let mut buf = PackBuf::new();
+        let packed = pack_a(&mut buf, MatView::full(&a));
+        assert_eq!(packed.len(), 2 * 3 * MR);
+        // panel 0, kk=2, row 1 → a[1][2]
+        assert_eq!(packed[2 * MR + 1], 12.0);
+        // panel 1, kk=0, row 5 (local 1) → a[5][0]
+        assert_eq!(packed[3 * MR + 1], 50.0);
+        for kk in 0..3 {
+            for ii in 2..MR {
+                assert_eq!(packed[(3 + kk) * MR + ii], 0.0, "pad row");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_chunk_pa_bitwise_matches_unpacked() {
+        let a = Mat::filled_with(11, 23, |r, c| ((r * 31 + c * 7) as f32).sin());
+        let b = Mat::filled_with(23, 21, |r, c| ((r + c * 3) as f32).cos());
+        let mut bbuf = PackBuf::new();
+        let packed = pack_nn(&mut bbuf, MatView::full(&b));
+        let mut want = vec![0.0f32; 11 * 21];
+        gemm_chunk(MatView::full(&a), 0, packed, 23, 21, &mut want, 21, 0);
+        let mut abuf = PackBuf::new();
+        let apack = pack_a(&mut abuf, MatView::full(&a));
+        let mut got = vec![f32::NAN; 11 * 21];
+        gemm_chunk_pa(apack, 0, packed, 23, 21, &mut got, 21, 0);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "elem {i}");
+        }
+        // an MR-aligned sub-chunk (rows 4..11) sees the same values
+        let mut sub = vec![f32::NAN; 7 * 21];
+        gemm_chunk_pa(apack, 4, packed, 23, 21, &mut sub, 21, 0);
+        assert_eq!(&sub[..], &want[4 * 21..]);
     }
 }

@@ -18,7 +18,9 @@ pub mod kernel;
 pub mod pool;
 pub mod svd;
 
-pub use gemm::{matmul, matmul_into, matmul_nt, matmul_nt_into};
+pub use gemm::{
+    matmul, matmul_into, matmul_nt, matmul_nt_into, Dtype, PackedPanels,
+};
 
 /// Dense row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]

@@ -17,6 +17,8 @@ use linformer::analysis::{self, complexity::Arch};
 use linformer::coordinator::ModelRegistry;
 #[cfg(not(feature = "pjrt"))]
 use linformer::coordinator::Task;
+#[cfg(not(feature = "pjrt"))]
+use linformer::linalg::Dtype;
 use linformer::model::{Attention, ModelConfig, Params};
 #[cfg(feature = "pjrt")]
 use linformer::runtime::Engine;
@@ -389,9 +391,11 @@ fn parse_tasks(spec: &str) -> Result<Vec<Task>, AnyError> {
 }
 
 /// Build the serve/reload registry: `[[model]]` tables from `--config`
-/// first, then repeatable `--model name=<ckpt.bin|init[:seed]>` flags.
-/// With neither, one fresh-init model named "default" (the pre-registry
-/// behavior).  All entries share the demo `cfg`.
+/// first, then repeatable `--model name=<ckpt.bin|init[:seed]>[@dtype]`
+/// flags.  With neither, one fresh-init model named "default" (the
+/// pre-registry behavior).  All entries share the demo `cfg`; the dtype
+/// suffix (`@f32` or `@int8`) picks the inference weight flavor — int8
+/// serves through the quantized packed-panel cache.
 #[cfg(not(feature = "pjrt"))]
 fn build_cli_registry(
     cfg: &ModelConfig,
@@ -401,21 +405,46 @@ fn build_cli_registry(
     let registry = Arc::new(ModelRegistry::new());
     for t in tables {
         match &t.checkpoint {
-            Some(path) => {
-                registry.register_checkpoint(&t.name, cfg.clone(), path)?
-            }
-            None => registry.register_init(&t.name, cfg.clone(), t.seed)?,
+            Some(path) => registry.register_checkpoint_dtype(
+                &t.name,
+                cfg.clone(),
+                path,
+                t.dtype,
+            )?,
+            None => registry.register_init_dtype(
+                &t.name,
+                cfg.clone(),
+                t.seed,
+                t.dtype,
+            )?,
         };
         println!(
-            "[serve] registered model '{}' ({})",
+            "[serve] registered model '{}' ({}, {})",
             t.name,
-            t.checkpoint.as_deref().unwrap_or("fresh init")
+            t.checkpoint.as_deref().unwrap_or("fresh init"),
+            t.dtype.name()
         );
     }
     for spec in flags {
         let (name, source) = spec.split_once('=').ok_or_else(|| {
-            format!("--model expects name=<ckpt.bin|init[:seed]>, got '{spec}'")
+            format!(
+                "--model expects name=<ckpt.bin|init[:seed]>[@f32|@int8], \
+                 got '{spec}'"
+            )
         })?;
+        // an optional @dtype suffix on the source picks the weight flavor
+        let (source, dtype) = match source.rsplit_once('@') {
+            Some((rest, d)) => (
+                rest,
+                Dtype::from_name(d).ok_or_else(|| {
+                    format!(
+                        "unknown dtype '{d}' in --model '{spec}' \
+                         (expected f32 or int8)"
+                    )
+                })?,
+            ),
+            None => (source, Dtype::F32),
+        };
         let init_seed = if source == "init" {
             Some(0)
         } else if let Some(s) = source.strip_prefix("init:") {
@@ -428,14 +457,23 @@ fn build_cli_registry(
         };
         match init_seed {
             Some(seed) => {
-                registry.register_init(name, cfg.clone(), seed)?;
+                registry.register_init_dtype(name, cfg.clone(), seed, dtype)?;
                 println!(
-                    "[serve] registered model '{name}' (init seed {seed})"
+                    "[serve] registered model '{name}' (init seed {seed}, {})",
+                    dtype.name()
                 );
             }
             None => {
-                registry.register_checkpoint(name, cfg.clone(), source)?;
-                println!("[serve] registered model '{name}' ({source})");
+                registry.register_checkpoint_dtype(
+                    name,
+                    cfg.clone(),
+                    source,
+                    dtype,
+                )?;
+                println!(
+                    "[serve] registered model '{name}' ({source}, {})",
+                    dtype.name()
+                );
             }
         }
     }
@@ -478,7 +516,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
             ("config", "TOML launcher config ([[model]] tables etc.)"),
             (
                 "model",
-                "register name=<ckpt.bin|init[:seed]> (repeatable)",
+                "register name=<ckpt.bin|init[:seed]>[@f32|@int8] \
+                 (repeatable; @int8 serves quantized weights)",
             ),
             (
                 "tasks",

@@ -27,6 +27,19 @@
 //!   parallel threshold or an intra-GEMM cap of 1 — pinned by the
 //!   counting-allocator test in `tests/alloc_free.rs`; above the
 //!   threshold each parallel GEMM also queues a few boxed pool tasks).
+//! - **Packed weight panels.** Every GEMM whose B operand is a weight
+//!   matrix (QKV/O, FFN, MLM dense, classifier head, tied output
+//!   embedding) consults an optional [`PackedWeights`] cache attached to
+//!   the scratch ([`EncodeScratch::set_packed`], threaded through by the
+//!   model registry): on a generation-checked hit the per-call B-pack —
+//!   worst of all the (vocab × d) tied-embedding transpose-pack that
+//!   used to run on **every** `mlm_logits_with` call — is skipped
+//!   entirely, and for int8 caches the pre-quantized panels dequantize
+//!   in the kernel epilogue.  Misses fall back to the per-call path and
+//!   bump [`weight_pack_fallbacks`] so tests can pin "warm cached call
+//!   packs nothing".  E/F projections are deliberately not cached: they
+//!   sit on the *A* side of their GEMMs (the activation is the packed
+//!   operand there), so no per-call weight pack exists for them.
 //! - **Threading.** Large GEMMs row-partition into tasks on the
 //!   process-wide persistent pool (see [`crate::linalg::pool`]);
 //!   [`encode_batch`] additionally parallelises across examples on the
@@ -36,11 +49,13 @@
 //!   [`encode`] output exactly, for any budget or pool size.
 
 use super::config::{Attention, ModelConfig, ProjMode, Sharing};
-use super::params::{ParamHandle, Params};
+use super::params::{PackedWeights, ParamHandle, Params};
 use crate::linalg::{
-    gelu_inplace, gemm, layer_norm_rows, pool, softmax_rows, Mat, MatView,
+    gelu_inplace, gemm, layer_norm_rows, pool, softmax_rows, Dtype, Mat,
+    MatView, PackedPanels,
 };
-use std::sync::Mutex;
+use std::cell::Cell;
+use std::sync::{Arc, Mutex};
 
 /// Per-head attention matrices captured during a forward pass
 /// (only when requested — they are O(n²) / O(nk)).
@@ -240,6 +255,94 @@ impl EncoderHandles {
     pub fn matches(&self, params: &Params, cfg: &ModelConfig) -> bool {
         self.params_gen == params.generation() && self.cfg == *cfg
     }
+
+    /// Pre-pack (and, for int8, pre-quantize) every weight matrix the
+    /// forward pass consumes as a GEMM **B** operand: QKV/O and FFN
+    /// projections per layer, the MLM dense head, the classifier head,
+    /// and the tied output embedding (transpose-packed — the panel that
+    /// used to be rebuilt from the whole (vocab × d) table on every
+    /// `mlm_logits_with` call).  Built once per [`Params::generation`]
+    /// by the model registry at register/reload time; consumed via
+    /// [`EncodeScratch::set_packed`].
+    ///
+    /// E/F projections are deliberately absent: they are the *A*
+    /// operands of their GEMMs (`K̄ = E·K`), so the packed (B-side)
+    /// operand there is the per-call activation — there is no per-call
+    /// weight pack to eliminate, and their byte traffic is negligible
+    /// next to the d×d / d×ff / vocab×d matrices cached here.
+    pub fn pack_weights(&self, params: &Params, dtype: Dtype) -> PackedWeights {
+        let mut pw = PackedWeights::new(params.generation(), dtype);
+        let mut nn = |pw: &mut PackedWeights, h: ParamHandle| {
+            pw.insert(
+                h,
+                0,
+                false,
+                PackedPanels::pack(dtype, params.view_at(h), false),
+            );
+        };
+        for lh in &self.layers {
+            for h in [lh.wq, lh.wk, lh.wv, lh.wo, lh.ffn_w1, lh.ffn_w2] {
+                nn(&mut pw, h);
+            }
+        }
+        nn(&mut pw, self.mlm_dense_w);
+        nn(&mut pw, self.cls_w);
+        pw.insert(
+            self.tok_emb,
+            0,
+            true,
+            PackedPanels::pack(dtype, params.view_at(self.tok_emb), true),
+        );
+        pw
+    }
+}
+
+thread_local! {
+    /// Per-thread count of weight-side GEMMs that had to pack (or
+    /// transpose-pack, or quantize) their weight operand per call —
+    /// i.e. missed the [`PackedWeights`] cache on the SIMD path.
+    static WEIGHT_PACK_FALLBACKS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of weight-side GEMMs on this thread that packed their weight
+/// operand per call (no cache attached, or a generation/handle miss).
+/// Tests diff this across a warm cached call to prove the packed-panel
+/// cache eliminates *all* per-call weight packing; scalar-pinned
+/// scratches never pack panels and never count.
+pub fn weight_pack_fallbacks() -> u64 {
+    WEIGHT_PACK_FALLBACKS.with(|c| c.get())
+}
+
+/// One weight-side GEMM `out = x · W` (or `x · Wᵀ` when `transposed`):
+/// consult the packed-panel cache first, fall back to the per-call-pack
+/// entry points on miss.  Scalar-pinned scratches skip the cache —
+/// panels are the SIMD microkernel's format — so the scalar baseline
+/// stays the scalar baseline.
+#[allow(clippy::too_many_arguments)]
+fn weight_gemm(
+    params: &Params,
+    h: ParamHandle,
+    transposed: bool,
+    packed: Option<&PackedWeights>,
+    x: MatView<'_>,
+    out: &mut Mat,
+    threads: usize,
+    gs: &mut gemm::GemmScratch,
+) {
+    if !gs.is_scalar() {
+        if let Some(p) =
+            packed.and_then(|pw| pw.get(params.generation(), h, 0, transposed))
+        {
+            gemm::matmul_packed_view_in(x, p, out, threads, gs);
+            return;
+        }
+        WEIGHT_PACK_FALLBACKS.with(|c| c.set(c.get() + 1));
+    }
+    if transposed {
+        gemm::matmul_nt_view_in(x, params.view_at(h), out, threads, gs);
+    } else {
+        gemm::matmul_view_in(x, params.view_at(h), out, threads, gs);
+    }
 }
 
 /// Reusable workspace for the encoder forward pass.
@@ -259,6 +362,14 @@ pub struct EncodeScratch {
     /// kernel selection) every hot-path matmul uses — packing reuses
     /// this allocation instead of touching the heap per call.
     gs: gemm::GemmScratch,
+    /// Pre-packed weight panels (a registry entry's, generation-checked
+    /// on every probe): weight-side GEMMs that hit skip their per-call
+    /// pack/quantization entirely.
+    packed: Option<Arc<PackedWeights>>,
+    /// Per-scratch memo of the transpose-packed tied embedding for
+    /// standalone (uncached) MLM callers, keyed by `(generation,
+    /// handle)` — built on the first call, not on every call.
+    mlm_pack: Option<(u64, ParamHandle, PackedPanels)>,
     h: Mat,
     q: Mat,
     k: Mat,
@@ -294,6 +405,8 @@ impl EncodeScratch {
             threads: threads.max(1),
             handles: None,
             gs: gemm::GemmScratch::new(),
+            packed: None,
+            mlm_pack: None,
             h: z(),
             q: z(),
             k: z(),
@@ -316,6 +429,14 @@ impl EncodeScratch {
     /// (baseline benchmarking; see the `scalar-gemm` feature).
     pub fn use_scalar_kernel(&mut self, scalar: bool) {
         self.gs.set_scalar(scalar);
+    }
+
+    /// Attach pre-packed weight panels (e.g. a registry entry's): every
+    /// weight-side GEMM whose `(generation, handle)` matches skips its
+    /// per-call pack/quantization entirely; mismatches (a stale cache
+    /// after a hot swap) miss cleanly and fall back to per-call packing.
+    pub fn set_packed(&mut self, packed: Option<Arc<PackedWeights>>) {
+        self.packed = packed;
     }
 
     /// Data pointers of the per-layer buffers (including the GEMM
@@ -419,18 +540,24 @@ pub fn encode_with(
             1e-5,
         );
         let t = scratch.threads;
-        gemm::matmul_view_in(
+        weight_gemm(
+            params,
+            lh.ffn_w1,
+            false,
+            scratch.packed.as_deref(),
             MatView::full(&scratch.h),
-            params.view_at(lh.ffn_w1),
             &mut scratch.ff,
             gemm::plan_threads(n, d, cfg.d_ff, t),
             &mut scratch.gs,
         );
         scratch.ff.add_row_vec(params.slice(lh.ffn_b1));
         gelu_inplace(&mut scratch.ff);
-        gemm::matmul_view_in(
+        weight_gemm(
+            params,
+            lh.ffn_w2,
+            false,
+            scratch.packed.as_deref(),
             MatView::full(&scratch.ff),
-            params.view_at(lh.ffn_w2),
             &mut scratch.ff2,
             gemm::plan_threads(n, cfg.d_ff, d, t),
             &mut scratch.gs,
@@ -462,20 +589,33 @@ fn attention_layer(
 ) -> Vec<Mat> {
     let lh = &hd.layers[layer];
     let EncodeScratch {
-        threads, gs, h, q, k, v, kbar, vbar, logits, ctx, attn_out, ..
+        threads,
+        gs,
+        packed,
+        h,
+        q,
+        k,
+        v,
+        kbar,
+        vbar,
+        logits,
+        ctx,
+        attn_out,
+        ..
     } = scratch;
     let threads = *threads;
+    let pw = packed.as_deref();
     let n = h.rows;
     let d = cfg.d_model;
     let heads = cfg.n_heads;
     let dh = cfg.d_head();
     let plan = |kdim: usize, ncols: usize| gemm::plan_threads(n, kdim, ncols, threads);
 
-    gemm::matmul_view_in(MatView::full(h), params.view_at(lh.wq), q, plan(d, d), gs);
+    weight_gemm(params, lh.wq, false, pw, MatView::full(h), q, plan(d, d), gs);
     q.add_row_vec(params.slice(lh.bq));
-    gemm::matmul_view_in(MatView::full(h), params.view_at(lh.wk), k, plan(d, d), gs);
+    weight_gemm(params, lh.wk, false, pw, MatView::full(h), k, plan(d, d), gs);
     k.add_row_vec(params.slice(lh.bk));
-    gemm::matmul_view_in(MatView::full(h), params.view_at(lh.wv), v, plan(d, d), gs);
+    weight_gemm(params, lh.wv, false, pw, MatView::full(h), v, plan(d, d), gs);
     v.add_row_vec(params.slice(lh.bv));
 
     ctx.reset(n, d);
@@ -536,9 +676,12 @@ fn attention_layer(
         gemm::matmul_view_cols_in(MatView::full(lbuf), vb, ctx, col0, plan(kb.rows, dh), gs);
     }
 
-    gemm::matmul_view_in(
+    weight_gemm(
+        params,
+        lh.wo,
+        false,
+        pw,
         MatView::full(ctx),
-        params.view_at(lh.wo),
         attn_out,
         plan(d, d),
         gs,
@@ -621,11 +764,14 @@ fn conv_into(x: MatView<'_>, w: &[f32], k: usize, out: &mut Mat) {
 /// per-task parameter-name resolution.  Handles that do not match the
 /// `(params, cfg)` a worker then encounters are simply rebuilt by
 /// [`encode_with`]'s cache check, so a stale pass-through can never
-/// corrupt results.
+/// corrupt results.  `packed` likewise seeds each worker with the
+/// entry's pre-packed weight panels — generation-checked per probe, so
+/// a stale cache degrades to per-call packing, never to wrong weights.
 fn batch_map<F>(
     n_items: usize,
     threads: usize,
     handles: Option<&EncoderHandles>,
+    packed: Option<&Arc<PackedWeights>>,
     f: F,
 ) -> Vec<Mat>
 where
@@ -634,6 +780,7 @@ where
     let make_scratch = |t: usize| {
         let mut s = EncodeScratch::with_threads(t);
         s.handles = handles.cloned();
+        s.packed = packed.cloned();
         s
     };
     let t = threads.min(n_items).max(1);
@@ -678,20 +825,26 @@ pub fn encode_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<Mat> {
-    encode_batch_warm(params, cfg, seqs, None)
+    encode_batch_warm(params, cfg, seqs, None, None)
 }
 
-/// [`encode_batch`] with prebuilt handles (a registry entry's): batch
-/// workers skip the per-scratch parameter-name resolution entirely.
+/// [`encode_batch`] with prebuilt handles and packed weight panels (a
+/// registry entry's): batch workers skip the per-scratch parameter-name
+/// resolution and all per-call weight packing.
 pub fn encode_batch_warm(
     params: &Params,
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
     handles: Option<&EncoderHandles>,
+    packed: Option<&Arc<PackedWeights>>,
 ) -> Vec<Mat> {
-    batch_map(seqs.len(), gemm::max_threads(), handles, |scratch, i| {
-        encode_with(params, cfg, &seqs[i], false, scratch).hidden
-    })
+    batch_map(
+        seqs.len(),
+        gemm::max_threads(),
+        handles,
+        packed,
+        |scratch, i| encode_with(params, cfg, &seqs[i], false, scratch).hidden,
+    )
 }
 
 /// MLM head logits for one example, reusing a scratch: (n × vocab).
@@ -708,9 +861,12 @@ pub fn mlm_logits_with(
     let d = cfg.d_model;
     let t = scratch.threads;
     // dense + gelu + ln in scratch.h (free after encode)
-    gemm::matmul_view_in(
+    weight_gemm(
+        params,
+        hd.mlm_dense_w,
+        false,
+        scratch.packed.as_deref(),
         MatView::full(&hidden),
-        params.view_at(hd.mlm_dense_w),
         &mut scratch.h,
         gemm::plan_threads(n, d, d, t),
         &mut scratch.gs,
@@ -723,16 +879,52 @@ pub fn mlm_logits_with(
         params.slice(hd.mlm_ln_bias),
         1e-5,
     );
-    // tied output embedding: logits = h · W_tokᵀ
-    let tok = params.view_at(hd.tok_emb); // (vocab × d)
+    // tied output embedding: logits = h · W_tokᵀ.  This GEMM used to
+    // transpose-pack the entire (vocab × d) token table on every call;
+    // now it reads the registry's panels on a cache hit, and uncached
+    // SIMD callers amortise the pack through a per-scratch memo instead.
+    let plan = gemm::plan_threads(n, d, cfg.vocab_size, t);
     let mut logits = Mat::zeros(0, 0);
-    gemm::matmul_nt_view_in(
-        MatView::full(&scratch.h),
-        tok,
-        &mut logits,
-        gemm::plan_threads(n, d, cfg.vocab_size, t),
-        &mut scratch.gs,
-    );
+    if scratch.gs.is_scalar() {
+        gemm::matmul_nt_view_in(
+            MatView::full(&scratch.h),
+            params.view_at(hd.tok_emb),
+            &mut logits,
+            plan,
+            &mut scratch.gs,
+        );
+    } else if let Some(p) = scratch
+        .packed
+        .as_deref()
+        .and_then(|pw| pw.get(params.generation(), hd.tok_emb, 0, true))
+    {
+        gemm::matmul_packed_view_in(
+            MatView::full(&scratch.h),
+            p,
+            &mut logits,
+            plan,
+            &mut scratch.gs,
+        );
+    } else {
+        let stale = !matches!(
+            &scratch.mlm_pack,
+            Some((g, h, _)) if *g == params.generation() && *h == hd.tok_emb
+        );
+        if stale {
+            WEIGHT_PACK_FALLBACKS.with(|c| c.set(c.get() + 1));
+            let p =
+                PackedPanels::pack(Dtype::F32, params.view_at(hd.tok_emb), true);
+            scratch.mlm_pack = Some((params.generation(), hd.tok_emb, p));
+        }
+        let (_, _, p) = scratch.mlm_pack.as_ref().expect("memo just built");
+        gemm::matmul_packed_view_in(
+            MatView::full(&scratch.h),
+            p,
+            &mut logits,
+            plan,
+            &mut scratch.gs,
+        );
+    }
     logits.add_row_vec(params.slice(hd.mlm_out_bias));
     scratch.handles = Some(hd);
     logits
@@ -749,19 +941,25 @@ pub fn mlm_logits_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<Mat> {
-    mlm_logits_batch_warm(params, cfg, seqs, None)
+    mlm_logits_batch_warm(params, cfg, seqs, None, None)
 }
 
-/// [`mlm_logits_batch`] with prebuilt handles — warm batch workers.
+/// [`mlm_logits_batch`] with prebuilt handles and packed panels — warm
+/// batch workers (the tied-embedding transpose-pack is skipped).
 pub fn mlm_logits_batch_warm(
     params: &Params,
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
     handles: Option<&EncoderHandles>,
+    packed: Option<&Arc<PackedWeights>>,
 ) -> Vec<Mat> {
-    batch_map(seqs.len(), gemm::max_threads(), handles, |scratch, i| {
-        mlm_logits_with(params, cfg, &seqs[i], scratch)
-    })
+    batch_map(
+        seqs.len(),
+        gemm::max_threads(),
+        handles,
+        packed,
+        |scratch, i| mlm_logits_with(params, cfg, &seqs[i], scratch),
+    )
 }
 
 /// Batched MLM argmax predictions (one token id per input position) — the
@@ -771,17 +969,19 @@ pub fn mlm_predict_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<Vec<u32>> {
-    mlm_predict_batch_warm(params, cfg, seqs, None)
+    mlm_predict_batch_warm(params, cfg, seqs, None, None)
 }
 
-/// [`mlm_predict_batch`] with prebuilt handles — warm batch workers.
+/// [`mlm_predict_batch`] with prebuilt handles and packed panels —
+/// warm batch workers.
 pub fn mlm_predict_batch_warm(
     params: &Params,
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
     handles: Option<&EncoderHandles>,
+    packed: Option<&Arc<PackedWeights>>,
 ) -> Vec<Vec<u32>> {
-    mlm_logits_batch_warm(params, cfg, seqs, handles)
+    mlm_logits_batch_warm(params, cfg, seqs, handles, packed)
         .into_iter()
         .map(|logits| {
             (0..logits.rows)
@@ -816,7 +1016,16 @@ pub fn cls_logits_with(
     let hd = scratch.handles.take().expect("handles interned by encode");
     let cls = MatView::new(hidden.row(0), 1, cfg.d_model, cfg.d_model);
     let mut logits = Mat::zeros(0, 0);
-    gemm::matmul_view_in(cls, params.view_at(hd.cls_w), &mut logits, 1, &mut scratch.gs);
+    weight_gemm(
+        params,
+        hd.cls_w,
+        false,
+        scratch.packed.as_deref(),
+        cls,
+        &mut logits,
+        1,
+        &mut scratch.gs,
+    );
     logits.add_row_vec(params.slice(hd.cls_b));
     scratch.handles = Some(hd);
     logits
@@ -832,19 +1041,25 @@ pub fn classify_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<(u32, Vec<f32>)> {
-    classify_batch_warm(params, cfg, seqs, None)
+    classify_batch_warm(params, cfg, seqs, None, None)
 }
 
-/// [`classify_batch`] with prebuilt handles — warm batch workers.
+/// [`classify_batch`] with prebuilt handles and packed panels — warm
+/// batch workers.
 pub fn classify_batch_warm(
     params: &Params,
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
     handles: Option<&EncoderHandles>,
+    packed: Option<&Arc<PackedWeights>>,
 ) -> Vec<(u32, Vec<f32>)> {
-    batch_map(seqs.len(), gemm::max_threads(), handles, |scratch, i| {
-        cls_logits_with(params, cfg, &seqs[i], scratch)
-    })
+    batch_map(
+        seqs.len(),
+        gemm::max_threads(),
+        handles,
+        packed,
+        |scratch, i| cls_logits_with(params, cfg, &seqs[i], scratch),
+    )
     .into_iter()
     .map(|logits| {
         let row = logits.row(0);
@@ -871,19 +1086,21 @@ pub fn attn_capture_batch(
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
 ) -> Vec<Vec<Vec<Mat>>> {
-    attn_capture_batch_warm(params, cfg, seqs, None)
+    attn_capture_batch_warm(params, cfg, seqs, None, None)
 }
 
-/// [`attn_capture_batch`] with prebuilt handles — the (serial) capture
-/// scratch starts warm.
+/// [`attn_capture_batch`] with prebuilt handles and packed panels — the
+/// (serial) capture scratch starts warm.
 pub fn attn_capture_batch_warm(
     params: &Params,
     cfg: &ModelConfig,
     seqs: &[Vec<u32>],
     handles: Option<&EncoderHandles>,
+    packed: Option<&Arc<PackedWeights>>,
 ) -> Vec<Vec<Vec<Mat>>> {
     let mut scratch = EncodeScratch::new();
     scratch.handles = handles.cloned();
+    scratch.packed = packed.cloned();
     seqs.iter()
         .map(|s| {
             encode_with(params, cfg, s, true, &mut scratch)
@@ -1173,30 +1390,33 @@ mod tests {
             toks(&cfg, cfg.max_len, 71),
             toks(&cfg, 3, 72),
         ];
+        let pk = Arc::new(hd.pack_weights(&p, Dtype::F32));
         let cold = encode_batch(&p, &cfg, &seqs);
-        let warm = encode_batch_warm(&p, &cfg, &seqs, Some(&hd));
+        let warm = encode_batch_warm(&p, &cfg, &seqs, Some(&hd), Some(&pk));
         for (c, w) in cold.iter().zip(&warm) {
             assert_eq!(c.data, w.data, "warm encode diverged");
         }
         assert_eq!(
             mlm_predict_batch(&p, &cfg, &seqs),
-            mlm_predict_batch_warm(&p, &cfg, &seqs, Some(&hd))
+            mlm_predict_batch_warm(&p, &cfg, &seqs, Some(&hd), Some(&pk))
         );
         assert_eq!(
             classify_batch(&p, &cfg, &seqs),
-            classify_batch_warm(&p, &cfg, &seqs, Some(&hd))
+            classify_batch_warm(&p, &cfg, &seqs, Some(&hd), Some(&pk))
         );
-        let warm_cap = attn_capture_batch_warm(&p, &cfg, &seqs, Some(&hd));
+        let warm_cap =
+            attn_capture_batch_warm(&p, &cfg, &seqs, Some(&hd), Some(&pk));
         let cold_cap = attn_capture_batch(&p, &cfg, &seqs);
         for (w, c) in warm_cap.iter().flatten().flatten().zip(
             cold_cap.iter().flatten().flatten(),
         ) {
             assert_eq!(w.data, c.data, "warm capture diverged");
         }
-        // handles built for a *different* store: encode_with's cache
-        // check must rebuild them rather than read the wrong weights
+        // handles and panels built for a *different* store: encode_with
+        // rebuilds the handles and the generation check turns every
+        // panel probe into a clean miss — never the wrong weights
         let other = Params::init(&cfg, 41);
-        let stale = encode_batch_warm(&other, &cfg, &seqs, Some(&hd));
+        let stale = encode_batch_warm(&other, &cfg, &seqs, Some(&hd), Some(&pk));
         let fresh = encode_batch(&other, &cfg, &seqs);
         for (s, f) in stale.iter().zip(&fresh) {
             assert_eq!(s.data, f.data, "stale handles corrupted output");
@@ -1291,6 +1511,143 @@ mod tests {
                 assert_eq!(a.data, b.data, "capture diverged");
             }
         }
+    }
+
+    #[test]
+    fn pack_weights_covers_every_weight_side_gemm() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 80);
+        let hd = EncoderHandles::build(&p, &cfg);
+        let pw = hd.pack_weights(&p, Dtype::F32);
+        // 6 per layer (wq wk wv wo ffn_w1 ffn_w2) + mlm dense + cls +
+        // tied embedding; E/F are A-side operands and deliberately absent
+        assert_eq!(pw.len(), cfg.n_layers * 6 + 3);
+        assert!(pw.bytes() > 0);
+        assert_eq!(pw.generation(), p.generation());
+        // the tied embedding is stored transpose-packed
+        assert!(pw.get(p.generation(), hd.tok_emb, 0, true).is_some());
+        assert!(pw.get(p.generation(), hd.tok_emb, 0, false).is_none());
+        // a different store's generation misses every probe
+        let other = Params::init(&cfg, 81);
+        assert!(pw.get(other.generation(), hd.tok_emb, 0, true).is_none());
+        // int8 flavor covers the same set
+        let pq = hd.pack_weights(&p, Dtype::Int8);
+        assert_eq!(pq.len(), pw.len());
+        assert_eq!(pq.dtype(), Dtype::Int8);
+        assert!(pq.bytes() < pw.bytes(), "int8 panels should be smaller");
+    }
+
+    #[test]
+    fn cached_f32_panels_match_uncached_bitwise() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 82);
+        let hd = EncoderHandles::build(&p, &cfg);
+        let pk = Arc::new(hd.pack_weights(&p, Dtype::F32));
+        let mut cached = EncodeScratch::with_handles(hd);
+        cached.set_packed(Some(pk));
+        for (i, n) in [cfg.max_len, 7, 13].into_iter().enumerate() {
+            let t = toks(&cfg, n, 90 + i as u64);
+            let c = encode_with(&p, &cfg, &t, false, &mut cached);
+            assert_eq!(
+                c.hidden.data,
+                encode(&p, &cfg, &t, false).hidden.data,
+                "cached encode diverged (n={n})"
+            );
+            let cl = mlm_logits_with(&p, &cfg, &t, &mut cached);
+            assert_eq!(
+                cl.data,
+                mlm_logits(&p, &cfg, &t).data,
+                "cached mlm diverged (n={n})"
+            );
+        }
+    }
+
+    #[test]
+    fn cached_int8_close_to_f32_and_thread_deterministic() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 83);
+        let hd = EncoderHandles::build(&p, &cfg);
+        let pq = Arc::new(hd.pack_weights(&p, Dtype::Int8));
+        let t = toks(&cfg, cfg.max_len, 95);
+        let f32_logits = mlm_logits(&p, &cfg, &t);
+        let mut s1 = EncodeScratch::with_threads(1);
+        s1.set_packed(Some(pq.clone()));
+        let q1 = mlm_logits_with(&p, &cfg, &t, &mut s1);
+        assert!(q1.data.iter().all(|x| x.is_finite()));
+        // loose tier-1 sanity: int8 error must stay far from sign-flip /
+        // garbage-scale territory (the pinned gate runs in release, see
+        // tests/int8_accuracy.rs)
+        let max_abs = f32_logits.data.iter().fold(0f32, |m, x| m.max(x.abs()));
+        let diff = f32_logits.max_abs_diff(&q1);
+        assert!(
+            diff < 0.5 * (1.0 + max_abs),
+            "int8 logits wildly off: diff {diff}, f32 max |x| {max_abs}"
+        );
+        // integer accumulation is exact, so the int8 path is bitwise
+        // identical for any intra-GEMM thread cap
+        let mut s7 = EncodeScratch::with_threads(7);
+        s7.set_packed(Some(pq));
+        let q7 = mlm_logits_with(&p, &cfg, &t, &mut s7);
+        assert_eq!(q1.data, q7.data, "int8 logits depend on thread cap");
+    }
+
+    #[test]
+    fn warm_cached_call_never_packs_weights() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 84);
+        let hd = EncoderHandles::build(&p, &cfg);
+        let pk = Arc::new(hd.pack_weights(&p, Dtype::F32));
+        let t = toks(&cfg, cfg.max_len, 96);
+        // sanity: without a cache the counter does move
+        let mut cold = EncodeScratch::with_threads(1);
+        let before = weight_pack_fallbacks();
+        encode_with(&p, &cfg, &t, false, &mut cold);
+        assert!(
+            weight_pack_fallbacks() > before,
+            "uncached weight GEMMs should count as fallbacks"
+        );
+        // with the cache attached, every weight-side GEMM hits — from
+        // the very first call (panels were built at "register" time)
+        let mut warm = EncodeScratch::with_handles(hd);
+        warm.set_packed(Some(pk));
+        let before = weight_pack_fallbacks();
+        encode_with(&p, &cfg, &t, false, &mut warm);
+        mlm_logits_with(&p, &cfg, &t, &mut warm);
+        cls_logits_with(&p, &cfg, &t, &mut warm);
+        assert_eq!(
+            weight_pack_fallbacks(),
+            before,
+            "cached calls must pack zero weight panels"
+        );
+    }
+
+    #[test]
+    fn uncached_mlm_memoizes_tied_embedding_pack() {
+        // standalone (no registry cache) MLM callers used to
+        // transpose-pack the whole (vocab × d) table per call; the
+        // per-scratch memo pays it exactly once per generation
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 85);
+        let t = toks(&cfg, 11, 97);
+        let mut scratch = EncodeScratch::with_threads(1);
+        let first = mlm_logits_with(&p, &cfg, &t, &mut scratch);
+        let per_call = weight_pack_fallbacks();
+        let second = mlm_logits_with(&p, &cfg, &t, &mut scratch);
+        let delta = weight_pack_fallbacks() - per_call;
+        assert_eq!(first.data, second.data);
+        // the second call repacks every per-call weight GEMM *except*
+        // the memoized tied embedding
+        let per_call_weight_gemms = (cfg.n_layers as u64) * 6 + 1;
+        assert_eq!(delta, per_call_weight_gemms, "memo missed or overshot");
+        // a different store (new generation) rebuilds the memo once
+        let p2 = Params::init(&cfg, 86);
+        let before = weight_pack_fallbacks();
+        mlm_logits_with(&p2, &cfg, &t, &mut scratch);
+        assert_eq!(
+            weight_pack_fallbacks() - before,
+            per_call_weight_gemms + 1,
+            "generation change must rebuild the tied-embedding memo"
+        );
     }
 
     #[test]

@@ -15,7 +15,9 @@ pub use encoder::{
     classify_batch_warm, cls_logits_with, encode, encode_batch,
     encode_batch_warm, encode_with, mlm_logits, mlm_logits_batch,
     mlm_logits_batch_warm, mlm_logits_with, mlm_predict_batch,
-    mlm_predict_batch_warm, AttnCapture, EncodeOut, EncodeScratch,
-    EncoderHandles,
+    mlm_predict_batch_warm, weight_pack_fallbacks, AttnCapture, EncodeOut,
+    EncodeScratch, EncoderHandles,
 };
-pub use params::{param_count, param_spec, ParamHandle, Params};
+pub use params::{
+    param_count, param_spec, PackedWeights, ParamHandle, Params,
+};

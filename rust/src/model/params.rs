@@ -8,8 +8,9 @@
 //! interchangeable.
 
 use super::config::{Attention, ModelConfig, ProjMode, Sharing};
-use crate::linalg::MatView;
+use crate::linalg::{Dtype, MatView, PackedPanels};
 use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
 
 /// Ordered parameter spec: (name, shape).
 pub type Spec = Vec<(String, Vec<usize>)>;
@@ -162,7 +163,7 @@ pub enum ParamError {
 /// `Params` is valid for any other `Params` with the identical spec.  The
 /// `total` stamp (full flat length) guards against cross-layout misuse in
 /// debug builds.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ParamHandle {
     off: usize,
     len: usize,
@@ -172,6 +173,93 @@ pub struct ParamHandle {
     cols: usize,
     /// Flat length of the store this was resolved against.
     total: usize,
+}
+
+/// Generation-keyed cache of pre-packed (and, for int8, pre-quantized)
+/// weight panels.
+///
+/// Weight matrices are immutable between registry reloads, yet every
+/// weight-side GEMM used to re-pack its B operand per call — worst of
+/// all the (vocab × d) tied-embedding transpose-pack inside
+/// `mlm_logits_with`.  A `PackedWeights` is built once per
+/// `Params::generation` (at `register`/`reload` time, see
+/// `coordinator::registry`) and consulted on the hot path with nothing
+/// but a `BTreeMap` probe.
+///
+/// Keys are `(handle, plane, transposed)`: the handle identifies the
+/// tensor by layout, `plane` selects one slab of a stacked 3-D tensor
+/// (0 for 2-D weights), and `transposed` distinguishes NT panels (the
+/// tied embedding packs its [v, d] matrix column-major).
+///
+/// The cache deliberately does **not** hold an `Arc<Params>`: dropping
+/// the registry entry's params must free the f32 store even while a
+/// stale `PackedWeights` lingers in some scratch.  Instead [`get`]
+/// checks the caller's generation and misses on mismatch, so a swapped
+/// model can never be served from stale panels.
+///
+/// [`get`]: PackedWeights::get
+#[derive(Debug)]
+pub struct PackedWeights {
+    generation: u64,
+    dtype: Dtype,
+    panels: BTreeMap<(ParamHandle, usize, bool), PackedPanels>,
+}
+
+impl PackedWeights {
+    pub fn new(generation: u64, dtype: Dtype) -> PackedWeights {
+        PackedWeights { generation, dtype, panels: BTreeMap::new() }
+    }
+
+    /// Generation of the `Params` these panels were packed from.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Panel flavor: every entry in one cache shares a dtype.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    pub fn insert(
+        &mut self,
+        h: ParamHandle,
+        plane: usize,
+        transposed: bool,
+        p: PackedPanels,
+    ) {
+        debug_assert_eq!(p.dtype(), self.dtype, "mixed-dtype panel cache");
+        self.panels.insert((h, plane, transposed), p);
+    }
+
+    /// Look up the panels for a weight tensor, verifying the caller's
+    /// store generation first: a mismatch (stale cache after a hot
+    /// swap) is a clean miss, never a wrong answer.
+    #[inline]
+    pub fn get(
+        &self,
+        generation: u64,
+        h: ParamHandle,
+        plane: usize,
+        transposed: bool,
+    ) -> Option<&PackedPanels> {
+        if generation != self.generation {
+            return None;
+        }
+        self.panels.get(&(h, plane, transposed))
+    }
+
+    pub fn len(&self) -> usize {
+        self.panels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.panels.is_empty()
+    }
+
+    /// Total packed-panel payload in bytes (scales included).
+    pub fn bytes(&self) -> usize {
+        self.panels.values().map(|p| p.bytes()).sum()
+    }
 }
 
 impl Params {
@@ -516,6 +604,29 @@ mod tests {
         let b = Params::init(&cfg, 2);
         let h = a.handle("layer0/wk").unwrap();
         assert_eq!(b.slice(h), b.get("layer0/wk").unwrap());
+    }
+
+    #[test]
+    fn packed_weights_generation_mismatch_is_a_miss() {
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 9);
+        let h = p.handle("layer0/wq").unwrap();
+        let mut pw = PackedWeights::new(p.generation(), Dtype::F32);
+        assert!(pw.is_empty());
+        pw.insert(
+            h,
+            0,
+            false,
+            PackedPanels::pack(Dtype::F32, p.view_at(h), false),
+        );
+        assert_eq!(pw.len(), 1);
+        assert!(pw.bytes() > 0);
+        assert_eq!(pw.dtype(), Dtype::F32);
+        assert!(pw.get(p.generation(), h, 0, false).is_some());
+        // wrong plane / orientation / generation all miss cleanly
+        assert!(pw.get(p.generation(), h, 1, false).is_none());
+        assert!(pw.get(p.generation(), h, 0, true).is_none());
+        assert!(pw.get(p.generation() + 1, h, 0, false).is_none());
     }
 
     #[test]

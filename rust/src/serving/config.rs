@@ -19,6 +19,10 @@
 //! # the coordinator's ModelRegistry (first table = the default model).
 //! # Weights come from a checkpoint's `params` slot, or a seeded init
 //! # when no checkpoint is given.  `repro reload` swaps them live.
+//! # `dtype` picks the inference flavor: "f32" (default) or "int8"
+//! # (weights quantized per output channel at registration, activations
+//! # per tensor at run time — ~4× less weight traffic, bounded accuracy
+//! # cost; see ROADMAP Performance).
 //! [[model]]
 //! name = "tiny"
 //! seed = 0
@@ -26,6 +30,7 @@
 //! [[model]]
 //! name = "longdoc"
 //! checkpoint = "ckpt/longdoc.bin"
+//! dtype = "int8"
 //!
 //! [training]
 //! steps = 200
@@ -37,6 +42,7 @@
 use std::time::Duration;
 
 use crate::coordinator::{BatcherConfig, CostModel, SchedPolicy};
+use crate::linalg::Dtype;
 use crate::training::{LrSchedule, TrainConfig};
 use crate::util::json::Json;
 use crate::util::toml;
@@ -59,6 +65,8 @@ pub struct ModelTable {
     pub checkpoint: Option<String>,
     /// Init seed when no checkpoint is given.
     pub seed: u64,
+    /// Inference flavor (`f32` default, or `int8` quantized).
+    pub dtype: Dtype,
 }
 
 /// Parsed launcher file.
@@ -180,6 +188,15 @@ impl LauncherConfig {
                         "duplicate [[model]] name '{name}'"
                     )));
                 }
+                let dtype = match t.get("dtype").as_str() {
+                    None => Dtype::F32,
+                    Some(s) => Dtype::from_name(s).ok_or_else(|| {
+                        ConfigError::Invalid(format!(
+                            "[[model]] '{name}': unknown dtype '{s}' \
+                             (expected \"f32\" or \"int8\")"
+                        ))
+                    })?,
+                };
                 cfg.model_tables.push(ModelTable {
                     name,
                     checkpoint: t
@@ -187,6 +204,7 @@ impl LauncherConfig {
                         .as_str()
                         .map(String::from),
                     seed: t.get("seed").as_usize().unwrap_or(0) as u64,
+                    dtype,
                 });
             }
         }
@@ -309,6 +327,7 @@ mod tests {
             [[model]]
             name = "longdoc"
             checkpoint = "ckpt/longdoc.bin"
+            dtype = "int8"
             "#,
         )
         .unwrap();
@@ -319,12 +338,14 @@ mod tests {
                 ModelTable {
                     name: "tiny".into(),
                     checkpoint: None,
-                    seed: 3
+                    seed: 3,
+                    dtype: Dtype::F32,
                 },
                 ModelTable {
                     name: "longdoc".into(),
                     checkpoint: Some("ckpt/longdoc.bin".into()),
-                    seed: 0
+                    seed: 0,
+                    dtype: Dtype::Int8,
                 },
             ]
         );
@@ -334,6 +355,25 @@ mod tests {
             "[[model]]\nname = \"a\"\n[[model]]\nname = \"a\""
         )
         .is_err());
+    }
+
+    #[test]
+    fn model_table_dtype_parses_and_rejects_unknown() {
+        let c = LauncherConfig::from_toml(
+            "[[model]]\nname = \"a\"\ndtype = \"f32\"",
+        )
+        .unwrap();
+        assert_eq!(c.model_tables[0].dtype, Dtype::F32);
+        let c = LauncherConfig::from_toml(
+            "[[model]]\nname = \"a\"\ndtype = \"int8\"",
+        )
+        .unwrap();
+        assert_eq!(c.model_tables[0].dtype, Dtype::Int8);
+        let err = LauncherConfig::from_toml(
+            "[[model]]\nname = \"a\"\ndtype = \"fp16\"",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown dtype"), "{err}");
     }
 
     #[test]

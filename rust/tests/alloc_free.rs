@@ -13,10 +13,13 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
+use std::sync::Arc;
 
+use linformer::linalg::Dtype;
 use linformer::model::{
     encode_batch, encode_batch_warm, encode_with, mlm_logits_with,
-    EncodeScratch, EncoderHandles, ModelConfig, Params,
+    weight_pack_fallbacks, EncodeScratch, EncoderHandles, ModelConfig,
+    Params,
 };
 
 thread_local! {
@@ -101,14 +104,14 @@ fn warm_batched_call_skips_name_resolution() {
         vec![(0..16u32).map(|i| i % cfg.vocab_size as u32).collect::<Vec<_>>()];
     // warm up both paths (thread-local gemm scratch, pool init, …)
     encode_batch(&params, &cfg, &seqs);
-    encode_batch_warm(&params, &cfg, &seqs, Some(&handles));
+    encode_batch_warm(&params, &cfg, &seqs, Some(&handles), None);
 
     let before = allocs_now();
     encode_batch(&params, &cfg, &seqs);
     let cold = allocs_now() - before;
 
     let before = allocs_now();
-    encode_batch_warm(&params, &cfg, &seqs, Some(&handles));
+    encode_batch_warm(&params, &cfg, &seqs, Some(&handles), None);
     let warm = allocs_now() - before;
 
     let name_allocs_floor = (10 * cfg.n_layers) as u64;
@@ -116,6 +119,52 @@ fn warm_batched_call_skips_name_resolution() {
         warm + name_allocs_floor <= cold,
         "warm batched call saved too little: warm={warm} cold={cold} \
          (handles are not reaching the batch workers)"
+    );
+}
+
+#[test]
+fn warm_cached_panel_calls_pack_zero_weight_bytes() {
+    // the generation-keyed PackedWeights cache must make warm calls do
+    // literally zero weight packing or quantization: the fallback
+    // counter (bumped whenever a SIMD weight-side GEMM misses the
+    // cache) stays flat, and the allocator sees only the outputs —
+    // any panel (re)build would regrow a PanelBuf and show up in both
+    let cfg = ModelConfig::tiny();
+    let params = Params::init(&cfg, 7);
+    let handles = EncoderHandles::build(&params, &cfg);
+    let packed = Arc::new(handles.pack_weights(&params, Dtype::F32));
+    let tokens: Vec<u32> =
+        (0..16u32).map(|i| i % cfg.vocab_size as u32).collect();
+    let mut scratch = EncodeScratch::with_threads(1);
+    scratch.set_packed(Some(Arc::clone(&packed)));
+    for _ in 0..2 {
+        encode_with(&params, &cfg, &tokens, false, &mut scratch);
+        mlm_logits_with(&params, &cfg, &tokens, &mut scratch);
+    }
+
+    let fallbacks_before = weight_pack_fallbacks();
+    let before = allocs_now();
+    let out = encode_with(&params, &cfg, &tokens, false, &mut scratch);
+    let encode_allocs = allocs_now() - before;
+    let before = allocs_now();
+    let logits = mlm_logits_with(&params, &cfg, &tokens, &mut scratch);
+    let mlm_allocs = allocs_now() - before;
+
+    assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+    assert_eq!(logits.rows, 16);
+    assert_eq!(
+        weight_pack_fallbacks() - fallbacks_before,
+        0,
+        "a warm cached call missed the panel cache and re-packed"
+    );
+    assert_eq!(
+        encode_allocs, 1,
+        "warm cached encode must allocate only its output matrix"
+    );
+    assert!(
+        mlm_allocs <= 2,
+        "warm cached mlm call should allocate at most its two outputs \
+         (hidden + logits), saw {mlm_allocs}"
     );
 }
 

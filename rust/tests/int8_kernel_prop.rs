@@ -1,0 +1,293 @@
+//! Property tests for the int8 quantized GEMM path
+//! (`linalg::kernel`'s i8×i8→i32 microkernel behind
+//! [`gemm::matmul_packed_view_in`]).
+//!
+//! Random odd shapes — including every `m, n, k` below the tile sizes,
+//! strided A views, and both panel orientations (`A·B` and `A·Bᵀ`) —
+//! are checked against three oracles:
+//!
+//! 1. a **spec-replay** oracle (bitwise): the quantization scheme
+//!    re-implemented naively in this file — symmetric per-output-channel
+//!    weight scales, dynamic per-tensor activation scale,
+//!    round-to-nearest clamp to ±127, exact i32 accumulation, one
+//!    dequantizing multiply per element.  Integer accumulation has no
+//!    rounding, so the packed kernel must reproduce it bit for bit;
+//! 2. an f64 naive GEMM (quantization-error bound: the analytic
+//!    worst case `k·max|A|·max|B_col|/127`, padded 10%);
+//! 3. itself under different worker caps and the f32 panel flavor vs
+//!    the unpacked entry points (both bitwise — the int8 kernel is
+//!    deterministic by construction, the f32 panels store the exact
+//!    per-call pack image).
+//!
+//! The full runs are `#[ignore]`d under tier-1 (debug kernels would
+//! dominate the suite's runtime) and run in release by
+//! `scripts/check.sh`; a small smoke case stays in tier-1.
+
+use linformer::linalg::gemm::{self, Dtype, GemmScratch, PackedPanels};
+use linformer::linalg::kernel::LANES;
+use linformer::linalg::{Mat, MatView};
+use linformer::util::prop::prop_check;
+use linformer::util::rng::Pcg32;
+
+fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat {
+    let mut m = Mat::zeros(r, c);
+    rng.fill_normal(&mut m.data, 1.0);
+    m
+}
+
+/// The quantization spec, replayed naively (see `kernel::quant_scale`
+/// / `kernel::quantize` docs — this file must stay in sync with them).
+fn quant(v: f32, inv: f32) -> i8 {
+    (v * inv).round().clamp(-127.0, 127.0) as i8
+}
+
+fn scale_of(max_abs: f32) -> (f32, f32) {
+    if max_abs > 0.0 {
+        (max_abs / 127.0, 127.0 / max_abs)
+    } else {
+        (0.0, 0.0)
+    }
+}
+
+/// Spec-replay int8 reference for `C = A·B` (or `A·Bᵀ` when
+/// `transposed`): quantize exactly as the pack/kernel pipeline
+/// specifies, accumulate in i32, dequantize with the identical
+/// expression `acc as f32 * (a_scale * b_scale[j])`.
+fn int8_oracle(a: MatView<'_>, b: MatView<'_>, transposed: bool) -> Mat {
+    let (k, n) = if transposed {
+        (b.cols, b.rows)
+    } else {
+        (b.rows, b.cols)
+    };
+    assert_eq!(a.cols, k);
+    let bcol = |j: usize, kk: usize| {
+        if transposed {
+            b.row(j)[kk]
+        } else {
+            b.row(kk)[j]
+        }
+    };
+    let mut b_scales = vec![0.0f32; n];
+    let mut bq = vec![0i8; k * n];
+    for j in 0..n {
+        let mut max_abs = 0.0f32;
+        for kk in 0..k {
+            max_abs = max_abs.max(bcol(j, kk).abs());
+        }
+        let (s, inv) = scale_of(max_abs);
+        b_scales[j] = s;
+        for kk in 0..k {
+            bq[kk * n + j] = quant(bcol(j, kk), inv);
+        }
+    }
+    let mut a_max = 0.0f32;
+    for i in 0..a.rows {
+        for &v in a.row(i) {
+            a_max = a_max.max(v.abs());
+        }
+    }
+    let (a_scale, a_inv) = scale_of(a_max);
+    let mut c = Mat::zeros(a.rows, n);
+    for i in 0..a.rows {
+        let row = a.row(i);
+        for j in 0..n {
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc += quant(row[kk], a_inv) as i32 * bq[kk * n + j] as i32;
+            }
+            *c.at_mut(i, j) = acc as f32 * (a_scale * b_scales[j]);
+        }
+    }
+    c
+}
+
+/// f64-accumulated full-precision reference for C = A·B over views.
+fn naive(a: MatView<'_>, b: MatView<'_>, transposed: bool) -> Mat {
+    let (k, n) = if transposed {
+        (b.cols, b.rows)
+    } else {
+        (b.rows, b.cols)
+    };
+    let mut c = Mat::zeros(a.rows, n);
+    for i in 0..a.rows {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for kk in 0..k {
+                let bv = if transposed { b.row(j)[kk] } else { b.row(kk)[j] };
+                s += f64::from(a.row(i)[kk]) * f64::from(bv);
+            }
+            *c.at_mut(i, j) = s as f32;
+        }
+    }
+    c
+}
+
+/// Bitwise comparison — the int8 path never goes through the fma-gated
+/// f32 accumulator, so this holds in every build flavor.
+fn assert_bitwise(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{ctx}: [{i}] {g} != {w} (bitwise)"
+        );
+    }
+}
+
+fn check_one_shape(rng: &mut Pcg32) {
+    let dim = |rng: &mut Pcg32| match rng.below(3) {
+        0 => rng.range_usize(1, LANES),
+        1 => rng.range_usize(1, 2 * LANES + 2),
+        _ => rng.range_usize(1, 72),
+    };
+    let (m, k, n) = (dim(rng), dim(rng), dim(rng));
+    let a_wide = rand_mat(rng, m, k + 5);
+    let a = if rng.below(2) == 0 {
+        MatView::cols(&a_wide, 2, k)
+    } else {
+        MatView::full(&a_wide).first_cols(k)
+    };
+    let mut gs = GemmScratch::new();
+    for transposed in [false, true] {
+        let b = if transposed {
+            rand_mat(rng, n, k)
+        } else {
+            rand_mat(rng, k, n)
+        };
+        let bv = MatView::full(&b);
+        let packed = PackedPanels::pack(Dtype::Int8, bv, transposed);
+        assert_eq!((packed.k(), packed.n()), (k, n));
+
+        // 1. bitwise vs the spec-replay oracle
+        let mut c = Mat::zeros(0, 0);
+        gemm::matmul_packed_view_in(a, &packed, &mut c, 1, &mut gs);
+        let want = int8_oracle(a, bv, transposed);
+        assert_bitwise(
+            &c.data,
+            &want.data,
+            &format!("int8 ({m},{k},{n}) nt={transposed} vs spec"),
+        );
+
+        // 2. quantization error bounded by the analytic worst case:
+        // each product term errs by at most |a|·Δb + |b|·Δa + Δa·Δb
+        // with Δx = scale/2 = max|x|/254, summed over k terms
+        let exact = naive(a, bv, transposed);
+        let mut a_max = 0.0f32;
+        for i in 0..m {
+            for &v in a.row(i) {
+                a_max = a_max.max(v.abs());
+            }
+        }
+        for j in 0..n {
+            let mut b_max = 0.0f32;
+            for kk in 0..k {
+                let v = if transposed { b.row(j)[kk] } else { b.row(kk)[j] };
+                b_max = b_max.max(v.abs());
+            }
+            let bound = 1.1 * k as f32 * a_max * b_max / 127.0 + 1e-5;
+            for i in 0..m {
+                let err = (c.at(i, j) - exact.at(i, j)).abs();
+                assert!(
+                    err <= bound,
+                    "int8 ({m},{k},{n}) nt={transposed} [{i},{j}]: \
+                     err {err} > bound {bound}"
+                );
+            }
+        }
+
+        // 3a. bitwise thread-count determinism (exact integer
+        // accumulation — no per-chunk rounding to diverge)
+        for threads in [2usize, 3, 7] {
+            let mut par = Mat::zeros(0, 0);
+            gemm::matmul_packed_view_in(a, &packed, &mut par, threads, &mut gs);
+            assert_bitwise(
+                &par.data,
+                &c.data,
+                &format!("int8 ({m},{k},{n}) nt={transposed} t={threads}"),
+            );
+        }
+
+        // 3b. the f32 panel flavor is bitwise-identical to the unpacked
+        // entry points (same pack image, same kernels)
+        let packed_f = PackedPanels::pack(Dtype::F32, bv, transposed);
+        let mut cf = Mat::zeros(0, 0);
+        gemm::matmul_packed_view_in(a, &packed_f, &mut cf, 1, &mut gs);
+        let mut plain = Mat::zeros(0, 0);
+        if transposed {
+            gemm::matmul_nt_view_in(a, bv, &mut plain, 1, &mut gs);
+        } else {
+            gemm::matmul_view_in(a, bv, &mut plain, 1, &mut gs);
+        }
+        assert_bitwise(
+            &cf.data,
+            &plain.data,
+            &format!("f32 panels ({m},{k},{n}) nt={transposed}"),
+        );
+    }
+}
+
+#[test]
+#[ignore = "heavy (hundreds of random GEMMs); run in release via scripts/check.sh"]
+fn int8_random_shapes_match_spec_oracle_and_bounds() {
+    prop_check("int8 packed GEMM vs spec/naive/threads", 120, |rng| {
+        check_one_shape(rng);
+    });
+}
+
+#[test]
+#[ignore = "heavy; run in release via scripts/check.sh"]
+fn int8_tall_m_shapes_cross_chunk_boundaries() {
+    // tall activations split across several MR-row chunks under every
+    // thread plan — the serving regime for long sequences
+    prop_check("int8 tall-m determinism", 40, |rng| {
+        let m = rng.range_usize(49, 160); // above A_PACK_MIN_M territory
+        let k = rng.range_usize(1, 48);
+        let n = rng.range_usize(1, 48);
+        let a = rand_mat(rng, m, k);
+        let b = rand_mat(rng, k, n);
+        let packed = PackedPanels::pack(Dtype::Int8, MatView::full(&b), false);
+        let mut gs = GemmScratch::new();
+        let mut serial = Mat::zeros(0, 0);
+        gemm::matmul_packed_view_in(
+            MatView::full(&a), &packed, &mut serial, 1, &mut gs,
+        );
+        let want = int8_oracle(MatView::full(&a), MatView::full(&b), false);
+        assert_bitwise(&serial.data, &want.data, "tall-m vs spec");
+        for threads in [2usize, 5, 8] {
+            let mut par = Mat::zeros(0, 0);
+            gemm::matmul_packed_view_in(
+                MatView::full(&a), &packed, &mut par, threads, &mut gs,
+            );
+            assert_bitwise(
+                &par.data,
+                &serial.data,
+                &format!("tall-m ({m},{k},{n}) t={threads}"),
+            );
+        }
+    });
+}
+
+#[test]
+fn smoke_single_odd_shape() {
+    // tier-1 keeps one cheap case so this binary always runs something
+    let mut rng = Pcg32::seeded(11);
+    check_one_shape(&mut rng);
+}
+
+#[test]
+fn smoke_k_zero_resets_output() {
+    // degenerate inner dim: both flavors must zero the output, not
+    // leave stale values
+    let a = Mat::zeros(3, 0);
+    let b = Mat::zeros(0, 5);
+    let mut gs = GemmScratch::new();
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let packed = PackedPanels::pack(dtype, MatView::full(&b), false);
+        let mut c = Mat::filled_with(3, 5, |_, _| 9.0);
+        gemm::matmul_packed_view_in(
+            MatView::full(&a), &packed, &mut c, 1, &mut gs,
+        );
+        assert_eq!((c.rows, c.cols), (3, 5), "{dtype} k=0 shape");
+        assert!(c.data.iter().all(|&v| v == 0.0), "{dtype} k=0 not zeroed");
+    }
+}

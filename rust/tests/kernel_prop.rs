@@ -6,8 +6,12 @@
 //!
 //! 1. an f64 naive GEMM (accuracy),
 //! 2. the pre-SIMD scalar kernel (bitwise, on the `A·B` paths whose
-//!    accumulation order the microkernel replays exactly),
-//! 3. itself under different worker caps (bitwise thread-determinism).
+//!    accumulation order the microkernel replays exactly — relaxed to a
+//!    per-`k`-step ULP budget under the `fma` cargo feature, whose fused
+//!    multiply-add changes each accumulation rounding),
+//! 3. itself under different worker caps (bitwise thread-determinism —
+//!    this stays bitwise even under `fma`: every thread runs the same
+//!    fused kernel over the same chunks).
 //!
 //! Plus an `axpy`/`dot` sweep across every remainder-lane length
 //! `0..=2·LANES`.  The full runs are `#[ignore]`d under tier-1 (debug
@@ -75,16 +79,28 @@ fn check_one_shape(rng: &mut Pcg32) {
         simd.max_abs_diff(&want)
     );
 
-    // 2. bitwise vs the scalar kernel on the A·B paths
+    // 2. vs the scalar kernel on the A·B paths: bitwise by default,
+    // ~2 ULPs per accumulation step under the fma feature
+    let kernel_ulps = (2 * k + 16) as u32;
     let mut scal = Mat::zeros(0, 0);
     gemm::matmul_view_in(a, bv, &mut scal, 1, &mut GemmScratch::scalar());
-    assert_eq!(simd.data, scal.data, "NN ({m},{k},{n}) not bitwise-scalar");
+    gemm::assert_f32s_match(
+        &simd.data,
+        &scal.data,
+        kernel_ulps,
+        &format!("NN ({m},{k},{n}) vs scalar"),
+    );
 
     let mut wide_simd = Mat::filled_with(m, n + 3, |_, _| -5.5);
     let mut wide_scal = wide_simd.clone();
     gemm::matmul_view_cols_in(a, bv, &mut wide_simd, 2, 1, &mut gs);
     gemm::matmul_view_cols_in(a, bv, &mut wide_scal, 2, 1, &mut GemmScratch::scalar());
-    assert_eq!(wide_simd.data, wide_scal.data, "cols ({m},{k},{n})");
+    gemm::assert_f32s_match(
+        &wide_simd.data,
+        &wide_scal.data,
+        kernel_ulps,
+        &format!("cols ({m},{k},{n})"),
+    );
     for r in 0..m {
         assert_eq!(wide_simd.at(r, 0), -5.5, "cols wrote outside block");
         assert_eq!(wide_simd.at(r, 1), -5.5, "cols wrote outside block");
@@ -129,14 +145,20 @@ fn axpy_dot_every_remainder_lane_random_values() {
             rng.fill_normal(&mut x, 1.0);
             rng.fill_normal(&mut y, 1.0);
             let alpha = rng.normal();
-            // axpy replays the scalar recurrence exactly — bitwise
+            // axpy replays the scalar recurrence exactly — bitwise in
+            // the default build, one fused rounding apart under fma
             let mut got = y.clone();
             gemm::axpy(alpha, &x, &mut got);
             let mut want = y.clone();
             for i in 0..n {
                 want[i] += alpha * x[i];
             }
-            assert_eq!(got, want, "axpy len {n} alpha {alpha}");
+            gemm::assert_f32s_match(
+                &got,
+                &want,
+                2,
+                &format!("axpy len {n} alpha {alpha}"),
+            );
             // dot against an f64 reference
             let want: f64 = x
                 .iter()

@@ -129,14 +129,22 @@ fn two_models_two_tasks_interleaved_bitwise() {
 /// Hot-swap under live traffic: flood the coordinator from client
 /// threads, `reload` mid-burst (twice), and verify from the responses'
 /// generation + batch-id tags that (a) every request was served — the
-/// swaps dropped nothing — and (b) responses sharing a batch id all
-/// carry one generation — no batch mixed weights.
+/// swaps dropped nothing — (b) responses sharing a batch id all carry
+/// one generation — no batch mixed weights — and (c) every response's
+/// predictions match a direct encoder call with *that generation's*
+/// params: a stale packed-panel cache surviving a swap would serve old
+/// weights under a new generation tag and fail here.
 #[test]
 fn hot_swap_under_live_traffic_never_mixes_generations() {
     let cfg = ModelConfig::tiny();
     let registry = Arc::new(ModelRegistry::new());
     registry.register_init("m", cfg.clone(), 1).unwrap();
     let g0 = registry.get("m").unwrap().generation();
+    // keep every generation's params alive so responses can be replayed
+    // against the exact weights their tag claims they used
+    let mut params_by_gen: BTreeMap<u64, Arc<Params>> = BTreeMap::new();
+    params_by_gen
+        .insert(g0, Arc::clone(&registry.get("m").unwrap().params));
     let coord = build_registry_coordinator(
         Arc::clone(&registry),
         &[(16, 4), (32, 4)],
@@ -147,7 +155,8 @@ fn hot_swap_under_live_traffic_never_mixes_generations() {
     const PER_CLIENT: usize = 60;
     const TOTAL: usize = CLIENTS * PER_CLIENT;
     let served = AtomicUsize::new(0);
-    let mut observed: Vec<(u64, u64)> = Vec::with_capacity(TOTAL);
+    let mut observed: Vec<(u64, u64, Vec<u32>, Vec<u32>)> =
+        Vec::with_capacity(TOTAL);
     let mut swap_gens = Vec::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -162,7 +171,7 @@ fn hot_swap_under_live_traffic_never_mixes_generations() {
                     let tokens: Vec<u32> = (0..len)
                         .map(|j| ((c * 101 + i * 31 + j) % vocab) as u32)
                         .collect();
-                    let t = coord.submit(tokens).unwrap();
+                    let t = coord.submit(tokens.clone()).unwrap();
                     let r = t
                         .wait_timeout(Duration::from_secs(60))
                         .expect("response");
@@ -173,7 +182,12 @@ fn hot_swap_under_live_traffic_never_mixes_generations() {
                     );
                     assert!(r.generation > 0);
                     assert!(r.batch_id > 0);
-                    seen.push((r.batch_id, r.generation));
+                    seen.push((
+                        r.batch_id,
+                        r.generation,
+                        tokens,
+                        r.predictions.clone(),
+                    ));
                     served.fetch_add(1, Ordering::Relaxed);
                 }
                 seen
@@ -195,14 +209,12 @@ fn hot_swap_under_live_traffic_never_mixes_generations() {
                 );
                 std::thread::yield_now();
             }
-            let v = registry
-                .reload(
-                    "m",
-                    Arc::new(Params::init(&cfg, 100 + i as u64)),
-                )
-                .unwrap();
+            let fresh = Arc::new(Params::init(&cfg, 100 + i as u64));
+            let v = registry.reload("m", Arc::clone(&fresh)).unwrap();
             assert_eq!(v as usize, i + 2);
-            swap_gens.push(registry.get("m").unwrap().generation());
+            let gen = registry.get("m").unwrap().generation();
+            params_by_gen.insert(gen, fresh);
+            swap_gens.push(gen);
         }
         for h in handles {
             observed.extend(h.join().expect("client"));
@@ -212,8 +224,8 @@ fn hot_swap_under_live_traffic_never_mixes_generations() {
     assert_eq!(observed.len(), TOTAL, "request count mismatch");
     // every batch is single-generation
     let mut by_batch: BTreeMap<u64, BTreeSet<u64>> = BTreeMap::new();
-    for &(batch, gen) in &observed {
-        by_batch.entry(batch).or_default().insert(gen);
+    for (batch, gen, _, _) in &observed {
+        by_batch.entry(*batch).or_default().insert(*gen);
     }
     for (batch, gens) in &by_batch {
         assert_eq!(
@@ -222,12 +234,48 @@ fn hot_swap_under_live_traffic_never_mixes_generations() {
             "batch {batch} mixed weight generations: {gens:?}"
         );
     }
+    // no stale packed panels: replay every response against the exact
+    // params of the generation it claims, batched per generation.  The
+    // serving path runs the f32 panel cache, which is bitwise-identical
+    // to the per-call pack — any panel surviving a swap would have
+    // produced old-weight predictions under a new-generation tag.
+    let mut by_gen: BTreeMap<u64, Vec<(Vec<u32>, Vec<u32>)>> =
+        BTreeMap::new();
+    for (_, gen, tokens, preds) in &observed {
+        by_gen
+            .entry(*gen)
+            .or_default()
+            .push((tokens.clone(), preds.clone()));
+    }
+    for (gen, items) in &by_gen {
+        let params = params_by_gen
+            .get(gen)
+            .unwrap_or_else(|| panic!("unknown generation {gen} served"));
+        let seqs: Vec<Vec<u32>> =
+            items.iter().map(|(t, _)| t.clone()).collect();
+        let direct = mlm_predict_batch(params, &cfg, &seqs);
+        for ((_, preds), want) in items.iter().zip(&direct) {
+            assert_eq!(
+                preds, want,
+                "generation {gen} response disagrees with its own \
+                 weights — stale packed panels served"
+            );
+        }
+    }
+    // the live entry's panel cache tracks the live generation and dtype
+    let entry = registry.get("m").unwrap();
+    assert_eq!(
+        entry.packed.generation(),
+        entry.generation(),
+        "registry entry carries a stale-generation panel cache"
+    );
+    assert_eq!(entry.packed.dtype(), linformer::linalg::Dtype::F32);
     // only registered generations ever served, and the flood provably
     // straddled a swap: the pre-swap generation AND the final one both
     // appear (first third served before any reload; the tail after the
     // last reload returned)
     let gens_seen: BTreeSet<u64> =
-        observed.iter().map(|&(_, g)| g).collect();
+        observed.iter().map(|(_, g, _, _)| *g).collect();
     let legal: BTreeSet<u64> =
         std::iter::once(g0).chain(swap_gens.iter().copied()).collect();
     assert!(

@@ -54,6 +54,16 @@ cargo test --release --test pool_stress -- --ignored
 # slow for debug tier-1 (a smoke case runs there), full sweep in release
 cargo test --release --test kernel_prop -- --ignored
 
+# int8 quantized-path property tests: random shapes vs the spec-replay
+# oracle (bitwise), the analytic quantization-error bound, thread-count
+# determinism, and f32-panel/unpacked bitwise equivalence
+cargo test --release --test int8_kernel_prop -- --ignored
+
+# int8 end-to-end accuracy gate: MLM argmax agreement + bounded max
+# relative logit error of the quantized path vs the f32 reference,
+# both served through the generation-keyed packed-panel cache
+cargo test --release --test int8_accuracy -- --ignored
+
 # the scheduler overload ablation is timing-sensitive (burst trace vs
 # SLOs), so it also runs in release only: FIFO must miss deadlines, EDF
 # must shed instead of computing expired work
