@@ -1,0 +1,55 @@
+//! `repro-lint` — the repo-invariant static-analysis pass.
+//!
+//! Walks `src`, `benches` and `tests` under the crate root (or a root
+//! given as the first argument) and enforces the invariants catalogued
+//! in `docs/INVARIANTS.md`: documented `unsafe`, pool-only threading,
+//! zero-alloc hot-path regions, fenced fused multiply-adds, and the
+//! batcher's once-per-tick time discipline.
+//!
+//! Exit status: 0 clean, 1 violations, 2 I/O error.  `scripts/check.sh`
+//! runs this before the build so violations fail fast.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use linformer::lint;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let report = match lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!(
+                "repro-lint: error walking {}: {e}",
+                root.display()
+            );
+            return ExitCode::from(2);
+        }
+    };
+    if report.findings.is_empty() {
+        println!(
+            "repro-lint: {} files clean ({} rules)",
+            report.files,
+            lint::Rule::ALL.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+    for f in &report.findings {
+        println!(
+            "{}:{}: [{}] {}",
+            f.file,
+            f.line,
+            f.rule.id(),
+            f.message
+        );
+    }
+    eprintln!(
+        "repro-lint: {} violation(s) across {} files",
+        report.findings.len(),
+        report.files
+    );
+    ExitCode::FAILURE
+}

@@ -388,6 +388,7 @@ impl Batcher {
                 // an admitted request can never be shed on the very next
                 // tick (est ≥ svc ⇒ margin·est ≥ shed horizon).
                 let budget =
+                    // lint: tick-time — the admission sample, once per push
                     deadline.saturating_duration_since(Instant::now());
                 let need = SHED_SAFETY * est_s + TICK_MARGIN_S;
                 if need > budget.as_secs_f64() {

@@ -76,6 +76,7 @@ pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod lint;
 pub mod model;
 pub mod runtime;
 pub mod serving;

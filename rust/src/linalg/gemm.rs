@@ -299,6 +299,8 @@ pub fn matmul_view_cols(
     with_tl_scratch(|gs| matmul_view_cols_in(a, b, out, col0, threads, gs));
 }
 
+// lint: hot-path — the warm GEMM entry points: reused scratch only, no
+// per-call heap traffic (pinned by tests/alloc_free.rs)
 /// C = A·B over strided views with an explicit worker cap and caller
 /// workspace.  `c` is resized (allocation-free after warmup) and fully
 /// overwritten.  Above one worker the rows are partitioned into tasks on
@@ -411,6 +413,7 @@ pub fn matmul_view_cols_in(
         kernel::gemm_chunk(a, row0, packed, k, w, chunk, stride, col0)
     });
 }
+// lint: end-hot-path
 
 /// Weight dtype flavor for packed inference panels: full-precision f32
 /// or symmetric per-output-channel int8 (see `kernel`'s int8 docs for
@@ -543,6 +546,8 @@ impl PackedPanels {
 /// accumulation is exact.  Always runs the microkernel: panels are its
 /// format, so a scalar-pinned `gs` is not honoured here (callers
 /// wanting the scalar baseline use the unpacked entry points).
+// lint: hot-path — the cached-panel serving path: all packing was paid
+// at cache build; a warm call touches only reused scratch
 pub fn matmul_packed_view_in(
     a: MatView<'_>,
     w: &PackedPanels,
@@ -592,6 +597,7 @@ pub fn matmul_packed_view_in(
         }
     }
 }
+// lint: end-hot-path
 
 /// Compare two kernel outputs: **bitwise** in the default build; within
 /// `ulps` units-in-last-place under the `fma` cargo feature, whose
@@ -636,6 +642,8 @@ pub fn assert_f32s_match(got: &[f32], want: &[f32], ulps: u32, ctx: &str) {
     }
 }
 
+// lint: hot-path — the shared fork-join shape; only the documented
+// per-fork task boxes below may allocate
 /// Split `data` (m rows of width `stride`) into up to `threads`
 /// contiguous row blocks and run `kernel(chunk, row0)` over each as
 /// tasks on the global [`pool`] — the one fork-join shape every GEMM
@@ -658,6 +666,10 @@ fn run_row_chunks<'env, K>(
         return;
     }
     let rows_per = (m + t - 1) / t;
+    // lint: allow-start(hot-path-alloc) — the parallel regime's
+    // documented allocations: one boxed closure per pool task plus the
+    // task vec (see tests/alloc_free.rs; the serial t == 1 path above
+    // is the zero-alloc regime)
     let tasks: Vec<pool::Task<'env>> = data
         .chunks_mut(rows_per * stride)
         .enumerate()
@@ -665,6 +677,7 @@ fn run_row_chunks<'env, K>(
             Box::new(move || kernel(chunk, w * rows_per)) as pool::Task<'env>
         })
         .collect();
+    // lint: allow-end(hot-path-alloc)
     pool::global().run(tasks);
 }
 
@@ -690,6 +703,8 @@ fn run_row_chunks_mr<'env, K>(
     }
     let rows_per = (m + t - 1) / t;
     let rows_per = (rows_per + kernel::MR - 1) / kernel::MR * kernel::MR;
+    // lint: allow-start(hot-path-alloc) — same per-fork task boxes as
+    // run_row_chunks above
     let tasks: Vec<pool::Task<'env>> = data
         .chunks_mut(rows_per * stride)
         .enumerate()
@@ -697,6 +712,7 @@ fn run_row_chunks_mr<'env, K>(
             Box::new(move || kernel(chunk, w * rows_per)) as pool::Task<'env>
         })
         .collect();
+    // lint: allow-end(hot-path-alloc)
     pool::global().run(tasks);
 }
 
@@ -886,6 +902,7 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     }
     acc.hsum() + tail
 }
+// lint: end-hot-path
 
 #[cfg(test)]
 mod tests {

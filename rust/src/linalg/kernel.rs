@@ -113,6 +113,7 @@ pub const KC: usize = 256;
 #[repr(C, align(32))]
 pub struct F32x8(pub [f32; LANES]);
 
+// lint: hot-path — lane ops run per k-step in every GEMM inner loop
 impl F32x8 {
     pub const ZERO: F32x8 = F32x8([0.0; LANES]);
 
@@ -199,6 +200,7 @@ impl F32x8 {
         ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
     }
 }
+// lint: end-hot-path
 
 /// i8 lanes per vector — one 256-bit register of bytes.
 pub const I8_LANES: usize = 32;
@@ -330,6 +332,7 @@ impl PackBuf {
     }
 }
 
+// lint: hot-path — f32 packing runs on every warm GEMM call
 /// Number of [`NR`]-wide panels covering `n` columns.
 #[inline]
 pub fn panels(n: usize) -> usize {
@@ -379,6 +382,7 @@ pub fn pack_nt<'a>(buf: &'a mut PackBuf, b: MatView<'_>) -> &'a [f32] {
     }
     dst
 }
+// lint: end-hot-path
 
 /// Largest inner dimension the i8 kernel accepts: `127·127·k` must stay
 /// below `i32::MAX` so integer accumulation cannot overflow.  Any larger
@@ -485,6 +489,8 @@ pub fn pack_nt_i8<'a>(
     dst
 }
 
+// lint: hot-path — per-call quantization, A-packing and every register
+// tile run inside warm GEMMs; nothing here may touch the heap
 /// Dynamic per-tensor symmetric quantization of an activation view into
 /// a reusable i8 buffer (row-major m × k).  Returns the quantized image
 /// and the tensor scale.  Runs once per GEMM call on the calling thread
@@ -938,6 +944,7 @@ pub fn gemm_chunk_pa(
         }
     }
 }
+// lint: end-hot-path
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,305 @@
+//! Minimal hand-rolled Rust lexer backing the `repro-lint` pass.
+//!
+//! Emits a flat token stream with 1-based line numbers.  Comments are
+//! kept as tokens — the rules read `SAFETY:` markers and suppression
+//! directives out of them — while string, char and lifetime literals
+//! are collapsed to opaque tokens so a rule pattern can never match
+//! inside quoted text.  The grammar subset is exactly what the rules
+//! need: identifiers, numbers, single-character punctuation,
+//! cooked/raw/byte strings (including `#`-fenced raw strings), the
+//! char-vs-lifetime ambiguity, and nested block comments.  It is not a
+//! general Rust lexer and does not try to be one.
+
+/// One lexeme.  `Str` keeps its contents because `cfg` feature-gate
+/// detection must read the feature name; char literals and lifetimes
+/// carry no payload the rules ever inspect.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Num,
+    Punct(char),
+    Str(String),
+    CharLit,
+    Lifetime,
+    LineComment(String),
+    BlockComment(String),
+}
+
+/// A token plus the 1-based line its first character sits on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// Lex `src` into a token stream.  Never panics: malformed input
+/// degrades to punctuation tokens rather than errors, which is the
+/// right failure mode for a linter (the compiler owns syntax errors).
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer {
+        cs: src.chars().collect(),
+        i: 0,
+        line: 1,
+        out: Vec::new(),
+    }
+    .run()
+}
+
+struct Lexer {
+    cs: Vec<char>,
+    i: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.cs.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek(0)?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+
+    fn push(&mut self, tok: Tok, line: u32) {
+        self.out.push(Token { tok, line });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            if c.is_whitespace() {
+                self.bump();
+            } else if c == '/' && self.peek(1) == Some('/') {
+                self.line_comment(line);
+            } else if c == '/' && self.peek(1) == Some('*') {
+                self.block_comment(line);
+            } else if c == '"' {
+                self.bump();
+                let s = self.cooked_str('"');
+                self.push(Tok::Str(s), line);
+            } else if c == '\'' {
+                self.char_or_lifetime(line);
+            } else if c == '_' || c.is_alphabetic() {
+                self.ident_or_prefixed(line);
+            } else if c.is_ascii_digit() {
+                self.number();
+                self.push(Tok::Num, line);
+            } else {
+                self.bump();
+                self.push(Tok::Punct(c), line);
+            }
+        }
+        self.out
+    }
+
+    /// `//`-style comment: the token text is everything after the two
+    /// slashes (so doc comments keep their extra `/` or `!` prefix).
+    fn line_comment(&mut self, line: u32) {
+        self.bump();
+        self.bump();
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push(Tok::LineComment(text), line);
+    }
+
+    /// `/* ... */` with Rust's nesting semantics.  The token's line is
+    /// where the comment opens.
+    fn block_comment(&mut self, line: u32) {
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        let mut text = String::new();
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some('/'), Some('*')) => {
+                    depth += 1;
+                    text.push_str("/*");
+                    self.bump();
+                    self.bump();
+                }
+                (Some('*'), Some('/')) => {
+                    depth -= 1;
+                    if depth > 0 {
+                        text.push_str("*/");
+                    }
+                    self.bump();
+                    self.bump();
+                }
+                (Some(c), _) => {
+                    text.push(c);
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+        self.push(Tok::BlockComment(text), line);
+    }
+
+    /// Body of a cooked string or char literal; the opening quote has
+    /// already been consumed.  Escapes are copied through verbatim so
+    /// an escaped quote never terminates the literal early.
+    fn cooked_str(&mut self, quote: char) -> String {
+        let mut s = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\\' {
+                self.bump();
+                if let Some(e) = self.bump() {
+                    s.push('\\');
+                    s.push(e);
+                }
+            } else if c == quote {
+                self.bump();
+                break;
+            } else {
+                s.push(c);
+                self.bump();
+            }
+        }
+        s
+    }
+
+    /// Disambiguate `'x'` / `'\n'` (char literals) from `'a` /
+    /// `'static` (lifetimes): a quote-alnum-quote triple is a char,
+    /// a quote followed by ident chars with no closing quote is a
+    /// lifetime, and a leading backslash always means a char literal.
+    fn char_or_lifetime(&mut self, line: u32) {
+        match self.peek(1) {
+            Some('\\') => {
+                self.bump();
+                self.cooked_str('\'');
+                self.push(Tok::CharLit, line);
+            }
+            Some(c) if c == '_' || c.is_alphanumeric() => {
+                if self.peek(2) == Some('\'') {
+                    self.bump();
+                    self.bump();
+                    self.bump();
+                    self.push(Tok::CharLit, line);
+                } else {
+                    self.bump();
+                    while let Some(c) = self.peek(0) {
+                        if c == '_' || c.is_alphanumeric() {
+                            self.bump();
+                        } else {
+                            break;
+                        }
+                    }
+                    self.push(Tok::Lifetime, line);
+                }
+            }
+            Some(_) if self.peek(2) == Some('\'') => {
+                self.bump();
+                self.bump();
+                self.bump();
+                self.push(Tok::CharLit, line);
+            }
+            _ => {
+                self.bump();
+                self.push(Tok::Punct('\''), line);
+            }
+        }
+    }
+
+    /// An identifier, unless it turns out to be the prefix of a raw or
+    /// byte string literal (`r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`,
+    /// `b'…'`), in which case the whole literal is consumed.
+    fn ident_or_prefixed(&mut self, line: u32) {
+        let mut name = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '_' || c.is_alphanumeric() {
+                name.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        match (name.as_str(), self.peek(0)) {
+            ("r" | "br", Some('"' | '#')) if self.raw_str_ahead() => {
+                let s = self.raw_str();
+                self.push(Tok::Str(s), line);
+            }
+            ("b", Some('"')) => {
+                self.bump();
+                let s = self.cooked_str('"');
+                self.push(Tok::Str(s), line);
+            }
+            ("b", Some('\'')) => {
+                self.char_or_lifetime(line);
+            }
+            _ => self.push(Tok::Ident(name), line),
+        }
+    }
+
+    /// True when the chars ahead are `#* "` — i.e. a raw-string fence
+    /// rather than a raw identifier like `r#match`.
+    fn raw_str_ahead(&self) -> bool {
+        let mut j = 0;
+        while self.peek(j) == Some('#') {
+            j += 1;
+        }
+        self.peek(j) == Some('"')
+    }
+
+    /// Raw string body: no escapes; terminated by a quote followed by
+    /// the same number of `#` fences that opened it.
+    fn raw_str(&mut self) -> String {
+        let mut fences = 0usize;
+        while self.peek(0) == Some('#') {
+            fences += 1;
+            self.bump();
+        }
+        self.bump();
+        let mut s = String::new();
+        loop {
+            match self.peek(0) {
+                None => break,
+                Some('"') => {
+                    let closed =
+                        (1..=fences).all(|j| self.peek(j) == Some('#'));
+                    if closed {
+                        for _ in 0..=fences {
+                            self.bump();
+                        }
+                        break;
+                    }
+                    s.push('"');
+                    self.bump();
+                }
+                Some(c) => {
+                    s.push(c);
+                    self.bump();
+                }
+            }
+        }
+        s
+    }
+
+    /// Numeric literal: digits, `_`, type-suffix/hex letters, and a
+    /// decimal point only when a digit follows (so `0..n` keeps its
+    /// range dots and `x.0` keeps its field dot separate).
+    fn number(&mut self) {
+        while let Some(c) = self.peek(0) {
+            if c == '_' || c.is_alphanumeric() {
+                self.bump();
+            } else if c == '.'
+                && self.peek(1).map_or(false, |d| d.is_ascii_digit())
+            {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+    }
+}

@@ -1,0 +1,765 @@
+//! `repro-lint`: the repo-invariant static-analysis pass.
+//!
+//! The stack's central guarantee — O(n) attention served
+//! bitwise-deterministically across thread counts, chunkings and
+//! dtypes — rests on invariants that dynamic tests can only spot-check:
+//! all parallelism flows through `linalg::pool`, warm encode paths do
+//! not allocate, every `unsafe` states its invariant, kernel
+//! accumulation order never silently changes, and the batcher samples
+//! the clock once per tick.  This module enforces them lexically, as
+//! named, individually-suppressible rules, over `src`, `benches` and
+//! `tests`.  `src/bin/repro_lint.rs` is the CLI; `scripts/check.sh`
+//! runs it before the build so violations fail fast.
+//!
+//! The pass is token-based (see [`lexer`]), not type-based: it can be
+//! dodged by renaming imports, which is fine — the rules guard against
+//! accidental regressions, not adversarial committers, and every
+//! suppression is a greppable, reviewable comment.
+//!
+//! Directive syntax (always a comment whose text starts with `lint:`):
+//!
+//! | form                                   | effect                                    |
+//! |----------------------------------------|-------------------------------------------|
+//! | `lint: hot-path`                       | opens a zero-alloc region (rule R3)       |
+//! | `lint: end-hot-path`                   | closes it                                 |
+//! | `lint: allow(<rule>[, <rule>]) why`    | suppresses on this line and the next      |
+//! | `lint: allow-start(<rule>) why`        | opens a suppression region                |
+//! | `lint: allow-end(<rule>)`              | closes it                                 |
+//! | `lint: tick-time why`                  | blesses the next `Instant::now()` (R5)    |
+//!
+//! Malformed or unbalanced directives are themselves findings
+//! (`bad-lint-directive`), so a typo cannot silently disable a rule or
+//! leak a region to end-of-file.
+
+pub mod lexer;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lexer::{lex, Tok};
+
+/// The enforced rules.  Ids are the stable, user-facing names used in
+/// suppression directives and documented in `docs/INVARIANTS.md`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Rule {
+    /// R1: every `unsafe` is adjacent to a `SAFETY:` comment.
+    UndocumentedUnsafe,
+    /// R2: raw `thread::spawn` / `Builder::new` only in the pool and
+    /// the coordinator's pinned control threads.
+    StrayThreadSpawn,
+    /// R3: no allocation-adjacent calls inside `hot-path` regions.
+    HotPathAlloc,
+    /// R4: `mul_add`/`fmaf` only under `#[cfg(feature = "fma")]` or in
+    /// the lane-kernel files whose semantics the property suites pin.
+    UnfencedFma,
+    /// R5: `Instant::now()` in the batcher only at `tick-time` sites.
+    StrayTimeSample,
+    /// Meta-rule: a `lint:` directive that does not parse or does not
+    /// balance.
+    BadLintDirective,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::UndocumentedUnsafe,
+        Rule::StrayThreadSpawn,
+        Rule::HotPathAlloc,
+        Rule::UnfencedFma,
+        Rule::StrayTimeSample,
+        Rule::BadLintDirective,
+    ];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::UndocumentedUnsafe => "undocumented-unsafe",
+            Rule::StrayThreadSpawn => "stray-thread-spawn",
+            Rule::HotPathAlloc => "hot-path-alloc",
+            Rule::UnfencedFma => "unfenced-fma",
+            Rule::StrayTimeSample => "stray-time-sample",
+            Rule::BadLintDirective => "bad-lint-directive",
+        }
+    }
+
+    pub fn from_id(id: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.id() == id)
+    }
+}
+
+/// One rule violation, with a path label relative to the crate root
+/// (forward slashes) and a 1-based line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: Rule,
+    pub message: String,
+}
+
+/// How a file's contents relate to test code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileKind {
+    /// Library, binary or bench source: every rule applies; only
+    /// `#[cfg(test)]` regions inside the file get test exemptions.
+    Source,
+    /// Integration-test source (`rust/tests/…`): the whole file counts
+    /// as `#[cfg(test)]` code for rules R2/R4/R5.  R1 and R3 still
+    /// apply — tests carry `unsafe` too (`alloc_free.rs`).
+    Test,
+}
+
+/// Files where `thread::spawn` / `thread::Builder::new` are the point:
+/// the pool's own workers and the coordinator's pinned control threads.
+const SPAWN_ALLOWLIST: [&str; 3] = [
+    "src/linalg/pool.rs",
+    "src/coordinator/mod.rs",
+    "src/coordinator/worker.rs",
+];
+
+/// Files allowed to mention `mul_add` unconditionally: the lane kernel
+/// that defines the blessed, internally cfg-fenced `F32x8::mul_add`
+/// wrapper, and the lane-based GEMM primitives that call it.  Their
+/// unfused default semantics are pinned dynamically by the bitwise
+/// scalar↔SIMD property suites, so the lexical rule defers to them
+/// there and guards everything else.
+const FMA_ALLOWLIST: [&str; 2] =
+    ["src/linalg/kernel.rs", "src/linalg/gemm.rs"];
+
+/// The only file rule R5 watches.
+const BATCHER_FILE: &str = "src/coordinator/batcher.rs";
+
+enum Directive {
+    HotPath,
+    EndHotPath,
+    Allow(Vec<Rule>),
+    AllowStart(Vec<Rule>),
+    AllowEnd(Vec<Rule>),
+    TickTime,
+}
+
+/// Extract a directive body from a comment's text: strip doc-comment
+/// prefixes, then require a literal `lint:` opener.
+fn directive_body(text: &str) -> Option<&str> {
+    let t = text.trim_start_matches(|c| c == '/' || c == '!').trim();
+    t.strip_prefix("lint:").map(str::trim)
+}
+
+fn parse_directive(body: &str) -> Result<Directive, String> {
+    for (prefix, which) in [
+        ("allow-start(", 0u8),
+        ("allow-end(", 1),
+        ("allow(", 2),
+    ] {
+        let Some(rest) = body.strip_prefix(prefix) else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            return Err(format!("missing ')' in directive `{body}`"));
+        };
+        let mut rules = Vec::new();
+        for id in rest[..close].split(',') {
+            let id = id.trim();
+            match Rule::from_id(id) {
+                Some(r) => rules.push(r),
+                None => {
+                    return Err(format!(
+                        "unknown rule `{id}` in directive `{body}`"
+                    ))
+                }
+            }
+        }
+        return Ok(match which {
+            0 => Directive::AllowStart(rules),
+            1 => Directive::AllowEnd(rules),
+            _ => Directive::Allow(rules),
+        });
+    }
+    match body.split_whitespace().next().unwrap_or("") {
+        "hot-path" => Ok(Directive::HotPath),
+        "end-hot-path" => Ok(Directive::EndHotPath),
+        "tick-time" => Ok(Directive::TickTime),
+        _ => Err(format!("unknown directive `{body}`")),
+    }
+}
+
+fn in_regions(regions: &[(u32, u32)], line: u32) -> bool {
+    regions.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+/// Lint one file's source.  `label` is the crate-root-relative path
+/// with forward slashes (e.g. `src/linalg/pool.rs`); the allowlists
+/// match on its suffix so absolute labels work too.
+pub fn lint_source(label: &str, kind: FileKind, src: &str) -> Vec<Finding> {
+    let tokens = lex(src);
+    let mut code: Vec<(u32, &Tok)> = Vec::new();
+    let mut comments: Vec<(u32, &str)> = Vec::new();
+    for t in &tokens {
+        match &t.tok {
+            Tok::LineComment(s) | Tok::BlockComment(s) => {
+                comments.push((t.line, s.as_str()));
+            }
+            _ => code.push((t.line, &t.tok)),
+        }
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let push = |findings: &mut Vec<Finding>,
+                    rule: Rule,
+                    line: u32,
+                    message: String| {
+        findings.push(Finding { file: label.to_string(), line, rule, message });
+    };
+
+    // -- directives -------------------------------------------------
+    let mut hot_regions: Vec<(u32, u32)> = Vec::new();
+    let mut allows: Vec<(Rule, u32, u32)> = Vec::new();
+    let mut ticks: Vec<(u32, u32)> = Vec::new();
+    let mut open_hot: Option<u32> = None;
+    let mut open_allow: Vec<(Rule, u32)> = Vec::new();
+    for &(line, text) in &comments {
+        let Some(body) = directive_body(text) else {
+            continue;
+        };
+        match parse_directive(body) {
+            Err(msg) => {
+                push(&mut findings, Rule::BadLintDirective, line, msg);
+            }
+            Ok(Directive::HotPath) => {
+                if let Some(start) = open_hot {
+                    push(
+                        &mut findings,
+                        Rule::BadLintDirective,
+                        line,
+                        format!(
+                            "hot-path region opened at line {start} is \
+                             still open here"
+                        ),
+                    );
+                }
+                open_hot = Some(line);
+            }
+            Ok(Directive::EndHotPath) => match open_hot.take() {
+                Some(start) => hot_regions.push((start, line)),
+                None => push(
+                    &mut findings,
+                    Rule::BadLintDirective,
+                    line,
+                    "end-hot-path with no open hot-path region".to_string(),
+                ),
+            },
+            Ok(Directive::Allow(rules)) => {
+                for r in rules {
+                    allows.push((r, line, line + 1));
+                }
+            }
+            Ok(Directive::AllowStart(rules)) => {
+                for r in rules {
+                    open_allow.push((r, line));
+                }
+            }
+            Ok(Directive::AllowEnd(rules)) => {
+                for r in rules {
+                    match open_allow
+                        .iter()
+                        .rposition(|&(ar, _)| ar == r)
+                    {
+                        Some(pos) => {
+                            let (_, start) = open_allow.remove(pos);
+                            allows.push((r, start, line));
+                        }
+                        None => push(
+                            &mut findings,
+                            Rule::BadLintDirective,
+                            line,
+                            format!(
+                                "allow-end({}) with no matching \
+                                 allow-start",
+                                r.id()
+                            ),
+                        ),
+                    }
+                }
+            }
+            Ok(Directive::TickTime) => ticks.push((line, line + 1)),
+        }
+    }
+    if let Some(start) = open_hot {
+        push(
+            &mut findings,
+            Rule::BadLintDirective,
+            start,
+            "hot-path region is never closed".to_string(),
+        );
+    }
+    for (r, start) in open_allow {
+        push(
+            &mut findings,
+            Rule::BadLintDirective,
+            start,
+            format!("allow-start({}) is never closed", r.id()),
+        );
+    }
+
+    // -- cfg regions ------------------------------------------------
+    let (test_regions, fma_regions) = cfg_regions(&code);
+    let allowed = |allows: &[(Rule, u32, u32)], rule: Rule, line: u32| {
+        allows.iter().any(|&(r, a, b)| r == rule && line >= a && line <= b)
+    };
+    let ident_at = |i: usize| match code.get(i).map(|t| t.1) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    };
+    let punct_at = |i: usize, c: char| {
+        matches!(code.get(i).map(|t| t.1), Some(Tok::Punct(p)) if *p == c)
+    };
+    let spawn_exempt = kind == FileKind::Test
+        || SPAWN_ALLOWLIST.iter().any(|s| label.ends_with(s));
+    let fma_file_exempt = kind == FileKind::Test
+        || FMA_ALLOWLIST.iter().any(|s| label.ends_with(s));
+    let is_batcher = label.ends_with(BATCHER_FILE);
+
+    // -- token rules ------------------------------------------------
+    for i in 0..code.len() {
+        let (line, tok) = code[i];
+        let Tok::Ident(name) = tok else {
+            continue;
+        };
+
+        // R3 first: it is region-scoped, the others are name-scoped.
+        if in_regions(&hot_regions, line)
+            && !in_regions(&test_regions, line)
+        {
+            let what: Option<String> = match name.as_str() {
+                "format" | "vec" if punct_at(i + 1, '!') => {
+                    Some(format!("{name}!"))
+                }
+                "to_vec" | "to_owned" | "to_string" | "clone"
+                | "collect"
+                    if i > 0 && punct_at(i - 1, '.') =>
+                {
+                    Some(format!(".{name}()"))
+                }
+                "Vec" | "Box" | "String"
+                    if punct_at(i + 1, ':')
+                        && punct_at(i + 2, ':')
+                        && ident_at(i + 3) == Some("new") =>
+                {
+                    Some(format!("{name}::new()"))
+                }
+                _ => None,
+            };
+            if let Some(what) = what {
+                if !allowed(&allows, Rule::HotPathAlloc, line) {
+                    push(
+                        &mut findings,
+                        Rule::HotPathAlloc,
+                        line,
+                        format!(
+                            "allocation-adjacent `{what}` inside a \
+                             hot-path region — the warm path must stay \
+                             zero-alloc"
+                        ),
+                    );
+                }
+            }
+        }
+
+        match name.as_str() {
+            // R1
+            "unsafe" => {
+                let documented = comments.iter().any(|&(cl, text)| {
+                    cl <= line
+                        && line - cl <= 8
+                        && (text.contains("SAFETY:")
+                            || text.contains("# Safety"))
+                });
+                if !documented
+                    && !allowed(&allows, Rule::UndocumentedUnsafe, line)
+                {
+                    push(
+                        &mut findings,
+                        Rule::UndocumentedUnsafe,
+                        line,
+                        "`unsafe` without an adjacent `SAFETY:` comment \
+                         stating the invariant it relies on"
+                            .to_string(),
+                    );
+                }
+            }
+            // R2, qualified-path form
+            "thread" => {
+                if punct_at(i + 1, ':')
+                    && punct_at(i + 2, ':')
+                    && ident_at(i + 3) == Some("spawn")
+                {
+                    let line = code[i + 3].0;
+                    if !spawn_exempt
+                        && !in_regions(&test_regions, line)
+                        && !allowed(&allows, Rule::StrayThreadSpawn, line)
+                    {
+                        push(
+                            &mut findings,
+                            Rule::StrayThreadSpawn,
+                            line,
+                            "raw `thread::spawn` outside the \
+                             pool/coordinator allowlist — route \
+                             parallelism through `linalg::pool`"
+                                .to_string(),
+                        );
+                    }
+                }
+            }
+            // R2, imported-Builder form
+            "Builder" => {
+                if punct_at(i + 1, ':')
+                    && punct_at(i + 2, ':')
+                    && ident_at(i + 3) == Some("new")
+                {
+                    let line = code[i + 3].0;
+                    if !spawn_exempt
+                        && !in_regions(&test_regions, line)
+                        && !allowed(&allows, Rule::StrayThreadSpawn, line)
+                    {
+                        push(
+                            &mut findings,
+                            Rule::StrayThreadSpawn,
+                            line,
+                            "`Builder::new` outside the \
+                             pool/coordinator allowlist — route \
+                             parallelism through `linalg::pool`"
+                                .to_string(),
+                        );
+                    }
+                }
+            }
+            // R4
+            "mul_add" | "fmaf" => {
+                if !fma_file_exempt
+                    && !in_regions(&test_regions, line)
+                    && !in_regions(&fma_regions, line)
+                    && !allowed(&allows, Rule::UnfencedFma, line)
+                {
+                    push(
+                        &mut findings,
+                        Rule::UnfencedFma,
+                        line,
+                        format!(
+                            "`{name}` fuses the multiply-add rounding \
+                             step and breaks bitwise scalar↔SIMD \
+                             equality — gate it behind \
+                             `#[cfg(feature = \"fma\")]`"
+                        ),
+                    );
+                }
+            }
+            // R5
+            "Instant" => {
+                if is_batcher
+                    && punct_at(i + 1, ':')
+                    && punct_at(i + 2, ':')
+                    && ident_at(i + 3) == Some("now")
+                {
+                    let line = code[i + 3].0;
+                    if !in_regions(&test_regions, line)
+                        && !in_regions(&ticks, line)
+                        && !allowed(&allows, Rule::StrayTimeSample, line)
+                    {
+                        push(
+                            &mut findings,
+                            Rule::StrayTimeSample,
+                            line,
+                            "`Instant::now()` in the batcher outside a \
+                             documented tick-time site — ad-hoc samples \
+                             make scheduling decisions timing-dependent"
+                                .to_string(),
+                        );
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    findings.sort_by(|a, b| {
+        (a.line, a.rule.id()).cmp(&(b.line, b.rule.id()))
+    });
+    findings
+}
+
+/// Find `#[cfg(test)]`- and `#[cfg(feature = "fma")]`-gated line
+/// ranges.  An attribute's extent is the next balanced `{…}` body, or
+/// the next top-level `;` for braceless items.  `not(…)` disables the
+/// classification, so `#[cfg(not(feature = "fma"))]` code is *not* an
+/// fma region — exactly the branch that must stay unfused.
+fn cfg_regions(code: &[(u32, &Tok)]) -> (Vec<(u32, u32)>, Vec<(u32, u32)>) {
+    let mut test = Vec::new();
+    let mut fma = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        if !matches!(code[i].1, Tok::Punct('#')) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if matches!(code.get(j).map(|t| t.1), Some(Tok::Punct('!'))) {
+            j += 1;
+        }
+        if !matches!(code.get(j).map(|t| t.1), Some(Tok::Punct('['))) {
+            i += 1;
+            continue;
+        }
+        let mut depth = 1u32;
+        let mut k = j + 1;
+        let mut idents: Vec<&str> = Vec::new();
+        let mut strs: Vec<&str> = Vec::new();
+        while k < code.len() && depth > 0 {
+            match code[k].1 {
+                Tok::Punct('[') => depth += 1,
+                Tok::Punct(']') => depth -= 1,
+                Tok::Ident(s) => idents.push(s),
+                Tok::Str(s) => strs.push(s),
+                _ => {}
+            }
+            k += 1;
+        }
+        let is_cfg =
+            matches!(idents.first(), Some(&"cfg") | Some(&"cfg_attr"));
+        let negated = idents.contains(&"not");
+        let is_test = is_cfg && !negated && idents.contains(&"test");
+        let is_fma = is_cfg
+            && !negated
+            && idents.contains(&"feature")
+            && strs.iter().any(|s| *s == "fma");
+        if is_test || is_fma {
+            if let Some(span) = attr_extent(code, i, k) {
+                if is_test {
+                    test.push(span);
+                }
+                if is_fma {
+                    fma.push(span);
+                }
+            }
+        }
+        i = k;
+    }
+    (test, fma)
+}
+
+/// Line span covered by the item/block an attribute at `attr_start`
+/// applies to; `k` points one past the attribute's closing `]`.
+fn attr_extent(
+    code: &[(u32, &Tok)],
+    attr_start: usize,
+    mut k: usize,
+) -> Option<(u32, u32)> {
+    let start_line = code[attr_start].0;
+    // skip any further attributes stacked on the same item
+    while matches!(code.get(k).map(|t| t.1), Some(Tok::Punct('#'))) {
+        let mut j = k + 1;
+        if matches!(code.get(j).map(|t| t.1), Some(Tok::Punct('!'))) {
+            j += 1;
+        }
+        if !matches!(code.get(j).map(|t| t.1), Some(Tok::Punct('['))) {
+            break;
+        }
+        let mut depth = 1u32;
+        let mut m = j + 1;
+        while m < code.len() && depth > 0 {
+            match code[m].1 {
+                Tok::Punct('[') => depth += 1,
+                Tok::Punct(']') => depth -= 1,
+                _ => {}
+            }
+            m += 1;
+        }
+        k = m;
+    }
+    let (mut paren, mut bracket, mut brace) = (0i32, 0i32, 0i32);
+    let mut body_opened = false;
+    while k < code.len() {
+        match code[k].1 {
+            Tok::Punct('(') => paren += 1,
+            Tok::Punct(')') => paren -= 1,
+            Tok::Punct('[') => bracket += 1,
+            Tok::Punct(']') => bracket -= 1,
+            Tok::Punct('{') => {
+                brace += 1;
+                body_opened = true;
+            }
+            Tok::Punct('}') => {
+                brace -= 1;
+                if body_opened && brace == 0 {
+                    return Some((start_line, code[k].0));
+                }
+            }
+            Tok::Punct(';')
+                if !body_opened
+                    && paren == 0
+                    && bracket == 0
+                    && brace == 0 =>
+            {
+                return Some((start_line, code[k].0));
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    code.last().map(|t| (start_line, t.0))
+}
+
+/// A whole-tree run: file count plus every finding, sorted by path.
+#[derive(Debug)]
+pub struct Report {
+    pub files: usize,
+    pub findings: Vec<Finding>,
+}
+
+/// Walk `src`, `benches` and `tests` under `root` (the crate root) and
+/// lint every `.rs` file.  Deterministic: files are sorted, findings
+/// within a file are line-ordered.
+pub fn lint_tree(root: &Path) -> io::Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["src", "benches", "tests"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = fs::read_to_string(path)?;
+        let label = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let kind = if label.starts_with("tests/") {
+            FileKind::Test
+        } else {
+            FileKind::Source
+        };
+        findings.extend(lint_source(&label, kind, &src));
+    }
+    Ok(Report { files: files.len(), findings })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map_or(false, |e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_src(label: &str, src: &str) -> Vec<Finding> {
+        lint_source(label, FileKind::Source, src)
+    }
+
+    #[test]
+    fn lexer_skips_strings_comments_and_lifetimes() {
+        let src = r##"
+            fn f<'a>(x: &'a str) -> char {
+                let _s = "unsafe thread::spawn";
+                let _r = r#"mul_add " quote"#;
+                let _b = b"bytes";
+                let _c = '\'';
+                let _d = 'x';
+                /* unsafe /* nested */ still comment */
+                x.len(); '\u{1F600}'
+            }
+        "##;
+        // none of the banned names survive as identifier tokens
+        let toks = lexer::lex(src);
+        assert!(toks.iter().all(|t| !matches!(
+            &t.tok,
+            Tok::Ident(s) if s == "unsafe" || s == "spawn" || s == "mul_add"
+        )));
+        // the lifetime did not eat the following ident
+        assert!(toks
+            .iter()
+            .any(|t| matches!(&t.tok, Tok::Ident(s) if s == "str")));
+    }
+
+    #[test]
+    fn lexer_tracks_lines_across_literals() {
+        let src = "let a = \"x\ny\";\nlet b = 1;\n";
+        let toks = lexer::lex(src);
+        let b = toks
+            .iter()
+            .find(|t| matches!(&t.tok, Tok::Ident(s) if s == "b"))
+            .unwrap();
+        assert_eq!(b.line, 3);
+    }
+
+    #[test]
+    fn cfg_test_region_spans_the_mod_body() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\n";
+        let toks = lex(src);
+        let code: Vec<(u32, &Tok)> = toks
+            .iter()
+            .filter(|t| {
+                !matches!(
+                    t.tok,
+                    Tok::LineComment(_) | Tok::BlockComment(_)
+                )
+            })
+            .map(|t| (t.line, &t.tok))
+            .collect();
+        let (test, _) = cfg_regions(&code);
+        assert_eq!(test, vec![(2, 5)]);
+    }
+
+    #[test]
+    fn not_fma_is_not_an_fma_region() {
+        let src = "fn f() {\n#[cfg(not(feature = \"fma\"))]\n{ let _ = 1; }\n}\n";
+        let toks = lex(src);
+        let code: Vec<(u32, &Tok)> = toks
+            .iter()
+            .filter(|t| {
+                !matches!(
+                    t.tok,
+                    Tok::LineComment(_) | Tok::BlockComment(_)
+                )
+            })
+            .map(|t| (t.line, &t.tok))
+            .collect();
+        let (_, fma) = cfg_regions(&code);
+        assert!(fma.is_empty());
+    }
+
+    #[test]
+    fn directives_round_trip() {
+        assert!(matches!(
+            parse_directive("hot-path"),
+            Ok(Directive::HotPath)
+        ));
+        assert!(matches!(
+            parse_directive("allow(hot-path-alloc) because reasons"),
+            Ok(Directive::Allow(v)) if v == [Rule::HotPathAlloc]
+        ));
+        assert!(parse_directive("alow(hot-path-alloc)").is_err());
+        assert!(parse_directive("allow(no-such-rule)").is_err());
+    }
+
+    #[test]
+    fn unbalanced_regions_are_findings() {
+        let src = "// lint: hot-path\nfn f() {}\n";
+        let f = lint_src("src/x.rs", src);
+        assert!(f
+            .iter()
+            .any(|f| f.rule == Rule::BadLintDirective));
+        let src = "// lint: end-hot-path\nfn f() {}\n";
+        assert!(lint_src("src/x.rs", src)
+            .iter()
+            .any(|f| f.rule == Rule::BadLintDirective));
+    }
+}

@@ -33,17 +33,24 @@ fn bump() {
     let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
 }
 
+// SAFETY: every method forwards its arguments unchanged to `System`,
+// which upholds the GlobalAlloc contract; the only extra work is a
+// panic-free thread-local counter bump that itself never allocates.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: caller contract forwarded verbatim to `System.alloc`.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         bump();
         System.alloc(layout)
     }
 
+    // SAFETY: caller contract forwarded verbatim to `System.alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         bump();
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: caller contract (live `ptr` of `layout`) forwarded
+    // verbatim to `System.realloc`.
     unsafe fn realloc(
         &self,
         ptr: *mut u8,
@@ -54,6 +61,8 @@ unsafe impl GlobalAlloc for CountingAlloc {
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: caller contract (live `ptr` of `layout`) forwarded
+    // verbatim to `System.dealloc`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }

@@ -1,0 +1,375 @@
+//! Proves every `repro-lint` rule fires on a known-bad fixture and
+//! every suppression form works, then runs the pass over the real tree
+//! as the tier-1 smoke: the shipped tree must be clean, and staying
+//! clean is what lets `scripts/check.sh` fail the build on any new
+//! violation.
+//!
+//! Fixtures are inline source snippets fed through `lint_source` with a
+//! path label chosen per case (the allowlists match on path suffixes).
+
+use linformer::lint::{lint_source, lint_tree, FileKind, Finding, Rule};
+
+fn lint_src(label: &str, src: &str) -> Vec<Finding> {
+    lint_source(label, FileKind::Source, src)
+}
+
+fn count(findings: &[Finding], rule: Rule) -> usize {
+    findings.iter().filter(|f| f.rule == rule).count()
+}
+
+// ---------------------------------------------------------------- R1
+
+#[test]
+fn r1_flags_undocumented_unsafe() {
+    let src = r##"
+fn f(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+"##;
+    let f = lint_src("src/model/foo.rs", src);
+    assert_eq!(count(&f, Rule::UndocumentedUnsafe), 1, "{f:?}");
+    assert_eq!(f[0].line, 3);
+}
+
+#[test]
+fn r1_accepts_adjacent_safety_comment() {
+    let src = r##"
+fn f(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees p is valid for reads.
+    unsafe { *p }
+}
+"##;
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+#[test]
+fn r1_accepts_doc_safety_section() {
+    let src = r##"
+/// Reads one float.
+///
+/// # Safety
+/// `p` must be valid for reads.
+pub unsafe fn read(p: *const f32) -> f32 {
+    // SAFETY: forwarded caller contract.
+    unsafe { *p }
+}
+"##;
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+#[test]
+fn r1_accepts_trailing_same_line_comment() {
+    let src = "fn f(p: *const f32) -> f32 { unsafe { *p } } // SAFETY: valid p\n";
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+#[test]
+fn r1_line_suppression_works() {
+    // previous-line form
+    let src = "\
+// lint: allow(undocumented-unsafe) vetted in review
+fn f(p: *const f32) -> f32 { unsafe { *p } }
+";
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+    // same-line (trailing) form
+    let src = "\
+fn f(p: *const f32) -> f32 { unsafe { *p } } // lint: allow(undocumented-unsafe) vetted
+";
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+#[test]
+fn r1_ignores_unsafe_in_strings_and_comments() {
+    let src = r##"
+fn f() -> &'static str {
+    // an unsafe-looking comment is not code
+    "unsafe { nope }"
+}
+"##;
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- R2
+
+#[test]
+fn r2_flags_stray_spawn_and_builder() {
+    let src = r##"
+fn go() {
+    std::thread::spawn(|| {});
+    let t = std::thread::Builder::new();
+    let u = Builder::new();
+}
+"##;
+    let f = lint_src("src/model/foo.rs", src);
+    assert_eq!(count(&f, Rule::StrayThreadSpawn), 3, "{f:?}");
+}
+
+#[test]
+fn r2_allowlists_pool_and_coordinator() {
+    let src = "fn go() { std::thread::spawn(|| {}); }\n";
+    for label in [
+        "src/linalg/pool.rs",
+        "src/coordinator/mod.rs",
+        "src/coordinator/worker.rs",
+    ] {
+        assert!(lint_src(label, src).is_empty(), "{label} not exempt");
+    }
+    assert_eq!(
+        count(&lint_src("src/serving/mod.rs", src), Rule::StrayThreadSpawn),
+        1
+    );
+}
+
+#[test]
+fn r2_exempts_cfg_test_and_test_files() {
+    let src = r##"
+fn real() {}
+
+#[cfg(test)]
+mod tests {
+    fn helper() {
+        std::thread::spawn(|| {});
+    }
+}
+"##;
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+    // integration-test files count as test code wholesale
+    let src = "fn go() { std::thread::spawn(|| {}); }\n";
+    assert!(lint_source("tests/foo.rs", FileKind::Test, src).is_empty());
+}
+
+#[test]
+fn r2_suppression_works() {
+    let src = "\
+// lint: allow(stray-thread-spawn) one-shot watchdog, reviewed
+fn go() { std::thread::spawn(|| {}); }
+";
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- R3
+
+#[test]
+fn r3_flags_every_alloc_adjacent_call_in_hot_region() {
+    let src = r##"
+// lint: hot-path
+fn warm(xs: &[f32], ys: &Vec<f32>) -> f32 {
+    let s = format!("no");
+    let m = vec![0.0f32; 4];
+    let c = ys.clone();
+    let t = xs.to_vec();
+    let v: Vec<f32> = Vec::new();
+    let b = Box::new(1.0f32);
+    let g: Vec<f32> = xs.iter().copied().collect();
+    s.len() as f32 + m[0] + c[0] + t[0] + v.len() as f32 + *b + g[0]
+}
+// lint: end-hot-path
+"##;
+    let f = lint_src("src/model/foo.rs", src);
+    assert_eq!(count(&f, Rule::HotPathAlloc), 7, "{f:?}");
+}
+
+#[test]
+fn r3_ignores_allocs_outside_regions() {
+    let src = r##"
+fn cold() -> String {
+    format!("fine: {:?}", Vec::<f32>::new())
+}
+"##;
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+#[test]
+fn r3_line_suppression_works() {
+    let src = r##"
+// lint: hot-path
+fn warm(capture: bool) -> Option<Vec<f32>> {
+    // lint: allow(hot-path-alloc) opt-in capture output
+    capture.then(Vec::new)
+}
+// lint: end-hot-path
+"##;
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+#[test]
+fn r3_block_suppression_works() {
+    let src = r##"
+// lint: hot-path
+fn warm(n: usize) -> f32 {
+    // lint: allow-start(hot-path-alloc) documented fork-path boxes
+    let tasks: Vec<Box<dyn Fn() + Send>> = (0..n)
+        .map(|_| Box::new(|| {}) as Box<dyn Fn() + Send>)
+        .collect();
+    // lint: allow-end(hot-path-alloc)
+    tasks.len() as f32
+}
+// lint: end-hot-path
+"##;
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+#[test]
+fn r3_unterminated_region_is_a_finding() {
+    let src = "// lint: hot-path\nfn warm() {}\n";
+    let f = lint_src("src/model/foo.rs", src);
+    assert_eq!(count(&f, Rule::BadLintDirective), 1, "{f:?}");
+}
+
+// ---------------------------------------------------------------- R4
+
+#[test]
+fn r4_flags_unfenced_mul_add() {
+    let src = "fn f(a: f32, b: f32, c: f32) -> f32 { a.mul_add(b, c) }\n";
+    let f = lint_src("src/model/foo.rs", src);
+    assert_eq!(count(&f, Rule::UnfencedFma), 1, "{f:?}");
+}
+
+#[test]
+fn r4_accepts_fma_feature_gate() {
+    let src = r##"
+fn f(a: f32, b: f32, c: f32) -> f32 {
+    #[cfg(feature = "fma")]
+    {
+        return a.mul_add(b, c);
+    }
+    #[cfg(not(feature = "fma"))]
+    {
+        a * b + c
+    }
+}
+"##;
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+#[test]
+fn r4_flags_mul_add_in_not_fma_branch() {
+    let src = r##"
+fn f(a: f32, b: f32, c: f32) -> f32 {
+    #[cfg(not(feature = "fma"))]
+    {
+        return a.mul_add(b, c);
+    }
+    #[cfg(feature = "fma")]
+    {
+        a * b + c
+    }
+}
+"##;
+    let f = lint_src("src/model/foo.rs", src);
+    assert_eq!(count(&f, Rule::UnfencedFma), 1, "{f:?}");
+}
+
+#[test]
+fn r4_exempts_lane_kernel_files_and_suppression() {
+    let src = "fn f(a: f32, b: f32, c: f32) -> f32 { a.mul_add(b, c) }\n";
+    assert!(lint_src("src/linalg/kernel.rs", src).is_empty());
+    assert!(lint_src("src/linalg/gemm.rs", src).is_empty());
+    let src = "\
+// lint: allow(unfenced-fma) reference value, not kernel output
+fn f(a: f32, b: f32, c: f32) -> f32 { a.mul_add(b, c) }
+";
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- R5
+
+#[test]
+fn r5_flags_stray_time_sample_in_batcher() {
+    let src = r##"
+use std::time::Instant;
+fn tick() {
+    let t0 = Instant::now();
+    let _ = t0;
+}
+"##;
+    let f = lint_src("src/coordinator/batcher.rs", src);
+    assert_eq!(count(&f, Rule::StrayTimeSample), 1, "{f:?}");
+    // same code anywhere else is not R5's business
+    assert!(lint_src("src/coordinator/mod.rs", src).is_empty());
+}
+
+#[test]
+fn r5_accepts_tick_time_marker_and_cfg_test() {
+    let src = r##"
+use std::time::Instant;
+fn tick() {
+    // lint: tick-time — the once-per-tick sample
+    let t0 = Instant::now();
+    let _ = t0;
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+    fn helper() {
+        let _ = Instant::now();
+    }
+}
+"##;
+    assert!(lint_src("src/coordinator/batcher.rs", src).is_empty());
+}
+
+#[test]
+fn r5_suppression_works() {
+    let src = "\
+fn tick() {
+    // lint: allow(stray-time-sample) measured once at startup
+    let _ = std::time::Instant::now();
+}
+";
+    assert!(lint_src("src/coordinator/batcher.rs", src).is_empty());
+}
+
+// ------------------------------------------------------- directives
+
+#[test]
+fn misspelled_directives_are_findings_not_silent() {
+    let src = "// lint: alow(hot-path-alloc)\nfn f() {}\n";
+    let f = lint_src("src/model/foo.rs", src);
+    assert_eq!(count(&f, Rule::BadLintDirective), 1, "{f:?}");
+    let src = "// lint: allow(no-such-rule)\nfn f() {}\n";
+    let f = lint_src("src/model/foo.rs", src);
+    assert_eq!(count(&f, Rule::BadLintDirective), 1, "{f:?}");
+    let src = "// lint: allow-end(hot-path-alloc)\nfn f() {}\n";
+    let f = lint_src("src/model/foo.rs", src);
+    assert_eq!(count(&f, Rule::BadLintDirective), 1, "{f:?}");
+}
+
+#[test]
+fn multiple_rules_in_one_allow() {
+    let src = "\
+// lint: allow(undocumented-unsafe, unfenced-fma) fixture
+fn f(p: *const f32) -> f32 { unsafe { (*p).mul_add(1.0, 0.0) } }
+";
+    assert!(lint_src("src/model/foo.rs", src).is_empty());
+}
+
+// ------------------------------------------------------- whole tree
+
+/// The tier-1 smoke: the shipped tree is clean.  Any new violation of
+/// the invariants fails this test (and `scripts/check.sh`'s standalone
+/// repro-lint stage) until it is fixed or explicitly suppressed with a
+/// reviewable reason.
+#[test]
+fn whole_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_tree(root).expect("walk crate sources");
+    assert!(
+        report.files > 30,
+        "walker found only {} files — wrong root?",
+        report.files
+    );
+    let rendered: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| {
+            format!("{}:{}: [{}] {}", f.file, f.line, f.rule.id(), f.message)
+        })
+        .collect();
+    assert!(
+        report.findings.is_empty(),
+        "repro-lint violations in the shipped tree:\n{}",
+        rendered.join("\n")
+    );
+}

@@ -1,9 +1,14 @@
 #!/usr/bin/env bash
-# Repo check: formatting (advisory), clippy correctness lints, and the
-# tier-1 gate (`cargo build --release && cargo test -q`).
+# Repo check: formatting (advisory), the repro-lint invariant pass,
+# clippy correctness lints, the tier-1 gate
+# (`cargo build --release && cargo test -q`), the release-mode property
+# suites, and — where the toolchain allows — Miri over the unsafe
+# pool/kernel core plus an opt-in ThreadSanitizer pool stress stage.
 #
 # Usage: scripts/check.sh [--fix]
-#   --fix   run `cargo fmt` for real instead of just reporting drift
+#   --fix        run `cargo fmt` for real instead of just reporting drift
+#   REPRO_TSAN=1 additionally run pool_stress under ThreadSanitizer
+#                (needs nightly + rust-src; skipped loudly otherwise)
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -23,20 +28,53 @@ else
     fi
 fi
 
+# repro-lint: the repo-invariant static pass (documented unsafe,
+# pool-only threading, zero-alloc hot-path regions, fma fencing, the
+# batcher's once-per-tick time discipline — see docs/INVARIANTS.md).
+# Runs before the release build so violations fail fast; exits non-zero
+# on any finding.
+cargo run --quiet --bin repro_lint || {
+    echo "[check] repro-lint found invariant violations" >&2
+    exit 1
+}
+
 # deny the lints that flag real bugs; style lints stay advisory.
 # clippy::perf is denied too so the linalg/model hot paths cannot regrow
 # hidden allocations or copies (any perf lint anywhere fails the check —
-# the tree is clean of them as of the compute-pool PR).
+# the tree is clean of them as of the compute-pool PR), and
+# clippy::suspicious so almost-certain logic slips (swapped operands in
+# op impls, float comparisons missing abs, mutated range bounds, …)
+# cannot land either.
 if command -v cargo-clippy >/dev/null 2>&1 || cargo clippy --version >/dev/null 2>&1; then
     # -A first, -D second: lint-level flags are last-wins per lint, so
     # the deny must come after the blanket allow to actually deny
     cargo clippy --all-targets --quiet -- \
-        -A clippy::all -D clippy::correctness -D clippy::perf || {
-        echo "[check] clippy correctness/perf lints failed" >&2
+        -A clippy::all -D clippy::correctness -D clippy::suspicious \
+        -D clippy::perf || {
+        echo "[check] clippy correctness/suspicious/perf lints failed" >&2
         exit 1
     }
 else
     echo "[check] note: clippy unavailable, skipping lints"
+fi
+
+# Miri over the unsafe core: the pool's scoped-lifetime transmute
+# (pool.rs, Task<'env> -> StaticTask) and every PanelBuf raw-slice
+# reinterpret (kernel.rs flat/flat_mut) get exercised under the
+# interpreter's aliasing + validity checks via the linalg::pool and
+# linalg::kernel unit tests.  Needs a nightly toolchain with the miri
+# component; degrades to a loud skip-note on stable-only machines,
+# exactly like the clippy guard above.
+if cargo +nightly miri --version >/dev/null 2>&1; then
+    echo "[check] miri: linalg::pool + linalg::kernel unit tests"
+    # isolation off: the pool tests read LINFORMER_THREADS and the clock
+    MIRIFLAGS="-Zmiri-disable-isolation" \
+        cargo +nightly miri test --lib -q -- linalg::pool linalg::kernel || {
+        echo "[check] miri stage failed" >&2
+        exit 1
+    }
+else
+    echo "[check] note: nightly+miri unavailable, skipping the miri stage"
 fi
 
 # tier-1
@@ -47,6 +85,28 @@ cargo test -q
 # concurrent buckets; debug-mode kernels would dominate its runtime, so
 # it is #[ignore]d under tier-1 and run here in release
 cargo test --release --test pool_stress -- --ignored
+
+# opt-in ThreadSanitizer pass over the same stress test: catches data
+# races the helping-worker drain or a future pool change could
+# introduce.  Opt-in (REPRO_TSAN=1) because -Zbuild-std multiplies
+# build time; needs nightly with the rust-src component and degrades to
+# a loud skip-note without it.
+if [[ "${REPRO_TSAN:-0}" == "1" ]]; then
+    host="$(rustc -vV | sed -n 's/^host: //p')"
+    if rustup component list --toolchain nightly 2>/dev/null \
+        | grep -q '^rust-src.*(installed)'; then
+        echo "[check] tsan: pool_stress on ${host}"
+        RUSTFLAGS="-Zsanitizer=thread" \
+            cargo +nightly test --release -Zbuild-std \
+            --target "${host}" --test pool_stress -- --ignored || {
+            echo "[check] tsan stage failed" >&2
+            exit 1
+        }
+    else
+        echo "[check] note: REPRO_TSAN=1 but nightly rust-src is" \
+            "unavailable, skipping the tsan stage"
+    fi
+fi
 
 # SIMD microkernel property tests: hundreds of random odd-shaped GEMMs
 # vs the f64 naive reference, the scalar kernel (bitwise on A·B paths)
