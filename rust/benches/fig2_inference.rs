@@ -26,6 +26,13 @@
 //! accuracy-delta record: per-row MLM argmax agreement and max
 //! relative logit error of int8 vs the f32 reference.
 //!
+//! Every record also carries an `attn` tag (`fused` | `serial`), and a
+//! dedicated section measures **both attention regimes in one
+//! invocation**: the head-parallel pipeline with the scale/softmax GEMM
+//! epilogue vs the head-serial standalone-softmax baseline
+//! (`EncodeScratch::use_serial_attention`), bitwise-identical by
+//! `tests/attn_prop.rs`, at seq_len up to 4096.
+//!
 //! Run: `cargo bench --bench fig2_inference`
 
 use linformer::linalg::{gemm, pool, Dtype, Mat, MatView};
@@ -57,6 +64,7 @@ fn record(
     bench_name: &str,
     kernel: &str,
     attention: &str,
+    attn: &str,
     n: usize,
     k: usize,
     batch: usize,
@@ -70,6 +78,10 @@ fn record(
         // the int8 flavor is measured in the cached-panel section below
         ("dtype", Json::Str("f32".into())),
         ("attention", Json::Str(attention.into())),
+        // attention-block regime: "fused" = head-parallel fan-out with
+        // the scale/softmax GEMM epilogue, "serial" = head-serial with
+        // the standalone softmax pass (the pre-change execution shape)
+        ("attn", Json::Str(attn.into())),
         ("seq_len", Json::Num(n as f64)),
         ("k", Json::Num(k as f64)),
         ("batch", Json::Num(batch as f64)),
@@ -211,11 +223,11 @@ fn main() {
                 st.mean / lt.mean
             );
             records.push(record(
-                "encode", kernel, "standard", n, 0, 1, threads,
+                "encode", kernel, "standard", "fused", n, 0, 1, threads,
                 st.mean * 1e9 / n as f64,
             ));
             records.push(record(
-                "encode", kernel, "linformer", n, 64, 1, threads,
+                "encode", kernel, "linformer", "fused", n, 64, 1, threads,
                 lt.mean * 1e9 / n as f64,
             ));
         }
@@ -265,9 +277,46 @@ fn main() {
             looped.mean / batched.mean
         );
         records.push(record(
-            "encode_batch", gemm::kernel_name(), "linformer", n, 64, 8,
-            threads, batched.mean * 1e9 / total_tokens as f64,
+            "encode_batch", gemm::kernel_name(), "linformer", "fused", n,
+            64, 8, threads, batched.mean * 1e9 / total_tokens as f64,
         ));
+    }
+
+    // -- attention regimes: fused epilogue vs head-serial baseline -------
+    // Both regimes are bitwise-identical (pinned by tests/attn_prop.rs),
+    // so this pair isolates the execution-shape win: per-head pool
+    // fan-out + scale/softmax folded into the logits-GEMM epilogue vs
+    // head-serial attention with the standalone softmax pass.
+    println!("\n== attention regimes (linformer k=64, batch 1): fused vs serial ==");
+    println!("{:>6} {:>16} {:>16} {:>9}", "n", "fused", "serial", "speedup");
+    for n in [512usize, 1024, 4096] {
+        let iters = if n >= 4096 { 2 } else { 4 };
+        let (cfg, params) = model(n, Attention::Linformer, 64);
+        let tokens: Vec<u32> =
+            (0..n).map(|_| rng.below(cfg.vocab_size as u32)).collect();
+        let mut scratch = EncodeScratch::new();
+        let mut sums = Vec::with_capacity(2);
+        for serial in [false, true] {
+            scratch.use_serial_attention(serial);
+            let t = bench(1, iters, || {
+                encode_with(&params, &cfg, &tokens, false, &mut scratch)
+                    .hidden
+                    .data[0]
+            });
+            let attn = if serial { "serial" } else { "fused" };
+            records.push(record(
+                "encode_attn", gemm::kernel_name(), "linformer", attn, n,
+                64, 1, threads, t.mean * 1e9 / n as f64,
+            ));
+            sums.push(t);
+        }
+        println!(
+            "{:>6} {:>16} {:>16} {:>8.2}x",
+            n,
+            sums[0].human(),
+            sums[1].human(),
+            sums[1].mean / sums[0].mean
+        );
     }
 
     // -- cached panels: f32 vs int8 weight flavors in one run ------------
@@ -316,6 +365,7 @@ fn main() {
                 ("kernel", Json::Str(gemm::kernel_name().into())),
                 ("dtype", Json::Str(dtype.name().into())),
                 ("attention", Json::Str("linformer".into())),
+                ("attn", Json::Str("fused".into())),
                 ("seq_len", Json::Num(n as f64)),
                 ("k", Json::Num(64.0)),
                 ("batch", Json::Num(1.0)),

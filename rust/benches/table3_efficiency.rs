@@ -11,10 +11,13 @@
 //! reproduction target.
 //!
 //! Measurements are appended to `BENCH_encoder.json` (section
-//! `table3_efficiency`), tagged with the GEMM kernel and weight dtype
-//! that produced them; one invocation measures the grid under **both**
-//! the SIMD microkernel and the pre-SIMD scalar baseline (before/after
-//! records).  This grid runs full-precision weights — the paired
+//! `table3_efficiency`), tagged with the GEMM kernel, weight dtype and
+//! attention regime (`attn`: `fused` | `serial`) that produced them;
+//! one invocation measures the grid under **both** the SIMD microkernel
+//! and the pre-SIMD scalar baseline (before/after records), and under
+//! both attention regimes — the fused-epilogue head-parallel pipeline
+//! and the head-serial standalone-softmax baseline.  This grid runs
+//! full-precision weights — the paired
 //! f32/int8 cached-panel measurement (and its accuracy delta) lives in
 //! `cargo bench --bench fig2_inference`.
 //!
@@ -54,18 +57,23 @@ fn main() {
     let ns = [256usize, 512, 1024];
     let mut records = Vec::new();
 
-    // both kernels in one run (before/after): the default SIMD
-    // microkernel and the pre-SIMD scalar baseline
+    // both kernels AND both attention regimes in one run (before/after):
+    // the default SIMD microkernel under the fused-epilogue head-parallel
+    // attention, the same kernel under the head-serial standalone-softmax
+    // baseline (bitwise-identical — pinned by tests/attn_prop.rs), and
+    // the pre-SIMD scalar baseline
     let mut rng = Pcg32::seeded(1);
-    for scalar in [false, true] {
+    for (scalar, serial) in [(false, false), (false, true), (true, false)] {
         let kernel = if scalar { "scalar" } else { gemm::kernel_name() };
+        let attn = if serial { "serial" } else { "fused" };
         let mut scratch = EncodeScratch::new();
         if scalar {
             scratch.use_scalar_kernel(true);
         }
+        scratch.use_serial_attention(serial);
         println!(
             "== Table 3 (left): measured time speedup, rust reference \
-             [{kernel} kernel] =="
+             [{kernel} kernel, {attn} attention] =="
         );
         print!("{:>7}", "n\\k");
         for k in ks {
@@ -101,6 +109,7 @@ fn main() {
                     ("bench", Json::Str("speedup_grid".into())),
                     ("kernel", Json::Str(kernel.into())),
                     ("dtype", Json::Str("f32".into())),
+                    ("attn", Json::Str(attn.into())),
                     ("seq_len", Json::Num(n as f64)),
                     ("k", Json::Num(k as f64)),
                     ("batch", Json::Num(1.0)),

@@ -355,15 +355,70 @@ pub fn matmul_nt_view_in(
     threads: usize,
     gs: &mut GemmScratch,
 ) {
+    matmul_nt_epilogue_view_in(a, b, c, threads, gs, |_chunk, _row0| {});
+}
+
+/// `C = softmax_rows(scale · A·Bᵀ)` in one pass: the attention-logits
+/// GEMM with the scale multiply and row-wise softmax **fused into the
+/// row-chunk epilogue**.  Where the unfused sequence
+/// (`matmul_nt_view_in` → `Mat::scale` → `softmax_rows`) re-streams the
+/// whole m×n output twice after the fork-join barrier, here each row
+/// chunk applies [`super::softmax_scaled_slice_rows`] immediately after
+/// its kernel stores, while the rows are still cache-hot.
+///
+/// Bitwise identical to the unfused sequence for every thread cap and
+/// chunking: the GEMM values are the plain kernels' values, chunks
+/// partition the row set, and softmax is per-row — pinned by
+/// `fused_softmax_matches_unfused_bitwise` here and by the release
+/// `attn_prop` suite end-to-end.
+pub fn matmul_nt_softmax_view_in(
+    a: MatView<'_>,
+    b: MatView<'_>,
+    c: &mut Mat,
+    scale: f32,
+    threads: usize,
+    gs: &mut GemmScratch,
+) {
+    let n = b.rows;
+    matmul_nt_epilogue_view_in(a, b, c, threads, gs, move |chunk, _row0| {
+        super::softmax_scaled_slice_rows(chunk, n, scale)
+    });
+}
+
+/// The per-row-range **epilogue hook** shared by the `A·Bᵀ` entry
+/// points: `epi(chunk, row0)` runs over each row chunk (whole rows,
+/// width == stride == n) immediately after that chunk's GEMM kernel,
+/// inside the same pool task.  Because chunks partition M and the hook
+/// sees only complete rows, any per-row epilogue is invariant across
+/// thread counts and chunkings (see docs/INVARIANTS.md).  With `k == 0`
+/// the product contracts to all-zeros and the hook still runs once over
+/// the zeroed output, so fused semantics match the unfused sequence
+/// there too.
+fn matmul_nt_epilogue_view_in<'env, E>(
+    a: MatView<'env>,
+    b: MatView<'env>,
+    c: &'env mut Mat,
+    threads: usize,
+    gs: &mut GemmScratch,
+    epi: E,
+) where
+    E: Fn(&mut [f32], usize) + Send + Copy + 'env,
+{
     assert_eq!(a.cols, b.cols, "matmul_nt inner dims: {} vs {}", a.cols, b.cols);
     let (m, n, k) = (a.rows, b.rows, a.cols);
     if gs.scalar || k == 0 {
         c.reset(m, n);
-        if gs.scalar && m > 0 && n > 0 && k > 0 {
-            run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
-                mmnt_rows(a, b, chunk, row0)
-            });
+        if m == 0 || n == 0 {
+            return;
         }
+        if k == 0 {
+            epi(&mut c.data[..], 0);
+            return;
+        }
+        run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+            mmnt_rows(a, b, chunk, row0);
+            epi(chunk, row0);
+        });
         return;
     }
     // fully overwritten by the microkernel — no zeroing pass needed
@@ -375,11 +430,13 @@ pub fn matmul_nt_view_in(
     if m >= kernel::A_PACK_MIN_M {
         let apack = kernel::pack_a(&mut gs.apack, a);
         run_row_chunks_mr(&mut c.data, m, threads, n, move |chunk, row0| {
-            kernel::gemm_chunk_pa(apack, row0, packed, k, n, chunk, n, 0)
+            kernel::gemm_chunk_pa(apack, row0, packed, k, n, chunk, n, 0);
+            epi(chunk, row0);
         });
     } else {
         run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
-            kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
+            kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0);
+            epi(chunk, row0);
         });
     }
 }
@@ -1341,6 +1398,54 @@ mod tests {
             let mut pooled = Mat::zeros(0, 0);
             matmul_view(av, bv, &mut pooled, chunks);
             assert_eq!(serial.data, pooled.data, "{chunks} chunks diverged");
+        }
+    }
+
+    #[test]
+    fn fused_softmax_matches_unfused_bitwise() {
+        // the epilogue-fused logits entry must be indistinguishable, bit
+        // for bit, from matmul_nt → Mat::scale → softmax_rows for every
+        // kernel (SIMD, packed-A tall-m, scalar), every thread plan, and
+        // the k == 0 degenerate (all-zero logits → uniform rows) — the
+        // invariant the head-parallel attention rewrite stands on
+        let mut rng = Pcg32::seeded(51);
+        for &(m, n, k) in
+            &[(1, 1, 1), (7, 9, 5), (33, 17, 12), (50, 21, 24), (4, 6, 0)]
+        {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, n, k);
+            let (av, bv) = (MatView::full(&a), MatView::full(&b));
+            let scale = 1.0 / (k.max(1) as f32).sqrt();
+            for scalar in [false, true] {
+                let mut gs = if scalar {
+                    GemmScratch::scalar()
+                } else {
+                    let mut gs = GemmScratch::new();
+                    gs.set_scalar(false);
+                    gs
+                };
+                let mut want = Mat::zeros(0, 0);
+                matmul_nt_view_in(av, bv, &mut want, 1, &mut gs);
+                want.scale(scale);
+                crate::linalg::softmax_rows(&mut want);
+                for threads in [1usize, 2, 3, 7] {
+                    let mut got = Mat::zeros(0, 0);
+                    matmul_nt_softmax_view_in(
+                        av, bv, &mut got, scale, threads, &mut gs,
+                    );
+                    assert_eq!((got.rows, got.cols), (m, n));
+                    for (i, (g, w)) in
+                        got.data.iter().zip(&want.data).enumerate()
+                    {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "({m},{n},{k}) scalar={scalar} t={threads} \
+                             elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
         }
     }
 

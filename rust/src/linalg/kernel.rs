@@ -87,9 +87,15 @@
 //! column), activations **per tensor** at call time
 //! ([`quantize_activations`]), products accumulate exactly in i32
 //! (`k ≤` [`I8_K_MAX`] guards overflow), and the single rounding
-//! happens in one dequantizing multiply per output element.  Because
-//! integer accumulation is exact, int8 results are bitwise identical
-//! across thread counts and chunkings *by construction*.  Zero channels
+//! happens in one dequantizing multiply per output element.  The inner
+//! loop is an explicit widening lane op — [`I8x32::widening_mul_acc`]
+//! (i8×i8→i16→i32) over a [`I8x32::pair_splat`] of two A values against
+//! a 32-byte load of two packed B rows — so the byte-widening SIMD
+//! shape is stated in the code rather than left for the autovectorizer
+//! to rediscover.  Because integer accumulation is exact, the two-half
+//! partial sums fold to the same totals as serial accumulation, and
+//! int8 results stay bitwise identical across thread counts, chunkings
+//! *and* this loop restructure *by construction*.  Zero channels
 //! (and zero tensors) get scale 0 so their outputs dequantize to exact
 //! zeros; NaN quantizes to 0, i.e. the int8 path does not propagate
 //! NaN the way the f32 path does.
@@ -206,15 +212,63 @@ impl F32x8 {
 pub const I8_LANES: usize = 32;
 
 /// Portable 32-lane i8 vector: the int8 kernel's packing/alignment
-/// unit (the quantized inner loop itself runs on scalar i32 math,
-/// which LLVM widens; what matters is the panel layout and alignment).
+/// unit *and* its compute type.  [`I8x32::widening_mul_acc`] is the
+/// explicit i8×i8→i16→i32 multiply-accumulate the quantized inner loop
+/// runs on — the elementwise widen-multiply-add loop is exactly the
+/// shape LLVM lowers to `pmaddubsw`/`pmaddwd`-class byte ops, so the
+/// kernel no longer leans on the autovectorizer discovering the widening
+/// pattern in blocked scalar i32 code.
 #[derive(Debug, Clone, Copy)]
 #[repr(C, align(32))]
 pub struct I8x32(pub [i8; I8_LANES]);
 
+// lint: hot-path — i8 lane ops run per k-step pair in the int8 kernel
 impl I8x32 {
     pub const ZERO: I8x32 = I8x32([0; I8_LANES]);
+
+    /// Load the first [`I8_LANES`] values of `src`.
+    #[inline(always)]
+    pub fn load(src: &[i8]) -> I8x32 {
+        let mut out = [0; I8_LANES];
+        out.copy_from_slice(&src[..I8_LANES]);
+        I8x32(out)
+    }
+
+    /// Load up to [`I8_LANES`] values; missing lanes are zero.
+    #[inline(always)]
+    pub fn load_partial(src: &[i8]) -> I8x32 {
+        let n = src.len().min(I8_LANES);
+        let mut out = [0; I8_LANES];
+        out[..n].copy_from_slice(&src[..n]);
+        I8x32(out)
+    }
+
+    /// Broadcast a *pair* of A values across the two 16-lane halves:
+    /// lanes `[0, NR)` hold `lo`, lanes `[NR, 2·NR)` hold `hi`.  Pairs
+    /// with a [`I8x32::load`] of two consecutive K-major packed B rows
+    /// (`NR` = 16 columns each), so one vector op covers two k steps.
+    #[inline(always)]
+    pub fn pair_splat(lo: i8, hi: i8) -> I8x32 {
+        let mut out = [hi; I8_LANES];
+        out[..NR].fill(lo);
+        I8x32(out)
+    }
+
+    /// Explicit widening multiply-accumulate: per lane,
+    /// `acc[i] += (self[i] as i16 · o[i] as i16) as i32`.  The i16
+    /// intermediate is exact (|i8·i8| ≤ 128² < 2¹⁵) and the i32
+    /// accumulate is exact under the [`I8_K_MAX`] bound, so totals are
+    /// bitwise identical to any other summation order of the same
+    /// integer products.
+    #[inline(always)]
+    pub fn widening_mul_acc(self, o: I8x32, acc: &mut [i32; I8_LANES]) {
+        for i in 0..I8_LANES {
+            let p = self.0[i] as i16 * o.0[i] as i16;
+            acc[i] += p as i32;
+        }
+    }
 }
+// lint: end-hot-path
 
 /// Element/lane pairing for [`PanelBuf`]: one `Lane` is a whole SIMD
 /// register of `Elem`s, the allocation unit that keeps packed panels
@@ -528,7 +582,10 @@ pub fn quantize_activations<'a>(
 /// kernel, which must pin its operation order — results are bitwise
 /// identical across thread counts and chunkings *by construction*; the
 /// one rounding per element happens in the dequantizing multiply.
-/// Register tiling: [`MR`] rows × [`NR`] i32 accumulators.
+/// Register tiling: [`MR`] rows × [`I8_LANES`] i32 accumulators — two
+/// [`NR`]-wide halves (even-k / odd-k partials, folded once at store
+/// time) fed by [`I8x32::widening_mul_acc`] over [`I8x32::pair_splat`]
+/// broadcasts, two k steps per vector op.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_chunk_i8(
     aq: &[i8],
@@ -557,20 +614,39 @@ pub fn gemm_chunk_i8(
         let mut i0 = 0;
         while i0 < rows {
             let mr = (rows - i0).min(MR);
-            let mut acc = [[0i32; NR]; MR];
-            for kk in 0..k {
-                let brow = &packed[base + kk * NR..base + (kk + 1) * NR];
+            // one I8x32-shaped accumulator image per row: lanes [0, NR)
+            // hold the even-k partial sums, lanes [NR, 2·NR) the odd-k
+            // partials; integer addition is exact, so folding the two
+            // halves at the end reproduces the serial total bitwise
+            let mut acc = [[0i32; I8_LANES]; MR];
+            let mut kk = 0;
+            while kk + 2 <= k {
+                // two consecutive K-major packed B rows = one full
+                // 32-byte vector load
+                let b2 = I8x32::load(&packed[base + kk * NR..]);
                 for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
-                    let av = aq[(row0 + i0 + r) * k + kk] as i32;
-                    for (jj, &bv) in brow.iter().enumerate() {
-                        acc_r[jj] += av * bv as i32;
-                    }
+                    let arow = (row0 + i0 + r) * k;
+                    let a2 = I8x32::pair_splat(aq[arow + kk], aq[arow + kk + 1]);
+                    a2.widening_mul_acc(b2, acc_r);
+                }
+                kk += 2;
+            }
+            if kk < k {
+                // odd tail: upper half loads zeros and splats zero, so
+                // the odd-k partials gain exactly nothing
+                let b2 = I8x32::load_partial(
+                    &packed[base + kk * NR..base + (kk + 1) * NR],
+                );
+                for (r, acc_r) in acc.iter_mut().enumerate().take(mr) {
+                    let av = aq[(row0 + i0 + r) * k + kk];
+                    I8x32::pair_splat(av, 0).widening_mul_acc(b2, acc_r);
                 }
             }
             for (r, acc_r) in acc.iter().enumerate().take(mr) {
                 let cbase = (i0 + r) * cs + col0 + j0;
                 for (jj, o) in c[cbase..cbase + nr].iter_mut().enumerate() {
-                    *o = acc_r[jj] as f32 * (a_scale * scales[j0 + jj]);
+                    let total = acc_r[jj] + acc_r[jj + NR];
+                    *o = total as f32 * (a_scale * scales[j0 + jj]);
                 }
             }
             i0 += MR;
@@ -1051,6 +1127,32 @@ mod tests {
             assert_eq!(c[i * 5], 7.0);
             assert_eq!(&c[i * 5 + 1..i * 5 + 4], &[0.0; 3]);
         }
+    }
+
+    #[test]
+    fn i8x32_lane_ops() {
+        // pair_splat: low NR lanes = lo, high NR lanes = hi
+        let p = I8x32::pair_splat(3, -5);
+        assert_eq!(&p.0[..NR], &[3i8; NR]);
+        assert_eq!(&p.0[NR..], &[-5i8; NR]);
+        // load/load_partial mirror the f32 lane semantics
+        let src: Vec<i8> = (0..I8_LANES as i8).collect();
+        assert_eq!(I8x32::load(&src).0[31], 31);
+        let part = I8x32::load_partial(&src[..5]);
+        assert_eq!(&part.0[..5], &[0, 1, 2, 3, 4]);
+        assert_eq!(&part.0[5..], &[0i8; I8_LANES - 5]);
+        assert_eq!(I8x32::load_partial(&[]).0, [0i8; I8_LANES]);
+        // widening_mul_acc is exact at the i8 extremes: (-127)·(-127)
+        // and 127·(-127) both fit the i16 intermediate without wrap
+        let a = I8x32::pair_splat(-127, 127);
+        let b = I8x32([-127i8; I8_LANES]);
+        let mut acc = [1i32; I8_LANES];
+        a.widening_mul_acc(b, &mut acc);
+        assert_eq!(acc[0], 1 + 127 * 127);
+        assert_eq!(acc[NR], 1 - 127 * 127);
+        // accumulates on top of existing partials
+        a.widening_mul_acc(b, &mut acc);
+        assert_eq!(acc[0], 1 + 2 * 127 * 127);
     }
 
     #[test]

@@ -264,6 +264,66 @@ pub fn softmax_rows(m: &mut Mat) {
     }
 }
 
+/// In-place row softmax of `mat · scale`, with the scalar multiply
+/// **folded into the max pass**: one sweep writes `x * scale` back and
+/// tracks the running max of the scaled values, where the two-pass form
+/// (`Mat::scale` then [`softmax_rows`]) streams the whole matrix twice.
+///
+/// Bitwise-identical to `m.scale(scale); softmax_rows(&mut m)`: the
+/// per-element multiply is the same single operation either way, the max
+/// scan visits elements in the same order with the same `f32::max`, and
+/// the exp/normalize passes are unchanged — including the fully-masked
+/// uniform guard and NaN propagation documented on [`softmax_rows`]
+/// (`-inf * scale` stays `-inf` for the positive scales attention uses,
+/// and a NaN row stays NaN).  Pinned by
+/// `softmax_scaled_matches_scale_then_softmax_bitwise`.
+///
+/// This is the attention epilogue: the fused GEMM entry point
+/// ([`gemm::matmul_nt_softmax_view_in`]) applies the same slice-level
+/// core ([`softmax_scaled_slice_rows`]) per row chunk, so fused and
+/// standalone results are the same code over the same rows.
+pub fn softmax_scaled_rows(m: &mut Mat, scale: f32) {
+    let cols = m.cols;
+    softmax_scaled_slice_rows(&mut m.data, cols, scale);
+}
+
+/// Slice-level core of [`softmax_scaled_rows`]: `data` is a whole number
+/// of `cols`-wide rows (any row range of a row-major matrix whose width
+/// equals its stride).  The GEMM row-chunk epilogue calls this on each
+/// chunk — chunks partition the row set and softmax is per-row, so the
+/// result is independent of the chunking.
+pub fn softmax_scaled_slice_rows(data: &mut [f32], cols: usize, scale: f32) {
+    if cols == 0 {
+        return;
+    }
+    debug_assert_eq!(data.len() % cols, 0, "partial row handed to softmax");
+    for row in data.chunks_mut(cols) {
+        let mut max = f32::NEG_INFINITY;
+        for x in row.iter_mut() {
+            *x *= scale;
+            max = max.max(*x);
+        }
+        if max == f32::NEG_INFINITY {
+            // same contract as `softmax_rows`: only a genuinely all--inf
+            // row takes the uniform exit; NaN keeps propagating
+            if row.iter().all(|x| *x == f32::NEG_INFINITY) {
+                let inv = 1.0 / row.len() as f32;
+                row.fill(inv);
+                continue;
+            }
+        }
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
 /// Row-wise layer norm with learned scale/bias.
 pub fn layer_norm_rows(m: &mut Mat, scale: &[f32], bias: &[f32], eps: f32) {
     assert_eq!(scale.len(), m.cols);
@@ -354,6 +414,75 @@ mod tests {
         softmax_rows(&mut m);
         assert!(m.row(0).iter().all(|x| x.is_nan()), "NaN laundered: {m:?}");
         assert!(m.row(1).iter().any(|x| x.is_nan()), "NaN laundered: {m:?}");
+    }
+
+    #[test]
+    fn softmax_scaled_matches_scale_then_softmax_bitwise() {
+        // the fused scale+softmax must be indistinguishable down to the
+        // last bit from the two-pass form it replaces, including on
+        // masked (-inf) and mixed rows
+        let ninf = f32::NEG_INFINITY;
+        let vals = vec![
+            1e4, -1e4, 3.25, -0.5, //
+            ninf, ninf, ninf, ninf, //
+            ninf, 2.0, ninf, -7.5, //
+            0.0, 0.0, 0.0, 0.0,
+        ];
+        for scale in [0.125f32, 1.0, 0.176_776_7 /* 1/sqrt(32) */] {
+            let mut fused = Mat::from_vec(4, 4, vals.clone());
+            let mut two_pass = fused.clone();
+            softmax_scaled_rows(&mut fused, scale);
+            two_pass.scale(scale);
+            softmax_rows(&mut two_pass);
+            for (a, b) in fused.data.iter().zip(&two_pass.data) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "fused softmax diverged at scale {scale}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_scaled_masked_row_is_uniform_and_nan_propagates() {
+        let ninf = f32::NEG_INFINITY;
+        let mut m = Mat::from_vec(
+            2,
+            3,
+            vec![ninf, ninf, ninf, f32::NAN, 1.0, ninf],
+        );
+        softmax_scaled_rows(&mut m, 0.5);
+        assert_eq!(m.row(0), &[1.0 / 3.0; 3], "masked row must be uniform");
+        assert!(
+            m.row(1).iter().any(|x| x.is_nan()),
+            "NaN laundered: {m:?}"
+        );
+    }
+
+    #[test]
+    fn softmax_scaled_slice_rows_is_chunking_invariant() {
+        // per-row softmax applied chunk-by-chunk must equal one whole-
+        // matrix call for any partition into whole rows — the property
+        // the GEMM epilogue's bitwise thread-invariance stands on
+        let mut whole = Mat::filled_with(6, 5, |r, c| {
+            ((r * 31 + c * 17) % 13) as f32 - 6.0
+        });
+        let raw = whole.clone();
+        softmax_scaled_rows(&mut whole, 0.25);
+        let cols = raw.cols;
+        for rows in [&[1usize, 2, 3][..], &[4, 2], &[6]] {
+            let mut redo = raw.clone();
+            let mut rest = &mut redo.data[..];
+            for &nr in rows {
+                let (head, tail) = rest.split_at_mut(nr * cols);
+                softmax_scaled_slice_rows(head, cols, 0.25);
+                rest = tail;
+            }
+            for (a, b) in redo.data.iter().zip(&whole.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunking changed bits");
+            }
+        }
     }
 
     #[test]

@@ -34,8 +34,23 @@
 //! it merely parked (all workers could end up waiting on queued tasks no
 //! thread is left to run), so a *worker* waiting on [`Pool::run`] helps
 //! drain the queue instead of sleeping.  Task sets form a strict DAG
-//! (batch item → GEMM chunks, chunks are leaves), so helping always makes
-//! progress and every `run` returns.
+//! (batch item → GEMM chunks, attention head → logits/context chunks;
+//! chunks are leaves), so helping always makes progress and every `run`
+//! returns.
+//!
+//! # Nested fan-out budget accounting
+//!
+//! A caller that fans out at two levels — batch items that each run
+//! GEMMs, or attention heads that each run their per-head GEMM chain —
+//! must not plan `outer × threads` worth of parallelism against a
+//! `threads`-sized budget: the pool's hard bound keeps the *execution*
+//! honest, but over-planning still queues far more fine-grained chunk
+//! tasks than can ever run at once, paying queue traffic for no extra
+//! concurrency.  [`split_budget`] is the one shared accounting rule:
+//! give the outer level `min(threads, items)` lanes and each task the
+//! integer share `threads / outer` for its nested GEMM plans, so
+//! `outer · inner ≤ threads` always.  `encode_batch`'s batch-vs-GEMM
+//! split and the encoder's head-vs-GEMM split both route through it.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -103,6 +118,24 @@ std::thread_local! {
 }
 
 static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// Split a thread budget between an outer fan-out of `items` independent
+/// tasks and the nested parallelism inside each task (see the module's
+/// "Nested fan-out budget accounting" section).  Returns
+/// `(outer, inner)`: the number of outer lanes to fan out and the thread
+/// cap each lane passes to its nested GEMM plans.  Guarantees
+/// `outer ≥ 1`, `inner ≥ 1` and `outer · inner ≤ max(threads, 1)`, so
+/// stacked fan-outs never plan past the budget.  Purely an accounting
+/// rule — it never changes how work is *partitioned*, only how many
+/// chunk tasks get queued, so outputs stay bitwise identical for any
+/// budget (pinned end-to-end by `tests/attn_prop.rs` and
+/// `encode_batch_matches_looped_encode_bitwise`).
+#[inline]
+pub fn split_budget(threads: usize, items: usize) -> (usize, usize) {
+    let outer = threads.min(items).max(1);
+    let inner = (threads / outer).max(1);
+    (outer, inner)
+}
 
 /// The process-wide pool, sized to [`super::gemm::max_threads()`] at first
 /// use.  Call [`super::gemm::set_max_threads`] (or export
@@ -473,6 +506,27 @@ mod tests {
             Box::new(|| {}),
         ];
         pool.run(tasks);
+    }
+
+    #[test]
+    fn split_budget_never_overplans() {
+        // outer·inner ≤ budget, both at least 1, for every combination
+        for threads in 0..=17usize {
+            for items in 0..=9usize {
+                let (outer, inner) = split_budget(threads, items);
+                assert!(outer >= 1 && inner >= 1, "t={threads} i={items}");
+                assert!(
+                    outer * inner <= threads.max(1),
+                    "t={threads} i={items}: {outer}×{inner} over budget"
+                );
+                assert!(outer <= items.max(1), "more lanes than items");
+            }
+        }
+        // the documented splits: 8 threads over 2 heads → 2 lanes of 4;
+        // 2 threads over 8 items → 2 lanes of 1; serial stays serial
+        assert_eq!(split_budget(8, 2), (2, 4));
+        assert_eq!(split_budget(2, 8), (2, 1));
+        assert_eq!(split_budget(1, 8), (1, 1));
     }
 
     #[test]

@@ -19,14 +19,17 @@
 //!   is cached inside the scratch, so the per-layer loop builds no
 //!   `format!` name strings and runs no `Params::lookup` linear scans.
 //! - **Scratch reuse.** All per-layer buffers (pre-LN hidden, packed
-//!   q/k/v, compressed K̄/V̄, attention logits, context, FFN activations,
-//!   and the GEMM kernel's lane-aligned B-panel packing buffer)
+//!   q/k/v, context, FFN activations, the GEMM kernel's lane-aligned
+//!   B-panel packing buffer, and one `HeadScratch` arena entry per
+//!   attention head — compressed K̄/V̄, logits, dense context block and a
+//!   private GEMM workspace, so parallel heads never contend)
 //!   live in an [`EncodeScratch`] passed through [`encode_with`]; after a
 //!   warmup call the forward pass performs **zero heap allocations**
 //!   beyond its output matrix in the serial regime (GEMMs below the
 //!   parallel threshold or an intra-GEMM cap of 1 — pinned by the
 //!   counting-allocator test in `tests/alloc_free.rs`; above the
-//!   threshold each parallel GEMM also queues a few boxed pool tasks).
+//!   threshold each parallel GEMM and the per-head attention fan-out
+//!   also queue a few boxed pool tasks).
 //! - **Packed weight panels.** Every GEMM whose B operand is a weight
 //!   matrix (QKV/O, FFN, MLM dense, classifier head, tied output
 //!   embedding) consults an optional [`PackedWeights`] cache attached to
@@ -42,17 +45,23 @@
 //!   operand there), so no per-call weight pack exists for them.
 //! - **Threading.** Large GEMMs row-partition into tasks on the
 //!   process-wide persistent pool (see [`crate::linalg::pool`]);
-//!   [`encode_batch`] additionally parallelises across examples on the
-//!   same pool, so however many serving buckets are busy, compute never
-//!   exceeds the one global thread budget.  Both levels are
-//!   bitwise-deterministic, so `encode_batch` output equals looped
-//!   [`encode`] output exactly, for any budget or pool size.
+//!   attention fans out **per head** on the same pool (each head's
+//!   projection→logits→softmax→context chain is independent), with the
+//!   scale+softmax folded into the logits GEMM's per-row-chunk epilogue
+//!   ([`gemm::matmul_nt_softmax_view_in`]) so the data is transformed
+//!   while cache-hot; [`encode_batch`] additionally parallelises across
+//!   examples.  Every level splits the one global thread budget via
+//!   [`pool::split_budget`], so however many serving buckets are busy,
+//!   compute never exceeds it.  All levels are bitwise-deterministic, so
+//!   head-parallel equals head-serial, fused equals unfused, and
+//!   `encode_batch` output equals looped [`encode`] output exactly, for
+//!   any budget or pool size (pinned by `tests/attn_prop.rs`).
 
 use super::config::{Attention, ModelConfig, ProjMode, Sharing};
 use super::params::{PackedWeights, ParamHandle, Params};
 use crate::linalg::{
-    gelu_inplace, gemm, layer_norm_rows, pool, softmax_rows, Dtype, Mat,
-    MatView, PackedPanels,
+    gelu_inplace, gemm, layer_norm_rows, pool, softmax_scaled_rows, Dtype,
+    Mat, MatView, PackedPanels,
 };
 use std::cell::Cell;
 use std::sync::{Arc, Mutex};
@@ -348,6 +357,56 @@ fn weight_gemm(
 }
 // lint: end-hot-path
 
+/// Per-head scratch arena: every buffer one attention head's
+/// projection→logits→softmax→context chain touches, plus a private GEMM
+/// workspace (pack buffers + kernel selection) so heads running in
+/// parallel never contend on packing scratch.  One entry per head lives
+/// in [`EncodeScratch`]; entries start empty, grow to steady state on
+/// the first call and are reused warm — the head-serial regime stays
+/// allocation-free (pinned by `tests/alloc_free.rs`).
+struct HeadScratch {
+    /// Compressed K̄ (k × dh); identity heads alias K directly instead.
+    kbar: Mat,
+    /// Compressed V̄ (k × dh).
+    vbar: Mat,
+    /// Attention logits / post-softmax P (n × k) for the serving path
+    /// (capture writes the returned matrices instead).
+    logits: Mat,
+    /// Dense context block (n × dh) for the head-parallel regime — the
+    /// disjoint per-head column windows of the shared ctx interleave by
+    /// row, so parallel heads cannot soundly hold `&mut` slices of one
+    /// buffer; each computes densely here and the owner copies back
+    /// after the join.  The head-serial regime writes ctx directly.
+    ctxh: Mat,
+    /// Private GEMM workspace, kept in kernel-selection lockstep with
+    /// the owning scratch on every attention call.
+    gs: gemm::GemmScratch,
+}
+
+impl HeadScratch {
+    fn new() -> HeadScratch {
+        HeadScratch {
+            kbar: Mat::zeros(0, 0),
+            vbar: Mat::zeros(0, 0),
+            logits: Mat::zeros(0, 0),
+            ctxh: Mat::zeros(0, 0),
+            gs: gemm::GemmScratch::new(),
+        }
+    }
+}
+
+/// Where one head's context block lands (see [`HeadScratch::ctxh`]).
+enum CtxSlot<'a> {
+    /// Head-serial regime: write the head's disjoint `col0..col0+dh`
+    /// column window of the shared ctx buffer directly.
+    Window(&'a mut Mat, usize),
+    /// Head-parallel regime: write the head's dense arena block; the
+    /// owner copies it into ctx after the join.  Same kernels, same
+    /// per-element operation order as the window path — only output
+    /// addresses differ, so values are bitwise identical.
+    Arena,
+}
+
 /// Reusable workspace for the encoder forward pass.
 ///
 /// Holds every per-layer buffer so repeated [`encode_with`] calls touch
@@ -373,13 +432,16 @@ pub struct EncodeScratch {
     /// standalone (uncached) MLM callers, keyed by `(generation,
     /// handle)` — built on the first call, not on every call.
     mlm_pack: Option<(u64, ParamHandle, PackedPanels)>,
+    /// Per-head attention arena, grown to `n_heads` entries on first use
+    /// (never truncated — a smaller config simply uses a prefix).
+    heads: Vec<HeadScratch>,
+    /// Pin attention to the head-serial, unfused-softmax baseline (see
+    /// [`EncodeScratch::use_serial_attention`]).
+    attn_serial: bool,
     h: Mat,
     q: Mat,
     k: Mat,
     v: Mat,
-    kbar: Mat,
-    vbar: Mat,
-    logits: Mat,
     ctx: Mat,
     attn_out: Mat,
     ff: Mat,
@@ -410,13 +472,12 @@ impl EncodeScratch {
             gs: gemm::GemmScratch::new(),
             packed: None,
             mlm_pack: None,
+            heads: Vec::new(),
+            attn_serial: false,
             h: z(),
             q: z(),
             k: z(),
             v: z(),
-            kbar: z(),
-            vbar: z(),
-            logits: z(),
             ctx: z(),
             attn_out: z(),
             ff: z(),
@@ -434,6 +495,18 @@ impl EncodeScratch {
         self.gs.set_scalar(scalar);
     }
 
+    /// Pin attention to the head-serial, unfused-softmax baseline: heads
+    /// run one after another with the full thread budget, and the
+    /// scale+softmax runs as a standalone [`softmax_scaled_rows`] pass
+    /// after the logits GEMM instead of inside its row-chunk epilogue.
+    /// Bitwise-identical output to the default head-parallel fused
+    /// pipeline (pinned by `tests/attn_prop.rs`) — this knob exists so
+    /// benches can measure the attention-block speedup (`attn` record
+    /// tag) and tests can compare the two regimes.
+    pub fn use_serial_attention(&mut self, serial: bool) {
+        self.attn_serial = serial;
+    }
+
     /// Attach pre-packed weight panels (e.g. a registry entry's): every
     /// weight-side GEMM whose `(generation, handle)` matches skips its
     /// per-call pack/quantization entirely; mismatches (a stale cache
@@ -443,17 +516,23 @@ impl EncodeScratch {
     }
 
     /// Data pointers of the per-layer buffers (including the GEMM
-    /// packing buffer) — lets tests assert the buffers are reused (not
-    /// reallocated) across calls.
+    /// packing buffers and every per-head arena entry) — lets tests
+    /// assert the buffers are reused (not reallocated) across calls.
     pub fn buffer_ptrs(&self) -> Vec<*const f32> {
         let mut ptrs: Vec<*const f32> = [
-            &self.h, &self.q, &self.k, &self.v, &self.kbar, &self.vbar,
-            &self.logits, &self.ctx, &self.attn_out, &self.ff, &self.ff2,
+            &self.h, &self.q, &self.k, &self.v, &self.ctx, &self.attn_out,
+            &self.ff, &self.ff2,
         ]
         .iter()
         .map(|m| m.data.as_ptr() as *const f32)
         .collect();
         ptrs.push(self.gs.pack.as_ptr());
+        for hs in &self.heads {
+            for m in [&hs.kbar, &hs.vbar, &hs.logits, &hs.ctxh] {
+                ptrs.push(m.data.as_ptr() as *const f32);
+            }
+            ptrs.push(hs.gs.pack.as_ptr());
+        }
         ptrs
     }
 }
@@ -583,10 +662,124 @@ pub fn encode_with(
     EncodeOut { hidden: x, capture }
 }
 
+/// One head's full attention chain: E/F (or pool/conv) compression,
+/// fused logits GEMM + scale/softmax epilogue, and the context GEMM.
+/// All buffers come from the head's own [`HeadScratch`] arena entry, so
+/// any number of these can run concurrently (on disjoint entries);
+/// `inner` caps the nested intra-GEMM parallelism (see
+/// [`pool::split_budget`]).  `capture` redirects the logits buffer to a
+/// caller-owned output matrix — same code path, so captured P is
+/// bitwise-equal to the serving path by construction.
+#[allow(clippy::too_many_arguments)]
+fn head_chain(
+    params: &Params,
+    proj: ProjHandles,
+    convw: Option<(&[f32], &[f32])>,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    head: usize,
+    dh: usize,
+    lk: usize,
+    scale: f32,
+    fused: bool,
+    inner: usize,
+    hs: &mut HeadScratch,
+    capture: Option<&mut Mat>,
+    ctx: CtxSlot<'_>,
+) {
+    let n = q.rows;
+    let qcol = head * dh;
+    let qh = MatView::cols(q, qcol, dh);
+    let kh = MatView::cols(k, qcol, dh);
+    let vh = MatView::cols(v, qcol, dh);
+    let HeadScratch { kbar, vbar, logits, ctxh, gs } = hs;
+
+    let (kb, vb) = match proj {
+        ProjHandles::Identity => (kh, vh),
+        ProjHandles::Pool => {
+            pool_into(kh, lk, kbar);
+            pool_into(vh, lk, vbar);
+            (MatView::full(kbar), MatView::full(vbar))
+        }
+        ProjHandles::Conv { .. } => {
+            let (we, wf) = convw.expect("conv weights resolved by caller");
+            conv_into(kh, we, lk, kbar);
+            conv_into(vh, wf, lk, vbar);
+            (MatView::full(kbar), MatView::full(vbar))
+        }
+        ProjHandles::Linear { e, f, per_head } => {
+            let (ev, fv) = if per_head {
+                (params.view3_at(e, head), params.view3_at(f, head))
+            } else {
+                (params.view_at(e), params.view_at(f))
+            };
+            // sliced to the live length — zero-copy views throughout
+            let (ev, fv) = (ev.first_cols(n), fv.first_cols(n));
+            gemm::matmul_view_in(
+                ev,
+                kh,
+                kbar,
+                gemm::plan_threads(ev.rows, n, dh, inner),
+                gs,
+            );
+            gemm::matmul_view_in(
+                fv,
+                vh,
+                vbar,
+                gemm::plan_threads(fv.rows, n, dh, inner),
+                gs,
+            );
+            (MatView::full(kbar), MatView::full(vbar))
+        }
+    };
+    // P = softmax(q·K̄ᵀ · scale) — (n × m).  Head logits land in the
+    // head's arena buffer, or — when capture is requested — directly in
+    // the returned per-head matrix.  The fused entry applies the scale
+    // and row-wise softmax inside each GEMM row chunk while it is
+    // cache-hot; the unfused baseline runs the same math as one
+    // standalone scaled-softmax pass — bitwise-equal either way.
+    let lbuf: &mut Mat = match capture {
+        Some(m) => m,
+        None => logits,
+    };
+    let lplan = gemm::plan_threads(n, dh, kb.rows, inner);
+    if fused {
+        gemm::matmul_nt_softmax_view_in(qh, kb, lbuf, scale, lplan, gs);
+    } else {
+        gemm::matmul_nt_view_in(qh, kb, lbuf, lplan, gs);
+        softmax_scaled_rows(lbuf, scale);
+    }
+    let (ctx, col0) = match ctx {
+        CtxSlot::Window(m, c0) => (m, c0),
+        CtxSlot::Arena => {
+            // fully overwritten by the context GEMM below
+            ctxh.resize_for_overwrite(n, dh);
+            (&mut *ctxh, 0)
+        }
+    };
+    gemm::matmul_view_cols_in(
+        MatView::full(lbuf),
+        vb,
+        ctx,
+        col0,
+        gemm::plan_threads(n, kb.rows, dh, inner),
+        gs,
+    );
+}
+
 /// Multi-head attention for one layer.  Reads `scratch.h`, leaves the
 /// block output in `scratch.attn_out`; returns the per-head P matrices
 /// when `capture` is set (empty vec otherwise).  All parameters come in
 /// through pre-resolved handles — no name building, no lookups.
+///
+/// Heads fan out as pool tasks when the thread budget allows (each
+/// writes its own [`HeadScratch`] arena entry), splitting the budget
+/// between head-level and intra-GEMM parallelism via
+/// [`pool::split_budget`]; a budget of 1 — or the
+/// [`EncodeScratch::use_serial_attention`] baseline — runs the same
+/// [`head_chain`] inline per head.  Both regimes, fused or not, produce
+/// bitwise-identical output (pinned by `tests/attn_prop.rs`).
 fn attention_layer(
     params: &Params,
     cfg: &ModelConfig,
@@ -600,22 +793,22 @@ fn attention_layer(
         threads,
         gs,
         packed,
+        heads,
+        attn_serial,
         h,
         q,
         k,
         v,
-        kbar,
-        vbar,
-        logits,
         ctx,
         attn_out,
         ..
     } = scratch;
     let threads = *threads;
+    let attn_serial = *attn_serial;
     let pw = packed.as_deref();
     let n = h.rows;
     let d = cfg.d_model;
-    let heads = cfg.n_heads;
+    let n_heads = cfg.n_heads;
     let dh = cfg.d_head();
     let plan = |kdim: usize, ncols: usize| gemm::plan_threads(n, kdim, ncols, threads);
 
@@ -626,62 +819,97 @@ fn attention_layer(
     weight_gemm(params, lh.wv, false, pw, MatView::full(h), v, plan(d, d), gs);
     v.add_row_vec(params.slice(lh.bv));
 
-    ctx.reset(n, d);
-    let mut mats = Vec::with_capacity(if capture { heads } else { 0 });
+    // grow the per-head arena to n_heads entries once; `push` touches the
+    // allocator only while the arena is below steady state (the entries
+    // themselves are empty Mats), so warm calls stay allocation-free
+    while heads.len() < n_heads {
+        heads.push(HeadScratch::new());
+    }
+    // keep every head's kernel selection in lockstep with the scratch
+    for hs in heads.iter_mut().take(n_heads) {
+        hs.gs.set_scalar(gs.is_scalar());
+    }
+
+    // every column window of ctx is fully overwritten by exactly one
+    // head's context GEMM — no zeroing pass needed
+    ctx.resize_for_overwrite(n, d);
     let scale = 1.0 / (dh as f32).sqrt();
     let lk = cfg.layer_k(layer);
-    let convw = match lh.proj {
+    let proj = lh.proj;
+    let convw = match proj {
         ProjHandles::Conv { e, f } => Some((params.slice(e), params.slice(f))),
         _ => None,
     };
+    let fused = !attn_serial;
+    let (q, k, v) = (&*q, &*k, &*v);
 
-    for head in 0..heads {
-        let col0 = head * dh;
-        let qh = MatView::cols(q, col0, dh);
-        let kh = MatView::cols(k, col0, dh);
-        let vh = MatView::cols(v, col0, dh);
-
-        let (kb, vb) = match lh.proj {
-            ProjHandles::Identity => (kh, vh),
-            ProjHandles::Pool => {
-                pool_into(kh, lk, kbar);
-                pool_into(vh, lk, vbar);
-                (MatView::full(kbar), MatView::full(vbar))
-            }
-            ProjHandles::Conv { .. } => {
-                let (we, wf) = convw.unwrap();
-                conv_into(kh, we, lk, kbar);
-                conv_into(vh, wf, lk, vbar);
-                (MatView::full(kbar), MatView::full(vbar))
-            }
-            ProjHandles::Linear { e, f, per_head } => {
-                let (ev, fv) = if per_head {
-                    (params.view3_at(e, head), params.view3_at(f, head))
-                } else {
-                    (params.view_at(e), params.view_at(f))
-                };
-                // sliced to the live length — zero-copy views throughout
-                let (ev, fv) = (ev.first_cols(n), fv.first_cols(n));
-                gemm::matmul_view_in(ev, kh, kbar, gemm::plan_threads(ev.rows, n, dh, threads), gs);
-                gemm::matmul_view_in(fv, vh, vbar, gemm::plan_threads(fv.rows, n, dh, threads), gs);
-                (MatView::full(kbar), MatView::full(vbar))
-            }
-        };
-        // P = softmax(q kbar^T * scale)  — (n × m).  Head logits land in
-        // the reused scratch buffer, or — when capture is requested —
-        // directly in the returned per-head matrix (the old path computed
-        // into scratch and then pushed `logits.clone()`, a redundant
-        // allocate-and-copy per head per layer).
-        let lbuf: &mut Mat = if capture {
+    let mut mats = Vec::with_capacity(if capture { n_heads } else { 0 });
+    if capture {
+        for _ in 0..n_heads {
+            // opt-in diagnostics: capture output matrices rightly
+            // allocate; preallocated here so the fan-out below can hand
+            // each head its own disjoint output slot
+            // lint: allow(hot-path-alloc) opt-in capture output
             mats.push(Mat::zeros(0, 0));
-            mats.last_mut().unwrap()
-        } else {
-            &mut *logits
-        };
-        gemm::matmul_nt_view_in(qh, kb, lbuf, plan(dh, kb.rows), gs);
-        lbuf.scale(scale);
-        softmax_rows(lbuf);
-        gemm::matmul_view_cols_in(MatView::full(lbuf), vb, ctx, col0, plan(kb.rows, dh), gs);
+        }
+    }
+
+    let (head_workers, inner) = pool::split_budget(threads, n_heads);
+    if head_workers <= 1 || attn_serial {
+        // head-serial regime: each head runs inline with the full
+        // budget; this is the warm zero-alloc path tests/alloc_free.rs
+        // pins (no task boxes)
+        let mut caps = mats.iter_mut();
+        for (head, hs) in heads.iter_mut().enumerate().take(n_heads) {
+            head_chain(
+                params,
+                proj,
+                convw,
+                q,
+                k,
+                v,
+                head,
+                dh,
+                lk,
+                scale,
+                fused,
+                threads,
+                hs,
+                caps.next(),
+                CtxSlot::Window(&mut *ctx, head * dh),
+            );
+        }
+    } else {
+        // head-parallel fan-out: one boxed task per head, each writing
+        // its own arena entry (and capture slot).  The task boxes are
+        // the same documented exception as gemm's fork path — the
+        // serial regime above stays allocation-free, pinned by
+        // tests/alloc_free.rs.
+        // lint: allow-start(hot-path-alloc) per-head pool fan-out boxes
+        let mut caps = mats.iter_mut();
+        let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(n_heads);
+        for (head, hs) in heads.iter_mut().enumerate().take(n_heads) {
+            let cap = caps.next();
+            tasks.push(Box::new(move || {
+                head_chain(
+                    params, proj, convw, q, k, v, head, dh, lk, scale,
+                    fused, inner, hs, cap, CtxSlot::Arena,
+                );
+            }));
+        }
+        pool::global().run(tasks);
+        // lint: allow-end(hot-path-alloc)
+        // serial copy-back: each head's dense arena block lands in its
+        // disjoint ctx column window — pure data movement of values the
+        // same kernels computed, so output is bitwise identical to the
+        // head-serial regime
+        for (head, hs) in heads.iter().enumerate().take(n_heads) {
+            let col0 = head * dh;
+            for r in 0..n {
+                ctx.row_mut(r)[col0..col0 + dh]
+                    .copy_from_slice(hs.ctxh.row(r));
+            }
+        }
     }
 
     weight_gemm(
@@ -792,14 +1020,15 @@ where
         s.packed = packed.cloned();
         s
     };
-    let t = threads.min(n_items).max(1);
+    // one shared accounting rule for stacked fan-outs (see
+    // pool::split_budget): batch lanes × per-item budget ≤ threads
+    let (t, inner) = pool::split_budget(threads, n_items);
     if t <= 1 {
         // single worker keeps the caller's full budget for intra-GEMM
         // threading (which still respects the cap it was handed)
         let mut scratch = make_scratch(threads.max(1));
         return (0..n_items).map(|i| f(&mut scratch, i)).collect();
     }
-    let inner = (threads / t).max(1);
     let out: Mutex<Vec<Option<Mat>>> =
         Mutex::new((0..n_items).map(|_| None).collect());
     let (f, out_ref, make_scratch) = (&f, &out, &make_scratch);
@@ -1522,6 +1751,53 @@ mod tests {
             {
                 assert_eq!(a.data, b.data, "capture diverged");
             }
+        }
+    }
+
+    #[test]
+    fn serial_attention_baseline_matches_fused_bitwise() {
+        // head-parallel fused pipeline vs head-serial unfused baseline,
+        // across thread budgets — bitwise (tier-1 smoke; the release
+        // attn_prop suite sweeps projection flavors and ragged lengths)
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 100);
+        let t = toks(&cfg, cfg.max_len, 100);
+        let mut fused = EncodeScratch::with_threads(8);
+        let want = encode_with(&p, &cfg, &t, false, &mut fused).hidden;
+        for threads in [1usize, 2, 8] {
+            for serial in [false, true] {
+                let mut s = EncodeScratch::with_threads(threads);
+                s.use_serial_attention(serial);
+                let got = encode_with(&p, &cfg, &t, false, &mut s).hidden;
+                assert_eq!(
+                    got.data, want.data,
+                    "threads={threads} serial={serial} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn captured_p_matches_serving_path_bitwise() {
+        // capture=true routes through the same fused epilogue as
+        // serving: the hidden output is unchanged, and the captured P
+        // matrices agree bitwise across thread budgets and regimes
+        let cfg = ModelConfig::tiny();
+        let p = Params::init(&cfg, 101);
+        let t = toks(&cfg, 13, 101);
+        let mut plain = EncodeScratch::with_threads(8);
+        let served = encode_with(&p, &cfg, &t, false, &mut plain).hidden;
+        let mut cap8 = EncodeScratch::with_threads(8);
+        let out8 = encode_with(&p, &cfg, &t, true, &mut cap8);
+        assert_eq!(out8.hidden.data, served.data, "capture changed output");
+        let mats8 = out8.capture.unwrap().matrices;
+        let mut cap1 = EncodeScratch::with_threads(1);
+        cap1.use_serial_attention(true);
+        let out1 = encode_with(&p, &cfg, &t, true, &mut cap1);
+        assert_eq!(out1.hidden.data, served.data);
+        let mats1 = out1.capture.unwrap().matrices;
+        for (a, b) in mats8.iter().flatten().zip(mats1.iter().flatten()) {
+            assert_eq!(a.data, b.data, "captured P diverged across regimes");
         }
     }
 

@@ -99,6 +99,37 @@ fn encode_with_allocates_only_its_output_after_warmup() {
 }
 
 #[test]
+fn head_scratch_arena_serves_both_attention_regimes_warm() {
+    // the per-head `HeadScratch` arena (kbar/vbar/logits/quant buffers)
+    // is grown once and shared by the fused-epilogue default and the
+    // `use_serial_attention` baseline: after warming *either* regime,
+    // switching to the other must not regrow anything — both run the
+    // same buffers through the same shapes, so a warm call still
+    // allocates exactly its output matrix
+    let cfg = ModelConfig::tiny();
+    let params = Params::init(&cfg, 5);
+    let tokens: Vec<u32> =
+        (0..cfg.max_len).map(|i| (i % cfg.vocab_size) as u32).collect();
+    let mut scratch = EncodeScratch::with_threads(1);
+    for _ in 0..2 {
+        encode_with(&params, &cfg, &tokens, false, &mut scratch);
+    }
+    for serial in [false, true, false] {
+        scratch.use_serial_attention(serial);
+        let before = allocs_now();
+        let out = encode_with(&params, &cfg, &tokens, false, &mut scratch);
+        let after = allocs_now();
+        assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+        assert_eq!(
+            after - before,
+            1,
+            "warm encode_with (serial={serial}) must allocate exactly \
+             once: the head arena is not shared across regimes"
+        );
+    }
+}
+
+#[test]
 fn warm_batched_call_skips_name_resolution() {
     // a batch handed prebuilt registry handles must not pay the
     // per-scratch name-resolve pass (≥ 17 `format!` allocations per

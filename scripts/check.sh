@@ -114,6 +114,12 @@ fi
 # slow for debug tier-1 (a smoke case runs there), full sweep in release
 cargo test --release --test kernel_prop -- --ignored
 
+# attention-regime property tests: random ragged lengths across all
+# four projection flavors, checked bitwise across thread budgets
+# {1, 2, 8}, head-serial vs head-parallel fan-out, fused-epilogue vs
+# standalone softmax, and the capture path (a smoke case runs in tier-1)
+cargo test --release --test attn_prop -- --ignored
+
 # int8 quantized-path property tests: random shapes vs the spec-replay
 # oracle (bitwise), the analytic quantization-error bound, thread-count
 # determinism, and f32-panel/unpacked bitwise equivalence
