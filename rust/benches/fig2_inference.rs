@@ -26,12 +26,17 @@
 //! accuracy-delta record: per-row MLM argmax agreement and max
 //! relative logit error of int8 vs the f32 reference.
 //!
-//! Every record also carries an `attn` tag (`fused` | `serial`), and a
-//! dedicated section measures **both attention regimes in one
-//! invocation**: the head-parallel pipeline with the scale/softmax GEMM
-//! epilogue vs the head-serial standalone-softmax baseline
-//! (`EncodeScratch::use_serial_attention`), bitwise-identical by
-//! `tests/attn_prop.rs`, at seq_len up to 4096.
+//! Every record also carries an `attn` tag (`fused` | `serial`) and a
+//! `fusion` tag (`full` | `softmax-only` | `none`), and a dedicated
+//! section measures **all three fusion regimes in one invocation** on
+//! both weight dtypes: "full" folds bias + GELU + residual + LayerNorm
+//! into every encoder GEMM epilogue
+//! (`EncodeScratch::use_epilogue_fusion`), "softmax-only" keeps just the
+//! attention scale/softmax epilogue with pool-striped standalone passes
+//! elsewhere, and "none" adds head-serial attention
+//! (`EncodeScratch::use_serial_attention`) with every elementwise pass
+//! standalone — all bitwise-identical per dtype by `tests/attn_prop.rs`,
+//! at seq_len up to 4096.
 //!
 //! Run: `cargo bench --bench fig2_inference`
 
@@ -63,8 +68,10 @@ fn model(n: usize, attention: Attention, k: usize) -> (ModelConfig, Params) {
 fn record(
     bench_name: &str,
     kernel: &str,
+    dtype: &str,
     attention: &str,
     attn: &str,
+    fusion: &str,
     n: usize,
     k: usize,
     batch: usize,
@@ -74,14 +81,18 @@ fn record(
     bench_record(&[
         ("bench", Json::Str(bench_name.into())),
         ("kernel", Json::Str(kernel.into())),
-        // the scalar/SIMD ablation always runs full-precision weights;
-        // the int8 flavor is measured in the cached-panel section below
-        ("dtype", Json::Str("f32".into())),
+        ("dtype", Json::Str(dtype.into())),
         ("attention", Json::Str(attention.into())),
         // attention-block regime: "fused" = head-parallel fan-out with
         // the scale/softmax GEMM epilogue, "serial" = head-serial with
         // the standalone softmax pass (the pre-change execution shape)
         ("attn", Json::Str(attn.into())),
+        // epilogue-fusion regime: "full" = bias/GELU/residual/LN folded
+        // into every encoder GEMM epilogue; "softmax-only" = only the
+        // attention scale/softmax epilogue stays fused (the pre-change
+        // state, pool-striped standalone passes elsewhere); "none" =
+        // head-serial attention with every elementwise pass standalone
+        ("fusion", Json::Str(fusion.into())),
         ("seq_len", Json::Num(n as f64)),
         ("k", Json::Num(k as f64)),
         ("batch", Json::Num(batch as f64)),
@@ -223,12 +234,12 @@ fn main() {
                 st.mean / lt.mean
             );
             records.push(record(
-                "encode", kernel, "standard", "fused", n, 0, 1, threads,
-                st.mean * 1e9 / n as f64,
+                "encode", kernel, "f32", "standard", "fused", "full", n, 0,
+                1, threads, st.mean * 1e9 / n as f64,
             ));
             records.push(record(
-                "encode", kernel, "linformer", "fused", n, 64, 1, threads,
-                lt.mean * 1e9 / n as f64,
+                "encode", kernel, "f32", "linformer", "fused", "full", n,
+                64, 1, threads, lt.mean * 1e9 / n as f64,
             ));
         }
     }
@@ -277,46 +288,71 @@ fn main() {
             looped.mean / batched.mean
         );
         records.push(record(
-            "encode_batch", gemm::kernel_name(), "linformer", "fused", n,
-            64, 8, threads, batched.mean * 1e9 / total_tokens as f64,
+            "encode_batch", gemm::kernel_name(), "f32", "linformer",
+            "fused", "full", n, 64, 8, threads,
+            batched.mean * 1e9 / total_tokens as f64,
         ));
     }
 
-    // -- attention regimes: fused epilogue vs head-serial baseline -------
-    // Both regimes are bitwise-identical (pinned by tests/attn_prop.rs),
-    // so this pair isolates the execution-shape win: per-head pool
-    // fan-out + scale/softmax folded into the logits-GEMM epilogue vs
-    // head-serial attention with the standalone softmax pass.
-    println!("\n== attention regimes (linformer k=64, batch 1): fused vs serial ==");
-    println!("{:>6} {:>16} {:>16} {:>9}", "n", "fused", "serial", "speedup");
+    // -- fusion regimes: full vs softmax-only vs none, both dtypes -------
+    // All three regimes are bitwise-identical per dtype (pinned by
+    // tests/attn_prop.rs and the encoder suite), so the triple isolates
+    // the fusion win at each level: "full" folds bias/GELU/residual/LN
+    // into every encoder GEMM epilogue, "softmax-only" keeps just the
+    // attention scale/softmax epilogue (pool-striped standalone passes
+    // elsewhere — the pre-change state), "none" adds head-serial
+    // attention with every elementwise pass standalone.  Both weight
+    // flavors run through the cached-panel serving path in the same
+    // invocation.
+    println!(
+        "\n== fusion regimes (linformer k=64, batch 1): full / softmax-only / none =="
+    );
+    println!(
+        "{:>6} {:>6} {:>16} {:>16} {:>16}",
+        "n", "dtype", "full", "softmax-only", "none"
+    );
+    const REGIMES: [(&str, bool, bool); 3] = [
+        // (tag, epilogue fusion, serial attention)
+        ("full", true, false),
+        ("softmax-only", false, false),
+        ("none", false, true),
+    ];
     for n in [512usize, 1024, 4096] {
         let iters = if n >= 4096 { 2 } else { 4 };
         let (cfg, params) = model(n, Attention::Linformer, 64);
+        let handles = EncoderHandles::build(&params, &cfg);
         let tokens: Vec<u32> =
             (0..n).map(|_| rng.below(cfg.vocab_size as u32)).collect();
-        let mut scratch = EncodeScratch::new();
-        let mut sums = Vec::with_capacity(2);
-        for serial in [false, true] {
-            scratch.use_serial_attention(serial);
-            let t = bench(1, iters, || {
-                encode_with(&params, &cfg, &tokens, false, &mut scratch)
-                    .hidden
-                    .data[0]
-            });
-            let attn = if serial { "serial" } else { "fused" };
-            records.push(record(
-                "encode_attn", gemm::kernel_name(), "linformer", attn, n,
-                64, 1, threads, t.mean * 1e9 / n as f64,
-            ));
-            sums.push(t);
+        for dtype in [Dtype::F32, Dtype::Int8] {
+            let packed = Arc::new(handles.pack_weights(&params, dtype));
+            let mut scratch = EncodeScratch::new();
+            scratch.set_packed(Some(Arc::clone(&packed)));
+            let mut sums = Vec::with_capacity(REGIMES.len());
+            for &(fusion, fused, serial) in &REGIMES {
+                scratch.use_epilogue_fusion(fused);
+                scratch.use_serial_attention(serial);
+                let t = bench(1, iters, || {
+                    encode_with(&params, &cfg, &tokens, false, &mut scratch)
+                        .hidden
+                        .data[0]
+                });
+                let attn = if serial { "serial" } else { "fused" };
+                records.push(record(
+                    "encode_fusion", gemm::kernel_name(), dtype.name(),
+                    "linformer", attn, fusion, n, 64, 1, threads,
+                    t.mean * 1e9 / n as f64,
+                ));
+                sums.push(t);
+            }
+            println!(
+                "{:>6} {:>6} {:>16} {:>16} {:>16}",
+                n,
+                dtype.name(),
+                sums[0].human(),
+                sums[1].human(),
+                sums[2].human()
+            );
         }
-        println!(
-            "{:>6} {:>16} {:>16} {:>8.2}x",
-            n,
-            sums[0].human(),
-            sums[1].human(),
-            sums[1].mean / sums[0].mean
-        );
     }
 
     // -- cached panels: f32 vs int8 weight flavors in one run ------------
@@ -366,6 +402,7 @@ fn main() {
                 ("dtype", Json::Str(dtype.name().into())),
                 ("attention", Json::Str("linformer".into())),
                 ("attn", Json::Str("fused".into())),
+                ("fusion", Json::Str("full".into())),
                 ("seq_len", Json::Num(n as f64)),
                 ("k", Json::Num(64.0)),
                 ("batch", Json::Num(1.0)),

@@ -11,12 +11,14 @@
 //! reproduction target.
 //!
 //! Measurements are appended to `BENCH_encoder.json` (section
-//! `table3_efficiency`), tagged with the GEMM kernel, weight dtype and
-//! attention regime (`attn`: `fused` | `serial`) that produced them;
-//! one invocation measures the grid under **both** the SIMD microkernel
-//! and the pre-SIMD scalar baseline (before/after records), and under
-//! both attention regimes — the fused-epilogue head-parallel pipeline
-//! and the head-serial standalone-softmax baseline.  This grid runs
+//! `table3_efficiency`), tagged with the GEMM kernel, weight dtype,
+//! attention regime (`attn`: `fused` | `serial`) and epilogue-fusion
+//! regime (`fusion`: `full` | `softmax-only` | `none`) that produced
+//! them; one invocation measures the grid under **both** the SIMD
+//! microkernel and the pre-SIMD scalar baseline (before/after records),
+//! and under all three fusion regimes — bias/GELU/residual/LN folded
+//! into every encoder GEMM epilogue, the softmax-only pre-change state,
+//! and the head-serial everything-standalone baseline.  This grid runs
 //! full-precision weights — the paired
 //! f32/int8 cached-panel measurement (and its accuracy delta) lives in
 //! `cargo bench --bench fig2_inference`.
@@ -57,23 +59,34 @@ fn main() {
     let ns = [256usize, 512, 1024];
     let mut records = Vec::new();
 
-    // both kernels AND both attention regimes in one run (before/after):
-    // the default SIMD microkernel under the fused-epilogue head-parallel
-    // attention, the same kernel under the head-serial standalone-softmax
-    // baseline (bitwise-identical — pinned by tests/attn_prop.rs), and
-    // the pre-SIMD scalar baseline
+    // both kernels AND all three fusion regimes in one run
+    // (before/after): the default SIMD microkernel with full epilogue
+    // fusion, the same kernel in the softmax-only pre-change state, the
+    // head-serial everything-standalone baseline (all bitwise-identical
+    // — pinned by tests/attn_prop.rs), and the pre-SIMD scalar baseline
     let mut rng = Pcg32::seeded(1);
-    for (scalar, serial) in [(false, false), (false, true), (true, false)] {
+    for (scalar, serial, fused) in [
+        (false, false, true),  // SIMD, fusion: full
+        (false, false, false), // SIMD, fusion: softmax-only
+        (false, true, false),  // SIMD, fusion: none
+        (true, false, true),   // scalar baseline (fusion: full)
+    ] {
         let kernel = if scalar { "scalar" } else { gemm::kernel_name() };
         let attn = if serial { "serial" } else { "fused" };
+        let fusion = match (fused, serial) {
+            (true, _) => "full",
+            (false, false) => "softmax-only",
+            (false, true) => "none",
+        };
         let mut scratch = EncodeScratch::new();
         if scalar {
             scratch.use_scalar_kernel(true);
         }
         scratch.use_serial_attention(serial);
+        scratch.use_epilogue_fusion(fused);
         println!(
             "== Table 3 (left): measured time speedup, rust reference \
-             [{kernel} kernel, {attn} attention] =="
+             [{kernel} kernel, {attn} attention, {fusion} fusion] =="
         );
         print!("{:>7}", "n\\k");
         for k in ks {
@@ -110,6 +123,7 @@ fn main() {
                     ("kernel", Json::Str(kernel.into())),
                     ("dtype", Json::Str("f32".into())),
                     ("attn", Json::Str(attn.into())),
+                    ("fusion", Json::Str(fusion.into())),
                     ("seq_len", Json::Num(n as f64)),
                     ("k", Json::Num(k as f64)),
                     ("batch", Json::Num(1.0)),

@@ -184,6 +184,16 @@ pub struct GemmScratch {
     /// Route through the pre-SIMD scalar kernels (baseline measurements
     /// and bitwise cross-checks).  Defaults to the `scalar-gemm` feature.
     scalar: bool,
+    /// Static activation-quantization override for the int8 packed
+    /// path: when set, the next int8 GEMM quantizes A at this magnitude
+    /// via [`kernel::quantize_activations_with_max`] instead of running
+    /// the per-call max-abs scan.  One-shot — consumed (taken) by the
+    /// call, so a stale override can never leak into an unrelated GEMM.
+    act_max_override: Option<f32>,
+    /// Max-abs the last int8 activation *scan* observed (calibration
+    /// feed for the encoder's EWMA scale cache).  Untouched when the
+    /// scan was skipped via the override.
+    observed_act_max: f32,
 }
 
 impl Default for GemmScratch {
@@ -203,17 +213,14 @@ impl GemmScratch {
             apack: PackBuf::new(),
             qa: PackBufI8::new(),
             scalar: cfg!(feature = "scalar-gemm"),
+            act_max_override: None,
+            observed_act_max: 0.0,
         }
     }
 
     /// A scratch pinned to the scalar reference kernels.
     pub fn scalar() -> GemmScratch {
-        GemmScratch {
-            pack: PackBuf::new(),
-            apack: PackBuf::new(),
-            qa: PackBufI8::new(),
-            scalar: true,
-        }
+        GemmScratch { scalar: true, ..GemmScratch::new() }
     }
 
     pub fn set_scalar(&mut self, scalar: bool) {
@@ -222,6 +229,17 @@ impl GemmScratch {
 
     pub fn is_scalar(&self) -> bool {
         self.scalar
+    }
+
+    /// Arm the one-shot static activation-quantization override for the
+    /// next int8 packed GEMM (see the field docs).
+    pub fn set_act_max_override(&mut self, max_abs: Option<f32>) {
+        self.act_max_override = max_abs;
+    }
+
+    /// Max-abs observed by the most recent int8 activation scan.
+    pub fn observed_act_max(&self) -> f32 {
+        self.observed_act_max
     }
 }
 
@@ -313,17 +331,44 @@ pub fn matmul_view_in(
     threads: usize,
     gs: &mut GemmScratch,
 ) {
+    matmul_epilogue_view_in(a, b, c, threads, gs, |_chunk, _row0| {});
+}
+
+/// [`matmul_view_in`] with the per-row-chunk **epilogue hook** (see
+/// [`matmul_nt_epilogue_view_in`], where the hook contract is
+/// documented): `epi(chunk, row0)` runs over each whole-row chunk
+/// (width == stride == n) immediately after that chunk's kernel, inside
+/// the same pool task — on the scalar path, the SIMD path, and the
+/// packed-A tall-`m` path alike.  With `k == 0` the product contracts
+/// to all-zeros and the hook still runs once over the zeroed output, so
+/// fused semantics match the unfused sequence there too.
+pub fn matmul_epilogue_view_in<'env, E>(
+    a: MatView<'env>,
+    b: MatView<'env>,
+    c: &'env mut Mat,
+    threads: usize,
+    gs: &mut GemmScratch,
+    epi: E,
+) where
+    E: Fn(&mut [f32], usize) + Send + Copy + 'env,
+{
     assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
     let (m, n, k) = (a.rows, b.cols, a.cols);
     if gs.scalar || k == 0 {
         // the scalar kernel accumulates into a zeroed C, and k == 0
         // contracts to all-zeros with no kernel pass at all
         c.reset(m, n);
-        if gs.scalar && m > 0 && n > 0 && k > 0 {
-            run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
-                mm_rows(a, b, chunk, row0)
-            });
+        if m == 0 || n == 0 {
+            return;
         }
+        if k == 0 {
+            epi(&mut c.data[..], 0);
+            return;
+        }
+        run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
+            mm_rows(a, b, chunk, row0);
+            epi(chunk, row0);
+        });
         return;
     }
     // SIMD path: every element is stored by a first-k-block tile whose
@@ -336,11 +381,13 @@ pub fn matmul_view_in(
     if m >= kernel::A_PACK_MIN_M {
         let apack = kernel::pack_a(&mut gs.apack, a);
         run_row_chunks_mr(&mut c.data, m, threads, n, move |chunk, row0| {
-            kernel::gemm_chunk_pa(apack, row0, packed, k, n, chunk, n, 0)
+            kernel::gemm_chunk_pa(apack, row0, packed, k, n, chunk, n, 0);
+            epi(chunk, row0);
         });
     } else {
         run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
-            kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
+            kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0);
+            epi(chunk, row0);
         });
     }
 }
@@ -385,8 +432,8 @@ pub fn matmul_nt_softmax_view_in(
     });
 }
 
-/// The per-row-range **epilogue hook** shared by the `A·Bᵀ` entry
-/// points: `epi(chunk, row0)` runs over each row chunk (whole rows,
+/// The per-row-range **epilogue hook** on the `A·Bᵀ` entry points:
+/// `epi(chunk, row0)` runs over each row chunk (whole rows,
 /// width == stride == n) immediately after that chunk's GEMM kernel,
 /// inside the same pool task.  Because chunks partition M and the hook
 /// sees only complete rows, any per-row epilogue is invariant across
@@ -394,7 +441,7 @@ pub fn matmul_nt_softmax_view_in(
 /// the product contracts to all-zeros and the hook still runs once over
 /// the zeroed output, so fused semantics match the unfused sequence
 /// there too.
-fn matmul_nt_epilogue_view_in<'env, E>(
+pub fn matmul_nt_epilogue_view_in<'env, E>(
     a: MatView<'env>,
     b: MatView<'env>,
     c: &'env mut Mat,
@@ -452,6 +499,27 @@ pub fn matmul_view_cols_in(
     threads: usize,
     gs: &mut GemmScratch,
 ) {
+    matmul_view_cols_epilogue_in(a, b, out, col0, threads, gs, |_row, _r| {});
+}
+
+/// [`matmul_view_cols_in`] with the epilogue hook.  The output chunk is
+/// *strided* here (the column block is a window of a wider matrix), so
+/// the hook cannot receive the raw chunk — instead `epi(row, r)` runs
+/// once per **live-width row** (`row.len() == b.cols`, global row index
+/// `r`) immediately after that row's kernel stores.  Per-row invocation
+/// is itself a whole-row chunking, so every chunking-invariant row
+/// primitive composes unchanged.
+pub fn matmul_view_cols_epilogue_in<'env, E>(
+    a: MatView<'env>,
+    b: MatView<'env>,
+    out: &'env mut Mat,
+    col0: usize,
+    threads: usize,
+    gs: &mut GemmScratch,
+    epi: E,
+) where
+    E: Fn(&mut [f32], usize) + Send + Copy + 'env,
+{
     assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
     assert_eq!(a.rows, out.rows, "matmul_view_cols: row mismatch");
     assert!(col0 + b.cols <= out.cols, "matmul_view_cols: column overflow");
@@ -461,13 +529,19 @@ pub fn matmul_view_cols_in(
     }
     if gs.scalar {
         run_row_chunks(&mut out.data, m, threads, stride, move |chunk, row0| {
-            mm_cols_rows(a, b, chunk, row0, col0, stride)
+            mm_cols_rows(a, b, chunk, row0, col0, stride);
+            for (i, row) in chunk.chunks_mut(stride).enumerate() {
+                epi(&mut row[col0..col0 + w], row0 + i);
+            }
         });
         return;
     }
     let packed = kernel::pack_nn(&mut gs.pack, b);
     run_row_chunks(&mut out.data, m, threads, stride, move |chunk, row0| {
-        kernel::gemm_chunk(a, row0, packed, k, w, chunk, stride, col0)
+        kernel::gemm_chunk(a, row0, packed, k, w, chunk, stride, col0);
+        for (i, row) in chunk.chunks_mut(stride).enumerate() {
+            epi(&mut row[col0..col0 + w], row0 + i);
+        }
     });
 }
 // lint: end-hot-path
@@ -612,6 +686,24 @@ pub fn matmul_packed_view_in(
     threads: usize,
     gs: &mut GemmScratch,
 ) {
+    matmul_packed_epilogue_view_in(a, w, c, threads, gs, |_chunk, _row0| {});
+}
+
+/// [`matmul_packed_view_in`] with the epilogue hook.  On the int8
+/// flavor the hook composes with the kernel's dequant epilogue: the
+/// chunk handed to `epi` already holds dequantized f32 values, so the
+/// same row primitives serve both dtypes.  With `k == 0` the hook runs
+/// once over the zeroed output like every other entry point.
+pub fn matmul_packed_epilogue_view_in<'env, E>(
+    a: MatView<'env>,
+    w: &'env PackedPanels,
+    c: &'env mut Mat,
+    threads: usize,
+    gs: &mut GemmScratch,
+    epi: E,
+) where
+    E: Fn(&mut [f32], usize) + Send + Copy + 'env,
+{
     assert_eq!(
         a.cols,
         w.k(),
@@ -622,6 +714,9 @@ pub fn matmul_packed_view_in(
     let (m, n, k) = (a.rows, w.n(), w.k());
     if k == 0 {
         c.reset(m, n);
+        if m > 0 && n > 0 {
+            epi(&mut c.data[..], 0);
+        }
         return;
     }
     c.resize_for_overwrite(m, n);
@@ -634,25 +729,425 @@ pub fn matmul_packed_view_in(
             if m >= kernel::A_PACK_MIN_M {
                 let apack = kernel::pack_a(&mut gs.apack, a);
                 run_row_chunks_mr(&mut c.data, m, threads, n, move |chunk, row0| {
-                    kernel::gemm_chunk_pa(apack, row0, packed, k, n, chunk, n, 0)
+                    kernel::gemm_chunk_pa(apack, row0, packed, k, n, chunk, n, 0);
+                    epi(chunk, row0);
                 });
             } else {
                 run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
-                    kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0)
+                    kernel::gemm_chunk(a, row0, packed, k, n, chunk, n, 0);
+                    epi(chunk, row0);
                 });
             }
         }
         PackedPanels::Int8 { buf, scales, .. } => {
             let packed = buf.flat(kernel::panels(n) * k * kernel::NR);
-            let (aq, a_scale) = kernel::quantize_activations(&mut gs.qa, a);
+            let (aq, a_scale) = quantize_acts(gs, a);
             let scales = scales.as_slice();
             run_row_chunks(&mut c.data, m, threads, n, move |chunk, row0| {
                 kernel::gemm_chunk_i8(
                     aq, row0, packed, k, n, a_scale, scales, chunk, n, 0,
-                )
+                );
+                epi(chunk, row0);
             });
         }
     }
+}
+
+/// Activation quantization for the int8 packed path: honours (and
+/// consumes) the one-shot static-scale override, falling back to the
+/// dynamic max-abs scan — whose observed magnitude is recorded for the
+/// encoder's calibration EWMA.
+fn quantize_acts<'a>(gs: &'a mut GemmScratch, a: MatView<'_>) -> (&'a [i8], f32) {
+    match gs.act_max_override.take() {
+        Some(max_abs) => {
+            kernel::quantize_activations_with_max(&mut gs.qa, a, max_abs)
+        }
+        None => {
+            let (aq, a_scale) = kernel::quantize_activations(&mut gs.qa, a);
+            gs.observed_act_max = a_scale * 127.0;
+            (aq, a_scale)
+        }
+    }
+}
+
+// The **aux-buffer epilogue** entry points: the residual flavour of the
+// hook.  `epi(c_chunk, x_chunk, [h_chunk,] row0)` receives the GEMM
+// output chunk read-only plus the *same row range* of one or two
+// auxiliary m×n buffers mutably — how `x += c + bias` (and the next
+// block's `h = layer_norm(x)`) runs inside the GEMM's own fork, with
+// `chunks_mut` guaranteeing the row ranges are disjoint across tasks.
+// The invariance argument is unchanged: chunks partition M identically
+// across all buffers, and the hook is pure per-row.
+
+/// C = A·B with the two-buffer aux epilogue (see above): `x` is m×n,
+/// split at the same row boundaries as C.  With `k == 0` the hook runs
+/// once over the zeroed product.
+pub fn matmul_aux_epilogue_view_in<'env, E>(
+    a: MatView<'env>,
+    b: MatView<'env>,
+    c: &'env mut Mat,
+    x: &'env mut [f32],
+    threads: usize,
+    gs: &mut GemmScratch,
+    epi: E,
+) where
+    E: Fn(&[f32], &mut [f32], usize) + Send + Copy + 'env,
+{
+    assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    assert_eq!(x.len(), m * n, "aux buffer shape mismatch");
+    if gs.scalar || k == 0 {
+        c.reset(m, n);
+        if m == 0 || n == 0 {
+            return;
+        }
+        if k == 0 {
+            epi(&c.data[..], x, 0);
+            return;
+        }
+        run_row_chunks2(&mut c.data, x, m, threads, n, false, move |cc, xc, row0| {
+            mm_rows(a, b, cc, row0);
+            epi(cc, xc, row0);
+        });
+        return;
+    }
+    c.resize_for_overwrite(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let packed = kernel::pack_nn(&mut gs.pack, b);
+    if m >= kernel::A_PACK_MIN_M {
+        let apack = kernel::pack_a(&mut gs.apack, a);
+        run_row_chunks2(&mut c.data, x, m, threads, n, true, move |cc, xc, row0| {
+            kernel::gemm_chunk_pa(apack, row0, packed, k, n, cc, n, 0);
+            epi(cc, xc, row0);
+        });
+    } else {
+        run_row_chunks2(&mut c.data, x, m, threads, n, false, move |cc, xc, row0| {
+            kernel::gemm_chunk(a, row0, packed, k, n, cc, n, 0);
+            epi(cc, xc, row0);
+        });
+    }
+}
+
+/// C = A·B with the three-buffer aux epilogue: `x` and `h` are m×n,
+/// split at the same row boundaries as C.
+pub fn matmul_aux2_epilogue_view_in<'env, E>(
+    a: MatView<'env>,
+    b: MatView<'env>,
+    c: &'env mut Mat,
+    x: &'env mut [f32],
+    h: &'env mut [f32],
+    threads: usize,
+    gs: &mut GemmScratch,
+    epi: E,
+) where
+    E: Fn(&[f32], &mut [f32], &mut [f32], usize) + Send + Copy + 'env,
+{
+    assert_eq!(a.cols, b.rows, "matmul inner dims: {} vs {}", a.cols, b.rows);
+    let (m, n, k) = (a.rows, b.cols, a.cols);
+    assert_eq!(x.len(), m * n, "aux buffer shape mismatch");
+    assert_eq!(h.len(), m * n, "aux buffer shape mismatch");
+    if gs.scalar || k == 0 {
+        c.reset(m, n);
+        if m == 0 || n == 0 {
+            return;
+        }
+        if k == 0 {
+            epi(&c.data[..], x, h, 0);
+            return;
+        }
+        run_row_chunks3(
+            &mut c.data,
+            x,
+            h,
+            m,
+            threads,
+            n,
+            false,
+            move |cc, xc, hc, row0| {
+                mm_rows(a, b, cc, row0);
+                epi(cc, xc, hc, row0);
+            },
+        );
+        return;
+    }
+    c.resize_for_overwrite(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let packed = kernel::pack_nn(&mut gs.pack, b);
+    if m >= kernel::A_PACK_MIN_M {
+        let apack = kernel::pack_a(&mut gs.apack, a);
+        run_row_chunks3(
+            &mut c.data,
+            x,
+            h,
+            m,
+            threads,
+            n,
+            true,
+            move |cc, xc, hc, row0| {
+                kernel::gemm_chunk_pa(apack, row0, packed, k, n, cc, n, 0);
+                epi(cc, xc, hc, row0);
+            },
+        );
+    } else {
+        run_row_chunks3(
+            &mut c.data,
+            x,
+            h,
+            m,
+            threads,
+            n,
+            false,
+            move |cc, xc, hc, row0| {
+                kernel::gemm_chunk(a, row0, packed, k, n, cc, n, 0);
+                epi(cc, xc, hc, row0);
+            },
+        );
+    }
+}
+
+/// C = A·W (pre-packed weight panels) with the two-buffer aux epilogue.
+/// On int8 panels the hook composes with the dequant epilogue, exactly
+/// like [`matmul_packed_epilogue_view_in`].
+pub fn matmul_packed_aux_epilogue_view_in<'env, E>(
+    a: MatView<'env>,
+    w: &'env PackedPanels,
+    c: &'env mut Mat,
+    x: &'env mut [f32],
+    threads: usize,
+    gs: &mut GemmScratch,
+    epi: E,
+) where
+    E: Fn(&[f32], &mut [f32], usize) + Send + Copy + 'env,
+{
+    assert_eq!(
+        a.cols,
+        w.k(),
+        "matmul_packed inner dims: {} vs {}",
+        a.cols,
+        w.k()
+    );
+    let (m, n, k) = (a.rows, w.n(), w.k());
+    assert_eq!(x.len(), m * n, "aux buffer shape mismatch");
+    if k == 0 {
+        c.reset(m, n);
+        if m > 0 && n > 0 {
+            epi(&c.data[..], x, 0);
+        }
+        return;
+    }
+    c.resize_for_overwrite(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    match w {
+        PackedPanels::F32 { buf, .. } => {
+            let packed = buf.flat(kernel::panels(n) * k * kernel::NR);
+            if m >= kernel::A_PACK_MIN_M {
+                let apack = kernel::pack_a(&mut gs.apack, a);
+                run_row_chunks2(
+                    &mut c.data,
+                    x,
+                    m,
+                    threads,
+                    n,
+                    true,
+                    move |cc, xc, row0| {
+                        kernel::gemm_chunk_pa(apack, row0, packed, k, n, cc, n, 0);
+                        epi(cc, xc, row0);
+                    },
+                );
+            } else {
+                run_row_chunks2(
+                    &mut c.data,
+                    x,
+                    m,
+                    threads,
+                    n,
+                    false,
+                    move |cc, xc, row0| {
+                        kernel::gemm_chunk(a, row0, packed, k, n, cc, n, 0);
+                        epi(cc, xc, row0);
+                    },
+                );
+            }
+        }
+        PackedPanels::Int8 { buf, scales, .. } => {
+            let packed = buf.flat(kernel::panels(n) * k * kernel::NR);
+            let (aq, a_scale) = quantize_acts(gs, a);
+            let scales = scales.as_slice();
+            run_row_chunks2(
+                &mut c.data,
+                x,
+                m,
+                threads,
+                n,
+                false,
+                move |cc, xc, row0| {
+                    kernel::gemm_chunk_i8(
+                        aq, row0, packed, k, n, a_scale, scales, cc, n, 0,
+                    );
+                    epi(cc, xc, row0);
+                },
+            );
+        }
+    }
+}
+
+/// C = A·W (pre-packed weight panels) with the three-buffer aux
+/// epilogue.
+pub fn matmul_packed_aux2_epilogue_view_in<'env, E>(
+    a: MatView<'env>,
+    w: &'env PackedPanels,
+    c: &'env mut Mat,
+    x: &'env mut [f32],
+    h: &'env mut [f32],
+    threads: usize,
+    gs: &mut GemmScratch,
+    epi: E,
+) where
+    E: Fn(&[f32], &mut [f32], &mut [f32], usize) + Send + Copy + 'env,
+{
+    assert_eq!(
+        a.cols,
+        w.k(),
+        "matmul_packed inner dims: {} vs {}",
+        a.cols,
+        w.k()
+    );
+    let (m, n, k) = (a.rows, w.n(), w.k());
+    assert_eq!(x.len(), m * n, "aux buffer shape mismatch");
+    assert_eq!(h.len(), m * n, "aux buffer shape mismatch");
+    if k == 0 {
+        c.reset(m, n);
+        if m > 0 && n > 0 {
+            epi(&c.data[..], x, h, 0);
+        }
+        return;
+    }
+    c.resize_for_overwrite(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    match w {
+        PackedPanels::F32 { buf, .. } => {
+            let packed = buf.flat(kernel::panels(n) * k * kernel::NR);
+            if m >= kernel::A_PACK_MIN_M {
+                let apack = kernel::pack_a(&mut gs.apack, a);
+                run_row_chunks3(
+                    &mut c.data,
+                    x,
+                    h,
+                    m,
+                    threads,
+                    n,
+                    true,
+                    move |cc, xc, hc, row0| {
+                        kernel::gemm_chunk_pa(apack, row0, packed, k, n, cc, n, 0);
+                        epi(cc, xc, hc, row0);
+                    },
+                );
+            } else {
+                run_row_chunks3(
+                    &mut c.data,
+                    x,
+                    h,
+                    m,
+                    threads,
+                    n,
+                    false,
+                    move |cc, xc, hc, row0| {
+                        kernel::gemm_chunk(a, row0, packed, k, n, cc, n, 0);
+                        epi(cc, xc, hc, row0);
+                    },
+                );
+            }
+        }
+        PackedPanels::Int8 { buf, scales, .. } => {
+            let packed = buf.flat(kernel::panels(n) * k * kernel::NR);
+            let (aq, a_scale) = quantize_acts(gs, a);
+            let scales = scales.as_slice();
+            run_row_chunks3(
+                &mut c.data,
+                x,
+                h,
+                m,
+                threads,
+                n,
+                false,
+                move |cc, xc, hc, row0| {
+                    kernel::gemm_chunk_i8(
+                        aq, row0, packed, k, n, a_scale, scales, cc, n, 0,
+                    );
+                    epi(cc, xc, hc, row0);
+                },
+            );
+        }
+    }
+}
+
+/// Pool-striped standalone elementwise pass: split `data` (`m` rows of
+/// width `stride`) into up to `threads` whole-row stripes and run
+/// `f(chunk, row0)` over each on the global pool.  This is the shape of
+/// every *surviving* post-GEMM pass (the epilogue-fusion-off regimes,
+/// the embedding-stage layer norm): same whole-row chunking as the GEMM
+/// epilogue, so for any chunking-invariant row primitive the result is
+/// bitwise identical to one serial call at any thread count — and no
+/// O(m·n) pass runs single-threaded while the pool sits idle.
+pub fn stripe_rows<'env, F>(
+    data: &'env mut [f32],
+    m: usize,
+    threads: usize,
+    stride: usize,
+    f: F,
+) where
+    F: Fn(&mut [f32], usize) + Send + Copy + 'env,
+{
+    if m == 0 || stride == 0 {
+        return;
+    }
+    run_row_chunks(data, m, threads, stride, f);
+}
+
+/// Two-buffer flavour of [`stripe_rows`] for `dst = f(src)` passes
+/// (the one-pass `layer_norm_rows_into` copy-and-normalize): `dst` and
+/// `src` are both `m` rows of width `stride`, split at the same row
+/// boundaries.
+pub fn stripe_rows2<'env, F>(
+    dst: &'env mut [f32],
+    src: &'env [f32],
+    m: usize,
+    threads: usize,
+    stride: usize,
+    f: F,
+) where
+    F: Fn(&mut [f32], &[f32], usize) + Send + Copy + 'env,
+{
+    debug_assert_eq!(dst.len(), src.len());
+    if m == 0 || stride == 0 {
+        return;
+    }
+    let t = threads.clamp(1, m);
+    if t == 1 {
+        f(dst, src, 0);
+        return;
+    }
+    let rows_per = (m + t - 1) / t;
+    // lint: allow-start(hot-path-alloc) — same per-fork task boxes as
+    // run_row_chunks above
+    let tasks: Vec<pool::Task<'env>> = dst
+        .chunks_mut(rows_per * stride)
+        .zip(src.chunks(rows_per * stride))
+        .enumerate()
+        .map(|(w, (dc, sc))| {
+            Box::new(move || f(dc, sc, w * rows_per)) as pool::Task<'env>
+        })
+        .collect();
+    // lint: allow-end(hot-path-alloc)
+    pool::global().run(tasks);
 }
 // lint: end-hot-path
 
@@ -767,6 +1262,92 @@ fn run_row_chunks_mr<'env, K>(
         .enumerate()
         .map(|(w, chunk)| {
             Box::new(move || kernel(chunk, w * rows_per)) as pool::Task<'env>
+        })
+        .collect();
+    // lint: allow-end(hot-path-alloc)
+    pool::global().run(tasks);
+}
+
+/// [`run_row_chunks`] over **three lockstep buffers**: `c` (the GEMM
+/// output), `x` and `h` are all m rows of width `stride`, split at the
+/// same row boundaries (optionally [`kernel::MR`]-aligned for the
+/// packed-A kernel), so each pool task owns the *same* row range of all
+/// three.  This is how the residual epilogue gets mutable access to
+/// disjoint rows of the residual stream and the next block's normalized
+/// input without any aliasing: `chunks_mut` hands out non-overlapping
+/// slices, no unsafe required.
+fn run_row_chunks3<'env, K>(
+    c: &'env mut [f32],
+    x: &'env mut [f32],
+    h: &'env mut [f32],
+    m: usize,
+    threads: usize,
+    stride: usize,
+    mr_align: bool,
+    kernel: K,
+) where
+    K: Fn(&mut [f32], &mut [f32], &mut [f32], usize) + Send + Copy + 'env,
+{
+    debug_assert_eq!(c.len(), m * stride);
+    debug_assert_eq!(x.len(), m * stride);
+    debug_assert_eq!(h.len(), m * stride);
+    let t = threads.clamp(1, m);
+    if t == 1 {
+        kernel(c, x, h, 0);
+        return;
+    }
+    let mut rows_per = (m + t - 1) / t;
+    if mr_align {
+        rows_per = (rows_per + kernel::MR - 1) / kernel::MR * kernel::MR;
+    }
+    // lint: allow-start(hot-path-alloc) — same per-fork task boxes as
+    // run_row_chunks above
+    let tasks: Vec<pool::Task<'env>> = c
+        .chunks_mut(rows_per * stride)
+        .zip(x.chunks_mut(rows_per * stride))
+        .zip(h.chunks_mut(rows_per * stride))
+        .enumerate()
+        .map(|(w, ((cc, xc), hc))| {
+            Box::new(move || kernel(cc, xc, hc, w * rows_per))
+                as pool::Task<'env>
+        })
+        .collect();
+    // lint: allow-end(hot-path-alloc)
+    pool::global().run(tasks);
+}
+
+/// Two-buffer flavour of [`run_row_chunks3`] (no `h` stream — the
+/// final-layer residual epilogue norms `x` in place).
+fn run_row_chunks2<'env, K>(
+    c: &'env mut [f32],
+    x: &'env mut [f32],
+    m: usize,
+    threads: usize,
+    stride: usize,
+    mr_align: bool,
+    kernel: K,
+) where
+    K: Fn(&mut [f32], &mut [f32], usize) + Send + Copy + 'env,
+{
+    debug_assert_eq!(c.len(), m * stride);
+    debug_assert_eq!(x.len(), m * stride);
+    let t = threads.clamp(1, m);
+    if t == 1 {
+        kernel(c, x, 0);
+        return;
+    }
+    let mut rows_per = (m + t - 1) / t;
+    if mr_align {
+        rows_per = (rows_per + kernel::MR - 1) / kernel::MR * kernel::MR;
+    }
+    // lint: allow-start(hot-path-alloc) — same per-fork task boxes as
+    // run_row_chunks above
+    let tasks: Vec<pool::Task<'env>> = c
+        .chunks_mut(rows_per * stride)
+        .zip(x.chunks_mut(rows_per * stride))
+        .enumerate()
+        .map(|(w, (cc, xc))| {
+            Box::new(move || kernel(cc, xc, w * rows_per)) as pool::Task<'env>
         })
         .collect();
     // lint: allow-end(hot-path-alloc)
@@ -1626,5 +2207,261 @@ mod tests {
         let mut scal = Mat::zeros(0, 0);
         matmul_view_in(av, bv, &mut scal, 1, &mut GemmScratch::scalar());
         assert_f32s_match(&scal.data, &serial.data, 64, "packed-A vs scalar");
+    }
+
+    #[test]
+    fn fused_epilogue_matches_two_pass_bitwise_on_every_entry() {
+        // tentpole invariant: one affine per-row hook, every entry point
+        // × kernel × thread plan; shapes cross A_PACK_MIN_M and include
+        // the k == 0 degenerate (hook over the zeroed product).  The
+        // reference applies the *same* hook as one serial whole-matrix
+        // pass after a plain GEMM — whole-row chunks + pure per-row hook
+        // ⇒ bitwise equality at any chunking.
+        let mut rng = Pcg32::seeded(61);
+        for &(m, k, n) in
+            &[(1, 1, 1), (7, 5, 9), (33, 12, 17), (50, 24, 21), (4, 0, 6)]
+        {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let bt = rand_mat(&mut rng, n, k);
+            let (av, bv, btv) =
+                (MatView::full(&a), MatView::full(&b), MatView::full(&bt));
+            let epi = move |chunk: &mut [f32], row0: usize| {
+                for (i, row) in chunk.chunks_mut(n).enumerate() {
+                    let r = (row0 + i) as f32 + 1.0;
+                    for (j, x) in row.iter_mut().enumerate() {
+                        *x = *x * 0.5 + r + j as f32 * 0.25;
+                    }
+                }
+            };
+            for scalar in [false, true] {
+                let mut gs = if scalar {
+                    GemmScratch::scalar()
+                } else {
+                    let mut gs = GemmScratch::new();
+                    gs.set_scalar(false);
+                    gs
+                };
+                let mut want = Mat::zeros(0, 0);
+                matmul_view_in(av, bv, &mut want, 1, &mut gs);
+                epi(&mut want.data[..], 0);
+                for threads in [1usize, 2, 3, 7] {
+                    let mut got = Mat::zeros(0, 0);
+                    matmul_epilogue_view_in(
+                        av, bv, &mut got, threads, &mut gs, epi,
+                    );
+                    assert_eq!(
+                        got.data, want.data,
+                        "NN ({m},{k},{n}) scalar={scalar} t={threads}"
+                    );
+                }
+                let mut want = Mat::zeros(0, 0);
+                matmul_nt_view_in(av, btv, &mut want, 1, &mut gs);
+                epi(&mut want.data[..], 0);
+                for threads in [1usize, 3, 7] {
+                    let mut got = Mat::zeros(0, 0);
+                    matmul_nt_epilogue_view_in(
+                        av, btv, &mut got, threads, &mut gs, epi,
+                    );
+                    assert_eq!(
+                        got.data, want.data,
+                        "NT ({m},{k},{n}) scalar={scalar} t={threads}"
+                    );
+                }
+                // column-window of a wider matrix: the hook runs per
+                // live-width row instead of per chunk
+                let blank = Mat::filled_with(m, n + 5, |_, _| 9.0);
+                let mut want = blank.clone();
+                matmul_view_cols_in(av, bv, &mut want, 3, 1, &mut gs);
+                for r in 0..m {
+                    epi(&mut want.data[r * (n + 5) + 3..][..n], r);
+                }
+                for threads in [1usize, 2, 7] {
+                    let mut got = blank.clone();
+                    matmul_view_cols_epilogue_in(
+                        av, bv, &mut got, 3, threads, &mut gs, epi,
+                    );
+                    assert_eq!(
+                        got.data, want.data,
+                        "cols ({m},{k},{n}) scalar={scalar} t={threads}"
+                    );
+                }
+            }
+            // cached panels always run the microkernel — no scalar loop;
+            // on int8 the hook composes with the dequant epilogue
+            let mut gs = GemmScratch::new();
+            gs.set_scalar(false);
+            for dtype in [Dtype::F32, Dtype::Int8] {
+                let p = PackedPanels::pack(dtype, bv, false);
+                let mut want = Mat::zeros(0, 0);
+                matmul_packed_view_in(av, &p, &mut want, 1, &mut gs);
+                epi(&mut want.data[..], 0);
+                for threads in [1usize, 2, 7] {
+                    let mut got = Mat::zeros(0, 0);
+                    matmul_packed_epilogue_view_in(
+                        av, &p, &mut got, threads, &mut gs, epi,
+                    );
+                    assert_eq!(
+                        got.data, want.data,
+                        "packed {dtype} ({m},{k},{n}) t={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aux_epilogue_entries_match_striped_two_pass_bitwise() {
+        // the residual-flavour hooks: x += c + f(row) (aux) plus
+        // h = 2·x + ½ (aux2), run inside the GEMM fork vs as one serial
+        // pass after a plain GEMM — bitwise equal on every kernel,
+        // thread plan, and dtype, including the k == 0 degenerate and
+        // the MR-rounded packed-A chunking (m = 50)
+        let mut rng = Pcg32::seeded(62);
+        for &(m, k, n) in &[(3, 5, 4), (50, 24, 21), (4, 0, 6)] {
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let (av, bv) = (MatView::full(&a), MatView::full(&b));
+            let mut x0 = vec![0.0f32; m * n];
+            let mut h0 = vec![0.0f32; m * n];
+            rng.fill_normal(&mut x0, 1.0);
+            rng.fill_normal(&mut h0, 1.0);
+            let epi2 = move |cc: &[f32], xc: &mut [f32], row0: usize| {
+                for (i, (crow, xrow)) in
+                    cc.chunks(n).zip(xc.chunks_mut(n)).enumerate()
+                {
+                    let r = (row0 + i) as f32 * 0.125;
+                    for (xv, cv) in xrow.iter_mut().zip(crow) {
+                        *xv += *cv + r;
+                    }
+                }
+            };
+            let epi3 =
+                move |cc: &[f32], xc: &mut [f32], hc: &mut [f32], row0: usize| {
+                    epi2(cc, xc, row0);
+                    for (hv, xv) in hc.iter_mut().zip(&*xc) {
+                        *hv = *xv * 2.0 + 0.5;
+                    }
+                };
+            for scalar in [false, true] {
+                let mut gs = if scalar {
+                    GemmScratch::scalar()
+                } else {
+                    let mut gs = GemmScratch::new();
+                    gs.set_scalar(false);
+                    gs
+                };
+                let mut cref = Mat::zeros(0, 0);
+                matmul_view_in(av, bv, &mut cref, 1, &mut gs);
+                let mut xw = x0.clone();
+                let mut hw = h0.clone();
+                if m > 0 && n > 0 {
+                    epi3(&cref.data, &mut xw, &mut hw, 0);
+                }
+                for threads in [1usize, 2, 3, 7] {
+                    let ctx = format!(
+                        "aux ({m},{k},{n}) scalar={scalar} t={threads}"
+                    );
+                    let (mut c2, mut x2) = (Mat::zeros(0, 0), x0.clone());
+                    matmul_aux_epilogue_view_in(
+                        av, bv, &mut c2, &mut x2, threads, &mut gs, epi2,
+                    );
+                    assert_eq!(c2.data, cref.data, "{ctx}: c");
+                    assert_eq!(x2, xw, "{ctx}: x");
+                    let (mut c3, mut x3, mut h3) =
+                        (Mat::zeros(0, 0), x0.clone(), h0.clone());
+                    matmul_aux2_epilogue_view_in(
+                        av, bv, &mut c3, &mut x3, &mut h3, threads, &mut gs,
+                        epi3,
+                    );
+                    assert_eq!(c3.data, cref.data, "{ctx}: aux2 c");
+                    assert_eq!(x3, xw, "{ctx}: aux2 x");
+                    assert_eq!(h3, hw, "{ctx}: aux2 h");
+                }
+            }
+            // cached panels (microkernel only; int8 composes the hook
+            // with the dequant epilogue)
+            let mut gs = GemmScratch::new();
+            gs.set_scalar(false);
+            for dtype in [Dtype::F32, Dtype::Int8] {
+                let p = PackedPanels::pack(dtype, bv, false);
+                let mut cref = Mat::zeros(0, 0);
+                matmul_packed_view_in(av, &p, &mut cref, 1, &mut gs);
+                let mut xw = x0.clone();
+                let mut hw = h0.clone();
+                if m > 0 && n > 0 {
+                    epi3(&cref.data, &mut xw, &mut hw, 0);
+                }
+                for threads in [1usize, 3, 7] {
+                    let ctx =
+                        format!("packed-aux {dtype} ({m},{k},{n}) t={threads}");
+                    let (mut c2, mut x2) = (Mat::zeros(0, 0), x0.clone());
+                    matmul_packed_aux_epilogue_view_in(
+                        av, &p, &mut c2, &mut x2, threads, &mut gs, epi2,
+                    );
+                    assert_eq!(c2.data, cref.data, "{ctx}: c");
+                    assert_eq!(x2, xw, "{ctx}: x");
+                    let (mut c3, mut x3, mut h3) =
+                        (Mat::zeros(0, 0), x0.clone(), h0.clone());
+                    matmul_packed_aux2_epilogue_view_in(
+                        av, &p, &mut c3, &mut x3, &mut h3, threads, &mut gs,
+                        epi3,
+                    );
+                    assert_eq!(c3.data, cref.data, "{ctx}: aux2 c");
+                    assert_eq!(x3, xw, "{ctx}: aux2 x");
+                    assert_eq!(h3, hw, "{ctx}: aux2 h");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn act_max_override_is_one_shot_and_scale_exact() {
+        // a static override armed with the dynamic scan's own max must be
+        // bitwise invisible (identical scale → identical quantization),
+        // and the override must be consumed by exactly one GEMM — no
+        // leak into the next int8 call
+        let mut rng = Pcg32::seeded(63);
+        let a = rand_mat(&mut rng, 9, 31);
+        let b = rand_mat(&mut rng, 31, 13);
+        let p = PackedPanels::pack(Dtype::Int8, MatView::full(&b), false);
+        let mut gs = GemmScratch::new();
+        gs.set_scalar(false);
+        let mut want = Mat::zeros(0, 0);
+        matmul_packed_view_in(MatView::full(&a), &p, &mut want, 1, &mut gs);
+        let a_max = a.data.iter().fold(0.0f32, |s, v| s.max(v.abs()));
+        // the dynamic scan reported its magnitude for the encoder's EWMA
+        // (scale round-trips through /127·127, so compare with slack)
+        let obs = gs.observed_act_max();
+        assert!(
+            (obs - a_max).abs() <= a_max * 1e-5,
+            "observed {obs} vs scanned {a_max}"
+        );
+        gs.set_act_max_override(Some(a_max));
+        let mut got = Mat::zeros(0, 0);
+        matmul_packed_view_in(MatView::full(&a), &p, &mut got, 1, &mut gs);
+        assert_eq!(got.data, want.data, "static scale == dynamic max diverged");
+        // consumed: the next call rescans dynamically, same result
+        let mut again = Mat::zeros(0, 0);
+        matmul_packed_view_in(MatView::full(&a), &p, &mut again, 1, &mut gs);
+        assert_eq!(again.data, want.data, "override leaked into second call");
+        // a tighter cap saturates instead of rescaling: quantizing with
+        // half the true max clamps the peak element at ±127
+        let mut dbuf = PackBufI8::new();
+        let (q_dyn, s_dyn) =
+            kernel::quantize_activations(&mut dbuf, MatView::full(&a));
+        let mut cbuf = PackBufI8::new();
+        let (q_cap, s_cap) = kernel::quantize_activations_with_max(
+            &mut cbuf,
+            MatView::full(&a),
+            a_max * 0.5,
+        );
+        assert!(s_cap < s_dyn, "capped scale {s_cap} not below {s_dyn}");
+        assert_eq!(q_dyn.len(), q_cap.len());
+        assert_eq!(
+            q_cap.iter().map(|&v| (v as i32).abs()).max(),
+            Some(127),
+            "peak element did not saturate under the tight cap"
+        );
     }
 }

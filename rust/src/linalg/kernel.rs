@@ -554,13 +554,29 @@ pub fn quantize_activations<'a>(
     buf: &'a mut PackBufI8,
     a: MatView<'_>,
 ) -> (&'a [i8], f32) {
-    let (m, k) = (a.rows, a.cols);
+    let m = a.rows;
     let mut max_abs = 0.0f32;
     for i in 0..m {
         for &v in a.row(i) {
             max_abs = max_abs.max(v.abs());
         }
     }
+    quantize_activations_with_max(buf, a, max_abs)
+}
+
+/// [`quantize_activations`] with the max-abs scan replaced by a
+/// caller-supplied magnitude — the static activation-quantization path:
+/// the encoder's per-site scale cache observed the tensor range during
+/// calibration, so the warm call skips one full read of A.  Values
+/// beyond `max_abs` saturate at ±127, the same clamp the dynamic path
+/// applies to its own maximum.  Returns the quantized image and the
+/// tensor scale (`max_abs / 127`).
+pub fn quantize_activations_with_max<'a>(
+    buf: &'a mut PackBufI8,
+    a: MatView<'_>,
+    max_abs: f32,
+) -> (&'a [i8], f32) {
+    let (m, k) = (a.rows, a.cols);
     let (scale, inv) = quant_scale(max_abs);
     let dst = buf.flat_mut(m * k);
     for i in 0..m {

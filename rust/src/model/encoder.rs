@@ -43,6 +43,21 @@
 //!   packs nothing".  E/F projections are deliberately not cached: they
 //!   sit on the *A* side of their GEMMs (the activation is the packed
 //!   operand there), so no per-call weight pack exists for them.
+//! - **Full epilogue fusion.** Every elementwise tail the encoder used
+//!   to run as a separate serial pass over the (n×d)/(n×4d) activations
+//!   — bias adds, GELU, the residual adds and every layer norm — is
+//!   folded into the producing GEMM's per-row-chunk epilogue: bias+GELU
+//!   into the FFN up-projection, bias+residual+next-LN into the FFN
+//!   down-projection and the attention output projection (via the
+//!   aux-buffer entry points, which hand each GEMM chunk the matching
+//!   row range of the residual stream), bias into Q/K/V, the MLM head
+//!   and the classifier head.  The row primitives live in
+//!   [`crate::linalg`] and are shared verbatim by the pool-striped
+//!   standalone fallbacks ([`EncodeScratch::use_epilogue_fusion`]), so
+//!   fused and unfused output is bitwise identical across kernels,
+//!   thread budgets, chunkings and cached-vs-uncached panels (see
+//!   docs/INVARIANTS.md).  E/F projections carry no bias in this
+//!   architecture, so their GEMMs stay epilogue-free.
 //! - **Threading.** Large GEMMs row-partition into tasks on the
 //!   process-wide persistent pool (see [`crate::linalg::pool`]);
 //!   attention fans out **per head** on the same pool (each head's
@@ -60,8 +75,10 @@
 use super::config::{Attention, ModelConfig, ProjMode, Sharing};
 use super::params::{PackedWeights, ParamHandle, Params};
 use crate::linalg::{
-    gelu_inplace, gemm, layer_norm_rows, pool, softmax_scaled_rows, Dtype,
-    Mat, MatView, PackedPanels,
+    bias_gelu_ln_rows, bias_gelu_rows, bias_residual_ln_inplace_rows,
+    bias_residual_ln_rows, bias_residual_rows, bias_rows, gemm,
+    layer_norm_rows_into, layer_norm_slice_rows, pool, softmax_scaled_rows,
+    Dtype, Mat, MatView, PackedPanels,
 };
 use std::cell::Cell;
 use std::sync::{Arc, Mutex};
@@ -322,11 +339,101 @@ pub fn weight_pack_fallbacks() -> u64 {
     WEIGHT_PACK_FALLBACKS.with(|c| c.get())
 }
 
+/// Opt-in static int8 activation quantization (see
+/// [`EncodeScratch::use_static_act_quant`]): a per-weight-GEMM cache of
+/// the activation magnitude, fed by the dynamic max-abs scans of the
+/// first [`ActScaleCache::WARMUP`] calls (EWMA over the observations)
+/// and then frozen as the quantization scale — the per-GEMM O(m·k)
+/// activation scan is skipped entirely on the steady-state serving
+/// path.  Keyed by `(generation, weight handle)` like every other
+/// per-scratch cache, so a parameter hot swap recalibrates instead of
+/// reusing stale magnitudes.  Entries live in a small linear-scanned
+/// vec (one per weight GEMM in the model) grown during calibration;
+/// warm calls only read it.
+struct ActScaleCache {
+    enabled: bool,
+    entries: Vec<ActScaleEntry>,
+}
+
+struct ActScaleEntry {
+    gen: u64,
+    handle: ParamHandle,
+    /// EWMA of the per-tensor max-abs magnitudes the dynamic scans saw.
+    max_abs: f32,
+    /// Dynamic-scan observations folded in so far.
+    samples: u32,
+}
+
+impl ActScaleCache {
+    /// Dynamic-scan calls per weight GEMM before the scale freezes.
+    const WARMUP: u32 = 2;
+    /// EWMA weight of the newest observation.
+    const ALPHA: f32 = 0.5;
+
+    fn new() -> ActScaleCache {
+        ActScaleCache { enabled: false, entries: Vec::new() }
+    }
+
+    /// Before an int8 weight GEMM: arm the one-shot static-scale
+    /// override when the entry is calibrated, or return the entry index
+    /// to feed with the dynamic scan's observation afterwards.
+    fn begin(
+        &mut self,
+        gen: u64,
+        handle: ParamHandle,
+        gs: &mut gemm::GemmScratch,
+    ) -> Option<usize> {
+        if !self.enabled {
+            return None;
+        }
+        let idx = match self
+            .entries
+            .iter()
+            .position(|e| e.gen == gen && e.handle == handle)
+        {
+            Some(i) => i,
+            None => {
+                // calibration-time growth — an opt-in warmup cost, like
+                // every other scratch buffer reaching steady state
+                self.entries.push(ActScaleEntry {
+                    gen,
+                    handle,
+                    max_abs: 0.0,
+                    samples: 0,
+                });
+                self.entries.len() - 1
+            }
+        };
+        let e = &self.entries[idx];
+        if e.samples >= Self::WARMUP {
+            gs.set_act_max_override(Some(e.max_abs));
+            None
+        } else {
+            Some(idx)
+        }
+    }
+
+    /// After a dynamic-scan int8 GEMM: fold the observed magnitude into
+    /// the entry [`Self::begin`] selected.
+    fn record(&mut self, idx: usize, gs: &gemm::GemmScratch) {
+        let obs = gs.observed_act_max();
+        let e = &mut self.entries[idx];
+        e.max_abs = if e.samples == 0 {
+            obs
+        } else {
+            (1.0 - Self::ALPHA) * e.max_abs + Self::ALPHA * obs
+        };
+        e.samples += 1;
+    }
+}
+
 /// One weight-side GEMM `out = x · W` (or `x · Wᵀ` when `transposed`):
 /// consult the packed-panel cache first, fall back to the per-call-pack
 /// entry points on miss.  Scalar-pinned scratches skip the cache —
 /// panels are the SIMD microkernel's format — so the scalar baseline
-/// stays the scalar baseline.
+/// stays the scalar baseline.  `acts` is the opt-in static
+/// activation-quantization cache (consulted for int8 panels only;
+/// `None` disables).
 // lint: hot-path — one cache probe and a GEMM dispatch per weight; a
 // warm call must not allocate
 #[allow(clippy::too_many_arguments)]
@@ -339,20 +446,190 @@ fn weight_gemm(
     out: &mut Mat,
     threads: usize,
     gs: &mut gemm::GemmScratch,
+    acts: Option<&mut ActScaleCache>,
 ) {
+    weight_gemm_epi(
+        params,
+        h,
+        transposed,
+        packed,
+        x,
+        out,
+        threads,
+        gs,
+        acts,
+        |_chunk, _row0| {},
+    );
+}
+
+/// [`weight_gemm`] with the per-row-chunk epilogue hook threaded to
+/// whichever entry point the dispatch picks — cached panels (f32, or
+/// int8 where the hook composes with the kernel's dequant epilogue) or
+/// the per-call-pack fallbacks.  Exactly one
+/// [`WEIGHT_PACK_FALLBACKS`] bump per miss, same as the unfused
+/// dispatch.
+#[allow(clippy::too_many_arguments)]
+fn weight_gemm_epi<'env, E>(
+    params: &'env Params,
+    h: ParamHandle,
+    transposed: bool,
+    packed: Option<&'env PackedWeights>,
+    x: MatView<'env>,
+    out: &'env mut Mat,
+    threads: usize,
+    gs: &mut gemm::GemmScratch,
+    mut acts: Option<&mut ActScaleCache>,
+    epi: E,
+) where
+    E: Fn(&mut [f32], usize) + Send + Copy + 'env,
+{
     if !gs.is_scalar() {
         if let Some(p) =
             packed.and_then(|pw| pw.get(params.generation(), h, 0, transposed))
         {
-            gemm::matmul_packed_view_in(x, p, out, threads, gs);
+            let rec = act_quant_begin(&mut acts, params, h, p, x.rows, gs);
+            gemm::matmul_packed_epilogue_view_in(x, p, out, threads, gs, epi);
+            act_quant_finish(&mut acts, rec, gs);
             return;
         }
         WEIGHT_PACK_FALLBACKS.with(|c| c.set(c.get() + 1));
     }
     if transposed {
-        gemm::matmul_nt_view_in(x, params.view_at(h), out, threads, gs);
+        gemm::matmul_nt_epilogue_view_in(
+            x,
+            params.view_at(h),
+            out,
+            threads,
+            gs,
+            epi,
+        );
     } else {
-        gemm::matmul_view_in(x, params.view_at(h), out, threads, gs);
+        gemm::matmul_epilogue_view_in(
+            x,
+            params.view_at(h),
+            out,
+            threads,
+            gs,
+            epi,
+        );
+    }
+}
+
+/// The residual flavour of [`weight_gemm_epi`]: `epi(c_chunk, x_chunk,
+/// h_chunk, row0)` receives the GEMM output chunk read-only plus the
+/// same row range of the residual stream `x` and the next block's
+/// normalized-input buffer `h` (see gemm's aux entry points).  Weight
+/// GEMMs in this position are never transposed.
+#[allow(clippy::too_many_arguments)]
+fn weight_gemm_aux2<'env, E>(
+    params: &'env Params,
+    h: ParamHandle,
+    packed: Option<&'env PackedWeights>,
+    a: MatView<'env>,
+    c: &'env mut Mat,
+    x: &'env mut [f32],
+    hbuf: &'env mut [f32],
+    threads: usize,
+    gs: &mut gemm::GemmScratch,
+    mut acts: Option<&mut ActScaleCache>,
+    epi: E,
+) where
+    E: Fn(&[f32], &mut [f32], &mut [f32], usize) + Send + Copy + 'env,
+{
+    if !gs.is_scalar() {
+        if let Some(p) =
+            packed.and_then(|pw| pw.get(params.generation(), h, 0, false))
+        {
+            let rec = act_quant_begin(&mut acts, params, h, p, a.rows, gs);
+            gemm::matmul_packed_aux2_epilogue_view_in(
+                a, p, c, x, hbuf, threads, gs, epi,
+            );
+            act_quant_finish(&mut acts, rec, gs);
+            return;
+        }
+        WEIGHT_PACK_FALLBACKS.with(|cell| cell.set(cell.get() + 1));
+    }
+    gemm::matmul_aux2_epilogue_view_in(
+        a,
+        params.view_at(h),
+        c,
+        x,
+        hbuf,
+        threads,
+        gs,
+        epi,
+    );
+}
+
+/// Two-buffer aux flavour (the final layer, where the normalized output
+/// lands back in the residual stream itself instead of a separate `h`).
+#[allow(clippy::too_many_arguments)]
+fn weight_gemm_aux<'env, E>(
+    params: &'env Params,
+    h: ParamHandle,
+    packed: Option<&'env PackedWeights>,
+    a: MatView<'env>,
+    c: &'env mut Mat,
+    x: &'env mut [f32],
+    threads: usize,
+    gs: &mut gemm::GemmScratch,
+    mut acts: Option<&mut ActScaleCache>,
+    epi: E,
+) where
+    E: Fn(&[f32], &mut [f32], usize) + Send + Copy + 'env,
+{
+    if !gs.is_scalar() {
+        if let Some(p) =
+            packed.and_then(|pw| pw.get(params.generation(), h, 0, false))
+        {
+            let rec = act_quant_begin(&mut acts, params, h, p, a.rows, gs);
+            gemm::matmul_packed_aux_epilogue_view_in(
+                a, p, c, x, threads, gs, epi,
+            );
+            act_quant_finish(&mut acts, rec, gs);
+            return;
+        }
+        WEIGHT_PACK_FALLBACKS.with(|cell| cell.set(cell.get() + 1));
+    }
+    gemm::matmul_aux_epilogue_view_in(
+        a,
+        params.view_at(h),
+        c,
+        x,
+        threads,
+        gs,
+        epi,
+    );
+}
+
+/// Arm the static-scale override before an int8 packed GEMM (or pick
+/// the calibration entry to feed afterwards); no-op for f32 panels,
+/// disabled caches and degenerate shapes.
+fn act_quant_begin(
+    acts: &mut Option<&mut ActScaleCache>,
+    params: &Params,
+    h: ParamHandle,
+    p: &PackedPanels,
+    rows: usize,
+    gs: &mut gemm::GemmScratch,
+) -> Option<usize> {
+    match acts.as_deref_mut() {
+        Some(c) if p.dtype() == Dtype::Int8 && rows > 0 => {
+            c.begin(params.generation(), h, gs)
+        }
+        _ => None,
+    }
+}
+
+/// Fold the dynamic scan's observation into the calibration entry
+/// [`act_quant_begin`] selected (if any).
+fn act_quant_finish(
+    acts: &mut Option<&mut ActScaleCache>,
+    idx: Option<usize>,
+    gs: &gemm::GemmScratch,
+) {
+    if let (Some(c), Some(i)) = (acts.as_deref_mut(), idx) {
+        c.record(i, gs);
     }
 }
 // lint: end-hot-path
@@ -438,6 +715,13 @@ pub struct EncodeScratch {
     /// Pin attention to the head-serial, unfused-softmax baseline (see
     /// [`EncodeScratch::use_serial_attention`]).
     attn_serial: bool,
+    /// Fold elementwise tails into each producing GEMM's epilogue (the
+    /// default); `false` runs the same row primitives as standalone
+    /// pool-striped passes (see [`EncodeScratch::use_epilogue_fusion`]).
+    epilogue_fusion: bool,
+    /// Opt-in static int8 activation-scale cache (see
+    /// [`EncodeScratch::use_static_act_quant`]).
+    acts: ActScaleCache,
     h: Mat,
     q: Mat,
     k: Mat,
@@ -474,6 +758,8 @@ impl EncodeScratch {
             mlm_pack: None,
             heads: Vec::new(),
             attn_serial: false,
+            epilogue_fusion: true,
+            acts: ActScaleCache::new(),
             h: z(),
             q: z(),
             k: z(),
@@ -505,6 +791,33 @@ impl EncodeScratch {
     /// tag) and tests can compare the two regimes.
     pub fn use_serial_attention(&mut self, serial: bool) {
         self.attn_serial = serial;
+    }
+
+    /// Fold the encoder's elementwise tails (bias, GELU, the residual
+    /// adds, every layer norm) into each producing GEMM's per-row-chunk
+    /// epilogue — the default.  `false` runs the **same** shared row
+    /// primitives as standalone pool-striped passes after each GEMM:
+    /// bitwise-identical output (pinned by `tests/attn_prop.rs`), so
+    /// the knob exists purely for measurement — benches tag records
+    /// with the `fusion` regime, tests compare the regimes.
+    pub fn use_epilogue_fusion(&mut self, fused: bool) {
+        self.epilogue_fusion = fused;
+    }
+
+    /// Opt-in static int8 activation quantization: after a short
+    /// calibration (two dynamic-scan calls per weight GEMM, EWMA over
+    /// the observed max-abs), the per-GEMM activation scan is skipped
+    /// and the frozen scale is used instead — activations beyond the
+    /// calibrated magnitude saturate at ±127.  Off by default: dynamic
+    /// scans keep int8 output independent of call history.  The
+    /// accuracy delta of the static path is gated by
+    /// `tests/int8_accuracy.rs`.  Turning the knob off drops the
+    /// calibration state.
+    pub fn use_static_act_quant(&mut self, on: bool) {
+        self.acts.enabled = on;
+        if !on {
+            self.acts.entries.clear();
+        }
     }
 
     /// Attach pre-packed weight panels (e.g. a registry entry's): every
@@ -579,22 +892,27 @@ pub fn encode_with(
     };
     let n = tokens.len();
     let d = cfg.d_model;
+    let t = scratch.threads;
     let tok_emb = params.slice(hd.tok_emb);
     let pos_emb = params.slice(hd.pos_emb);
     let mut x = Mat::zeros(n, d);
-    for (i, &t) in tokens.iter().enumerate() {
-        let t = t as usize;
-        assert!(t < cfg.vocab_size, "token id {t} out of vocab");
+    for (i, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        assert!(tok < cfg.vocab_size, "token id {tok} out of vocab");
         for (j, out) in x.row_mut(i).iter_mut().enumerate() {
-            *out = tok_emb[t * d + j] + pos_emb[i * d + j];
+            *out = tok_emb[tok * d + j] + pos_emb[i * d + j];
         }
     }
-    layer_norm_rows(
-        &mut x,
-        params.slice(hd.embed_ln_scale),
-        params.slice(hd.embed_ln_bias),
-        1e-5,
-    );
+    // embedding layer norm: no producing GEMM to fuse into (the gather
+    // above is index arithmetic), so it runs as a pool-striped pass of
+    // the same row primitive the fused epilogues use
+    {
+        let s = params.slice(hd.embed_ln_scale);
+        let b = params.slice(hd.embed_ln_bias);
+        gemm::stripe_rows(&mut x.data, n, t, d, move |chunk, _row0| {
+            layer_norm_slice_rows(chunk, d, s, b, 1e-5);
+        });
+    }
 
     // opt-in diagnostics: the capture's O(layers·heads) output matrices
     // rightly allocate, so the zero-alloc rule is waived for this line
@@ -602,62 +920,217 @@ pub fn encode_with(
         // lint: allow(hot-path-alloc) opt-in capture output
         capture_attn.then(|| AttnCapture { matrices: Vec::new() });
 
+    let fuse = scratch.epilogue_fusion;
+    // h = LN1_0(x), the first layer's normalized input — every later
+    // layer gets its `h` from the previous GEMM's fused epilogue (or
+    // its striped fallback), so this is the only standalone LN1
+    if cfg.n_layers > 0 {
+        let lh = &hd.layers[0];
+        let s = params.slice(lh.ln1_scale);
+        let b = params.slice(lh.ln1_bias);
+        scratch.h.resize_for_overwrite(n, d);
+        gemm::stripe_rows2(
+            &mut scratch.h.data,
+            &x.data,
+            n,
+            t,
+            d,
+            move |hc, xc, _row0| layer_norm_rows_into(hc, xc, d, s, b, 1e-5),
+        );
+    }
+
     for l in 0..cfg.n_layers {
         let lh = &hd.layers[l];
-        // pre-LN attention block
-        scratch.h.copy_from(&x);
-        layer_norm_rows(
-            &mut scratch.h,
-            params.slice(lh.ln1_scale),
-            params.slice(lh.ln1_bias),
-            1e-5,
-        );
+        // attention block: reads scratch.h (= LN1(x)), fills scratch.ctx
         let mats =
             attention_layer(params, cfg, &hd, l, scratch, capture.is_some());
         if let Some(c) = capture.as_mut() {
             c.matrices.push(mats);
         }
-        x.add_assign(&scratch.attn_out);
-        // pre-LN FFN block
-        scratch.h.copy_from(&x);
-        layer_norm_rows(
-            &mut scratch.h,
-            params.slice(lh.ln2_scale),
-            params.slice(lh.ln2_bias),
-            1e-5,
-        );
-        let t = scratch.threads;
-        weight_gemm(
-            params,
-            lh.ffn_w1,
-            false,
-            scratch.packed.as_deref(),
-            MatView::full(&scratch.h),
-            &mut scratch.ff,
-            gemm::plan_threads(n, d, cfg.d_ff, t),
-            &mut scratch.gs,
-        );
-        scratch.ff.add_row_vec(params.slice(lh.ffn_b1));
-        gelu_inplace(&mut scratch.ff);
-        weight_gemm(
-            params,
-            lh.ffn_w2,
-            false,
-            scratch.packed.as_deref(),
-            MatView::full(&scratch.ff),
-            &mut scratch.ff2,
-            gemm::plan_threads(n, cfg.d_ff, d, t),
-            &mut scratch.gs,
-        );
-        scratch.ff2.add_row_vec(params.slice(lh.ffn_b2));
-        x.add_assign(&scratch.ff2);
+        // attention output projection, fused with its whole tail:
+        // x += ctx·Wo + bo, then h = LN2(x) — one GEMM, zero extra
+        // passes over the (n×d) activations
+        let bo = params.slice(lh.bo);
+        let ln2_s = params.slice(lh.ln2_scale);
+        let ln2_b = params.slice(lh.ln2_bias);
+        let plan_o = gemm::plan_threads(n, d, d, t);
+        if fuse {
+            weight_gemm_aux2(
+                params,
+                lh.wo,
+                scratch.packed.as_deref(),
+                MatView::full(&scratch.ctx),
+                &mut scratch.attn_out,
+                &mut x.data,
+                &mut scratch.h.data,
+                plan_o,
+                &mut scratch.gs,
+                Some(&mut scratch.acts),
+                move |c, xc, hc, _row0| {
+                    bias_residual_ln_rows(c, xc, hc, d, bo, ln2_s, ln2_b, 1e-5);
+                },
+            );
+        } else {
+            weight_gemm(
+                params,
+                lh.wo,
+                false,
+                scratch.packed.as_deref(),
+                MatView::full(&scratch.ctx),
+                &mut scratch.attn_out,
+                plan_o,
+                &mut scratch.gs,
+                Some(&mut scratch.acts),
+            );
+            gemm::stripe_rows2(
+                &mut x.data,
+                &scratch.attn_out.data,
+                n,
+                t,
+                d,
+                move |xc, cc, _row0| bias_residual_rows(cc, xc, d, bo),
+            );
+            gemm::stripe_rows2(
+                &mut scratch.h.data,
+                &x.data,
+                n,
+                t,
+                d,
+                move |hc, xc, _row0| {
+                    layer_norm_rows_into(hc, xc, d, ln2_s, ln2_b, 1e-5)
+                },
+            );
+        }
+        // FFN up-projection with bias+GELU in the epilogue
+        let b1 = params.slice(lh.ffn_b1);
+        let dff = cfg.d_ff;
+        let plan1 = gemm::plan_threads(n, d, dff, t);
+        if fuse {
+            weight_gemm_epi(
+                params,
+                lh.ffn_w1,
+                false,
+                scratch.packed.as_deref(),
+                MatView::full(&scratch.h),
+                &mut scratch.ff,
+                plan1,
+                &mut scratch.gs,
+                Some(&mut scratch.acts),
+                move |chunk, _row0| bias_gelu_rows(chunk, dff, b1),
+            );
+        } else {
+            weight_gemm(
+                params,
+                lh.ffn_w1,
+                false,
+                scratch.packed.as_deref(),
+                MatView::full(&scratch.h),
+                &mut scratch.ff,
+                plan1,
+                &mut scratch.gs,
+                Some(&mut scratch.acts),
+            );
+            gemm::stripe_rows(&mut scratch.ff.data, n, t, dff, move |chunk, _row0| {
+                bias_gelu_rows(chunk, dff, b1)
+            });
+        }
+        // FFN down-projection, fused with the residual add and the
+        // *next* block's layer norm: x += ff·W2 + b2, then
+        // h = LN1_{l+1}(x) — or, on the last layer, x = LN_final(x) in
+        // place (x is the returned hidden matrix)
+        let b2 = params.slice(lh.ffn_b2);
+        let plan2 = gemm::plan_threads(n, dff, d, t);
+        let last = l + 1 == cfg.n_layers;
+        let (nxt_s, nxt_b) = if last {
+            (params.slice(hd.final_ln_scale), params.slice(hd.final_ln_bias))
+        } else {
+            let nx = &hd.layers[l + 1];
+            (params.slice(nx.ln1_scale), params.slice(nx.ln1_bias))
+        };
+        if fuse {
+            if last {
+                weight_gemm_aux(
+                    params,
+                    lh.ffn_w2,
+                    scratch.packed.as_deref(),
+                    MatView::full(&scratch.ff),
+                    &mut scratch.ff2,
+                    &mut x.data,
+                    plan2,
+                    &mut scratch.gs,
+                    Some(&mut scratch.acts),
+                    move |c, xc, _row0| {
+                        bias_residual_ln_inplace_rows(
+                            c, xc, d, b2, nxt_s, nxt_b, 1e-5,
+                        );
+                    },
+                );
+            } else {
+                weight_gemm_aux2(
+                    params,
+                    lh.ffn_w2,
+                    scratch.packed.as_deref(),
+                    MatView::full(&scratch.ff),
+                    &mut scratch.ff2,
+                    &mut x.data,
+                    &mut scratch.h.data,
+                    plan2,
+                    &mut scratch.gs,
+                    Some(&mut scratch.acts),
+                    move |c, xc, hc, _row0| {
+                        bias_residual_ln_rows(
+                            c, xc, hc, d, b2, nxt_s, nxt_b, 1e-5,
+                        );
+                    },
+                );
+            }
+        } else {
+            weight_gemm(
+                params,
+                lh.ffn_w2,
+                false,
+                scratch.packed.as_deref(),
+                MatView::full(&scratch.ff),
+                &mut scratch.ff2,
+                plan2,
+                &mut scratch.gs,
+                Some(&mut scratch.acts),
+            );
+            gemm::stripe_rows2(
+                &mut x.data,
+                &scratch.ff2.data,
+                n,
+                t,
+                d,
+                move |xc, cc, _row0| bias_residual_rows(cc, xc, d, b2),
+            );
+            if last {
+                gemm::stripe_rows(&mut x.data, n, t, d, move |chunk, _row0| {
+                    layer_norm_slice_rows(chunk, d, nxt_s, nxt_b, 1e-5)
+                });
+            } else {
+                gemm::stripe_rows2(
+                    &mut scratch.h.data,
+                    &x.data,
+                    n,
+                    t,
+                    d,
+                    move |hc, xc, _row0| {
+                        layer_norm_rows_into(hc, xc, d, nxt_s, nxt_b, 1e-5)
+                    },
+                );
+            }
+        }
     }
-    layer_norm_rows(
-        &mut x,
-        params.slice(hd.final_ln_scale),
-        params.slice(hd.final_ln_bias),
-        1e-5,
-    );
+    if cfg.n_layers == 0 {
+        // degenerate zero-layer config: the final LN applies directly
+        // to the embedding (no last-layer epilogue carried it)
+        let s = params.slice(hd.final_ln_scale);
+        let b = params.slice(hd.final_ln_bias);
+        gemm::stripe_rows(&mut x.data, n, t, d, move |chunk, _row0| {
+            layer_norm_slice_rows(chunk, d, s, b, 1e-5)
+        });
+    }
     scratch.handles = Some(hd);
     EncodeOut { hidden: x, capture }
 }
@@ -768,10 +1241,14 @@ fn head_chain(
     );
 }
 
-/// Multi-head attention for one layer.  Reads `scratch.h`, leaves the
-/// block output in `scratch.attn_out`; returns the per-head P matrices
-/// when `capture` is set (empty vec otherwise).  All parameters come in
-/// through pre-resolved handles — no name building, no lookups.
+/// Multi-head attention for one layer, **up to** the concatenated
+/// context: reads `scratch.h`, leaves the per-head context blocks in
+/// `scratch.ctx`; returns the per-head P matrices when `capture` is set
+/// (empty vec otherwise).  The output projection (`ctx·Wo + bo`) runs
+/// in [`encode_with`], where its GEMM fuses the residual add and the
+/// next layer norm into its epilogue against the caller-owned residual
+/// stream.  All parameters come in through pre-resolved handles — no
+/// name building, no lookups.
 ///
 /// Heads fan out as pool tasks when the thread budget allows (each
 /// writes its own [`HeadScratch`] arena entry), splitting the budget
@@ -795,16 +1272,18 @@ fn attention_layer(
         packed,
         heads,
         attn_serial,
+        epilogue_fusion,
+        acts,
         h,
         q,
         k,
         v,
         ctx,
-        attn_out,
         ..
     } = scratch;
     let threads = *threads;
     let attn_serial = *attn_serial;
+    let fuse = *epilogue_fusion;
     let pw = packed.as_deref();
     let n = h.rows;
     let d = cfg.d_model;
@@ -812,12 +1291,71 @@ fn attention_layer(
     let dh = cfg.d_head();
     let plan = |kdim: usize, ncols: usize| gemm::plan_threads(n, kdim, ncols, threads);
 
-    weight_gemm(params, lh.wq, false, pw, MatView::full(h), q, plan(d, d), gs);
-    q.add_row_vec(params.slice(lh.bq));
-    weight_gemm(params, lh.wk, false, pw, MatView::full(h), k, plan(d, d), gs);
-    k.add_row_vec(params.slice(lh.bk));
-    weight_gemm(params, lh.wv, false, pw, MatView::full(h), v, plan(d, d), gs);
-    v.add_row_vec(params.slice(lh.bv));
+    // Q/K/V projections with the bias add folded into each GEMM's
+    // epilogue (E/F carry no bias in this architecture, so the
+    // compression GEMMs in head_chain stay epilogue-free)
+    let (bq, bk, bv) =
+        (params.slice(lh.bq), params.slice(lh.bk), params.slice(lh.bv));
+    if fuse {
+        weight_gemm_epi(
+            params,
+            lh.wq,
+            false,
+            pw,
+            MatView::full(h),
+            q,
+            plan(d, d),
+            gs,
+            Some(&mut *acts),
+            move |chunk, _row0| bias_rows(chunk, d, bq),
+        );
+        weight_gemm_epi(
+            params,
+            lh.wk,
+            false,
+            pw,
+            MatView::full(h),
+            k,
+            plan(d, d),
+            gs,
+            Some(&mut *acts),
+            move |chunk, _row0| bias_rows(chunk, d, bk),
+        );
+        weight_gemm_epi(
+            params,
+            lh.wv,
+            false,
+            pw,
+            MatView::full(h),
+            v,
+            plan(d, d),
+            gs,
+            Some(&mut *acts),
+            move |chunk, _row0| bias_rows(chunk, d, bv),
+        );
+    } else {
+        weight_gemm(
+            params, lh.wq, false, pw, MatView::full(h), q,
+            plan(d, d), gs, Some(&mut *acts),
+        );
+        gemm::stripe_rows(&mut q.data, n, threads, d, move |chunk, _row0| {
+            bias_rows(chunk, d, bq)
+        });
+        weight_gemm(
+            params, lh.wk, false, pw, MatView::full(h), k,
+            plan(d, d), gs, Some(&mut *acts),
+        );
+        gemm::stripe_rows(&mut k.data, n, threads, d, move |chunk, _row0| {
+            bias_rows(chunk, d, bk)
+        });
+        weight_gemm(
+            params, lh.wv, false, pw, MatView::full(h), v,
+            plan(d, d), gs, Some(&mut *acts),
+        );
+        gemm::stripe_rows(&mut v.data, n, threads, d, move |chunk, _row0| {
+            bias_rows(chunk, d, bv)
+        });
+    }
 
     // grow the per-head arena to n_heads entries once; `push` touches the
     // allocator only while the arena is below steady state (the entries
@@ -911,18 +1449,6 @@ fn attention_layer(
             }
         }
     }
-
-    weight_gemm(
-        params,
-        lh.wo,
-        false,
-        pw,
-        MatView::full(ctx),
-        attn_out,
-        plan(d, d),
-        gs,
-    );
-    attn_out.add_row_vec(params.slice(lh.bo));
     mats
 }
 
@@ -1100,51 +1626,105 @@ pub fn mlm_logits_with(
     let n = hidden.rows;
     let d = cfg.d_model;
     let t = scratch.threads;
-    // dense + gelu + ln in scratch.h (free after encode)
-    weight_gemm(
-        params,
-        hd.mlm_dense_w,
-        false,
-        scratch.packed.as_deref(),
-        MatView::full(&hidden),
-        &mut scratch.h,
-        gemm::plan_threads(n, d, d, t),
-        &mut scratch.gs,
-    );
-    scratch.h.add_row_vec(params.slice(hd.mlm_dense_b));
-    gelu_inplace(&mut scratch.h);
-    layer_norm_rows(
-        &mut scratch.h,
-        params.slice(hd.mlm_ln_scale),
-        params.slice(hd.mlm_ln_bias),
-        1e-5,
-    );
-    // tied output embedding: logits = h · W_tokᵀ.  This GEMM used to
+    let fuse = scratch.epilogue_fusion;
+    // dense + bias + gelu + ln, all in the dense GEMM's epilogue,
+    // landing in scratch.h (free after encode)
+    let db = params.slice(hd.mlm_dense_b);
+    let ln_s = params.slice(hd.mlm_ln_scale);
+    let ln_b = params.slice(hd.mlm_ln_bias);
+    let plan_d = gemm::plan_threads(n, d, d, t);
+    if fuse {
+        weight_gemm_epi(
+            params,
+            hd.mlm_dense_w,
+            false,
+            scratch.packed.as_deref(),
+            MatView::full(&hidden),
+            &mut scratch.h,
+            plan_d,
+            &mut scratch.gs,
+            Some(&mut scratch.acts),
+            move |chunk, _row0| {
+                bias_gelu_ln_rows(chunk, d, db, ln_s, ln_b, 1e-5)
+            },
+        );
+    } else {
+        weight_gemm(
+            params,
+            hd.mlm_dense_w,
+            false,
+            scratch.packed.as_deref(),
+            MatView::full(&hidden),
+            &mut scratch.h,
+            plan_d,
+            &mut scratch.gs,
+            Some(&mut scratch.acts),
+        );
+        gemm::stripe_rows(&mut scratch.h.data, n, t, d, move |chunk, _row0| {
+            bias_gelu_ln_rows(chunk, d, db, ln_s, ln_b, 1e-5)
+        });
+    }
+    // tied output embedding: logits = h · W_tokᵀ + out_bias, the bias
+    // folded into whichever branch's epilogue.  This GEMM used to
     // transpose-pack the entire (vocab × d) token table on every call;
     // now it reads the registry's panels on a cache hit, and uncached
     // SIMD callers amortise the pack through a per-scratch memo instead.
-    let plan = gemm::plan_threads(n, d, cfg.vocab_size, t);
+    let vocab = cfg.vocab_size;
+    let ob = params.slice(hd.mlm_out_bias);
+    let bias_epi =
+        move |chunk: &mut [f32], _row0: usize| bias_rows(chunk, vocab, ob);
+    let plan = gemm::plan_threads(n, d, vocab, t);
     let mut logits = Mat::zeros(0, 0);
     if scratch.gs.is_scalar() {
-        gemm::matmul_nt_view_in(
-            MatView::full(&scratch.h),
-            params.view_at(hd.tok_emb),
-            &mut logits,
-            plan,
-            &mut scratch.gs,
-        );
+        if fuse {
+            gemm::matmul_nt_epilogue_view_in(
+                MatView::full(&scratch.h),
+                params.view_at(hd.tok_emb),
+                &mut logits,
+                plan,
+                &mut scratch.gs,
+                bias_epi,
+            );
+        } else {
+            gemm::matmul_nt_view_in(
+                MatView::full(&scratch.h),
+                params.view_at(hd.tok_emb),
+                &mut logits,
+                plan,
+                &mut scratch.gs,
+            );
+        }
     } else if let Some(p) = scratch
         .packed
         .as_deref()
         .and_then(|pw| pw.get(params.generation(), hd.tok_emb, 0, true))
     {
-        gemm::matmul_packed_view_in(
-            MatView::full(&scratch.h),
-            p,
-            &mut logits,
-            plan,
-            &mut scratch.gs,
-        );
+        let rec = if p.dtype() == Dtype::Int8 && n > 0 {
+            scratch.acts.begin(params.generation(), hd.tok_emb, &mut scratch.gs)
+        } else {
+            None
+        };
+        if fuse {
+            gemm::matmul_packed_epilogue_view_in(
+                MatView::full(&scratch.h),
+                p,
+                &mut logits,
+                plan,
+                &mut scratch.gs,
+                bias_epi,
+            );
+        } else {
+            gemm::matmul_packed_view_in(
+                MatView::full(&scratch.h),
+                p,
+                &mut logits,
+                plan,
+                &mut scratch.gs,
+            );
+        }
+        if let Some(i) = rec {
+            scratch.acts.record(i, &scratch.gs);
+        }
     } else {
         let stale = !matches!(
             &scratch.mlm_pack,
@@ -1157,15 +1737,30 @@ pub fn mlm_logits_with(
             scratch.mlm_pack = Some((params.generation(), hd.tok_emb, p));
         }
         let (_, _, p) = scratch.mlm_pack.as_ref().expect("memo just built");
-        gemm::matmul_packed_view_in(
-            MatView::full(&scratch.h),
-            p,
-            &mut logits,
-            plan,
-            &mut scratch.gs,
-        );
+        if fuse {
+            gemm::matmul_packed_epilogue_view_in(
+                MatView::full(&scratch.h),
+                p,
+                &mut logits,
+                plan,
+                &mut scratch.gs,
+                bias_epi,
+            );
+        } else {
+            gemm::matmul_packed_view_in(
+                MatView::full(&scratch.h),
+                p,
+                &mut logits,
+                plan,
+                &mut scratch.gs,
+            );
+        }
     }
-    logits.add_row_vec(params.slice(hd.mlm_out_bias));
+    if !fuse {
+        // fusion-off regime: the same bias primitive as one pool-striped
+        // standalone pass — bitwise-identical by the whole-row argument
+        gemm::stripe_rows(&mut logits.data, n, t, vocab, bias_epi);
+    }
     scratch.handles = Some(hd);
     logits
 }
@@ -1243,6 +1838,9 @@ pub fn mlm_predict_batch_warm(
         .collect()
 }
 
+// lint: hot-path — warm classifier head: one fused (or
+// bias-standalone) GEMM over the [CLS] row, no heap traffic beyond the
+// (1 × classes) output
 /// Classifier-head logits for one example (mirror of Python
 /// `cls_logits`): the position-0 ([CLS]) hidden state through the
 /// `cls/{w,b}` linear head.  Returns a (1 × num_classes) matrix.
@@ -1257,20 +1855,40 @@ pub fn cls_logits_with(
     let hd = scratch.handles.take().expect("handles interned by encode");
     let cls = MatView::new(hidden.row(0), 1, cfg.d_model, cfg.d_model);
     let mut logits = Mat::zeros(0, 0);
-    weight_gemm(
-        params,
-        hd.cls_w,
-        false,
-        scratch.packed.as_deref(),
-        cls,
-        &mut logits,
-        1,
-        &mut scratch.gs,
-    );
-    logits.add_row_vec(params.slice(hd.cls_b));
+    if scratch.epilogue_fusion {
+        let nc = cfg.num_classes;
+        let cb = params.slice(hd.cls_b);
+        weight_gemm_epi(
+            params,
+            hd.cls_w,
+            false,
+            scratch.packed.as_deref(),
+            cls,
+            &mut logits,
+            1,
+            &mut scratch.gs,
+            Some(&mut scratch.acts),
+            move |chunk, _row0| bias_rows(chunk, nc, cb),
+        );
+    } else {
+        weight_gemm(
+            params,
+            hd.cls_w,
+            false,
+            scratch.packed.as_deref(),
+            cls,
+            &mut logits,
+            1,
+            &mut scratch.gs,
+            Some(&mut scratch.acts),
+        );
+        // a single (1 × classes) row: striping buys nothing
+        logits.add_row_vec(params.slice(hd.cls_b));
+    }
     scratch.handles = Some(hd);
     logits
 }
+// lint: end-hot-path
 
 /// Batched classifier head — the serving path behind
 /// [`crate::coordinator::Task::Classify`].  Per sequence: the winning

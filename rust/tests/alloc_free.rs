@@ -130,6 +130,65 @@ fn head_scratch_arena_serves_both_attention_regimes_warm() {
 }
 
 #[test]
+fn epilogue_fusion_regimes_stay_zero_alloc_warm() {
+    // the fused default (bias/GELU/residual/LN inside the GEMM
+    // epilogues) and the fusion-off striped fallback run on the same
+    // scratch buffers and the same row primitives: after warming either
+    // regime, a warm call in either allocates exactly its output matrix
+    let cfg = ModelConfig::tiny();
+    let params = Params::init(&cfg, 11);
+    let tokens: Vec<u32> =
+        (0..cfg.max_len).map(|i| (i % cfg.vocab_size) as u32).collect();
+    let mut scratch = EncodeScratch::with_threads(1);
+    for _ in 0..2 {
+        encode_with(&params, &cfg, &tokens, false, &mut scratch);
+    }
+    for fused in [true, false, true] {
+        scratch.use_epilogue_fusion(fused);
+        let before = allocs_now();
+        let out = encode_with(&params, &cfg, &tokens, false, &mut scratch);
+        let after = allocs_now();
+        assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+        assert_eq!(
+            after - before,
+            1,
+            "warm encode_with (fused={fused}) must allocate exactly once: \
+             the fusion regimes do not share scratch buffers"
+        );
+    }
+}
+
+#[test]
+fn static_act_quant_warm_path_is_alloc_free() {
+    // the activation-scale cache interns its per-site entries during
+    // calibration; once every site is frozen, a warm int8 encode skips
+    // the per-GEMM max-abs scan and still allocates only its output
+    let cfg = ModelConfig::tiny();
+    let params = Params::init(&cfg, 13);
+    let handles = EncoderHandles::build(&params, &cfg);
+    let packed = Arc::new(handles.pack_weights(&params, Dtype::Int8));
+    let tokens: Vec<u32> =
+        (0..cfg.max_len).map(|i| (i % cfg.vocab_size) as u32).collect();
+    let mut scratch = EncodeScratch::with_threads(1);
+    scratch.set_packed(Some(Arc::clone(&packed)));
+    scratch.use_static_act_quant(true);
+    for _ in 0..3 {
+        encode_with(&params, &cfg, &tokens, false, &mut scratch);
+    }
+    let before = allocs_now();
+    let out = encode_with(&params, &cfg, &tokens, false, &mut scratch);
+    let after = allocs_now();
+    assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+    assert_eq!(
+        after - before,
+        1,
+        "warm static-quant int8 encode must allocate exactly once (the \
+         output matrix); extra allocations mean the scale cache is \
+         growing or rescanning on the warm path"
+    );
+}
+
+#[test]
 fn warm_batched_call_skips_name_resolution() {
     // a batch handed prebuilt registry handles must not pay the
     // per-scratch name-resolve pass (≥ 17 `format!` allocations per

@@ -14,7 +14,11 @@
 //! 2. fused vs unfused softmax — the GEMM epilogue that applies
 //!    `scale` + row softmax inside each row chunk vs the standalone
 //!    `softmax_scaled_rows` pass (bitwise, same mul/add sequence),
-//! 3. the capture path — captured P matrices and the served hidden
+//! 3. full epilogue fusion on vs off — bias/GELU/residual/LayerNorm
+//!    folded into the encoder's GEMM epilogues vs the pool-striped
+//!    standalone passes built from the same row primitives (bitwise:
+//!    whole-row chunks, pure per-row hooks),
+//! 4. the capture path — captured P matrices and the served hidden
 //!    states stay bitwise-equal across all of the above.
 //!
 //! The full runs are `#[ignore]`d under tier-1 (debug-mode encodes of
@@ -53,9 +57,11 @@ fn encode_regime(
     tokens: &[u32],
     threads: usize,
     serial: bool,
+    fused: bool,
 ) -> (Vec<f32>, Vec<Vec<Vec<f32>>>) {
     let mut scratch = EncodeScratch::with_threads(threads);
     scratch.use_serial_attention(serial);
+    scratch.use_epilogue_fusion(fused);
     // encode twice through the same scratch: the second (warm) pass is
     // the one compared, so arena reuse cannot change results either
     encode_with(params, cfg, tokens, false, &mut scratch);
@@ -91,14 +97,19 @@ fn check_one_case(rng: &mut Pcg32, flavor: usize) {
         .map(|_| rng.range_usize(0, cfg.vocab_size) as u32)
         .collect();
 
-    // oracle: one thread, head-serial, standalone scaled softmax
-    let (want_h, want_p) = encode_regime(&params, &cfg, &tokens, 1, true);
+    // oracle: one thread, head-serial, standalone scaled softmax, and
+    // every bias/GELU/residual/LN pass standalone (fusion off)
+    let (want_h, want_p) =
+        encode_regime(&params, &cfg, &tokens, 1, true, false);
     for &threads in &[1usize, 2, 8] {
-        for &serial in &[false, true] {
+        for &(serial, fused) in
+            &[(false, false), (false, true), (true, false), (true, true)]
+        {
             let (got_h, got_p) =
-                encode_regime(&params, &cfg, &tokens, threads, serial);
+                encode_regime(&params, &cfg, &tokens, threads, serial, fused);
             let tag = format!(
-                "flavor={flavor} n={n} threads={threads} serial={serial}"
+                "flavor={flavor} n={n} threads={threads} serial={serial} \
+                 fused={fused}"
             );
             assert_bits_eq(&got_h, &want_h, &format!("{tag} hidden"));
             assert_eq!(got_p.len(), want_p.len(), "{tag}: layer count");

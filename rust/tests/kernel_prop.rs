@@ -21,7 +21,7 @@
 
 use linformer::linalg::gemm::{self, GemmScratch};
 use linformer::linalg::kernel::LANES;
-use linformer::linalg::{Mat, MatView};
+use linformer::linalg::{Dtype, Mat, MatView, PackedPanels};
 use linformer::util::prop::prop_check;
 use linformer::util::rng::Pcg32;
 
@@ -174,9 +174,181 @@ fn axpy_dot_every_remainder_lane_random_values() {
     });
 }
 
+/// One random shape through every epilogue-hook entry point: the fused
+/// output must be bitwise equal to the plain GEMM followed by the same
+/// per-row hook as one serial whole-matrix pass — for both kernels,
+/// random thread plans, both packed dtypes, and the aux flavours.
+/// Chunks are whole rows and the hook is pure per-row, so no chunking,
+/// thread count, or kernel choice may show through.
+fn check_epilogue_one_shape(rng: &mut Pcg32) {
+    let dim = |rng: &mut Pcg32| match rng.below(3) {
+        0 => rng.range_usize(1, LANES),
+        1 => rng.range_usize(1, 2 * LANES + 2),
+        _ => rng.range_usize(1, 80),
+    };
+    let (m, n) = (dim(rng), dim(rng));
+    // k == 0 (hook over the zeroed product) rides along occasionally
+    let k = if rng.below(10) == 0 { 0 } else { dim(rng) };
+    let a = rand_mat(rng, m, k);
+    let b = rand_mat(rng, k, n);
+    let bt = rand_mat(rng, n, k);
+    let (av, bv, btv) =
+        (MatView::full(&a), MatView::full(&b), MatView::full(&bt));
+    let shift = rng.normal();
+    let epi = move |chunk: &mut [f32], row0: usize| {
+        for (i, row) in chunk.chunks_mut(n).enumerate() {
+            let r = (row0 + i) as f32 * 0.25 + shift;
+            for x in row.iter_mut() {
+                *x = *x * 0.5 + r;
+            }
+        }
+    };
+    let plans = [1usize, rng.range_usize(2, 8), rng.range_usize(2, 8)];
+
+    for scalar in [false, true] {
+        let mut gs = if scalar {
+            GemmScratch::scalar()
+        } else {
+            let mut gs = GemmScratch::new();
+            gs.set_scalar(false);
+            gs
+        };
+        let mut want = Mat::zeros(0, 0);
+        gemm::matmul_view_in(av, bv, &mut want, 1, &mut gs);
+        epi(&mut want.data[..], 0);
+        let mut want_nt = Mat::zeros(0, 0);
+        gemm::matmul_nt_view_in(av, btv, &mut want_nt, 1, &mut gs);
+        epi(&mut want_nt.data[..], 0);
+        for &threads in &plans {
+            let mut got = Mat::zeros(0, 0);
+            gemm::matmul_epilogue_view_in(av, bv, &mut got, threads, &mut gs, epi);
+            assert_eq!(
+                got.data, want.data,
+                "NN epi ({m},{k},{n}) scalar={scalar} t={threads}"
+            );
+            let mut got = Mat::zeros(0, 0);
+            gemm::matmul_nt_epilogue_view_in(
+                av, btv, &mut got, threads, &mut gs, epi,
+            );
+            assert_eq!(
+                got.data, want_nt.data,
+                "NT epi ({m},{k},{n}) scalar={scalar} t={threads}"
+            );
+        }
+        // the column-window entry: hook runs per live-width row
+        let blank = Mat::filled_with(m, n + 3, |_, _| -5.5);
+        let mut want_w = blank.clone();
+        gemm::matmul_view_cols_in(av, bv, &mut want_w, 2, 1, &mut gs);
+        for r in 0..m {
+            epi(&mut want_w.data[r * (n + 3) + 2..][..n], r);
+        }
+        for &threads in &plans {
+            let mut got = blank.clone();
+            gemm::matmul_view_cols_epilogue_in(
+                av, bv, &mut got, 2, threads, &mut gs, epi,
+            );
+            assert_eq!(
+                got.data, want_w.data,
+                "cols epi ({m},{k},{n}) scalar={scalar} t={threads}"
+            );
+        }
+    }
+
+    // cached panels (microkernel only) and the aux residual flavours
+    let mut x0 = vec![0.0f32; m * n];
+    rng.fill_normal(&mut x0, 1.0);
+    let epi2 = move |cc: &[f32], xc: &mut [f32], row0: usize| {
+        for (i, (crow, xrow)) in cc.chunks(n).zip(xc.chunks_mut(n)).enumerate() {
+            let r = (row0 + i) as f32 * 0.125;
+            for (xv, cv) in xrow.iter_mut().zip(crow) {
+                *xv += *cv + r;
+            }
+        }
+    };
+    let epi3 = move |cc: &[f32], xc: &mut [f32], hc: &mut [f32], row0: usize| {
+        epi2(cc, xc, row0);
+        for (hv, xv) in hc.iter_mut().zip(&*xc) {
+            *hv = *xv * 2.0 + 0.5;
+        }
+    };
+    let mut gs = GemmScratch::new();
+    gs.set_scalar(false);
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let p = PackedPanels::pack(dtype, bv, false);
+        let mut cref = Mat::zeros(0, 0);
+        gemm::matmul_packed_view_in(av, &p, &mut cref, 1, &mut gs);
+        let mut want = cref.clone();
+        epi(&mut want.data[..], 0);
+        let mut xw = x0.clone();
+        let mut hw = vec![0.0f32; m * n];
+        epi3(&cref.data, &mut xw, &mut hw, 0);
+        for &threads in &plans {
+            let mut got = Mat::zeros(0, 0);
+            gemm::matmul_packed_epilogue_view_in(
+                av, &p, &mut got, threads, &mut gs, epi,
+            );
+            assert_eq!(
+                got.data, want.data,
+                "packed {dtype} epi ({m},{k},{n}) t={threads}"
+            );
+            let (mut c2, mut x2) = (Mat::zeros(0, 0), x0.clone());
+            gemm::matmul_packed_aux_epilogue_view_in(
+                av, &p, &mut c2, &mut x2, threads, &mut gs, epi2,
+            );
+            assert_eq!(x2, xw, "packed {dtype} aux ({m},{k},{n}) t={threads}");
+            let (mut c3, mut x3, mut h3) =
+                (Mat::zeros(0, 0), x0.clone(), vec![0.0f32; m * n]);
+            gemm::matmul_packed_aux2_epilogue_view_in(
+                av, &p, &mut c3, &mut x3, &mut h3, threads, &mut gs, epi3,
+            );
+            assert_eq!(x3, xw, "packed {dtype} aux2 x ({m},{k},{n})");
+            assert_eq!(h3, hw, "packed {dtype} aux2 h ({m},{k},{n})");
+        }
+    }
+    // unpacked aux entries share the invariant on both kernels
+    for scalar in [false, true] {
+        let mut gs = if scalar {
+            GemmScratch::scalar()
+        } else {
+            let mut gs = GemmScratch::new();
+            gs.set_scalar(false);
+            gs
+        };
+        let mut cref = Mat::zeros(0, 0);
+        gemm::matmul_view_in(av, bv, &mut cref, 1, &mut gs);
+        let mut xw = x0.clone();
+        let mut hw = vec![0.0f32; m * n];
+        epi3(&cref.data, &mut xw, &mut hw, 0);
+        for &threads in &plans {
+            let (mut c3, mut x3, mut h3) =
+                (Mat::zeros(0, 0), x0.clone(), vec![0.0f32; m * n]);
+            gemm::matmul_aux2_epilogue_view_in(
+                av, bv, &mut c3, &mut x3, &mut h3, threads, &mut gs, epi3,
+            );
+            assert_eq!(c3.data, cref.data, "aux2 c scalar={scalar}");
+            assert_eq!(x3, xw, "aux2 x ({m},{k},{n}) scalar={scalar}");
+            assert_eq!(h3, hw, "aux2 h ({m},{k},{n}) scalar={scalar}");
+            let (mut c2, mut x2) = (Mat::zeros(0, 0), x0.clone());
+            gemm::matmul_aux_epilogue_view_in(
+                av, bv, &mut c2, &mut x2, threads, &mut gs, epi2,
+            );
+            assert_eq!(x2, xw, "aux x ({m},{k},{n}) scalar={scalar}");
+        }
+    }
+}
+
+#[test]
+#[ignore = "heavy (hundreds of random GEMMs); run in release via scripts/check.sh"]
+fn epilogue_hooks_random_shapes_bitwise_equal_two_pass() {
+    prop_check("epilogue hooks vs two-pass reference", 120, |rng| {
+        check_epilogue_one_shape(rng);
+    });
+}
+
 #[test]
 fn smoke_single_odd_shape() {
     // tier-1 keeps one cheap case so this binary always runs something
     let mut rng = Pcg32::seeded(7);
     check_one_shape(&mut rng);
+    check_epilogue_one_shape(&mut rng);
 }

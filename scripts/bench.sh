@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# One-command bench runner for the encoder + serving measurement suite.
+#
+# Runs every JSON-emitting bench in one invocation and merges their
+# records into the trajectory logs next to Cargo.toml:
+#
+#   BENCH_encoder.json   <- fig2_inference (kernel A/B, cached f32/int8
+#                           panels, and the fusion-regime triple
+#                           full / softmax-only / none on both dtypes)
+#                           + table3_efficiency (speedup grid under both
+#                           kernels and all three fusion regimes)
+#   BENCH_serving.json   <- coordinator (multi-tenant serving latencies)
+#
+# Each bench owns one top-level section of its file (write-then-rename
+# via `emit_bench_json`), so re-running refreshes in place and never
+# clobbers the other sections.
+#
+# Usage: scripts/bench.sh [encoder|serving|all]    (default: all)
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench.sh: cargo not found on PATH — install a Rust toolchain" >&2
+    exit 127
+fi
+
+what="${1:-all}"
+case "$what" in
+encoder | serving | all) ;;
+*)
+    echo "usage: scripts/bench.sh [encoder|serving|all]" >&2
+    exit 2
+    ;;
+esac
+
+if [ "$what" = "encoder" ] || [ "$what" = "all" ]; then
+    echo "== bench: fig2_inference (BENCH_encoder.json) =="
+    cargo bench --bench fig2_inference
+    echo
+    echo "== bench: table3_efficiency (BENCH_encoder.json) =="
+    cargo bench --bench table3_efficiency
+fi
+
+if [ "$what" = "serving" ] || [ "$what" = "all" ]; then
+    echo
+    echo "== bench: coordinator (BENCH_serving.json) =="
+    cargo bench --bench coordinator
+fi
+
+echo
+echo "== bench logs =="
+for f in BENCH_encoder.json BENCH_serving.json; do
+    if [ -f "$f" ]; then
+        echo "  $(pwd)/$f"
+    fi
+done
