@@ -26,6 +26,11 @@
 //! accuracy-delta record: per-row MLM argmax agreement and max
 //! relative logit error of int8 vs the f32 reference.
 //!
+//! The mechanism-frontier section sweeps **all four attention backends**
+//! (standard / linformer / nystrom / linear-attn) under **both weight
+//! dtypes** in one invocation; every record in this file carries a
+//! `mechanism` tag naming the backend that produced it.
+//!
 //! Every record also carries an `attn` tag (`fused` | `serial`) and a
 //! `fusion` tag (`full` | `softmax-only` | `none`), and a dedicated
 //! section measures **all three fusion regimes in one invocation** on
@@ -83,6 +88,11 @@ fn record(
         ("kernel", Json::Str(kernel.into())),
         ("dtype", Json::Str(dtype.into())),
         ("attention", Json::Str(attention.into())),
+        // the attention backend that produced the record ("standard",
+        // "linformer", "nystrom" or "linear-attn") — same value as the
+        // legacy `attention` tag, under the name the cross-mechanism
+        // frontier tooling groups by
+        ("mechanism", Json::Str(attention.into())),
         // attention-block regime: "fused" = head-parallel fan-out with
         // the scale/softmax GEMM epilogue, "serial" = head-serial with
         // the standalone softmax pass (the pre-change execution shape)
@@ -355,6 +365,64 @@ fn main() {
         }
     }
 
+    // -- cross-mechanism frontier: every backend, both dtypes ------------
+    // One invocation measures all four attention backends (standard /
+    // linformer / nystrom / linear-attn) under both weight flavors on
+    // the cached-panel serving warm path, so `scripts/bench.sh` emits
+    // the full mechanism × dtype ns/token frontier in a single run.
+    // Every record carries the `mechanism` tag the frontier groups by.
+    println!("\n== mechanism frontier (k=64, batch 1): ns/token by backend ==");
+    println!(
+        "{:>6} {:>6} {:>12} {:>12} {:>12} {:>12}",
+        "n", "dtype", "standard", "linformer", "nystrom", "linear-attn"
+    );
+    const MECHANISMS: [Attention; 4] = [
+        Attention::Standard,
+        Attention::Linformer,
+        Attention::Nystrom,
+        Attention::LinearAttn,
+    ];
+    for n in [512usize, 1024] {
+        let iters = if n >= 1024 { 3 } else { 5 };
+        for dtype in [Dtype::F32, Dtype::Int8] {
+            let mut row = Vec::with_capacity(MECHANISMS.len());
+            for mech in MECHANISMS {
+                let (cfg, params) = model(n, mech, 64);
+                let handles = EncoderHandles::build(&params, &cfg);
+                let packed = Arc::new(handles.pack_weights(&params, dtype));
+                let tokens: Vec<u32> = (0..n)
+                    .map(|_| rng.below(cfg.vocab_size as u32))
+                    .collect();
+                let mut scratch = EncodeScratch::new();
+                scratch.set_packed(Some(Arc::clone(&packed)));
+                // warm once so every backend's scratch arena is at
+                // steady state before the measured calls
+                encode_with(&params, &cfg, &tokens, false, &mut scratch);
+                let t = bench(1, iters, || {
+                    encode_with(&params, &cfg, &tokens, false, &mut scratch)
+                        .hidden
+                        .data[0]
+                });
+                let ns = t.mean * 1e9 / n as f64;
+                records.push(record(
+                    "encode_mechanism_frontier", gemm::kernel_name(),
+                    dtype.name(), mech.name(), "fused", "full", n, 64, 1,
+                    threads, ns,
+                ));
+                row.push(ns);
+            }
+            println!(
+                "{:>6} {:>6} {:>10.0}ns {:>10.0}ns {:>10.0}ns {:>10.0}ns",
+                n,
+                dtype.name(),
+                row[0],
+                row[1],
+                row[2],
+                row[3]
+            );
+        }
+    }
+
     // -- cached panels: f32 vs int8 weight flavors in one run ------------
     // The serving warm path: prebuilt EncoderHandles + a generation-keyed
     // PackedWeights cache, so neither flavor re-packs or re-quantizes
@@ -401,6 +469,7 @@ fn main() {
                 ("kernel", Json::Str(gemm::kernel_name().into())),
                 ("dtype", Json::Str(dtype.name().into())),
                 ("attention", Json::Str("linformer".into())),
+                ("mechanism", Json::Str("linformer".into())),
                 ("attn", Json::Str("fused".into())),
                 ("fusion", Json::Str("full".into())),
                 ("seq_len", Json::Num(n as f64)),

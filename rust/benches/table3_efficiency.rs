@@ -12,6 +12,8 @@
 //!
 //! Measurements are appended to `BENCH_encoder.json` (section
 //! `table3_efficiency`), tagged with the GEMM kernel, weight dtype,
+//! attention `mechanism` ("linformer" — the O(n) side of each speedup
+//! ratio; the full cross-mechanism frontier lives in `fig2_inference`),
 //! attention regime (`attn`: `fused` | `serial`) and epilogue-fusion
 //! regime (`fusion`: `full` | `softmax-only` | `none`) that produced
 //! them; one invocation measures the grid under **both** the SIMD
@@ -122,6 +124,9 @@ fn main() {
                     ("bench", Json::Str("speedup_grid".into())),
                     ("kernel", Json::Str(kernel.into())),
                     ("dtype", Json::Str("f32".into())),
+                    // the O(n) mechanism measured against the standard
+                    // baseline in this record's speedup ratio
+                    ("mechanism", Json::Str("linformer".into())),
                     ("attn", Json::Str(attn.into())),
                     ("fusion", Json::Str(fusion.into())),
                     ("seq_len", Json::Num(n as f64)),

@@ -445,6 +445,34 @@ mod tests {
     }
 
     #[test]
+    fn mixed_attention_mechanisms_register_side_by_side() {
+        use crate::model::Attention;
+        let reg = ModelRegistry::new();
+        let cfg = ModelConfig::tiny();
+        for (name, attn) in [
+            ("lin", Attention::Linformer),
+            ("nys", Attention::Nystrom),
+            ("ker", Attention::LinearAttn),
+        ] {
+            let mut c = cfg.clone();
+            c.attention = attn;
+            let e = reg.register_init(name, c, 1).unwrap();
+            assert_eq!(e.cfg.attention, attn);
+            assert!(!e.packed.is_empty());
+        }
+        assert_eq!(reg.names(), vec!["lin", "nys", "ker"]);
+        // mechanism-specific validation runs at registration: a landmark
+        // count above max_len is a config error, not a late panic
+        let mut bad = cfg;
+        bad.attention = Attention::Nystrom;
+        bad.k_proj = bad.max_len + 1;
+        assert!(matches!(
+            reg.register_init("bad", bad, 1),
+            Err(RegistryError::Config { .. })
+        ));
+    }
+
+    #[test]
     fn reload_bumps_version_and_swaps_generation_atomically() {
         let reg = ModelRegistry::new();
         let cfg = ModelConfig::tiny();

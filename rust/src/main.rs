@@ -391,11 +391,14 @@ fn parse_tasks(spec: &str) -> Result<Vec<Task>, AnyError> {
 }
 
 /// Build the serve/reload registry: `[[model]]` tables from `--config`
-/// first, then repeatable `--model name=<ckpt.bin|init[:seed]>[@dtype]`
-/// flags.  With neither, one fresh-init model named "default" (the
-/// pre-registry behavior).  All entries share the demo `cfg`; the dtype
-/// suffix (`@f32` or `@int8`) picks the inference weight flavor — int8
-/// serves through the quantized packed-panel cache.
+/// first, then repeatable
+/// `--model name=<ckpt.bin|init[:seed]>[@dtype][@mechanism]` flags.
+/// With neither, one fresh-init model named "default" (the pre-registry
+/// behavior).  All entries share the demo `cfg` architecture; per entry,
+/// a `@f32`/`@int8` suffix picks the inference weight flavor (int8
+/// serves through the quantized packed-panel cache) and a
+/// `@standard`/`@linformer`/`@nystrom`/`@linear-attn` suffix picks the
+/// attention backend, so one registry serves mixed mechanisms.
 #[cfg(not(feature = "pjrt"))]
 fn build_cli_registry(
     cfg: &ModelConfig,
@@ -404,47 +407,66 @@ fn build_cli_registry(
 ) -> Result<Arc<ModelRegistry>, AnyError> {
     let registry = Arc::new(ModelRegistry::new());
     for t in tables {
+        let mut mcfg = cfg.clone();
+        mcfg.attention = t.attention;
         match &t.checkpoint {
             Some(path) => registry.register_checkpoint_dtype(
                 &t.name,
-                cfg.clone(),
+                mcfg,
                 path,
                 t.dtype,
             )?,
             None => registry.register_init_dtype(
                 &t.name,
-                cfg.clone(),
+                mcfg,
                 t.seed,
                 t.dtype,
             )?,
         };
         println!(
-            "[serve] registered model '{}' ({}, {})",
+            "[serve] registered model '{}' ({}, {}, {})",
             t.name,
             t.checkpoint.as_deref().unwrap_or("fresh init"),
-            t.dtype.name()
+            t.dtype.name(),
+            t.attention.name()
         );
     }
     for spec in flags {
         let (name, source) = spec.split_once('=').ok_or_else(|| {
             format!(
-                "--model expects name=<ckpt.bin|init[:seed]>[@f32|@int8], \
+                "--model expects \
+                 name=<ckpt.bin|init[:seed]>[@dtype][@mechanism], \
                  got '{spec}'"
             )
         })?;
-        // an optional @dtype suffix on the source picks the weight flavor
-        let (source, dtype) = match source.rsplit_once('@') {
-            Some((rest, d)) => (
-                rest,
-                Dtype::from_name(d).ok_or_else(|| {
-                    format!(
-                        "unknown dtype '{d}' in --model '{spec}' \
-                         (expected f32 or int8)"
-                    )
-                })?,
-            ),
-            None => (source, Dtype::F32),
+        // optional @suffixes on the source: each is a dtype or an
+        // attention mechanism, in either order; anything else is an
+        // error naming both valid sets
+        let mut source = source;
+        let mut dtype = Dtype::F32;
+        let mut attention = cfg.attention;
+        while let Some((rest, s)) = source.rsplit_once('@') {
+            if let Some(d) = Dtype::from_name(s) {
+                dtype = d;
+            } else if let Some(a) = Attention::from_name(s) {
+                attention = a;
+            } else {
+                return Err(format!(
+                    "unknown suffix '@{s}' in --model '{spec}' (expected \
+                     a dtype: \"f32\" or \"int8\", or an attention \
+                     mechanism: {})",
+                    Attention::VALID
+                )
+                .into());
+            }
+            source = rest;
+        }
+        let cfg = {
+            let mut c = cfg.clone();
+            c.attention = attention;
+            c
         };
+        let cfg = &cfg;
         let init_seed = if source == "init" {
             Some(0)
         } else if let Some(s) = source.strip_prefix("init:") {
@@ -459,8 +481,10 @@ fn build_cli_registry(
             Some(seed) => {
                 registry.register_init_dtype(name, cfg.clone(), seed, dtype)?;
                 println!(
-                    "[serve] registered model '{name}' (init seed {seed}, {})",
-                    dtype.name()
+                    "[serve] registered model '{name}' (init seed {seed}, \
+                     {}, {})",
+                    dtype.name(),
+                    attention.name()
                 );
             }
             None => {
@@ -471,8 +495,9 @@ fn build_cli_registry(
                     dtype,
                 )?;
                 println!(
-                    "[serve] registered model '{name}' ({source}, {})",
-                    dtype.name()
+                    "[serve] registered model '{name}' ({source}, {}, {})",
+                    dtype.name(),
+                    attention.name()
                 );
             }
         }
@@ -516,8 +541,10 @@ fn cmd_serve(argv: Vec<String>) -> Result<(), AnyError> {
             ("config", "TOML launcher config ([[model]] tables etc.)"),
             (
                 "model",
-                "register name=<ckpt.bin|init[:seed]>[@f32|@int8] \
-                 (repeatable; @int8 serves quantized weights)",
+                "register name=<ckpt.bin|init[:seed]>[@dtype][@mechanism] \
+                 (repeatable; @f32|@int8 picks the weight flavor, \
+                 @standard|@linformer|@nystrom|@linear-attn the attention \
+                 backend)",
             ),
             (
                 "tasks",

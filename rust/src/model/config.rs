@@ -5,8 +5,48 @@ use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Attention {
+    /// Dense softmax attention (no K/V compression) — the O(n²)
+    /// baseline every approximation is measured against.
     Standard,
+    /// Low-rank K/V compression via learned/pooled/conv projections
+    /// (paper §4); `k_proj` / `k_schedule` set the projected dimension.
     Linformer,
+    /// Nyströmformer (arxiv 2102.03902): segment-means landmarks plus an
+    /// iterative Moore–Penrose pseudo-inverse; `k_proj` / `k_schedule`
+    /// set the landmark count, no learned projection parameters.
+    Nystrom,
+    /// Kernel linear attention (arxiv 2006.16236): elu+1 feature maps,
+    /// `(φ(Q)·(φ(K)ᵀV)) / (φ(Q)·Σφ(K))` — no logits matrix at all;
+    /// `k_proj` is unused.
+    LinearAttn,
+}
+
+impl Attention {
+    /// The valid config-string spellings, for error messages.
+    pub const VALID: &'static str =
+        "\"standard\", \"linformer\", \"nystrom\" or \"linear-attn\"";
+
+    /// Canonical config-string spelling (also the bench `mechanism` tag).
+    pub fn name(self) -> &'static str {
+        match self {
+            Attention::Standard => "standard",
+            Attention::Linformer => "linformer",
+            Attention::Nystrom => "nystrom",
+            Attention::LinearAttn => "linear-attn",
+        }
+    }
+
+    /// Parse a config-string spelling; `None` for unknown strings (the
+    /// caller owns the error message — see [`Attention::VALID`]).
+    pub fn from_name(s: &str) -> Option<Attention> {
+        match s {
+            "standard" => Some(Attention::Standard),
+            "linformer" => Some(Attention::Linformer),
+            "nystrom" => Some(Attention::Nystrom),
+            "linear-attn" => Some(Attention::LinearAttn),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,23 +105,40 @@ impl ModelConfig {
                 .as_usize()
                 .ok_or_else(|| ConfigError(format!("missing field '{k}'")))
         };
+        // unknown enum strings are *named* errors listing the valid
+        // values — a checkpoint typo'd "linfomer" must never fall
+        // through to a default mechanism
         let attention = match j.get("attention").as_str() {
-            Some("standard") => Attention::Standard,
-            Some("linformer") | None => Attention::Linformer,
-            Some(o) => return Err(ConfigError(format!("attention '{o}'"))),
+            None => Attention::Linformer,
+            Some(s) => Attention::from_name(s).ok_or_else(|| {
+                ConfigError(format!(
+                    "unknown attention '{s}' (expected {})",
+                    Attention::VALID
+                ))
+            })?,
         };
         let sharing = match j.get("sharing").as_str() {
             Some("none") => Sharing::None,
             Some("headwise") => Sharing::Headwise,
             Some("kv") => Sharing::KeyValue,
             Some("layerwise") | None => Sharing::Layerwise,
-            Some(o) => return Err(ConfigError(format!("sharing '{o}'"))),
+            Some(o) => {
+                return Err(ConfigError(format!(
+                    "unknown sharing '{o}' (expected \"none\", \"headwise\", \
+                     \"kv\" or \"layerwise\")"
+                )))
+            }
         };
         let proj_mode = match j.get("proj_mode").as_str() {
             Some("linear") | None => ProjMode::Linear,
             Some("pool") => ProjMode::Pool,
             Some("conv") => ProjMode::Conv,
-            Some(o) => return Err(ConfigError(format!("proj_mode '{o}'"))),
+            Some(o) => {
+                return Err(ConfigError(format!(
+                    "unknown proj_mode '{o}' (expected \"linear\", \"pool\" \
+                     or \"conv\")"
+                )))
+            }
         };
         let k_schedule = match j.get("k_schedule") {
             Json::Null => None,
@@ -132,7 +189,12 @@ impl ModelConfig {
                 )));
             }
         }
-        if matches!(self.proj_mode, ProjMode::Pool | ProjMode::Conv) {
+        // proj_mode only matters for mechanisms with a K/V projection
+        // step (Standard keeps the legacy check: its configs historically
+        // carried a validated proj_mode even though Identity ignores it)
+        if matches!(self.attention, Attention::Standard | Attention::Linformer)
+            && matches!(self.proj_mode, ProjMode::Pool | ProjMode::Conv)
+        {
             // every *per-layer* k must divide max_len, not just k_proj —
             // a k_schedule entry that doesn't breaks pool_into/conv_into
             // windowing (conv windows outgrow the learned kernel)
@@ -142,6 +204,22 @@ impl ModelConfig {
                     return Err(ConfigError(format!(
                         "pool/conv requires k | n for every layer: \
                          layer {l} has k={k}, max_len={}",
+                        self.max_len
+                    )));
+                }
+            }
+        }
+        if self.attention == Attention::Nystrom {
+            // the landmark count rides on k_proj / k_schedule; ragged
+            // *sequences* clamp to their live length, but a config whose
+            // landmarks exceed max_len (or are zero) is a mistake, not a
+            // clamp candidate
+            for l in 0..self.n_layers {
+                let m = self.layer_k(l);
+                if m == 0 || m > self.max_len {
+                    return Err(ConfigError(format!(
+                        "nystrom landmark count must be in 1..=max_len: \
+                         layer {l} has k={m}, max_len={}",
                         self.max_len
                     )));
                 }
@@ -248,5 +326,74 @@ mod tests {
         )
         .unwrap();
         assert!(ModelConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_enum_errors_name_the_valid_values() {
+        // regression: the old errors said only e.g. "attention 'linfomer'"
+        // — a typo'd checkpoint config gave no hint what *would* parse
+        let base = r#""vocab_size": 16, "max_len": 8, "d_model": 4,
+                       "n_heads": 2, "n_layers": 1, "d_ff": 8, "k_proj": 4"#;
+        let cases = [
+            (r#""attention": "linfomer""#, "linfomer", Attention::VALID),
+            (r#""sharing": "global""#, "global", "\"layerwise\""),
+            (r#""proj_mode": "pooling""#, "pooling", "\"conv\""),
+        ];
+        for (field, bad, expect) in cases {
+            let j = json::parse(&format!("{{{base}, {field}}}")).unwrap();
+            let err = ModelConfig::from_json(&j).unwrap_err().to_string();
+            assert!(err.contains(bad), "{err}");
+            assert!(
+                err.contains(expect),
+                "error must list the valid values: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn parses_every_mechanism_name_roundtrip() {
+        for a in [
+            Attention::Standard,
+            Attention::Linformer,
+            Attention::Nystrom,
+            Attention::LinearAttn,
+        ] {
+            assert_eq!(Attention::from_name(a.name()), Some(a));
+            let j = json::parse(&format!(
+                r#"{{"vocab_size": 16, "max_len": 8, "d_model": 4,
+                     "n_heads": 2, "n_layers": 1, "d_ff": 8, "k_proj": 4,
+                     "attention": "{}"}}"#,
+                a.name()
+            ))
+            .unwrap();
+            assert_eq!(ModelConfig::from_json(&j).unwrap().attention, a);
+        }
+        assert_eq!(Attention::from_name("quantum"), None);
+    }
+
+    #[test]
+    fn nystrom_validates_landmark_counts() {
+        let mut cfg = ModelConfig::tiny(); // max_len 32, 2 layers
+        cfg.attention = Attention::Nystrom;
+        assert!(cfg.validate().is_ok());
+        // landmarks need not divide max_len (balanced windows) …
+        cfg.k_proj = 5;
+        assert!(cfg.validate().is_ok());
+        // … but cannot exceed it or be zero
+        cfg.k_proj = cfg.max_len + 1;
+        assert!(cfg.validate().is_err());
+        cfg.k_proj = 0;
+        assert!(cfg.validate().is_err());
+        // the per-layer schedule is checked too
+        cfg.k_proj = 8;
+        cfg.k_schedule = Some(vec![8, 64]);
+        assert!(cfg.validate().is_err());
+        cfg.k_schedule = Some(vec![8, 5]);
+        assert!(cfg.validate().is_ok());
+        // linear-attn ignores k entirely — any k_proj is fine
+        cfg.attention = Attention::LinearAttn;
+        cfg.k_schedule = None;
+        cfg.k_proj = 0;
+        assert!(cfg.validate().is_ok());
     }
 }

@@ -6,6 +6,21 @@
 //! *materialized* attention matrices P — something the fused kernels
 //! intentionally never produce.
 //!
+//! # Pluggable attention backends
+//!
+//! The per-head attention step is factored onto the private
+//! [`AttentionMechanism`] trait: `compute(q, k, v, scratch) → ctx` per
+//! head, with mechanism-owned scratch declared up front through
+//! `scratch_req` so [`HeadScratch`] stays one warm arena.  Three
+//! backends share the GEMM microkernel: Linformer (E/F/pool/conv
+//! compression — also serves standard attention via the Identity
+//! projection), Nyströmformer (segment-mean landmarks + iterative
+//! pseudo-inverse), and kernel linear attention (elu+1 feature maps, no
+//! logits matrix at all).  Selection is [`ModelConfig::attention`];
+//! every backend composes with the head fan-out, budget split, epilogue
+//! fusion and capture machinery below.  See docs/ATTENTION.md for the
+//! contract and per-backend math.
+//!
 //! # Hot-path architecture
 //!
 //! - **Zero copies.** Weights are read through interned [`ParamHandle`]s
@@ -87,8 +102,12 @@ use std::sync::{Arc, Mutex};
 /// (only when requested — they are O(n²) / O(nk)).
 #[derive(Debug, Default, Clone)]
 pub struct AttnCapture {
-    /// [layer][head] -> context-mapping matrix P (n×n for standard,
-    /// n×k for Linformer).
+    /// [layer][head] -> context-mapping matrix P.  Shape and meaning are
+    /// per [`Attention`] backend: n×n for standard, n×k for Linformer,
+    /// n×m landmark-mixing weights `F1·pinv(F2)` for Nyströmformer, and
+    /// the n×n normalized feature-map product `φ(Q)·φ(K)ᵀ/(φ(Q)·z)` for
+    /// linear attention (materialized for diagnostics only — serving
+    /// never forms it).  See docs/ATTENTION.md.
     pub matrices: Vec<Vec<Mat>>,
 }
 
@@ -193,7 +212,13 @@ impl EncoderHandles {
             let p = format!("layer{l}");
             let lget = |suffix: &str| get(&format!("{p}/{suffix}"));
             let proj = match (cfg.attention, cfg.proj_mode) {
-                (Attention::Standard, _) => ProjHandles::Identity,
+                // Standard reads K/V uncompressed; Nyströmformer builds
+                // its landmarks from the live activations and linear
+                // attention maps features elementwise — none of the
+                // three owns projection parameters (see param_spec)
+                (Attention::Standard, _)
+                | (Attention::Nystrom, _)
+                | (Attention::LinearAttn, _) => ProjHandles::Identity,
                 (Attention::Linformer, ProjMode::Pool) => ProjHandles::Pool,
                 (Attention::Linformer, ProjMode::Conv) => {
                     let (e, f) = match cfg.sharing {
@@ -655,6 +680,14 @@ struct HeadScratch {
     /// buffer; each computes densely here and the owner copies back
     /// after the join.  The head-serial regime writes ctx directly.
     ctxh: Mat,
+    /// Mechanism-owned auxiliary mats beyond the four shared slots —
+    /// [`AttentionMechanism::scratch_req`] says how many a backend
+    /// needs, [`attention_layer`] grows the pool to that count before
+    /// the fan-out (empty mats; each reaches steady-state shape on its
+    /// first use), so the arena stays one warm allocation set whichever
+    /// backend runs.  Nyströmformer keeps its landmark/pinv buffers
+    /// here, linear attention its feature maps and running sums.
+    aux: Vec<Mat>,
     /// Private GEMM workspace, kept in kernel-selection lockstep with
     /// the owning scratch on every attention call.
     gs: gemm::GemmScratch,
@@ -667,6 +700,7 @@ impl HeadScratch {
             vbar: Mat::zeros(0, 0),
             logits: Mat::zeros(0, 0),
             ctxh: Mat::zeros(0, 0),
+            aux: Vec::new(),
             gs: gemm::GemmScratch::new(),
         }
     }
@@ -842,6 +876,9 @@ impl EncodeScratch {
         ptrs.push(self.gs.pack.as_ptr());
         for hs in &self.heads {
             for m in [&hs.kbar, &hs.vbar, &hs.logits, &hs.ctxh] {
+                ptrs.push(m.data.as_ptr() as *const f32);
+            }
+            for m in &hs.aux {
                 ptrs.push(m.data.as_ptr() as *const f32);
             }
             ptrs.push(hs.gs.pack.as_ptr());
@@ -1135,110 +1172,495 @@ pub fn encode_with(
     EncodeOut { hidden: x, capture }
 }
 
-/// One head's full attention chain: E/F (or pool/conv) compression,
-/// fused logits GEMM + scale/softmax epilogue, and the context GEMM.
-/// All buffers come from the head's own [`HeadScratch`] arena entry, so
-/// any number of these can run concurrently (on disjoint entries);
-/// `inner` caps the nested intra-GEMM parallelism (see
-/// [`pool::split_budget`]).  `capture` redirects the logits buffer to a
-/// caller-owned output matrix — same code path, so captured P is
-/// bitwise-equal to the serving path by construction.
-#[allow(clippy::too_many_arguments)]
-fn head_chain(
-    params: &Params,
+/// Everything one head's attention computation reads, borrowed for the
+/// duration of one [`AttentionMechanism::compute`] call.  `Copy` so the
+/// head-parallel fan-out can hand each boxed task its own value.
+#[derive(Clone, Copy)]
+struct HeadCtx<'a> {
+    params: &'a Params,
+    /// The layer's pre-resolved K/V projection (Identity for the
+    /// parameter-free backends).
     proj: ProjHandles,
-    convw: Option<(&[f32], &[f32])>,
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
+    /// Conv window weights, resolved by the owner (slices can't be
+    /// resolved inside the fan-out without re-borrowing `params`).
+    convw: Option<(&'a [f32], &'a [f32])>,
+    q: &'a Mat,
+    k: &'a Mat,
+    v: &'a Mat,
     head: usize,
     dh: usize,
+    /// Layer's projected dimension / landmark count ([`ModelConfig::layer_k`]).
     lk: usize,
+    /// 1/√dh logits temperature (softmax backends).
     scale: f32,
+    /// Fold scale+softmax into the logits GEMM's row-chunk epilogue;
+    /// `false` is the standalone-softmax baseline.  Backends without a
+    /// softmaxed logits GEMM ignore this (both regimes are the same
+    /// code), so fused-vs-unfused stays bitwise-equal for every backend.
     fused: bool,
+    /// Intra-GEMM worker cap for this head (see [`pool::split_budget`]).
     inner: usize,
-    hs: &mut HeadScratch,
-    capture: Option<&mut Mat>,
-    ctx: CtxSlot<'_>,
-) {
-    let n = q.rows;
-    let qcol = head * dh;
-    let qh = MatView::cols(q, qcol, dh);
-    let kh = MatView::cols(k, qcol, dh);
-    let vh = MatView::cols(v, qcol, dh);
-    let HeadScratch { kbar, vbar, logits, ctxh, gs } = hs;
+}
 
-    let (kb, vb) = match proj {
-        ProjHandles::Identity => (kh, vh),
-        ProjHandles::Pool => {
-            pool_into(kh, lk, kbar);
-            pool_into(vh, lk, vbar);
-            (MatView::full(kbar), MatView::full(vbar))
-        }
-        ProjHandles::Conv { .. } => {
-            let (we, wf) = convw.expect("conv weights resolved by caller");
-            conv_into(kh, we, lk, kbar);
-            conv_into(vh, wf, lk, vbar);
-            (MatView::full(kbar), MatView::full(vbar))
-        }
-        ProjHandles::Linear { e, f, per_head } => {
-            let (ev, fv) = if per_head {
-                (params.view3_at(e, head), params.view3_at(f, head))
-            } else {
-                (params.view_at(e), params.view_at(f))
-            };
-            // sliced to the live length — zero-copy views throughout
-            let (ev, fv) = (ev.first_cols(n), fv.first_cols(n));
-            gemm::matmul_view_in(
-                ev,
-                kh,
-                kbar,
-                gemm::plan_threads(ev.rows, n, dh, inner),
-                gs,
-            );
-            gemm::matmul_view_in(
-                fv,
-                vh,
-                vbar,
-                gemm::plan_threads(fv.rows, n, dh, inner),
-                gs,
-            );
-            (MatView::full(kbar), MatView::full(vbar))
-        }
-    };
-    // P = softmax(q·K̄ᵀ · scale) — (n × m).  Head logits land in the
-    // head's arena buffer, or — when capture is requested — directly in
-    // the returned per-head matrix.  The fused entry applies the scale
-    // and row-wise softmax inside each GEMM row chunk while it is
-    // cache-hot; the unfused baseline runs the same math as one
-    // standalone scaled-softmax pass — bitwise-equal either way.
-    let lbuf: &mut Mat = match capture {
-        Some(m) => m,
-        None => logits,
-    };
-    let lplan = gemm::plan_threads(n, dh, kb.rows, inner);
-    if fused {
-        gemm::matmul_nt_softmax_view_in(qh, kb, lbuf, scale, lplan, gs);
-    } else {
-        gemm::matmul_nt_view_in(qh, kb, lbuf, lplan, gs);
-        softmax_scaled_rows(lbuf, scale);
-    }
-    let (ctx, col0) = match ctx {
+/// One pluggable attention backend: the per-head
+/// `compute(q, k, v, scratch) → ctx` contract the encoder's layer loop
+/// is written against.
+///
+/// The contract, shared by every backend:
+///
+/// - **Scratch ownership.** All steady-state buffers come from the
+///   head's [`HeadScratch`] arena entry; a backend declares how many
+///   auxiliary mats it needs via [`Self::scratch_req`] and
+///   [`attention_layer`] grows the arena before the fan-out, so warm
+///   calls allocate nothing and any number of heads run concurrently on
+///   disjoint entries.
+/// - **Output.** The head's (n × dh) context block lands in the
+///   [`CtxSlot`] — the shared ctx column window (head-serial) or the
+///   arena block (head-parallel); both paths run the same arithmetic in
+///   the same order, so the regimes are bitwise-identical.
+/// - **Determinism.** Every matrix product goes through the shared GEMM
+///   microkernel (bitwise thread-count-independent by the whole-row-chunk
+///   argument, docs/INVARIANTS.md) or a fixed-order serial loop, so
+///   output is bitwise-identical across thread budgets, fusion regimes
+///   and the head-serial/-parallel split.
+/// - **Capture.** `capture` redirects the backend's mixing-weight matrix
+///   to a caller-owned output — through the same code path that feeds
+///   the context product wherever one exists, so captured P is
+///   bitwise-equal to serving by construction (see docs/ATTENTION.md for
+///   what each backend captures).
+trait AttentionMechanism: Sync {
+    /// How many mechanism-owned aux mats each [`HeadScratch`] needs.
+    fn scratch_req(&self, cfg: &ModelConfig) -> usize;
+
+    /// One head's attention: read the per-head Q/K/V column windows of
+    /// `hc`, write the head's context block into `ctx`.
+    fn compute(
+        &self,
+        hc: &HeadCtx<'_>,
+        hs: &mut HeadScratch,
+        capture: Option<&mut Mat>,
+        ctx: CtxSlot<'_>,
+    );
+}
+
+/// Resolve a head's output slot (see [`CtxSlot`]): the window path hands
+/// back the shared buffer, the arena path sizes the head's dense block.
+fn resolve_ctx<'a>(
+    slot: CtxSlot<'a>,
+    ctxh: &'a mut Mat,
+    n: usize,
+    dh: usize,
+) -> (&'a mut Mat, usize) {
+    match slot {
         CtxSlot::Window(m, c0) => (m, c0),
         CtxSlot::Arena => {
-            // fully overwritten by the context GEMM below
+            // fully overwritten by the context write that follows
             ctxh.resize_for_overwrite(n, dh);
-            (&mut *ctxh, 0)
+            (ctxh, 0)
         }
-    };
-    gemm::matmul_view_cols_in(
-        MatView::full(lbuf),
-        vb,
-        ctx,
-        col0,
-        gemm::plan_threads(n, kb.rows, dh, inner),
-        gs,
-    );
+    }
+}
+
+/// Static backend registry: selection is one match on
+/// [`ModelConfig::attention`] per layer, handed to the fan-out as a
+/// `&'static` — no allocation, no per-head dispatch cost beyond a vtable
+/// call.  Standard attention is the Linformer chain with the Identity
+/// projection (uncompressed K/V), exactly as before the refactor.
+fn mechanism(a: Attention) -> &'static dyn AttentionMechanism {
+    match a {
+        Attention::Standard | Attention::Linformer => &LinformerAttn,
+        Attention::Nystrom => &NystromAttn,
+        Attention::LinearAttn => &KernelLinearAttn,
+    }
+}
+
+/// The Linformer (and, via Identity projection, standard softmax)
+/// backend: E/F (or pool/conv) K/V compression, fused logits GEMM +
+/// scale/softmax epilogue, and the context GEMM — behavior-preserving
+/// extraction of the pre-trait `head_chain`, bitwise-identical to it.
+struct LinformerAttn;
+
+impl AttentionMechanism for LinformerAttn {
+    fn scratch_req(&self, _cfg: &ModelConfig) -> usize {
+        0 // kbar/vbar/logits/ctxh are the whole working set
+    }
+
+    fn compute(
+        &self,
+        hc: &HeadCtx<'_>,
+        hs: &mut HeadScratch,
+        capture: Option<&mut Mat>,
+        ctx: CtxSlot<'_>,
+    ) {
+        let HeadCtx {
+            params, proj, convw, q, k, v, head, dh, lk, scale, fused, inner,
+        } = *hc;
+        let n = q.rows;
+        let qcol = head * dh;
+        let qh = MatView::cols(q, qcol, dh);
+        let kh = MatView::cols(k, qcol, dh);
+        let vh = MatView::cols(v, qcol, dh);
+        let HeadScratch { kbar, vbar, logits, ctxh, gs, .. } = hs;
+
+        let (kb, vb) = match proj {
+            ProjHandles::Identity => (kh, vh),
+            ProjHandles::Pool => {
+                pool_into(kh, lk, kbar);
+                pool_into(vh, lk, vbar);
+                (MatView::full(kbar), MatView::full(vbar))
+            }
+            ProjHandles::Conv { .. } => {
+                let (we, wf) = convw.expect("conv weights resolved by caller");
+                conv_into(kh, we, lk, kbar);
+                conv_into(vh, wf, lk, vbar);
+                (MatView::full(kbar), MatView::full(vbar))
+            }
+            ProjHandles::Linear { e, f, per_head } => {
+                let (ev, fv) = if per_head {
+                    (params.view3_at(e, head), params.view3_at(f, head))
+                } else {
+                    (params.view_at(e), params.view_at(f))
+                };
+                // sliced to the live length — zero-copy views throughout
+                let (ev, fv) = (ev.first_cols(n), fv.first_cols(n));
+                gemm::matmul_view_in(
+                    ev,
+                    kh,
+                    kbar,
+                    gemm::plan_threads(ev.rows, n, dh, inner),
+                    gs,
+                );
+                gemm::matmul_view_in(
+                    fv,
+                    vh,
+                    vbar,
+                    gemm::plan_threads(fv.rows, n, dh, inner),
+                    gs,
+                );
+                (MatView::full(kbar), MatView::full(vbar))
+            }
+        };
+        // P = softmax(q·K̄ᵀ · scale) — (n × m).  Head logits land in the
+        // head's arena buffer, or — when capture is requested — directly
+        // in the returned per-head matrix.  The fused entry applies the
+        // scale and row-wise softmax inside each GEMM row chunk while it
+        // is cache-hot; the unfused baseline runs the same math as one
+        // standalone scaled-softmax pass — bitwise-equal either way.
+        let lbuf: &mut Mat = match capture {
+            Some(m) => m,
+            None => logits,
+        };
+        let lplan = gemm::plan_threads(n, dh, kb.rows, inner);
+        if fused {
+            gemm::matmul_nt_softmax_view_in(qh, kb, lbuf, scale, lplan, gs);
+        } else {
+            gemm::matmul_nt_view_in(qh, kb, lbuf, lplan, gs);
+            softmax_scaled_rows(lbuf, scale);
+        }
+        let (ctx, col0) = resolve_ctx(ctx, ctxh, n, dh);
+        gemm::matmul_view_cols_in(
+            MatView::full(lbuf),
+            vb,
+            ctx,
+            col0,
+            gemm::plan_threads(n, kb.rows, dh, inner),
+            gs,
+        );
+    }
+}
+
+/// Nyströmformer iteration count for the Moore–Penrose pseudo-inverse
+/// (the paper's default).
+const PINV_ITERS: usize = 6;
+
+/// The Nyströmformer backend (arxiv 2102.03902): m landmark rows as
+/// balanced segment means of Q and K (`lk` rides on the Linformer k
+/// schedule, clamped to the live length like pool compression), three
+/// softmaxed kernel blocks on the shared GEMM entry points, an iterative
+/// pseudo-inverse of the (m × m) core, and the context product
+/// `ctx = (F1·Z)·(F3·V)`.  Parameter-free.
+struct NystromAttn;
+
+impl AttentionMechanism for NystromAttn {
+    fn scratch_req(&self, _cfg: &ModelConfig) -> usize {
+        8 // q-landmarks, F2, F3, Z, AZ, two pinv temps, F1·Z
+    }
+
+    fn compute(
+        &self,
+        hc: &HeadCtx<'_>,
+        hs: &mut HeadScratch,
+        capture: Option<&mut Mat>,
+        ctx: CtxSlot<'_>,
+    ) {
+        let HeadCtx { q, k, v, head, dh, lk, scale, fused, inner, .. } = *hc;
+        let n = q.rows;
+        let qcol = head * dh;
+        let qh = MatView::cols(q, qcol, dh);
+        let kh = MatView::cols(k, qcol, dh);
+        let vh = MatView::cols(v, qcol, dh);
+        let HeadScratch { kbar, vbar, logits, ctxh, gs, aux } = hs;
+        let [qld, f2, f3, z, az, t1, t2, f1z] = &mut aux[..8] else {
+            unreachable!("nystrom arena sized by scratch_req")
+        };
+
+        // landmarks: balanced segment means of Q and K — the same
+        // windowing as pool compression, so ragged lengths clamp to the
+        // live length instead of emitting empty segments
+        pool_into(qh, lk, qld); // Q̃ (m × dh)
+        pool_into(kh, lk, kbar); // K̃ (m × dh)
+        let m = qld.rows;
+        let qlv = MatView::full(qld);
+        let klv = MatView::full(kbar);
+
+        // the three kernel blocks — each a softmaxed NT GEMM on the
+        // shared microkernel, fused or standalone exactly like the
+        // Linformer logits (bitwise-equal regimes by the same argument):
+        // F1 = softmax(scale·Q·K̃ᵀ)   (n × m)
+        let f1plan = gemm::plan_threads(n, dh, m, inner);
+        if fused {
+            gemm::matmul_nt_softmax_view_in(qh, klv, logits, scale, f1plan, gs);
+        } else {
+            gemm::matmul_nt_view_in(qh, klv, logits, f1plan, gs);
+            softmax_scaled_rows(logits, scale);
+        }
+        // F2 = softmax(scale·Q̃·K̃ᵀ)   (m × m)
+        let f2plan = gemm::plan_threads(m, dh, m, inner);
+        if fused {
+            gemm::matmul_nt_softmax_view_in(qlv, klv, f2, scale, f2plan, gs);
+        } else {
+            gemm::matmul_nt_view_in(qlv, klv, f2, f2plan, gs);
+            softmax_scaled_rows(f2, scale);
+        }
+        // F3 = softmax(scale·Q̃·Kᵀ)   (m × n)
+        let f3plan = gemm::plan_threads(m, dh, n, inner);
+        if fused {
+            gemm::matmul_nt_softmax_view_in(qlv, kh, f3, scale, f3plan, gs);
+        } else {
+            gemm::matmul_nt_view_in(qlv, kh, f3, f3plan, gs);
+            softmax_scaled_rows(f3, scale);
+        }
+        // V̄ = F3·V (m × dh): the landmark-value block
+        gemm::matmul_view_in(
+            MatView::full(f3),
+            vh,
+            vbar,
+            gemm::plan_threads(m, n, dh, inner),
+            gs,
+        );
+        // Z ≈ pinv(F2), iteratively (serial scalar — the core is m × m
+        // and a fixed operation order keeps it trivially deterministic)
+        pinv_into(f2, z, az, t1, t2);
+        // P̃ = F1·Z (n × m): the effective mixing weights over the
+        // landmark values — the capture matrix, redirected through the
+        // same buffer-swap pattern as the Linformer logits so captured
+        // P̃ is bitwise-equal to serving by construction
+        let pbuf: &mut Mat = match capture {
+            Some(m) => m,
+            None => f1z,
+        };
+        gemm::matmul_view_in(
+            MatView::full(logits),
+            MatView::full(z),
+            pbuf,
+            gemm::plan_threads(n, m, m, inner),
+            gs,
+        );
+        // ctx = P̃·V̄
+        let (ctx, col0) = resolve_ctx(ctx, ctxh, n, dh);
+        gemm::matmul_view_cols_in(
+            MatView::full(pbuf),
+            MatView::full(vbar),
+            ctx,
+            col0,
+            gemm::plan_threads(n, m, dh, inner),
+            gs,
+        );
+    }
+}
+
+/// The kernel linear-attention backend (arxiv 2006.16236): elu+1
+/// feature maps, `ctx_i = (φ(q_i)·S) / (φ(q_i)·z)` with `S = φ(K)ᵀV`
+/// and `z = Σᵢ φ(k_i)` — no n×n or n×k logits matrix exists at any
+/// point.  The query-side temperature cancels between numerator and
+/// denominator, so the maps act on raw Q/K; `fused` is ignored (there
+/// is no softmax to fuse — both regimes are the same code, trivially
+/// bitwise-equal).  Parameter-free.
+struct KernelLinearAttn;
+
+impl AttentionMechanism for KernelLinearAttn {
+    fn scratch_req(&self, _cfg: &ModelConfig) -> usize {
+        4 // φ(Q), φ(K), S, z
+    }
+
+    fn compute(
+        &self,
+        hc: &HeadCtx<'_>,
+        hs: &mut HeadScratch,
+        capture: Option<&mut Mat>,
+        ctx: CtxSlot<'_>,
+    ) {
+        let HeadCtx { q, k, v, head, dh, inner, .. } = *hc;
+        let n = q.rows;
+        let qcol = head * dh;
+        let qh = MatView::cols(q, qcol, dh);
+        let kh = MatView::cols(k, qcol, dh);
+        let vh = MatView::cols(v, qcol, dh);
+        let HeadScratch { ctxh, gs, aux, .. } = hs;
+        let [phiq, phik, smat, zsum] = &mut aux[..4] else {
+            unreachable!("linear-attn arena sized by scratch_req")
+        };
+
+        phi_into(qh, phiq); // φ(Q) (n × dh)
+        phi_into(kh, phik); // φ(K) (n × dh)
+        // S = φ(K)ᵀ·V (dh × dh) and z = Σᵢ φ(k_i) (1 × dh), accumulated
+        // serially in row order — a fixed operation order independent of
+        // every thread budget
+        smat.reset(dh, dh);
+        zsum.reset(1, dh);
+        for i in 0..n {
+            let pk = phik.row(i);
+            let vr = vh.row(i);
+            for (zv, &pv) in zsum.row_mut(0).iter_mut().zip(pk) {
+                *zv += pv;
+            }
+            for (a, &pv) in pk.iter().enumerate() {
+                for (sv, &vv) in smat.row_mut(a).iter_mut().zip(vr) {
+                    *sv += pv * vv;
+                }
+            }
+        }
+        // numerator into the ctx slot via the shared strided GEMM entry,
+        // then the per-row 1/(φ(q_i)·z) normalization in place
+        let (ctx, col0) = resolve_ctx(ctx, ctxh, n, dh);
+        gemm::matmul_view_cols_in(
+            MatView::full(phiq),
+            MatView::full(smat),
+            ctx,
+            col0,
+            gemm::plan_threads(n, dh, dh, inner),
+            gs,
+        );
+        for r in 0..n {
+            let mut denom = 0f32;
+            for (&pv, &zv) in phiq.row(r).iter().zip(zsum.row(0)) {
+                denom += pv * zv;
+            }
+            // φ > 0 everywhere, so denom > 0 for any non-empty sequence
+            let inv = 1.0 / denom;
+            for xv in &mut ctx.row_mut(r)[col0..col0 + dh] {
+                *xv *= inv;
+            }
+        }
+        if let Some(mcap) = capture {
+            // opt-in diagnostics: materialize the implied row-stochastic
+            // mixing matrix P = φ(Q)·φ(K)ᵀ / (φ(Q)·z) — the (n × n)
+            // matrix the serving path deliberately never forms.  Not on
+            // the serving path (ctx above is already final), but the
+            // same normalizer, so P·V equals ctx up to GEMM order.
+            gemm::matmul_nt_view_in(
+                MatView::full(phiq),
+                MatView::full(phik),
+                mcap,
+                gemm::plan_threads(n, dh, n, inner),
+                gs,
+            );
+            for r in 0..n {
+                let mut denom = 0f32;
+                for (&pv, &zv) in phiq.row(r).iter().zip(zsum.row(0)) {
+                    denom += pv * zv;
+                }
+                let inv = 1.0 / denom;
+                for xv in mcap.row_mut(r) {
+                    *xv *= inv;
+                }
+            }
+        }
+    }
+}
+
+/// φ(x) = elu(x) + 1 — the positive feature map of the linear-attention
+/// backend: x + 1 for x > 0, eˣ otherwise (continuous at 0, strictly
+/// positive everywhere).
+fn phi_into(x: MatView<'_>, out: &mut Mat) {
+    out.resize_for_overwrite(x.rows, x.cols);
+    for r in 0..x.rows {
+        for (o, &xv) in out.row_mut(r).iter_mut().zip(x.row(r)) {
+            *o = if xv > 0.0 { xv + 1.0 } else { xv.exp() };
+        }
+    }
+}
+
+/// `out = a·b` for the small (landmark-count-sized) square factors of
+/// the pseudo-inverse iteration: plain row-major saxpy loops, fixed
+/// order, no threading — determinism by construction.
+fn matmul_small_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    out.reset(a.rows, b.cols);
+    for i in 0..a.rows {
+        for kk in 0..a.cols {
+            let av = a.at(i, kk);
+            let br = b.row(kk);
+            for (ov, &bv) in out.row_mut(i).iter_mut().zip(br) {
+                *ov += av * bv;
+            }
+        }
+    }
+}
+
+/// `out = c·I − x` (square).
+fn eye_minus_into(c: f32, x: &Mat, out: &mut Mat) {
+    out.resize_for_overwrite(x.rows, x.cols);
+    for i in 0..x.rows {
+        let xr = x.row(i);
+        let orow = out.row_mut(i);
+        for (ov, &xv) in orow.iter_mut().zip(xr) {
+            *ov = -xv;
+        }
+        orow[i] += c;
+    }
+}
+
+/// Iterative Moore–Penrose pseudo-inverse (Nyströmformer §3):
+/// `Z₀ = Aᵀ/(‖A‖₁·‖A‖∞)`, then [`PINV_ITERS`] rounds of
+/// `Z ← Z(13I − AZ(15I − AZ(7I − AZ)))/4`.  `A` is the row-stochastic
+/// softmax core, so both norms are strictly positive.
+fn pinv_into(a: &Mat, z: &mut Mat, az: &mut Mat, t1: &mut Mat, t2: &mut Mat) {
+    let m = a.rows;
+    let mut norm1 = 0f32; // max column sum of |A|
+    let mut norminf = 0f32; // max row sum of |A|
+    for i in 0..m {
+        let mut rowsum = 0f32;
+        for &xv in a.row(i) {
+            rowsum += xv.abs();
+        }
+        norminf = norminf.max(rowsum);
+    }
+    for j in 0..m {
+        let mut colsum = 0f32;
+        for i in 0..m {
+            colsum += a.at(i, j).abs();
+        }
+        norm1 = norm1.max(colsum);
+    }
+    let inv = 1.0 / (norm1 * norminf);
+    z.resize_for_overwrite(m, m);
+    for i in 0..m {
+        for j in 0..m {
+            z.row_mut(j)[i] = a.at(i, j) * inv;
+        }
+    }
+    for _ in 0..PINV_ITERS {
+        matmul_small_into(a, z, az); // AZ
+        eye_minus_into(7.0, az, t1);
+        matmul_small_into(az, t1, t2);
+        eye_minus_into(15.0, t2, t1);
+        matmul_small_into(az, t1, t2);
+        eye_minus_into(13.0, t2, t1);
+        matmul_small_into(z, t1, t2); // Z·(13I − …)
+        for (zv, &tv) in z.data.iter_mut().zip(t2.data.iter()) {
+            *zv = 0.25 * tv;
+        }
+    }
 }
 
 /// Multi-head attention for one layer, **up to** the concatenated
@@ -1250,13 +1672,16 @@ fn head_chain(
 /// stream.  All parameters come in through pre-resolved handles — no
 /// name building, no lookups.
 ///
-/// Heads fan out as pool tasks when the thread budget allows (each
-/// writes its own [`HeadScratch`] arena entry), splitting the budget
-/// between head-level and intra-GEMM parallelism via
-/// [`pool::split_budget`]; a budget of 1 — or the
+/// The per-head computation is delegated to the layer's
+/// [`AttentionMechanism`] (selected once per layer from
+/// [`ModelConfig::attention`]).  Heads fan out as pool tasks when the
+/// thread budget allows (each writes its own [`HeadScratch`] arena
+/// entry), splitting the budget between head-level and intra-GEMM
+/// parallelism via [`pool::split_budget`]; a budget of 1 — or the
 /// [`EncodeScratch::use_serial_attention`] baseline — runs the same
-/// [`head_chain`] inline per head.  Both regimes, fused or not, produce
-/// bitwise-identical output (pinned by `tests/attn_prop.rs`).
+/// `compute` inline per head.  Both regimes, fused or not, produce
+/// bitwise-identical output for every backend (pinned by
+/// `tests/attn_prop.rs`).
 fn attention_layer(
     params: &Params,
     cfg: &ModelConfig,
@@ -1293,7 +1718,7 @@ fn attention_layer(
 
     // Q/K/V projections with the bias add folded into each GEMM's
     // epilogue (E/F carry no bias in this architecture, so the
-    // compression GEMMs in head_chain stay epilogue-free)
+    // compression GEMMs inside the mechanisms stay epilogue-free)
     let (bq, bk, bv) =
         (params.slice(lh.bq), params.slice(lh.bk), params.slice(lh.bv));
     if fuse {
@@ -1360,12 +1785,18 @@ fn attention_layer(
     // grow the per-head arena to n_heads entries once; `push` touches the
     // allocator only while the arena is below steady state (the entries
     // themselves are empty Mats), so warm calls stay allocation-free
+    let mech = mechanism(cfg.attention);
+    let aux_req = mech.scratch_req(cfg);
     while heads.len() < n_heads {
         heads.push(HeadScratch::new());
     }
-    // keep every head's kernel selection in lockstep with the scratch
+    // keep every head's kernel selection in lockstep with the scratch,
+    // and every head's aux arena at the mechanism's declared size
     for hs in heads.iter_mut().take(n_heads) {
         hs.gs.set_scalar(gs.is_scalar());
+        while hs.aux.len() < aux_req {
+            hs.aux.push(Mat::zeros(0, 0));
+        }
     }
 
     // every column window of ctx is fully overwritten by exactly one
@@ -1399,7 +1830,7 @@ fn attention_layer(
         // pins (no task boxes)
         let mut caps = mats.iter_mut();
         for (head, hs) in heads.iter_mut().enumerate().take(n_heads) {
-            head_chain(
+            let hc = HeadCtx {
                 params,
                 proj,
                 convw,
@@ -1411,7 +1842,10 @@ fn attention_layer(
                 lk,
                 scale,
                 fused,
-                threads,
+                inner: threads,
+            };
+            mech.compute(
+                &hc,
                 hs,
                 caps.next(),
                 CtxSlot::Window(&mut *ctx, head * dh),
@@ -1428,11 +1862,12 @@ fn attention_layer(
         let mut tasks: Vec<pool::Task<'_>> = Vec::with_capacity(n_heads);
         for (head, hs) in heads.iter_mut().enumerate().take(n_heads) {
             let cap = caps.next();
+            let hc = HeadCtx {
+                params, proj, convw, q, k, v, head, dh, lk, scale, fused,
+                inner,
+            };
             tasks.push(Box::new(move || {
-                head_chain(
-                    params, proj, convw, q, k, v, head, dh, lk, scale,
-                    fused, inner, hs, cap, CtxSlot::Arena,
-                );
+                mech.compute(&hc, hs, cap, CtxSlot::Arena);
             }));
         }
         pool::global().run(tasks);
@@ -2022,6 +2457,107 @@ mod tests {
                     assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
                     assert!(head.row(r).iter().all(|&x| x >= 0.0));
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn nystrom_capture_shape_and_forward_finite() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.attention = Attention::Nystrom;
+        let p = Params::init(&cfg, 3);
+        let t = toks(&cfg, cfg.max_len, 3);
+        let out = encode(&p, &cfg, &t, true);
+        assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+        let cap = out.capture.unwrap();
+        assert_eq!(cap.matrices.len(), cfg.n_layers);
+        for layer in &cap.matrices {
+            assert_eq!(layer.len(), cfg.n_heads);
+            for head in layer {
+                // P̃ = F1·pinv(F2): n rows over k_proj landmark columns
+                assert_eq!(head.rows, cfg.max_len);
+                assert_eq!(head.cols, cfg.k_proj);
+                assert!(head.data.iter().all(|x| x.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn linear_attn_capture_rows_are_stochastic() {
+        let mut cfg = ModelConfig::tiny();
+        cfg.attention = Attention::LinearAttn;
+        let p = Params::init(&cfg, 3);
+        let n = cfg.max_len;
+        let t = toks(&cfg, n, 3);
+        let out = encode(&p, &cfg, &t, true);
+        assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+        let cap = out.capture.unwrap();
+        for layer in &cap.matrices {
+            for head in layer {
+                // the implied mixing matrix is n×n and exactly
+                // row-normalized by construction
+                assert_eq!((head.rows, head.cols), (n, n));
+                for r in 0..head.rows {
+                    let s: f32 = head.row(r).iter().sum();
+                    assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+                    assert!(head.row(r).iter().all(|&x| x >= 0.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_lengths_supported_by_every_mechanism() {
+        // n below the landmark/projection count exercises the pool-style
+        // clamping inside Nyströmformer and the Linformer projections
+        for attn in [
+            Attention::Standard,
+            Attention::Linformer,
+            Attention::Nystrom,
+            Attention::LinearAttn,
+        ] {
+            let mut cfg = ModelConfig::tiny();
+            cfg.attention = attn;
+            let p = Params::init(&cfg, 7);
+            for n in [1, 5, cfg.max_len] {
+                let t = toks(&cfg, n, 7);
+                let out = encode(&p, &cfg, &t, false);
+                assert_eq!(out.hidden.rows, n);
+                assert!(
+                    out.hidden.data.iter().all(|x| x.is_finite()),
+                    "{attn:?} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nystrom_pinv_inverts_a_small_stochastic_core() {
+        // the iterative pseudo-inverse should converge to the true
+        // inverse on a well-conditioned row-stochastic matrix
+        let mut a = Mat::zeros(3, 3);
+        let rows: [[f32; 3]; 3] =
+            [[0.8, 0.1, 0.1], [0.15, 0.7, 0.15], [0.05, 0.25, 0.7]];
+        for (i, r) in rows.iter().enumerate() {
+            a.row_mut(i).copy_from_slice(r);
+        }
+        let (mut z, mut az, mut t1, mut t2) = (
+            Mat::zeros(0, 0),
+            Mat::zeros(0, 0),
+            Mat::zeros(0, 0),
+            Mat::zeros(0, 0),
+        );
+        pinv_into(&a, &mut z, &mut az, &mut t1, &mut t2);
+        let mut id = Mat::zeros(0, 0);
+        matmul_small_into(&a, &z, &mut id);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (id.at(i, j) - want).abs() < 1e-3,
+                    "A·pinv(A)[{i}][{j}] = {}",
+                    id.at(i, j)
+                );
             }
         }
     }

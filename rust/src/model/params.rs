@@ -514,6 +514,23 @@ mod tests {
     }
 
     #[test]
+    fn nystrom_and_linear_attn_are_parameter_free_mechanisms() {
+        // landmarks are segment means of the live activations and the
+        // elu+1 feature map is elementwise: neither backend adds
+        // parameters, so their specs (and checkpoints) are byte-for-byte
+        // the spec of standard attention
+        let mut cfg = ModelConfig::tiny();
+        cfg.attention = Attention::Standard;
+        let standard = param_spec(&cfg);
+        for a in [Attention::Nystrom, Attention::LinearAttn] {
+            cfg.attention = a;
+            assert_eq!(param_spec(&cfg), standard, "{a:?}");
+        }
+        cfg.attention = Attention::Linformer;
+        assert_ne!(param_spec(&cfg), standard, "linformer keeps E/F");
+    }
+
+    #[test]
     fn ln_scales_init_to_one() {
         let cfg = ModelConfig::tiny();
         let p = Params::init(&cfg, 3);

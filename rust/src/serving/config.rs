@@ -23,6 +23,9 @@
 //! # (weights quantized per output channel at registration, activations
 //! # per tensor at run time — ~4× less weight traffic, bounded accuracy
 //! # cost; see ROADMAP Performance).
+//! # `attention` picks the model's attention backend: "linformer"
+//! # (default), "standard", "nystrom" or "linear-attn" — one registry
+//! # can serve different mechanisms side by side (docs/ATTENTION.md).
 //! [[model]]
 //! name = "tiny"
 //! seed = 0
@@ -31,6 +34,7 @@
 //! name = "longdoc"
 //! checkpoint = "ckpt/longdoc.bin"
 //! dtype = "int8"
+//! attention = "nystrom"
 //!
 //! [training]
 //! steps = 200
@@ -43,6 +47,7 @@ use std::time::Duration;
 
 use crate::coordinator::{BatcherConfig, CostModel, SchedPolicy};
 use crate::linalg::Dtype;
+use crate::model::Attention;
 use crate::training::{LrSchedule, TrainConfig};
 use crate::util::json::Json;
 use crate::util::toml;
@@ -67,6 +72,8 @@ pub struct ModelTable {
     pub seed: u64,
     /// Inference flavor (`f32` default, or `int8` quantized).
     pub dtype: Dtype,
+    /// Attention backend this entry serves (`linformer` default).
+    pub attention: Attention,
 }
 
 /// Parsed launcher file.
@@ -197,6 +204,18 @@ impl LauncherConfig {
                         ))
                     })?,
                 };
+                let attention = match t.get("attention").as_str() {
+                    None => Attention::Linformer,
+                    Some(s) => {
+                        Attention::from_name(s).ok_or_else(|| {
+                            ConfigError::Invalid(format!(
+                                "[[model]] '{name}': unknown attention \
+                                 '{s}' (expected {})",
+                                Attention::VALID
+                            ))
+                        })?
+                    }
+                };
                 cfg.model_tables.push(ModelTable {
                     name,
                     checkpoint: t
@@ -205,6 +224,7 @@ impl LauncherConfig {
                         .map(String::from),
                     seed: t.get("seed").as_usize().unwrap_or(0) as u64,
                     dtype,
+                    attention,
                 });
             }
         }
@@ -328,6 +348,7 @@ mod tests {
             name = "longdoc"
             checkpoint = "ckpt/longdoc.bin"
             dtype = "int8"
+            attention = "nystrom"
             "#,
         )
         .unwrap();
@@ -340,12 +361,14 @@ mod tests {
                     checkpoint: None,
                     seed: 3,
                     dtype: Dtype::F32,
+                    attention: Attention::Linformer,
                 },
                 ModelTable {
                     name: "longdoc".into(),
                     checkpoint: Some("ckpt/longdoc.bin".into()),
                     seed: 0,
                     dtype: Dtype::Int8,
+                    attention: Attention::Nystrom,
                 },
             ]
         );
@@ -374,6 +397,36 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("unknown dtype"), "{err}");
+    }
+
+    #[test]
+    fn model_table_attention_parses_and_rejects_unknown() {
+        for (s, want) in [
+            ("standard", Attention::Standard),
+            ("linformer", Attention::Linformer),
+            ("nystrom", Attention::Nystrom),
+            ("linear-attn", Attention::LinearAttn),
+        ] {
+            let c = LauncherConfig::from_toml(&format!(
+                "[[model]]\nname = \"a\"\nattention = \"{s}\""
+            ))
+            .unwrap();
+            assert_eq!(c.model_tables[0].attention, want);
+        }
+        // default is the repo's namesake mechanism
+        let c = LauncherConfig::from_toml("[[model]]\nname = \"a\"")
+            .unwrap();
+        assert_eq!(c.model_tables[0].attention, Attention::Linformer);
+        // unknown strings are rejected with the valid values named,
+        // not silently defaulted
+        let err = LauncherConfig::from_toml(
+            "[[model]]\nname = \"a\"\nattention = \"performer\"",
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown attention 'performer'"), "{msg}");
+        assert!(msg.contains("linear-attn"), "{msg}");
+        assert!(msg.contains("nystrom"), "{msg}");
     }
 
     #[test]

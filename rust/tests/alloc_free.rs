@@ -18,8 +18,8 @@ use std::sync::Arc;
 use linformer::linalg::Dtype;
 use linformer::model::{
     encode_batch, encode_batch_warm, encode_with, mlm_logits_with,
-    weight_pack_fallbacks, EncodeScratch, EncoderHandles, ModelConfig,
-    Params,
+    weight_pack_fallbacks, Attention, EncodeScratch, EncoderHandles,
+    ModelConfig, Params,
 };
 
 thread_local! {
@@ -154,6 +154,44 @@ fn epilogue_fusion_regimes_stay_zero_alloc_warm() {
             1,
             "warm encode_with (fused={fused}) must allocate exactly once: \
              the fusion regimes do not share scratch buffers"
+        );
+    }
+}
+
+#[test]
+fn every_attention_mechanism_is_zero_alloc_warm() {
+    // the zero-alloc guarantee is per-mechanism: each backend declares
+    // its auxiliary scratch through `AttentionMechanism::scratch_req`
+    // and the `HeadScratch` arena (including the Nyströmformer
+    // landmark/pinv mats and the linear-attention feature maps) reaches
+    // steady state during warmup — a warm encode under any backend
+    // allocates exactly its output matrix
+    for attn in [
+        Attention::Standard,
+        Attention::Linformer,
+        Attention::Nystrom,
+        Attention::LinearAttn,
+    ] {
+        let mut cfg = ModelConfig::tiny();
+        cfg.attention = attn;
+        let params = Params::init(&cfg, 9);
+        let tokens: Vec<u32> = (0..cfg.max_len)
+            .map(|i| (i % cfg.vocab_size) as u32)
+            .collect();
+        let mut scratch = EncodeScratch::with_threads(1);
+        for _ in 0..2 {
+            encode_with(&params, &cfg, &tokens, false, &mut scratch);
+        }
+        let before = allocs_now();
+        let out = encode_with(&params, &cfg, &tokens, false, &mut scratch);
+        let after = allocs_now();
+        assert!(out.hidden.data.iter().all(|x| x.is_finite()));
+        assert_eq!(
+            after - before,
+            1,
+            "warm encode_with under {attn:?} must allocate exactly once \
+             (the output matrix); extra allocations mean the mechanism's \
+             scratch is regrowing on the warm path"
         );
     }
 }

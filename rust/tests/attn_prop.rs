@@ -1,10 +1,12 @@
 //! Property tests for the head-parallel fused attention pipeline
 //! (`model::encoder::attention_layer`).
 //!
-//! Random ragged lengths and all four projection flavors (identity /
-//! pool / conv / linear, the latter in both shared-`E` and per-head
-//! form) are encoded under every execution regime the attention block
-//! supports and checked bitwise against one oracle: the head-serial,
+//! Random ragged lengths are swept across two axes: the four Linformer
+//! projection flavors (identity / pool / conv / linear, the latter in
+//! both shared-`E` and per-head form) *and* the alternative attention
+//! mechanisms (Nyströmformer, kernel linear attention).  Every flavor is
+//! encoded under every execution regime the attention block supports and
+//! checked bitwise against its own oracle: the head-serial,
 //! unfused-softmax baseline (`use_serial_attention(true)`, one thread).
 //! The sweep covers:
 //!
@@ -33,9 +35,10 @@ use linformer::model::{
 use linformer::util::prop::prop_check;
 use linformer::util::rng::Pcg32;
 
-/// The four projection flavors from the issue, with `Linear` split into
-/// its shared-`E` and stacked per-head parameterisations.
-const FLAVORS: usize = 5;
+/// The four projection flavors from the original issue (with `Linear`
+/// split into its shared-`E` and stacked per-head parameterisations),
+/// plus one flavor per alternative attention mechanism.
+const FLAVORS: usize = 7;
 
 fn flavored_config(flavor: usize) -> ModelConfig {
     let mut cfg = ModelConfig::tiny();
@@ -44,7 +47,9 @@ fn flavored_config(flavor: usize) -> ModelConfig {
         1 => cfg.proj_mode = ProjMode::Pool,
         2 => cfg.proj_mode = ProjMode::Conv,
         3 => {} // Linear + Sharing::Layerwise (tiny() default)
-        _ => cfg.sharing = Sharing::None, // Linear, per-head E/F
+        4 => cfg.sharing = Sharing::None, // Linear, per-head E/F
+        5 => cfg.attention = Attention::Nystrom, // k_proj landmarks
+        _ => cfg.attention = Attention::LinearAttn, // elu+1 feature maps
     }
     cfg
 }

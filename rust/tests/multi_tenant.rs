@@ -1,8 +1,9 @@
 //! Multi-tenant serving end to end: one `Coordinator` serving two
-//! registered models × two task kinds concurrently (every response
-//! bitwise-equal to the direct single-model encoder call), and
-//! zero-downtime weight hot-swap under live traffic — no batch ever
-//! mixes weight generations, no request is dropped by a swap.
+//! registered models — with **different attention mechanisms** — × two
+//! task kinds concurrently (every response bitwise-equal to the direct
+//! single-model encoder call), and zero-downtime weight hot-swap under
+//! live traffic on a mechanism-bearing model — no batch ever mixes
+//! weight generations, no request is dropped by a swap.
 //!
 //! Tier-1 fast; `scripts/check.sh` re-runs it in release as the
 //! multi-tenant smoke.
@@ -16,21 +17,25 @@ use linformer::coordinator::{
     ModelRegistry, Outcome, SubmitOptions, Task, TaskOutput,
 };
 use linformer::model::{
-    cls_logits_with, mlm_predict_batch, EncodeScratch, ModelConfig, Params,
+    cls_logits_with, mlm_predict_batch, Attention, EncodeScratch,
+    ModelConfig, Params,
 };
 use linformer::serving::{build_registry_coordinator, default_config};
 
 /// Acceptance: interleaved `MlmPredict` and `Classify` across two
-/// models through ONE coordinator, each response bitwise-equal to the
-/// direct single-model encoder call and tagged with its model's weight
+/// models — alpha Linformer, beta Nyströmformer, so one coordinator
+/// provably serves different attention mechanisms side by side —
+/// through ONE coordinator, each response bitwise-equal to the direct
+/// single-model encoder call and tagged with its model's weight
 /// generation.
 #[test]
 fn two_models_two_tasks_interleaved_bitwise() {
     let registry = Arc::new(ModelRegistry::new());
-    let cfg_a = ModelConfig::tiny(); // d_model 16, max_len 32
+    let cfg_a = ModelConfig::tiny(); // d_model 16, max_len 32, linformer
     let mut cfg_b = ModelConfig::tiny();
-    cfg_b.d_model = 32; // a genuinely different architecture
+    cfg_b.d_model = 32; // a genuinely different architecture…
     cfg_b.n_heads = 4;
+    cfg_b.attention = Attention::Nystrom; // …and attention mechanism
     registry.register_init("alpha", cfg_a.clone(), 11).unwrap();
     registry.register_init("beta", cfg_b.clone(), 22).unwrap();
     let coord = build_registry_coordinator(
@@ -133,10 +138,13 @@ fn two_models_two_tasks_interleaved_bitwise() {
 /// one generation — no batch mixed weights — and (c) every response's
 /// predictions match a direct encoder call with *that generation's*
 /// params: a stale packed-panel cache surviving a swap would serve old
-/// weights under a new generation tag and fail here.
+/// weights under a new generation tag and fail here.  The swapped model
+/// runs the kernel linear-attention backend, so hot-swap correctness is
+/// exercised on a non-default mechanism too.
 #[test]
 fn hot_swap_under_live_traffic_never_mixes_generations() {
-    let cfg = ModelConfig::tiny();
+    let mut cfg = ModelConfig::tiny();
+    cfg.attention = Attention::LinearAttn;
     let registry = Arc::new(ModelRegistry::new());
     registry.register_init("m", cfg.clone(), 1).unwrap();
     let g0 = registry.get("m").unwrap().generation();

@@ -5,8 +5,12 @@
 # records into the trajectory logs next to Cargo.toml:
 #
 #   BENCH_encoder.json   <- fig2_inference (kernel A/B, cached f32/int8
-#                           panels, and the fusion-regime triple
-#                           full / softmax-only / none on both dtypes)
+#                           panels, the fusion-regime triple
+#                           full / softmax-only / none on both dtypes,
+#                           and the cross-mechanism ns/token frontier:
+#                           standard / linformer / nystrom / linear-attn
+#                           x both dtypes, in the one invocation — every
+#                           record carries a `mechanism` tag)
 #                           + table3_efficiency (speedup grid under both
 #                           kernels and all three fusion regimes)
 #   BENCH_serving.json   <- coordinator (multi-tenant serving latencies)
